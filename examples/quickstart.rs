@@ -1,0 +1,51 @@
+//! Quickstart: build a loop nest, transform it with the LoopTune action
+//! space, and score schedules with both backends — no artifacts needed.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use looptune::backend::cost_model::CostModel;
+use looptune::backend::executor::ExecutorBackend;
+use looptune::backend::{Backend, Cached, SharedBackend};
+use looptune::env::actions::Action;
+use looptune::env::Env;
+use looptune::ir::{Nest, Problem};
+
+fn main() {
+    // A 128x128x128 matmul, untiled: for m { for n { for k { ... } } }.
+    let problem = Problem::new(128, 128, 128);
+    let nest = Nest::initial(problem);
+    println!("initial nest:\n{nest}");
+
+    // Score it two ways: the analytical cost model (instant) and the real
+    // executor (measured GFLOPS on this machine).
+    let mut model = CostModel::default();
+    let mut exec = ExecutorBackend::default();
+    println!("cost model : {:.2} GFLOPS (predicted)", model.eval(&nest));
+    println!("executor   : {:.2} GFLOPS (measured)", exec.eval(&nest));
+
+    // Walk the env through the paper's Fig.-3 style optimization:
+    // move k above n (m k n, unit-stride innermost), then tile.
+    let backend = SharedBackend::new(Cached::new(ExecutorBackend::default()));
+    let peak = looptune::backend::peak::peak_gflops();
+    println!("empirical peak: {peak:.1} GFLOPS");
+
+    let mut env = Env::new(problem, backend, peak);
+    for action in [
+        Action::Down,       // cursor -> n
+        Action::SwapDown,   // m k n
+        Action::Up,         // cursor -> k
+        Action::Split(64),  // k -> k, k:64
+        Action::Down,       // cursor -> k:64
+        Action::SwapDown,   // m k n k:64
+    ] {
+        let step = env.step(action);
+        println!(
+            "{:<10} -> {:.2} GFLOPS (reward {:+.4})",
+            action.name(),
+            step.gflops,
+            step.reward
+        );
+    }
+    println!("\nfinal nest:\n{}", env.nest);
+    println!("speedup over initial: {:.2}x", env.speedup());
+}

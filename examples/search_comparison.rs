@@ -1,0 +1,34 @@
+//! Run every classical search (paper §V) on one problem and compare — the
+//! single-benchmark slice of Fig. 8.
+//!
+//! Run: `cargo run --release --example search_comparison [-- seconds]`
+
+use looptune::backend::executor::ExecutorBackend;
+use looptune::backend::{Cached, SharedBackend};
+use looptune::ir::Problem;
+use looptune::search::{Budget, SearchAlgo};
+
+fn main() {
+    let budget_secs: f64 = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(5.0);
+    let problem = Problem::new(192, 192, 192);
+    println!("problem {problem}, budget {budget_secs}s per search (measured GFLOPS)\n");
+    println!(
+        "{:<10} {:>10} {:>9} {:>7} {:>9}",
+        "search", "GFLOPS", "speedup", "evals", "time[s]"
+    );
+    for algo in SearchAlgo::ALL {
+        let backend = SharedBackend::new(Cached::new(ExecutorBackend::default()));
+        let r = algo.run(problem, backend, Budget::seconds(budget_secs), 10, 42);
+        println!(
+            "{:<10} {:>10.2} {:>8.2}x {:>7} {:>9.2}",
+            algo.name(),
+            r.best_gflops,
+            r.speedup(),
+            r.evals,
+            r.elapsed
+        );
+    }
+}

@@ -1,0 +1,49 @@
+//! Tune one matmul with a trained policy and inspect the schedule — the
+//! paper's "auto-tuning in about a second" workflow.
+//!
+//! Run: `cargo run --release --example tune_matmul [-- M N K]`
+//! (requires `make artifacts`; uses results/apex_dqn.ltps when present)
+
+use looptune::backend::executor::ExecutorBackend;
+use looptune::backend::{Cached, SharedBackend};
+use looptune::ir::Problem;
+use looptune::rl::{self, params::ParamSet};
+use looptune::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<usize> = std::env::args()
+        .skip(1)
+        .filter_map(|s| s.parse().ok())
+        .collect();
+    let problem = match args.as_slice() {
+        [m, n, k] => Problem::new(*m, *n, *k),
+        _ => Problem::new(192, 192, 192),
+    };
+
+    let rt = Runtime::load_default()?;
+    let params_path = std::path::Path::new("results/apex_dqn.ltps");
+    let (params, trained) = if params_path.exists() {
+        (ParamSet::load(params_path)?, true)
+    } else {
+        eprintln!("no trained params at {params_path:?}; using a fresh (untrained) policy");
+        (ParamSet::init(&rt, "q_init", 7)?, false)
+    };
+
+    let backend = SharedBackend::new(Cached::new(ExecutorBackend::default()));
+    let out = rl::tune(&rt, &params, problem, 10, &backend)?;
+
+    println!(
+        "{problem}: {:.2} -> {:.2} GFLOPS measured ({:.2}x) — policy inference {:.3}s{}",
+        out.initial_gflops,
+        out.gflops,
+        out.speedup(),
+        out.infer_secs,
+        if trained { "" } else { " [UNTRAINED]" }
+    );
+    println!(
+        "actions: {}",
+        out.actions.iter().map(|a| a.name()).collect::<Vec<_>>().join(" → ")
+    );
+    println!("\nschedule:\n{}", out.nest);
+    Ok(())
+}

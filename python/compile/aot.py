@@ -1,0 +1,176 @@
+"""AOT compiler: lower every L2 entry point to HLO *text* + manifest.json.
+
+HLO text (NOT `.serialize()`) is the interchange format: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the rust `xla` 0.1.6 crate) rejects; the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/load_hlo/.
+
+Usage:  cd python && python -m compile.aot --out ../artifacts
+
+Everything is lowered with return_tuple=True; the rust runtime unwraps the
+tuple. artifacts/manifest.json records, for each entry point, the ordered
+input signature (shape, dtype) and output arity, plus the shape constants
+shared with the rust coordinator.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+F32, I32 = jnp.float32, jnp.int32
+
+
+def spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def q_specs():
+    return [spec(s) for s in model.Q_SHAPES]
+
+
+def pv_specs():
+    return [spec(s) for s in model.PV_SHAPES]
+
+
+def entry_points():
+    """name -> (callable, [input specs])."""
+    S, A, B = model.STATE_DIM, model.NUM_ACTIONS, model.BATCH
+    eps = {}
+
+    eps["q_init"] = (lambda seed: model.q_init(seed), [spec((), I32)])
+    eps["pv_init"] = (lambda seed: model.pv_init(seed), [spec((), I32)])
+
+    for b in (1, B):
+        eps[f"q_forward_b{b}"] = (
+            lambda *a, _b=b: model.q_forward(a[:6], a[6]),
+            q_specs() + [spec((b, S))],
+        )
+    eps["pv_forward_b1"] = (
+        lambda *a: model.pv_forward(a[:8], a[8]),
+        pv_specs() + [spec((1, S))],
+    )
+
+    eps["dqn_train_step"] = (
+        model.dqn_train_step,
+        q_specs() * 4  # params, target params, adam m, adam v
+        + [
+            spec(()),               # step
+            spec((B, S)),           # s
+            spec((B,), I32),        # a
+            spec((B,)),             # r
+            spec((B, S)),           # s2
+            spec((B,)),             # done
+            spec((B,)),             # weights
+            spec(()),               # lr
+            spec(()),               # gamma
+        ],
+    )
+    eps["ppo_train_step"] = (
+        model.ppo_train_step,
+        pv_specs() * 3
+        + [
+            spec(()),               # step
+            spec((B, S)),           # s
+            spec((B,), I32),        # a
+            spec((B,)),             # adv
+            spec((B,)),             # ret
+            spec((B,)),             # old_logp
+            spec(()),               # lr
+            spec(()),               # clip_eps
+            spec(()),               # ent_coef
+        ],
+    )
+    eps["a2c_train_step"] = (
+        model.a2c_train_step,
+        pv_specs() * 3
+        + [
+            spec(()),               # step
+            spec((B, S)),           # s
+            spec((B,), I32),        # a
+            spec((B,)),             # adv
+            spec((B,)),             # ret
+            spec(()),               # lr
+            spec(()),               # ent_coef
+        ],
+    )
+
+    # Plain matmuls: the Table I "traditional compiler" comparator measures
+    # PJRT compile time + execution GFLOPS of these from rust.
+    for n in (64, 128, 256, 512):
+        eps[f"mm_{n}"] = (model.matmul, [spec((n, n)), spec((n, n))])
+
+    return eps
+
+
+def num_outputs(fn, in_specs):
+    out = jax.eval_shape(fn, *in_specs)
+    return len(out) if isinstance(out, (tuple, list)) else 1
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts", help="artifacts dir")
+    ap.add_argument("--only", default=None, help="comma-separated entry names")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    eps = entry_points()
+    only = set(args.only.split(",")) if args.only else None
+    manifest = {
+        "constants": {
+            "max_loops": model.MAX_LOOPS,
+            "feats": model.FEATS,
+            "state_dim": model.STATE_DIM,
+            "num_actions": model.NUM_ACTIONS,
+            "hidden": model.HIDDEN,
+            "batch": model.BATCH,
+        },
+        "entries": {},
+    }
+    for name, (fn, in_specs) in eps.items():
+        if only and name not in only:
+            continue
+        lowered = jax.jit(fn).lower(*in_specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out, fname), "w") as f:
+            f.write(text)
+        manifest["entries"][name] = {
+            "file": fname,
+            "inputs": [
+                {"shape": list(s.shape), "dtype": str(s.dtype)} for s in in_specs
+            ],
+            "num_outputs": num_outputs(fn, in_specs),
+        }
+        print(f"  {name}: {len(text)} chars, {len(in_specs)} inputs, "
+              f"{manifest['entries'][name]['num_outputs']} outputs")
+
+    mpath = os.path.join(args.out, "manifest.json")
+    # Merge with an existing manifest when --only is used.
+    if only and os.path.exists(mpath):
+        with open(mpath) as f:
+            old = json.load(f)
+        old["entries"].update(manifest["entries"])
+        old["constants"] = manifest["constants"]
+        manifest = old
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"wrote {mpath}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,113 @@
+"""L1 — Pallas fused linear kernel (matmul + bias + optional ReLU).
+
+This is the compute hot-spot of every network in the LoopTune stack
+(Q-network, policy/value networks): each dense layer lowers to one
+`pallas_call`. The kernel is a classic blocked matmul:
+
+  grid = (M/bm, N/bn, K/bk), K innermost; partial products accumulate in
+  the resident output tile (its block index is independent of k, so the
+  tile stays live across the K loop); bias-add + activation fuse into the
+  final K-step write-back.
+
+`interpret=True` always: the CPU PJRT plugin cannot run Mosaic
+custom-calls, and the whole stack (including the rust coordinator) runs on
+CPU. On a real TPU the same BlockSpec schedule maps the (bm, bk) x (bk, bn)
+tile product onto the MXU — see DESIGN.md §9 for the VMEM/MXU estimate.
+
+Backward pass: `linear` carries a custom VJP whose dx/dw matmuls reuse the
+same Pallas kernel, so the AOT-lowered training steps contain Pallas-derived
+HLO on both the forward and backward paths.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default block shapes. Small enough to keep interpret-mode overhead sane
+# on CPU, MXU-friendly (multiples of 8 / 64) on TPU.
+BM, BN, BK = 16, 64, 64
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _matmul_bias_kernel(x_ref, w_ref, b_ref, o_ref, *, nk: int, relu: bool):
+    """One (i, j, k) grid step: o += x_tile @ w_tile; finalize at k==nk-1."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _finalize():
+        y = o_ref[...] + b_ref[...][None, :]
+        if relu:
+            y = jnp.maximum(y, 0.0)
+        o_ref[...] = y
+
+
+def _linear_impl(x, w, b, relu: bool, bm: int = BM, bn: int = BN, bk: int = BK):
+    """Padded blocked Pallas matmul: y = act(x @ w + b)."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"shape mismatch {x.shape} @ {w.shape}"
+    assert b.shape == (n,), f"bias shape {b.shape} != ({n},)"
+
+    bm, bn, bk = min(bm, _ceil_to(m, 8)), min(bn, _ceil_to(n, 8)), min(bk, _ceil_to(k, 8))
+    mp, kp, np_ = _ceil_to(m, bm), _ceil_to(k, bk), _ceil_to(n, bn)
+    xp = jnp.pad(x, ((0, mp - m), (0, kp - k)))
+    wp = jnp.pad(w, ((0, kp - k), (0, np_ - n)))
+    bp = jnp.pad(b, (0, np_ - n))
+    nk = kp // bk
+
+    out = pl.pallas_call(
+        functools.partial(_matmul_bias_kernel, nk=nk, relu=relu),
+        grid=(mp // bm, np_ // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(xp, wp, bp)
+    return out[:m, :n]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def linear(x, w, b, relu: bool = False):
+    """y = relu?(x @ w + b) via the Pallas blocked kernel.
+
+    x: (M, K) f32, w: (K, N) f32, b: (N,) f32 -> (M, N) f32.
+    Differentiable in x, w, b; the VJP reuses the Pallas kernel.
+    """
+    return _linear_impl(x, w, b, relu)
+
+
+def _linear_fwd(x, w, b, relu: bool):
+    y = _linear_impl(x, w, b, relu)
+    return y, (x, w, y if relu else None)
+
+
+def _linear_bwd(relu: bool, res, g):
+    x, w, y = res
+    if relu:
+        g = g * (y > 0.0).astype(g.dtype)
+    zk = jnp.zeros((w.shape[0],), jnp.float32)
+    zn = jnp.zeros((w.shape[1],), jnp.float32)
+    # dx = g @ w.T ; dw = x.T @ g — same Pallas kernel, zero bias, no act.
+    dx = _linear_impl(g, w.T, zk, relu=False)
+    dw = _linear_impl(x.T, g, zn, relu=False)
+    db = jnp.sum(g, axis=0)
+    return dx, dw, db
+
+
+linear.defvjp(_linear_fwd, _linear_bwd)

@@ -1,0 +1,24 @@
+"""Pure-jnp oracles for the Pallas kernels (correctness references).
+
+Every Pallas kernel in this package has an oracle here; pytest + hypothesis
+sweep shapes/values and assert_allclose kernel vs oracle (see
+python/tests/test_kernel.py).
+"""
+
+import jax.numpy as jnp
+
+
+def linear_ref(x, w, b, relu: bool = False):
+    """y = act(x @ w + b), plain jnp."""
+    y = jnp.matmul(x, w, preferred_element_type=jnp.float32) + b[None, :]
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    return y
+
+
+def mlp3_ref(params, x):
+    """Three-layer MLP oracle matching model.q_forward."""
+    w1, b1, w2, b2, w3, b3 = params
+    h = linear_ref(x, w1, b1, relu=True)
+    h = linear_ref(h, w2, b2, relu=True)
+    return linear_ref(h, w3, b3, relu=False)

@@ -1,0 +1,243 @@
+"""L2 — JAX compute graphs for the LoopTune stack (build-time only).
+
+Defines the Q-network / policy-value network used by the rust coordinator,
+their parameter initializers, and the compiled *training steps* (double-DQN,
+PPO, A2C — IMPALA reuses the A2C step with V-trace targets computed by the
+coordinator). Every dense layer goes through the L1 Pallas kernel
+(`kernels.linear.linear`), so the lowered HLO carries Pallas-derived compute
+on both the forward and backward paths.
+
+All functions here take/return *flat tuples of arrays* in a fixed positional
+order — the same order the rust runtime marshals Literals in. aot.py lowers
+each entry point once to HLO text + records the signature in
+artifacts/manifest.json. Python never runs at training/inference time.
+
+Shape constants must match rust/src/featurize (MAX_LOOPS * FEATS = STATE_DIM)
+and rust/src/env/actions.rs (NUM_ACTIONS).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.linear import linear
+
+MAX_LOOPS = 10
+FEATS = 20
+STATE_DIM = MAX_LOOPS * FEATS  # 200
+NUM_ACTIONS = 10  # up, down, swap_up, swap_down, split{2,4,8,16,32,64}
+HIDDEN = 256
+BATCH = 64
+
+ADAM_B1, ADAM_B2, ADAM_EPS = 0.9, 0.999, 1e-8
+HUBER_DELTA = 1.0
+
+# ---------------------------------------------------------------------------
+# Networks
+# ---------------------------------------------------------------------------
+
+Q_SHAPES = [
+    (STATE_DIM, HIDDEN), (HIDDEN,),
+    (HIDDEN, HIDDEN), (HIDDEN,),
+    (HIDDEN, NUM_ACTIONS), (NUM_ACTIONS,),
+]
+
+# Shared trunk + policy head + value head.
+PV_SHAPES = [
+    (STATE_DIM, HIDDEN), (HIDDEN,),
+    (HIDDEN, HIDDEN), (HIDDEN,),
+    (HIDDEN, NUM_ACTIONS), (NUM_ACTIONS,),  # policy head
+    (HIDDEN, 1), (1,),  # value head
+]
+
+
+def q_forward(params, s):
+    """Q(s, ·): (B, STATE_DIM) -> (B, NUM_ACTIONS)."""
+    w1, b1, w2, b2, w3, b3 = params
+    h = linear(s, w1, b1, True)
+    h = linear(h, w2, b2, True)
+    return linear(h, w3, b3, False)
+
+
+def pv_forward(params, s):
+    """Policy logits + state value: (B, S) -> ((B, A), (B,))."""
+    w1, b1, w2, b2, wp, bp, wv, bv = params
+    h = linear(s, w1, b1, True)
+    h = linear(h, w2, b2, True)
+    logits = linear(h, wp, bp, False)
+    value = linear(h, wv, bv, False)[:, 0]
+    return logits, value
+
+
+def _he_init(key, shapes):
+    params = []
+    for shape in shapes:
+        key, sub = jax.random.split(key)
+        if len(shape) == 2:
+            fan_in = shape[0]
+            params.append(
+                jax.random.normal(sub, shape, jnp.float32)
+                * jnp.sqrt(2.0 / fan_in)
+            )
+        else:
+            params.append(jnp.zeros(shape, jnp.float32))
+    return tuple(params)
+
+
+def q_init(seed):
+    """seed: i32[] -> 6 Q-net params (He init, zero biases)."""
+    return _he_init(jax.random.PRNGKey(seed), Q_SHAPES)
+
+
+def pv_init(seed):
+    """seed: i32[] -> 8 policy/value params."""
+    return _he_init(jax.random.PRNGKey(seed), PV_SHAPES)
+
+
+# ---------------------------------------------------------------------------
+# Adam
+# ---------------------------------------------------------------------------
+
+
+def adam_update(params, grads, m, v, step, lr):
+    """One Adam step over flat tuples. step is the *previous* count (f32[])."""
+    t = step + 1.0
+    new_m = tuple(ADAM_B1 * mi + (1 - ADAM_B1) * g for mi, g in zip(m, grads))
+    new_v = tuple(ADAM_B2 * vi + (1 - ADAM_B2) * g * g for vi, g in zip(v, grads))
+    mc = 1.0 - ADAM_B1 ** t
+    vc = 1.0 - ADAM_B2 ** t
+    new_p = tuple(
+        p - lr * (mi / mc) / (jnp.sqrt(vi / vc) + ADAM_EPS)
+        for p, mi, vi in zip(params, new_m, new_v)
+    )
+    return new_p, new_m, new_v, t
+
+
+def _clip_by_global_norm(grads, max_norm=10.0):
+    gn = jnp.sqrt(sum(jnp.sum(g * g) for g in grads))
+    scale = jnp.minimum(1.0, max_norm / (gn + 1e-9))
+    return tuple(g * scale for g in grads), gn
+
+
+# ---------------------------------------------------------------------------
+# DQN (double-DQN + Huber + prioritized-replay importance weights)
+# ---------------------------------------------------------------------------
+
+
+def _huber(x):
+    ax = jnp.abs(x)
+    return jnp.where(
+        ax <= HUBER_DELTA, 0.5 * x * x, HUBER_DELTA * (ax - 0.5 * HUBER_DELTA)
+    )
+
+
+def dqn_loss(params, target_params, s, a, r, s2, done, weights, gamma):
+    q = q_forward(params, s)
+    qa = jnp.take_along_axis(q, a[:, None], axis=1)[:, 0]
+    a2 = jnp.argmax(q_forward(params, s2), axis=1)
+    q2 = q_forward(target_params, s2)
+    q2a = jnp.take_along_axis(q2, a2[:, None], axis=1)[:, 0]
+    target = r + gamma * (1.0 - done) * jax.lax.stop_gradient(q2a)
+    td = qa - jax.lax.stop_gradient(target)
+    loss = jnp.mean(weights * _huber(td))
+    return loss, jnp.abs(td)
+
+
+def dqn_train_step(
+    w1, b1, w2, b2, w3, b3,
+    tw1, tb1, tw2, tb2, tw3, tb3,
+    m1, m2, m3, m4, m5, m6,
+    v1, v2, v3, v4, v5, v6,
+    step, s, a, r, s2, done, weights, lr, gamma,
+):
+    """One double-DQN step. Returns (6 params, 6 m, 6 v, step', |td| [B], loss)."""
+    params = (w1, b1, w2, b2, w3, b3)
+    tparams = (tw1, tb1, tw2, tb2, tw3, tb3)
+    m = (m1, m2, m3, m4, m5, m6)
+    v = (v1, v2, v3, v4, v5, v6)
+    (loss, td_abs), grads = jax.value_and_grad(dqn_loss, has_aux=True)(
+        params, tparams, s, a, r, s2, done, weights, gamma
+    )
+    grads, _ = _clip_by_global_norm(grads)
+    new_p, new_m, new_v, t = adam_update(params, grads, m, v, step, lr)
+    return (*new_p, *new_m, *new_v, t, td_abs, loss)
+
+
+# ---------------------------------------------------------------------------
+# PPO (clipped surrogate + value loss + entropy bonus)
+# ---------------------------------------------------------------------------
+
+
+def ppo_loss(params, s, a, adv, ret, old_logp, clip_eps, ent_coef):
+    logits, value = pv_forward(params, s)
+    logp_all = jax.nn.log_softmax(logits, axis=1)
+    logp = jnp.take_along_axis(logp_all, a[:, None], axis=1)[:, 0]
+    ratio = jnp.exp(logp - old_logp)
+    clipped = jnp.clip(ratio, 1.0 - clip_eps, 1.0 + clip_eps)
+    pg = -jnp.mean(jnp.minimum(ratio * adv, clipped * adv))
+    vloss = 0.5 * jnp.mean((value - ret) ** 2)
+    ent = -jnp.mean(jnp.sum(jnp.exp(logp_all) * logp_all, axis=1))
+    loss = pg + 0.5 * vloss - ent_coef * ent
+    approx_kl = jnp.mean(old_logp - logp)
+    return loss, (approx_kl, ent)
+
+
+def ppo_train_step(
+    w1, b1, w2, b2, wp, bp, wv, bv,
+    m1, m2, m3, m4, m5, m6, m7, m8,
+    v1, v2, v3, v4, v5, v6, v7, v8,
+    step, s, a, adv, ret, old_logp, lr, clip_eps, ent_coef,
+):
+    """One PPO minibatch step. Returns (8 params, 8 m, 8 v, step', loss, kl, ent)."""
+    params = (w1, b1, w2, b2, wp, bp, wv, bv)
+    m = (m1, m2, m3, m4, m5, m6, m7, m8)
+    v = (v1, v2, v3, v4, v5, v6, v7, v8)
+    (loss, (kl, ent)), grads = jax.value_and_grad(ppo_loss, has_aux=True)(
+        params, s, a, adv, ret, old_logp, clip_eps, ent_coef
+    )
+    grads, _ = _clip_by_global_norm(grads)
+    new_p, new_m, new_v, t = adam_update(params, grads, m, v, step, lr)
+    return (*new_p, *new_m, *new_v, t, loss, kl, ent)
+
+
+# ---------------------------------------------------------------------------
+# A2C (sync A3C). IMPALA reuses this step: the coordinator computes V-trace
+# corrected advantages/returns (rho/c clipped) and feeds them as adv/ret.
+# ---------------------------------------------------------------------------
+
+
+def a2c_loss(params, s, a, adv, ret, ent_coef):
+    logits, value = pv_forward(params, s)
+    logp_all = jax.nn.log_softmax(logits, axis=1)
+    logp = jnp.take_along_axis(logp_all, a[:, None], axis=1)[:, 0]
+    pg = -jnp.mean(logp * adv)
+    vloss = 0.5 * jnp.mean((value - ret) ** 2)
+    ent = -jnp.mean(jnp.sum(jnp.exp(logp_all) * logp_all, axis=1))
+    loss = pg + 0.5 * vloss - ent_coef * ent
+    return loss, ent
+
+
+def a2c_train_step(
+    w1, b1, w2, b2, wp, bp, wv, bv,
+    m1, m2, m3, m4, m5, m6, m7, m8,
+    v1, v2, v3, v4, v5, v6, v7, v8,
+    step, s, a, adv, ret, lr, ent_coef,
+):
+    """One A2C step. Returns (8 params, 8 m, 8 v, step', loss, ent)."""
+    params = (w1, b1, w2, b2, wp, bp, wv, bv)
+    m = (m1, m2, m3, m4, m5, m6, m7, m8)
+    v = (v1, v2, v3, v4, v5, v6, v7, v8)
+    (loss, ent), grads = jax.value_and_grad(a2c_loss, has_aux=True)(
+        params, s, a, adv, ret, ent_coef
+    )
+    grads, _ = _clip_by_global_norm(grads)
+    new_p, new_m, new_v, t = adam_update(params, grads, m, v, step, lr)
+    return (*new_p, *new_m, *new_v, t, loss, ent)
+
+
+# ---------------------------------------------------------------------------
+# Plain matmuls for the Table I XLA-compile comparator
+# ---------------------------------------------------------------------------
+
+
+def matmul(x, y):
+    return jnp.matmul(x, y)

@@ -1,0 +1,138 @@
+"""L1 correctness: Pallas fused-linear kernel vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes and block sizes; every case asserts allclose
+against ref.py for the forward pass and the custom VJP.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.linear import _linear_impl, linear
+from compile.kernels.ref import linear_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(key, *shape):
+    return jax.random.normal(key, shape, jnp.float32)
+
+
+def keys(seed, n):
+    return jax.random.split(jax.random.PRNGKey(seed), n)
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("relu", [False, True])
+@pytest.mark.parametrize(
+    "m,k,n",
+    [
+        (1, 200, 256),   # policy inference shape
+        (64, 200, 256),  # training batch shape
+        (64, 256, 10),   # output head
+        (64, 256, 1),    # value head
+        (3, 5, 7),       # tiny, nothing divides the blocks
+        (16, 64, 64),    # exact block multiples
+    ],
+)
+def test_forward_matches_ref(m, k, n, relu):
+    k1, k2, k3 = keys(0, 3)
+    x, w, b = rand(k1, m, k), rand(k2, k, n), rand(k3, n)
+    got = linear(x, w, b, relu)
+    want = linear_ref(x, w, b, relu)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 70),
+    k=st.integers(1, 130),
+    n=st.integers(1, 70),
+    relu=st.booleans(),
+    seed=st.integers(0, 2**30),
+)
+def test_forward_matches_ref_hypothesis(m, k, n, relu, seed):
+    k1, k2, k3 = keys(seed, 3)
+    x, w, b = rand(k1, m, k), rand(k2, k, n), rand(k3, n)
+    got = linear(x, w, b, relu)
+    want = linear_ref(x, w, b, relu)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=3e-5, atol=3e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    bm=st.sampled_from([8, 16, 32]),
+    bn=st.sampled_from([8, 64]),
+    bk=st.sampled_from([8, 64]),
+    seed=st.integers(0, 2**30),
+)
+def test_block_shape_invariance(bm, bn, bk, seed):
+    """Any block configuration computes the same result."""
+    k1, k2, k3 = keys(seed, 3)
+    x, w, b = rand(k1, 33, 50), rand(k2, 50, 21), rand(k3, 21)
+    got = _linear_impl(x, w, b, True, bm=bm, bn=bn, bk=bk)
+    want = linear_ref(x, w, b, True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=3e-5, atol=3e-5)
+
+
+def test_zero_and_identity_edge_cases():
+    # Zero input -> bias only (+ relu clamp).
+    x = jnp.zeros((4, 8))
+    w = jnp.ones((8, 6))
+    b = jnp.arange(-3.0, 3.0)
+    got = linear(x, w, b, True)
+    np.testing.assert_allclose(np.asarray(got), np.tile(np.maximum(np.arange(-3.0, 3.0), 0), (4, 1)))
+    # Identity weights pass x through.
+    x = rand(jax.random.PRNGKey(5), 7, 7)
+    got = linear(x, jnp.eye(7), jnp.zeros(7), False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(x), rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Backward (custom VJP through the Pallas kernel)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("relu", [False, True])
+def test_vjp_matches_ref(relu):
+    k1, k2, k3 = keys(1, 3)
+    x, w, b = rand(k1, 9, 20), rand(k2, 20, 13), rand(k3, 13)
+
+    def loss_kernel(x, w, b):
+        return jnp.sum(jnp.tanh(linear(x, w, b, relu)))
+
+    def loss_ref(x, w, b):
+        return jnp.sum(jnp.tanh(linear_ref(x, w, b, relu)))
+
+    g = jax.grad(loss_kernel, argnums=(0, 1, 2))(x, w, b)
+    gr = jax.grad(loss_ref, argnums=(0, 1, 2))(x, w, b)
+    for a, c in zip(g, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(c), rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**30), relu=st.booleans())
+def test_vjp_matches_ref_hypothesis(seed, relu):
+    k1, k2, k3, k4 = keys(seed, 4)
+    x, w, b = rand(k1, 6, 11), rand(k2, 11, 5), rand(k3, 5)
+    ct = rand(k4, 6, 5)
+
+    _, vjp = jax.vjp(lambda x, w, b: linear(x, w, b, relu), x, w, b)
+    _, vjp_ref = jax.vjp(lambda x, w, b: linear_ref(x, w, b, relu), x, w, b)
+    for a, c in zip(vjp(ct), vjp_ref(ct)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(c), rtol=2e-4, atol=2e-4)
+
+
+def test_relu_masks_gradient():
+    # At a point where the pre-activation is negative, d/dx must be 0.
+    x = -jnp.ones((1, 4))
+    w = jnp.eye(4)
+    b = jnp.zeros(4)
+    g = jax.grad(lambda x: jnp.sum(linear(x, w, b, True)))(x)
+    np.testing.assert_allclose(np.asarray(g), np.zeros((1, 4)))

@@ -1,0 +1,254 @@
+"""L2 correctness: networks, Adam, and the compiled training steps.
+
+These run the same jitted functions aot.py lowers, so a green run here
+plus the rust integration tests (which compare the compiled HLO against a
+rust-side reference) validates the whole AOT path.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels.ref import mlp3_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+B, S, A = model.BATCH, model.STATE_DIM, model.NUM_ACTIONS
+
+
+def rand(seed, *shape):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Networks + init
+# ---------------------------------------------------------------------------
+
+
+def test_q_init_shapes_and_determinism():
+    p = model.q_init(0)
+    assert [tuple(t.shape) for t in p] == [tuple(s) for s in model.Q_SHAPES]
+    p2 = model.q_init(0)
+    for a, b in zip(p, p2):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    p3 = model.q_init(1)
+    assert not np.allclose(np.asarray(p[0]), np.asarray(p3[0]))
+    # biases zero, weights he-scaled
+    assert float(jnp.abs(p[1]).max()) == 0.0
+    std = float(p[0].std())
+    assert 0.5 * (2 / S) ** 0.5 < std < 2.0 * (2 / S) ** 0.5
+
+
+def test_q_forward_matches_jnp_reference():
+    p = model.q_init(3)
+    x = rand(1, 5, S)
+    got = model.q_forward(p, x)
+    want = mlp3_ref(p, x)
+    assert got.shape == (5, A)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+def test_pv_forward_shapes():
+    p = model.pv_init(4)
+    x = rand(2, 3, S)
+    logits, value = model.pv_forward(p, x)
+    assert logits.shape == (3, A)
+    assert value.shape == (3,)
+
+
+# ---------------------------------------------------------------------------
+# Adam
+# ---------------------------------------------------------------------------
+
+
+def test_adam_step_moves_against_gradient():
+    params = (jnp.ones((4,)),)
+    grads = (jnp.ones((4,)),)
+    m = (jnp.zeros((4,)),)
+    v = (jnp.zeros((4,)),)
+    new_p, new_m, new_v, t = model.adam_update(params, grads, m, v, jnp.float32(0.0), 0.1)
+    assert float(t) == 1.0
+    # First Adam step with bias correction moves by ~lr.
+    np.testing.assert_allclose(np.asarray(new_p[0]), 1.0 - 0.1, rtol=1e-3)
+    assert float(new_m[0][0]) > 0.0
+    assert float(new_v[0][0]) > 0.0
+
+
+def test_clip_by_global_norm():
+    big = (jnp.full((10,), 100.0),)
+    clipped, gn = model._clip_by_global_norm(big, max_norm=10.0)
+    assert float(gn) > 100.0
+    norm = float(jnp.sqrt(sum(jnp.sum(g * g) for g in clipped)))
+    np.testing.assert_allclose(norm, 10.0, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# DQN training step
+# ---------------------------------------------------------------------------
+
+
+def dqn_args(seed=0):
+    p = model.q_init(seed)
+    tp = model.q_init(seed + 100)
+    zeros = tuple(jnp.zeros_like(t) for t in p)
+    key = jax.random.PRNGKey(seed + 7)
+    s = jax.random.normal(key, (B, S), jnp.float32)
+    a = jnp.zeros((B,), jnp.int32)
+    r = jnp.ones((B,), jnp.float32)
+    s2 = s + 0.1
+    done = jnp.ones((B,), jnp.float32)
+    w = jnp.ones((B,), jnp.float32)
+    return (
+        *p, *tp, *zeros, *zeros,
+        jnp.float32(0.0), s, a, r, s2, done, w,
+        jnp.float32(3e-3), jnp.float32(0.9),
+    )
+
+
+def test_dqn_train_step_reduces_loss_on_fixed_batch():
+    args = list(dqn_args())
+    step = jax.jit(model.dqn_train_step)
+    losses = []
+    for _ in range(8):
+        out = step(*args)
+        new_p, new_m, new_v, t = out[:6], out[6:12], out[12:18], out[18]
+        td_abs, loss = out[19], out[20]
+        assert td_abs.shape == (B,)
+        losses.append(float(loss))
+        args[0:6] = new_p
+        args[12:18] = new_m
+        args[18:24] = new_v
+        args[24] = t
+    assert losses[-1] < losses[0], losses
+    assert all(np.isfinite(losses))
+
+
+def test_dqn_importance_weights_scale_loss():
+    args = list(dqn_args(1))
+    out_w1 = model.dqn_train_step(*args)
+    args[30] = jnp.full((B,), 0.5, jnp.float32)  # weights input
+    out_w05 = model.dqn_train_step(*args)
+    np.testing.assert_allclose(
+        float(out_w05[20]), 0.5 * float(out_w1[20]), rtol=1e-4
+    )
+
+
+def test_dqn_done_masks_bootstrap():
+    # With done=1 the target is just r; gamma must not matter.
+    args = list(dqn_args(2))
+    out_a = model.dqn_train_step(*args)
+    args[32] = jnp.float32(0.0)  # gamma
+    out_b = model.dqn_train_step(*args)
+    np.testing.assert_allclose(float(out_a[20]), float(out_b[20]), rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# PPO / A2C training steps
+# ---------------------------------------------------------------------------
+
+
+def pv_zeros(p):
+    return tuple(jnp.zeros_like(t) for t in p)
+
+
+def test_ppo_train_step_improves_surrogate():
+    p = model.pv_init(5)
+    z = pv_zeros(p)
+    key = jax.random.PRNGKey(11)
+    s = jax.random.normal(key, (B, S), jnp.float32)
+    a = jnp.zeros((B,), jnp.int32)
+    adv = jnp.ones((B,), jnp.float32)  # action 0 is always advantageous
+    logits, _ = model.pv_forward(p, s)
+    old_logp = jax.nn.log_softmax(logits, axis=1)[:, 0]
+    ret = jnp.zeros((B,), jnp.float32)
+
+    args = [*p, *z, *z, jnp.float32(0.0), s, a, adv, ret, old_logp,
+            jnp.float32(1e-2), jnp.float32(0.2), jnp.float32(0.0)]
+    step = jax.jit(model.ppo_train_step)
+    for _ in range(5):
+        out = step(*args)
+        args[0:8] = out[:8]
+        args[8:16] = out[8:16]
+        args[16:24] = out[16:24]
+        args[24] = out[24]
+    new_logits, _ = model.pv_forward(tuple(args[0:8]), s)
+    new_logp = jax.nn.log_softmax(new_logits, axis=1)[:, 0]
+    # Probability of the advantageous action must increase.
+    assert float((new_logp - old_logp).mean()) > 0.0
+
+
+def test_a2c_train_step_runs_and_is_finite():
+    p = model.pv_init(6)
+    z = pv_zeros(p)
+    key = jax.random.PRNGKey(13)
+    s = jax.random.normal(key, (B, S), jnp.float32)
+    a = jnp.array(np.arange(B) % A, jnp.int32)
+    adv = jax.random.normal(key, (B,), jnp.float32)
+    ret = jax.random.normal(key, (B,), jnp.float32)
+    out = model.a2c_train_step(
+        *p, *z, *z, jnp.float32(0.0), s, a, adv, ret,
+        jnp.float32(1e-3), jnp.float32(0.01),
+    )
+    assert len(out) == 27
+    assert np.isfinite(float(out[25]))  # loss
+    assert float(out[26]) > 0.0  # entropy positive for a fresh policy
+
+
+def test_value_head_regresses_returns():
+    # Train only on value loss (adv = 0): value predictions approach ret.
+    p = model.pv_init(7)
+    z = pv_zeros(p)
+    key = jax.random.PRNGKey(17)
+    s = jax.random.normal(key, (B, S), jnp.float32)
+    a = jnp.zeros((B,), jnp.int32)
+    adv = jnp.zeros((B,), jnp.float32)
+    ret = jnp.ones((B,), jnp.float32) * 3.0
+    args = [*p, *z, *z, jnp.float32(0.0), s, a, adv, ret,
+            jnp.float32(1e-2), jnp.float32(0.0)]
+    step = jax.jit(model.a2c_train_step)
+    before = float(jnp.mean((model.pv_forward(p, s)[1] - ret) ** 2))
+    for _ in range(20):
+        out = step(*args)
+        args[0:8] = out[:8]
+        args[8:16] = out[8:16]
+        args[16:24] = out[16:24]
+        args[24] = out[24]
+    after = float(jnp.mean((model.pv_forward(tuple(args[0:8]), s)[1] - ret) ** 2))
+    assert after < before * 0.5, (before, after)
+
+
+# ---------------------------------------------------------------------------
+# AOT lowering sanity
+# ---------------------------------------------------------------------------
+
+
+def test_aot_entry_points_lower():
+    from compile import aot
+
+    eps = aot.entry_points()
+    assert set(eps) >= {
+        "q_init", "pv_init", "q_forward_b1", "q_forward_b64",
+        "pv_forward_b1", "dqn_train_step", "ppo_train_step",
+        "a2c_train_step", "mm_64", "mm_128", "mm_256", "mm_512",
+    }
+    # Lower a small one end-to-end and check it is valid HLO text.
+    fn, specs = eps["q_forward_b1"]
+    text = aot.to_hlo_text(jax.jit(fn).lower(*specs))
+    assert "HloModule" in text
+    assert "ENTRY" in text
+
+
+def test_manifest_counts_match():
+    from compile import aot
+
+    for name, (fn, specs) in aot.entry_points().items():
+        n = aot.num_outputs(fn, specs)
+        assert n >= 1, name
+        if name == "dqn_train_step":
+            assert n == 21
+        if name == "ppo_train_step":
+            assert n == 28
+        if name == "a2c_train_step":
+            assert n == 27

@@ -1,0 +1,100 @@
+//! Executor micro-benchmarks: GFLOPS of canonical schedules + schedule
+//! lowering throughput. Regenerates the backend-performance half of
+//! Table I and feeds the §Perf log in EXPERIMENTS.md.
+//!
+//! Run: `cargo bench --bench executor` (criterion is not in the offline
+//! cache; this uses the crate's own warmup+min-of-reps harness).
+
+use looptune::backend::executor::{measure, plan, MeasureCfg, Workspace};
+use looptune::backend::schedule::lower;
+use looptune::backend::peak;
+use looptune::baselines::templates::TemplatePoint;
+use looptune::ir::{Dim, Nest, Problem};
+use looptune::util::bench;
+use std::time::Duration;
+
+fn gflops(nest: &Nest, reps: usize) -> f64 {
+    let mut ws = Workspace::new(nest.problem, 1);
+    let pl = plan(lower(nest));
+    measure(&pl, &mut ws, MeasureCfg { warmup: 1, repeats: reps })
+}
+
+fn main() {
+    let pk = peak::peak_gflops();
+    println!("empirical peak: {pk:.2} GFLOPS\n");
+    println!("{:<28} {:>10} {:>9}", "schedule", "GFLOPS", "% peak");
+
+    for n in [64usize, 128, 256] {
+        let p = Problem::new(n, n, n);
+        let cases: Vec<(String, Nest)> = vec![
+            (format!("mm{n} m n k (naive)"), Nest::initial(p)),
+            (
+                format!("mm{n} m k n (unit-stride)"),
+                TemplatePoint { order: [Dim::M, Dim::K, Dim::N], tile: [None; 3] }
+                    .instantiate(p),
+            ),
+            (
+                format!("mm{n} k n m (worst)"),
+                TemplatePoint { order: [Dim::K, Dim::N, Dim::M], tile: [None; 3] }
+                    .instantiate(p),
+            ),
+            (
+                format!("mm{n} blocked 32/32/4"),
+                TemplatePoint {
+                    order: [Dim::M, Dim::N, Dim::K],
+                    tile: [Some(32), Some(32), Some(4)],
+                }
+                .instantiate(p),
+            ),
+        ];
+        for (name, nest) in cases {
+            let g = gflops(&nest, 5);
+            println!("{name:<28} {g:>10.2} {:>8.1}%", 100.0 * g / pk);
+        }
+        println!();
+    }
+
+    // Schedule lowering ("compile") throughput.
+    let nest = TemplatePoint {
+        order: [Dim::M, Dim::N, Dim::K],
+        tile: [Some(32), Some(64), Some(8)],
+    }
+    .instantiate(Problem::new(256, 256, 256));
+    bench::run("lower+plan (tiled nest)", Duration::from_millis(300), 1000, || {
+        std::hint::black_box(plan(lower(&nest)));
+    });
+
+    // Featurization throughput (the RL hot path outside PJRT).
+    bench::run("state_vector", Duration::from_millis(300), 1000, || {
+        std::hint::black_box(looptune::featurize::state_vector(&nest));
+    });
+
+    // Cost model throughput (training reward).
+    let model = looptune::backend::cost_model::CostModel::default();
+    bench::run("cost_model predict", Duration::from_millis(300), 1000, || {
+        std::hint::black_box(model.predict(&lower(&nest)));
+    });
+
+    // §Perf ablation: 4-wide-unrolled kn_tile vs the 1-wide reference.
+    use looptune::backend::microkernel::{kn_tile, kn_tile_ref};
+    let (m, k, n2) = (64usize, 256usize, 256usize);
+    let a: Vec<f32> = (0..m * k).map(|i| (i % 13) as f32).collect();
+    let b: Vec<f32> = (0..k * n2).map(|i| (i % 7) as f32).collect();
+    let mut t = vec![0.0f32; m * n2];
+    let r_new = bench::run("kn_tile (4-wide)", Duration::from_millis(400), 10, || {
+        for i in 0..m {
+            kn_tile(&mut t, &a, &b, n2, k, i, 0, n2, 0, k);
+        }
+        std::hint::black_box(&mut t);
+    });
+    let r_ref = bench::run("kn_tile_ref (1-wide)", Duration::from_millis(400), 10, || {
+        for i in 0..m {
+            kn_tile_ref(&mut t, &a, &b, n2, k, i, 0, n2, 0, k);
+        }
+        std::hint::black_box(&mut t);
+    });
+    println!(
+        "kn_tile unroll speedup: {:.2}x",
+        r_ref.min_secs() / r_new.min_secs()
+    );
+}

@@ -1,0 +1,58 @@
+//! Fig. 11a bench: tuning latency per method — the paper's "LoopTune
+//! generates code in 1 second while AutoTVM and MetaSchedule need 33/62 s".
+//!
+//! Measures, for a few representative problems: policy-inference tuning
+//! time (LoopTune), and the 64-trial tuner simulators' wall time, all on
+//! measured execution.
+//!
+//! Run: `cargo bench --bench fig11_tune_latency` (requires `make artifacts`).
+
+use looptune::backend::executor::ExecutorBackend;
+use looptune::backend::{Cached, SharedBackend};
+use looptune::baselines::all_baselines;
+use looptune::eval::{experiments, EvalCfg};
+use looptune::ir::Problem;
+use looptune::rl;
+use looptune::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    if !Runtime::available("artifacts") {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+        return Ok(());
+    }
+    let rt = Runtime::load_default()?;
+    let cfg = EvalCfg {
+        out_dir: "results".into(),
+        params_path: Some("results/apex_dqn.ltps".into()),
+        ..Default::default()
+    };
+    let (params, trained) = experiments::load_policy(&rt, &cfg)?;
+    if !trained {
+        eprintln!("note: untrained policy (run `make train` first for the real numbers)");
+    }
+
+    let problems = [
+        Problem::new(96, 96, 96),
+        Problem::new(160, 192, 128),
+        Problem::new(256, 256, 256),
+    ];
+    println!("{:<14} {:>14} {:>12} {:>10}", "method", "tune time [s]", "GFLOPS", "evals");
+    for p in problems {
+        println!("--- {p} ---");
+        let be = SharedBackend::new(Cached::new(ExecutorBackend::default()));
+        let out = rl::tune(&rt, &params, p, 10, &be)?;
+        println!(
+            "{:<14} {:>14.3} {:>12.2} {:>10}",
+            "looptune", out.infer_secs, out.gflops, 0
+        );
+        for mut b in all_baselines(7) {
+            let be = SharedBackend::new(Cached::new(ExecutorBackend::default()));
+            let r = b.run(p, &be);
+            println!(
+                "{:<14} {:>14.3} {:>12.2} {:>10}",
+                r.name, r.tune_secs, r.gflops, r.evals
+            );
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,19 @@
+//! Table I bench: "LoopNest" (our backend) vs XLA compile time + execution
+//! performance on MM-64..512, plus the CONV rows as im2col matmuls.
+//!
+//! Run: `cargo bench --bench table1` (requires `make artifacts`).
+
+use looptune::eval::{experiments, EvalCfg};
+use looptune::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    if !Runtime::available("artifacts") {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+        return Ok(());
+    }
+    let rt = Runtime::load_default()?;
+    let cfg = EvalCfg { out_dir: "results".into(), ..Default::default() };
+    let md = experiments::table1(&rt, &cfg)?;
+    println!("{md}");
+    Ok(())
+}

@@ -1,0 +1,269 @@
+//! Innermost-loop microkernels — the hardware-specific layer the paper
+//! delegates to LoopNest ("automatically vectorizes the innermost loop and
+//! applies register tiling").
+//!
+//! The executor recurses over outer levels and dispatches the innermost
+//! level (always IR-stride 1) to one of these tight loops. Which dim is
+//! innermost determines the memory pattern, exactly the effect the RL agent
+//! must learn:
+//!
+//! - `n` innermost: unit stride on B and T, A broadcast -> vectorizes (axpy)
+//! - `k` innermost: unit stride on A, stride-N gather on B -> dot product
+//! - `m` innermost: stride-K on A, stride-N on T -> worst case
+//!
+//! Two-level register-tiled kernels (`kn_tile`, `nk_tile`) cover the
+//! innermost *pair* when profitable; the executor selects them during
+//! lowering (see executor.rs). All kernels are plain safe-ish Rust written
+//! so LLVM auto-vectorizes the unit-stride loops (verified via the
+//! `executor` bench; see EXPERIMENTS.md §Perf).
+
+/// T[m, n0..n0+len] += A[m, k] * B[k, n0..n0+len]   (axpy row update)
+#[inline]
+pub fn inner_n(t: &mut [f32], a: &[f32], b: &[f32], big_n: usize, big_k: usize,
+               m: usize, n0: usize, k: usize, len: usize) {
+    let av = a[m * big_k + k];
+    let trow = &mut t[m * big_n + n0..m * big_n + n0 + len];
+    let brow = &b[k * big_n + n0..k * big_n + n0 + len];
+    for (tv, bv) in trow.iter_mut().zip(brow.iter()) {
+        *tv += av * bv;
+    }
+}
+
+/// T[m, n] += dot(A[m, k0..k0+len], B[k0..k0+len, n])   (strided dot)
+#[inline]
+pub fn inner_k(t: &mut [f32], a: &[f32], b: &[f32], big_n: usize, big_k: usize,
+               m: usize, n: usize, k0: usize, len: usize) {
+    let arow = &a[m * big_k + k0..m * big_k + k0 + len];
+    let mut acc = 0.0f32;
+    let mut bidx = k0 * big_n + n;
+    for &av in arow {
+        acc += av * b[bidx];
+        bidx += big_n;
+    }
+    t[m * big_n + n] += acc;
+}
+
+/// T[m0..m0+len, n] += A[m0..m0+len, k] * B[k, n]   (strided column update)
+#[inline]
+pub fn inner_m(t: &mut [f32], a: &[f32], b: &[f32], big_n: usize, big_k: usize,
+               m0: usize, n: usize, k: usize, len: usize) {
+    let bv = b[k * big_n + n];
+    let mut aidx = m0 * big_k + k;
+    let mut tidx = m0 * big_n + n;
+    for _ in 0..len {
+        t[tidx] += a[aidx] * bv;
+        aidx += big_k;
+        tidx += big_n;
+    }
+}
+
+/// Register-tiled pair: innermost (k outer, n inner). The k loop is
+/// unrolled 4-wide so each T-row element is loaded/stored once per FOUR
+/// FMAs instead of once per FMA — the memory-traffic reduction that makes
+/// this the fastest innermost pair (§Perf: +~2x over the 1-wide version,
+/// kept below as `kn_tile_ref` for the ablation bench and tests).
+#[inline]
+pub fn kn_tile(t: &mut [f32], a: &[f32], b: &[f32], big_n: usize, big_k: usize,
+               m: usize, n0: usize, nlen: usize, k0: usize, klen: usize) {
+    let trow = &mut t[m * big_n + n0..m * big_n + n0 + nlen];
+    let arow = &a[m * big_k + k0..m * big_k + k0 + klen];
+    let mut kk = 0;
+    while kk + 4 <= klen {
+        let (a0, a1, a2, a3) = (arow[kk], arow[kk + 1], arow[kk + 2], arow[kk + 3]);
+        let base = (k0 + kk) * big_n + n0;
+        let b0 = &b[base..base + nlen];
+        let b1 = &b[base + big_n..base + big_n + nlen];
+        let b2 = &b[base + 2 * big_n..base + 2 * big_n + nlen];
+        let b3 = &b[base + 3 * big_n..base + 3 * big_n + nlen];
+        for j in 0..nlen {
+            trow[j] += a0 * b0[j] + a1 * b1[j] + a2 * b2[j] + a3 * b3[j];
+        }
+        kk += 4;
+    }
+    while kk < klen {
+        let av = arow[kk];
+        let brow = &b[(k0 + kk) * big_n + n0..(k0 + kk) * big_n + n0 + nlen];
+        for (tv, bv) in trow.iter_mut().zip(brow.iter()) {
+            *tv += av * bv;
+        }
+        kk += 1;
+    }
+}
+
+/// Reference (1-wide) version of [`kn_tile`]; used by tests to validate
+/// the unrolled kernel and by the ablation bench to quantify the win.
+#[inline]
+pub fn kn_tile_ref(t: &mut [f32], a: &[f32], b: &[f32], big_n: usize, big_k: usize,
+                   m: usize, n0: usize, nlen: usize, k0: usize, klen: usize) {
+    let trow = &mut t[m * big_n + n0..m * big_n + n0 + nlen];
+    for kk in 0..klen {
+        let av = a[m * big_k + k0 + kk];
+        let brow = &b[(k0 + kk) * big_n + n0..(k0 + kk) * big_n + n0 + nlen];
+        for (tv, bv) in trow.iter_mut().zip(brow.iter()) {
+            *tv += av * bv;
+        }
+    }
+}
+
+/// Register-tiled pair: innermost (n outer, k inner). Four dot products
+/// carried in independent accumulators to hide FMA latency.
+#[inline]
+pub fn nk_tile(t: &mut [f32], a: &[f32], b: &[f32], big_n: usize, big_k: usize,
+               m: usize, n0: usize, nlen: usize, k0: usize, klen: usize) {
+    let arow = &a[m * big_k + k0..m * big_k + k0 + klen];
+    let mut nn = 0;
+    // 4-wide over n: amortizes the strided walk down B's rows.
+    while nn + 4 <= nlen {
+        let (mut a0, mut a1, mut a2, mut a3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+        let mut bidx = k0 * big_n + n0 + nn;
+        for &av in arow {
+            a0 += av * b[bidx];
+            a1 += av * b[bidx + 1];
+            a2 += av * b[bidx + 2];
+            a3 += av * b[bidx + 3];
+            bidx += big_n;
+        }
+        let tbase = m * big_n + n0 + nn;
+        t[tbase] += a0;
+        t[tbase + 1] += a1;
+        t[tbase + 2] += a2;
+        t[tbase + 3] += a3;
+        nn += 4;
+    }
+    while nn < nlen {
+        inner_k(t, a, b, big_n, big_k, m, n0 + nn, k0, klen);
+        nn += 1;
+    }
+}
+
+/// Unit-stride copy row for the write-back nest: C[m, n0..n0+len] = T[..].
+#[inline]
+pub fn copy_row(c: &mut [f32], t: &[f32], big_n: usize, m: usize, n0: usize, len: usize) {
+    let base = m * big_n + n0;
+    c[base..base + len].copy_from_slice(&t[base..base + len]);
+}
+
+/// Strided copy column: C[m0..m0+len, n] = T[.., n].
+#[inline]
+pub fn copy_col(c: &mut [f32], t: &[f32], big_n: usize, m0: usize, n: usize, len: usize) {
+    let mut idx = m0 * big_n + n;
+    for _ in 0..len {
+        c[idx] = t[idx];
+        idx += big_n;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup(m: usize, n: usize, k: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let a: Vec<f32> = (0..m * k).map(|i| (i % 7) as f32 - 3.0).collect();
+        let b: Vec<f32> = (0..k * n).map(|i| (i % 5) as f32 - 2.0).collect();
+        let t = vec![0.0f32; m * n];
+        (a, b, t)
+    }
+
+    fn reference(a: &[f32], b: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
+        let mut t = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0.0;
+                for l in 0..k {
+                    acc += a[i * k + l] * b[l * n + j];
+                }
+                t[i * n + j] = acc;
+            }
+        }
+        t
+    }
+
+    #[test]
+    fn all_single_dim_kernels_agree_with_reference() {
+        let (m, n, k) = (5, 7, 9);
+        let (a, b, _) = setup(m, n, k);
+        let want = reference(&a, &b, m, n, k);
+
+        let mut t = vec![0.0f32; m * n];
+        for i in 0..m {
+            for l in 0..k {
+                inner_n(&mut t, &a, &b, n, k, i, 0, l, n);
+            }
+        }
+        assert_eq!(t, want, "inner_n");
+
+        let mut t = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                inner_k(&mut t, &a, &b, n, k, i, j, 0, k);
+            }
+        }
+        assert_eq!(t, want, "inner_k");
+
+        let mut t = vec![0.0f32; m * n];
+        for j in 0..n {
+            for l in 0..k {
+                inner_m(&mut t, &a, &b, n, k, 0, j, l, m);
+            }
+        }
+        assert_eq!(t, want, "inner_m");
+    }
+
+    #[test]
+    fn tiled_pair_kernels_agree_with_reference() {
+        let (m, n, k) = (4, 11, 13); // n, k not multiples of 4: remainders
+        let (a, b, _) = setup(m, n, k);
+        let want = reference(&a, &b, m, n, k);
+
+        let mut t = vec![0.0f32; m * n];
+        for i in 0..m {
+            kn_tile(&mut t, &a, &b, n, k, i, 0, n, 0, k);
+        }
+        assert_eq!(t, want, "kn_tile");
+
+        let mut t = vec![0.0f32; m * n];
+        for i in 0..m {
+            kn_tile_ref(&mut t, &a, &b, n, k, i, 0, n, 0, k);
+        }
+        assert_eq!(t, want, "kn_tile_ref");
+
+        let mut t = vec![0.0f32; m * n];
+        for i in 0..m {
+            nk_tile(&mut t, &a, &b, n, k, i, 0, n, 0, k);
+        }
+        assert_eq!(t, want, "nk_tile");
+    }
+
+    #[test]
+    fn partial_ranges() {
+        let (m, n, k) = (3, 8, 6);
+        let (a, b, _) = setup(m, n, k);
+        let want = reference(&a, &b, m, n, k);
+        // Cover n in two chunks, k in two chunks via kn_tile.
+        let mut t = vec![0.0f32; m * n];
+        for i in 0..m {
+            for (n0, nlen) in [(0, 5), (5, 3)] {
+                for (k0, klen) in [(0, 4), (4, 2)] {
+                    kn_tile(&mut t, &a, &b, n, k, i, n0, nlen, k0, klen);
+                }
+            }
+        }
+        assert_eq!(t, want);
+    }
+
+    #[test]
+    fn copy_kernels() {
+        let n = 6;
+        let t: Vec<f32> = (0..24).map(|x| x as f32).collect();
+        let mut c = vec![0.0f32; 24];
+        for m in 0..4 {
+            copy_row(&mut c, &t, n, m, 0, n);
+        }
+        assert_eq!(c, t);
+        let mut c = vec![0.0f32; 24];
+        for j in 0..n {
+            copy_col(&mut c, &t, n, 0, j, 4);
+        }
+        assert_eq!(c, t);
+    }
+}

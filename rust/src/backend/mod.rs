@@ -1,0 +1,132 @@
+//! The "LoopNest" backend substrate (paper §IV): given a schedule, produce
+//! a GFLOPS number. Two implementations:
+//!
+//! - [`executor::Executor`] **runs the scheduled contraction for real** on
+//!   this CPU (vectorized innermost microkernels, register-tiled epilogue,
+//!   warmup + min-of-repeats timing, exactly the paper's measurement
+//!   protocol). Used for evaluation and for "measured-reward" training.
+//! - [`cost_model::CostModel`] predicts GFLOPS analytically from a
+//!   cache-reuse model — deterministic and ~10^4x faster, used as the
+//!   training-time reward (substitution documented in DESIGN.md §4).
+//!
+//! [`peak`] measures the empirical peak exactly as the paper prescribes
+//! ("running a series of kernels with high arithmetic intensity").
+
+pub mod cost_model;
+pub mod executor;
+pub mod microkernel;
+pub mod peak;
+pub mod schedule;
+
+use crate::ir::Nest;
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+/// Anything that can score a schedule in GFLOPS.
+pub trait Backend {
+    fn eval(&mut self, nest: &Nest) -> f64;
+
+    /// Human-readable name for reports.
+    fn name(&self) -> &'static str;
+
+    /// Number of evaluations performed so far (for search-budget stats).
+    fn eval_count(&self) -> u64;
+}
+
+/// Memoizing wrapper: identical nest states (same loops + problem,
+/// *ignoring the cursor*) are evaluated once. This is the "caching to
+/// avoid repeating evaluations of the same states" the paper's searches
+/// use (§V).
+pub struct Cached<B: Backend> {
+    pub inner: B,
+    cache: HashMap<CacheKey, f64>,
+    pub hits: u64,
+}
+
+#[derive(Clone, PartialEq, Eq, Hash)]
+struct CacheKey {
+    problem: crate::ir::Problem,
+    loops: Vec<crate::ir::Loop>,
+}
+
+impl<B: Backend> Cached<B> {
+    pub fn new(inner: B) -> Self {
+        Cached { inner, cache: HashMap::new(), hits: 0 }
+    }
+}
+
+impl<B: Backend> Backend for Cached<B> {
+    fn eval(&mut self, nest: &Nest) -> f64 {
+        let key = CacheKey { problem: nest.problem, loops: nest.loops.clone() };
+        if let Some(&g) = self.cache.get(&key) {
+            self.hits += 1;
+            return g;
+        }
+        let g = self.inner.eval(nest);
+        self.cache.insert(key, g);
+        g
+    }
+
+    fn name(&self) -> &'static str {
+        self.inner.name()
+    }
+
+    fn eval_count(&self) -> u64 {
+        self.inner.eval_count()
+    }
+}
+
+/// Shared-ownership backend handle so env + search can hold one cache.
+#[derive(Clone)]
+pub struct SharedBackend(pub Rc<RefCell<dyn Backend>>);
+
+impl SharedBackend {
+    pub fn new<B: Backend + 'static>(b: B) -> Self {
+        SharedBackend(Rc::new(RefCell::new(b)))
+    }
+
+    pub fn eval(&self, nest: &Nest) -> f64 {
+        self.0.borrow_mut().eval(nest)
+    }
+
+    pub fn eval_count(&self) -> u64 {
+        self.0.borrow().eval_count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{Nest, Problem};
+
+    struct Counting(u64);
+    impl Backend for Counting {
+        fn eval(&mut self, nest: &Nest) -> f64 {
+            self.0 += 1;
+            nest.loops.len() as f64
+        }
+        fn name(&self) -> &'static str {
+            "counting"
+        }
+        fn eval_count(&self) -> u64 {
+            self.0
+        }
+    }
+
+    #[test]
+    fn cache_dedups_and_ignores_cursor() {
+        let mut c = Cached::new(Counting(0));
+        let mut n = Nest::initial(Problem::new(64, 64, 64));
+        let g1 = c.eval(&n);
+        n.cursor_down().unwrap(); // cursor differs, same schedule
+        let g2 = c.eval(&n);
+        assert_eq!(g1, g2);
+        assert_eq!(c.inner.0, 1);
+        assert_eq!(c.hits, 1);
+
+        n.split(8).unwrap(); // different schedule -> re-eval
+        c.eval(&n);
+        assert_eq!(c.inner.0, 2);
+    }
+}

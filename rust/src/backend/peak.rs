@@ -1,0 +1,55 @@
+//! Empirical peak-performance measurement (paper §III-B: "we evaluate peak
+//! performance empirically before the training by running the series of
+//! kernels with high arithmetic intensity").
+//!
+//! The kernel is a register-resident FMA chain over 8 independent
+//! accumulators — no memory traffic in the hot loop, so the measurement
+//! approaches the single-core f32 roofline. Rewards are normalized by this
+//! number; the Table/Figure reports use it to express "fraction of peak".
+
+use crate::util::bench;
+use std::time::Duration;
+
+/// GFLOPS of a register-only FMA kernel (single core).
+pub fn measure_peak() -> f64 {
+    const ELEMS: usize = 256; // 64 vectors' worth of independent chains
+    const ITERS: usize = 50_000;
+
+    let mut acc = [1.0f32; ELEMS];
+    // NOTE: deliberately mul-then-add, not f32::mul_add — without
+    // `-C target-feature=+fma` the latter lowers to a scalar libm call
+    // (~50x slower); a flat array of independent chains auto-vectorizes
+    // and provides enough ILP to hide the multiply-add latency.
+    let r = bench::bench("peak_fma", Duration::from_millis(300), 5, || {
+        for _ in 0..ITERS {
+            for a in acc.iter_mut() {
+                *a = 1.000_001f32 * *a + 1e-9f32;
+            }
+        }
+        std::hint::black_box(&mut acc);
+    });
+    // mul + add = 2 flops per element per iteration.
+    let flops = (ITERS * ELEMS * 2) as f64;
+    flops / r.min_secs() / 1e9
+}
+
+/// Cached peak: measured once per process (measurement takes ~0.5 s).
+pub fn peak_gflops() -> f64 {
+    use std::sync::OnceLock;
+    static PEAK: OnceLock<f64> = OnceLock::new();
+    *PEAK.get_or_init(measure_peak)
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn peak_is_sane() {
+        let p = super::peak_gflops();
+        // Any remotely modern core should exceed 1 GFLOPS, but debug
+        // builds do not vectorize and a contended CI core can be slowed
+        // arbitrarily — keep only a loose sanity window.
+        assert!(p > 0.02 && p < 500.0, "peak {p}");
+        // Cached: second call returns the identical value.
+        assert_eq!(p, super::peak_gflops());
+    }
+}

@@ -1,0 +1,77 @@
+//! Schedule lowering: [`Nest`] -> [`CompiledSchedule`], the flat form the
+//! executor and the cost model consume. This is the (microseconds-scale)
+//! analogue of LoopNest's code generation step; `lower()` time is what the
+//! Table I "compilation time" column measures for our backend.
+
+use crate::ir::{Dim, Kind, Nest};
+
+/// One loop level of the lowered compute (or write-back) nest.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Level {
+    pub dim: Dim,
+    /// Elements of `dim` advanced per iteration of this level.
+    pub stride: usize,
+}
+
+/// Flat, validated schedule.
+#[derive(Clone, Debug)]
+pub struct CompiledSchedule {
+    pub problem: crate::ir::Problem,
+    /// Compute nest, outermost first. Deepest level of each dim has stride 1.
+    pub levels: Vec<Level>,
+    /// Write-back nest, outermost first.
+    pub wb_levels: Vec<Level>,
+}
+
+/// Lower a nest. Cheap (no allocation beyond two small Vecs) — callers may
+/// lower per evaluation.
+pub fn lower(nest: &Nest) -> CompiledSchedule {
+    debug_assert!(nest.check_invariants().is_ok());
+    let mut levels = Vec::with_capacity(nest.loops.len());
+    let mut wb_levels = Vec::with_capacity(4);
+    for (i, l) in nest.loops.iter().enumerate() {
+        let level = Level { dim: l.dim, stride: nest.stride(i) };
+        match l.kind {
+            Kind::Compute => levels.push(level),
+            Kind::WriteBack => wb_levels.push(level),
+        }
+    }
+    CompiledSchedule { problem: nest.problem, levels, wb_levels }
+}
+
+impl CompiledSchedule {
+    /// Index of the innermost compute level.
+    pub fn innermost(&self) -> &Level {
+        self.levels.last().expect("non-empty compute nest")
+    }
+
+    /// Extent of `dim` covered by one iteration at `level` (the chunk the
+    /// sub-nest below sees), before boundary clamping.
+    pub fn chunk(&self, level: usize) -> usize {
+        self.levels[level].stride
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{Nest, Problem};
+
+    #[test]
+    fn lower_initial() {
+        let s = lower(&Nest::initial(Problem::new(64, 96, 128)));
+        assert_eq!(s.levels.len(), 3);
+        assert_eq!(s.wb_levels.len(), 2);
+        assert!(s.levels.iter().all(|l| l.stride == 1));
+        assert_eq!(s.innermost().dim, Dim::K);
+    }
+
+    #[test]
+    fn lower_tiled_strides() {
+        let mut n = Nest::initial(Problem::new(64, 96, 128));
+        n.split(16).unwrap(); // m -> m(stride16), m:16
+        let s = lower(&n);
+        assert_eq!(s.levels[0], Level { dim: Dim::M, stride: 16 });
+        assert_eq!(s.levels[1], Level { dim: Dim::M, stride: 1 });
+    }
+}

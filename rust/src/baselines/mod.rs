@@ -1,0 +1,95 @@
+//! Simulated comparators for Fig. 11 and Table I (DESIGN.md §4).
+//!
+//! The paper compares against closed or unavailable systems (NumPy/MKL,
+//! TVM, AutoTVM, MetaSchedule, LLVM). Each simulator preserves the
+//! comparator's *defining behaviour* over **our** schedule space and
+//! backend, so the relative shape of the results carries over:
+//!
+//! - `numpy`  — hand-tuned-library analogue: an oracle schedule found
+//!   offline with a generous search budget (tune time ~0 at use time).
+//! - `tvm_base` — an unscheduled lowering: the pathological loop order.
+//! - `tvm_opt` — the TVM tutorial's fixed blocked/permuted/vectorized
+//!   template, no per-problem tuning.
+//! - `autotvm` — surrogate-guided candidate search, 64 measured trials.
+//! - `metaschedule` — stochastic template sampling, 64 measured trials.
+//! - `xla` (Table I) — a real general-purpose compiler: PJRT-compiled
+//!   matmul HLO; compile time and executed GFLOPS both measured.
+
+pub mod autotvm_sim;
+pub mod metaschedule_sim;
+pub mod numpy_sim;
+pub mod templates;
+pub mod tvm_sim;
+pub mod xla_compile;
+
+use crate::backend::SharedBackend;
+use crate::ir::{Nest, Problem};
+
+/// Outcome of one baseline on one problem.
+#[derive(Clone, Debug)]
+pub struct BaselineResult {
+    pub name: String,
+    pub problem: Problem,
+    pub nest: Nest,
+    pub gflops: f64,
+    /// Tuning/search time spent for this problem (0 for fixed schedules).
+    pub tune_secs: f64,
+    /// Schedule evaluations consumed.
+    pub evals: u64,
+}
+
+/// Every Fig.-11 baseline implements this.
+pub trait Baseline {
+    fn name(&self) -> &'static str;
+    fn run(&mut self, problem: Problem, backend: &SharedBackend) -> BaselineResult;
+}
+
+/// All Fig.-11 comparators, in report order.
+pub fn all_baselines(seed: u64) -> Vec<Box<dyn Baseline>> {
+    vec![
+        Box::new(numpy_sim::NumpyOracle::new(seed)),
+        Box::new(tvm_sim::TvmBase),
+        Box::new(tvm_sim::TvmOpt),
+        Box::new(autotvm_sim::AutoTvm::new(64, seed)),
+        Box::new(metaschedule_sim::MetaSchedule::new(64, seed)),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::cost_model::CostModel;
+    use crate::backend::{Cached, SharedBackend};
+
+    #[test]
+    fn all_baselines_produce_valid_schedules() {
+        let be = SharedBackend::new(Cached::new(CostModel::default()));
+        let p = Problem::new(128, 128, 128);
+        for mut b in all_baselines(3) {
+            let r = b.run(p, &be);
+            r.nest.check_invariants().unwrap();
+            assert!(r.gflops > 0.0, "{}", r.name);
+            assert_eq!(r.problem, p);
+        }
+    }
+
+    #[test]
+    fn tuned_baselines_beat_tvm_base() {
+        let be = SharedBackend::new(Cached::new(CostModel::default()));
+        let p = Problem::new(192, 192, 192);
+        let base = tvm_sim::TvmBase.run(p, &be).gflops;
+        for mut b in all_baselines(5) {
+            if b.name() == "tvm_base" {
+                continue;
+            }
+            let r = b.run(p, &be);
+            assert!(
+                r.gflops >= base,
+                "{} ({}) worse than tvm_base ({})",
+                b.name(),
+                r.gflops,
+                base
+            );
+        }
+    }
+}

@@ -1,0 +1,154 @@
+//! Schedule templates shared by the tuner simulators: parameterized
+//! blocked-matmul schedules instantiated through the IR's own transforms,
+//! so every generated schedule is valid by construction.
+
+use crate::env::actions::SPLIT_FACTORS;
+use crate::ir::{Dim, Kind, Loop, Nest, Problem};
+use crate::util::rng::Pcg32;
+
+/// A blocked-matmul template point: loop order of the three roots plus an
+/// optional tile per dimension.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TemplatePoint {
+    /// Permutation of [M, N, K] for the root loops, outermost first.
+    pub order: [Dim; 3],
+    /// Tile factor per dim (None = untiled). Tiled loops place their tile
+    /// level innermost in tile-application order n, k, m.
+    pub tile: [Option<usize>; 3],
+}
+
+pub const ORDERS: [[Dim; 3]; 6] = [
+    [Dim::M, Dim::N, Dim::K],
+    [Dim::M, Dim::K, Dim::N],
+    [Dim::N, Dim::M, Dim::K],
+    [Dim::N, Dim::K, Dim::M],
+    [Dim::K, Dim::M, Dim::N],
+    [Dim::K, Dim::N, Dim::M],
+];
+
+impl TemplatePoint {
+    /// Materialize as a Nest. Root loops take the requested order; each
+    /// tiled dim gets one tile level appended inside (in the root order),
+    /// so e.g. order (m,k,n) with tiles on k,n yields m k n k' n'.
+    pub fn instantiate(&self, problem: Problem) -> Nest {
+        let mut loops: Vec<Loop> = self
+            .order
+            .iter()
+            .map(|&dim| Loop { dim, factor: None, kind: Kind::Compute })
+            .collect();
+        for &dim in &self.order {
+            if let Some(f) = self.tile[dim.index()] {
+                // Tile only if it actually divides the range (trip > f).
+                if problem.extent(dim) > f {
+                    loops.push(Loop { dim, factor: Some(f), kind: Kind::Compute });
+                }
+            }
+        }
+        loops.push(Loop { dim: Dim::M, factor: None, kind: Kind::WriteBack });
+        loops.push(Loop { dim: Dim::N, factor: None, kind: Kind::WriteBack });
+        let nest = Nest { problem, loops, cursor: 0 };
+        debug_assert!(nest.check_invariants().is_ok(), "{nest}");
+        nest
+    }
+
+    /// Uniformly random template point.
+    pub fn random(rng: &mut Pcg32) -> Self {
+        let order = ORDERS[rng.below(ORDERS.len())];
+        let mut tile = [None; 3];
+        for t in tile.iter_mut() {
+            if rng.next_f64() < 0.6 {
+                *t = Some(SPLIT_FACTORS[rng.below(SPLIT_FACTORS.len())]);
+            }
+        }
+        TemplatePoint { order, tile }
+    }
+
+    /// Mutate one knob (used by the AutoTVM-style tuner).
+    pub fn mutate(&self, rng: &mut Pcg32) -> Self {
+        let mut next = *self;
+        match rng.below(2) {
+            0 => next.order = ORDERS[rng.below(ORDERS.len())],
+            _ => {
+                let d = rng.below(3);
+                next.tile[d] = if rng.next_f64() < 0.25 {
+                    None
+                } else {
+                    Some(SPLIT_FACTORS[rng.below(SPLIT_FACTORS.len())])
+                };
+            }
+        }
+        next
+    }
+}
+
+/// The full (small) template enumeration: 6 orders x 7^3 tilings.
+pub fn enumerate() -> Vec<TemplatePoint> {
+    let mut opts: Vec<Option<usize>> = vec![None];
+    opts.extend(SPLIT_FACTORS.iter().map(|&f| Some(f)));
+    let mut out = Vec::new();
+    for order in ORDERS {
+        for &tm in &opts {
+            for &tn in &opts {
+                for &tk in &opts {
+                    out.push(TemplatePoint { order, tile: [tm, tn, tk] });
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn instantiate_untiled_is_permutation() {
+        let p = Problem::new(64, 96, 128);
+        let t = TemplatePoint { order: ORDERS[1], tile: [None; 3] };
+        let n = t.instantiate(p);
+        assert_eq!(n.loops.len(), 5);
+        assert_eq!(n.loops[0].dim, Dim::M);
+        assert_eq!(n.loops[1].dim, Dim::K);
+        assert_eq!(n.loops[2].dim, Dim::N);
+    }
+
+    #[test]
+    fn instantiate_tiled_has_valid_invariants() {
+        let p = Problem::new(128, 128, 128);
+        for order in ORDERS {
+            let t = TemplatePoint { order, tile: [Some(32), Some(64), Some(8)] };
+            let n = t.instantiate(p);
+            n.check_invariants().unwrap();
+            assert_eq!(n.count_kind(Kind::Compute), 6);
+        }
+    }
+
+    #[test]
+    fn oversized_tiles_are_dropped() {
+        let p = Problem::new(64, 64, 64);
+        let t = TemplatePoint {
+            order: ORDERS[0],
+            tile: [Some(64), Some(64), Some(32)],
+        };
+        let n = t.instantiate(p);
+        // m/n tiles equal the extent: dropped; k tile kept.
+        assert_eq!(n.count_kind(Kind::Compute), 4);
+    }
+
+    #[test]
+    fn enumeration_size() {
+        assert_eq!(enumerate().len(), 6 * 7 * 7 * 7);
+    }
+
+    #[test]
+    fn random_and_mutate_stay_valid() {
+        let mut rng = Pcg32::new(4);
+        let p = Problem::new(96, 160, 224);
+        let mut t = TemplatePoint::random(&mut rng);
+        for _ in 0..50 {
+            t = t.mutate(&mut rng);
+            t.instantiate(p).check_invariants().unwrap();
+        }
+    }
+}

@@ -1,0 +1,99 @@
+//! TVM analogues.
+//!
+//! - [`TvmBase`]: unscheduled lowering. TVM's default schedule computes the
+//!   reduction innermost-last with no blocking or vectorization; in our
+//!   space that is the reduction-outer / m-innermost order — strided on
+//!   every tensor, the scalar worst case (paper: LoopTune beats it 43x).
+//! - [`TvmOpt`]: the TVM "how to optimize GEMM on CPU" tutorial template —
+//!   fixed 32x32 blocking, loop permutation, vectorized innermost — with
+//!   no per-problem search.
+
+use super::templates::TemplatePoint;
+use super::{Baseline, BaselineResult};
+use crate::backend::SharedBackend;
+use crate::ir::{Dim, Problem};
+
+pub struct TvmBase;
+
+impl Baseline for TvmBase {
+    fn name(&self) -> &'static str {
+        "tvm_base"
+    }
+
+    fn run(&mut self, problem: Problem, backend: &SharedBackend) -> BaselineResult {
+        // k n m: m innermost (stride-K on A, stride-N on T), k outermost —
+        // no reuse, no vectorization.
+        let nest = TemplatePoint {
+            order: [Dim::K, Dim::N, Dim::M],
+            tile: [None; 3],
+        }
+        .instantiate(problem);
+        let gflops = backend.eval(&nest);
+        BaselineResult {
+            name: "tvm_base".into(),
+            problem,
+            nest,
+            gflops,
+            tune_secs: 0.0,
+            evals: 1,
+        }
+    }
+}
+
+pub struct TvmOpt;
+
+impl Baseline for TvmOpt {
+    fn name(&self) -> &'static str {
+        "tvm_opt"
+    }
+
+    fn run(&mut self, problem: Problem, backend: &SharedBackend) -> BaselineResult {
+        // Blocked template: outer m,n blocks of 32, k split by 4, the
+        // (k, n-block) innermost pair vectorizes — the tutorial's
+        // blocking + permutation + vectorization, one fixed choice.
+        let nest = TemplatePoint {
+            order: [Dim::M, Dim::N, Dim::K],
+            tile: [Some(32), Some(32), Some(4)],
+        }
+        .instantiate(problem);
+        let gflops = backend.eval(&nest);
+        BaselineResult {
+            name: "tvm_opt".into(),
+            problem,
+            nest,
+            gflops,
+            tune_secs: 0.0,
+            evals: 1,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::cost_model::CostModel;
+    use crate::backend::{Cached, SharedBackend};
+
+    #[test]
+    fn opt_beats_base() {
+        let be = SharedBackend::new(Cached::new(CostModel::default()));
+        for p in [Problem::new(64, 64, 64), Problem::new(256, 256, 256)] {
+            let b = TvmBase.run(p, &be);
+            let o = TvmOpt.run(p, &be);
+            assert!(
+                o.gflops > b.gflops,
+                "{p}: opt {} <= base {}",
+                o.gflops,
+                b.gflops
+            );
+        }
+    }
+
+    #[test]
+    fn base_is_m_innermost() {
+        let be = SharedBackend::new(Cached::new(CostModel::default()));
+        let r = TvmBase.run(Problem::new(64, 64, 64), &be);
+        let compute = r.nest.kind_indices(crate::ir::Kind::Compute);
+        assert_eq!(r.nest.loops[*compute.last().unwrap()].dim, Dim::M);
+    }
+}

@@ -1,0 +1,113 @@
+//! Table I comparator: a real general-purpose optimizing compiler.
+//!
+//! The paper's Table I pits LoopNest against LLVM (via Halide) on compile
+//! time and executed GFLOPS. LLVM is not available offline; XLA (through
+//! the PJRT CPU client that ships with this image) plays the same role —
+//! a full multi-pass compiler whose matmul compile time is O(100ms..s)
+//! against our schedule lowering's O(µs), with competitive executed
+//! performance. Shape preserved: compile-time ratio >> 1, execution
+//! roughly comparable (DESIGN.md §4).
+
+use crate::backend::executor::{measure, plan, MeasureCfg, Workspace};
+use crate::backend::schedule::lower;
+use crate::ir::{Nest, Problem};
+use crate::runtime::literal::lit_f32;
+use crate::runtime::Runtime;
+use crate::util::rng::Pcg32;
+use anyhow::Result;
+use std::time::{Duration, Instant};
+
+/// One Table-I row.
+#[derive(Clone, Debug)]
+pub struct Table1Row {
+    pub name: String,
+    pub problem: Problem,
+    /// XLA (the "traditional compiler"): compile time + executed GFLOPS.
+    pub xla_compile: Duration,
+    pub xla_gflops: f64,
+    /// Our backend ("LoopNest"): schedule lowering time + executed GFLOPS
+    /// of the oracle schedule.
+    pub ln_compile: Duration,
+    pub ln_gflops: f64,
+}
+
+impl Table1Row {
+    pub fn compile_ratio(&self) -> f64 {
+        self.xla_compile.as_secs_f64() / self.ln_compile.as_secs_f64().max(1e-9)
+    }
+
+    pub fn exec_ratio(&self) -> f64 {
+        self.ln_gflops / self.xla_gflops.max(1e-9)
+    }
+}
+
+/// Measure one square matmul row. `entry` is the AOT artifact name
+/// (`mm_64` ...), `nest` the schedule our backend should run.
+pub fn row(rt: &Runtime, entry: &str, nest: &Nest, reps: usize) -> Result<Table1Row> {
+    let p = nest.problem;
+    // --- XLA compile time (fresh, uncached) ---
+    let xla_compile = rt.time_compile(entry)?;
+
+    // --- XLA execution GFLOPS ---
+    let mut rng = Pcg32::new(0xab);
+    let x: Vec<f32> = (0..p.m * p.k).map(|_| rng.next_f32() - 0.5).collect();
+    let y: Vec<f32> = (0..p.k * p.n).map(|_| rng.next_f32() - 0.5).collect();
+    let lx = lit_f32(&x, &[p.m, p.k])?;
+    let ly = lit_f32(&y, &[p.k, p.n])?;
+    // Warmup + min-of-reps, same protocol as our executor.
+    rt.exec(entry, &[lx.clone(), ly.clone()])?;
+    let mut best = f64::INFINITY;
+    for _ in 0..reps.max(1) {
+        let t0 = Instant::now();
+        rt.exec(entry, &[lx.clone(), ly.clone()])?;
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    let xla_gflops = p.flops() as f64 / best / 1e9;
+
+    // --- our backend: lowering ("compile") time + execution ---
+    let t0 = Instant::now();
+    let mut pl = plan(lower(nest));
+    // Lowering is microseconds; measure over many repetitions for a stable
+    // number.
+    let lower_reps = 1000;
+    for _ in 0..lower_reps - 1 {
+        pl = plan(lower(nest));
+    }
+    let ln_compile = t0.elapsed() / lower_reps;
+
+    let mut ws = Workspace::new(p, 0x5eed);
+    let ln_gflops = measure(&pl, &mut ws, MeasureCfg { warmup: 1, repeats: reps });
+
+    Ok(Table1Row {
+        name: entry.to_string(),
+        problem: p,
+        xla_compile,
+        xla_gflops,
+        ln_compile,
+        ln_gflops,
+    })
+}
+
+/// The CONV rows of Table I, expressed as im2col matmuls (our IR covers
+/// contractions; a convolution with kernel KxK, C_in -> C_out channels over
+/// an HxW feature map is the matmul M = H*W, K = C_in*K*K, N = C_out).
+/// Shapes chosen to mirror the FLOP scale of the paper's CONV-1..4.
+pub fn conv_as_matmul_problems() -> Vec<(String, Problem)> {
+    vec![
+        ("CONV-1".into(), Problem::new(56 * 56, 64, 64 * 9)),
+        ("CONV-2".into(), Problem::new(28 * 28, 128, 128 * 9)),
+        ("CONV-3".into(), Problem::new(14 * 14, 256, 256 * 9)),
+        ("CONV-4".into(), Problem::new(7 * 7, 512, 512 * 9)),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn conv_problems_are_valid() {
+        for (name, p) in super::conv_as_matmul_problems() {
+            assert!(p.m > 0 && p.n > 0 && p.k > 0, "{name}");
+            assert!(p.flops() > 1_000_000, "{name} too small");
+        }
+    }
+}

@@ -1,0 +1,221 @@
+//! TOML-subset configuration (the `toml` crate is not in the offline
+//! cache). Supports what the launcher needs: `[section]` headers,
+//! `key = value` with string / integer / float / boolean values, `#`
+//! comments. Lookup is `"section.key"`; CLI flags override file values.
+//!
+//! Example (`looptune.toml`):
+//! ```toml
+//! [train]
+//! algo = "apex_dqn"
+//! iters = 200
+//! lr = 5e-4
+//!
+//! [eval]
+//! out_dir = "results"
+//! measured = true
+//! ```
+
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Flat "section.key" -> value map.
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    pub values: BTreeMap<String, Value>,
+}
+
+impl Config {
+    pub fn parse(text: &str) -> Result<Config> {
+        let mut cfg = Config::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(inner) = line.strip_prefix('[') {
+                let Some(name) = inner.strip_suffix(']') else {
+                    bail!("line {}: malformed section header", lineno + 1);
+                };
+                section = name.trim().to_string();
+                continue;
+            }
+            let Some((key, val)) = line.split_once('=') else {
+                bail!("line {}: expected key = value", lineno + 1);
+            };
+            let key = key.trim();
+            if key.is_empty() {
+                bail!("line {}: empty key", lineno + 1);
+            }
+            let full = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            cfg.values.insert(full, parse_value(val.trim(), lineno + 1)?);
+        }
+        Ok(cfg)
+    }
+
+    pub fn from_file(path: impl AsRef<Path>) -> Result<Config> {
+        let text = std::fs::read_to_string(path.as_ref())?;
+        Self::parse(&text)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.values.get(key)
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).and_then(Value::as_str).unwrap_or(default)
+    }
+
+    pub fn i64_or(&self, key: &str, default: i64) -> i64 {
+        self.get(key).and_then(Value::as_i64).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(Value::as_f64).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(Value::as_bool).unwrap_or(default)
+    }
+
+    /// Overlay `other` on top of `self` (other wins).
+    pub fn merged(mut self, other: Config) -> Config {
+        self.values.extend(other.values);
+        self
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A '#' outside quotes starts a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str, lineno: usize) -> Result<Value> {
+    if let Some(inner) = s.strip_prefix('"') {
+        let Some(body) = inner.strip_suffix('"') else {
+            bail!("line {lineno}: unterminated string");
+        };
+        return Ok(Value::Str(body.to_string()));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    bail!("line {lineno}: cannot parse value {s:?}");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let cfg = Config::parse(
+            r#"
+            top = 1
+            [train]
+            algo = "apex_dqn"   # the winner
+            iters = 200
+            lr = 5e-4
+            prioritized = true
+            [eval]
+            out_dir = "results"
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.i64_or("top", 0), 1);
+        assert_eq!(cfg.str_or("train.algo", ""), "apex_dqn");
+        assert_eq!(cfg.i64_or("train.iters", 0), 200);
+        assert!((cfg.f64_or("train.lr", 0.0) - 5e-4).abs() < 1e-12);
+        assert!(cfg.bool_or("train.prioritized", false));
+        assert_eq!(cfg.str_or("eval.out_dir", ""), "results");
+        assert_eq!(cfg.str_or("eval.missing", "dflt"), "dflt");
+    }
+
+    #[test]
+    fn int_promotes_to_float() {
+        let cfg = Config::parse("x = 3").unwrap();
+        assert_eq!(cfg.f64_or("x", 0.0), 3.0);
+    }
+
+    #[test]
+    fn comments_and_hash_in_string() {
+        let cfg = Config::parse("s = \"a#b\" # trailing").unwrap();
+        assert_eq!(cfg.str_or("s", ""), "a#b");
+    }
+
+    #[test]
+    fn merged_overlays() {
+        let a = Config::parse("x = 1\ny = 2").unwrap();
+        let b = Config::parse("y = 3").unwrap();
+        let m = a.merged(b);
+        assert_eq!(m.i64_or("x", 0), 1);
+        assert_eq!(m.i64_or("y", 0), 3);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Config::parse("[oops").is_err());
+        assert!(Config::parse("novalue").is_err());
+        assert!(Config::parse("x = @@").is_err());
+    }
+}

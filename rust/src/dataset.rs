@@ -1,0 +1,118 @@
+//! Benchmark dataset (paper §VI): 2197 untiled matmul loop nests with
+//! M, N, K in {64, 80, ..., 256} (step 16), split 80/20 into train/test
+//! with a seeded shuffle.
+
+use crate::ir::Problem;
+use crate::util::rng::Pcg32;
+
+/// Dimension range of the paper's dataset.
+pub const DIM_START: usize = 64;
+pub const DIM_END: usize = 256;
+pub const DIM_STEP: usize = 16;
+
+/// Seed of the canonical train/test split.
+pub const SPLIT_SEED: u64 = 0x10071;
+
+/// All 13 dimension values.
+pub fn dims() -> Vec<usize> {
+    (DIM_START..=DIM_END).step_by(DIM_STEP).collect()
+}
+
+/// The full 2197-problem dataset in deterministic (m, n, k) order.
+pub fn all_problems() -> Vec<Problem> {
+    let ds = dims();
+    let mut out = Vec::with_capacity(ds.len().pow(3));
+    for &m in &ds {
+        for &n in &ds {
+            for &k in &ds {
+                out.push(Problem::new(m, n, k));
+            }
+        }
+    }
+    out
+}
+
+/// Train/test split (80/20, seeded shuffle — sizes 1757 / 440 per paper).
+pub struct Dataset {
+    pub train: Vec<Problem>,
+    pub test: Vec<Problem>,
+}
+
+pub fn split(seed: u64) -> Dataset {
+    let mut all = all_problems();
+    let mut rng = Pcg32::new(seed);
+    rng.shuffle(&mut all);
+    let n_train = all.len() * 8 / 10;
+    let test = all.split_off(n_train);
+    Dataset { train: all, test }
+}
+
+/// The canonical split used by every experiment.
+pub fn canonical() -> Dataset {
+    split(SPLIT_SEED)
+}
+
+/// Deterministic sample of `n` test problems (Fig. 8 uses 25 random test
+/// benchmarks).
+pub fn sample_test(ds: &Dataset, n: usize, seed: u64) -> Vec<Problem> {
+    let mut idx: Vec<usize> = (0..ds.test.len()).collect();
+    let mut rng = Pcg32::new(seed);
+    rng.shuffle(&mut idx);
+    idx.into_iter().take(n).map(|i| ds.test[i]).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dataset_size_matches_paper() {
+        assert_eq!(dims().len(), 13);
+        let all = all_problems();
+        assert_eq!(all.len(), 2197);
+        let ds = canonical();
+        assert_eq!(ds.train.len(), 1757);
+        assert_eq!(ds.test.len(), 440);
+    }
+
+    #[test]
+    fn split_is_disjoint_and_complete() {
+        let ds = canonical();
+        let mut seen = std::collections::HashSet::new();
+        for p in ds.train.iter().chain(ds.test.iter()) {
+            assert!(seen.insert(*p), "duplicate {p}");
+        }
+        assert_eq!(seen.len(), 2197);
+    }
+
+    #[test]
+    fn split_is_deterministic() {
+        let a = split(7);
+        let b = split(7);
+        assert_eq!(a.train, b.train);
+        assert_eq!(a.test, b.test);
+        let c = split(8);
+        assert_ne!(a.train, c.train);
+    }
+
+    #[test]
+    fn all_dims_in_range() {
+        for p in all_problems() {
+            for d in [p.m, p.n, p.k] {
+                assert!(d >= DIM_START && d <= DIM_END && (d - DIM_START) % DIM_STEP == 0);
+            }
+        }
+    }
+
+    #[test]
+    fn sample_is_deterministic_and_from_test() {
+        let ds = canonical();
+        let s1 = sample_test(&ds, 25, 1);
+        let s2 = sample_test(&ds, 25, 1);
+        assert_eq!(s1, s2);
+        assert_eq!(s1.len(), 25);
+        for p in &s1 {
+            assert!(ds.test.contains(p));
+        }
+    }
+}

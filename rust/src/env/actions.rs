@@ -1,0 +1,129 @@
+//! The LoopTune action space (paper §III-A, Fig. 3): a cursor-based,
+//! non-parametric action set — `up`, `down`, `swap_up`, `swap_down`, and a
+//! `split` family with fixed power-of-two parameters.
+//!
+//! The discrete indices here are the network's output layer order; they
+//! must match `NUM_ACTIONS` in `python/compile/model.py`.
+
+use crate::ir::transform::Invalid;
+use crate::ir::Nest;
+
+/// Split parameters (paper Fig. 3 uses powers of two up to 64).
+pub const SPLIT_FACTORS: [usize; 6] = [2, 4, 8, 16, 32, 64];
+
+/// Total number of discrete actions.
+pub const NUM_ACTIONS: usize = 4 + SPLIT_FACTORS.len();
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Action {
+    Up,
+    Down,
+    SwapUp,
+    SwapDown,
+    Split(usize),
+}
+
+impl Action {
+    /// All actions, in network output order.
+    pub fn all() -> [Action; NUM_ACTIONS] {
+        [
+            Action::Up,
+            Action::Down,
+            Action::SwapUp,
+            Action::SwapDown,
+            Action::Split(SPLIT_FACTORS[0]),
+            Action::Split(SPLIT_FACTORS[1]),
+            Action::Split(SPLIT_FACTORS[2]),
+            Action::Split(SPLIT_FACTORS[3]),
+            Action::Split(SPLIT_FACTORS[4]),
+            Action::Split(SPLIT_FACTORS[5]),
+        ]
+    }
+
+    pub fn from_index(i: usize) -> Action {
+        Action::all()[i]
+    }
+
+    pub fn index(self) -> usize {
+        match self {
+            Action::Up => 0,
+            Action::Down => 1,
+            Action::SwapUp => 2,
+            Action::SwapDown => 3,
+            Action::Split(f) => {
+                4 + SPLIT_FACTORS
+                    .iter()
+                    .position(|&x| x == f)
+                    .expect("unknown split factor")
+            }
+        }
+    }
+
+    /// Apply to a nest in place. `Err` = invalid in this state (the env
+    /// treats it as a no-op with zero reward).
+    pub fn apply(self, nest: &mut Nest) -> Result<(), Invalid> {
+        match self {
+            Action::Up => nest.cursor_up(),
+            Action::Down => nest.cursor_down(),
+            Action::SwapUp => nest.swap_up(),
+            Action::SwapDown => nest.swap_down(),
+            Action::Split(f) => nest.split(f),
+        }
+    }
+
+    /// Whether the action would change the *schedule* (not just the cursor).
+    pub fn mutates_schedule(self) -> bool {
+        !matches!(self, Action::Up | Action::Down)
+    }
+
+    pub fn name(self) -> String {
+        match self {
+            Action::Up => "up".into(),
+            Action::Down => "down".into(),
+            Action::SwapUp => "swap_up".into(),
+            Action::SwapDown => "swap_down".into(),
+            Action::Split(f) => format!("split_{f}"),
+        }
+    }
+}
+
+impl std::fmt::Display for Action {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{Nest, Problem};
+
+    #[test]
+    fn index_roundtrip() {
+        for (i, a) in Action::all().iter().enumerate() {
+            assert_eq!(a.index(), i);
+            assert_eq!(Action::from_index(i), *a);
+        }
+        assert_eq!(Action::all().len(), NUM_ACTIONS);
+    }
+
+    #[test]
+    fn apply_matches_transforms() {
+        let mut n = Nest::initial(Problem::new(64, 64, 64));
+        Action::Down.apply(&mut n).unwrap();
+        assert_eq!(n.cursor, 1);
+        Action::SwapUp.apply(&mut n).unwrap();
+        assert_eq!(n.cursor, 0);
+        Action::Split(16).apply(&mut n).unwrap();
+        assert_eq!(n.loops.len(), 6);
+        assert!(Action::Up.apply(&mut n).is_err());
+    }
+
+    #[test]
+    fn mutates_schedule_flags() {
+        assert!(!Action::Up.mutates_schedule());
+        assert!(!Action::Down.mutates_schedule());
+        assert!(Action::SwapUp.mutates_schedule());
+        assert!(Action::Split(2).mutates_schedule());
+    }
+}

@@ -1,0 +1,173 @@
+//! The RL environment (the CompilerGym analogue, paper §III / Fig. 2).
+//!
+//! `Env` owns the current [`Nest`], a [`SharedBackend`] that scores
+//! schedules, and the empirical peak used to normalize rewards:
+//!
+//! ```text
+//! reward = (GFLOPS(S') - GFLOPS(S)) / GFLOPS_PEAK
+//! ```
+//!
+//! Invalid actions are no-ops with zero reward. Cursor-only actions
+//! (`up`/`down`) change the state vector (the cursor bit) but not the
+//! schedule, so the backend is not re-queried for them.
+
+pub mod actions;
+
+use crate::backend::SharedBackend;
+use crate::featurize::state_vector;
+use crate::ir::{Nest, Problem};
+use actions::Action;
+
+/// Result of one environment step.
+#[derive(Clone, Debug)]
+pub struct Step {
+    pub state: Vec<f32>,
+    pub reward: f32,
+    /// GFLOPS of the schedule after the action.
+    pub gflops: f64,
+    /// False if the action was invalid (state unchanged, reward 0).
+    pub valid: bool,
+}
+
+pub struct Env {
+    pub nest: Nest,
+    pub backend: SharedBackend,
+    /// Empirical peak GFLOPS used for reward normalization.
+    pub peak: f64,
+    /// GFLOPS of the current schedule (kept in sync by `step`).
+    pub gflops: f64,
+    /// Steps taken since the last reset.
+    pub steps: usize,
+    /// GFLOPS of the initial (untiled) schedule — the "LoopNest original"
+    /// baseline speedups are reported against.
+    pub initial_gflops: f64,
+    /// Feature-group mask (ablation studies; default = all features).
+    pub mask: crate::featurize::FeatureMask,
+}
+
+impl Env {
+    pub fn new(problem: Problem, backend: SharedBackend, peak: f64) -> Self {
+        let nest = Nest::initial(problem);
+        let g = backend.eval(&nest);
+        Env {
+            nest,
+            backend,
+            peak,
+            gflops: g,
+            steps: 0,
+            initial_gflops: g,
+            mask: crate::featurize::FeatureMask::default(),
+        }
+    }
+
+    /// Reset to the untiled nest of `problem`. Returns the state vector.
+    pub fn reset(&mut self, problem: Problem) -> Vec<f32> {
+        self.nest = Nest::initial(problem);
+        self.gflops = self.backend.eval(&self.nest);
+        self.initial_gflops = self.gflops;
+        self.steps = 0;
+        self.state()
+    }
+
+    pub fn state(&self) -> Vec<f32> {
+        let mut v = state_vector(&self.nest);
+        self.mask.apply(&mut v);
+        v
+    }
+
+    /// Apply one action.
+    pub fn step(&mut self, action: Action) -> Step {
+        self.steps += 1;
+        let valid = action.apply(&mut self.nest).is_ok();
+        if !valid {
+            return Step {
+                state: self.state(),
+                reward: 0.0,
+                gflops: self.gflops,
+                valid: false,
+            };
+        }
+        let new_gflops = if action.mutates_schedule() {
+            self.backend.eval(&self.nest)
+        } else {
+            self.gflops
+        };
+        let reward = ((new_gflops - self.gflops) / self.peak) as f32;
+        self.gflops = new_gflops;
+        Step { state: self.state(), reward, gflops: new_gflops, valid: true }
+    }
+
+    /// Speedup of the current schedule over the untiled starting point.
+    pub fn speedup(&self) -> f64 {
+        self.gflops / self.initial_gflops.max(1e-12)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::actions::Action;
+    use super::*;
+    use crate::backend::cost_model::CostModel;
+    use crate::backend::{Cached, SharedBackend};
+    use crate::ir::Problem;
+
+    fn env() -> Env {
+        let be = SharedBackend::new(Cached::new(CostModel::default()));
+        Env::new(Problem::new(128, 128, 128), be, 100.0)
+    }
+
+    #[test]
+    fn reward_is_normalized_delta() {
+        let mut e = env();
+        let g0 = e.gflops;
+        let s = e.step(Action::SwapDown); // m n k -> n m k
+        assert!(s.valid);
+        let expect = ((s.gflops - g0) / 100.0) as f32;
+        assert!((s.reward - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cursor_moves_are_free_and_rewardless() {
+        let mut e = env();
+        let evals_before = e.backend.eval_count();
+        let s = e.step(Action::Down);
+        assert!(s.valid);
+        assert_eq!(s.reward, 0.0);
+        assert_eq!(e.backend.eval_count(), evals_before);
+        // state vector reflects the cursor move
+        assert_eq!(s.state[crate::FEATS], 1.0);
+    }
+
+    #[test]
+    fn invalid_action_is_noop() {
+        let mut e = env();
+        let before = e.nest.clone();
+        let s = e.step(Action::Up); // cursor at 0
+        assert!(!s.valid);
+        assert_eq!(s.reward, 0.0);
+        assert_eq!(e.nest, before);
+    }
+
+    #[test]
+    fn reset_restores_initial_state() {
+        let mut e = env();
+        e.step(Action::Split(16));
+        e.step(Action::SwapDown);
+        let p2 = Problem::new(64, 64, 64);
+        let st = e.reset(p2);
+        assert_eq!(e.nest, crate::ir::Nest::initial(p2));
+        assert_eq!(st, e.state());
+        assert_eq!(e.steps, 0);
+        assert!((e.speedup() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn episode_accumulates_gflops_improvements() {
+        let mut e = env();
+        // m k n: a known improvement over m n k under the cost model.
+        e.step(Action::Down);
+        let s = e.step(Action::SwapDown);
+        assert!(s.valid);
+        assert!(e.speedup() > 1.0, "speedup {}", e.speedup());
+    }
+}

@@ -1,0 +1,581 @@
+//! One driver per paper table/figure. See DESIGN.md §5 for the index.
+
+use super::{write_out, EvalCfg};
+use crate::backend::peak;
+use crate::baselines::{self, xla_compile, Baseline};
+use crate::dataset;
+use crate::ir::Problem;
+use crate::rl::{self, params::ParamSet};
+use crate::runtime::Runtime;
+use crate::search::{Budget, SearchAlgo};
+use crate::util::stats;
+use anyhow::Result;
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::rc::Rc;
+
+/// Peak GFLOPS for reward normalization, per backend kind.
+pub fn peak_for(cfg: &EvalCfg) -> f64 {
+    if cfg.measured {
+        peak::peak_gflops()
+    } else {
+        // The cost model's compute roofline: 2 flops x vec lanes x freq.
+        let m = crate::backend::cost_model::Machine::default();
+        2.0 * m.vec_lanes * m.freq_ghz
+    }
+}
+
+/// Load trained policy params, or fall back to a fresh init (headline
+/// numbers then reflect the untrained policy; the summary says which).
+pub fn load_policy(rt: &Runtime, cfg: &EvalCfg) -> Result<(ParamSet, bool)> {
+    if let Some(p) = &cfg.params_path {
+        if p.exists() {
+            return Ok((ParamSet::load(p)?, true));
+        }
+        eprintln!("warning: params {p:?} not found; using untrained policy");
+    }
+    Ok((ParamSet::init(rt, "q_init", cfg.seed as i32)?, false))
+}
+
+// ---------------------------------------------------------------------------
+// Table I — backend compile time + execution vs a traditional compiler
+// ---------------------------------------------------------------------------
+
+pub fn table1(rt: &Runtime, cfg: &EvalCfg) -> Result<String> {
+    let be = cfg.backend();
+    let mut oracle = baselines::numpy_sim::NumpyOracle::new(cfg.seed);
+    let mut rows = Vec::new();
+    for n in [64usize, 128, 256, 512] {
+        let entry = format!("mm_{n}");
+        // Oracle schedule for our backend; 512 is outside the dataset dims
+        // but the template space still applies.
+        let p = Problem::new(n, n, n);
+        let r = oracle.run(p, &be);
+        let reps = cfg.scaled(3);
+        rows.push(xla_compile::row(rt, &entry, &r.nest, reps)?);
+    }
+    // CONV rows as im2col matmuls, executed by our backend only (no AOT
+    // artifact per conv; the XLA columns reuse the nearest mm artifact is
+    // not meaningful, so we report backend-only numbers for them).
+    let mut conv_rows = Vec::new();
+    for (name, p) in xla_compile::conv_as_matmul_problems() {
+        let r = oracle.run(p, &be);
+        let mut ws = crate::backend::executor::Workspace::new(p, 1);
+        let plan = crate::backend::executor::plan(crate::backend::schedule::lower(&r.nest));
+        let g = crate::backend::executor::measure(
+            &plan,
+            &mut ws,
+            crate::backend::executor::MeasureCfg { warmup: 1, repeats: cfg.scaled(3) },
+        );
+        conv_rows.push((name, p, g));
+    }
+
+    let mut md = String::from(
+        "# Table I analogue: backend (\"LoopNest\") vs XLA (traditional compiler)\n\n\
+         | bench | XLA compile [s] | LN lower [s] | ratio | XLA [GFLOPS] | LN [GFLOPS] | ratio |\n\
+         |---|---|---|---|---|---|---|\n",
+    );
+    let mut csv = String::from(
+        "bench,xla_compile_s,ln_lower_s,compile_ratio,xla_gflops,ln_gflops,exec_ratio\n",
+    );
+    for r in &rows {
+        let _ = writeln!(
+            md,
+            "| {} | {:.4} | {:.2e} | {:.0}x | {:.2} | {:.2} | {:.2} |",
+            r.name,
+            r.xla_compile.as_secs_f64(),
+            r.ln_compile.as_secs_f64(),
+            r.compile_ratio(),
+            r.xla_gflops,
+            r.ln_gflops,
+            r.exec_ratio()
+        );
+        let _ = writeln!(
+            csv,
+            "{},{:.6},{:.9},{:.1},{:.3},{:.3},{:.3}",
+            r.name,
+            r.xla_compile.as_secs_f64(),
+            r.ln_compile.as_secs_f64(),
+            r.compile_ratio(),
+            r.xla_gflops,
+            r.ln_gflops,
+            r.exec_ratio()
+        );
+    }
+    md.push_str("\nCONV rows (im2col matmuls, backend-only):\n\n| bench | problem | LN [GFLOPS] |\n|---|---|---|\n");
+    for (name, p, g) in &conv_rows {
+        let _ = writeln!(md, "| {name} | {p} | {g:.2} |");
+        let _ = writeln!(csv, "{name},,,,,{g:.3},");
+    }
+    write_out(&cfg.out_dir, "table1.csv", &csv)?;
+    write_out(&cfg.out_dir, "table1.md", &md)?;
+    Ok(md)
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 7 — RL algorithm comparison (episode_reward_mean training curves)
+// ---------------------------------------------------------------------------
+
+pub fn fig7(rt: Rc<Runtime>, cfg: &EvalCfg, iters: usize) -> Result<String> {
+    // Training always rewards via the cost model (fast, deterministic);
+    // DESIGN.md §4 records the substitution.
+    let train_cfg = EvalCfg { measured: false, ..cfg.clone() };
+    let peak = peak_for(&train_cfg);
+    let ds = dataset::canonical();
+    let problems = &ds.train;
+    let mut summaries = String::new();
+    let mut combined = String::from("algo,iter,episode_reward_mean,loss\n");
+
+    let mut run = |name: &str, log: rl::TrainLog| {
+        for it in &log.iters {
+            let _ = writeln!(
+                combined,
+                "{},{},{:.6},{:.6}",
+                name, it.iter, it.episode_reward_mean, it.loss
+            );
+        }
+        let _ = writeln!(
+            summaries,
+            "{name}: final episode_reward_mean (last 10) = {:.4} of peak",
+            log.recent_reward(10)
+        );
+        log
+    };
+
+    // APEX_DQN + DQN
+    for (name, dcfg) in [
+        ("apex_dqn", rl::dqn::DqnConfig::apex()),
+        ("dqn", rl::dqn::DqnConfig::dqn()),
+    ] {
+        let mut c = dcfg;
+        c.seed = cfg.seed;
+        let mut t = rl::dqn::DqnTrainer::new(rt.clone(), c)?;
+        let log = t.train(train_cfg.backend(), problems, peak, iters, |it| {
+            if it.iter % 10 == 0 {
+                eprintln!("[{name}] iter {} reward {:.4}", it.iter, it.episode_reward_mean);
+            }
+        })?;
+        let log = run(name, log);
+        write_out(&cfg.out_dir, &format!("fig7_{name}.csv"), &log.to_csv())?;
+        // Save the APEX policy for downstream experiments.
+        if name == "apex_dqn" {
+            t.params.save(cfg.out_dir.join("fig7_apex_dqn.ltps"))?;
+        }
+    }
+    // PPO
+    {
+        let mut c = rl::ppo::PpoConfig::default();
+        c.seed = cfg.seed;
+        let mut t = rl::ppo::PpoTrainer::new(rt.clone(), c)?;
+        let log = t.train(train_cfg.backend(), problems, peak, iters, |_| {})?;
+        let log = run("ppo", log);
+        write_out(&cfg.out_dir, "fig7_ppo.csv", &log.to_csv())?;
+    }
+    // A3C (sync) + IMPALA
+    for (name, acfg) in [
+        ("a3c", rl::a2c::A2cConfig::a2c()),
+        ("impala", rl::a2c::A2cConfig::impala()),
+    ] {
+        let mut c = acfg;
+        c.seed = cfg.seed;
+        let mut t = rl::a2c::A2cTrainer::new(rt.clone(), c)?;
+        let log = t.train(train_cfg.backend(), problems, peak, iters, |_| {})?;
+        let log = run(name, log);
+        write_out(&cfg.out_dir, &format!("fig7_{name}.csv"), &log.to_csv())?;
+    }
+
+    write_out(&cfg.out_dir, "fig7_combined.csv", &combined)?;
+    let md = format!("# Fig. 7 analogue: RL trainer comparison ({iters} iters)\n\n{summaries}");
+    write_out(&cfg.out_dir, "fig7.md", &md)?;
+    Ok(md)
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 8/9 — searches + policy on test benchmarks
+// ---------------------------------------------------------------------------
+
+pub struct MethodRun {
+    pub method: String,
+    pub problem: Problem,
+    pub gflops: f64,
+    pub secs: f64,
+    pub speedup_vs_initial: f64,
+}
+
+/// Run all searches + the RL policy on `problems`. Searches get
+/// `budget_secs` wall-clock each (the paper gives them 60 s; policy
+/// inference needs none).
+pub fn run_comparison(
+    rt: &Runtime,
+    cfg: &EvalCfg,
+    problems: &[Problem],
+    budget_secs: f64,
+) -> Result<Vec<MethodRun>> {
+    let (params, trained) = load_policy(rt, cfg)?;
+    if !trained {
+        eprintln!("note: comparison uses an UNTRAINED policy");
+    }
+    let mut rows = Vec::new();
+    for (i, &p) in problems.iter().enumerate() {
+        eprintln!("[fig8/9] bench {}/{} {p}", i + 1, problems.len());
+        // Fresh cache per problem so budgets are comparable.
+        for algo in SearchAlgo::ALL {
+            let be = cfg.backend();
+            let r = algo.run(p, be, Budget::seconds(budget_secs), 10, cfg.seed);
+            rows.push(MethodRun {
+                method: algo.name().into(),
+                problem: p,
+                gflops: r.best_gflops,
+                secs: r.elapsed,
+                speedup_vs_initial: r.speedup(),
+            });
+        }
+        let be = cfg.backend();
+        let out = rl::tune(rt, &params, p, 10, &be)?;
+        rows.push(MethodRun {
+            method: "looptune".into(),
+            problem: p,
+            gflops: out.gflops,
+            secs: out.infer_secs,
+            speedup_vs_initial: out.speedup(),
+        });
+    }
+    Ok(rows)
+}
+
+fn comparison_csv(rows: &[MethodRun]) -> String {
+    let mut csv = String::from("problem,method,gflops,secs,speedup_vs_initial\n");
+    for r in rows {
+        let _ = writeln!(
+            csv,
+            "{},{},{:.4},{:.4},{:.4}",
+            r.problem, r.method, r.gflops, r.secs, r.speedup_vs_initial
+        );
+    }
+    csv
+}
+
+fn summarize_methods(rows: &[MethodRun]) -> String {
+    let mut by_method: BTreeMap<&str, (Vec<f64>, Vec<f64>)> = BTreeMap::new();
+    for r in rows {
+        let e = by_method.entry(&r.method).or_default();
+        e.0.push(r.speedup_vs_initial);
+        e.1.push(r.secs);
+    }
+    let mut md = String::from(
+        "| method | geomean speedup vs LoopNest-default | mean time [s] |\n|---|---|---|\n",
+    );
+    for (m, (sp, ts)) in &by_method {
+        let _ = writeln!(md, "| {m} | {:.2}x | {:.2} |", stats::geomean(sp), stats::mean(ts));
+    }
+    md
+}
+
+pub fn fig8(rt: &Runtime, cfg: &EvalCfg, budget_secs: f64) -> Result<String> {
+    let ds = dataset::canonical();
+    let n = cfg.scaled(25);
+    let problems = dataset::sample_test(&ds, n, cfg.seed);
+    let rows = run_comparison(rt, cfg, &problems, budget_secs)?;
+    write_out(&cfg.out_dir, "fig8.csv", &comparison_csv(&rows))?;
+    let md = format!(
+        "# Fig. 8 analogue: {n} random test benchmarks, search budget {budget_secs}s\n\n{}",
+        summarize_methods(&rows)
+    );
+    write_out(&cfg.out_dir, "fig8.md", &md)?;
+    Ok(md)
+}
+
+pub fn fig9(rt: &Runtime, cfg: &EvalCfg, budget_secs: f64, n: usize) -> Result<String> {
+    let ds = dataset::canonical();
+    let n = cfg.scaled(n);
+    let problems: Vec<Problem> = ds.test.iter().take(n).copied().collect();
+    let rows = run_comparison(rt, cfg, &problems, budget_secs)?;
+    write_out(&cfg.out_dir, "fig9.csv", &comparison_csv(&rows))?;
+
+    // Speedup distribution per method (percentiles), paper Fig. 9.
+    let mut by_method: BTreeMap<&str, Vec<f64>> = BTreeMap::new();
+    for r in &rows {
+        by_method.entry(&r.method).or_default().push(r.speedup_vs_initial);
+    }
+    let mut md = String::from(
+        "# Fig. 9 analogue: speedup distribution vs LoopNest default\n\n\
+         | method | p10 | p25 | median | p75 | p90 | geomean |\n|---|---|---|---|---|---|---|\n",
+    );
+    for (m, sp) in &by_method {
+        let _ = writeln!(
+            md,
+            "| {m} | {:.2} | {:.2} | {:.2} | {:.2} | {:.2} | {:.2} |",
+            stats::percentile(sp, 10.0),
+            stats::percentile(sp, 25.0),
+            stats::median(sp),
+            stats::percentile(sp, 75.0),
+            stats::percentile(sp, 90.0),
+            stats::geomean(sp)
+        );
+    }
+    write_out(&cfg.out_dir, "fig9.md", &md)?;
+    Ok(md)
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 10 — per-step expansion trace of each search
+// ---------------------------------------------------------------------------
+
+pub fn fig10(cfg: &EvalCfg, problem: Problem, budget_secs: f64) -> Result<String> {
+    let mut csv = String::from("algo,elapsed_s,evals,depth,best_gflops\n");
+    let mut md = format!("# Fig. 10 analogue: search traces on {problem}\n\n");
+    for algo in SearchAlgo::ALL {
+        let be = cfg.backend();
+        let r = algo.run(problem, be, Budget::seconds(budget_secs), 10, cfg.seed);
+        for t in &r.trace {
+            let _ = writeln!(
+                csv,
+                "{},{:.4},{},{},{:.4}",
+                algo.name(),
+                t.elapsed,
+                t.evals,
+                t.depth,
+                t.best_gflops
+            );
+        }
+        let _ = writeln!(
+            md,
+            "- {}: best {:.2} GFLOPS after {} evals / {:.2}s (deepest improvement at depth {})",
+            algo.name(),
+            r.best_gflops,
+            r.evals,
+            r.elapsed,
+            r.trace.iter().map(|t| t.depth).max().unwrap_or(0)
+        );
+    }
+    write_out(&cfg.out_dir, "fig10.csv", &csv)?;
+    write_out(&cfg.out_dir, "fig10.md", &md)?;
+    Ok(md)
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 11 — compile/tune time + execution performance profiles
+// ---------------------------------------------------------------------------
+
+pub fn fig11(rt: &Runtime, cfg: &EvalCfg, n: usize) -> Result<String> {
+    let ds = dataset::canonical();
+    let n = cfg.scaled(n);
+    let problems: Vec<Problem> = ds.test.iter().take(n).copied().collect();
+    let (params, trained) = load_policy(rt, cfg)?;
+    if !trained {
+        eprintln!("note: fig11 uses an UNTRAINED policy");
+    }
+
+    let be = cfg.backend(); // shared cache across methods: fair, faster
+    let mut scores: BTreeMap<String, Vec<f64>> = BTreeMap::new();
+    let mut times: BTreeMap<String, Vec<f64>> = BTreeMap::new();
+    let mut csv = String::from("problem,method,gflops,tune_secs\n");
+
+    let mut bls = baselines::all_baselines(cfg.seed);
+    for (i, &p) in problems.iter().enumerate() {
+        eprintln!("[fig11] bench {}/{} {p}", i + 1, problems.len());
+        for b in bls.iter_mut() {
+            let r = b.run(p, &be);
+            scores.entry(r.name.clone()).or_default().push(r.gflops);
+            times.entry(r.name.clone()).or_default().push(r.tune_secs);
+            let _ = writeln!(csv, "{p},{},{:.4},{:.4}", r.name, r.gflops, r.tune_secs);
+        }
+        let out = rl::tune(rt, &params, p, 10, &be)?;
+        scores.entry("looptune".into()).or_default().push(out.gflops);
+        times.entry("looptune".into()).or_default().push(out.infer_secs);
+        let _ = writeln!(csv, "{p},looptune,{:.4},{:.4}", out.gflops, out.infer_secs);
+    }
+    write_out(&cfg.out_dir, "fig11.csv", &csv)?;
+
+    let profile = super::perf_profile::build(&scores);
+    write_out(&cfg.out_dir, "fig11_profile.csv", &profile.to_csv(50))?;
+
+    let lt = &scores["looptune"];
+    let mut md = format!(
+        "# Fig. 11 analogue: {n} test benchmarks\n\n\
+         LoopTune wins {:.0}% of cases; >=90% of best in {:.0}% of cases.\n\n\
+         | method | geomean GFLOPS | vs looptune | mean tune time [s] | win rate |\n|---|---|---|---|---|\n",
+        100.0 * profile.win_rate("looptune"),
+        100.0 * profile.at("looptune", 0.9),
+    );
+    let lt_geo = stats::geomean(lt);
+    for (m, sc) in &scores {
+        let _ = writeln!(
+            md,
+            "| {m} | {:.2} | {:.2}x | {:.3} | {:.0}% |",
+            stats::geomean(sc),
+            lt_geo / stats::geomean(sc).max(1e-12),
+            stats::mean(&times[m]),
+            100.0 * profile.win_rate(m)
+        );
+    }
+    write_out(&cfg.out_dir, "fig11.md", &md)?;
+    Ok(md)
+}
+
+// ---------------------------------------------------------------------------
+// Headline numbers (abstract / conclusion claims)
+// ---------------------------------------------------------------------------
+
+pub fn headline(rt: &Runtime, cfg: &EvalCfg, budget_secs: f64, n: usize) -> Result<String> {
+    let ds = dataset::canonical();
+    let n = cfg.scaled(n);
+    let problems: Vec<Problem> = dataset::sample_test(&ds, n, cfg.seed ^ 0xbead);
+    let rows = run_comparison(rt, cfg, &problems, budget_secs)?;
+
+    let mut by_method: BTreeMap<&str, Vec<f64>> = BTreeMap::new();
+    let mut times: BTreeMap<&str, Vec<f64>> = BTreeMap::new();
+    for r in &rows {
+        by_method.entry(&r.method).or_default().push(r.speedup_vs_initial);
+        times.entry(&r.method).or_default().push(r.secs);
+    }
+    let lt = stats::geomean(&by_method["looptune"]);
+    let best_search = by_method
+        .iter()
+        .filter(|(m, _)| **m != "looptune")
+        .map(|(m, v)| (m.to_string(), stats::geomean(v)))
+        .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        .unwrap();
+    // Win rate vs best search per benchmark.
+    let mut wins = 0;
+    for &p in &problems {
+        let lt_g = rows
+            .iter()
+            .find(|r| r.problem == p && r.method == "looptune")
+            .unwrap()
+            .gflops;
+        let best_other = rows
+            .iter()
+            .filter(|r| r.problem == p && r.method != "looptune")
+            .map(|r| r.gflops)
+            .fold(f64::MIN, f64::max);
+        if lt_g >= best_other {
+            wins += 1;
+        }
+    }
+    let md = format!(
+        "# Headline (paper: 3.2x over LoopNest default in 1s; best search 1.8x in 60s)\n\n\
+         - LoopTune speedup over LoopNest default: **{lt:.2}x** (geomean, {n} benchmarks)\n\
+         - Best classical search: {} at {:.2}x given {budget_secs}s\n\
+         - LoopTune mean tune time: {:.3}s (searches: {:.1}s)\n\
+         - LoopTune beats/matches all searches on {wins}/{n} benchmarks\n",
+        best_search.0,
+        best_search.1,
+        stats::mean(&times["looptune"]),
+        stats::mean(
+            &rows
+                .iter()
+                .filter(|r| r.method != "looptune")
+                .map(|r| r.secs)
+                .collect::<Vec<_>>()
+        ),
+    );
+    write_out(&cfg.out_dir, "headline.md", &md)?;
+    Ok(md)
+}
+
+// ---------------------------------------------------------------------------
+// Ablations — the paper's claimed contributions, knocked out one at a time
+// ---------------------------------------------------------------------------
+
+/// Train short APEX_DQN runs with feature groups knocked out (and one with
+/// unnormalized rewards), comparing final episode_reward_mean. Tests the
+/// paper's §III-C "minimal set of features" claim and the §III-B reward
+/// normalization choice.
+pub fn ablation(rt: Rc<Runtime>, cfg: &EvalCfg, iters: usize) -> Result<String> {
+    use crate::featurize::FeatureMask;
+    let train_cfg = EvalCfg { measured: false, ..cfg.clone() };
+    let pk = peak_for(&train_cfg);
+    let ds = dataset::canonical();
+
+    let full = FeatureMask::default();
+    let variants: Vec<(&str, FeatureMask, f64)> = vec![
+        ("full", full, pk),
+        ("no_stride_hist", FeatureMask { hist: false, ..full }, pk),
+        ("no_cursor", FeatureMask { cursor: false, ..full }, pk),
+        ("no_size_tail", FeatureMask { size: false, tail: false, ..full }, pk),
+        ("no_nest_kind", FeatureMask { kind: false, ..full }, pk),
+        ("raw_reward", full, 1.0), // reward not normalized by peak
+    ];
+
+    let mut md = String::from(
+        "# Ablations: APEX_DQN with feature groups / reward normalization knocked out\n\n| variant | final episode_reward_mean (GFLOPS gain / model peak) |\n|---|---|\n",
+    );
+    let mut csv = String::from("variant,iter,episode_reward_mean,loss\n");
+    for (name, mask, peak_used) in variants {
+        let mut c = rl::dqn::DqnConfig::apex();
+        c.seed = cfg.seed;
+        c.feature_mask = mask;
+        let mut t = rl::dqn::DqnTrainer::new(rt.clone(), c)?;
+        let log = t.train(train_cfg.backend(), &ds.train, peak_used, iters, |_| {})?;
+        // Express the raw-reward variant in the same units for comparison.
+        let scale = peak_used / pk;
+        let fin = log.recent_reward(10) * scale;
+        let _ = writeln!(md, "| {name} | {fin:.4} |");
+        for it in &log.iters {
+            let _ = writeln!(
+                csv,
+                "{},{},{:.6},{:.6}",
+                name,
+                it.iter,
+                it.episode_reward_mean * scale,
+                it.loss
+            );
+        }
+        eprintln!("[ablation] {name}: {fin:.4}");
+    }
+    write_out(&cfg.out_dir, "ablation.csv", &csv)?;
+    write_out(&cfg.out_dir, "ablation.md", &md)?;
+    Ok(md)
+}
+
+// ---------------------------------------------------------------------------
+// Policy training with seed selection
+// ---------------------------------------------------------------------------
+
+/// Train APEX_DQN once per seed and keep the policy with the best geomean
+/// tuned speedup on a validation slice of the TRAIN split (cost-model
+/// scored — the test split stays held out). RL runs have seed variance;
+/// the paper reports its best trained policy, and so do we (documented in
+/// EXPERIMENTS.md).
+pub fn train_selected(
+    rt: Rc<Runtime>,
+    cfg: &EvalCfg,
+    iters: usize,
+    n_seeds: u64,
+) -> Result<(ParamSet, String)> {
+    let train_cfg = EvalCfg { measured: false, ..cfg.clone() };
+    let pk = peak_for(&train_cfg);
+    let ds = dataset::canonical();
+    // Validation problems: a fixed slice of the train split.
+    let val: Vec<Problem> = ds.train.iter().rev().take(10).copied().collect();
+
+    let mut best: Option<(f64, ParamSet, u64)> = None;
+    let mut report = String::from("| seed | final reward | val geomean speedup |\n|---|---|---|\n");
+    for s in 0..n_seeds {
+        let seed = cfg.seed + s * 1000;
+        let mut c = rl::dqn::DqnConfig::apex();
+        c.seed = seed;
+        let mut t = rl::dqn::DqnTrainer::new(rt.clone(), c)?;
+        let log = t.train(train_cfg.backend(), &ds.train, pk, iters, |_| {})?;
+        let be = train_cfg.backend();
+        let mut speedups = Vec::new();
+        for &p in &val {
+            let out = rl::tune(&rt, &t.params, p, 10, &be)?;
+            speedups.push(out.speedup());
+        }
+        let score = stats::geomean(&speedups);
+        let _ = writeln!(
+            report,
+            "| {seed} | {:.4} | {score:.2}x |",
+            log.recent_reward(10)
+        );
+        eprintln!("[select] seed {seed}: reward {:.4}, val {score:.2}x", log.recent_reward(10));
+        if best.as_ref().map(|(b, _, _)| score > *b).unwrap_or(true) {
+            best = Some((score, t.params.clone(), seed));
+        }
+    }
+    let (score, params, seed) = best.expect("n_seeds >= 1");
+    let _ = writeln!(report, "\nselected seed {seed} ({score:.2}x on validation)");
+    Ok((params, report))
+}

@@ -1,0 +1,64 @@
+//! Evaluation harness: one driver per paper table/figure (DESIGN.md §5).
+//!
+//! Every driver writes machine-readable CSV plus a human-readable summary
+//! into an output directory and returns the summary string; the CLI
+//! (`looptune eval <exp>`) and EXPERIMENTS.md consume these.
+
+pub mod experiments;
+pub mod perf_profile;
+
+use std::path::Path;
+
+/// Write a file, creating parents.
+pub fn write_out(dir: &Path, name: &str, contents: &str) -> anyhow::Result<()> {
+    std::fs::create_dir_all(dir)?;
+    std::fs::write(dir.join(name), contents)?;
+    Ok(())
+}
+
+/// Shared evaluation settings.
+#[derive(Clone, Debug)]
+pub struct EvalCfg {
+    /// Output directory for CSVs and summaries.
+    pub out_dir: std::path::PathBuf,
+    /// Use the real executor (measured GFLOPS) instead of the cost model.
+    pub measured: bool,
+    /// Scale factor applied to budgets/sizes (quick mode uses < 1).
+    pub scale: f64,
+    /// Trained policy parameters (produced by `looptune train`).
+    pub params_path: Option<std::path::PathBuf>,
+    pub seed: u64,
+}
+
+impl Default for EvalCfg {
+    fn default() -> Self {
+        EvalCfg {
+            out_dir: "results".into(),
+            measured: true,
+            scale: 1.0,
+            params_path: None,
+            seed: 7,
+        }
+    }
+}
+
+impl EvalCfg {
+    /// Backend per configuration: measured executor or analytical model,
+    /// both wrapped in the schedule cache.
+    pub fn backend(&self) -> crate::backend::SharedBackend {
+        use crate::backend::{Cached, SharedBackend};
+        if self.measured {
+            SharedBackend::new(Cached::new(
+                crate::backend::executor::ExecutorBackend::default(),
+            ))
+        } else {
+            SharedBackend::new(Cached::new(
+                crate::backend::cost_model::CostModel::default(),
+            ))
+        }
+    }
+
+    pub fn scaled(&self, n: usize) -> usize {
+        ((n as f64 * self.scale).round() as usize).max(1)
+    }
+}

@@ -1,0 +1,124 @@
+//! Dolan–Moré performance profiles (paper Fig. 11 uses these: "for Figure
+//! b), test cases were normalized with the best method").
+//!
+//! Given per-benchmark scores for several methods (higher = better), the
+//! profile of a method at ratio tau is the fraction of benchmarks where
+//! `score >= best_score / tau`.
+
+use std::collections::BTreeMap;
+
+/// scores[method][benchmark] -> profile curves.
+pub struct PerfProfile {
+    pub methods: Vec<String>,
+    /// Per-benchmark ratio to best, per method (1.0 = was the best).
+    pub ratios: BTreeMap<String, Vec<f64>>,
+}
+
+pub fn build(scores: &BTreeMap<String, Vec<f64>>) -> PerfProfile {
+    let methods: Vec<String> = scores.keys().cloned().collect();
+    assert!(!methods.is_empty());
+    let n = scores[&methods[0]].len();
+    for m in &methods {
+        assert_eq!(scores[m].len(), n, "ragged scores for {m}");
+    }
+    let mut ratios: BTreeMap<String, Vec<f64>> =
+        methods.iter().map(|m| (m.clone(), Vec::with_capacity(n))).collect();
+    for b in 0..n {
+        let best = methods
+            .iter()
+            .map(|m| scores[m][b])
+            .fold(f64::MIN, f64::max)
+            .max(1e-12);
+        for m in &methods {
+            ratios.get_mut(m).unwrap().push(scores[m][b] / best);
+        }
+    }
+    PerfProfile { methods, ratios }
+}
+
+impl PerfProfile {
+    /// Fraction of benchmarks where `method` achieves >= `frac` of best.
+    pub fn at(&self, method: &str, frac: f64) -> f64 {
+        let rs = &self.ratios[method];
+        rs.iter().filter(|&&r| r >= frac).count() as f64 / rs.len() as f64
+    }
+
+    /// Fraction of benchmarks where `method` IS the best (ratio ~ 1).
+    pub fn win_rate(&self, method: &str) -> f64 {
+        self.at(method, 1.0 - 1e-9)
+    }
+
+    /// Sampled curve for plotting: (frac-of-best, fraction-of-benchmarks).
+    pub fn curve(&self, method: &str, points: usize) -> Vec<(f64, f64)> {
+        (0..=points)
+            .map(|i| {
+                let f = i as f64 / points as f64;
+                (f, self.at(method, f))
+            })
+            .collect()
+    }
+
+    /// CSV with one row per sampled frac, one column per method.
+    pub fn to_csv(&self, points: usize) -> String {
+        let mut s = String::from("frac_of_best");
+        for m in &self.methods {
+            s.push(',');
+            s.push_str(m);
+        }
+        s.push('\n');
+        for i in 0..=points {
+            let f = i as f64 / points as f64;
+            s.push_str(&format!("{f:.3}"));
+            for m in &self.methods {
+                s.push_str(&format!(",{:.4}", self.at(m, f)));
+            }
+            s.push('\n');
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scores() -> BTreeMap<String, Vec<f64>> {
+        let mut m = BTreeMap::new();
+        m.insert("a".into(), vec![10.0, 8.0, 6.0]);
+        m.insert("b".into(), vec![5.0, 8.0, 12.0]);
+        m
+    }
+
+    #[test]
+    fn ratios_relative_to_best() {
+        let p = build(&scores());
+        assert_eq!(p.ratios["a"], vec![1.0, 1.0, 0.5]);
+        assert_eq!(p.ratios["b"], vec![0.5, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn win_rate_counts_ties() {
+        let p = build(&scores());
+        assert!((p.win_rate("a") - 2.0 / 3.0).abs() < 1e-9);
+        assert!((p.win_rate("b") - 2.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn profile_is_monotone_decreasing_in_frac() {
+        let p = build(&scores());
+        for m in ["a", "b"] {
+            let c = p.curve(m, 10);
+            for w in c.windows(2) {
+                assert!(w[1].1 <= w[0].1 + 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let p = build(&scores());
+        let csv = p.to_csv(4);
+        assert!(csv.starts_with("frac_of_best,a,b\n"));
+        assert_eq!(csv.lines().count(), 6);
+    }
+}

@@ -1,0 +1,253 @@
+//! State featurizer (paper §III-C, Figs. 4–5).
+//!
+//! The graph representation (loops / data / computation nodes; nesting,
+//! data-flow, and stride edges) is implicit in the [`Nest`] + tensor access
+//! functions; this module aggregates it into the vector representation the
+//! networks consume: **20 values per loop**, `MAX_LOOPS` loops, zero-padded:
+//!
+//! 1. agent-cursor bit
+//! 2. loop size (trip count), log2-scaled
+//! 3. loop tail, log2-scaled
+//! 4. compute-nest (1) vs write-back-nest (0) bit
+//! 5–20. 16-bin histogram of memory-access stride frequencies, bins of
+//!    size 2^N, N in 0..=15 (cache-line-scale discretization)
+//!
+//! The memory stride a loop induces on a tensor = (IR stride of the loop,
+//! in elements of its dim) x (row-major element stride of the tensor w.r.t.
+//! that dim). Loops that do not index a tensor produce no access (stride-0
+//! reuse is not counted — documented deviation; the paper's figure counts
+//! strides >= 1).
+//!
+//! Sizes/tails are log2-scaled before entering the network: the paper
+//! reports integer features but does not specify input scaling; raw extents
+//! up to 256 destabilize an MLP, and log-scaling is monotone, so ordering
+//! information is preserved.
+
+use crate::ir::{Kind, Nest, Tensor};
+use crate::{FEATS, STATE_DIM};
+
+pub const HIST_BINS: usize = 16;
+
+/// Feature-group mask for ablation studies (EXPERIMENTS.md §Ablations):
+/// disabled groups are zeroed in the state vector, testing the paper's
+/// claim that this is "a minimal set of features for the RL algorithm to
+/// learn memory access patterns" (§III-C).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FeatureMask {
+    pub cursor: bool,
+    pub size: bool,
+    pub tail: bool,
+    pub kind: bool,
+    pub hist: bool,
+}
+
+impl Default for FeatureMask {
+    fn default() -> Self {
+        FeatureMask { cursor: true, size: true, tail: true, kind: true, hist: true }
+    }
+}
+
+impl FeatureMask {
+    pub fn apply(&self, v: &mut [f32]) {
+        debug_assert_eq!(v.len(), crate::STATE_DIM);
+        for chunk in v.chunks_mut(FEATS) {
+            if !self.cursor {
+                chunk[0] = 0.0;
+            }
+            if !self.size {
+                chunk[1] = 0.0;
+            }
+            if !self.tail {
+                chunk[2] = 0.0;
+            }
+            if !self.kind {
+                chunk[3] = 0.0;
+            }
+            if !self.hist {
+                chunk[4..].fill(0.0);
+            }
+        }
+    }
+}
+
+/// Feature vector for one loop.
+pub fn loop_features(nest: &Nest, idx: usize, out: &mut [f32]) {
+    assert_eq!(out.len(), FEATS);
+    let l = nest.loops[idx];
+    out.fill(0.0);
+    out[0] = if idx == nest.cursor { 1.0 } else { 0.0 };
+    out[1] = log2f(nest.trip(idx));
+    out[2] = log2f(nest.tail(idx));
+    out[3] = if l.kind == Kind::Compute { 1.0 } else { 0.0 };
+
+    let tensors: &[Tensor] = match l.kind {
+        Kind::Compute => &Tensor::COMPUTE,
+        Kind::WriteBack => &Tensor::WRITEBACK,
+    };
+    let ir_stride = nest.stride(idx);
+    for &t in tensors {
+        if let Some(ts) = t.stride(&nest.problem, l.dim) {
+            let mem_stride = ir_stride * ts;
+            let bin = (crate::util::ilog2(mem_stride.max(1)) as usize).min(HIST_BINS - 1);
+            out[4 + bin] += 1.0;
+        }
+    }
+}
+
+fn log2f(x: usize) -> f32 {
+    ((x + 1) as f32).log2()
+}
+
+/// Full state vector: `MAX_LOOPS * FEATS` f32, zero-padded past the actual
+/// loop count.
+pub fn state_vector(nest: &Nest) -> Vec<f32> {
+    let mut v = vec![0.0f32; STATE_DIM];
+    for i in 0..nest.loops.len().min(crate::ir::MAX_LOOPS) {
+        loop_features(nest, i, &mut v[i * FEATS..(i + 1) * FEATS]);
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{Nest, Problem};
+    use crate::util::rng::Pcg32;
+
+    fn nest() -> Nest {
+        Nest::initial(Problem::new(64, 96, 128))
+    }
+
+    #[test]
+    fn vector_has_fixed_length_and_padding() {
+        let v = state_vector(&nest());
+        assert_eq!(v.len(), STATE_DIM);
+        // 5 loops used; the rest must be zero.
+        assert!(v[5 * FEATS..].iter().all(|&x| x == 0.0));
+        assert!(v[..5 * FEATS].iter().any(|&x| x != 0.0));
+    }
+
+    #[test]
+    fn cursor_bit_tracks_cursor() {
+        let mut n = nest();
+        let v = state_vector(&n);
+        assert_eq!(v[0], 1.0);
+        assert_eq!(v[FEATS], 0.0);
+        n.cursor_down().unwrap();
+        let v = state_vector(&n);
+        assert_eq!(v[0], 0.0);
+        assert_eq!(v[FEATS], 1.0);
+    }
+
+    #[test]
+    fn nest_kind_bit() {
+        let n = nest();
+        let v = state_vector(&n);
+        assert_eq!(v[3], 1.0); // compute m
+        assert_eq!(v[3 * FEATS + 3], 0.0); // write-back m
+    }
+
+    #[test]
+    fn stride_histogram_for_initial_matmul() {
+        // m loop (stride 1 in dim units): A stride k=128 -> bin 7,
+        // T stride n=96 -> bin log2(96)=6. B not indexed by m.
+        let n = nest();
+        let mut f = [0.0f32; FEATS];
+        loop_features(&n, 0, &mut f);
+        assert_eq!(f[4 + 7], 1.0, "A access at bin 7: {f:?}");
+        assert_eq!(f[4 + 6], 1.0, "T access at bin 6: {f:?}");
+        assert_eq!(f[4..].iter().sum::<f32>(), 2.0);
+
+        // k loop: A stride 1 -> bin 0, B stride 96 -> bin 6.
+        let mut f = [0.0f32; FEATS];
+        loop_features(&n, 2, &mut f);
+        assert_eq!(f[4 + 0], 1.0);
+        assert_eq!(f[4 + 6], 1.0);
+    }
+
+    #[test]
+    fn tiling_shifts_stride_bins() {
+        let mut n = nest();
+        // Split m by 16: the m root now advances 16 rows per iteration ->
+        // A stride 16*128 = 2048 -> bin 11.
+        n.split(16).unwrap();
+        let mut f = [0.0f32; FEATS];
+        loop_features(&n, 0, &mut f);
+        assert_eq!(f[4 + 11], 1.0, "{f:?}");
+    }
+
+    #[test]
+    fn histogram_clamps_to_last_bin() {
+        // Huge strides all land in bin 15.
+        let n = Nest::initial(Problem::new(256, 256, 256));
+        let mut big = n.clone();
+        big.cursor = 0;
+        // m stride on A = k = 256 -> bin 8; not clamped. Build an
+        // artificially deep tiling to push stride over 2^15.
+        for _ in 0..3 {
+            big.cursor = 0;
+            let _ = big.split(8);
+        }
+        let mut f = [0.0f32; FEATS];
+        loop_features(&big, 0, &mut f);
+        let nz: Vec<usize> =
+            (0..HIST_BINS).filter(|&b| f[4 + b] > 0.0).collect();
+        assert!(!nz.is_empty());
+        assert!(nz.iter().all(|&b| b <= 15));
+    }
+
+    /// Property: histogram mass equals the number of (tensor, dim) accesses
+    /// of the loop's nest kind, for random schedules.
+    #[test]
+    fn prop_histogram_mass_conserved() {
+        for seed in 0..30u64 {
+            let mut rng = Pcg32::new(seed ^ 0xfea7);
+            let mut n = nest();
+            for _ in 0..40 {
+                match rng.below(5) {
+                    0 => drop(n.cursor_up()),
+                    1 => drop(n.cursor_down()),
+                    2 => drop(n.swap_up()),
+                    3 => drop(n.swap_down()),
+                    _ => drop(n.split(*rng.choose(&[2usize, 4, 8, 16]))),
+                }
+            }
+            for (i, l) in n.loops.iter().enumerate() {
+                let mut f = [0.0f32; FEATS];
+                loop_features(&n, i, &mut f);
+                let tensors: &[Tensor] = match l.kind {
+                    Kind::Compute => &Tensor::COMPUTE,
+                    Kind::WriteBack => &Tensor::WRITEBACK,
+                };
+                let expected = tensors
+                    .iter()
+                    .filter(|t| t.stride(&n.problem, l.dim).is_some())
+                    .count() as f32;
+                let mass: f32 = f[4..].iter().sum();
+                assert_eq!(mass, expected, "seed {seed} loop {i}");
+            }
+        }
+    }
+
+    use crate::ir::{Kind, Tensor};
+
+    #[test]
+    fn feature_mask_zeroes_groups() {
+        let n = nest();
+        let full = state_vector(&n);
+        let mut v = full.clone();
+        FeatureMask { hist: false, ..Default::default() }.apply(&mut v);
+        for (i, chunk) in v.chunks(FEATS).enumerate() {
+            assert!(chunk[4..].iter().all(|&x| x == 0.0), "loop {i}");
+            // Non-hist features preserved.
+            assert_eq!(chunk[..4], full[i * FEATS..i * FEATS + 4]);
+        }
+        let mut v = full.clone();
+        FeatureMask { cursor: false, ..Default::default() }.apply(&mut v);
+        assert!(v.chunks(FEATS).all(|c| c[0] == 0.0));
+
+        let mut v = full.clone();
+        FeatureMask::default().apply(&mut v);
+        assert_eq!(v, full, "default mask is identity");
+    }
+}

@@ -1,0 +1,110 @@
+//! Text rendering of a [`Nest`] in the paper's Fig. 3 style:
+//!
+//! ```text
+//! for m_0 in 4 : L2        <- agent
+//!  for m_1 in 16 : L1
+//!   for n in 96
+//!    for k in 128
+//!     T[m, n] += A[m, k] * B[k, n]
+//! for m in 64
+//!  for n in 96
+//!   C[m, n] = T[m, n]
+//! ```
+
+use super::{Kind, Nest};
+use std::fmt::Write;
+
+/// Render the nest as indented pseudo-code with the agent cursor marked.
+pub fn render(nest: &Nest) -> String {
+    let mut out = String::new();
+    let mut level_per_dim = [0usize; 3];
+    let mut depth = 0usize;
+    let mut prev_kind = None;
+
+    for (i, l) in nest.loops.iter().enumerate() {
+        if prev_kind == Some(Kind::Compute) && l.kind == Kind::WriteBack {
+            // Close the compute nest with its body first.
+            write_body(&mut out, depth, Kind::Compute);
+            depth = 0;
+            level_per_dim = [0; 3];
+        }
+        prev_kind = Some(l.kind);
+
+        let d = l.dim.index();
+        let name = if count_dim(nest, i) > 1 {
+            format!("{}_{}", l.dim.name(), level_per_dim[d])
+        } else {
+            l.dim.name().to_string()
+        };
+        level_per_dim[d] += 1;
+
+        let tail = nest.tail(i);
+        let tail_s = if tail > 0 { format!(" tail {tail}") } else { String::new() };
+        let cursor_s = if i == nest.cursor { "   <- agent" } else { "" };
+        let _ = writeln!(
+            out,
+            "{}for {} in {}{}{}",
+            " ".repeat(depth),
+            name,
+            nest.trip(i),
+            tail_s,
+            cursor_s
+        );
+        depth += 1;
+    }
+    write_body(&mut out, depth, prev_kind.unwrap_or(Kind::Compute));
+    out
+}
+
+fn count_dim(nest: &Nest, idx: usize) -> usize {
+    let l = nest.loops[idx];
+    nest.loops
+        .iter()
+        .filter(|o| o.dim == l.dim && o.kind == l.kind)
+        .count()
+}
+
+fn write_body(out: &mut String, depth: usize, kind: Kind) {
+    let body = match kind {
+        Kind::Compute => "T[m, n] += A[m, k] * B[k, n]",
+        Kind::WriteBack => "C[m, n] = T[m, n]",
+    };
+    let _ = writeln!(out, "{}{}", " ".repeat(depth), body);
+}
+
+impl std::fmt::Display for Nest {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&render(self))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::ir::{Nest, Problem};
+
+    #[test]
+    fn render_initial() {
+        let n = Nest::initial(Problem::new(64, 96, 128));
+        let s = super::render(&n);
+        assert!(s.contains("for m in 64   <- agent"));
+        assert!(s.contains("T[m, n] += A[m, k] * B[k, n]"));
+        assert!(s.contains("C[m, n] = T[m, n]"));
+    }
+
+    #[test]
+    fn render_split_names_levels() {
+        let mut n = Nest::initial(Problem::new(64, 96, 128));
+        n.split(16).unwrap();
+        let s = super::render(&n);
+        assert!(s.contains("for m_0 in 4"), "{s}");
+        assert!(s.contains("for m_1 in 16"), "{s}");
+    }
+
+    #[test]
+    fn render_marks_tail() {
+        let mut n = Nest::initial(Problem::new(100, 64, 64));
+        n.split(48).unwrap();
+        let s = super::render(&n);
+        assert!(s.contains("tail 4"), "{s}");
+    }
+}

@@ -1,0 +1,312 @@
+//! Loop-nest IR — the "LoopTool" substrate (paper §III, Fig 3/4).
+//!
+//! A [`Nest`] is an ordered list of loops (outermost first), partitioned
+//! into a *compute* nest (accumulates `T[m,n] += A[m,k] * B[k,n]`) and a
+//! *write-back* nest (copies `T` into `C`). Each dimension (m/n/k) has one
+//! **root** loop per nest kind plus zero or more **tile** loops created by
+//! `split` actions.
+//!
+//! Semantics (documented precisely because they drive both the executor
+//! and the featurizer):
+//!
+//! - The *IR stride* of a loop is the number of **elements of its
+//!   dimension** advanced per iteration: the product of the tile factors of
+//!   all deeper loops of the same dimension in the same nest kind. The
+//!   deepest loop of a dimension has stride 1.
+//! - A root loop's trip count is `ceil(extent / stride)`; a tile loop's
+//!   trip count is its factor (the executor clamps partial chunks at the
+//!   extent boundary, exactly like the `min()` bounds of hand-tiled code).
+//! - The *tail* of the root is `extent % stride`; the tail of a tile loop
+//!   is the leftover its level sees inside the parent's tail region:
+//!   `tail(l_i) = tail(l_{i-1}) % stride(l_i)` (paper: the remainder
+//!   executed "at the end of the loop nest execution").
+//!
+//! Invariant maintained by all transforms: within a nest kind, a
+//! dimension's root loop precedes all of its tile loops (swaps between two
+//! loops of the same dimension are invalid actions, see `env::actions`).
+
+pub mod display;
+pub mod problem;
+pub mod transform;
+
+pub use problem::{Problem, Tensor};
+
+use crate::util::ceil_div;
+
+/// Maximum number of loops a nest may grow to — bounds the state vector.
+pub const MAX_LOOPS: usize = 10;
+
+/// Which nest a loop belongs to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Kind {
+    Compute,
+    WriteBack,
+}
+
+/// A contraction dimension. For matmul: M, N, K.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Dim {
+    M = 0,
+    N = 1,
+    K = 2,
+}
+
+impl Dim {
+    pub const ALL: [Dim; 3] = [Dim::M, Dim::N, Dim::K];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Dim::M => "m",
+            Dim::N => "n",
+            Dim::K => "k",
+        }
+    }
+
+    pub fn index(self) -> usize {
+        self as usize
+    }
+}
+
+/// One loop level.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Loop {
+    pub dim: Dim,
+    /// `None` = root loop (covers the remaining extent), `Some(f)` = tile
+    /// loop created by `split(f)`.
+    pub factor: Option<usize>,
+    pub kind: Kind,
+}
+
+/// A scheduled loop nest for one contraction problem, plus the agent cursor.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct Nest {
+    pub problem: Problem,
+    /// Outermost first. All `Kind::Compute` loops precede all
+    /// `Kind::WriteBack` loops.
+    pub loops: Vec<Loop>,
+    /// Agent cursor (paper §III-A): index into `loops`.
+    pub cursor: usize,
+}
+
+impl Nest {
+    /// The untiled starting nest: compute `m, n, k`; write-back `m, n`.
+    pub fn initial(problem: Problem) -> Self {
+        let loops = vec![
+            Loop { dim: Dim::M, factor: None, kind: Kind::Compute },
+            Loop { dim: Dim::N, factor: None, kind: Kind::Compute },
+            Loop { dim: Dim::K, factor: None, kind: Kind::Compute },
+            Loop { dim: Dim::M, factor: None, kind: Kind::WriteBack },
+            Loop { dim: Dim::N, factor: None, kind: Kind::WriteBack },
+        ];
+        Nest { problem, loops, cursor: 0 }
+    }
+
+    pub fn extent(&self, dim: Dim) -> usize {
+        self.problem.extent(dim)
+    }
+
+    /// Number of loops in the given nest kind.
+    pub fn count_kind(&self, kind: Kind) -> usize {
+        self.loops.iter().filter(|l| l.kind == kind).count()
+    }
+
+    /// IR stride of loop `idx`: product of tile factors of deeper loops of
+    /// the same dim and kind.
+    pub fn stride(&self, idx: usize) -> usize {
+        let l = self.loops[idx];
+        self.loops[idx + 1..]
+            .iter()
+            .filter(|o| o.dim == l.dim && o.kind == l.kind)
+            .map(|o| o.factor.expect("root loop must be outermost for its dim"))
+            .product()
+    }
+
+    /// Trip count of loop `idx`.
+    pub fn trip(&self, idx: usize) -> usize {
+        let l = self.loops[idx];
+        match l.factor {
+            Some(f) => f,
+            None => ceil_div(self.extent(l.dim), self.stride(idx)),
+        }
+    }
+
+    /// Tail (leftover elements at this level) of loop `idx`. See module doc.
+    pub fn tail(&self, idx: usize) -> usize {
+        let l = self.loops[idx];
+        // Walk this dim's loops outer->inner down to idx, cascading the
+        // remainder.
+        let mut tail = 0usize;
+        let mut seen_root = false;
+        for (i, o) in self.loops.iter().enumerate() {
+            if o.dim != l.dim || o.kind != l.kind {
+                continue;
+            }
+            let stride = self.stride(i);
+            if o.factor.is_none() {
+                tail = self.extent(l.dim) % stride;
+                seen_root = true;
+            } else {
+                debug_assert!(seen_root, "root must precede tiles");
+                tail %= stride;
+            }
+            if i == idx {
+                return tail;
+            }
+        }
+        unreachable!("loop index out of range")
+    }
+
+    /// Total iteration volume of the compute nest (product of trips),
+    /// counting clamped partial chunks as full — an upper bound used by
+    /// validity checks and tests.
+    pub fn compute_trip_volume(&self) -> usize {
+        self.loops
+            .iter()
+            .enumerate()
+            .filter(|(_, l)| l.kind == Kind::Compute)
+            .map(|(i, _)| self.trip(i))
+            .product()
+    }
+
+    /// Indices of loops in the given kind, outermost first.
+    pub fn kind_indices(&self, kind: Kind) -> Vec<usize> {
+        self.loops
+            .iter()
+            .enumerate()
+            .filter(|(_, l)| l.kind == kind)
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Check all structural invariants; used by tests and debug assertions.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        if self.loops.is_empty() {
+            return Err("empty nest".into());
+        }
+        if self.cursor >= self.loops.len() {
+            return Err(format!("cursor {} out of range", self.cursor));
+        }
+        if self.loops.len() > MAX_LOOPS {
+            return Err(format!("{} loops > MAX_LOOPS", self.loops.len()));
+        }
+        // Compute block precedes write-back block.
+        let first_wb = self.loops.iter().position(|l| l.kind == Kind::WriteBack);
+        if let Some(fw) = first_wb {
+            if self.loops[fw..].iter().any(|l| l.kind == Kind::Compute) {
+                return Err("compute loop after write-back loop".into());
+            }
+        }
+        // Per (dim, kind): exactly one root, and it precedes all tiles.
+        for kind in [Kind::Compute, Kind::WriteBack] {
+            for dim in Dim::ALL {
+                let idxs: Vec<usize> = self
+                    .loops
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, l)| l.dim == dim && l.kind == kind)
+                    .map(|(i, _)| i)
+                    .collect();
+                if idxs.is_empty() {
+                    if kind == Kind::Compute || dim != Dim::K {
+                        if !(kind == Kind::WriteBack && dim == Dim::K) {
+                            return Err(format!("missing {dim:?} loop in {kind:?}"));
+                        }
+                    }
+                    continue;
+                }
+                let roots =
+                    idxs.iter().filter(|&&i| self.loops[i].factor.is_none()).count();
+                if roots != 1 {
+                    return Err(format!("{roots} roots for {dim:?} in {kind:?}"));
+                }
+                if self.loops[idxs[0]].factor.is_some() {
+                    return Err(format!("root not outermost for {dim:?} in {kind:?}"));
+                }
+                for &i in &idxs {
+                    if let Some(f) = self.loops[i].factor {
+                        if f < 2 {
+                            return Err(format!("tile factor {f} < 2"));
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn nest() -> Nest {
+        Nest::initial(Problem::new(64, 96, 128))
+    }
+
+    #[test]
+    fn initial_shape() {
+        let n = nest();
+        n.check_invariants().unwrap();
+        assert_eq!(n.loops.len(), 5);
+        assert_eq!(n.count_kind(Kind::Compute), 3);
+        assert_eq!(n.count_kind(Kind::WriteBack), 2);
+        assert_eq!(n.cursor, 0);
+    }
+
+    #[test]
+    fn initial_trips_match_extents() {
+        let n = nest();
+        assert_eq!(n.trip(0), 64); // m
+        assert_eq!(n.trip(1), 96); // n
+        assert_eq!(n.trip(2), 128); // k
+        assert_eq!(n.trip(3), 64); // wb m
+        assert_eq!(n.trip(4), 96); // wb n
+        for i in 0..5 {
+            assert_eq!(n.stride(i), 1);
+            assert_eq!(n.tail(i), 0);
+        }
+    }
+
+    #[test]
+    fn stride_after_manual_tile() {
+        let mut n = nest();
+        // m root, m tile(16), n, k  (hand-built)
+        n.loops.insert(
+            1,
+            Loop { dim: Dim::M, factor: Some(16), kind: Kind::Compute },
+        );
+        n.check_invariants().unwrap();
+        assert_eq!(n.stride(0), 16); // root m advances 16 elements/iter
+        assert_eq!(n.trip(0), 4); // ceil(64/16)
+        assert_eq!(n.trip(1), 16);
+        assert_eq!(n.tail(0), 0);
+        assert_eq!(n.tail(1), 0);
+    }
+
+    #[test]
+    fn tail_with_non_dividing_factor() {
+        let mut n = Nest::initial(Problem::new(100, 64, 64));
+        n.loops.insert(
+            1,
+            Loop { dim: Dim::M, factor: Some(48), kind: Kind::Compute },
+        );
+        assert_eq!(n.trip(0), ceil_div(100, 48)); // 3
+        assert_eq!(n.tail(0), 100 % 48); // 4 leftover elements
+        assert_eq!(n.tail(1), 4 % 1); // deepest level: 0
+    }
+
+    #[test]
+    fn invariants_catch_violations() {
+        let mut n = nest();
+        n.cursor = 99;
+        assert!(n.check_invariants().is_err());
+
+        let mut n = nest();
+        n.loops[0].factor = Some(8); // root replaced by tile -> no root
+        assert!(n.check_invariants().is_err());
+
+        let mut n = nest();
+        n.loops.swap(2, 3); // compute k after wb m
+        assert!(n.check_invariants().is_err());
+    }
+}

@@ -1,0 +1,131 @@
+//! Contraction problems. The paper's benchmark suite is square-ish matrix
+//! multiplication `C[M,N] = sum_k A[M,K] * B[K,N]` with M, N, K in
+//! `{64, 80, ..., 256}` (13 values each, 2197 problems).
+
+use super::Dim;
+
+/// A matmul contraction instance (extents of m, n, k).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Problem {
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+}
+
+impl Problem {
+    pub fn new(m: usize, n: usize, k: usize) -> Self {
+        assert!(m > 0 && n > 0 && k > 0);
+        Problem { m, n, k }
+    }
+
+    pub fn extent(&self, dim: Dim) -> usize {
+        match dim {
+            Dim::M => self.m,
+            Dim::N => self.n,
+            Dim::K => self.k,
+        }
+    }
+
+    /// Floating-point operations of the contraction (mul + add).
+    pub fn flops(&self) -> u64 {
+        2 * self.m as u64 * self.n as u64 * self.k as u64
+    }
+
+    /// Bytes touched at least once (A + B + C + accumulator T), f32.
+    pub fn footprint_bytes(&self) -> u64 {
+        4 * (self.m as u64 * self.k as u64
+            + self.k as u64 * self.n as u64
+            + 2 * self.m as u64 * self.n as u64)
+    }
+
+    pub fn id(&self) -> String {
+        format!("mm_{}x{}x{}", self.m, self.n, self.k)
+    }
+}
+
+impl std::fmt::Display for Problem {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.id())
+    }
+}
+
+/// Row-major element strides of each tensor with respect to each dim.
+/// `None` = the tensor is not indexed by that dim (full reuse).
+///
+/// A is M x K, B is K x N, T/C are M x N.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Tensor {
+    A,
+    B,
+    /// Accumulator written by the compute nest, read by write-back.
+    T,
+    /// Final output written by the write-back nest.
+    C,
+}
+
+impl Tensor {
+    pub const COMPUTE: [Tensor; 3] = [Tensor::A, Tensor::B, Tensor::T];
+    pub const WRITEBACK: [Tensor; 2] = [Tensor::T, Tensor::C];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Tensor::A => "A",
+            Tensor::B => "B",
+            Tensor::T => "T",
+            Tensor::C => "C",
+        }
+    }
+
+    /// Element stride of this tensor w.r.t. `dim`, for `problem`.
+    pub fn stride(self, problem: &Problem, dim: Dim) -> Option<usize> {
+        match (self, dim) {
+            (Tensor::A, Dim::M) => Some(problem.k),
+            (Tensor::A, Dim::K) => Some(1),
+            (Tensor::A, Dim::N) => None,
+            (Tensor::B, Dim::K) => Some(problem.n),
+            (Tensor::B, Dim::N) => Some(1),
+            (Tensor::B, Dim::M) => None,
+            (Tensor::T | Tensor::C, Dim::M) => Some(problem.n),
+            (Tensor::T | Tensor::C, Dim::N) => Some(1),
+            (Tensor::T | Tensor::C, Dim::K) => None,
+        }
+    }
+
+    /// Number of elements of this tensor for `problem`.
+    pub fn len(self, problem: &Problem) -> usize {
+        match self {
+            Tensor::A => problem.m * problem.k,
+            Tensor::B => problem.k * problem.n,
+            Tensor::T | Tensor::C => problem.m * problem.n,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strides_are_row_major() {
+        let p = Problem::new(4, 8, 16);
+        assert_eq!(Tensor::A.stride(&p, Dim::M), Some(16));
+        assert_eq!(Tensor::A.stride(&p, Dim::K), Some(1));
+        assert_eq!(Tensor::A.stride(&p, Dim::N), None);
+        assert_eq!(Tensor::B.stride(&p, Dim::K), Some(8));
+        assert_eq!(Tensor::B.stride(&p, Dim::N), Some(1));
+        assert_eq!(Tensor::T.stride(&p, Dim::M), Some(8));
+        assert_eq!(Tensor::C.stride(&p, Dim::K), None);
+    }
+
+    #[test]
+    fn flops_and_footprint() {
+        let p = Problem::new(64, 64, 64);
+        assert_eq!(p.flops(), 2 * 64 * 64 * 64);
+        assert_eq!(p.footprint_bytes(), 4 * (64 * 64 * 4) as u64);
+    }
+
+    #[test]
+    fn id_format() {
+        assert_eq!(Problem::new(64, 80, 96).id(), "mm_64x80x96");
+    }
+}

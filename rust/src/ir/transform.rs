@@ -1,0 +1,301 @@
+//! Structural transforms on [`Nest`]: split and swap — the LoopTool API
+//! surface the action space (env::actions) is built on (paper §III-A).
+
+use super::{Kind, Loop, Nest, MAX_LOOPS};
+
+/// Why a transform is not applicable in the current state.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Invalid {
+    /// Cursor already at the first/last loop.
+    AtBoundary,
+    /// Would swap across the compute/write-back nest boundary.
+    CrossesNest,
+    /// Would swap two loops of the same dimension (undefined tile order).
+    SameDim,
+    /// Nest already has MAX_LOOPS loops.
+    TooManyLoops,
+    /// Split factor >= the loop's current trip count (no-op split).
+    FactorTooLarge,
+}
+
+impl std::fmt::Display for Invalid {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            Invalid::AtBoundary => "cursor at nest boundary",
+            Invalid::CrossesNest => "swap would cross compute/write-back boundary",
+            Invalid::SameDim => "swap of two loops of the same dimension",
+            Invalid::TooManyLoops => "nest already at MAX_LOOPS",
+            Invalid::FactorTooLarge => "split factor >= current trip count",
+        };
+        f.write_str(s)
+    }
+}
+
+impl Nest {
+    /// Move cursor up (towards outer loops).
+    pub fn cursor_up(&mut self) -> Result<(), Invalid> {
+        if self.cursor == 0 {
+            return Err(Invalid::AtBoundary);
+        }
+        self.cursor -= 1;
+        Ok(())
+    }
+
+    /// Move cursor down (towards inner loops / write-back nest).
+    pub fn cursor_down(&mut self) -> Result<(), Invalid> {
+        if self.cursor + 1 >= self.loops.len() {
+            return Err(Invalid::AtBoundary);
+        }
+        self.cursor += 1;
+        Ok(())
+    }
+
+    fn swap_check(&self, a: usize, b: usize) -> Result<(), Invalid> {
+        let (la, lb) = (self.loops[a], self.loops[b]);
+        if la.kind != lb.kind {
+            return Err(Invalid::CrossesNest);
+        }
+        if la.dim == lb.dim {
+            return Err(Invalid::SameDim);
+        }
+        Ok(())
+    }
+
+    /// Swap the cursor loop with its upper neighbour; cursor follows.
+    pub fn swap_up(&mut self) -> Result<(), Invalid> {
+        if self.cursor == 0 {
+            return Err(Invalid::AtBoundary);
+        }
+        self.swap_check(self.cursor - 1, self.cursor)?;
+        self.loops.swap(self.cursor - 1, self.cursor);
+        self.cursor -= 1;
+        debug_assert!(self.check_invariants().is_ok());
+        Ok(())
+    }
+
+    /// Swap the cursor loop with its lower neighbour; cursor follows.
+    pub fn swap_down(&mut self) -> Result<(), Invalid> {
+        if self.cursor + 1 >= self.loops.len() {
+            return Err(Invalid::AtBoundary);
+        }
+        self.swap_check(self.cursor, self.cursor + 1)?;
+        self.loops.swap(self.cursor, self.cursor + 1);
+        self.cursor += 1;
+        debug_assert!(self.check_invariants().is_ok());
+        Ok(())
+    }
+
+    /// Split the cursor loop by `factor` (paper: "creates a new loop with
+    /// the same iterator, dividing the loop range with the specified split
+    /// parameter"). The new tile loop (trip = `factor`) is inserted
+    /// immediately inside the cursor loop; the cursor loop's trip shrinks
+    /// accordingly:
+    ///
+    /// - root loop: stride grows by `factor`, trip becomes
+    ///   `ceil(extent / (stride * factor))`, tail `extent % (stride*factor)`.
+    /// - tile loop `g`: becomes `ceil(g / factor)` iterations of chunks of
+    ///   `factor` (executor clamps the last partial chunk).
+    pub fn split(&mut self, factor: usize) -> Result<(), Invalid> {
+        assert!(factor >= 2, "split factor must be >= 2");
+        if self.loops.len() >= MAX_LOOPS {
+            return Err(Invalid::TooManyLoops);
+        }
+        let idx = self.cursor;
+        if self.trip(idx) <= factor {
+            return Err(Invalid::FactorTooLarge);
+        }
+        let l = self.loops[idx];
+        if let Some(g) = l.factor {
+            // Outer keeps covering the same chunk, in ceil(g/factor) steps.
+            self.loops[idx].factor = Some(crate::util::ceil_div(g, factor));
+        }
+        self.loops.insert(
+            idx + 1,
+            Loop { dim: l.dim, factor: Some(factor), kind: l.kind },
+        );
+        debug_assert!(self.check_invariants().is_ok());
+        Ok(())
+    }
+
+    /// True if the cursor sits on the last loop of its nest kind.
+    pub fn cursor_at_kind_end(&self) -> bool {
+        let kind = self.loops[self.cursor].kind;
+        self.loops[self.cursor + 1..].iter().all(|l| l.kind != kind)
+    }
+}
+
+/// The compute-nest permutation + tiling as a compact signature, e.g.
+/// `"m n k"` or `"m/16 n/64 k m:16 n:64 k:?"` — used in reports and tests.
+pub fn schedule_signature(nest: &Nest) -> String {
+    nest.loops
+        .iter()
+        .enumerate()
+        .map(|(i, l)| {
+            let base = match l.kind {
+                Kind::Compute => l.dim.name().to_string(),
+                Kind::WriteBack => format!("w{}", l.dim.name()),
+            };
+            match l.factor {
+                Some(f) => format!("{base}:{f}"),
+                None => format!("{base}:{}", nest.trip(i)),
+            }
+        })
+        .collect::<Vec<_>>()
+        .join(" ")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{Dim, Problem};
+    use crate::util::rng::Pcg32;
+
+    fn nest() -> Nest {
+        Nest::initial(Problem::new(64, 96, 128))
+    }
+
+    #[test]
+    fn cursor_moves_and_bounds() {
+        let mut n = nest();
+        assert_eq!(n.cursor_up(), Err(Invalid::AtBoundary));
+        n.cursor_down().unwrap();
+        assert_eq!(n.cursor, 1);
+        for _ in 0..3 {
+            n.cursor_down().unwrap();
+        }
+        assert_eq!(n.cursor, 4);
+        assert_eq!(n.cursor_down(), Err(Invalid::AtBoundary));
+    }
+
+    #[test]
+    fn swap_reorders_and_carries_cursor() {
+        let mut n = nest();
+        n.cursor = 1; // n loop
+        n.swap_up().unwrap(); // -> n m k
+        assert_eq!(n.cursor, 0);
+        assert_eq!(n.loops[0].dim, Dim::N);
+        assert_eq!(n.loops[1].dim, Dim::M);
+        n.swap_down().unwrap(); // back to m n k
+        assert_eq!(n.loops[0].dim, Dim::M);
+        assert_eq!(n.cursor, 1);
+    }
+
+    #[test]
+    fn swap_rejects_nest_crossing_and_same_dim() {
+        let mut n = nest();
+        n.cursor = 2; // compute k, next is wb m
+        assert_eq!(n.swap_down(), Err(Invalid::CrossesNest));
+
+        let mut n = nest();
+        n.cursor = 0;
+        n.split(16).unwrap(); // m, m:16, n, k, ...
+        n.cursor = 1; // the m:16 tile; above is m root
+        assert_eq!(n.swap_up(), Err(Invalid::SameDim));
+    }
+
+    #[test]
+    fn split_divides_range() {
+        let mut n = nest();
+        n.split(16).unwrap();
+        assert_eq!(n.loops.len(), 6);
+        assert_eq!(n.trip(0), 4); // ceil(64/16)
+        assert_eq!(n.trip(1), 16);
+        assert_eq!(n.stride(0), 16);
+        assert_eq!(n.tail(0), 0);
+    }
+
+    #[test]
+    fn split_tail_when_not_dividing() {
+        let mut n = Nest::initial(Problem::new(100, 64, 64));
+        n.split(48).unwrap();
+        assert_eq!(n.trip(0), 3); // ceil(100/48)
+        assert_eq!(n.tail(0), 100 % 48);
+    }
+
+    #[test]
+    fn split_of_tile_loop() {
+        let mut n = nest(); // k extent 128
+        n.cursor = 2;
+        n.split(64).unwrap(); // k root (trip 2), k:64
+        n.cursor = 3;
+        n.split(8).unwrap(); // k:64 -> k:8 outer, k:8 inner
+        assert_eq!(n.loops[3].factor, Some(8)); // ceil(64/8)
+        assert_eq!(n.loops[4].factor, Some(8));
+        assert_eq!(n.stride(2), 64);
+        assert_eq!(n.trip(2), 2);
+    }
+
+    #[test]
+    fn split_rejects_too_large_factor_and_overflow() {
+        let mut n = nest();
+        n.cursor = 0; // m = 64
+        assert_eq!(n.split(64), Err(Invalid::FactorTooLarge));
+        // Fill to MAX_LOOPS then expect TooManyLoops.
+        let mut n = nest();
+        let mut added = 0;
+        while n.loops.len() < MAX_LOOPS {
+            n.cursor = 0;
+            if n.split(2).is_err() {
+                break;
+            }
+            added += 1;
+        }
+        assert!(added > 0);
+        assert_eq!(n.loops.len(), MAX_LOOPS);
+        n.cursor = 0;
+        assert_eq!(n.split(2), Err(Invalid::TooManyLoops));
+    }
+
+    /// Property: any random valid action sequence preserves invariants and
+    /// per-dim element coverage (root trip * stride >= extent).
+    #[test]
+    fn prop_random_transforms_preserve_invariants() {
+        for seed in 0..40u64 {
+            let mut rng = Pcg32::new(seed);
+            let p = Problem::new(
+                64 + 16 * rng.below(13),
+                64 + 16 * rng.below(13),
+                64 + 16 * rng.below(13),
+            );
+            let mut n = Nest::initial(p);
+            for _ in 0..60 {
+                match rng.below(5) {
+                    0 => {
+                        let _ = n.cursor_up();
+                    }
+                    1 => {
+                        let _ = n.cursor_down();
+                    }
+                    2 => {
+                        let _ = n.swap_up();
+                    }
+                    3 => {
+                        let _ = n.swap_down();
+                    }
+                    _ => {
+                        let f = *rng.choose(&[2usize, 4, 8, 16, 32, 64]);
+                        let _ = n.split(f);
+                    }
+                }
+                n.check_invariants().unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+                // Coverage property per (dim, kind) root.
+                for (i, l) in n.loops.iter().enumerate() {
+                    if l.factor.is_none() {
+                        assert!(
+                            n.trip(i) * n.stride(i) >= n.extent(l.dim),
+                            "seed {seed}: root under-covers {:?}",
+                            l.dim
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn signature_is_stable() {
+        let mut n = nest();
+        n.split(16).unwrap();
+        assert_eq!(schedule_signature(&n), "m:4 m:16 n:96 k:128 wm:64 wn:96");
+    }
+}

@@ -1,0 +1,39 @@
+//! LoopTune — RL-driven loop-schedule auto-tuning for tensor contractions.
+//!
+//! Reproduction of *LoopTune: Optimizing Tensor Computations with
+//! Reinforcement Learning* (Grubisic et al., 2023) as a three-layer stack:
+//!
+//! - **L3 (this crate)**: the coordinator — loop-nest IR ("LoopTool"),
+//!   cursor-based action space, graph-derived state featurizer, the
+//!   "LoopNest" backend substrate (schedule executor + analytical cost
+//!   model + empirical peak), classical searches, RL trainers, simulated
+//!   baselines, and the evaluation harness for every table/figure.
+//! - **L2 (python/compile/model.py)**: Q-/policy-networks and their
+//!   training steps, AOT-lowered to HLO text once at build time.
+//! - **L1 (python/compile/kernels/)**: Pallas fused-linear kernel inside
+//!   every dense layer of L2.
+//!
+//! Python never runs at tuning/training time: [`runtime`] loads the AOT
+//! artifacts via PJRT and the trainers in [`rl`] drive them from Rust.
+
+pub mod backend;
+pub mod baselines;
+pub mod config;
+pub mod dataset;
+pub mod env;
+pub mod eval;
+pub mod featurize;
+pub mod ir;
+pub mod rl;
+pub mod runtime;
+pub mod search;
+pub mod util;
+
+pub use env::actions::{Action, NUM_ACTIONS};
+pub use env::Env;
+pub use ir::{Nest, Problem, MAX_LOOPS};
+
+/// Features per loop in the state vector (paper §III-C).
+pub const FEATS: usize = 20;
+/// Flattened state dimension fed to the networks.
+pub const STATE_DIM: usize = ir::MAX_LOOPS * FEATS;

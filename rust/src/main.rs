@@ -1,0 +1,365 @@
+//! `looptune` — CLI launcher for the LoopTune reproduction.
+//!
+//! Subcommands:
+//!   peak                          measure empirical peak GFLOPS
+//!   dataset                       dataset statistics (2197 problems, split)
+//!   render    --mnk M,N,K         print the IR of the initial nest
+//!   train     --algo A --iters N  train a policy (saves .ltps params)
+//!   tune      --mnk M,N,K         tune one problem with a trained policy
+//!   search    --algo A --mnk ...  run one classical search
+//!   eval      <experiment>        regenerate a paper table/figure
+//!   artifacts                     check the AOT artifacts load
+//!
+//! Global flags: --config FILE (TOML subset, see config.rs), --out DIR,
+//! --params FILE, --seed N, --cost-model (use the analytical model instead
+//! of measured execution), --quick (scale budgets down ~10x).
+
+use anyhow::{anyhow, bail, Result};
+use looptune::backend::peak;
+use looptune::config::Config;
+use looptune::eval::{experiments, EvalCfg};
+use looptune::ir::{Nest, Problem};
+use looptune::rl::{self, params::ParamSet};
+use looptune::runtime::Runtime;
+use looptune::search::{Budget, SearchAlgo};
+use looptune::{dataset, FEATS, STATE_DIM};
+use std::rc::Rc;
+
+struct Args {
+    cmd: String,
+    pos: Vec<String>,
+    flags: std::collections::BTreeMap<String, String>,
+}
+
+fn parse_args() -> Args {
+    let mut it = std::env::args().skip(1);
+    let cmd = it.next().unwrap_or_else(|| "help".into());
+    let mut pos = Vec::new();
+    let mut flags = std::collections::BTreeMap::new();
+    while let Some(a) = it.next() {
+        if let Some(name) = a.strip_prefix("--") {
+            // boolean flags have no value; value flags consume the next arg
+            match name {
+                "quick" | "cost-model" | "measured" | "untrained" => {
+                    flags.insert(name.to_string(), "true".into());
+                }
+                _ => {
+                    let v = it.next().unwrap_or_default();
+                    flags.insert(name.to_string(), v);
+                }
+            }
+        } else {
+            pos.push(a);
+        }
+    }
+    Args { cmd, pos, flags }
+}
+
+fn parse_mnk(s: &str) -> Result<Problem> {
+    let parts: Vec<usize> = s
+        .split(',')
+        .map(|x| x.trim().parse::<usize>())
+        .collect::<std::result::Result<_, _>>()
+        .map_err(|e| anyhow!("bad --mnk {s:?}: {e}"))?;
+    if parts.len() != 3 {
+        bail!("--mnk expects M,N,K");
+    }
+    Ok(Problem::new(parts[0], parts[1], parts[2]))
+}
+
+fn main() -> Result<()> {
+    let args = parse_args();
+    let file_cfg = match args.flags.get("config") {
+        Some(p) => Config::from_file(p)?,
+        None if std::path::Path::new("looptune.toml").exists() => {
+            Config::from_file("looptune.toml")?
+        }
+        None => Config::default(),
+    };
+
+    let seed = args
+        .flags
+        .get("seed")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| file_cfg.i64_or("seed", 7) as u64);
+    let quick = args.flags.contains_key("quick");
+    let measured = !args.flags.contains_key("cost-model")
+        && file_cfg.bool_or("eval.measured", true);
+    let out_dir: std::path::PathBuf = args
+        .flags
+        .get("out")
+        .cloned()
+        .unwrap_or_else(|| file_cfg.str_or("eval.out_dir", "results").to_string())
+        .into();
+    let params_path = args
+        .flags
+        .get("params")
+        .cloned()
+        .or_else(|| {
+            file_cfg
+                .get("eval.params")
+                .and_then(|v| v.as_str().map(String::from))
+        })
+        .map(std::path::PathBuf::from)
+        .or_else(|| Some(out_dir.join("apex_dqn.ltps")));
+
+    let ecfg = EvalCfg {
+        out_dir: out_dir.clone(),
+        measured,
+        scale: if quick { 0.2 } else { 1.0 },
+        params_path,
+        seed,
+    };
+
+    match args.cmd.as_str() {
+        "peak" => {
+            let p = peak::measure_peak();
+            println!("empirical peak: {p:.2} GFLOPS (single core, f32 FMA)");
+        }
+        "dataset" => {
+            let ds = dataset::canonical();
+            println!(
+                "dataset: {} problems ({} train / {} test), dims {:?}",
+                ds.train.len() + ds.test.len(),
+                ds.train.len(),
+                ds.test.len(),
+                dataset::dims()
+            );
+            println!("state vector: {} loops x {} feats = {}", looptune::ir::MAX_LOOPS, FEATS, STATE_DIM);
+            for p in dataset::sample_test(&ds, 5, seed) {
+                println!("  sample test problem: {p}");
+            }
+        }
+        "render" => {
+            let p = parse_mnk(args.flags.get("mnk").map(String::as_str).unwrap_or("64,96,128"))?;
+            print!("{}", Nest::initial(p));
+        }
+        "artifacts" => {
+            let rt = Runtime::load_default()?;
+            println!("constants: {:?}", rt.constants);
+            for name in rt.entry_names() {
+                let e = rt.entry(name)?;
+                println!("  {name}: {} inputs, {} outputs ({})", e.inputs.len(), e.num_outputs, e.file);
+            }
+        }
+        "train" => {
+            let rt = Rc::new(Runtime::load_default()?);
+            let algo = args
+                .flags
+                .get("algo")
+                .cloned()
+                .unwrap_or_else(|| file_cfg.str_or("train.algo", "apex_dqn").into());
+            let iters = args
+                .flags
+                .get("iters")
+                .and_then(|s| s.parse().ok())
+                .unwrap_or(file_cfg.i64_or("train.iters", 200) as usize);
+            let out = args
+                .flags
+                .get("save")
+                .cloned()
+                .unwrap_or_else(|| format!("{}/{algo}.ltps", out_dir.display()));
+            let ds = dataset::canonical();
+            // Training rewards via the cost model (fast, deterministic).
+            let tcfg = EvalCfg { measured: false, ..ecfg.clone() };
+            let backend = tcfg.backend();
+            let pk = experiments::peak_for(&tcfg);
+            std::fs::create_dir_all(&out_dir)?;
+            println!("training {algo} for {iters} iterations (peak {pk:.1} GFLOPS)");
+            let on_iter = |it: &rl::IterStats| {
+                if it.iter % 5 == 0 {
+                    println!(
+                        "iter {:>4}  reward {:.4}  loss {:.5}  expl {:.3}  {:.1}s",
+                        it.iter, it.episode_reward_mean, it.loss, it.exploration, it.wall_secs
+                    );
+                }
+            };
+            // Optional seed selection: train --seeds K picks the best of
+            // K runs by validation speedup (train-split slice).
+            if let Some(k) = args.flags.get("seeds").and_then(|s| s.parse::<u64>().ok()) {
+                let (params, report) =
+                    experiments::train_selected(rt, &ecfg, iters, k.max(1))?;
+                params.save(&out)?;
+                std::fs::write(out_dir.join("seed_selection.md"), &report)?;
+                println!("{report}\nparams saved to {out}");
+                return Ok(());
+            }
+            let log = match algo.as_str() {
+                "apex_dqn" | "dqn" => {
+                    let mut c = if algo == "apex_dqn" {
+                        rl::dqn::DqnConfig::apex()
+                    } else {
+                        rl::dqn::DqnConfig::dqn()
+                    };
+                    c.seed = seed;
+                    c.lr = file_cfg.f64_or("train.lr", c.lr as f64) as f32;
+                    c.gamma = file_cfg.f64_or("train.gamma", c.gamma as f64) as f32;
+                    let mut t = rl::dqn::DqnTrainer::new(rt, c)?;
+                    let log = t.train(backend, &ds.train, pk, iters, on_iter)?;
+                    t.params.save(&out)?;
+                    log
+                }
+                "ppo" => {
+                    let mut c = rl::ppo::PpoConfig::default();
+                    c.seed = seed;
+                    let mut t = rl::ppo::PpoTrainer::new(rt, c)?;
+                    let log = t.train(backend, &ds.train, pk, iters, on_iter)?;
+                    t.params.save(&out)?;
+                    log
+                }
+                "a3c" | "a2c" | "impala" => {
+                    let mut c = if algo == "impala" {
+                        rl::a2c::A2cConfig::impala()
+                    } else {
+                        rl::a2c::A2cConfig::a2c()
+                    };
+                    c.seed = seed;
+                    let mut t = rl::a2c::A2cTrainer::new(rt, c)?;
+                    let log = t.train(backend, &ds.train, pk, iters, on_iter)?;
+                    t.params.save(&out)?;
+                    log
+                }
+                other => bail!("unknown algo {other}"),
+            };
+            std::fs::write(out_dir.join(format!("train_{algo}.csv")), log.to_csv())?;
+            println!(
+                "done: final reward (last 10 iters) {:.4}; params saved to {out}",
+                log.recent_reward(10)
+            );
+        }
+        "tune" => {
+            let rt = Runtime::load_default()?;
+            let p = parse_mnk(
+                args.flags.get("mnk").map(String::as_str).unwrap_or("128,128,128"),
+            )?;
+            let (params, trained) = if args.flags.contains_key("untrained") {
+                (ParamSet::init(&rt, "q_init", seed as i32)?, false)
+            } else {
+                experiments::load_policy(&rt, &ecfg)?
+            };
+            let be = ecfg.backend();
+            let out = rl::tune(&rt, &params, p, 10, &be)?;
+            println!(
+                "{p}: {:.2} -> {:.2} GFLOPS ({:.2}x) in {:.3}s ({} actions{}{})",
+                out.initial_gflops,
+                out.gflops,
+                out.speedup(),
+                out.infer_secs,
+                out.actions.len(),
+                if out.stopped_early { ", early stop" } else { "" },
+                if trained { "" } else { ", UNTRAINED policy" },
+            );
+            println!("actions: {}", out.actions.iter().map(|a| a.name()).collect::<Vec<_>>().join(" "));
+            print!("{}", out.nest);
+        }
+        "search" => {
+            let p = parse_mnk(
+                args.flags.get("mnk").map(String::as_str).unwrap_or("128,128,128"),
+            )?;
+            let budget = args
+                .flags
+                .get("budget")
+                .and_then(|s| s.parse().ok())
+                .unwrap_or(60.0);
+            let algos: Vec<SearchAlgo> = match args.flags.get("algo").map(String::as_str) {
+                Some("all") | None => SearchAlgo::ALL.to_vec(),
+                Some(name) => vec![SearchAlgo::from_name(name)
+                    .ok_or_else(|| anyhow!("unknown search {name}"))?],
+            };
+            for algo in algos {
+                let be = ecfg.backend();
+                let r = algo.run(p, be, Budget::seconds(budget), 10, seed);
+                println!(
+                    "{:<10} best {:.2} GFLOPS ({:.2}x) evals {} time {:.2}s",
+                    algo.name(),
+                    r.best_gflops,
+                    r.speedup(),
+                    r.evals,
+                    r.elapsed
+                );
+            }
+        }
+        "eval" => {
+            let exp = args.pos.first().map(String::as_str).unwrap_or("all");
+            let budget = args
+                .flags
+                .get("budget")
+                .and_then(|s| s.parse().ok())
+                .unwrap_or(if quick { 2.0 } else { 60.0 });
+            let iters = args
+                .flags
+                .get("iters")
+                .and_then(|s| s.parse().ok())
+                .unwrap_or(if quick { 10 } else { 150 });
+            let n = args
+                .flags
+                .get("n")
+                .and_then(|s| s.parse().ok())
+                .unwrap_or(60);
+            let run = |name: &str| -> Result<()> {
+                let md = match name {
+                    "table1" => {
+                        let rt = Runtime::load_default()?;
+                        experiments::table1(&rt, &ecfg)?
+                    }
+                    "fig7" => {
+                        let rt = Rc::new(Runtime::load_default()?);
+                        experiments::fig7(rt, &ecfg, iters)?
+                    }
+                    "fig8" => {
+                        let rt = Runtime::load_default()?;
+                        experiments::fig8(&rt, &ecfg, budget)?
+                    }
+                    "fig9" => {
+                        let rt = Runtime::load_default()?;
+                        experiments::fig9(&rt, &ecfg, budget, n)?
+                    }
+                    "fig10" => {
+                        let p = parse_mnk(
+                            args.flags
+                                .get("mnk")
+                                .map(String::as_str)
+                                .unwrap_or("192,192,192"),
+                        )?;
+                        experiments::fig10(&ecfg, p, budget)?
+                    }
+                    "fig11" => {
+                        let rt = Runtime::load_default()?;
+                        experiments::fig11(&rt, &ecfg, n)?
+                    }
+                    "headline" => {
+                        let rt = Runtime::load_default()?;
+                        experiments::headline(&rt, &ecfg, budget, 25)?
+                    }
+                    "ablation" => {
+                        let rt = Rc::new(Runtime::load_default()?);
+                        experiments::ablation(rt, &ecfg, iters)?
+                    }
+                    other => bail!("unknown experiment {other}"),
+                };
+                println!("{md}");
+                Ok(())
+            };
+            if exp == "all" {
+                for e in
+                    ["table1", "fig7", "fig8", "fig9", "fig10", "fig11", "headline", "ablation"]
+                {
+                    println!("==== {e} ====");
+                    run(e)?;
+                }
+            } else {
+                run(exp)?;
+            }
+        }
+        "help" | _ => {
+            println!(
+                "looptune — RL loop-schedule auto-tuner (LoopTune reproduction)\n\n\
+                 usage: looptune <cmd> [flags]\n\
+                 cmds:  peak | dataset | render | artifacts | train | tune | search | eval\n\
+                 flags: --mnk M,N,K --algo NAME --iters N --budget SECS --out DIR\n       \
+                 --params FILE --config FILE --seed N --quick --cost-model --untrained"
+            );
+        }
+    }
+    Ok(())
+}

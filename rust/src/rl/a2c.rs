@@ -1,0 +1,334 @@
+//! A2C and IMPALA trainers.
+//!
+//! A2C is the synchronous form of A3C (identical gradient estimator; the
+//! async worker parallelism of A3C is meaningless on one core). IMPALA
+//! reuses the same compiled `a2c_train_step` but collects rollouts under a
+//! **stale behavior policy** (synced every `behavior_sync` iterations) and
+//! corrects the targets with V-trace (Espeholt et al. 2018), computed by
+//! the coordinator from current-policy log-probs and values.
+
+use super::params::ParamSet;
+use super::ppo::{pv_with_lits, RolloutStep};
+use super::{IterStats, TrainLog};
+use crate::backend::SharedBackend;
+use crate::env::actions::Action;
+use crate::env::Env;
+use crate::ir::Problem;
+use crate::runtime::literal::{lit_f32, lit_f32_scalar, lit_i32, scalar_f32, HostTensor};
+use crate::runtime::Runtime;
+use crate::util::rng::Pcg32;
+use crate::STATE_DIM;
+use anyhow::Result;
+use std::rc::Rc;
+use std::time::Instant;
+
+#[derive(Clone, Debug)]
+pub struct A2cConfig {
+    pub gamma: f32,
+    pub lr: f32,
+    pub ent_coef: f32,
+    pub episode_len: usize,
+    pub episodes_per_iter: usize,
+    /// IMPALA mode: V-trace correction + stale behavior policy.
+    pub vtrace: bool,
+    /// Iterations between behavior-policy syncs (IMPALA actor lag).
+    pub behavior_sync: usize,
+    /// V-trace clipping (rho_bar = c_bar = 1.0 per the paper).
+    pub rho_clip: f32,
+    pub seed: u64,
+}
+
+impl A2cConfig {
+    pub fn a2c() -> Self {
+        A2cConfig {
+            gamma: 0.9,
+            lr: 3e-4,
+            ent_coef: 0.01,
+            episode_len: 10,
+            episodes_per_iter: 6,
+            vtrace: false,
+            behavior_sync: 1,
+            rho_clip: 1.0,
+            seed: 1,
+        }
+    }
+
+    pub fn impala() -> Self {
+        A2cConfig { vtrace: true, behavior_sync: 4, ..Self::a2c() }
+    }
+}
+
+/// V-trace targets for one episode: returns (advantages, value targets).
+///
+/// `rhos[t] = min(rho_clip, pi(a_t|s_t) / mu(a_t|s_t))`; terminal bootstrap
+/// is zero (episodes are fixed-length and rewards are deltas).
+pub fn vtrace(
+    rewards: &[f32],
+    values: &[f32],
+    rhos: &[f32],
+    gamma: f32,
+    rho_clip: f32,
+) -> (Vec<f32>, Vec<f32>) {
+    let n = rewards.len();
+    assert_eq!(values.len(), n);
+    assert_eq!(rhos.len(), n);
+    let clip = |r: f32| r.min(rho_clip);
+    // vs_t = V_t + sum_{k>=t} gamma^{k-t} (prod_{j<k} c_j) rho_k delta_k
+    // computed with the standard backward recursion.
+    let mut vs = vec![0.0f32; n];
+    let mut next_vs = 0.0f32; // bootstrap V(s_T) = 0
+    let mut next_v = 0.0f32;
+    for t in (0..n).rev() {
+        let rho = clip(rhos[t]);
+        let c = clip(rhos[t]); // c_bar == rho_bar
+        let delta = rho * (rewards[t] + gamma * next_v - values[t]);
+        vs[t] = values[t] + delta + gamma * c * (next_vs - next_v);
+        next_vs = vs[t];
+        next_v = values[t];
+    }
+    // Advantage: rho_t (r_t + gamma vs_{t+1} - V_t)
+    let mut adv = vec![0.0f32; n];
+    for t in 0..n {
+        let next = if t + 1 < n { vs[t + 1] } else { 0.0 };
+        adv[t] = clip(rhos[t]) * (rewards[t] + gamma * next - values[t]);
+    }
+    (adv, vs)
+}
+
+pub struct A2cTrainer {
+    rt: Rc<Runtime>,
+    pub cfg: A2cConfig,
+    pub params: ParamSet,
+    adam_step: f32,
+    rng: Pcg32,
+    // SPerf: params/optimizer state cached as Literals between PJRT calls;
+    // `behavior_lits` is the stale actor copy (IMPALA) and equals the
+    // online params in plain A2C.
+    params_lits: Vec<xla::Literal>,
+    behavior_lits: Vec<xla::Literal>,
+    m_lits: Vec<xla::Literal>,
+    v_lits: Vec<xla::Literal>,
+}
+
+impl A2cTrainer {
+    pub fn new(rt: Rc<Runtime>, cfg: A2cConfig) -> Result<Self> {
+        let params = ParamSet::init(&rt, "pv_init", cfg.seed as i32)?;
+        let params_lits = params.to_literals()?;
+        let behavior_lits = params.to_literals()?;
+        let m_lits = params.zeros_like().to_literals()?;
+        let v_lits = params.zeros_like().to_literals()?;
+        let rng = Pcg32::new(cfg.seed ^ 0xa2c_000);
+        Ok(A2cTrainer {
+            rt, cfg, params, adam_step: 0.0, rng,
+            params_lits, behavior_lits, m_lits, v_lits,
+        })
+    }
+
+    fn collect_episode(&mut self, env: &mut Env) -> Result<(Vec<RolloutStep>, f32)> {
+        let mut steps = Vec::with_capacity(self.cfg.episode_len);
+        let mut state = env.state();
+        let mut total = 0.0f32;
+        for _ in 0..self.cfg.episode_len {
+            let (logits, value) = pv_with_lits(&self.rt, &self.behavior_lits, &state)?;
+            let a = super::sample_categorical(&logits, &mut self.rng);
+            let logp = super::log_softmax(&logits)[a];
+            let st = env.step(Action::from_index(a));
+            total += st.reward;
+            steps.push(RolloutStep {
+                state: std::mem::take(&mut state),
+                action: a,
+                reward: st.reward,
+                logp, // behavior-policy logp (mu)
+                value, // behavior value; replaced for V-trace below
+            });
+            state = st.state;
+        }
+        Ok((steps, total))
+    }
+
+    fn update_batch(
+        &mut self,
+        steps: &[RolloutStep],
+        adv: &[f32],
+        ret: &[f32],
+        batch_idx: &[usize],
+    ) -> Result<(f32, f32)> {
+        let b = self.rt.constants.batch;
+        assert_eq!(batch_idx.len(), b);
+        let mut s = Vec::with_capacity(b * STATE_DIM);
+        let mut a = Vec::with_capacity(b);
+        let mut ad = Vec::with_capacity(b);
+        let mut rt_ = Vec::with_capacity(b);
+        for &i in batch_idx {
+            s.extend_from_slice(&steps[i].state);
+            a.push(steps[i].action as i32);
+            ad.push(adv[i]);
+            rt_.push(ret[i]);
+        }
+        let tail = [
+            lit_f32_scalar(self.adam_step)?,
+            lit_f32(&s, &[b, STATE_DIM])?,
+            lit_i32(&a, &[b])?,
+            lit_f32(&ad, &[b])?,
+            lit_f32(&rt_, &[b])?,
+            lit_f32_scalar(self.cfg.lr)?,
+            lit_f32_scalar(self.cfg.ent_coef)?,
+        ];
+        let mut args: Vec<&xla::Literal> = Vec::with_capacity(31);
+        args.extend(self.params_lits.iter());
+        args.extend(self.m_lits.iter());
+        args.extend(self.v_lits.iter());
+        args.extend(tail.iter());
+
+        let mut outs = self.rt.exec("a2c_train_step", &args)?;
+        self.adam_step = scalar_f32(&outs[24])?;
+        let loss = scalar_f32(&outs[25])?;
+        let ent = scalar_f32(&outs[26])?;
+        let mut it = outs.drain(0..24);
+        for i in 0..8 {
+            self.params_lits[i] = it.next().unwrap();
+            self.params.tensors[i] = HostTensor::from_literal(&self.params_lits[i])?;
+        }
+        for i in 0..8 {
+            self.m_lits[i] = it.next().unwrap();
+        }
+        for i in 0..8 {
+            self.v_lits[i] = it.next().unwrap();
+        }
+        drop(it);
+        Ok((loss, ent))
+    }
+
+    pub fn train(
+        &mut self,
+        backend: SharedBackend,
+        problems: &[Problem],
+        peak: f64,
+        iters: usize,
+        mut on_iter: impl FnMut(&IterStats),
+    ) -> Result<TrainLog> {
+        let algo = if self.cfg.vtrace { "impala" } else { "a3c" };
+        let mut log = TrainLog { algo: algo.into(), iters: Vec::new() };
+        let mut env = Env::new(problems[0], backend, peak);
+        let t0 = Instant::now();
+        let mut env_steps = 0u64;
+        let b = self.rt.constants.batch;
+
+        for iter in 0..iters {
+            if !self.cfg.vtrace || iter % self.cfg.behavior_sync == 0 {
+                self.behavior_lits = self.params.to_literals()?;
+            }
+            let mut steps: Vec<RolloutStep> = Vec::new();
+            let mut adv: Vec<f32> = Vec::new();
+            let mut ret: Vec<f32> = Vec::new();
+            let mut rewards = Vec::new();
+
+            for _ in 0..self.cfg.episodes_per_iter {
+                let p = *self.rng.choose(problems);
+                env.reset(p);
+                let (ep, total) = self.collect_episode(&mut env)?;
+                env_steps += ep.len() as u64;
+                rewards.push(total as f64);
+
+                if self.cfg.vtrace {
+                    // Recompute values + current-policy logps; V-trace.
+                    let mut values = Vec::with_capacity(ep.len());
+                    let mut rhos = Vec::with_capacity(ep.len());
+                    for st in &ep {
+                        let (logits, value) =
+                            pv_with_lits(&self.rt, &self.params_lits, &st.state)?;
+                        let logp_cur = super::log_softmax(&logits)[st.action];
+                        rhos.push((logp_cur - st.logp).exp());
+                        values.push(value);
+                    }
+                    let rs: Vec<f32> = ep.iter().map(|s| s.reward).collect();
+                    let (ea, evs) =
+                        vtrace(&rs, &values, &rhos, self.cfg.gamma, self.cfg.rho_clip);
+                    adv.extend(ea);
+                    ret.extend(evs);
+                } else {
+                    // Plain A2C: discounted returns, adv = ret - V.
+                    let mut g = 0.0f32;
+                    let mut er: Vec<f32> = vec![0.0; ep.len()];
+                    for t in (0..ep.len()).rev() {
+                        g = ep[t].reward + self.cfg.gamma * g;
+                        er[t] = g;
+                    }
+                    for (t, st) in ep.iter().enumerate() {
+                        adv.push(er[t] - st.value);
+                    }
+                    ret.extend(er);
+                }
+                steps.extend(ep);
+            }
+            super::ppo::normalize(&mut adv);
+
+            // One pass over the rollout in batches of `b`.
+            let mut idx: Vec<usize> = (0..steps.len()).collect();
+            self.rng.shuffle(&mut idx);
+            let (mut loss_s, mut ent_s, mut nb) = (0.0f64, 0.0f64, 0usize);
+            for chunk in idx.chunks(b) {
+                let mut batch: Vec<usize> = chunk.to_vec();
+                while batch.len() < b {
+                    batch.push(idx[self.rng.below(idx.len())]);
+                }
+                let (l, e) = self.update_batch(&steps, &adv, &ret, &batch)?;
+                loss_s += l as f64;
+                ent_s += e as f64;
+                nb += 1;
+            }
+
+            let stats = IterStats {
+                iter,
+                episode_reward_mean: crate::util::stats::mean(&rewards),
+                loss: loss_s / nb.max(1) as f64,
+                exploration: ent_s / nb.max(1) as f64,
+                env_steps,
+                wall_secs: t0.elapsed().as_secs_f64(),
+            };
+            on_iter(&stats);
+            log.iters.push(stats);
+        }
+        Ok(log)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vtrace_on_policy_reduces_to_td_targets() {
+        // rho = 1 everywhere: vs_t = V_t + sum gamma^k delta_k, which for
+        // gamma terms telescopes to the discounted-reward targets.
+        let rewards = [1.0f32, 1.0, 1.0];
+        let values = [0.0f32, 0.0, 0.0];
+        let rhos = [1.0f32, 1.0, 1.0];
+        let (adv, vs) = vtrace(&rewards, &values, &rhos, 1.0, 1.0);
+        // With V = 0 and gamma = 1: vs_t = total future reward.
+        assert_eq!(vs, vec![3.0, 2.0, 1.0]);
+        assert_eq!(adv, vec![3.0, 2.0, 1.0]);
+    }
+
+    #[test]
+    fn vtrace_clips_large_ratios() {
+        let rewards = [1.0f32, 1.0];
+        let values = [0.5f32, 0.5];
+        let huge = [10.0f32, 10.0]; // wildly off-policy
+        let one = [1.0f32, 1.0];
+        let (a_h, _) = vtrace(&rewards, &values, &huge, 0.9, 1.0);
+        let (a_1, _) = vtrace(&rewards, &values, &one, 0.9, 1.0);
+        // Clipped at rho_bar=1: identical to the on-policy result.
+        assert_eq!(a_h, a_1);
+    }
+
+    #[test]
+    fn vtrace_zero_rho_trusts_value_function() {
+        let rewards = [5.0f32];
+        let values = [2.0f32];
+        let rhos = [0.0f32];
+        let (adv, vs) = vtrace(&rewards, &values, &rhos, 0.9, 1.0);
+        assert_eq!(adv, vec![0.0]); // no correction possible
+        assert_eq!(vs, vec![2.0]); // falls back to V
+    }
+}

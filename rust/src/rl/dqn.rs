@@ -1,0 +1,340 @@
+//! DQN and APEX_DQN trainers.
+//!
+//! Both drive the AOT-compiled `dqn_train_step` (double-DQN + Huber + Adam,
+//! lowered from JAX/Pallas). The difference is exactly the paper's:
+//!
+//! - **DQN**: one actor, uniform replay.
+//! - **APEX_DQN**: several (logical) actors with per-actor exploration
+//!   rates feeding one *prioritized* replay buffer; the learner samples by
+//!   priority and writes |TD| back after every step (Horgan et al. 2018).
+//!   On this 1-core testbed the actors interleave round-robin — the data
+//!   distribution matches the distributed original, only the wall-clock
+//!   parallelism is serialized.
+
+use super::params::ParamSet;
+use super::replay::{PrioritizedReplay, Transition, UniformReplay};
+use super::{IterStats, TrainLog};
+use crate::backend::SharedBackend;
+use crate::env::actions::Action;
+use crate::env::Env;
+use crate::ir::Problem;
+use crate::runtime::literal::{lit_f32, lit_f32_scalar, lit_i32, scalar_f32, HostTensor};
+use crate::runtime::Runtime;
+use crate::util::rng::Pcg32;
+use crate::{NUM_ACTIONS, STATE_DIM};
+use anyhow::Result;
+use std::rc::Rc;
+use std::time::Instant;
+
+#[derive(Clone, Debug)]
+pub struct DqnConfig {
+    pub gamma: f32,
+    pub lr: f32,
+    pub eps_start: f64,
+    pub eps_end: f64,
+    /// Iterations over which epsilon anneals linearly.
+    pub eps_decay_iters: usize,
+    /// Learner steps between target-network syncs.
+    pub target_sync: usize,
+    pub replay_cap: usize,
+    /// Minimum buffered transitions before learning starts.
+    pub learn_start: usize,
+    /// Episode length (paper: 10 actions per episode).
+    pub episode_len: usize,
+    /// Episodes collected per iteration (across all actors).
+    pub episodes_per_iter: usize,
+    /// Learner batches per iteration.
+    pub learner_steps: usize,
+    /// APEX: prioritized replay + multiple actors.
+    pub prioritized: bool,
+    pub n_actors: usize,
+    pub alpha: f64,
+    pub beta: f64,
+    pub seed: u64,
+    /// Feature-group mask for ablation studies (default: all features).
+    pub feature_mask: crate::featurize::FeatureMask,
+}
+
+impl DqnConfig {
+    pub fn dqn() -> Self {
+        DqnConfig {
+            gamma: 0.9,
+            lr: 5e-4,
+            eps_start: 1.0,
+            eps_end: 0.05,
+            eps_decay_iters: 120,
+            target_sync: 40,
+            replay_cap: 20_000,
+            learn_start: 128,
+            episode_len: 10,
+            episodes_per_iter: 4,
+            learner_steps: 2,
+            prioritized: false,
+            n_actors: 1,
+            alpha: 0.6,
+            beta: 0.4,
+            seed: 1,
+            feature_mask: crate::featurize::FeatureMask::default(),
+        }
+    }
+
+    pub fn apex() -> Self {
+        DqnConfig {
+            prioritized: true,
+            n_actors: 4,
+            learner_steps: 8,
+            ..Self::dqn()
+        }
+    }
+}
+
+/// Replay storage behind one interface.
+enum Replay {
+    Uniform(UniformReplay),
+    Prioritized(PrioritizedReplay),
+}
+
+pub struct DqnTrainer {
+    rt: Rc<Runtime>,
+    pub cfg: DqnConfig,
+    /// Host copy of the online params (kept in sync for save()/inspection).
+    pub params: ParamSet,
+    adam_step: f32,
+    replay: Replay,
+    rng: Pcg32,
+    learner_steps_done: usize,
+    // §Perf: the network/optimizer state lives as cached Literals between
+    // PJRT calls; only the batch arrays are marshalled per learner step,
+    // and nothing is marshalled per actor step (EXPERIMENTS.md §Perf).
+    params_lits: Vec<xla::Literal>,
+    target_lits: Vec<xla::Literal>,
+    m_lits: Vec<xla::Literal>,
+    v_lits: Vec<xla::Literal>,
+}
+
+impl DqnTrainer {
+    pub fn new(rt: Rc<Runtime>, cfg: DqnConfig) -> Result<Self> {
+        let params = ParamSet::init(&rt, "q_init", cfg.seed as i32)?;
+        let params_lits = params.to_literals()?;
+        let target_lits = params.to_literals()?;
+        let m_lits = params.zeros_like().to_literals()?;
+        let v_lits = params.zeros_like().to_literals()?;
+        let replay = if cfg.prioritized {
+            Replay::Prioritized(PrioritizedReplay::new(cfg.replay_cap, cfg.alpha))
+        } else {
+            Replay::Uniform(UniformReplay::new(cfg.replay_cap))
+        };
+        let rng = Pcg32::new(cfg.seed ^ 0xd9_0000);
+        Ok(DqnTrainer {
+            rt,
+            cfg,
+            params,
+            adam_step: 0.0,
+            replay,
+            rng,
+            learner_steps_done: 0,
+            params_lits,
+            target_lits,
+            m_lits,
+            v_lits,
+        })
+    }
+
+    /// Q(s, ·) through the compiled network (batch-1 artifact), using the
+    /// cached param Literals (no per-step marshalling).
+    pub fn q_values(&self, state: &[f32]) -> Result<Vec<f32>> {
+        let state_lit = lit_f32(state, &[1, STATE_DIM])?;
+        let mut args: Vec<&xla::Literal> = self.params_lits.iter().collect();
+        args.push(&state_lit);
+        let outs = self.rt.exec("q_forward_b1", &args)?;
+        Ok(outs[0].to_vec()?)
+    }
+
+    fn replay_len(&self) -> usize {
+        match &self.replay {
+            Replay::Uniform(b) => b.len(),
+            Replay::Prioritized(b) => b.len(),
+        }
+    }
+
+    /// Epsilon for global iteration `iter` and actor `actor`.
+    fn epsilon(&self, iter: usize, actor: usize) -> f64 {
+        let t = (iter as f64 / self.cfg.eps_decay_iters as f64).min(1.0);
+        let base = self.cfg.eps_start + t * (self.cfg.eps_end - self.cfg.eps_start);
+        if self.cfg.n_actors <= 1 {
+            base
+        } else {
+            // APEX-style per-actor exploration spread: actor 0 greediest.
+            let f = (actor as f64 + 1.0) / self.cfg.n_actors as f64;
+            (base * (0.5 + f)).min(1.0)
+        }
+    }
+
+    /// Run one ε-greedy episode on `env`; returns total reward.
+    fn run_episode(&mut self, env: &mut Env, eps: f64) -> Result<f32> {
+        let mut state = env.state();
+        let mut total = 0.0f32;
+        for _ in 0..self.cfg.episode_len {
+            let a_idx = if self.rng.next_f64() < eps {
+                self.rng.below(NUM_ACTIONS)
+            } else {
+                super::argmax(&self.q_values(&state)?)
+            };
+            let step = env.step(Action::from_index(a_idx));
+            total += step.reward;
+            let done = env.steps >= self.cfg.episode_len;
+            let t = Transition {
+                state: std::mem::take(&mut state),
+                action: a_idx,
+                reward: step.reward,
+                next_state: step.state.clone(),
+                done,
+            };
+            match &mut self.replay {
+                Replay::Uniform(b) => b.push(t),
+                Replay::Prioritized(b) => b.push(t),
+            }
+            state = step.state;
+        }
+        Ok(total)
+    }
+
+    /// One learner batch through the compiled `dqn_train_step`.
+    /// Returns the loss.
+    pub fn learn(&mut self) -> Result<f32> {
+        let batch = self.rt.constants.batch;
+        // Sample.
+        let (idx, items, weights): (Vec<usize>, Vec<&Transition>, Vec<f32>) =
+            match &self.replay {
+                Replay::Uniform(b) => {
+                    let (i, it) = b.sample(batch, &mut self.rng);
+                    (i, it, vec![1.0; batch])
+                }
+                Replay::Prioritized(b) => {
+                    b.sample(batch, self.cfg.beta, &mut self.rng)
+                }
+            };
+
+        // Flatten the batch.
+        let mut s = Vec::with_capacity(batch * STATE_DIM);
+        let mut s2 = Vec::with_capacity(batch * STATE_DIM);
+        let mut a = Vec::with_capacity(batch);
+        let mut r = Vec::with_capacity(batch);
+        let mut d = Vec::with_capacity(batch);
+        for t in &items {
+            s.extend_from_slice(&t.state);
+            s2.extend_from_slice(&t.next_state);
+            a.push(t.action as i32);
+            r.push(t.reward);
+            d.push(if t.done { 1.0f32 } else { 0.0 });
+        }
+
+        // Assemble the 33 inputs in manifest order. Param/optimizer state
+        // comes from the literal caches; only the batch is marshalled.
+        let scalars = [
+            lit_f32_scalar(self.adam_step)?,
+            lit_f32(&s, &[batch, STATE_DIM])?,
+            lit_i32(&a, &[batch])?,
+            lit_f32(&r, &[batch])?,
+            lit_f32(&s2, &[batch, STATE_DIM])?,
+            lit_f32(&d, &[batch])?,
+            lit_f32(&weights, &[batch])?,
+            lit_f32_scalar(self.cfg.lr)?,
+            lit_f32_scalar(self.cfg.gamma)?,
+        ];
+        let mut args: Vec<&xla::Literal> = Vec::with_capacity(33);
+        args.extend(self.params_lits.iter());
+        args.extend(self.target_lits.iter());
+        args.extend(self.m_lits.iter());
+        args.extend(self.v_lits.iter());
+        args.extend(scalars.iter());
+
+        let mut outs = self.rt.exec("dqn_train_step", &args)?;
+        // 6 params, 6 m, 6 v, step, td_abs, loss
+        self.adam_step = scalar_f32(&outs[18])?;
+        let td_abs: Vec<f32> = outs[19].to_vec()?;
+        let loss = scalar_f32(&outs[20])?;
+        // New state: keep the output Literals directly as the caches.
+        let mut it = outs.drain(0..18);
+        for i in 0..6 {
+            self.params_lits[i] = it.next().unwrap();
+            self.params.tensors[i] = HostTensor::from_literal(&self.params_lits[i])?;
+        }
+        for i in 0..6 {
+            self.m_lits[i] = it.next().unwrap();
+        }
+        for i in 0..6 {
+            self.v_lits[i] = it.next().unwrap();
+        }
+        drop(it);
+
+        if let Replay::Prioritized(b) = &mut self.replay {
+            b.update_priorities(&idx, &td_abs);
+        }
+
+        self.learner_steps_done += 1;
+        if self.learner_steps_done % self.cfg.target_sync == 0 {
+            self.target_lits = self.params.to_literals()?;
+        }
+        Ok(loss)
+    }
+
+    /// Full training loop: `iters` iterations over random problems from
+    /// `problems`, scored by `backend`, rewards normalized by `peak`.
+    pub fn train(
+        &mut self,
+        backend: SharedBackend,
+        problems: &[Problem],
+        peak: f64,
+        iters: usize,
+        mut on_iter: impl FnMut(&IterStats),
+    ) -> Result<TrainLog> {
+        assert!(!problems.is_empty());
+        let algo = if self.cfg.prioritized { "apex_dqn" } else { "dqn" };
+        let mut log = TrainLog { algo: algo.into(), iters: Vec::new() };
+        let mut env = Env::new(problems[0], backend, peak);
+        env.mask = self.cfg.feature_mask;
+        let t0 = Instant::now();
+        let mut env_steps = 0u64;
+
+        for iter in 0..iters {
+            let mut rewards = Vec::new();
+            for ep in 0..self.cfg.episodes_per_iter {
+                let actor = ep % self.cfg.n_actors;
+                let eps = self.epsilon(iter, actor);
+                let p = *self.rng.choose(problems);
+                env.reset(p);
+                rewards.push(self.run_episode(&mut env, eps)? as f64);
+                env_steps += self.cfg.episode_len as u64;
+            }
+            let mut loss_sum = 0.0;
+            let mut loss_n = 0;
+            if self.replay_len() >= self.cfg.learn_start {
+                for _ in 0..self.cfg.learner_steps {
+                    loss_sum += self.learn()? as f64;
+                    loss_n += 1;
+                }
+            }
+            let stats = IterStats {
+                iter,
+                episode_reward_mean: crate::util::stats::mean(&rewards),
+                loss: if loss_n > 0 { loss_sum / loss_n as f64 } else { 0.0 },
+                exploration: self.epsilon(iter, 0),
+                env_steps,
+                wall_secs: t0.elapsed().as_secs_f64(),
+            };
+            on_iter(&stats);
+            log.iters.push(stats);
+        }
+        Ok(log)
+    }
+}
+
+/// Q-values through the batch-1 compiled forward for an arbitrary ParamSet
+/// (used by [`super::tune`] at inference time).
+pub fn q_values_with(rt: &Runtime, params: &ParamSet, state: &[f32]) -> Result<Vec<f32>> {
+    let mut args = params.to_literals()?;
+    args.push(lit_f32(state, &[1, STATE_DIM])?);
+    let outs = rt.exec("q_forward_b1", &args)?;
+    Ok(outs[0].to_vec()?)
+}

@@ -1,0 +1,219 @@
+//! Reinforcement-learning trainers (the RLlib analogue, paper §III-D).
+//!
+//! Five algorithms, as in the paper's Fig. 7 comparison: DQN, APEX_DQN
+//! (multi-actor + prioritized replay), PPO, A2C (the synchronous A3C
+//! used here — gradient math identical, actor parallelism is logical on
+//! this 1-core testbed), and IMPALA (A2C step + V-trace off-policy
+//! correction computed by the coordinator).
+//!
+//! The neural networks and their optimizer updates are **not** implemented
+//! in Rust: they were AOT-lowered from JAX/Pallas by `make artifacts` and
+//! execute through [`crate::runtime::Runtime`]. Rust owns the MDP loop,
+//! replay, exploration, V-trace/GAE, and all orchestration.
+
+pub mod a2c;
+pub mod dqn;
+pub mod params;
+pub mod ppo;
+pub mod replay;
+pub mod tune;
+
+use crate::runtime::literal::HostTensor;
+
+pub use params::ParamSet;
+pub use tune::{tune, TuneOutcome};
+
+/// Per-training-iteration statistics (Fig. 7 plots `episode_reward_mean`).
+#[derive(Clone, Debug)]
+pub struct IterStats {
+    pub iter: usize,
+    /// Mean sum-of-rewards per episode in this iteration (normalized GFLOPS
+    /// gain, the paper's `episode_reward_mean`).
+    pub episode_reward_mean: f64,
+    pub loss: f64,
+    /// Exploration epsilon (DQN family) or policy entropy (PG family).
+    pub exploration: f64,
+    pub env_steps: u64,
+    pub wall_secs: f64,
+}
+
+/// Full training history.
+#[derive(Clone, Debug, Default)]
+pub struct TrainLog {
+    pub algo: String,
+    pub iters: Vec<IterStats>,
+}
+
+impl TrainLog {
+    pub fn to_csv(&self) -> String {
+        let mut s =
+            String::from("iter,episode_reward_mean,loss,exploration,env_steps,wall_secs\n");
+        for it in &self.iters {
+            s.push_str(&format!(
+                "{},{:.6},{:.6},{:.4},{},{:.3}\n",
+                it.iter,
+                it.episode_reward_mean,
+                it.loss,
+                it.exploration,
+                it.env_steps,
+                it.wall_secs
+            ));
+        }
+        s
+    }
+
+    /// Mean episode reward over the last `n` iterations.
+    pub fn recent_reward(&self, n: usize) -> f64 {
+        let tail: Vec<f64> = self
+            .iters
+            .iter()
+            .rev()
+            .take(n)
+            .map(|i| i.episode_reward_mean)
+            .collect();
+        crate::util::stats::mean(&tail)
+    }
+}
+
+/// Pure-Rust reference of the compiled 3-layer Q-network (ReLU MLP).
+/// Used by integration tests to validate the AOT path and by unit tests
+/// that need a network without artifacts.
+pub fn mlp3_forward(params: &[HostTensor], x: &[f32]) -> Vec<f32> {
+    assert_eq!(params.len(), 6);
+    let h1 = dense(&params[0], &params[1], x, true);
+    let h2 = dense(&params[2], &params[3], &h1, true);
+    dense(&params[4], &params[5], &h2, false)
+}
+
+/// Pure-Rust reference of the compiled policy/value network.
+/// Returns (logits, value).
+pub fn pv_forward(params: &[HostTensor], x: &[f32]) -> (Vec<f32>, f32) {
+    assert_eq!(params.len(), 8);
+    let h1 = dense(&params[0], &params[1], x, true);
+    let h2 = dense(&params[2], &params[3], &h1, true);
+    let logits = dense(&params[4], &params[5], &h2, false);
+    let value = dense(&params[6], &params[7], &h2, false)[0];
+    (logits, value)
+}
+
+fn dense(w: &HostTensor, b: &HostTensor, x: &[f32], relu: bool) -> Vec<f32> {
+    let (k, n) = (w.shape[0], w.shape[1]);
+    assert_eq!(x.len(), k, "dense input dim");
+    let mut y = b.data.clone();
+    for (i, &xv) in x.iter().enumerate() {
+        if xv == 0.0 {
+            continue;
+        }
+        let row = &w.data[i * n..(i + 1) * n];
+        for (j, &wv) in row.iter().enumerate() {
+            y[j] += xv * wv;
+        }
+    }
+    if relu {
+        for v in &mut y {
+            *v = v.max(0.0);
+        }
+    }
+    y
+}
+
+/// Softmax sampling helpers for the policy-gradient agents.
+pub fn log_softmax(logits: &[f32]) -> Vec<f32> {
+    let mx = logits.iter().cloned().fold(f32::MIN, f32::max);
+    let lse = logits.iter().map(|&l| (l - mx).exp()).sum::<f32>().ln() + mx;
+    logits.iter().map(|&l| l - lse).collect()
+}
+
+pub fn sample_categorical(logits: &[f32], rng: &mut crate::util::rng::Pcg32) -> usize {
+    let lp = log_softmax(logits);
+    let r = rng.next_f64();
+    let mut acc = 0.0f64;
+    for (i, &l) in lp.iter().enumerate() {
+        acc += (l as f64).exp();
+        if r < acc {
+            return i;
+        }
+    }
+    lp.len() - 1
+}
+
+pub fn argmax(xs: &[f32]) -> usize {
+    xs.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn tiny_params() -> Vec<HostTensor> {
+        // 2 -> 3 -> 3 -> 2 MLP with hand-set weights.
+        vec![
+            HostTensor::new(vec![2, 3], vec![1.0, 0.0, -1.0, 0.0, 1.0, 1.0]),
+            HostTensor::new(vec![3], vec![0.0, 0.5, 0.0]),
+            HostTensor::new(
+                vec![3, 3],
+                vec![1.0, 0.0, 0.0, 0.0, 1.0, 0.0, 0.0, 0.0, 1.0],
+            ),
+            HostTensor::new(vec![3], vec![0.0, 0.0, 0.0]),
+            HostTensor::new(vec![3, 2], vec![1.0, -1.0, 1.0, 1.0, 0.0, 2.0]),
+            HostTensor::new(vec![2], vec![0.1, -0.1]),
+        ]
+    }
+
+    #[test]
+    fn mlp3_forward_hand_computed() {
+        let p = tiny_params();
+        // x = [1, 2]: h1 = relu([1*1+0, 0+2+0.5, -1+2]) = [1, 2.5, 1]
+        // h2 = relu(h1 @ I) = [1, 2.5, 1]
+        // out = [1*1 + 2.5*1 + 0 + 0.1, -1 + 2.5 + 2 - 0.1] = [3.6, 3.4]
+        let y = mlp3_forward(&p, &[1.0, 2.0]);
+        assert!((y[0] - 3.6).abs() < 1e-6, "{y:?}");
+        assert!((y[1] - 3.4).abs() < 1e-6, "{y:?}");
+    }
+
+    #[test]
+    fn log_softmax_normalizes() {
+        let lp = log_softmax(&[1.0, 2.0, 3.0]);
+        let total: f32 = lp.iter().map(|&l| l.exp()).sum();
+        assert!((total - 1.0).abs() < 1e-5);
+        assert!(lp[2] > lp[1] && lp[1] > lp[0]);
+    }
+
+    #[test]
+    fn categorical_sampling_follows_distribution() {
+        let mut rng = Pcg32::new(9);
+        let logits = [0.0f32, 3.0, 0.0];
+        let hits = (0..1000)
+            .filter(|_| sample_categorical(&logits, &mut rng) == 1)
+            .count();
+        assert!(hits > 800, "hits {hits}");
+    }
+
+    #[test]
+    fn argmax_basics() {
+        assert_eq!(argmax(&[0.1, 0.9, 0.5]), 1);
+        assert_eq!(argmax(&[2.0]), 0);
+    }
+
+    #[test]
+    fn train_log_csv() {
+        let mut log = TrainLog { algo: "dqn".into(), iters: vec![] };
+        log.iters.push(IterStats {
+            iter: 0,
+            episode_reward_mean: 0.25,
+            loss: 1.5,
+            exploration: 0.9,
+            env_steps: 10,
+            wall_secs: 0.1,
+        });
+        let csv = log.to_csv();
+        assert!(csv.contains("iter,episode_reward_mean"));
+        assert!(csv.contains("0,0.250000,1.500000,0.9000,10,0.100"));
+        assert_eq!(log.recent_reward(5), 0.25);
+    }
+}

@@ -1,0 +1,175 @@
+//! Network parameter sets: initialization through the AOT `*_init`
+//! artifacts, marshalling to/from Literals, and a small binary on-disk
+//! format so trained policies can be saved and re-loaded without Python.
+
+use crate::runtime::literal::HostTensor;
+use crate::runtime::Runtime;
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+/// A named, ordered set of tensors (network params, Adam m/v, ...).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParamSet {
+    pub tensors: Vec<HostTensor>,
+}
+
+impl ParamSet {
+    pub fn new(tensors: Vec<HostTensor>) -> Self {
+        ParamSet { tensors }
+    }
+
+    /// Zeroed clone (Adam moment buffers).
+    pub fn zeros_like(&self) -> Self {
+        ParamSet {
+            tensors: self
+                .tensors
+                .iter()
+                .map(|t| HostTensor::zeros(t.shape.clone()))
+                .collect(),
+        }
+    }
+
+    /// Initialize from an AOT initializer entry (`q_init` / `pv_init`).
+    pub fn init(rt: &Runtime, entry: &str, seed: i32) -> Result<Self> {
+        let outs = rt.exec(
+            entry,
+            &[crate::runtime::literal::lit_i32_scalar(seed)?],
+        )?;
+        let tensors = outs
+            .iter()
+            .map(HostTensor::from_literal)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ParamSet { tensors })
+    }
+
+    pub fn to_literals(&self) -> Result<Vec<xla::Literal>> {
+        self.tensors.iter().map(|t| t.to_literal()).collect()
+    }
+
+    pub fn num_params(&self) -> usize {
+        self.tensors.iter().map(|t| t.data.len()).sum()
+    }
+
+    /// L2 norm over all tensors (training diagnostics).
+    pub fn norm(&self) -> f64 {
+        self.tensors
+            .iter()
+            .flat_map(|t| t.data.iter())
+            .map(|&x| (x as f64) * (x as f64))
+            .sum::<f64>()
+            .sqrt()
+    }
+
+    // ---- binary save/load: "LTPS" magic, version, tensor table ----
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let mut buf: Vec<u8> = Vec::new();
+        buf.extend_from_slice(b"LTPS");
+        buf.extend_from_slice(&1u32.to_le_bytes());
+        buf.extend_from_slice(&(self.tensors.len() as u32).to_le_bytes());
+        for t in &self.tensors {
+            buf.extend_from_slice(&(t.shape.len() as u32).to_le_bytes());
+            for &d in &t.shape {
+                buf.extend_from_slice(&(d as u64).to_le_bytes());
+            }
+            for &x in &t.data {
+                buf.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        let mut f = std::fs::File::create(path.as_ref())
+            .with_context(|| format!("creating {:?}", path.as_ref()))?;
+        f.write_all(&buf)?;
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let mut bytes = Vec::new();
+        std::fs::File::open(path.as_ref())
+            .with_context(|| format!("opening {:?}", path.as_ref()))?
+            .read_to_end(&mut bytes)?;
+        let mut pos = 0usize;
+        let take = |pos: &mut usize, n: usize| -> Result<&[u8]> {
+            if *pos + n > bytes.len() {
+                bail!("truncated param file");
+            }
+            let s = &bytes[*pos..*pos + n];
+            *pos += n;
+            Ok(s)
+        };
+        if take(&mut pos, 4)? != b"LTPS" {
+            bail!("bad magic (not a looptune param file)");
+        }
+        let ver = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap());
+        if ver != 1 {
+            bail!("unsupported param file version {ver}");
+        }
+        let count = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
+        let mut tensors = Vec::with_capacity(count);
+        for _ in 0..count {
+            let ndim =
+                u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                shape.push(
+                    u64::from_le_bytes(take(&mut pos, 8)?.try_into().unwrap()) as usize,
+                );
+            }
+            let n: usize = shape.iter().product();
+            let raw = take(&mut pos, 4 * n)?;
+            let data = raw
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                .collect();
+            tensors.push(HostTensor::new(shape, data));
+        }
+        if pos != bytes.len() {
+            bail!("trailing bytes in param file");
+        }
+        Ok(ParamSet { tensors })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> ParamSet {
+        ParamSet::new(vec![
+            HostTensor::new(vec![2, 3], vec![1.0, -2.0, 3.5, 0.0, 1e-8, -7.25]),
+            HostTensor::new(vec![3], vec![0.5, 0.25, -0.125]),
+            HostTensor::scalar(42.0),
+        ])
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("ltps_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("p.ltps");
+        let p = sample();
+        p.save(&path).unwrap();
+        let q = ParamSet::load(&path).unwrap();
+        assert_eq!(p, q);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn load_rejects_garbage() {
+        let dir = std::env::temp_dir().join(format!("ltps_bad_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.ltps");
+        std::fs::write(&path, b"not a param file").unwrap();
+        assert!(ParamSet::load(&path).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn zeros_like_and_norm() {
+        let p = sample();
+        let z = p.zeros_like();
+        assert_eq!(z.num_params(), p.num_params());
+        assert_eq!(z.norm(), 0.0);
+        assert!(p.norm() > 0.0);
+    }
+}

@@ -1,0 +1,89 @@
+//! Policy inference — the paper's headline capability: auto-tune a loop
+//! nest **in about a second** by rolling the trained policy forward
+//! without any backend evaluation in the loop.
+//!
+//! The agent applies `argmax Q(s, ·)` for a fixed number of steps, with
+//! the paper's implicit stop: "when the agent starts oscillating between
+//! states that differ only by the cursor position" — detected here as a
+//! revisit of an already-seen (schedule, cursor) state.
+
+use super::params::ParamSet;
+use crate::backend::SharedBackend;
+use crate::env::actions::Action;
+use crate::ir::{Nest, Problem};
+use crate::runtime::Runtime;
+use std::collections::HashSet;
+use std::time::Instant;
+
+#[derive(Clone, Debug)]
+pub struct TuneOutcome {
+    pub nest: Nest,
+    pub actions: Vec<Action>,
+    /// Pure policy-inference time (no backend evaluation) — the paper's
+    /// "search time".
+    pub infer_secs: f64,
+    /// GFLOPS of the produced schedule, measured afterwards by `backend`.
+    pub gflops: f64,
+    pub initial_gflops: f64,
+    pub stopped_early: bool,
+}
+
+impl TuneOutcome {
+    pub fn speedup(&self) -> f64 {
+        self.gflops / self.initial_gflops.max(1e-12)
+    }
+}
+
+/// Roll the greedy policy for at most `steps` actions, then score the final
+/// schedule with `backend`.
+pub fn tune(
+    rt: &Runtime,
+    params: &ParamSet,
+    problem: Problem,
+    steps: usize,
+    backend: &SharedBackend,
+) -> anyhow::Result<TuneOutcome> {
+    let t0 = Instant::now();
+    let mut nest = Nest::initial(problem);
+    let mut actions = Vec::new();
+    let mut seen: HashSet<(Vec<crate::ir::Loop>, usize)> = HashSet::new();
+    seen.insert((nest.loops.clone(), nest.cursor));
+    let mut stopped_early = false;
+
+    for _ in 0..steps {
+        let state = crate::featurize::state_vector(&nest);
+        let q = super::dqn::q_values_with(rt, params, &state)?;
+        // Greedy over valid actions: try best-ranked first.
+        let mut order: Vec<usize> = (0..q.len()).collect();
+        order.sort_by(|&a, &b| q[b].partial_cmp(&q[a]).unwrap());
+        let mut applied = None;
+        for idx in order {
+            let action = Action::from_index(idx);
+            let mut next = nest.clone();
+            if action.apply(&mut next).is_ok() {
+                applied = Some((action, next));
+                break;
+            }
+        }
+        let (action, next) = applied.expect("some action is always valid");
+        // Implicit stop on state revisit (cursor oscillation).
+        if !seen.insert((next.loops.clone(), next.cursor)) {
+            stopped_early = true;
+            break;
+        }
+        actions.push(action);
+        nest = next;
+    }
+    let infer_secs = t0.elapsed().as_secs_f64();
+
+    let initial_gflops = backend.eval(&Nest::initial(problem));
+    let gflops = backend.eval(&nest);
+    Ok(TuneOutcome {
+        nest,
+        actions,
+        infer_secs,
+        gflops,
+        initial_gflops,
+        stopped_early,
+    })
+}

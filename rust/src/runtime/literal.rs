@@ -1,0 +1,114 @@
+//! Host-side tensor type + Literal marshalling helpers.
+
+use anyhow::{bail, Result};
+use xla::Literal;
+
+/// A host tensor: shape + row-major f32 data. The unit the trainers and
+/// the param store operate on; marshalled to/from `xla::Literal` at the
+/// PJRT boundary.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HostTensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl HostTensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostTensor { shape, data }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        HostTensor { shape, data: vec![0.0; n] }
+    }
+
+    pub fn scalar(x: f32) -> Self {
+        HostTensor { shape: vec![], data: vec![x] }
+    }
+
+    pub fn to_literal(&self) -> Result<Literal> {
+        let v = Literal::vec1(&self.data);
+        if self.shape.is_empty() {
+            // A true scalar literal (vec1 of len 1 reshaped to rank 0).
+            Ok(v.reshape(&[])?)
+        } else {
+            let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+            Ok(v.reshape(&dims)?)
+        }
+    }
+
+    pub fn from_literal(lit: &Literal) -> Result<Self> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let data: Vec<f32> = lit.to_vec()?;
+        Ok(HostTensor::new(dims, data))
+    }
+}
+
+/// f32 literal from raw parts.
+pub fn lit_f32(data: &[f32], shape: &[usize]) -> Result<Literal> {
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(Literal::vec1(data).reshape(&dims)?)
+}
+
+/// i32 literal from raw parts.
+pub fn lit_i32(data: &[i32], shape: &[usize]) -> Result<Literal> {
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(Literal::vec1(data).reshape(&dims)?)
+}
+
+/// Scalar literals.
+pub fn lit_f32_scalar(x: f32) -> Result<Literal> {
+    Ok(Literal::vec1(&[x]).reshape(&[])?)
+}
+
+pub fn lit_i32_scalar(x: i32) -> Result<Literal> {
+    Ok(Literal::vec1(&[x]).reshape(&[])?)
+}
+
+/// Extract a scalar f32 from a literal (rank 0 or single element).
+pub fn scalar_f32(lit: &Literal) -> Result<f32> {
+    let v: Vec<f32> = lit.to_vec()?;
+    if v.len() != 1 {
+        bail!("expected scalar, got {} elements", v.len());
+    }
+    Ok(v[0])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_tensor_roundtrip() {
+        let t = HostTensor::new(vec![2, 3], (0..6).map(|x| x as f32).collect());
+        let lit = t.to_literal().unwrap();
+        let back = HostTensor::from_literal(&lit).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn scalar_roundtrip() {
+        let t = HostTensor::scalar(3.5);
+        let lit = t.to_literal().unwrap();
+        assert_eq!(scalar_f32(&lit).unwrap(), 3.5);
+        let back = HostTensor::from_literal(&lit).unwrap();
+        assert!(back.shape.is_empty());
+        assert_eq!(back.data, vec![3.5]);
+    }
+
+    #[test]
+    fn zeros_shape() {
+        let t = HostTensor::zeros(vec![4, 5]);
+        assert_eq!(t.data.len(), 20);
+        assert!(t.data.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn i32_literal() {
+        let lit = lit_i32(&[1, 2, 3], &[3]).unwrap();
+        let v: Vec<i32> = lit.to_vec().unwrap();
+        assert_eq!(v, vec![1, 2, 3]);
+    }
+}

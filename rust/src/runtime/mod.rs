@@ -1,0 +1,240 @@
+//! PJRT runtime — loads the AOT artifacts (`artifacts/*.hlo.txt` +
+//! `manifest.json` produced by `python/compile/aot.py`) and executes them.
+//!
+//! HLO *text* is the interchange format (xla_extension 0.5.1 rejects the
+//! 64-bit instruction ids of jax>=0.5 serialized protos; the text parser
+//! reassigns ids — see /opt/xla-example/README.md). Executables compile
+//! lazily on first use and are cached for the life of the process; Python
+//! never runs at tuning/training time.
+
+pub mod literal;
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+use std::time::{Duration, Instant};
+use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use crate::util::json::{self, Json};
+
+/// Element type of an artifact input.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+/// Ordered input signature entry.
+#[derive(Clone, Debug)]
+pub struct InputSpec {
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+/// One AOT entry point.
+#[derive(Clone, Debug)]
+pub struct EntrySpec {
+    pub file: String,
+    pub inputs: Vec<InputSpec>,
+    pub num_outputs: usize,
+}
+
+/// Shape constants shared with python/compile/model.py.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Constants {
+    pub max_loops: usize,
+    pub feats: usize,
+    pub state_dim: usize,
+    pub num_actions: usize,
+    pub hidden: usize,
+    pub batch: usize,
+}
+
+pub struct Runtime {
+    client: PjRtClient,
+    dir: PathBuf,
+    pub constants: Constants,
+    entries: HashMap<String, EntrySpec>,
+    exes: RefCell<HashMap<String, Rc<PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    /// Load the manifest and start a CPU PJRT client. Cheap: executables
+    /// compile lazily per entry point.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {manifest_path:?} (run `make artifacts`)"))?;
+        let doc = json::parse(&text).map_err(|e| anyhow!("{e}"))?;
+
+        let cs = doc.get("constants").ok_or_else(|| anyhow!("missing constants"))?;
+        let get = |k: &str| -> Result<usize> {
+            cs.get(k)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("missing constant {k}"))
+        };
+        let constants = Constants {
+            max_loops: get("max_loops")?,
+            feats: get("feats")?,
+            state_dim: get("state_dim")?,
+            num_actions: get("num_actions")?,
+            hidden: get("hidden")?,
+            batch: get("batch")?,
+        };
+        // The rust coordinator and the compiled networks must agree.
+        if constants.max_loops != crate::ir::MAX_LOOPS
+            || constants.feats != crate::FEATS
+            || constants.state_dim != crate::STATE_DIM
+            || constants.num_actions != crate::NUM_ACTIONS
+        {
+            bail!(
+                "manifest constants {constants:?} disagree with crate constants \
+                 (MAX_LOOPS={}, FEATS={}, STATE_DIM={}, NUM_ACTIONS={}) — \
+                 rebuild artifacts",
+                crate::ir::MAX_LOOPS,
+                crate::FEATS,
+                crate::STATE_DIM,
+                crate::NUM_ACTIONS
+            );
+        }
+
+        let mut entries = HashMap::new();
+        let ents = doc
+            .get("entries")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("missing entries"))?;
+        for (name, e) in ents {
+            let file = e
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("{name}: missing file"))?
+                .to_string();
+            let num_outputs = e
+                .get("num_outputs")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("{name}: missing num_outputs"))?;
+            let mut inputs = Vec::new();
+            for inp in e
+                .get("inputs")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("{name}: missing inputs"))?
+            {
+                let shape = inp
+                    .get("shape")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("{name}: bad shape"))?
+                    .iter()
+                    .map(|d| d.as_usize().unwrap_or(0))
+                    .collect();
+                let dtype = match inp.get("dtype").and_then(Json::as_str) {
+                    Some("float32") => DType::F32,
+                    Some("int32") => DType::I32,
+                    other => bail!("{name}: unsupported dtype {other:?}"),
+                };
+                inputs.push(InputSpec { shape, dtype });
+            }
+            entries.insert(name.clone(), EntrySpec { file, inputs, num_outputs });
+        }
+
+        let client = PjRtClient::cpu().context("starting PJRT CPU client")?;
+        Ok(Runtime {
+            client,
+            dir,
+            constants,
+            entries,
+            exes: RefCell::new(HashMap::new()),
+        })
+    }
+
+    /// Default artifacts dir: `$LOOPTUNE_ARTIFACTS` or `./artifacts`.
+    pub fn load_default() -> Result<Self> {
+        let dir = std::env::var("LOOPTUNE_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+        Self::load(dir)
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&EntrySpec> {
+        self.entries
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown entry point {name}"))
+    }
+
+    pub fn entry_names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.entries.keys().map(|s| s.as_str()).collect();
+        v.sort();
+        v
+    }
+
+    fn executable(&self, name: &str) -> Result<Rc<PjRtLoadedExecutable>> {
+        if let Some(exe) = self.exes.borrow().get(name) {
+            return Ok(exe.clone());
+        }
+        let spec = self.entry(name)?;
+        let path = self.dir.join(&spec.file);
+        let proto = HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = Rc::new(
+            self.client
+                .compile(&comp)
+                .with_context(|| format!("compiling {name}"))?,
+        );
+        self.exes.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute an entry point. Inputs must match the manifest signature in
+    /// count. Returns the flattened output tuple. Accepts owned Literals or
+    /// references, so hot paths can keep cached param Literals and avoid
+    /// re-marshalling (see rl::dqn §Perf).
+    pub fn exec<L: std::borrow::Borrow<Literal>>(
+        &self,
+        name: &str,
+        args: &[L],
+    ) -> Result<Vec<Literal>> {
+        let spec = self.entry(name)?;
+        if args.len() != spec.inputs.len() {
+            bail!(
+                "{name}: expected {} inputs, got {}",
+                spec.inputs.len(),
+                args.len()
+            );
+        }
+        let exe = self.executable(name)?;
+        let result = exe.execute::<L>(args)?;
+        let lit = result[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: always a tuple.
+        let outs = lit.to_tuple()?;
+        if outs.len() != spec.num_outputs {
+            bail!(
+                "{name}: expected {} outputs, got {}",
+                spec.num_outputs,
+                outs.len()
+            );
+        }
+        Ok(outs)
+    }
+
+    /// Compile an entry point from scratch (no cache), returning the
+    /// wall-clock compile time — the Table I comparator measurement.
+    pub fn time_compile(&self, name: &str) -> Result<Duration> {
+        let spec = self.entry(name)?;
+        let path = self.dir.join(&spec.file);
+        let proto = HloModuleProto::from_text_file(path.to_str().unwrap())?;
+        let comp = XlaComputation::from_proto(&proto);
+        let t0 = Instant::now();
+        let exe = self.client.compile(&comp)?;
+        let dt = t0.elapsed();
+        drop(exe);
+        Ok(dt)
+    }
+
+    /// Whether the artifacts directory looks usable (for test gating).
+    pub fn available(dir: impl AsRef<Path>) -> bool {
+        dir.as_ref().join("manifest.json").exists()
+    }
+}

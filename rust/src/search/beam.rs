@@ -1,0 +1,128 @@
+//! Beam search, DFS and BFS expansion orders (paper §V).
+//!
+//! Every node expands its `width` best-scoring children (ranked by the
+//! GFLOPS of the next state); the search graph is explored depth-first or
+//! breadth-first until the depth limit or the budget runs out. The two
+//! orders behave very differently when the deadline fires before the tree
+//! is complete (paper Fig. 10): DFS has deep partial solutions, BFS has
+//! complete shallow layers.
+
+use super::{Budget, SearchCtx, SearchResult};
+use crate::backend::SharedBackend;
+use crate::ir::{Nest, Problem};
+use std::collections::VecDeque;
+
+/// Beam search, depth-first expansion.
+pub fn dfs(
+    problem: Problem,
+    backend: SharedBackend,
+    budget: Budget,
+    depth: usize,
+    width: usize,
+) -> SearchResult {
+    let mut ctx = SearchCtx::new(problem, backend, budget);
+    let root = Nest::initial(problem);
+    ctx.mark_visited(&root);
+    dfs_rec(&mut ctx, &root, depth, 0, width);
+    ctx.finish(&format!("beam{width}dfs"))
+}
+
+fn dfs_rec(ctx: &mut SearchCtx, nest: &Nest, depth: usize, cur: usize, width: usize) {
+    if cur >= depth || ctx.exhausted() {
+        return;
+    }
+    let children = ctx.expand(nest, cur + 1);
+    for (_, child, _) in children.into_iter().take(width) {
+        if ctx.exhausted() {
+            return;
+        }
+        if !ctx.mark_visited(&child) {
+            continue; // state caching: skip already-expanded nodes
+        }
+        dfs_rec(ctx, &child, depth, cur + 1, width);
+    }
+}
+
+/// Beam search, breadth-first expansion.
+pub fn bfs(
+    problem: Problem,
+    backend: SharedBackend,
+    budget: Budget,
+    depth: usize,
+    width: usize,
+) -> SearchResult {
+    let mut ctx = SearchCtx::new(problem, backend, budget);
+    let root = Nest::initial(problem);
+    ctx.mark_visited(&root);
+    let mut queue: VecDeque<(Nest, usize)> = VecDeque::new();
+    queue.push_back((root, 0));
+    while let Some((nest, d)) = queue.pop_front() {
+        if d >= depth || ctx.exhausted() {
+            if ctx.exhausted() {
+                break;
+            }
+            continue;
+        }
+        let children = ctx.expand(&nest, d + 1);
+        for (_, child, _) in children.into_iter().take(width) {
+            if ctx.mark_visited(&child) {
+                queue.push_back((child, d + 1));
+            }
+        }
+    }
+    ctx.finish(&format!("beam{width}bfs"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::cost_model::CostModel;
+    use crate::backend::{Cached, SharedBackend};
+
+    fn be() -> SharedBackend {
+        SharedBackend::new(Cached::new(CostModel::default()))
+    }
+
+    #[test]
+    fn dfs_and_bfs_improve() {
+        let p = Problem::new(128, 128, 128);
+        let d = dfs(p, be(), Budget::evals(500), 6, 2);
+        let b = bfs(p, be(), Budget::evals(500), 6, 2);
+        assert!(d.speedup() >= 1.0);
+        assert!(b.speedup() >= 1.0);
+        assert_eq!(d.algo, "beam2dfs");
+        assert_eq!(b.algo, "beam2bfs");
+    }
+
+    #[test]
+    fn wider_beam_finds_no_worse_solution_given_same_full_tree() {
+        // With an ample budget and small depth both widths complete their
+        // trees; width 4's tree is a superset of width 2's.
+        let p = Problem::new(96, 96, 96);
+        let w2 = dfs(p, be(), Budget::evals(100_000), 3, 2);
+        let w4 = dfs(p, be(), Budget::evals(100_000), 3, 4);
+        assert!(
+            w4.best_gflops >= w2.best_gflops * 0.999,
+            "w4 {} < w2 {}",
+            w4.best_gflops,
+            w2.best_gflops
+        );
+    }
+
+    #[test]
+    fn budget_stops_expansion() {
+        let p = Problem::new(128, 128, 128);
+        let r = dfs(p, be(), Budget::evals(50), 10, 4);
+        assert!(r.evals <= 60, "evals {}", r.evals);
+        let r = bfs(p, be(), Budget::evals(50), 10, 4);
+        assert!(r.evals <= 60, "evals {}", r.evals);
+    }
+
+    #[test]
+    fn bfs_explores_layer_by_layer() {
+        // With a tiny depth, BFS trace depths never exceed the limit.
+        let p = Problem::new(96, 96, 96);
+        let r = bfs(p, be(), Budget::evals(2000), 2, 2);
+        assert!(r.trace.iter().all(|t| t.depth <= 2));
+    }
+}

@@ -1,0 +1,311 @@
+//! Classical search baselines over the schedule space (paper §V):
+//! greedy with lookahead, beam search (DFS and BFS order), and random
+//! search — all with state caching, all budget-limited, all recording the
+//! per-step trace Figure 10 plots.
+
+pub mod beam;
+pub mod greedy;
+pub mod random;
+
+use crate::backend::SharedBackend;
+use crate::env::actions::Action;
+use crate::ir::{Loop, Nest, Problem};
+use std::collections::HashSet;
+use std::time::{Duration, Instant};
+
+/// Search budget: wall-clock and/or evaluation-count limits.
+#[derive(Clone, Copy, Debug)]
+pub struct Budget {
+    pub time: Option<Duration>,
+    pub max_evals: Option<u64>,
+}
+
+impl Budget {
+    pub fn seconds(s: f64) -> Self {
+        Budget { time: Some(Duration::from_secs_f64(s)), max_evals: None }
+    }
+
+    pub fn evals(n: u64) -> Self {
+        Budget { time: None, max_evals: Some(n) }
+    }
+
+    pub fn both(s: f64, n: u64) -> Self {
+        Budget { time: Some(Duration::from_secs_f64(s)), max_evals: Some(n) }
+    }
+}
+
+/// One point of the Fig.-10 style trace: best GFLOPS known after `evals`
+/// evaluations / `elapsed` seconds, at search-tree depth `depth`.
+#[derive(Clone, Copy, Debug)]
+pub struct TracePoint {
+    pub elapsed: f64,
+    pub evals: u64,
+    pub depth: usize,
+    pub best_gflops: f64,
+}
+
+/// Result of a search run.
+#[derive(Clone, Debug)]
+pub struct SearchResult {
+    pub algo: String,
+    pub best: Nest,
+    pub best_gflops: f64,
+    pub initial_gflops: f64,
+    pub evals: u64,
+    pub elapsed: f64,
+    pub trace: Vec<TracePoint>,
+}
+
+impl SearchResult {
+    pub fn speedup(&self) -> f64 {
+        self.best_gflops / self.initial_gflops.max(1e-12)
+    }
+}
+
+/// Shared machinery for all searches: evaluation with bookkeeping, budget
+/// checks, visited-state dedup ("we implemented each search with caching to
+/// avoid repeating evaluations of the same states", §V).
+pub struct SearchCtx {
+    pub backend: SharedBackend,
+    pub start: Instant,
+    pub budget: Budget,
+    pub evals_at_start: u64,
+    pub best: Option<(Nest, f64)>,
+    pub initial_gflops: f64,
+    pub trace: Vec<TracePoint>,
+    visited: HashSet<(Vec<Loop>, usize)>,
+}
+
+impl SearchCtx {
+    pub fn new(problem: Problem, backend: SharedBackend, budget: Budget) -> Self {
+        let nest = Nest::initial(problem);
+        let evals_at_start = backend.eval_count();
+        let g = backend.eval(&nest);
+        let mut ctx = SearchCtx {
+            backend,
+            start: Instant::now(),
+            budget,
+            evals_at_start,
+            best: None,
+            initial_gflops: g,
+            trace: Vec::new(),
+            visited: HashSet::new(),
+        };
+        ctx.observe(&nest, g, 0);
+        ctx
+    }
+
+    pub fn evals(&self) -> u64 {
+        self.backend.eval_count() - self.evals_at_start
+    }
+
+    pub fn exhausted(&self) -> bool {
+        if let Some(t) = self.budget.time {
+            if self.start.elapsed() >= t {
+                return true;
+            }
+        }
+        if let Some(n) = self.budget.max_evals {
+            if self.evals() >= n {
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Score a nest and update the incumbent + trace.
+    pub fn eval(&mut self, nest: &Nest, depth: usize) -> f64 {
+        let g = self.backend.eval(nest);
+        self.observe(nest, g, depth);
+        g
+    }
+
+    fn observe(&mut self, nest: &Nest, g: f64, depth: usize) {
+        let improved = self.best.as_ref().map(|(_, b)| g > *b).unwrap_or(true);
+        if improved {
+            self.best = Some((nest.clone(), g));
+            self.trace.push(TracePoint {
+                elapsed: self.start.elapsed().as_secs_f64(),
+                evals: self.evals(),
+                depth,
+                best_gflops: g,
+            });
+        }
+    }
+
+    /// Mark a (schedule, cursor) node visited; false if already seen.
+    pub fn mark_visited(&mut self, nest: &Nest) -> bool {
+        self.visited.insert((nest.loops.clone(), nest.cursor))
+    }
+
+    /// Expand all valid actions of `nest`, scored. Sorted best-first.
+    pub fn expand(&mut self, nest: &Nest, depth: usize) -> Vec<(Action, Nest, f64)> {
+        let mut out = Vec::with_capacity(crate::NUM_ACTIONS);
+        for action in Action::all() {
+            if self.exhausted() {
+                break;
+            }
+            let mut next = nest.clone();
+            if action.apply(&mut next).is_err() {
+                continue;
+            }
+            let g = self.eval(&next, depth);
+            out.push((action, next, g));
+        }
+        out.sort_by(|a, b| b.2.partial_cmp(&a.2).unwrap());
+        out
+    }
+
+    pub fn finish(self, algo: &str) -> SearchResult {
+        let evals = self.evals();
+        let elapsed = self.start.elapsed().as_secs_f64();
+        let (best, best_gflops) = self.best.expect("at least initial state");
+        SearchResult {
+            algo: algo.to_string(),
+            best,
+            best_gflops,
+            initial_gflops: self.initial_gflops,
+            evals,
+            elapsed,
+            trace: self.trace,
+        }
+    }
+}
+
+/// The search algorithms of Fig. 6/8/9/10, by name.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SearchAlgo {
+    Greedy1,
+    Greedy2,
+    Beam2Dfs,
+    Beam4Dfs,
+    Beam2Bfs,
+    Beam4Bfs,
+    Random,
+}
+
+impl SearchAlgo {
+    pub const ALL: [SearchAlgo; 7] = [
+        SearchAlgo::Greedy1,
+        SearchAlgo::Greedy2,
+        SearchAlgo::Beam2Dfs,
+        SearchAlgo::Beam4Dfs,
+        SearchAlgo::Beam2Bfs,
+        SearchAlgo::Beam4Bfs,
+        SearchAlgo::Random,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SearchAlgo::Greedy1 => "greedy1",
+            SearchAlgo::Greedy2 => "greedy2",
+            SearchAlgo::Beam2Dfs => "beam2dfs",
+            SearchAlgo::Beam4Dfs => "beam4dfs",
+            SearchAlgo::Beam2Bfs => "beam2bfs",
+            SearchAlgo::Beam4Bfs => "beam4bfs",
+            SearchAlgo::Random => "random",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<SearchAlgo> {
+        Self::ALL.iter().copied().find(|a| a.name() == s)
+    }
+
+    /// Run this algorithm with `depth` max action-sequence length.
+    pub fn run(
+        self,
+        problem: Problem,
+        backend: SharedBackend,
+        budget: Budget,
+        depth: usize,
+        seed: u64,
+    ) -> SearchResult {
+        match self {
+            SearchAlgo::Greedy1 => greedy::search(problem, backend, budget, depth, 1),
+            SearchAlgo::Greedy2 => greedy::search(problem, backend, budget, depth, 2),
+            SearchAlgo::Beam2Dfs => beam::dfs(problem, backend, budget, depth, 2),
+            SearchAlgo::Beam4Dfs => beam::dfs(problem, backend, budget, depth, 4),
+            SearchAlgo::Beam2Bfs => beam::bfs(problem, backend, budget, depth, 2),
+            SearchAlgo::Beam4Bfs => beam::bfs(problem, backend, budget, depth, 4),
+            SearchAlgo::Random => random::search(problem, backend, budget, depth, seed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::cost_model::CostModel;
+    use crate::backend::{Cached, SharedBackend};
+
+    fn be() -> SharedBackend {
+        SharedBackend::new(Cached::new(CostModel::default()))
+    }
+
+    #[test]
+    fn ctx_budget_by_evals() {
+        let mut ctx = SearchCtx::new(Problem::new(64, 64, 64), be(), Budget::evals(5));
+        let mut n = Nest::initial(Problem::new(64, 64, 64));
+        for i in 0..20 {
+            if ctx.exhausted() {
+                break;
+            }
+            // Vary the schedule so the cache doesn't absorb the evals.
+            let _ = n.split(2);
+            n.cursor = (i % n.loops.len().max(1)).min(n.loops.len() - 1);
+            ctx.eval(&n, 0);
+        }
+        assert!(ctx.evals() <= 6, "{}", ctx.evals());
+    }
+
+    #[test]
+    fn expand_returns_sorted_valid_actions() {
+        let mut ctx =
+            SearchCtx::new(Problem::new(64, 64, 64), be(), Budget::evals(1000));
+        let n = Nest::initial(Problem::new(64, 64, 64));
+        let exp = ctx.expand(&n, 1);
+        // cursor at 0: Up and SwapUp invalid; split_64 invalid (trip == 64).
+        assert!(exp.len() >= 6 && exp.len() <= 8, "{}", exp.len());
+        for w in exp.windows(2) {
+            assert!(w[0].2 >= w[1].2);
+        }
+    }
+
+    #[test]
+    fn algo_names_roundtrip() {
+        for a in SearchAlgo::ALL {
+            assert_eq!(SearchAlgo::from_name(a.name()), Some(a));
+        }
+        assert_eq!(SearchAlgo::from_name("nope"), None);
+    }
+
+    #[test]
+    fn visited_dedup() {
+        let mut ctx =
+            SearchCtx::new(Problem::new(64, 64, 64), be(), Budget::evals(100));
+        let n = Nest::initial(Problem::new(64, 64, 64));
+        assert!(ctx.mark_visited(&n));
+        assert!(!ctx.mark_visited(&n));
+    }
+
+    #[test]
+    fn all_algos_improve_over_initial() {
+        for algo in SearchAlgo::ALL {
+            let r = algo.run(
+                Problem::new(128, 128, 128),
+                be(),
+                Budget::evals(300),
+                10,
+                42,
+            );
+            assert!(
+                r.speedup() >= 1.0,
+                "{}: speedup {}",
+                algo.name(),
+                r.speedup()
+            );
+            assert!(r.best_gflops > 0.0);
+            assert!(!r.trace.is_empty());
+        }
+    }
+}

@@ -1,0 +1,96 @@
+//! Mini benchmark harness (criterion is not in the offline crate cache).
+//!
+//! Provides warmup + timed repeats with min/mean/p50 reporting, matching
+//! how the paper's LoopNest measures kernels ("excludes the first
+//! iterations as a warm-up and times multiple executions, taking the
+//! fastest measurement"). Used both by `rust/benches/*` (with
+//! `harness = false`) and by the backend executor's GFLOPS measurement.
+
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub min: Duration,
+    pub mean: Duration,
+    pub median: Duration,
+}
+
+impl BenchResult {
+    pub fn min_secs(&self) -> f64 {
+        self.min.as_secs_f64()
+    }
+}
+
+impl std::fmt::Display for BenchResult {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:<40} iters={:<5} min={:>12?} mean={:>12?} p50={:>12?}",
+            self.name, self.iters, self.min, self.mean, self.median
+        )
+    }
+}
+
+/// Run `f` with warmup, then time repeats until `budget` elapses (at least
+/// `min_iters`). Returns min/mean/median of per-iteration wall time.
+pub fn bench<F: FnMut()>(name: &str, budget: Duration, min_iters: usize, mut f: F) -> BenchResult {
+    // Warmup: run until ~20% of budget or 3 iterations, whichever first.
+    let warm_deadline = Instant::now() + budget.mul_f64(0.2);
+    let mut warm = 0;
+    while warm < 3 || (Instant::now() < warm_deadline && warm < 20) {
+        f();
+        warm += 1;
+        if Instant::now() >= warm_deadline && warm >= 3 {
+            break;
+        }
+    }
+
+    let mut times = Vec::new();
+    let deadline = Instant::now() + budget;
+    while times.len() < min_iters || (Instant::now() < deadline && times.len() < 10_000) {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed());
+        if Instant::now() >= deadline && times.len() >= min_iters {
+            break;
+        }
+    }
+
+    let mut sorted = times.clone();
+    sorted.sort();
+    let total: Duration = times.iter().sum();
+    BenchResult {
+        name: name.to_string(),
+        iters: times.len(),
+        min: sorted[0],
+        mean: total / times.len() as u32,
+        median: sorted[sorted.len() / 2],
+    }
+}
+
+/// Convenience: bench and print one line.
+pub fn run<F: FnMut()>(name: &str, budget: Duration, min_iters: usize, f: F) -> BenchResult {
+    let r = bench(name, budget, min_iters, f);
+    println!("{r}");
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_times() {
+        let mut x = 0u64;
+        let r = bench("spin", Duration::from_millis(20), 5, || {
+            for i in 0..1000 {
+                x = x.wrapping_add(i);
+            }
+            std::hint::black_box(x);
+        });
+        assert!(r.iters >= 5);
+        assert!(r.min <= r.median && r.median <= r.mean * 3);
+    }
+}

@@ -1,0 +1,43 @@
+//! Small self-contained infrastructure (offline build: no external crates
+//! beyond `xla`/`anyhow`, so RNG / JSON / benching are hand-rolled here).
+
+pub mod bench;
+pub mod json;
+pub mod rng;
+pub mod stats;
+
+/// Integer ceil-division.
+#[inline]
+pub fn ceil_div(a: usize, b: usize) -> usize {
+    debug_assert!(b > 0);
+    (a + b - 1) / b
+}
+
+/// floor(log2(x)) for x >= 1.
+#[inline]
+pub fn ilog2(x: usize) -> u32 {
+    debug_assert!(x >= 1);
+    usize::BITS - 1 - x.leading_zeros()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_div_basics() {
+        assert_eq!(ceil_div(10, 3), 4);
+        assert_eq!(ceil_div(9, 3), 3);
+        assert_eq!(ceil_div(1, 64), 1);
+        assert_eq!(ceil_div(0, 5), 0);
+    }
+
+    #[test]
+    fn ilog2_basics() {
+        assert_eq!(ilog2(1), 0);
+        assert_eq!(ilog2(2), 1);
+        assert_eq!(ilog2(3), 1);
+        assert_eq!(ilog2(1024), 10);
+        assert_eq!(ilog2(usize::MAX), usize::BITS - 1);
+    }
+}

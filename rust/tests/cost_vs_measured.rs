@@ -1,0 +1,106 @@
+//! Cross-validation of the analytical cost model against the real
+//! executor: the model does not need to predict absolute GFLOPS, but its
+//! *ranking* of schedules must broadly agree with measurement, since it
+//! substitutes measurement as the training reward (DESIGN.md §4).
+
+use looptune::backend::cost_model::CostModel;
+use looptune::backend::executor::{measure, plan, MeasureCfg, Workspace};
+use looptune::backend::schedule::lower;
+use looptune::backend::Backend;
+use looptune::ir::{Nest, Problem};
+use looptune::util::rng::Pcg32;
+
+/// Spearman rank correlation.
+fn spearman(xs: &[f64], ys: &[f64]) -> f64 {
+    fn ranks(v: &[f64]) -> Vec<f64> {
+        let mut idx: Vec<usize> = (0..v.len()).collect();
+        idx.sort_by(|&a, &b| v[a].partial_cmp(&v[b]).unwrap());
+        let mut r = vec![0.0; v.len()];
+        for (rank, &i) in idx.iter().enumerate() {
+            r[i] = rank as f64;
+        }
+        r
+    }
+    let rx = ranks(xs);
+    let ry = ranks(ys);
+    let n = xs.len() as f64;
+    let mx = (n - 1.0) / 2.0;
+    let (mut num, mut dx, mut dy) = (0.0, 0.0, 0.0);
+    for i in 0..xs.len() {
+        num += (rx[i] - mx) * (ry[i] - mx);
+        dx += (rx[i] - mx) * (rx[i] - mx);
+        dy += (ry[i] - mx) * (ry[i] - mx);
+    }
+    num / (dx.sqrt() * dy.sqrt()).max(1e-12)
+}
+
+#[test]
+fn cost_model_rank_correlates_with_execution() {
+    let p = Problem::new(160, 160, 160);
+    let mut rng = Pcg32::new(77);
+    let mut nests: Vec<Nest> = Vec::new();
+    // The 3 canonical permutations + random mutations.
+    nests.push(Nest::initial(p)); // m n k
+    let mut mkn = Nest::initial(p);
+    mkn.cursor = 1;
+    mkn.swap_down().unwrap();
+    nests.push(mkn);
+    let mut nkm = Nest::initial(p);
+    nkm.cursor = 0;
+    nkm.swap_down().unwrap();
+    nkm.swap_down().unwrap();
+    nests.push(nkm);
+    for seed in 0..9 {
+        let mut n = Nest::initial(p);
+        let mut r = Pcg32::new(seed);
+        for _ in 0..8 {
+            match r.below(5) {
+                0 => drop(n.cursor_up()),
+                1 => drop(n.cursor_down()),
+                2 => drop(n.swap_up()),
+                3 => drop(n.swap_down()),
+                _ => drop(n.split(*r.choose(&[4usize, 8, 16, 32]))),
+            }
+        }
+        nests.push(n);
+    }
+    let _ = &mut rng;
+
+    let mut model = CostModel::default();
+    let mut ws = Workspace::new(p, 5);
+    let cfg = MeasureCfg { warmup: 1, repeats: 2 };
+
+    let predicted: Vec<f64> = nests.iter().map(|n| model.eval(n)).collect();
+    let measured: Vec<f64> = nests
+        .iter()
+        .map(|n| measure(&plan(lower(n)), &mut ws, cfg))
+        .collect();
+
+    let rho = spearman(&predicted, &measured);
+    assert!(
+        rho > 0.4,
+        "rank correlation too weak: rho={rho:.3}\npredicted={predicted:?}\nmeasured={measured:?}"
+    );
+}
+
+#[test]
+fn model_and_executor_agree_on_best_permutation() {
+    // Both must prefer a unit-stride-friendly innermost order over the
+    // m-innermost pathological one.
+    let p = Problem::new(128, 128, 128);
+    let mut good = Nest::initial(p); // m n k -> (n,k) fused pair
+    let mut bad = Nest::initial(p);
+    bad.cursor = 0;
+    bad.swap_down().unwrap();
+    bad.swap_down().unwrap(); // n k m (m innermost)
+    good.cursor = 0; // no-op, keep clone semantics clear
+
+    let mut model = CostModel::default();
+    let mut ws = Workspace::new(p, 6);
+    let cfg = MeasureCfg { warmup: 1, repeats: 2 };
+
+    assert!(model.eval(&good) > model.eval(&bad));
+    let g = measure(&plan(lower(&good)), &mut ws, cfg);
+    let b = measure(&plan(lower(&bad)), &mut ws, cfg);
+    assert!(g > b, "measured good {g} <= bad {b}");
+}

@@ -1,0 +1,114 @@
+//! End-to-end system test: the full three-layer loop — Rust coordinator
+//! collecting episodes, PJRT-executed AOT train steps updating the policy,
+//! policy inference tuning held-out problems. Short budgets; the real runs
+//! are recorded in EXPERIMENTS.md.
+
+use looptune::backend::cost_model::CostModel;
+use looptune::backend::{Cached, SharedBackend};
+use looptune::ir::Problem;
+use looptune::rl::{self, dqn};
+use looptune::runtime::Runtime;
+use std::rc::Rc;
+
+fn runtime() -> Option<Rc<Runtime>> {
+    if !Runtime::available("artifacts") {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+        return None;
+    }
+    Some(Rc::new(Runtime::load("artifacts").expect("load runtime")))
+}
+
+fn backend() -> SharedBackend {
+    SharedBackend::new(Cached::new(CostModel::default()))
+}
+
+#[test]
+fn train_then_tune_full_stack() {
+    let Some(rt) = runtime() else { return };
+    let mut cfg = dqn::DqnConfig::apex();
+    cfg.seed = 5;
+    cfg.learn_start = 40;
+    cfg.episodes_per_iter = 2;
+    cfg.learner_steps = 2;
+    let mut trainer = dqn::DqnTrainer::new(rt.clone(), cfg).unwrap();
+    let params_before = trainer.params.clone();
+
+    let problems = [
+        Problem::new(128, 128, 128),
+        Problem::new(96, 160, 112),
+        Problem::new(192, 64, 128),
+    ];
+    let log = trainer
+        .train(backend(), &problems, 70.0, 6, |_| {})
+        .unwrap();
+    assert_eq!(log.iters.len(), 6);
+    // Learner ran and moved the parameters.
+    assert!(log.iters.iter().any(|i| i.loss != 0.0), "learner never ran");
+    assert_ne!(params_before.tensors[0].data, trainer.params.tensors[0].data);
+
+    // Save / reload / tune with the trained policy.
+    let dir = std::env::temp_dir().join(format!("lt_e2e_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("policy.ltps");
+    trainer.params.save(&path).unwrap();
+    let params = rl::params::ParamSet::load(&path).unwrap();
+
+    let be = backend();
+    let out = rl::tune(&rt, &params, Problem::new(144, 144, 144), 10, &be).unwrap();
+    out.nest.check_invariants().unwrap();
+    assert!(out.gflops > 0.0);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn epsilon_schedule_anneals() {
+    let Some(rt) = runtime() else { return };
+    let cfg = dqn::DqnConfig::dqn();
+    let mut t = dqn::DqnTrainer::new(rt, cfg).unwrap();
+    let problems = [Problem::new(96, 96, 96)];
+    let log = t.train(backend(), &problems, 70.0, 3, |_| {}).unwrap();
+    let e0 = log.iters[0].exploration;
+    let e2 = log.iters[2].exploration;
+    assert!(e0 >= e2, "epsilon should not grow: {e0} -> {e2}");
+    assert!(e0 <= 1.0 && e2 >= 0.0);
+}
+
+#[test]
+fn fig10_runs_without_artifacts_and_emits_csv() {
+    // Pure-coordinator experiment on the cost model; checks CSV structure.
+    let cfg = looptune::eval::EvalCfg {
+        out_dir: std::env::temp_dir().join(format!("lt_fig10_{}", std::process::id())),
+        measured: false,
+        scale: 1.0,
+        params_path: None,
+        seed: 3,
+    };
+    let md =
+        looptune::eval::experiments::fig10(&cfg, Problem::new(128, 128, 128), 0.5)
+            .unwrap();
+    assert!(md.contains("greedy1"));
+    let csv = std::fs::read_to_string(cfg.out_dir.join("fig10.csv")).unwrap();
+    assert!(csv.starts_with("algo,elapsed_s,evals,depth,best_gflops"));
+    assert!(csv.lines().count() > 7, "{csv}");
+    std::fs::remove_dir_all(&cfg.out_dir).unwrap();
+}
+
+#[test]
+fn cached_backend_shares_across_search_and_env() {
+    // The schedule cache must make repeated evaluations free across
+    // components that share a SharedBackend.
+    let be = backend();
+    let p = Problem::new(112, 112, 112);
+    let mut env = looptune::env::Env::new(p, be.clone(), 70.0);
+    let evals0 = be.eval_count();
+    env.reset(p); // same initial schedule: cached
+    assert_eq!(be.eval_count(), evals0);
+    let r = looptune::search::SearchAlgo::Greedy1.run(
+        p,
+        be.clone(),
+        looptune::search::Budget::evals(50),
+        10,
+        1,
+    );
+    assert!(r.best_gflops > 0.0);
+}

@@ -1,0 +1,285 @@
+//! Integration tests over the real AOT artifacts: every entry point loads,
+//! the compiled Q-network matches the pure-Rust reference MLP, and each
+//! trainer runs end-to-end. Requires `make artifacts` (tests skip with a
+//! note if the artifacts are missing).
+
+use looptune::backend::cost_model::CostModel;
+use looptune::backend::{Cached, SharedBackend};
+use looptune::ir::Problem;
+use looptune::rl::params::ParamSet;
+use looptune::rl::{self, dqn, ppo};
+use looptune::runtime::literal::{lit_f32, lit_f32_scalar, lit_i32};
+use looptune::runtime::Runtime;
+use looptune::{NUM_ACTIONS, STATE_DIM};
+use std::rc::Rc;
+
+fn runtime() -> Option<Rc<Runtime>> {
+    if !Runtime::available("artifacts") {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+        return None;
+    }
+    Some(Rc::new(Runtime::load("artifacts").expect("load runtime")))
+}
+
+fn backend() -> SharedBackend {
+    SharedBackend::new(Cached::new(CostModel::default()))
+}
+
+#[test]
+fn manifest_lists_all_entry_points() {
+    let Some(rt) = runtime() else { return };
+    let names = rt.entry_names();
+    for expected in [
+        "q_init",
+        "pv_init",
+        "q_forward_b1",
+        "q_forward_b64",
+        "pv_forward_b1",
+        "dqn_train_step",
+        "ppo_train_step",
+        "a2c_train_step",
+        "mm_64",
+        "mm_128",
+        "mm_256",
+        "mm_512",
+    ] {
+        assert!(names.contains(&expected), "missing {expected}: {names:?}");
+    }
+}
+
+#[test]
+fn q_init_produces_expected_shapes() {
+    let Some(rt) = runtime() else { return };
+    let p = ParamSet::init(&rt, "q_init", 7).unwrap();
+    let h = rt.constants.hidden;
+    let want = [
+        vec![STATE_DIM, h],
+        vec![h],
+        vec![h, h],
+        vec![h],
+        vec![h, NUM_ACTIONS],
+        vec![NUM_ACTIONS],
+    ];
+    assert_eq!(p.tensors.len(), 6);
+    for (t, w) in p.tensors.iter().zip(&want) {
+        assert_eq!(&t.shape, w);
+    }
+    // He init: weights non-degenerate, biases zero.
+    assert!(p.tensors[0].data.iter().any(|&x| x != 0.0));
+    assert!(p.tensors[1].data.iter().all(|&x| x == 0.0));
+    // Different seeds give different weights; same seed identical.
+    let p2 = ParamSet::init(&rt, "q_init", 8).unwrap();
+    let p3 = ParamSet::init(&rt, "q_init", 7).unwrap();
+    assert_ne!(p.tensors[0].data, p2.tensors[0].data);
+    assert_eq!(p.tensors[0].data, p3.tensors[0].data);
+}
+
+#[test]
+fn compiled_q_forward_matches_rust_reference() {
+    let Some(rt) = runtime() else { return };
+    let params = ParamSet::init(&rt, "q_init", 3).unwrap();
+    let mut rng = looptune::util::rng::Pcg32::new(11);
+    for _ in 0..3 {
+        let state: Vec<f32> = (0..STATE_DIM).map(|_| rng.next_f32() * 4.0 - 2.0).collect();
+        let compiled = dqn::q_values_with(&rt, &params, &state).unwrap();
+        let reference = rl::mlp3_forward(&params.tensors, &state);
+        assert_eq!(compiled.len(), NUM_ACTIONS);
+        for (c, r) in compiled.iter().zip(&reference) {
+            assert!(
+                (c - r).abs() < 1e-3 * (1.0 + r.abs()),
+                "compiled {c} vs reference {r}"
+            );
+        }
+    }
+}
+
+#[test]
+fn compiled_pv_forward_matches_rust_reference() {
+    let Some(rt) = runtime() else { return };
+    let params = ParamSet::init(&rt, "pv_init", 5).unwrap();
+    let mut rng = looptune::util::rng::Pcg32::new(13);
+    let state: Vec<f32> = (0..STATE_DIM).map(|_| rng.next_f32()).collect();
+    let (logits, value) = ppo::pv_with(&rt, &params, &state).unwrap();
+    let (rl_logits, rl_value) = rl::pv_forward(&params.tensors, &state);
+    for (c, r) in logits.iter().zip(&rl_logits) {
+        assert!((c - r).abs() < 1e-3 * (1.0 + r.abs()));
+    }
+    assert!((value - rl_value).abs() < 1e-3 * (1.0 + rl_value.abs()));
+}
+
+#[test]
+fn q_forward_b64_matches_b1() {
+    let Some(rt) = runtime() else { return };
+    let params = ParamSet::init(&rt, "q_init", 9).unwrap();
+    let b = rt.constants.batch;
+    let mut rng = looptune::util::rng::Pcg32::new(17);
+    let states: Vec<f32> = (0..b * STATE_DIM).map(|_| rng.next_f32()).collect();
+    let mut args = params.to_literals().unwrap();
+    args.push(lit_f32(&states, &[b, STATE_DIM]).unwrap());
+    let outs = rt.exec("q_forward_b64", &args).unwrap();
+    let q_all: Vec<f32> = outs[0].to_vec().unwrap();
+    assert_eq!(q_all.len(), b * NUM_ACTIONS);
+    // Row 5 must equal the b1 forward of state 5.
+    let row = 5;
+    let q1 = dqn::q_values_with(&rt, &params, &states[row * STATE_DIM..(row + 1) * STATE_DIM])
+        .unwrap();
+    for (c, r) in q_all[row * NUM_ACTIONS..(row + 1) * NUM_ACTIONS].iter().zip(&q1) {
+        assert!((c - r).abs() < 1e-4 * (1.0 + r.abs()));
+    }
+}
+
+#[test]
+fn dqn_train_step_learns_toy_targets() {
+    let Some(rt) = runtime() else { return };
+    let b = rt.constants.batch;
+    let params = ParamSet::init(&rt, "q_init", 21).unwrap();
+    let target = params.clone();
+    let m = params.zeros_like();
+    let v = params.zeros_like();
+
+    // Batch: fixed states, action 0, reward 1, done=1 -> Q(s,0) must move
+    // toward 1. Run two identical steps and check the loss decreases.
+    let mut rng = looptune::util::rng::Pcg32::new(23);
+    let s: Vec<f32> = (0..b * STATE_DIM).map(|_| rng.next_f32()).collect();
+    let a = vec![0i32; b];
+    let r = vec![1.0f32; b];
+    let d = vec![1.0f32; b];
+    let w = vec![1.0f32; b];
+
+    let run = |params: &ParamSet, m: &ParamSet, v: &ParamSet, step: f32| {
+        let mut args = Vec::new();
+        for set in [params, &target, m, v] {
+            args.extend(set.to_literals().unwrap());
+        }
+        args.push(lit_f32_scalar(step).unwrap());
+        args.push(lit_f32(&s, &[b, STATE_DIM]).unwrap());
+        args.push(lit_i32(&a, &[b]).unwrap());
+        args.push(lit_f32(&r, &[b]).unwrap());
+        args.push(lit_f32(&s, &[b, STATE_DIM]).unwrap());
+        args.push(lit_f32(&d, &[b]).unwrap());
+        args.push(lit_f32(&w, &[b]).unwrap());
+        args.push(lit_f32_scalar(1e-2).unwrap());
+        args.push(lit_f32_scalar(0.9).unwrap());
+        rt.exec("dqn_train_step", &args).unwrap()
+    };
+
+    let mut p = params;
+    let mut mm = m;
+    let mut vv = v;
+    let mut step = 0.0f32;
+    let mut losses = Vec::new();
+    for _ in 0..6 {
+        let outs = run(&p, &mm, &vv, step);
+        use looptune::runtime::literal::HostTensor;
+        p = ParamSet::new(
+            outs[0..6].iter().map(|t| HostTensor::from_literal(t).unwrap()).collect(),
+        );
+        mm = ParamSet::new(
+            outs[6..12].iter().map(|t| HostTensor::from_literal(t).unwrap()).collect(),
+        );
+        vv = ParamSet::new(
+            outs[12..18].iter().map(|t| HostTensor::from_literal(t).unwrap()).collect(),
+        );
+        step = looptune::runtime::literal::scalar_f32(&outs[18]).unwrap();
+        let td: Vec<f32> = outs[19].to_vec().unwrap();
+        assert_eq!(td.len(), b);
+        losses.push(looptune::runtime::literal::scalar_f32(&outs[20]).unwrap());
+    }
+    assert_eq!(step, 6.0);
+    assert!(
+        losses[5] < losses[0],
+        "loss did not decrease: {losses:?}"
+    );
+    assert!(losses.iter().all(|l| l.is_finite()));
+}
+
+#[test]
+fn dqn_trainer_end_to_end_smoke() {
+    let Some(rt) = runtime() else { return };
+    let mut cfg = dqn::DqnConfig::apex();
+    cfg.learn_start = 32;
+    cfg.episodes_per_iter = 2;
+    cfg.learner_steps = 1;
+    let mut tr = dqn::DqnTrainer::new(rt, cfg).unwrap();
+    let problems = [Problem::new(128, 128, 128), Problem::new(96, 160, 64)];
+    let log = tr.train(backend(), &problems, 100.0, 3, |_| {}).unwrap();
+    assert_eq!(log.algo, "apex_dqn");
+    assert_eq!(log.iters.len(), 3);
+    assert!(log.iters.iter().all(|i| i.episode_reward_mean.is_finite()));
+}
+
+#[test]
+fn ppo_trainer_end_to_end_smoke() {
+    let Some(rt) = runtime() else { return };
+    let mut cfg = ppo::PpoConfig::default();
+    cfg.episodes_per_iter = 2;
+    cfg.epochs = 1;
+    let mut tr = ppo::PpoTrainer::new(rt, cfg).unwrap();
+    let problems = [Problem::new(128, 128, 128)];
+    let log = tr.train(backend(), &problems, 100.0, 2, |_| {}).unwrap();
+    assert_eq!(log.iters.len(), 2);
+    assert!(log.iters[1].loss.is_finite());
+}
+
+#[test]
+fn a2c_and_impala_trainers_smoke() {
+    let Some(rt) = runtime() else { return };
+    for cfg in [
+        looptune::rl::a2c::A2cConfig::a2c(),
+        looptune::rl::a2c::A2cConfig::impala(),
+    ] {
+        let mut c = cfg;
+        c.episodes_per_iter = 2;
+        let mut tr = looptune::rl::a2c::A2cTrainer::new(rt.clone(), c).unwrap();
+        let problems = [Problem::new(112, 112, 112)];
+        let log = tr.train(backend(), &problems, 100.0, 2, |_| {}).unwrap();
+        assert_eq!(log.iters.len(), 2);
+        assert!(log.iters[1].loss.is_finite());
+    }
+}
+
+#[test]
+fn tune_runs_policy_inference() {
+    let Some(rt) = runtime() else { return };
+    let params = ParamSet::init(&rt, "q_init", 31).unwrap();
+    let be = backend();
+    let out = rl::tune(&rt, &params, Problem::new(128, 128, 128), 10, &be).unwrap();
+    assert!(out.actions.len() <= 10);
+    assert!(out.gflops > 0.0);
+    assert!(out.infer_secs < 5.0);
+    out.nest.check_invariants().unwrap();
+}
+
+#[test]
+fn param_save_load_through_runtime() {
+    let Some(rt) = runtime() else { return };
+    let p = ParamSet::init(&rt, "q_init", 41).unwrap();
+    let dir = std::env::temp_dir().join(format!("lt_int_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("q.ltps");
+    p.save(&path).unwrap();
+    let q = ParamSet::load(&path).unwrap();
+    assert_eq!(p, q);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn mm_artifacts_execute_correct_matmul() {
+    let Some(rt) = runtime() else { return };
+    let n = 64;
+    let mut rng = looptune::util::rng::Pcg32::new(43);
+    let x: Vec<f32> = (0..n * n).map(|_| rng.next_f32() - 0.5).collect();
+    let y: Vec<f32> = (0..n * n).map(|_| rng.next_f32() - 0.5).collect();
+    let outs = rt
+        .exec(
+            "mm_64",
+            &[lit_f32(&x, &[n, n]).unwrap(), lit_f32(&y, &[n, n]).unwrap()],
+        )
+        .unwrap();
+    let z: Vec<f32> = outs[0].to_vec().unwrap();
+    // Spot-check a few entries against a naive matmul.
+    for &(i, j) in &[(0usize, 0usize), (5, 7), (63, 63)] {
+        let want: f32 = (0..n).map(|k| x[i * n + k] * y[k * n + j]).sum();
+        assert!((z[i * n + j] - want).abs() < 1e-3, "({i},{j})");
+    }
+}
