@@ -8,7 +8,7 @@
 //! Run: `cargo bench --bench fig11_tune_latency` (requires `make artifacts`).
 
 use looptune::backend::executor::ExecutorBackend;
-use looptune::backend::{Cached, SharedBackend};
+use looptune::backend::SharedBackend;
 use looptune::baselines::all_baselines;
 use looptune::eval::{experiments, EvalCfg};
 use looptune::ir::Problem;
@@ -39,14 +39,14 @@ fn main() -> anyhow::Result<()> {
     println!("{:<14} {:>14} {:>12} {:>10}", "method", "tune time [s]", "GFLOPS", "evals");
     for p in problems {
         println!("--- {p} ---");
-        let be = SharedBackend::new(Cached::new(ExecutorBackend::default()));
+        let be = SharedBackend::with_factory(ExecutorBackend::default);
         let out = rl::tune(&rt, &params, p, 10, &be)?;
         println!(
             "{:<14} {:>14.3} {:>12.2} {:>10}",
             "looptune", out.infer_secs, out.gflops, 0
         );
         for mut b in all_baselines(7) {
-            let be = SharedBackend::new(Cached::new(ExecutorBackend::default()));
+            let be = SharedBackend::with_factory(ExecutorBackend::default);
             let r = b.run(p, &be);
             println!(
                 "{:<14} {:>14.3} {:>12.2} {:>10}",

@@ -5,7 +5,7 @@
 
 use looptune::backend::cost_model::CostModel;
 use looptune::backend::executor::ExecutorBackend;
-use looptune::backend::{Backend, Cached, SharedBackend};
+use looptune::backend::{Backend, SharedBackend};
 use looptune::env::actions::Action;
 use looptune::env::Env;
 use looptune::ir::{Nest, Problem};
@@ -25,7 +25,7 @@ fn main() {
 
     // Walk the env through the paper's Fig.-3 style optimization:
     // move k above n (m k n, unit-stride innermost), then tile.
-    let backend = SharedBackend::new(Cached::new(ExecutorBackend::default()));
+    let backend = SharedBackend::with_factory(ExecutorBackend::default);
     let peak = looptune::backend::peak::peak_gflops();
     println!("empirical peak: {peak:.1} GFLOPS");
 

@@ -4,7 +4,7 @@
 //! Run: `cargo run --release --example search_comparison [-- seconds]`
 
 use looptune::backend::executor::ExecutorBackend;
-use looptune::backend::{Cached, SharedBackend};
+use looptune::backend::SharedBackend;
 use looptune::ir::Problem;
 use looptune::search::{Budget, SearchAlgo};
 
@@ -20,7 +20,7 @@ fn main() {
         "search", "GFLOPS", "speedup", "evals", "time[s]"
     );
     for algo in SearchAlgo::ALL {
-        let backend = SharedBackend::new(Cached::new(ExecutorBackend::default()));
+        let backend = SharedBackend::with_factory(ExecutorBackend::default);
         let r = algo.run(problem, backend, Budget::seconds(budget_secs), 10, 42);
         println!(
             "{:<10} {:>10.2} {:>8.2}x {:>7} {:>9.2}",

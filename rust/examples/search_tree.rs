@@ -5,13 +5,13 @@
 //! Run: `cargo run --release --example search_tree`
 
 use looptune::backend::cost_model::CostModel;
-use looptune::backend::{Cached, SharedBackend};
+use looptune::backend::SharedBackend;
 use looptune::ir::{Nest, Problem};
 use looptune::search::{Budget, SearchCtx};
 
 fn main() {
     let problem = Problem::new(128, 128, 128);
-    let backend = SharedBackend::new(Cached::new(CostModel::default()));
+    let backend = SharedBackend::with_factory(CostModel::default);
     let mut ctx = SearchCtx::new(problem, backend, Budget::evals(100_000));
 
     let root = Nest::initial(problem);

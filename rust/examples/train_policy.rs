@@ -8,7 +8,7 @@
 //! (requires `make artifacts`)
 
 use looptune::backend::executor::ExecutorBackend;
-use looptune::backend::{peak, Cached, SharedBackend};
+use looptune::backend::{peak, SharedBackend};
 use looptune::dataset;
 use looptune::rl::{self, dqn};
 use looptune::runtime::Runtime;
@@ -28,9 +28,8 @@ fn main() -> anyhow::Result<()> {
     );
 
     // Training reward: analytical cost model (fast, deterministic).
-    let train_backend = SharedBackend::new(Cached::new(
-        looptune::backend::cost_model::CostModel::default(),
-    ));
+    let train_backend =
+        SharedBackend::with_factory(looptune::backend::cost_model::CostModel::default);
     let model_peak = {
         let m = looptune::backend::cost_model::Machine::default();
         2.0 * m.vec_lanes * m.freq_ghz
@@ -66,7 +65,7 @@ fn main() -> anyhow::Result<()> {
     let pk = peak::peak_gflops();
     let mut speedups = Vec::new();
     for p in dataset::sample_test(&ds, 8, 3) {
-        let be = SharedBackend::new(Cached::new(ExecutorBackend::default()));
+        let be = SharedBackend::with_factory(ExecutorBackend::default);
         let out = rl::tune(&rt, &trainer.params, p, 10, &be)?;
         speedups.push(out.speedup());
         println!(

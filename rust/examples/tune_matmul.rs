@@ -5,7 +5,7 @@
 //! (requires `make artifacts`; uses results/apex_dqn.ltps when present)
 
 use looptune::backend::executor::ExecutorBackend;
-use looptune::backend::{Cached, SharedBackend};
+use looptune::backend::SharedBackend;
 use looptune::ir::Problem;
 use looptune::rl::{self, params::ParamSet};
 use looptune::runtime::Runtime;
@@ -29,7 +29,7 @@ fn main() -> anyhow::Result<()> {
         (ParamSet::init(&rt, "q_init", 7)?, false)
     };
 
-    let backend = SharedBackend::new(Cached::new(ExecutorBackend::default()));
+    let backend = SharedBackend::with_factory(ExecutorBackend::default);
     let out = rl::tune(&rt, &params, problem, 10, &backend)?;
 
     println!(

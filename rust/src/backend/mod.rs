@@ -11,6 +11,11 @@
 //!
 //! [`peak`] measures the empirical peak exactly as the paper prescribes
 //! ("running a series of kernels with high arithmetic intensity").
+//!
+//! Evaluation is shared through [`SharedBackend`], a `Send + Sync` handle
+//! over a lock-striped schedule cache plus a pool of backend instances, so
+//! beam expansion, random-search shards and the `tune-many` batch driver
+//! can all score schedules from worker threads concurrently (DESIGN.md §6).
 
 pub mod cost_model;
 pub mod executor;
@@ -19,12 +24,15 @@ pub mod peak;
 pub mod schedule;
 
 use crate::ir::Nest;
-use std::cell::RefCell;
+use std::collections::hash_map::DefaultHasher;
 use std::collections::HashMap;
-use std::rc::Rc;
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
 /// Anything that can score a schedule in GFLOPS.
 pub trait Backend {
+    /// Score `nest` in GFLOPS (higher is better).
     fn eval(&mut self, nest: &Nest) -> f64;
 
     /// Human-readable name for reports.
@@ -38,19 +46,39 @@ pub trait Backend {
 /// *ignoring the cursor*) are evaluated once. This is the "caching to
 /// avoid repeating evaluations of the same states" the paper's searches
 /// use (§V).
+///
+/// [`SharedBackend`] carries its own (concurrent) cache with the same key,
+/// so wrapping is only needed when a backend is used stand-alone.
 pub struct Cached<B: Backend> {
+    /// The wrapped backend.
     pub inner: B,
     cache: HashMap<CacheKey, f64>,
+    /// Number of evaluations served from the cache.
     pub hits: u64,
 }
 
+/// Cache key: the schedule modulo the agent cursor. Cursor moves do not
+/// change the generated code, so they must not cost an evaluation.
 #[derive(Clone, PartialEq, Eq, Hash)]
 struct CacheKey {
     problem: crate::ir::Problem,
     loops: Vec<crate::ir::Loop>,
 }
 
+impl CacheKey {
+    fn of(nest: &Nest) -> CacheKey {
+        CacheKey { problem: nest.problem, loops: nest.loops.clone() }
+    }
+
+    fn shard(&self, n_shards: usize) -> usize {
+        let mut h = DefaultHasher::new();
+        self.hash(&mut h);
+        (h.finish() as usize) % n_shards
+    }
+}
+
 impl<B: Backend> Cached<B> {
+    /// Wrap `inner` with an empty cache.
     pub fn new(inner: B) -> Self {
         Cached { inner, cache: HashMap::new(), hits: 0 }
     }
@@ -58,7 +86,7 @@ impl<B: Backend> Cached<B> {
 
 impl<B: Backend> Backend for Cached<B> {
     fn eval(&mut self, nest: &Nest) -> f64 {
-        let key = CacheKey { problem: nest.problem, loops: nest.loops.clone() };
+        let key = CacheKey::of(nest);
         if let Some(&g) = self.cache.get(&key) {
             self.hits += 1;
             return g;
@@ -77,21 +105,185 @@ impl<B: Backend> Backend for Cached<B> {
     }
 }
 
-/// Shared-ownership backend handle so env + search can hold one cache.
+/// Number of independent cache shards. Keys hash uniformly across shards,
+/// so with tens of worker threads the probability of two threads contending
+/// on the same shard lock at the same instant stays low.
+const CACHE_SHARDS: usize = 64;
+
+struct Shard {
+    map: Mutex<HashMap<CacheKey, Arc<OnceLock<f64>>>>,
+}
+
+/// Factory producing fresh backend instances for additional worker threads.
+type BackendFactory = dyn Fn() -> Box<dyn Backend + Send> + Send + Sync;
+
+struct SharedInner {
+    shards: Vec<Shard>,
+    /// Evaluations actually performed by an inner backend (cache misses).
+    evals: AtomicU64,
+    /// Evaluations served from the cache (including threads that waited on
+    /// a concurrent first evaluation of the same key).
+    hits: AtomicU64,
+    /// Idle backend instances. A worker thread pops one to evaluate, and
+    /// returns it when done; if the pool is empty and a factory exists, a
+    /// new instance is created instead of waiting.
+    pool: Mutex<Vec<Box<dyn Backend + Send>>>,
+    pool_ready: Condvar,
+    factory: Option<Box<BackendFactory>>,
+    name: &'static str,
+}
+
+/// Thread-safe shared evaluation handle: one schedule cache + one pool of
+/// backend instances behind an `Arc`, cloneable into env, searches, and
+/// worker threads (`SharedBackend` is `Send + Sync`).
+///
+/// The cache is striped over [`CACHE_SHARDS`] locks and each entry is an
+/// [`OnceLock`]: when several threads miss the same key concurrently,
+/// exactly one runs the backend while the rest block on the cell and then
+/// count a cache hit — so [`SharedBackend::eval_count`] is exactly the
+/// number of distinct schedules evaluated, even under contention.
+///
+/// ```
+/// use looptune::backend::cost_model::CostModel;
+/// use looptune::backend::SharedBackend;
+/// use looptune::{Nest, Problem};
+///
+/// let be = SharedBackend::with_factory(CostModel::default);
+/// let nest = Nest::initial(Problem::new(64, 64, 64));
+/// let g1 = be.eval(&nest);
+/// let g2 = be.eval(&nest); // served from the shared cache
+/// assert_eq!(g1, g2);
+/// assert_eq!(be.eval_count(), 1);
+/// assert_eq!(be.hits(), 1);
+/// ```
 #[derive(Clone)]
-pub struct SharedBackend(pub Rc<RefCell<dyn Backend>>);
+pub struct SharedBackend(Arc<SharedInner>);
 
 impl SharedBackend {
-    pub fn new<B: Backend + 'static>(b: B) -> Self {
-        SharedBackend(Rc::new(RefCell::new(b)))
+    /// Wrap a single backend instance. Worker threads share this one
+    /// instance (they take turns evaluating); use [`Self::with_factory`]
+    /// when evaluations themselves should run in parallel.
+    pub fn new<B: Backend + Send + 'static>(backend: B) -> Self {
+        let name = backend.name();
+        Self::build(vec![Box::new(backend) as Box<dyn Backend + Send>], None, name)
     }
 
+    /// Build a handle that creates one backend instance per concurrent
+    /// worker on demand, so cache misses evaluate fully in parallel.
+    pub fn with_factory<B, F>(factory: F) -> Self
+    where
+        B: Backend + Send + 'static,
+        F: Fn() -> B + Send + Sync + 'static,
+    {
+        let first = factory();
+        let name = first.name();
+        Self::build(
+            vec![Box::new(first) as Box<dyn Backend + Send>],
+            Some(Box::new(move || Box::new(factory()) as Box<dyn Backend + Send>)),
+            name,
+        )
+    }
+
+    fn build(
+        instances: Vec<Box<dyn Backend + Send>>,
+        factory: Option<Box<BackendFactory>>,
+        name: &'static str,
+    ) -> Self {
+        let shards = (0..CACHE_SHARDS)
+            .map(|_| Shard { map: Mutex::new(HashMap::new()) })
+            .collect();
+        SharedBackend(Arc::new(SharedInner {
+            shards,
+            evals: AtomicU64::new(0),
+            hits: AtomicU64::new(0),
+            pool: Mutex::new(instances),
+            pool_ready: Condvar::new(),
+            factory,
+            name,
+        }))
+    }
+
+    /// Score a schedule, going through the shared cache.
     pub fn eval(&self, nest: &Nest) -> f64 {
-        self.0.borrow_mut().eval(nest)
+        self.eval_detail(nest).0
     }
 
+    /// Score a schedule and report whether this call performed a real
+    /// evaluation (`true` = cache miss). Searches use the flag for exact
+    /// per-search budget accounting even when the handle is shared.
+    pub fn eval_detail(&self, nest: &Nest) -> (f64, bool) {
+        let key = CacheKey::of(nest);
+        let shard = &self.0.shards[key.shard(CACHE_SHARDS)];
+        let cell = {
+            let mut map = shard.map.lock().expect("cache shard poisoned");
+            map.entry(key).or_insert_with(|| Arc::new(OnceLock::new())).clone()
+        };
+        let mut computed = false;
+        let g = *cell.get_or_init(|| {
+            computed = true;
+            let mut guard = self.acquire();
+            guard.backend().eval(nest)
+        });
+        if computed {
+            self.0.evals.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.0.hits.fetch_add(1, Ordering::Relaxed);
+        }
+        (g, computed)
+    }
+
+    /// Check out a backend instance from the pool (creating one via the
+    /// factory, or waiting for a returned instance when there is none).
+    fn acquire(&self) -> PoolGuard<'_> {
+        let inner = &*self.0;
+        let mut pool = inner.pool.lock().expect("backend pool poisoned");
+        loop {
+            if let Some(be) = pool.pop() {
+                return PoolGuard { inner, backend: Some(be) };
+            }
+            if let Some(factory) = &inner.factory {
+                return PoolGuard { inner, backend: Some(factory()) };
+            }
+            pool = inner.pool_ready.wait(pool).expect("backend pool poisoned");
+        }
+    }
+
+    /// Number of distinct schedules actually evaluated (cache misses).
     pub fn eval_count(&self) -> u64 {
-        self.0.borrow().eval_count()
+        self.0.evals.load(Ordering::Relaxed)
+    }
+
+    /// Number of evaluations served from the cache.
+    pub fn hits(&self) -> u64 {
+        self.0.hits.load(Ordering::Relaxed)
+    }
+
+    /// Name of the underlying backend kind (for reports).
+    pub fn name(&self) -> &'static str {
+        self.0.name
+    }
+}
+
+/// RAII checkout of a pooled backend instance; returns it (and wakes one
+/// waiter) on drop, including on unwind.
+struct PoolGuard<'a> {
+    inner: &'a SharedInner,
+    backend: Option<Box<dyn Backend + Send>>,
+}
+
+impl PoolGuard<'_> {
+    fn backend(&mut self) -> &mut (dyn Backend + Send) {
+        &mut **self.backend.as_mut().expect("pool guard already dropped")
+    }
+}
+
+impl Drop for PoolGuard<'_> {
+    fn drop(&mut self) {
+        if let Some(be) = self.backend.take() {
+            let mut pool = self.inner.pool.lock().expect("backend pool poisoned");
+            pool.push(be);
+            self.inner.pool_ready.notify_one();
+        }
     }
 }
 
@@ -128,5 +320,82 @@ mod tests {
         n.split(8).unwrap(); // different schedule -> re-eval
         c.eval(&n);
         assert_eq!(c.inner.0, 2);
+    }
+
+    #[test]
+    fn shared_handle_dedups_and_ignores_cursor() {
+        let be = SharedBackend::new(Counting(0));
+        let mut n = Nest::initial(Problem::new(64, 64, 64));
+        let g1 = be.eval(&n);
+        n.cursor_down().unwrap(); // cursor differs, same schedule
+        let (g2, miss) = be.eval_detail(&n);
+        assert_eq!(g1, g2);
+        assert!(!miss);
+        assert_eq!(be.eval_count(), 1);
+        assert_eq!(be.hits(), 1);
+
+        n.split(8).unwrap(); // different schedule -> re-eval
+        let (_, miss) = be.eval_detail(&n);
+        assert!(miss);
+        assert_eq!(be.eval_count(), 2);
+    }
+
+    #[test]
+    fn shared_handle_is_send_sync_and_clonable() {
+        fn assert_send_sync<T: Send + Sync + Clone>() {}
+        assert_send_sync::<SharedBackend>();
+    }
+
+    #[test]
+    fn concurrent_eval_counts_each_key_once() {
+        // 8 threads all evaluate the same 40 schedules: each distinct key
+        // must be evaluated exactly once, every other call is a hit.
+        let be = SharedBackend::with_factory(|| Counting(0));
+        let problems: Vec<Problem> = (0..40)
+            .map(|i| Problem::new(64 + 16 * (i % 13), 64 + 16 * (i / 13), 64))
+            .collect();
+        let nests: Vec<Nest> = problems.iter().map(|&p| Nest::initial(p)).collect();
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                let be = be.clone();
+                let nests = &nests;
+                s.spawn(move || {
+                    for n in nests {
+                        be.eval(n);
+                    }
+                });
+            }
+        });
+        assert_eq!(be.eval_count(), 40);
+        assert_eq!(be.hits(), 8 * 40 - 40);
+    }
+
+    #[test]
+    fn single_instance_pool_serializes_but_completes() {
+        // No factory: threads must take turns on the one instance, and the
+        // condvar hand-off must not deadlock or lose evaluations.
+        let be = SharedBackend::new(Counting(0));
+        let nests: Vec<Nest> = (0..16)
+            .map(|i| Nest::initial(Problem::new(64 + 16 * i, 64, 64)))
+            .collect();
+        std::thread::scope(|s| {
+            for chunk in nests.chunks(4) {
+                let be = be.clone();
+                s.spawn(move || {
+                    for n in chunk {
+                        assert!(be.eval(n) > 0.0);
+                    }
+                });
+            }
+        });
+        assert_eq!(be.eval_count(), 16);
+        assert_eq!(be.hits(), 0);
+    }
+
+    #[test]
+    fn handle_reports_backend_name() {
+        assert_eq!(SharedBackend::new(Counting(0)).name(), "counting");
+        let be = SharedBackend::with_factory(cost_model::CostModel::default);
+        assert_eq!(be.name(), "cost_model");
     }
 }

@@ -143,11 +143,11 @@ impl Baseline for AutoTvm {
 mod tests {
     use super::*;
     use crate::backend::cost_model::CostModel;
-    use crate::backend::{Cached, SharedBackend};
+    use crate::backend::SharedBackend;
 
     #[test]
     fn respects_trial_budget() {
-        let be = SharedBackend::new(Cached::new(CostModel::default()));
+        let be = SharedBackend::with_factory(CostModel::default);
         let mut a = AutoTvm::new(16, 1);
         let r = a.run(Problem::new(128, 128, 128), &be);
         assert!(r.evals <= 16, "evals {}", r.evals);
@@ -157,8 +157,8 @@ mod tests {
     #[test]
     fn more_trials_do_not_hurt() {
         let p = Problem::new(160, 160, 160);
-        let be1 = SharedBackend::new(Cached::new(CostModel::default()));
-        let be2 = SharedBackend::new(Cached::new(CostModel::default()));
+        let be1 = SharedBackend::with_factory(CostModel::default);
+        let be2 = SharedBackend::with_factory(CostModel::default);
         let small = AutoTvm::new(8, 7).run(p, &be1).gflops;
         let large = AutoTvm::new(64, 7).run(p, &be2).gflops;
         assert!(large >= small * 0.999, "large {large} < small {small}");

@@ -55,12 +55,12 @@ impl Baseline for MetaSchedule {
 mod tests {
     use super::*;
     use crate::backend::cost_model::CostModel;
-    use crate::backend::{Cached, SharedBackend};
+    use crate::backend::SharedBackend;
 
     #[test]
     fn improves_over_single_sample_in_expectation() {
         let p = Problem::new(144, 144, 144);
-        let be = SharedBackend::new(Cached::new(CostModel::default()));
+        let be = SharedBackend::with_factory(CostModel::default);
         let one = MetaSchedule::new(1, 9).run(p, &be).gflops;
         let many = MetaSchedule::new(64, 9).run(p, &be).gflops;
         assert!(many >= one);
@@ -69,7 +69,7 @@ mod tests {
     #[test]
     fn deterministic_per_seed() {
         let p = Problem::new(80, 96, 112);
-        let be = SharedBackend::new(Cached::new(CostModel::default()));
+        let be = SharedBackend::with_factory(CostModel::default);
         let a = MetaSchedule::new(32, 5).run(p, &be).gflops;
         let b = MetaSchedule::new(32, 5).run(p, &be).gflops;
         assert_eq!(a, b);

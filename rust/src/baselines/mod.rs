@@ -59,11 +59,11 @@ pub fn all_baselines(seed: u64) -> Vec<Box<dyn Baseline>> {
 mod tests {
     use super::*;
     use crate::backend::cost_model::CostModel;
-    use crate::backend::{Cached, SharedBackend};
+    use crate::backend::SharedBackend;
 
     #[test]
     fn all_baselines_produce_valid_schedules() {
-        let be = SharedBackend::new(Cached::new(CostModel::default()));
+        let be = SharedBackend::with_factory(CostModel::default);
         let p = Problem::new(128, 128, 128);
         for mut b in all_baselines(3) {
             let r = b.run(p, &be);
@@ -75,7 +75,7 @@ mod tests {
 
     #[test]
     fn tuned_baselines_beat_tvm_base() {
-        let be = SharedBackend::new(Cached::new(CostModel::default()));
+        let be = SharedBackend::with_factory(CostModel::default);
         let p = Problem::new(192, 192, 192);
         let base = tvm_sim::TvmBase.run(p, &be).gflops;
         for mut b in all_baselines(5) {

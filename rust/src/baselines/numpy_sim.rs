@@ -76,11 +76,11 @@ impl Baseline for NumpyOracle {
 mod tests {
     use super::*;
     use crate::backend::cost_model::CostModel;
-    use crate::backend::{Cached, SharedBackend};
+    use crate::backend::SharedBackend;
 
     #[test]
     fn oracle_finds_at_least_the_best_permutation() {
-        let be = SharedBackend::new(Cached::new(CostModel::default()));
+        let be = SharedBackend::with_factory(CostModel::default);
         let p = Problem::new(128, 128, 128);
         let mut o = NumpyOracle::new(1);
         let r = o.run(p, &be);
@@ -94,7 +94,7 @@ mod tests {
 
     #[test]
     fn memoized_second_call_is_free() {
-        let be = SharedBackend::new(Cached::new(CostModel::default()));
+        let be = SharedBackend::with_factory(CostModel::default);
         let p = Problem::new(96, 96, 96);
         let mut o = NumpyOracle::new(1);
         o.run(p, &be);

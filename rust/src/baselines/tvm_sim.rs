@@ -72,11 +72,11 @@ impl Baseline for TvmOpt {
 mod tests {
     use super::*;
     use crate::backend::cost_model::CostModel;
-    use crate::backend::{Cached, SharedBackend};
+    use crate::backend::SharedBackend;
 
     #[test]
     fn opt_beats_base() {
-        let be = SharedBackend::new(Cached::new(CostModel::default()));
+        let be = SharedBackend::with_factory(CostModel::default);
         for p in [Problem::new(64, 64, 64), Problem::new(256, 256, 256)] {
             let b = TvmBase.run(p, &be);
             let o = TvmOpt.run(p, &be);
@@ -91,7 +91,7 @@ mod tests {
 
     #[test]
     fn base_is_m_innermost() {
-        let be = SharedBackend::new(Cached::new(CostModel::default()));
+        let be = SharedBackend::with_factory(CostModel::default);
         let r = TvmBase.run(Problem::new(64, 64, 64), &be);
         let compute = r.nest.kind_indices(crate::ir::Kind::Compute);
         assert_eq!(r.nest.loops[*compute.last().unwrap()].dim, Dim::M);

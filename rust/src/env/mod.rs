@@ -29,8 +29,31 @@ pub struct Step {
     pub valid: bool,
 }
 
+/// The RL environment: one schedule state, stepped by [`Action`]s and
+/// scored through a shared backend handle.
+///
+/// The [`SharedBackend`] is `Send + Sync` and internally cached, so many
+/// `Env`s (one per actor thread) can share one handle and repeated states
+/// cost nothing — the APEX-style multi-actor setup of the paper.
+///
+/// ```
+/// use looptune::backend::cost_model::CostModel;
+/// use looptune::backend::SharedBackend;
+/// use looptune::{Action, Env, Problem};
+///
+/// let backend = SharedBackend::with_factory(CostModel::default);
+/// let mut env = Env::new(Problem::new(64, 64, 64), backend, 100.0);
+/// let step = env.step(Action::Down); // cursor move: free, zero reward
+/// assert!(step.valid);
+/// assert_eq!(step.reward, 0.0);
+/// let step = env.step(Action::SwapDown); // schedule change: re-scored
+/// assert!(step.valid);
+/// assert!(step.gflops > 0.0);
+/// ```
 pub struct Env {
+    /// Current schedule state.
     pub nest: Nest,
+    /// Shared scoring handle (cache + backend pool).
     pub backend: SharedBackend,
     /// Empirical peak GFLOPS used for reward normalization.
     pub peak: f64,
@@ -46,6 +69,7 @@ pub struct Env {
 }
 
 impl Env {
+    /// Environment at the untiled initial schedule of `problem`.
     pub fn new(problem: Problem, backend: SharedBackend, peak: f64) -> Self {
         let nest = Nest::initial(problem);
         let g = backend.eval(&nest);
@@ -69,6 +93,9 @@ impl Env {
         self.state()
     }
 
+    /// Current state vector (masked per the active [`FeatureMask`]).
+    ///
+    /// [`FeatureMask`]: crate::featurize::FeatureMask
     pub fn state(&self) -> Vec<f32> {
         let mut v = state_vector(&self.nest);
         self.mask.apply(&mut v);
@@ -108,11 +135,11 @@ mod tests {
     use super::actions::Action;
     use super::*;
     use crate::backend::cost_model::CostModel;
-    use crate::backend::{Cached, SharedBackend};
+    use crate::backend::SharedBackend;
     use crate::ir::Problem;
 
     fn env() -> Env {
-        let be = SharedBackend::new(Cached::new(CostModel::default()));
+        let be = SharedBackend::with_factory(CostModel::default);
         Env::new(Problem::new(128, 128, 128), be, 100.0)
     }
 

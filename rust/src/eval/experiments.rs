@@ -7,7 +7,7 @@ use crate::dataset;
 use crate::ir::Problem;
 use crate::rl::{self, params::ParamSet};
 use crate::runtime::Runtime;
-use crate::search::{Budget, SearchAlgo};
+use crate::search::{batch, Budget, SearchAlgo};
 use crate::util::stats;
 use anyhow::Result;
 use std::collections::BTreeMap;
@@ -205,6 +205,12 @@ pub struct MethodRun {
 /// Run all searches + the RL policy on `problems`. Searches get
 /// `budget_secs` wall-clock each (the paper gives them 60 s; policy
 /// inference needs none).
+///
+/// The classical searches go through the [`batch`] driver: one shared
+/// cache handle per algorithm, problems fanned across `cfg.threads`
+/// workers. Budgets stay comparable because each search accounts its
+/// evaluations locally and cache keys are problem-scoped. Policy tuning
+/// stays serial — the PJRT runtime is single-threaded by design.
 pub fn run_comparison(
     rt: &Runtime,
     cfg: &EvalCfg,
@@ -216,20 +222,35 @@ pub fn run_comparison(
         eprintln!("note: comparison uses an UNTRAINED policy");
     }
     let mut rows = Vec::new();
-    for (i, &p) in problems.iter().enumerate() {
-        eprintln!("[fig8/9] bench {}/{} {p}", i + 1, problems.len());
-        // Fresh cache per problem so budgets are comparable.
-        for algo in SearchAlgo::ALL {
-            let be = cfg.backend();
-            let r = algo.run(p, be, Budget::seconds(budget_secs), 10, cfg.seed);
+    // Measured GFLOPS are wall-clock timings: running several on one
+    // machine at once depresses and noises every number, so the measured
+    // backend is always driven serially here. Only the (pure-compute)
+    // cost model fans out.
+    let threads = if cfg.measured { 1 } else { cfg.threads };
+    for algo in SearchAlgo::ALL {
+        eprintln!("[fig8/9] {} over {} benchmarks", algo.name(), problems.len());
+        let be = cfg.backend();
+        let bcfg = batch::BatchCfg {
+            algo,
+            budget: Budget::seconds(budget_secs),
+            depth: 10,
+            seed: cfg.seed,
+            threads,
+            expand_threads: 1,
+        };
+        let report = batch::run(problems, &be, &bcfg);
+        for o in report.outcomes {
             rows.push(MethodRun {
                 method: algo.name().into(),
-                problem: p,
-                gflops: r.best_gflops,
-                secs: r.elapsed,
-                speedup_vs_initial: r.speedup(),
+                problem: o.problem,
+                gflops: o.best_gflops,
+                secs: o.elapsed,
+                speedup_vs_initial: o.speedup,
             });
         }
+    }
+    for (i, &p) in problems.iter().enumerate() {
+        eprintln!("[fig8/9] looptune policy {}/{} {p}", i + 1, problems.len());
         let be = cfg.backend();
         let out = rl::tune(rt, &params, p, 10, &be)?;
         rows.push(MethodRun {

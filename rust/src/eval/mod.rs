@@ -27,7 +27,11 @@ pub struct EvalCfg {
     pub scale: f64,
     /// Trained policy parameters (produced by `looptune train`).
     pub params_path: Option<std::path::PathBuf>,
+    /// Base RNG seed for splits, sampling, and search tie-breaking.
     pub seed: u64,
+    /// Worker threads for batched search experiments (`tune-many`,
+    /// fig8/9/headline drivers). 1 = fully serial.
+    pub threads: usize,
 }
 
 impl Default for EvalCfg {
@@ -38,26 +42,30 @@ impl Default for EvalCfg {
             scale: 1.0,
             params_path: None,
             seed: 7,
+            threads: default_threads(),
         }
     }
 }
 
+pub use crate::util::default_threads;
+
 impl EvalCfg {
-    /// Backend per configuration: measured executor or analytical model,
-    /// both wrapped in the schedule cache.
+    /// Backend per configuration: measured executor or analytical model.
+    /// Both come as a [`SharedBackend`] factory handle, so cache misses
+    /// evaluate concurrently on worker threads (one backend instance per
+    /// in-flight evaluation, one shared schedule cache).
+    ///
+    /// [`SharedBackend`]: crate::backend::SharedBackend
     pub fn backend(&self) -> crate::backend::SharedBackend {
-        use crate::backend::{Cached, SharedBackend};
+        use crate::backend::SharedBackend;
         if self.measured {
-            SharedBackend::new(Cached::new(
-                crate::backend::executor::ExecutorBackend::default(),
-            ))
+            SharedBackend::with_factory(crate::backend::executor::ExecutorBackend::default)
         } else {
-            SharedBackend::new(Cached::new(
-                crate::backend::cost_model::CostModel::default(),
-            ))
+            SharedBackend::with_factory(crate::backend::cost_model::CostModel::default)
         }
     }
 
+    /// Scale a count by the quick-mode factor (min 1).
     pub fn scaled(&self, n: usize) -> usize {
         ((n as f64 * self.scale).round() as usize).max(1)
     }

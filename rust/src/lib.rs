@@ -15,6 +15,15 @@
 //!
 //! Python never runs at tuning/training time: [`runtime`] loads the AOT
 //! artifacts via PJRT and the trainers in [`rl`] drive them from Rust.
+//!
+//! Schedule evaluation is concurrent end-to-end: [`backend::SharedBackend`]
+//! is a `Send + Sync` handle over a lock-striped eval cache and a pool of
+//! backend instances, [`search`] scores candidate actions from worker
+//! threads, and [`search::batch`] (the `tune-many` subcommand) fans whole
+//! problem sets across a scoped thread pool. See DESIGN.md §6 and
+//! README.md for the architecture and reproduction commands.
+
+#![warn(missing_docs)]
 
 pub mod backend;
 pub mod baselines;

@@ -7,12 +7,14 @@
 //!   train     --algo A --iters N  train a policy (saves .ltps params)
 //!   tune      --mnk M,N,K         tune one problem with a trained policy
 //!   search    --algo A --mnk ...  run one classical search
+//!   tune-many --algo A ...        batch-tune a whole problem set across
+//!                                 worker threads; writes a JSON report
 //!   eval      <experiment>        regenerate a paper table/figure
 //!   artifacts                     check the AOT artifacts load
 //!
 //! Global flags: --config FILE (TOML subset, see config.rs), --out DIR,
-//! --params FILE, --seed N, --cost-model (use the analytical model instead
-//! of measured execution), --quick (scale budgets down ~10x).
+//! --params FILE, --seed N, --threads N, --cost-model (use the analytical
+//! model instead of measured execution), --quick (scale budgets ~10x down).
 
 use anyhow::{anyhow, bail, Result};
 use looptune::backend::peak;
@@ -21,7 +23,7 @@ use looptune::eval::{experiments, EvalCfg};
 use looptune::ir::{Nest, Problem};
 use looptune::rl::{self, params::ParamSet};
 use looptune::runtime::Runtime;
-use looptune::search::{Budget, SearchAlgo};
+use looptune::search::{batch, Budget, SearchAlgo};
 use looptune::{dataset, FEATS, STATE_DIM};
 use std::rc::Rc;
 
@@ -103,12 +105,23 @@ fn main() -> Result<()> {
         .map(std::path::PathBuf::from)
         .or_else(|| Some(out_dir.join("apex_dqn.ltps")));
 
+    let threads = args
+        .flags
+        .get("threads")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| {
+            file_cfg.i64_or("eval.threads", looptune::eval::default_threads() as i64)
+                as usize
+        })
+        .max(1);
+
     let ecfg = EvalCfg {
         out_dir: out_dir.clone(),
         measured,
         scale: if quick { 0.2 } else { 1.0 },
         params_path,
         seed,
+        threads,
     };
 
     match args.cmd.as_str() {
@@ -266,9 +279,21 @@ fn main() -> Result<()> {
                 Some(name) => vec![SearchAlgo::from_name(name)
                     .ok_or_else(|| anyhow!("unknown search {name}"))?],
             };
+            let expand_threads = args
+                .flags
+                .get("expand-threads")
+                .and_then(|s| s.parse().ok())
+                .unwrap_or(1);
             for algo in algos {
                 let be = ecfg.backend();
-                let r = algo.run(p, be, Budget::seconds(budget), 10, seed);
+                let r = algo.run_threaded(
+                    p,
+                    be,
+                    Budget::seconds(budget),
+                    10,
+                    seed,
+                    expand_threads,
+                );
                 println!(
                     "{:<10} best {:.2} GFLOPS ({:.2}x) evals {} time {:.2}s",
                     algo.name(),
@@ -278,6 +303,76 @@ fn main() -> Result<()> {
                     r.elapsed
                 );
             }
+        }
+        "tune-many" => {
+            // Batch-tune a problem set across worker threads; per-problem
+            // budgets, deterministic per-problem seeds, JSON report.
+            let ds = dataset::canonical();
+            let problems: Vec<Problem> =
+                match args.flags.get("split").map(String::as_str).unwrap_or("test") {
+                    "all" => dataset::all_problems(),
+                    "train" => ds.train.clone(),
+                    "test" => ds.test.clone(),
+                    other => bail!("unknown --split {other} (all|train|test)"),
+                };
+            let problems = match args.flags.get("limit").and_then(|s| s.parse().ok()) {
+                Some(l) => problems.into_iter().take(l).collect(),
+                None => problems,
+            };
+            let algo = match args.flags.get("algo").map(String::as_str) {
+                Some(name) => SearchAlgo::from_name(name)
+                    .ok_or_else(|| anyhow!("unknown search {name}"))?,
+                None => SearchAlgo::Greedy2,
+            };
+            // Default budget: evaluation-count (deterministic across thread
+            // counts). --budget SECS switches to wall-clock budgets.
+            let budget = match (
+                args.flags.get("budget-evals").and_then(|s| s.parse().ok()),
+                args.flags.get("budget").and_then(|s| s.parse::<f64>().ok()),
+            ) {
+                (Some(n), Some(s)) => Budget::both(s, n),
+                (Some(n), None) => Budget::evals(n),
+                (None, Some(s)) => Budget::seconds(s),
+                (None, None) => Budget::evals(if quick { 100 } else { 400 }),
+            };
+            // Concurrent wall-clock timings contend for cores and corrupt
+            // measured GFLOPS, so the measured backend only fans out when
+            // the user explicitly asks for it with --threads.
+            let batch_threads = if measured && !args.flags.contains_key("threads") {
+                eprintln!(
+                    "note: measured backend runs serially by default \
+                     (concurrent timings contend for cores); pass \
+                     --threads N or --cost-model to parallelize"
+                );
+                1
+            } else {
+                if measured && threads > 1 {
+                    eprintln!(
+                        "warning: {threads} concurrent measurement threads \
+                         will add timing noise to reported GFLOPS"
+                    );
+                }
+                threads
+            };
+            let bcfg = batch::BatchCfg {
+                algo,
+                budget,
+                depth: 10,
+                seed,
+                threads: batch_threads,
+                expand_threads: args
+                    .flags
+                    .get("expand-threads")
+                    .and_then(|s| s.parse().ok())
+                    .unwrap_or(1),
+            };
+            let be = ecfg.backend();
+            let report = batch::run(&problems, &be, &bcfg);
+            println!("{}", report.summary());
+            std::fs::create_dir_all(&out_dir)?;
+            let path = out_dir.join("tune_many.json");
+            std::fs::write(&path, report.to_json())?;
+            println!("report -> {}", path.display());
         }
         "eval" => {
             let exp = args.pos.first().map(String::as_str).unwrap_or("all");
@@ -355,9 +450,11 @@ fn main() -> Result<()> {
             println!(
                 "looptune — RL loop-schedule auto-tuner (LoopTune reproduction)\n\n\
                  usage: looptune <cmd> [flags]\n\
-                 cmds:  peak | dataset | render | artifacts | train | tune | search | eval\n\
+                 cmds:  peak | dataset | render | artifacts | train | tune | search\n       \
+                 | tune-many | eval\n\
                  flags: --mnk M,N,K --algo NAME --iters N --budget SECS --out DIR\n       \
-                 --params FILE --config FILE --seed N --quick --cost-model --untrained"
+                 --params FILE --config FILE --seed N --quick --cost-model --untrained\n       \
+                 --threads N --expand-threads N --budget-evals N --split S --limit N"
             );
         }
     }

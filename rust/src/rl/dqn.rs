@@ -19,7 +19,7 @@ use crate::env::actions::Action;
 use crate::env::Env;
 use crate::ir::Problem;
 use crate::runtime::literal::{lit_f32, lit_f32_scalar, lit_i32, scalar_f32, HostTensor};
-use crate::runtime::Runtime;
+use crate::runtime::{xla, Runtime};
 use crate::util::rng::Pcg32;
 use crate::{NUM_ACTIONS, STATE_DIM};
 use anyhow::Result;

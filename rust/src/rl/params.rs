@@ -3,7 +3,7 @@
 //! format so trained policies can be saved and re-loaded without Python.
 
 use crate::runtime::literal::HostTensor;
-use crate::runtime::Runtime;
+use crate::runtime::{xla, Runtime};
 use anyhow::{bail, Context, Result};
 use std::io::{Read, Write};
 use std::path::Path;

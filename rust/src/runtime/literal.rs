@@ -1,7 +1,7 @@
 //! Host-side tensor type + Literal marshalling helpers.
 
+use crate::runtime::xla::Literal;
 use anyhow::{bail, Result};
-use xla::Literal;
 
 /// A host tensor: shape + row-major f32 data. The unit the trainers and
 /// the param store operate on; marshalled to/from `xla::Literal` at the

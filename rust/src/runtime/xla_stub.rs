@@ -1,0 +1,243 @@
+//! Offline stand-in for the `xla` (PJRT) bindings, compiled when the
+//! `pjrt` feature is **off** (the default).
+//!
+//! The stub keeps the whole `runtime`/`rl` stack compiling and unit-testable
+//! without the native `xla_extension` library: the pure marshalling surface
+//! ([`Literal`] construction, reshape, host round-trips) is implemented for
+//! real, while anything that would need a PJRT client ([`PjRtClient::cpu`],
+//! compilation, execution) returns a descriptive error at runtime. Builds
+//! with `--features pjrt` re-export the real crate instead (DESIGN.md §7).
+
+use std::borrow::Borrow;
+use std::fmt;
+
+/// Error type mirroring the real bindings' error.
+#[derive(Clone, Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Result alias matching the real bindings.
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what}: PJRT is unavailable — looptune was built without the \
+         `pjrt` feature (rebuild with `--features pjrt` and the xla \
+         bindings crate, see DESIGN.md §7)"
+    ))
+}
+
+/// Element types the stub can marshal (the subset looptune uses).
+pub trait NativeType: Copy {
+    /// Wrap host data into literal storage.
+    fn wrap(data: Vec<Self>) -> Data;
+    /// Extract host data from a literal, failing on a dtype mismatch.
+    fn unwrap(lit: &Literal) -> Result<Vec<Self>>;
+}
+
+/// Literal storage: typed flat buffers or a tuple of literals.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Data {
+    /// 32-bit float elements.
+    F32(Vec<f32>),
+    /// 32-bit integer elements.
+    I32(Vec<i32>),
+    /// A tuple of nested literals.
+    Tuple(Vec<Literal>),
+}
+
+impl NativeType for f32 {
+    fn wrap(data: Vec<f32>) -> Data {
+        Data::F32(data)
+    }
+    fn unwrap(lit: &Literal) -> Result<Vec<f32>> {
+        match &lit.data {
+            Data::F32(v) => Ok(v.clone()),
+            _ => Err(Error("literal is not f32".into())),
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn wrap(data: Vec<i32>) -> Data {
+        Data::I32(data)
+    }
+    fn unwrap(lit: &Literal) -> Result<Vec<i32>> {
+        match &lit.data {
+            Data::I32(v) => Ok(v.clone()),
+            _ => Err(Error("literal is not i32".into())),
+        }
+    }
+}
+
+/// Host-side literal: shape dims + typed storage.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Literal {
+    dims: Vec<i64>,
+    data: Data,
+}
+
+impl Literal {
+    /// Rank-1 literal from a host slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal { dims: vec![data.len() as i64], data: T::wrap(data.to_vec()) }
+    }
+
+    fn element_count(&self) -> i64 {
+        match &self.data {
+            Data::F32(v) => v.len() as i64,
+            Data::I32(v) => v.len() as i64,
+            Data::Tuple(_) => 0,
+        }
+    }
+
+    /// Reinterpret the element buffer under new dims (element count must
+    /// match; `&[]` produces a scalar).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        let have = self.element_count();
+        if want != have {
+            return Err(Error(format!(
+                "reshape: cannot view {have} elements as {dims:?}"
+            )));
+        }
+        Ok(Literal { dims: dims.to_vec(), data: self.data.clone() })
+    }
+
+    /// The array shape (dims) of a non-tuple literal.
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        match self.data {
+            Data::Tuple(_) => Err(Error("tuple literal has no array shape".into())),
+            _ => Ok(ArrayShape { dims: self.dims.clone() }),
+        }
+    }
+
+    /// Copy the elements out to a host vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::unwrap(self)
+    }
+
+    /// Decompose a tuple literal into its members.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self.data {
+            Data::Tuple(v) => Ok(v),
+            _ => Err(Error("literal is not a tuple".into())),
+        }
+    }
+}
+
+/// Array shape of a literal (dims only — looptune is f32/i32-typed).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    /// Dimension extents.
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Parsed HLO module (opaque in the stub).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    /// Parsing HLO text requires the real bindings.
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// XLA computation handle (opaque in the stub).
+pub struct XlaComputation;
+
+impl XlaComputation {
+    /// Wrap a parsed module (never reached in the stub: parsing fails first).
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// PJRT client handle.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    /// Starting a CPU client requires the real bindings.
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    /// Compiling requires the real bindings.
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+}
+
+/// Compiled executable handle.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    /// Executing requires the real bindings.
+    pub fn execute<L: Borrow<Literal>>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// Device buffer handle.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    /// Device-to-host transfer requires the real bindings.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vec1_reshape_roundtrip() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let m = l.reshape(&[2, 3]).unwrap();
+        assert_eq!(m.array_shape().unwrap().dims(), &[2, 3]);
+        let back: Vec<f32> = m.to_vec().unwrap();
+        assert_eq!(back, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn scalar_reshape() {
+        let l = Literal::vec1(&[7i32]).reshape(&[]).unwrap();
+        assert!(l.array_shape().unwrap().dims().is_empty());
+        let v: Vec<i32> = l.to_vec().unwrap();
+        assert_eq!(v, vec![7]);
+    }
+
+    #[test]
+    fn reshape_rejects_bad_count() {
+        assert!(Literal::vec1(&[1.0f32, 2.0]).reshape(&[3]).is_err());
+    }
+
+    #[test]
+    fn dtype_mismatch_rejected() {
+        let l = Literal::vec1(&[1i32, 2]);
+        assert!(l.to_vec::<f32>().is_err());
+    }
+
+    #[test]
+    fn pjrt_paths_error_cleanly() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+        let msg = PjRtClient::cpu().unwrap_err().to_string();
+        assert!(msg.contains("pjrt"), "{msg}");
+    }
+}

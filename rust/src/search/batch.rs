@@ -1,0 +1,343 @@
+//! Multi-problem batch tuning driver (`looptune tune-many`).
+//!
+//! Fans a set of problems out across a scoped worker pool: each worker
+//! pulls the next problem off a shared atomic counter, runs one search
+//! against the shared [`SharedBackend`] handle (one process-wide schedule
+//! cache — keys are problem-scoped, so sharing changes no per-problem
+//! result, only the accounting granularity), and reports per-problem and
+//! aggregate statistics. The evaluation experiments (`eval/experiments.rs`)
+//! and the `tune-many` CLI subcommand both drive this module.
+//!
+//! Determinism: per-problem seeds derive from the batch seed and the
+//! problem dims (not from scheduling order), and each search counts its
+//! own evaluations locally, so a run with `threads = N` produces exactly
+//! the per-problem results of `threads = 1` whenever the budget is
+//! evaluation-count based and the problem list has no duplicates — with
+//! duplicates, which copy warms the cache first depends on scheduling
+//! (`benches/parallel_tune.rs` asserts the distinct-problem guarantee).
+
+use super::{Budget, SearchAlgo};
+use crate::backend::SharedBackend;
+use crate::ir::Problem;
+use crate::util::json::{write_json, Json};
+use crate::util::stats;
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+/// Batch driver configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchCfg {
+    /// Search algorithm run on every problem.
+    pub algo: SearchAlgo,
+    /// Per-problem budget.
+    pub budget: Budget,
+    /// Max action-sequence depth per search.
+    pub depth: usize,
+    /// Batch seed; per-problem seeds derive from it via [`problem_seed`].
+    pub seed: u64,
+    /// Worker threads across problems.
+    pub threads: usize,
+    /// Worker threads inside each search's candidate expansion.
+    pub expand_threads: usize,
+}
+
+impl Default for BatchCfg {
+    fn default() -> Self {
+        BatchCfg {
+            algo: SearchAlgo::Greedy2,
+            budget: Budget::evals(400),
+            depth: 10,
+            seed: 7,
+            threads: crate::util::default_threads(),
+            expand_threads: 1,
+        }
+    }
+}
+
+/// Deterministic per-problem seed: a splitmix64 finalizer over the batch
+/// seed and the problem dims, independent of scheduling order.
+pub fn problem_seed(seed: u64, p: Problem) -> u64 {
+    let mut x = seed
+        ^ 0x9e37_79b9_7f4a_7c15
+        ^ ((p.m as u64) << 42)
+        ^ ((p.n as u64) << 21)
+        ^ (p.k as u64);
+    x ^= x >> 30;
+    x = x.wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    x ^= x >> 27;
+    x = x.wrapping_mul(0x94d0_49bb_1331_11eb);
+    x ^= x >> 31;
+    x
+}
+
+/// Result of tuning one problem.
+#[derive(Clone, Debug)]
+pub struct ProblemOutcome {
+    /// The tuned problem.
+    pub problem: Problem,
+    /// Best GFLOPS found.
+    pub best_gflops: f64,
+    /// GFLOPS of the untiled initial schedule.
+    pub initial_gflops: f64,
+    /// Speedup over the initial schedule.
+    pub speedup: f64,
+    /// Evaluations this problem's search consumed.
+    pub evals: u64,
+    /// Wall-clock seconds this problem's search took.
+    pub elapsed: f64,
+    /// Compact signature of the best schedule.
+    pub schedule: String,
+}
+
+/// Aggregate result of a batch run.
+#[derive(Clone, Debug)]
+pub struct BatchReport {
+    /// Algorithm name.
+    pub algo: &'static str,
+    /// Backend kind used for scoring.
+    pub backend: &'static str,
+    /// Worker thread count the batch ran with.
+    pub threads: usize,
+    /// Per-problem outcomes, in input order.
+    pub outcomes: Vec<ProblemOutcome>,
+    /// Wall-clock seconds for the whole batch.
+    pub wall_secs: f64,
+    /// Backend evaluations performed during the batch (cache misses).
+    pub evals: u64,
+    /// Evaluations served from the shared cache during the batch.
+    pub cache_hits: u64,
+}
+
+impl BatchReport {
+    /// Problems tuned per wall-clock second.
+    pub fn problems_per_sec(&self) -> f64 {
+        self.outcomes.len() as f64 / self.wall_secs.max(1e-9)
+    }
+
+    /// Fraction of schedule scores served from the cache.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.evals + self.cache_hits;
+        if total == 0 {
+            0.0
+        } else {
+            self.cache_hits as f64 / total as f64
+        }
+    }
+
+    /// Geometric-mean speedup over the per-problem initial schedules.
+    pub fn geomean_speedup(&self) -> f64 {
+        let s: Vec<f64> = self.outcomes.iter().map(|o| o.speedup).collect();
+        stats::geomean(&s)
+    }
+
+    /// Mean best GFLOPS across problems.
+    pub fn mean_best_gflops(&self) -> f64 {
+        let g: Vec<f64> = self.outcomes.iter().map(|o| o.best_gflops).collect();
+        stats::mean(&g)
+    }
+
+    /// Human-readable two-line summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "tune-many: {} problems, algo {}, backend {}, {} threads\n  \
+             wall {:.2}s ({:.1} problems/s), {} evals, cache hit rate {:.1}%\n  \
+             geomean speedup {:.2}x, mean best {:.2} GFLOPS",
+            self.outcomes.len(),
+            self.algo,
+            self.backend,
+            self.threads,
+            self.wall_secs,
+            self.problems_per_sec(),
+            self.evals,
+            100.0 * self.hit_rate(),
+            self.geomean_speedup(),
+            self.mean_best_gflops(),
+        )
+    }
+
+    /// Machine-readable JSON report.
+    pub fn to_json(&self) -> String {
+        let mut root = BTreeMap::new();
+        root.insert("algo".to_string(), Json::Str(self.algo.to_string()));
+        root.insert("backend".to_string(), Json::Str(self.backend.to_string()));
+        root.insert("threads".to_string(), Json::Num(self.threads as f64));
+        root.insert("problems".to_string(), Json::Num(self.outcomes.len() as f64));
+        root.insert("wall_secs".to_string(), Json::Num(self.wall_secs));
+        root.insert(
+            "problems_per_sec".to_string(),
+            Json::Num(self.problems_per_sec()),
+        );
+        root.insert("evals".to_string(), Json::Num(self.evals as f64));
+        root.insert("cache_hits".to_string(), Json::Num(self.cache_hits as f64));
+        root.insert("cache_hit_rate".to_string(), Json::Num(self.hit_rate()));
+        root.insert(
+            "geomean_speedup".to_string(),
+            Json::Num(self.geomean_speedup()),
+        );
+        root.insert(
+            "mean_best_gflops".to_string(),
+            Json::Num(self.mean_best_gflops()),
+        );
+        let results: Vec<Json> = self
+            .outcomes
+            .iter()
+            .map(|o| {
+                let mut row = BTreeMap::new();
+                row.insert("problem".to_string(), Json::Str(format!("{}", o.problem)));
+                row.insert("m".to_string(), Json::Num(o.problem.m as f64));
+                row.insert("n".to_string(), Json::Num(o.problem.n as f64));
+                row.insert("k".to_string(), Json::Num(o.problem.k as f64));
+                row.insert("best_gflops".to_string(), Json::Num(o.best_gflops));
+                row.insert("initial_gflops".to_string(), Json::Num(o.initial_gflops));
+                row.insert("speedup".to_string(), Json::Num(o.speedup));
+                row.insert("evals".to_string(), Json::Num(o.evals as f64));
+                row.insert("elapsed_secs".to_string(), Json::Num(o.elapsed));
+                row.insert("schedule".to_string(), Json::Str(o.schedule.clone()));
+                Json::Obj(row)
+            })
+            .collect();
+        root.insert("results".to_string(), Json::Arr(results));
+        let mut out = String::new();
+        write_json(&Json::Obj(root), &mut out);
+        out.push('\n');
+        out
+    }
+}
+
+fn tune_one(problem: Problem, backend: &SharedBackend, cfg: &BatchCfg) -> ProblemOutcome {
+    let r = cfg.algo.run_threaded(
+        problem,
+        backend.clone(),
+        cfg.budget,
+        cfg.depth,
+        problem_seed(cfg.seed, problem),
+        cfg.expand_threads,
+    );
+    ProblemOutcome {
+        problem,
+        best_gflops: r.best_gflops,
+        initial_gflops: r.initial_gflops,
+        speedup: r.speedup(),
+        evals: r.evals,
+        elapsed: r.elapsed,
+        schedule: crate::ir::transform::schedule_signature(&r.best),
+    }
+}
+
+/// Tune every problem in `problems` with `cfg`, fanning out across
+/// `cfg.threads` scoped worker threads over the shared `backend` handle.
+/// Outcomes come back in input order regardless of scheduling.
+pub fn run(problems: &[Problem], backend: &SharedBackend, cfg: &BatchCfg) -> BatchReport {
+    let t0 = Instant::now();
+    let evals0 = backend.eval_count();
+    let hits0 = backend.hits();
+    let threads = cfg.threads.max(1).min(problems.len().max(1));
+
+    let outcomes = crate::util::parallel_indexed_map(problems.len(), threads, |i| {
+        tune_one(problems[i], backend, cfg)
+    });
+
+    BatchReport {
+        algo: cfg.algo.name(),
+        backend: backend.name(),
+        threads,
+        outcomes,
+        wall_secs: t0.elapsed().as_secs_f64(),
+        evals: backend.eval_count() - evals0,
+        cache_hits: backend.hits() - hits0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::cost_model::CostModel;
+    use crate::util::json;
+
+    fn be() -> SharedBackend {
+        SharedBackend::with_factory(CostModel::default)
+    }
+
+    /// Distinct problems (duplicates would make per-problem eval counts
+    /// depend on which copy reaches the shared cache first).
+    fn problems(n: usize) -> Vec<Problem> {
+        (0..n)
+            .map(|i| Problem::new(64 + 16 * (i % 5), 64 + 16 * (i / 5), 96))
+            .collect()
+    }
+
+    #[test]
+    fn serial_batch_covers_all_problems_in_order() {
+        let ps = problems(6);
+        let cfg = BatchCfg { threads: 1, budget: Budget::evals(60), ..BatchCfg::default() };
+        let report = run(&ps, &be(), &cfg);
+        assert_eq!(report.outcomes.len(), ps.len());
+        for (o, &p) in report.outcomes.iter().zip(&ps) {
+            assert_eq!(o.problem, p);
+            assert!(o.best_gflops > 0.0);
+            assert!(o.speedup >= 1.0 - 1e-9);
+        }
+        assert!(report.evals > 0);
+    }
+
+    #[test]
+    fn parallel_matches_serial_outcomes_exactly() {
+        let ps = problems(10);
+        let serial =
+            BatchCfg { threads: 1, budget: Budget::evals(120), ..BatchCfg::default() };
+        let parallel = BatchCfg { threads: 4, ..serial };
+        let a = run(&ps, &be(), &serial);
+        let b = run(&ps, &be(), &parallel);
+        assert_eq!(a.outcomes.len(), b.outcomes.len());
+        for (x, y) in a.outcomes.iter().zip(&b.outcomes) {
+            assert_eq!(x.problem, y.problem);
+            assert_eq!(x.best_gflops, y.best_gflops, "{}", x.problem);
+            assert_eq!(x.evals, y.evals, "{}", x.problem);
+            assert_eq!(x.schedule, y.schedule, "{}", x.problem);
+        }
+        // Same problems, same budgets: the shared cache sees the same keys.
+        assert_eq!(a.evals, b.evals);
+    }
+
+    #[test]
+    fn problem_seed_is_deterministic_and_spread() {
+        let p1 = Problem::new(64, 64, 64);
+        let p2 = Problem::new(64, 64, 80);
+        assert_eq!(problem_seed(7, p1), problem_seed(7, p1));
+        assert_ne!(problem_seed(7, p1), problem_seed(7, p2));
+        assert_ne!(problem_seed(7, p1), problem_seed(8, p1));
+    }
+
+    #[test]
+    fn json_report_parses_back() {
+        let ps = problems(3);
+        let cfg = BatchCfg { threads: 2, budget: Budget::evals(40), ..BatchCfg::default() };
+        let report = run(&ps, &be(), &cfg);
+        let doc = json::parse(&report.to_json()).unwrap();
+        assert_eq!(doc.get("problems").unwrap().as_usize(), Some(3));
+        assert_eq!(doc.get("algo").unwrap().as_str(), Some("greedy2"));
+        assert_eq!(
+            doc.get("results").unwrap().as_arr().unwrap().len(),
+            3
+        );
+        let summary = report.summary();
+        assert!(summary.contains("3 problems"), "{summary}");
+    }
+
+    #[test]
+    fn dedup_works_across_repeated_problems() {
+        // The same problem listed twice, serially, with a budget ample
+        // enough that the first search completes its whole exploration:
+        // the second tune is then served entirely from the cache.
+        let p = Problem::new(96, 96, 96);
+        let cfg = BatchCfg {
+            threads: 1,
+            budget: Budget::evals(1_000_000),
+            ..BatchCfg::default()
+        };
+        let be = be();
+        let report = run(&[p, p], &be, &cfg);
+        assert_eq!(report.outcomes[0].best_gflops, report.outcomes[1].best_gflops);
+        assert_eq!(report.outcomes[1].evals, 0, "{}", report.outcomes[1].evals);
+    }
+}

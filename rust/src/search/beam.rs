@@ -12,15 +12,17 @@ use crate::backend::SharedBackend;
 use crate::ir::{Nest, Problem};
 use std::collections::VecDeque;
 
-/// Beam search, depth-first expansion.
+/// Beam search, depth-first expansion. Each node's candidates are scored
+/// concurrently when `expand_threads > 1`.
 pub fn dfs(
     problem: Problem,
     backend: SharedBackend,
     budget: Budget,
     depth: usize,
     width: usize,
+    expand_threads: usize,
 ) -> SearchResult {
-    let mut ctx = SearchCtx::new(problem, backend, budget);
+    let mut ctx = SearchCtx::with_threads(problem, backend, budget, expand_threads);
     let root = Nest::initial(problem);
     ctx.mark_visited(&root);
     dfs_rec(&mut ctx, &root, depth, 0, width);
@@ -43,15 +45,17 @@ fn dfs_rec(ctx: &mut SearchCtx, nest: &Nest, depth: usize, cur: usize, width: us
     }
 }
 
-/// Beam search, breadth-first expansion.
+/// Beam search, breadth-first expansion. Each node's candidates are scored
+/// concurrently when `expand_threads > 1`.
 pub fn bfs(
     problem: Problem,
     backend: SharedBackend,
     budget: Budget,
     depth: usize,
     width: usize,
+    expand_threads: usize,
 ) -> SearchResult {
-    let mut ctx = SearchCtx::new(problem, backend, budget);
+    let mut ctx = SearchCtx::with_threads(problem, backend, budget, expand_threads);
     let root = Nest::initial(problem);
     ctx.mark_visited(&root);
     let mut queue: VecDeque<(Nest, usize)> = VecDeque::new();
@@ -77,17 +81,17 @@ pub fn bfs(
 mod tests {
     use super::*;
     use crate::backend::cost_model::CostModel;
-    use crate::backend::{Cached, SharedBackend};
+    use crate::backend::SharedBackend;
 
     fn be() -> SharedBackend {
-        SharedBackend::new(Cached::new(CostModel::default()))
+        SharedBackend::with_factory(CostModel::default)
     }
 
     #[test]
     fn dfs_and_bfs_improve() {
         let p = Problem::new(128, 128, 128);
-        let d = dfs(p, be(), Budget::evals(500), 6, 2);
-        let b = bfs(p, be(), Budget::evals(500), 6, 2);
+        let d = dfs(p, be(), Budget::evals(500), 6, 2, 1);
+        let b = bfs(p, be(), Budget::evals(500), 6, 2, 1);
         assert!(d.speedup() >= 1.0);
         assert!(b.speedup() >= 1.0);
         assert_eq!(d.algo, "beam2dfs");
@@ -99,8 +103,8 @@ mod tests {
         // With an ample budget and small depth both widths complete their
         // trees; width 4's tree is a superset of width 2's.
         let p = Problem::new(96, 96, 96);
-        let w2 = dfs(p, be(), Budget::evals(100_000), 3, 2);
-        let w4 = dfs(p, be(), Budget::evals(100_000), 3, 4);
+        let w2 = dfs(p, be(), Budget::evals(100_000), 3, 2, 1);
+        let w4 = dfs(p, be(), Budget::evals(100_000), 3, 4, 1);
         assert!(
             w4.best_gflops >= w2.best_gflops * 0.999,
             "w4 {} < w2 {}",
@@ -112,9 +116,9 @@ mod tests {
     #[test]
     fn budget_stops_expansion() {
         let p = Problem::new(128, 128, 128);
-        let r = dfs(p, be(), Budget::evals(50), 10, 4);
+        let r = dfs(p, be(), Budget::evals(50), 10, 4, 1);
         assert!(r.evals <= 60, "evals {}", r.evals);
-        let r = bfs(p, be(), Budget::evals(50), 10, 4);
+        let r = bfs(p, be(), Budget::evals(50), 10, 4, 1);
         assert!(r.evals <= 60, "evals {}", r.evals);
     }
 
@@ -122,7 +126,17 @@ mod tests {
     fn bfs_explores_layer_by_layer() {
         // With a tiny depth, BFS trace depths never exceed the limit.
         let p = Problem::new(96, 96, 96);
-        let r = bfs(p, be(), Budget::evals(2000), 2, 2);
+        let r = bfs(p, be(), Budget::evals(2000), 2, 2, 1);
         assert!(r.trace.iter().all(|t| t.depth <= 2));
+    }
+
+    #[test]
+    fn parallel_expansion_matches_serial_tree() {
+        let p = Problem::new(144, 144, 144);
+        let serial = bfs(p, be(), Budget::evals(100_000), 3, 4, 1);
+        let threaded = bfs(p, be(), Budget::evals(100_000), 3, 4, 4);
+        assert_eq!(serial.best.loops, threaded.best.loops);
+        assert_eq!(serial.best_gflops, threaded.best_gflops);
+        assert_eq!(serial.evals, threaded.evals);
     }
 }

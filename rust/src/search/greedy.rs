@@ -4,21 +4,27 @@
 //! (cost `O(|A|^lookahead)` evaluations), move one step toward the most
 //! promising final state. Lookahead 1 terminates when no action improves
 //! on the current state; lookahead 2 tolerates one locally-bad action.
+//!
+//! Sequence enumeration goes through [`SearchCtx::expand`], so each node's
+//! candidate actions are scored concurrently when the context was built
+//! with `expand_threads > 1`.
 
 use super::{Budget, SearchCtx, SearchResult};
 use crate::backend::SharedBackend;
 use crate::env::actions::Action;
 use crate::ir::{Nest, Problem};
 
+/// Greedy search with `lookahead`-step exploration per move.
 pub fn search(
     problem: Problem,
     backend: SharedBackend,
     budget: Budget,
     depth: usize,
     lookahead: usize,
+    expand_threads: usize,
 ) -> SearchResult {
     assert!(lookahead >= 1);
-    let mut ctx = SearchCtx::new(problem, backend, budget);
+    let mut ctx = SearchCtx::with_threads(problem, backend, budget, expand_threads);
     let mut cur = Nest::initial(problem);
     let mut cur_g = ctx.initial_gflops;
 
@@ -43,7 +49,8 @@ pub fn search(
 }
 
 /// DFS over action sequences of length `left`, tracking the first action of
-/// the sequence and the best final GFLOPS it can reach.
+/// the sequence and the best final GFLOPS it can reach. Each tree node's
+/// children are scored in one (possibly parallel) `expand` batch.
 fn explore(
     ctx: &mut SearchCtx,
     nest: &Nest,
@@ -52,18 +59,10 @@ fn explore(
     first: Option<Action>,
     best: &mut Option<(Action, f64)>,
 ) {
-    if left == 0 {
+    if left == 0 || ctx.exhausted() {
         return;
     }
-    for action in Action::all() {
-        if ctx.exhausted() {
-            return;
-        }
-        let mut next = nest.clone();
-        if action.apply(&mut next).is_err() {
-            continue;
-        }
-        let g = ctx.eval(&next, depth + 1);
+    for (action, next, g) in ctx.expand(nest, depth + 1) {
         let f = first.unwrap_or(action);
         if best.as_ref().map(|(_, b)| g > *b).unwrap_or(true) {
             *best = Some((f, g));
@@ -76,10 +75,10 @@ fn explore(
 mod tests {
     use super::*;
     use crate::backend::cost_model::CostModel;
-    use crate::backend::{Cached, SharedBackend};
+    use crate::backend::SharedBackend;
 
     fn be() -> SharedBackend {
-        SharedBackend::new(Cached::new(CostModel::default()))
+        SharedBackend::with_factory(CostModel::default)
     }
 
     #[test]
@@ -88,7 +87,7 @@ mod tests {
         // local minimum" — reaching m k n from m n k needs two steps
         // (down, swap_down), which lookahead 1 cannot see. It must still
         // never regress below the initial schedule.
-        let r = search(Problem::new(128, 128, 128), be(), Budget::evals(5000), 10, 1);
+        let r = search(Problem::new(128, 128, 128), be(), Budget::evals(5000), 10, 1, 1);
         assert!(r.speedup() >= 1.0, "speedup {}", r.speedup());
         assert!(r.evals < 100, "greedy1 should stop early, used {}", r.evals);
         assert_eq!(r.algo, "greedy1");
@@ -96,15 +95,15 @@ mod tests {
 
     #[test]
     fn greedy2_escapes_the_one_step_local_minimum() {
-        let r = search(Problem::new(128, 128, 128), be(), Budget::evals(20_000), 10, 2);
+        let r = search(Problem::new(128, 128, 128), be(), Budget::evals(20_000), 10, 2, 1);
         assert!(r.speedup() > 1.0, "speedup {}", r.speedup());
     }
 
     #[test]
     fn greedy2_at_least_matches_greedy1() {
         let p = Problem::new(160, 160, 160);
-        let g1 = search(p, be(), Budget::evals(20_000), 8, 1);
-        let g2 = search(p, be(), Budget::evals(20_000), 8, 2);
+        let g1 = search(p, be(), Budget::evals(20_000), 8, 1, 1);
+        let g2 = search(p, be(), Budget::evals(20_000), 8, 2, 1);
         assert!(
             g2.best_gflops >= g1.best_gflops * 0.999,
             "g2 {} < g1 {}",
@@ -115,7 +114,16 @@ mod tests {
 
     #[test]
     fn respects_eval_budget() {
-        let r = search(Problem::new(128, 128, 128), be(), Budget::evals(30), 10, 2);
+        let r = search(Problem::new(128, 128, 128), be(), Budget::evals(30), 10, 2, 1);
         assert!(r.evals <= 40, "evals {}", r.evals);
+    }
+
+    #[test]
+    fn parallel_expansion_reaches_same_quality() {
+        let p = Problem::new(128, 128, 128);
+        let serial = search(p, be(), Budget::evals(100_000), 6, 2, 1);
+        let threaded = search(p, be(), Budget::evals(100_000), 6, 2, 4);
+        assert_eq!(serial.best_gflops, threaded.best_gflops);
+        assert_eq!(serial.evals, threaded.evals);
     }
 }

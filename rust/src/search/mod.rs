@@ -2,7 +2,13 @@
 //! greedy with lookahead, beam search (DFS and BFS order), and random
 //! search — all with state caching, all budget-limited, all recording the
 //! per-step trace Figure 10 plots.
+//!
+//! Candidate scoring is concurrent: [`SearchCtx::expand`] evaluates every
+//! valid action of a node through the shared backend handle from a scoped
+//! worker pool when `expand_threads > 1`, and [`batch`] fans whole problem
+//! sets out across threads (DESIGN.md §6).
 
+pub mod batch;
 pub mod beam;
 pub mod greedy;
 pub mod random;
@@ -16,19 +22,24 @@ use std::time::{Duration, Instant};
 /// Search budget: wall-clock and/or evaluation-count limits.
 #[derive(Clone, Copy, Debug)]
 pub struct Budget {
+    /// Wall-clock limit, if any.
     pub time: Option<Duration>,
+    /// Backend-evaluation limit, if any.
     pub max_evals: Option<u64>,
 }
 
 impl Budget {
+    /// Wall-clock budget only.
     pub fn seconds(s: f64) -> Self {
         Budget { time: Some(Duration::from_secs_f64(s)), max_evals: None }
     }
 
+    /// Evaluation-count budget only (deterministic).
     pub fn evals(n: u64) -> Self {
         Budget { time: None, max_evals: Some(n) }
     }
 
+    /// Both limits; whichever fires first stops the search.
     pub fn both(s: f64, n: u64) -> Self {
         Budget { time: Some(Duration::from_secs_f64(s)), max_evals: Some(n) }
     }
@@ -38,25 +49,37 @@ impl Budget {
 /// evaluations / `elapsed` seconds, at search-tree depth `depth`.
 #[derive(Clone, Copy, Debug)]
 pub struct TracePoint {
+    /// Seconds since the search started.
     pub elapsed: f64,
+    /// Evaluations consumed by this search when the point was recorded.
     pub evals: u64,
+    /// Search-tree depth of the improving state.
     pub depth: usize,
+    /// Best GFLOPS known at this point.
     pub best_gflops: f64,
 }
 
 /// Result of a search run.
 #[derive(Clone, Debug)]
 pub struct SearchResult {
+    /// Algorithm name (e.g. `beam4bfs`).
     pub algo: String,
+    /// Best schedule found.
     pub best: Nest,
+    /// GFLOPS of the best schedule.
     pub best_gflops: f64,
+    /// GFLOPS of the untiled initial schedule.
     pub initial_gflops: f64,
+    /// Evaluations consumed (cache misses attributable to this search).
     pub evals: u64,
+    /// Wall-clock seconds spent.
     pub elapsed: f64,
+    /// Fig.-10 style improvement trace.
     pub trace: Vec<TracePoint>,
 }
 
 impl SearchResult {
+    /// Speedup of the best schedule over the untiled starting point.
     pub fn speedup(&self) -> f64 {
         self.best_gflops / self.initial_gflops.max(1e-12)
     }
@@ -65,40 +88,66 @@ impl SearchResult {
 /// Shared machinery for all searches: evaluation with bookkeeping, budget
 /// checks, visited-state dedup ("we implemented each search with caching to
 /// avoid repeating evaluations of the same states", §V).
+///
+/// Evaluation counting is local to the context (a cache miss through the
+/// shared handle counts once, hits are free), so several searches can run
+/// concurrently over one [`SharedBackend`] and each still enforces exactly
+/// its own budget.
 pub struct SearchCtx {
+    /// The shared evaluation handle.
     pub backend: SharedBackend,
+    /// When the search started.
     pub start: Instant,
+    /// The budget this context enforces.
     pub budget: Budget,
-    pub evals_at_start: u64,
+    /// Incumbent best (schedule, GFLOPS).
     pub best: Option<(Nest, f64)>,
+    /// GFLOPS of the initial schedule.
     pub initial_gflops: f64,
+    /// Improvement trace.
     pub trace: Vec<TracePoint>,
+    evals_local: u64,
+    threads: usize,
     visited: HashSet<(Vec<Loop>, usize)>,
 }
 
 impl SearchCtx {
+    /// Context with serial candidate scoring.
     pub fn new(problem: Problem, backend: SharedBackend, budget: Budget) -> Self {
+        Self::with_threads(problem, backend, budget, 1)
+    }
+
+    /// Context whose [`Self::expand`] scores candidates on up to `threads`
+    /// worker threads.
+    pub fn with_threads(
+        problem: Problem,
+        backend: SharedBackend,
+        budget: Budget,
+        threads: usize,
+    ) -> Self {
         let nest = Nest::initial(problem);
-        let evals_at_start = backend.eval_count();
-        let g = backend.eval(&nest);
+        let (g, miss) = backend.eval_detail(&nest);
         let mut ctx = SearchCtx {
             backend,
             start: Instant::now(),
             budget,
-            evals_at_start,
             best: None,
             initial_gflops: g,
             trace: Vec::new(),
+            evals_local: miss as u64,
+            threads: threads.max(1),
             visited: HashSet::new(),
         };
         ctx.observe(&nest, g, 0);
         ctx
     }
 
+    /// Evaluations consumed by this search (cache misses it caused).
     pub fn evals(&self) -> u64 {
-        self.backend.eval_count() - self.evals_at_start
+        self.evals_local
     }
 
+    /// Whether any budget limit has fired.
     pub fn exhausted(&self) -> bool {
         if let Some(t) = self.budget.time {
             if self.start.elapsed() >= t {
@@ -115,7 +164,10 @@ impl SearchCtx {
 
     /// Score a nest and update the incumbent + trace.
     pub fn eval(&mut self, nest: &Nest, depth: usize) -> f64 {
-        let g = self.backend.eval(nest);
+        let (g, miss) = self.backend.eval_detail(nest);
+        if miss {
+            self.evals_local += 1;
+        }
         self.observe(nest, g, depth);
         g
     }
@@ -139,23 +191,71 @@ impl SearchCtx {
     }
 
     /// Expand all valid actions of `nest`, scored. Sorted best-first.
+    ///
+    /// With `threads > 1` (see [`Self::with_threads`]) all candidates are
+    /// scored concurrently through the shared backend; bookkeeping (budget
+    /// accounting, incumbent, trace) is then replayed in deterministic
+    /// action order, so results are independent of thread interleaving.
     pub fn expand(&mut self, nest: &Nest, depth: usize) -> Vec<(Action, Nest, f64)> {
-        let mut out = Vec::with_capacity(crate::NUM_ACTIONS);
+        if self.threads <= 1 {
+            // Serial path: keeps the historical per-candidate budget check.
+            let mut out = Vec::with_capacity(crate::NUM_ACTIONS);
+            for action in Action::all() {
+                if self.exhausted() {
+                    break;
+                }
+                let mut next = nest.clone();
+                if action.apply(&mut next).is_err() {
+                    continue;
+                }
+                let g = self.eval(&next, depth);
+                out.push((action, next, g));
+            }
+            out.sort_by(|a, b| b.2.partial_cmp(&a.2).unwrap());
+            return out;
+        }
+
+        if self.exhausted() {
+            return Vec::new();
+        }
+        let mut cands: Vec<(Action, Nest)> = Vec::with_capacity(crate::NUM_ACTIONS);
         for action in Action::all() {
-            if self.exhausted() {
-                break;
-            }
             let mut next = nest.clone();
-            if action.apply(&mut next).is_err() {
-                continue;
+            if action.apply(&mut next).is_ok() {
+                cands.push((action, next));
             }
-            let g = self.eval(&next, depth);
+        }
+        // Never exceed an eval-count budget: score at most the remaining
+        // allowance (pessimistically assuming every candidate misses), in
+        // the same action order the serial path uses.
+        if let Some(max_evals) = self.budget.max_evals {
+            let remaining = max_evals.saturating_sub(self.evals_local) as usize;
+            if remaining < cands.len() {
+                cands.truncate(remaining);
+            }
+        }
+        let scores = self.eval_candidates(&cands);
+        let mut out = Vec::with_capacity(cands.len());
+        for ((action, next), (g, miss)) in cands.into_iter().zip(scores) {
+            if miss {
+                self.evals_local += 1;
+            }
+            self.observe(&next, g, depth);
             out.push((action, next, g));
         }
         out.sort_by(|a, b| b.2.partial_cmp(&a.2).unwrap());
         out
     }
 
+    /// Score `cands` concurrently; results are index-aligned with input.
+    fn eval_candidates(&self, cands: &[(Action, Nest)]) -> Vec<(f64, bool)> {
+        let backend = &self.backend;
+        crate::util::parallel_indexed_map(cands.len(), self.threads, |i| {
+            backend.eval_detail(&cands[i].1)
+        })
+    }
+
+    /// Consume the context into a [`SearchResult`].
     pub fn finish(self, algo: &str) -> SearchResult {
         let evals = self.evals();
         let elapsed = self.start.elapsed().as_secs_f64();
@@ -174,6 +274,7 @@ impl SearchCtx {
 
 /// The search algorithms of Fig. 6/8/9/10, by name.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[allow(missing_docs)]
 pub enum SearchAlgo {
     Greedy1,
     Greedy2,
@@ -185,6 +286,7 @@ pub enum SearchAlgo {
 }
 
 impl SearchAlgo {
+    /// All algorithms, in report order.
     pub const ALL: [SearchAlgo; 7] = [
         SearchAlgo::Greedy1,
         SearchAlgo::Greedy2,
@@ -195,6 +297,7 @@ impl SearchAlgo {
         SearchAlgo::Random,
     ];
 
+    /// Report name of the algorithm.
     pub fn name(self) -> &'static str {
         match self {
             SearchAlgo::Greedy1 => "greedy1",
@@ -207,11 +310,26 @@ impl SearchAlgo {
         }
     }
 
+    /// Inverse of [`Self::name`].
     pub fn from_name(s: &str) -> Option<SearchAlgo> {
         Self::ALL.iter().copied().find(|a| a.name() == s)
     }
 
-    /// Run this algorithm with `depth` max action-sequence length.
+    /// Run this algorithm with `depth` max action-sequence length and
+    /// serial candidate scoring.
+    ///
+    /// ```
+    /// use looptune::backend::cost_model::CostModel;
+    /// use looptune::backend::SharedBackend;
+    /// use looptune::search::{Budget, SearchAlgo};
+    /// use looptune::Problem;
+    ///
+    /// let backend = SharedBackend::with_factory(CostModel::default);
+    /// let r = SearchAlgo::Greedy2.run(
+    ///     Problem::new(64, 64, 64), backend, Budget::evals(100), 5, 0);
+    /// assert!(r.best_gflops >= r.initial_gflops);
+    /// assert!(r.evals <= 110);
+    /// ```
     pub fn run(
         self,
         problem: Problem,
@@ -220,14 +338,33 @@ impl SearchAlgo {
         depth: usize,
         seed: u64,
     ) -> SearchResult {
+        self.run_threaded(problem, backend, budget, depth, seed, 1)
+    }
+
+    /// Like [`Self::run`], scoring each node's candidate actions on up to
+    /// `expand_threads` worker threads. Worthwhile when evaluations are
+    /// expensive and not timing-sensitive (e.g. a remote or simulated
+    /// measurement service); note that concurrent *wall-clock* timings on
+    /// one machine (the local measuring executor) contend for cores and
+    /// add noise to the very numbers being compared.
+    pub fn run_threaded(
+        self,
+        problem: Problem,
+        backend: SharedBackend,
+        budget: Budget,
+        depth: usize,
+        seed: u64,
+        expand_threads: usize,
+    ) -> SearchResult {
+        let t = expand_threads.max(1);
         match self {
-            SearchAlgo::Greedy1 => greedy::search(problem, backend, budget, depth, 1),
-            SearchAlgo::Greedy2 => greedy::search(problem, backend, budget, depth, 2),
-            SearchAlgo::Beam2Dfs => beam::dfs(problem, backend, budget, depth, 2),
-            SearchAlgo::Beam4Dfs => beam::dfs(problem, backend, budget, depth, 4),
-            SearchAlgo::Beam2Bfs => beam::bfs(problem, backend, budget, depth, 2),
-            SearchAlgo::Beam4Bfs => beam::bfs(problem, backend, budget, depth, 4),
-            SearchAlgo::Random => random::search(problem, backend, budget, depth, seed),
+            SearchAlgo::Greedy1 => greedy::search(problem, backend, budget, depth, 1, t),
+            SearchAlgo::Greedy2 => greedy::search(problem, backend, budget, depth, 2, t),
+            SearchAlgo::Beam2Dfs => beam::dfs(problem, backend, budget, depth, 2, t),
+            SearchAlgo::Beam4Dfs => beam::dfs(problem, backend, budget, depth, 4, t),
+            SearchAlgo::Beam2Bfs => beam::bfs(problem, backend, budget, depth, 2, t),
+            SearchAlgo::Beam4Bfs => beam::bfs(problem, backend, budget, depth, 4, t),
+            SearchAlgo::Random => random::search(problem, backend, budget, depth, seed, t),
         }
     }
 }
@@ -236,10 +373,10 @@ impl SearchAlgo {
 mod tests {
     use super::*;
     use crate::backend::cost_model::CostModel;
-    use crate::backend::{Cached, SharedBackend};
+    use crate::backend::SharedBackend;
 
     fn be() -> SharedBackend {
-        SharedBackend::new(Cached::new(CostModel::default()))
+        SharedBackend::with_factory(CostModel::default)
     }
 
     #[test]
@@ -269,6 +406,23 @@ mod tests {
         for w in exp.windows(2) {
             assert!(w[0].2 >= w[1].2);
         }
+    }
+
+    #[test]
+    fn parallel_expand_matches_serial() {
+        let p = Problem::new(96, 128, 160);
+        let n = Nest::initial(p);
+        let mut serial = SearchCtx::new(p, be(), Budget::evals(10_000));
+        let mut parallel = SearchCtx::with_threads(p, be(), Budget::evals(10_000), 4);
+        let a = serial.expand(&n, 1);
+        let b = parallel.expand(&n, 1);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.0, y.0, "action order diverged");
+            assert_eq!(x.1, y.1, "nest diverged");
+            assert_eq!(x.2, y.2, "score diverged");
+        }
+        assert_eq!(serial.evals(), parallel.evals());
     }
 
     #[test]
@@ -306,6 +460,21 @@ mod tests {
             );
             assert!(r.best_gflops > 0.0);
             assert!(!r.trace.is_empty());
+        }
+    }
+
+    #[test]
+    fn threaded_run_matches_serial_with_ample_budget() {
+        // With a budget the search never exhausts, serial and parallel
+        // expansion evaluate exactly the same states, so results and eval
+        // counts must be byte-identical.
+        let p = Problem::new(112, 112, 112);
+        for algo in [SearchAlgo::Greedy2, SearchAlgo::Beam4Bfs, SearchAlgo::Beam2Dfs] {
+            let a = algo.run(p, be(), Budget::evals(1_000_000), 4, 9);
+            let b = algo.run_threaded(p, be(), Budget::evals(1_000_000), 4, 9, 4);
+            assert_eq!(a.best.loops, b.best.loops, "{}", algo.name());
+            assert_eq!(a.best_gflops, b.best_gflops, "{}", algo.name());
+            assert_eq!(a.evals, b.evals, "{}", algo.name());
         }
     }
 }

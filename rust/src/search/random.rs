@@ -9,14 +9,19 @@ use crate::env::actions::Action;
 use crate::ir::{Nest, Problem};
 use crate::util::rng::Pcg32;
 
+/// Random action-sequence search. `expand_threads` is accepted for
+/// interface uniformity; random search evaluates one rollout state at a
+/// time, so its parallelism comes from the [`super::batch`] driver running
+/// many problems (or seeds) at once.
 pub fn search(
     problem: Problem,
     backend: SharedBackend,
     budget: Budget,
     depth: usize,
     seed: u64,
+    expand_threads: usize,
 ) -> SearchResult {
-    let mut ctx = SearchCtx::new(problem, backend, budget);
+    let mut ctx = SearchCtx::with_threads(problem, backend, budget, expand_threads);
     let mut rng = Pcg32::new(seed);
     let actions = Action::all();
 
@@ -45,23 +50,23 @@ pub fn search(
 mod tests {
     use super::*;
     use crate::backend::cost_model::CostModel;
-    use crate::backend::{Cached, SharedBackend};
+    use crate::backend::SharedBackend;
 
     fn be() -> SharedBackend {
-        SharedBackend::new(Cached::new(CostModel::default()))
+        SharedBackend::with_factory(CostModel::default)
     }
 
     #[test]
     fn improves_with_budget() {
-        let r = search(Problem::new(128, 128, 128), be(), Budget::evals(400), 10, 7);
+        let r = search(Problem::new(128, 128, 128), be(), Budget::evals(400), 10, 7, 1);
         assert!(r.speedup() > 1.0, "speedup {}", r.speedup());
     }
 
     #[test]
     fn deterministic_for_seed() {
         let p = Problem::new(96, 112, 128);
-        let a = search(p, be(), Budget::evals(200), 10, 123);
-        let b = search(p, be(), Budget::evals(200), 10, 123);
+        let a = search(p, be(), Budget::evals(200), 10, 123, 1);
+        let b = search(p, be(), Budget::evals(200), 10, 123, 1);
         assert_eq!(a.best_gflops, b.best_gflops);
         assert_eq!(a.best.loops, b.best.loops);
     }
@@ -69,8 +74,8 @@ mod tests {
     #[test]
     fn different_seeds_explore_differently() {
         let p = Problem::new(96, 112, 128);
-        let a = search(p, be(), Budget::evals(150), 10, 1);
-        let b = search(p, be(), Budget::evals(150), 10, 2);
+        let a = search(p, be(), Budget::evals(150), 10, 1, 1);
+        let b = search(p, be(), Budget::evals(150), 10, 2, 1);
         // Not a hard guarantee, but with 150 evals the visited sets differ.
         assert!(a.best.loops != b.best.loops || a.best_gflops == b.best_gflops);
     }

@@ -77,9 +77,31 @@ pub fn run<F: FnMut()>(name: &str, budget: Duration, min_iters: usize, f: F) -> 
     r
 }
 
+/// Time one invocation of `f`, returning its result and the wall seconds.
+/// Used by the scaling benches, where one batch run IS the measurement
+/// (warmup + repeats would multiply an already-long workload).
+pub fn time_once<T, F: FnOnce() -> T>(f: F) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+/// Parallel speedup of `parallel_secs` relative to `serial_secs`.
+pub fn speedup(serial_secs: f64, parallel_secs: f64) -> f64 {
+    serial_secs / parallel_secs.max(1e-12)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn time_once_and_speedup() {
+        let ((), secs) = time_once(|| std::thread::sleep(Duration::from_millis(5)));
+        assert!(secs >= 0.004, "{secs}");
+        assert!((speedup(4.0, 1.0) - 4.0).abs() < 1e-12);
+        assert!(speedup(1.0, 0.0).is_finite());
+    }
 
     #[test]
     fn bench_reports_sane_times() {

@@ -13,6 +13,58 @@ pub fn ceil_div(a: usize, b: usize) -> usize {
     (a + b - 1) / b
 }
 
+/// Default worker-thread count: every available core (1 if unknown).
+/// The single source of truth for every fan-out default in the crate.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Compute `f(0..n)` on up to `threads` scoped worker threads pulling
+/// indices from a shared atomic counter; results come back in index order.
+/// `threads <= 1` (or `n <= 1`) runs inline with no thread overhead.
+/// The shared work-distribution loop behind `SearchCtx::expand` and the
+/// `tune-many` batch driver.
+pub fn parallel_indexed_map<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let workers = threads.min(n);
+    if workers <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    let f = &f;
+    let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..workers)
+            .map(|_| {
+                let next = &next;
+                s.spawn(move || {
+                    let mut local = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        local.push((i, f(i)));
+                    }
+                    local
+                })
+            })
+            .collect();
+        for h in handles {
+            for (i, v) in h.join().expect("parallel worker panicked") {
+                slots[i] = Some(v);
+            }
+        }
+    });
+    slots
+        .into_iter()
+        .map(|v| v.expect("every index computed exactly once"))
+        .collect()
+}
+
 /// floor(log2(x)) for x >= 1.
 #[inline]
 pub fn ilog2(x: usize) -> u32 {
@@ -30,6 +82,15 @@ mod tests {
         assert_eq!(ceil_div(9, 3), 3);
         assert_eq!(ceil_div(1, 64), 1);
         assert_eq!(ceil_div(0, 5), 0);
+    }
+
+    #[test]
+    fn parallel_indexed_map_orders_results() {
+        for threads in [1usize, 3, 8] {
+            let out = parallel_indexed_map(17, threads, |i| i * i);
+            assert_eq!(out, (0..17).map(|i| i * i).collect::<Vec<_>>(), "{threads}");
+        }
+        assert!(parallel_indexed_map(0, 4, |i| i).is_empty());
     }
 
     #[test]

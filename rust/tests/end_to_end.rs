@@ -4,7 +4,7 @@
 //! are recorded in EXPERIMENTS.md.
 
 use looptune::backend::cost_model::CostModel;
-use looptune::backend::{Cached, SharedBackend};
+use looptune::backend::SharedBackend;
 use looptune::ir::Problem;
 use looptune::rl::{self, dqn};
 use looptune::runtime::Runtime;
@@ -19,7 +19,7 @@ fn runtime() -> Option<Rc<Runtime>> {
 }
 
 fn backend() -> SharedBackend {
-    SharedBackend::new(Cached::new(CostModel::default()))
+    SharedBackend::with_factory(CostModel::default)
 }
 
 #[test]
@@ -82,6 +82,7 @@ fn fig10_runs_without_artifacts_and_emits_csv() {
         scale: 1.0,
         params_path: None,
         seed: 3,
+        threads: 2,
     };
     let md =
         looptune::eval::experiments::fig10(&cfg, Problem::new(128, 128, 128), 0.5)

@@ -1,0 +1,151 @@
+//! Concurrency correctness tests for the thread-safe evaluation stack:
+//! the lock-striped shared cache keeps exact eval/hit accounting under
+//! contention, the cursor-insensitive dedup property survives the handle,
+//! and parallel `tune-many` is bit-identical to a serial run at a fixed
+//! seed with evaluation-count budgets.
+
+use looptune::backend::cost_model::CostModel;
+use looptune::backend::{Backend, SharedBackend};
+use looptune::dataset;
+use looptune::ir::{Nest, Problem};
+use looptune::search::batch::{self, BatchCfg};
+use looptune::search::{Budget, SearchAlgo};
+
+fn be() -> SharedBackend {
+    SharedBackend::with_factory(CostModel::default)
+}
+
+#[test]
+fn parallel_tune_many_matches_serial_bit_for_bit() {
+    let ds = dataset::canonical();
+    let problems: Vec<Problem> = ds.test.iter().take(16).copied().collect();
+    let cfg1 = BatchCfg {
+        algo: SearchAlgo::Greedy2,
+        budget: Budget::evals(150),
+        depth: 10,
+        seed: 42,
+        threads: 1,
+        expand_threads: 1,
+    };
+    let cfg4 = BatchCfg { threads: 4, ..cfg1 };
+
+    let serial = batch::run(&problems, &be(), &cfg1);
+    let parallel = batch::run(&problems, &be(), &cfg4);
+
+    assert_eq!(serial.outcomes.len(), parallel.outcomes.len());
+    for (a, b) in serial.outcomes.iter().zip(&parallel.outcomes) {
+        assert_eq!(a.problem, b.problem);
+        assert_eq!(a.best_gflops, b.best_gflops, "{}", a.problem);
+        assert_eq!(a.initial_gflops, b.initial_gflops, "{}", a.problem);
+        assert_eq!(a.evals, b.evals, "{}", a.problem);
+        assert_eq!(a.schedule, b.schedule, "{}", a.problem);
+    }
+    // Aggregate accounting also agrees: distinct problems -> the shared
+    // cache sees the same miss set regardless of interleaving.
+    assert_eq!(serial.evals, parallel.evals);
+    assert_eq!(serial.cache_hits, parallel.cache_hits);
+}
+
+#[test]
+fn batch_runs_every_algo_across_threads() {
+    let problems: Vec<Problem> =
+        (0..6).map(|i| Problem::new(64 + 16 * i, 96, 80)).collect();
+    for algo in SearchAlgo::ALL {
+        let cfg = BatchCfg {
+            algo,
+            budget: Budget::evals(80),
+            depth: 8,
+            seed: 3,
+            threads: 3,
+            expand_threads: 1,
+        };
+        let report = batch::run(&problems, &be(), &cfg);
+        assert_eq!(report.outcomes.len(), problems.len(), "{}", algo.name());
+        for o in &report.outcomes {
+            assert!(o.best_gflops > 0.0, "{}: {}", algo.name(), o.problem);
+            assert!(o.speedup >= 1.0 - 1e-9, "{}: {}", algo.name(), o.problem);
+            assert!(o.evals <= 90, "{}: {} evals", algo.name(), o.evals);
+        }
+    }
+}
+
+/// A backend that counts real evaluations and burns a little CPU so that
+/// concurrent misses genuinely overlap.
+struct SlowCounting(u64);
+
+impl Backend for SlowCounting {
+    fn eval(&mut self, nest: &Nest) -> f64 {
+        self.0 += 1;
+        let mut acc = 0.0f64;
+        for i in 0..2_000 {
+            acc += ((i * nest.loops.len()) as f64).sqrt();
+        }
+        std::hint::black_box(acc);
+        nest.loops.len() as f64 + nest.problem.m as f64 / 1e6
+    }
+    fn name(&self) -> &'static str {
+        "slow_counting"
+    }
+    fn eval_count(&self) -> u64 {
+        self.0
+    }
+}
+
+#[test]
+fn eval_and_hit_accounting_is_exact_under_contention() {
+    // 8 threads hammer the same 30 keys concurrently: each distinct key
+    // must be computed exactly once (the OnceLock cell), and every other
+    // lookup must be accounted as a hit — no lost or double counts.
+    let be = SharedBackend::with_factory(|| SlowCounting(0));
+    let nests: Vec<Nest> = (0..30)
+        .map(|i| Nest::initial(Problem::new(64 + 16 * (i % 6), 64 + 16 * (i / 6), 64)))
+        .collect();
+    let threads = 8;
+    std::thread::scope(|s| {
+        for t in 0..threads {
+            let be = be.clone();
+            let nests = &nests;
+            s.spawn(move || {
+                // Different starting offsets maximize same-key collisions.
+                for i in 0..nests.len() {
+                    let n = &nests[(i + t * 7) % nests.len()];
+                    assert!(be.eval(n) > 0.0);
+                }
+            });
+        }
+    });
+    assert_eq!(be.eval_count(), 30);
+    assert_eq!(be.hits(), (threads as u64) * 30 - 30);
+}
+
+#[test]
+fn cursor_insensitive_dedup_holds_through_the_handle() {
+    // The property of backend::tests::cache_dedups_and_ignores_cursor,
+    // through the concurrent SharedBackend handle.
+    let be = be();
+    let mut n = Nest::initial(Problem::new(64, 64, 64));
+    let g1 = be.eval(&n);
+    n.cursor_down().unwrap(); // cursor differs, same schedule
+    let g2 = be.eval(&n);
+    assert_eq!(g1, g2);
+    assert_eq!(be.eval_count(), 1);
+    assert_eq!(be.hits(), 1);
+
+    n.split(8).unwrap(); // different schedule -> re-eval
+    be.eval(&n);
+    assert_eq!(be.eval_count(), 2);
+}
+
+#[test]
+fn env_and_search_share_one_concurrent_cache() {
+    let p = Problem::new(112, 112, 112);
+    let be = be();
+    let env = looptune::env::Env::new(p, be.clone(), 70.0);
+    assert!(env.gflops > 0.0);
+    let misses_after_env = be.eval_count();
+    let r = SearchAlgo::Greedy1.run(p, be.clone(), Budget::evals(50), 10, 1);
+    // The search's initial-state eval was already cached by the env.
+    assert!(r.best_gflops > 0.0);
+    assert!(be.eval_count() >= misses_after_env);
+    assert!(be.hits() > 0);
+}

@@ -4,7 +4,7 @@
 //! note if the artifacts are missing).
 
 use looptune::backend::cost_model::CostModel;
-use looptune::backend::{Cached, SharedBackend};
+use looptune::backend::SharedBackend;
 use looptune::ir::Problem;
 use looptune::rl::params::ParamSet;
 use looptune::rl::{self, dqn, ppo};
@@ -22,7 +22,7 @@ fn runtime() -> Option<Rc<Runtime>> {
 }
 
 fn backend() -> SharedBackend {
-    SharedBackend::new(Cached::new(CostModel::default()))
+    SharedBackend::with_factory(CostModel::default)
 }
 
 #[test]

@@ -3,14 +3,14 @@
 //! these use the crate's Pcg32 the same way).
 
 use looptune::backend::cost_model::CostModel;
-use looptune::backend::{Backend, Cached, SharedBackend};
+use looptune::backend::{Backend, SharedBackend};
 use looptune::env::actions::Action;
 use looptune::ir::{Nest, Problem};
 use looptune::search::{Budget, SearchAlgo};
 use looptune::util::rng::Pcg32;
 
 fn be() -> SharedBackend {
-    SharedBackend::new(Cached::new(CostModel::default()))
+    SharedBackend::with_factory(CostModel::default)
 }
 
 fn random_problem(rng: &mut Pcg32) -> Problem {

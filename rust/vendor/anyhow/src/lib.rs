@@ -1,0 +1,179 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! The container this repo builds in has no crates.io access, so the crate
+//! graph must be fully vendored. This shim implements exactly the `anyhow`
+//! API subset looptune uses — [`Error`], [`Result`], the [`Context`]
+//! extension trait, and the [`anyhow!`]/[`bail!`] macros — with the same
+//! semantics for those paths. Swapping in the real `anyhow` is a one-line
+//! `Cargo.toml` change; no source edits are needed.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// A type-erased error: a display message plus an optional source chain.
+pub struct Error {
+    msg: String,
+    source: Option<Box<dyn StdError + Send + Sync + 'static>>,
+}
+
+impl Error {
+    /// Create an error from a displayable message (what `anyhow!` expands to).
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msg: message.to_string(), source: None }
+    }
+
+    /// Wrap this error with an additional layer of context.
+    pub fn context<C: fmt::Display>(self, context: C) -> Error {
+        Error { msg: format!("{context}: {}", self.msg), source: self.source }
+    }
+
+    /// The underlying cause, if this error wraps one.
+    pub fn source(&self) -> Option<&(dyn StdError + 'static)> {
+        self.source.as_ref().map(|e| &**e as &(dyn StdError + 'static))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        let mut cause = self.source();
+        if cause.is_some() {
+            write!(f, "\n\nCaused by:")?;
+        }
+        while let Some(e) = cause {
+            write!(f, "\n    {e}")?;
+            cause = e.source();
+        }
+        Ok(())
+    }
+}
+
+// Like the real anyhow: `Error` deliberately does NOT implement
+// `std::error::Error`, which is what makes this blanket conversion
+// coherent alongside core's reflexive `From<T> for T`.
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error { msg: e.to_string(), source: Some(Box::new(e)) }
+    }
+}
+
+/// `Result<T, anyhow::Error>` with the error type defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(...)` / `.with_context(...)` to
+/// `Result` and `Option`.
+pub trait Context<T> {
+    /// Attach a context message, evaluated eagerly.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    /// Attach a context message, evaluated lazily on the error path.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: StdError + Send + Sync + 'static> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error {
+            msg: format!("{context}: {e}"),
+            source: Some(Box::new(e)),
+        })
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error {
+            msg: format!("{}: {e}", f()),
+            source: Some(Box::new(e)),
+        })
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing")
+    }
+
+    #[test]
+    fn from_std_error_and_display() {
+        let e: Error = io_err().into();
+        assert_eq!(e.to_string(), "missing");
+        assert!(e.source().is_some());
+    }
+
+    #[test]
+    fn context_chains_messages() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("reading manifest").unwrap_err();
+        assert_eq!(e.to_string(), "reading manifest: missing");
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.with_context(|| format!("step {}", 2)).unwrap_err();
+        assert_eq!(e.to_string(), "step 2: missing");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        assert_eq!(v.context("empty").unwrap_err().to_string(), "empty");
+        assert_eq!(Some(3u32).context("empty").unwrap(), 3);
+    }
+
+    #[test]
+    fn macros_format() {
+        let e = anyhow!("bad value {} ({})", 7, "seven");
+        assert_eq!(e.to_string(), "bad value 7 (seven)");
+        fn f() -> Result<()> {
+            bail!("nope {}", 1);
+        }
+        assert_eq!(f().unwrap_err().to_string(), "nope 1");
+    }
+
+    #[test]
+    fn question_mark_converts() {
+        fn f() -> Result<String> {
+            let s = std::str::from_utf8(&[0xff])?;
+            Ok(s.to_string())
+        }
+        assert!(f().is_err());
+    }
+
+    #[test]
+    fn debug_prints_cause_chain() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("outer").unwrap_err();
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("outer: missing"));
+        assert!(dbg.contains("Caused by"));
+    }
+}
