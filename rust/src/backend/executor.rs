@@ -2,29 +2,45 @@
 //! and measures GFLOPS. This is our LoopNest: the schedule decides loop
 //! order, tiling and therefore the memory-access pattern; the executor
 //! contributes the hardware-specific layer (vectorized innermost
-//! microkernels, register-tiled innermost pairs, clamped tails).
+//! microkernels for matmul-shaped compute nests, a generic access-map
+//! interpreter for every other contraction, clamped tails everywhere).
+//!
+//! Two compute paths, selected at plan time:
+//!
+//! - **Matmul fast path** (`Problem::mm_kernel_shape()` is `Some`): the
+//!   innermost level(s) dispatch to the register-tiled microkernels in
+//!   [`super::microkernel`], exactly as the seed did — plain matmul and
+//!   MLP layers keep their measured performance characteristics.
+//! - **Generic path**: the innermost level walks each tensor by its
+//!   access-map stride (`T[out] (+)= In0 * In1`), which executes *any*
+//!   linear-access contraction — batched matmul, convolutions, transposed
+//!   matmul — correctly, including clamped partial chunks.
+//!
+//! The write-back nest is always executed generically (copy, or the
+//! problem's bias + ReLU epilogue), with a `copy_from_slice` fast path for
+//! unit-stride plain copies.
 //!
 //! Measurement follows the paper's protocol (warm-up runs excluded, fastest
 //! of several timed executions), with the warm-up count reduced from 20 to
-//! a configurable small number — at ~10^7 FMAs per run, 20 warm-ups per
-//! reward would blow any search budget on this single-core testbed
-//! (deviation recorded in DESIGN.md §4).
+//! a configurable small number (deviation recorded in DESIGN.md §4).
 
 use super::microkernel as mk;
 use super::schedule::{lower, CompiledSchedule, Level};
 use super::Backend;
-use crate::ir::{Dim, Nest, Problem};
+use crate::ir::{Access, Dim, Nest, Problem, MAX_DIMS};
 use crate::util::rng::Pcg32;
 use std::time::Instant;
 
-/// How the innermost level(s) are dispatched.
+/// How the innermost compute level(s) are dispatched.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 enum InnerKind {
-    /// Single innermost level, by dim.
+    /// Generic access-map interpreter over the innermost level.
+    Generic,
+    /// Matmul fast path: single innermost level, by matmul dim.
     Single(Dim),
-    /// Fused (k, n) pair: k at depth L-2, n at depth L-1.
+    /// Matmul fused (k, n) pair: k at depth L-2, n at depth L-1.
     PairKN,
-    /// Fused (n, k) pair: n at depth L-2, k at depth L-1.
+    /// Matmul fused (n, k) pair: n at depth L-2, k at depth L-1.
     PairNK,
 }
 
@@ -34,54 +50,77 @@ pub struct ExecPlan {
     inner: InnerKind,
     /// Number of leading compute levels executed by the generic recursion.
     cut: usize,
+    /// `(m, n, k)` extents when the matmul fast path is active.
+    mm: (usize, usize, usize),
 }
 
 /// Plan a compiled schedule: choose the innermost dispatch.
 pub fn plan(sched: CompiledSchedule) -> ExecPlan {
     let n = sched.levels.len();
+    let Some(mm) = sched.problem.mm_kernel_shape() else {
+        return ExecPlan { sched, inner: InnerKind::Generic, cut: n - 1, mm: (0, 0, 0) };
+    };
     let inner = if n >= 2 {
         let a = sched.levels[n - 2];
         let b = sched.levels[n - 1];
         // Deepest level of any dim has IR stride 1; a fused pair needs both
         // ranges contiguous.
-        match (a.dim, a.stride, b.dim, b.stride) {
-            (Dim::K, 1, Dim::N, 1) => InnerKind::PairKN,
-            (Dim::N, 1, Dim::K, 1) => InnerKind::PairNK,
-            _ => InnerKind::Single(b.dim),
+        if a.stride == 1 && b.stride == 1 && a.dim == Dim::K && b.dim == Dim::N {
+            InnerKind::PairKN
+        } else if a.stride == 1 && b.stride == 1 && a.dim == Dim::N && b.dim == Dim::K {
+            InnerKind::PairNK
+        } else {
+            InnerKind::Single(b.dim)
         }
     } else {
         InnerKind::Single(sched.levels[n - 1].dim)
     };
     let cut = match inner {
-        InnerKind::Single(_) => n - 1,
-        _ => n - 2,
+        InnerKind::PairKN | InnerKind::PairNK => n - 2,
+        _ => n - 1,
     };
-    ExecPlan { sched, inner, cut }
+    ExecPlan { sched, inner, cut, mm }
 }
 
 /// Workspace: input/accumulator/output buffers for one problem.
 pub struct Workspace {
+    /// The problem these buffers are sized for.
     pub problem: Problem,
-    pub a: Vec<f32>,
-    pub b: Vec<f32>,
+    /// Input tensor buffers, in `Problem::inputs()` order.
+    pub inputs: [Vec<f32>; 2],
+    /// Bias buffer (empty when the problem has no bias tensor).
+    pub bias: Vec<f32>,
+    /// Accumulator written by the compute nest.
     pub t: Vec<f32>,
+    /// Final output written by the write-back nest.
     pub c: Vec<f32>,
 }
 
 impl Workspace {
+    /// Buffers for `problem`, inputs filled with seeded uniform values.
     pub fn new(problem: Problem, seed: u64) -> Self {
         let mut rng = Pcg32::new(seed);
         let mut fill = |len: usize| -> Vec<f32> {
             (0..len).map(|_| rng.next_f32() * 2.0 - 1.0).collect()
         };
-        Workspace {
-            problem,
-            a: fill(problem.m * problem.k),
-            b: fill(problem.k * problem.n),
-            t: vec![0.0; problem.m * problem.n],
-            c: vec![0.0; problem.m * problem.n],
-        }
+        let [i0, i1] = *problem.inputs();
+        let inputs = [fill(problem.tensor_len(&i0)), fill(problem.tensor_len(&i1))];
+        let bias = match problem.bias() {
+            Some(b) => fill(problem.tensor_len(b)),
+            None => Vec::new(),
+        };
+        let out_len = problem.out_len();
+        Workspace { problem, inputs, bias, t: vec![0.0; out_len], c: vec![0.0; out_len] }
     }
+}
+
+/// Initial per-dim index/extent arrays for a problem.
+fn full_extents(p: &Problem) -> [usize; MAX_DIMS] {
+    let mut ext = [1usize; MAX_DIMS];
+    for d in p.dims() {
+        ext[d.index()] = p.extent(d);
+    }
+    ext
 }
 
 /// Execute the compute + write-back nests once. T is zeroed first (part of
@@ -89,20 +128,20 @@ impl Workspace {
 pub fn run_once(plan: &ExecPlan, ws: &mut Workspace) {
     ws.t.fill(0.0);
     let p = ws.problem;
-    let mut idx = [0usize; 3];
-    let mut ext = [p.m, p.n, p.k];
+    let mut idx = [0usize; MAX_DIMS];
+    let mut ext = full_extents(&p);
     exec_compute(plan, 0, &mut idx, &mut ext, ws);
 
-    let mut idx = [0usize; 3];
-    let mut ext = [p.m, p.n, p.k];
+    let mut idx = [0usize; MAX_DIMS];
+    let mut ext = full_extents(&p);
     exec_writeback(plan, 0, &mut idx, &mut ext, ws);
 }
 
 fn exec_compute(
     plan: &ExecPlan,
     lvl: usize,
-    idx: &mut [usize; 3],
-    ext: &mut [usize; 3],
+    idx: &mut [usize; MAX_DIMS],
+    ext: &mut [usize; MAX_DIMS],
     ws: &mut Workspace,
 ) {
     if lvl == plan.cut {
@@ -123,29 +162,82 @@ fn exec_compute(
 }
 
 #[inline]
-fn dispatch_inner(plan: &ExecPlan, idx: &[usize; 3], ext: &[usize; 3], ws: &mut Workspace) {
-    let p = ws.problem;
+fn dispatch_inner(
+    plan: &ExecPlan,
+    idx: &[usize; MAX_DIMS],
+    ext: &[usize; MAX_DIMS],
+    ws: &mut Workspace,
+) {
+    if plan.inner == InnerKind::Generic {
+        return generic_inner(plan, idx, ext, ws);
+    }
+    // Matmul fast path: dims 0/1/2 are m/n/k by `mm_kernel_shape`.
+    let (_, bn, bk) = plan.mm;
     let (m0, n0, k0) = (idx[0], idx[1], idx[2]);
+    let Workspace { inputs, t, .. } = ws;
+    let a = &inputs[0][..];
+    let b = &inputs[1][..];
     match plan.inner {
         InnerKind::PairKN => {
             debug_assert_eq!(ext[0], 1);
-            mk::kn_tile(&mut ws.t, &ws.a, &ws.b, p.n, p.k, m0, n0, ext[1], k0, ext[2]);
+            mk::kn_tile(t, a, b, bn, bk, m0, n0, ext[1], k0, ext[2]);
         }
         InnerKind::PairNK => {
             debug_assert_eq!(ext[0], 1);
-            mk::nk_tile(&mut ws.t, &ws.a, &ws.b, p.n, p.k, m0, n0, ext[1], k0, ext[2]);
+            mk::nk_tile(t, a, b, bn, bk, m0, n0, ext[1], k0, ext[2]);
         }
-        InnerKind::Single(Dim::N) => {
+        InnerKind::Single(d) if d == Dim::N => {
             debug_assert!(ext[0] == 1 && ext[2] == 1);
-            mk::inner_n(&mut ws.t, &ws.a, &ws.b, p.n, p.k, m0, n0, k0, ext[1]);
+            mk::inner_n(t, a, b, bn, bk, m0, n0, k0, ext[1]);
         }
-        InnerKind::Single(Dim::K) => {
+        InnerKind::Single(d) if d == Dim::K => {
             debug_assert!(ext[0] == 1 && ext[1] == 1);
-            mk::inner_k(&mut ws.t, &ws.a, &ws.b, p.n, p.k, m0, n0, k0, ext[2]);
+            mk::inner_k(t, a, b, bn, bk, m0, n0, k0, ext[2]);
         }
-        InnerKind::Single(Dim::M) => {
+        InnerKind::Single(_) => {
             debug_assert!(ext[1] == 1 && ext[2] == 1);
-            mk::inner_m(&mut ws.t, &ws.a, &ws.b, p.n, p.k, m0, n0, k0, ext[0]);
+            mk::inner_m(t, a, b, bn, bk, m0, n0, k0, ext[0]);
+        }
+        InnerKind::Generic => unreachable!("handled above"),
+    }
+}
+
+/// Generic innermost compute: walk the innermost level, advancing every
+/// tensor by its access-map stride. At this depth every other dim's chunk
+/// is 1 (its stride-1 loop is further out), so base offsets come straight
+/// from `idx`.
+fn generic_inner(
+    plan: &ExecPlan,
+    idx: &[usize; MAX_DIMS],
+    ext: &[usize; MAX_DIMS],
+    ws: &mut Workspace,
+) {
+    let p = ws.problem;
+    let d = plan.sched.levels[plan.cut].dim;
+    let len = ext[d.index()];
+    let [ti0, ti1] = *p.inputs();
+    let (s0, s1) = (ti0.access.stride_or_zero(d), ti1.access.stride_or_zero(d));
+    let st = p.out_access().stride_or_zero(d);
+    let (mut o0, mut o1) = (ti0.access.offset(idx), ti1.access.offset(idx));
+    let mut ot = p.out_access().offset(idx);
+    let Workspace { inputs, t, .. } = ws;
+    let in0 = &inputs[0][..];
+    let in1 = &inputs[1][..];
+    if st == 0 {
+        // Reduction-dim innermost: accumulate into one output element.
+        let mut acc = 0.0f32;
+        for _ in 0..len {
+            acc += in0[o0] * in1[o1];
+            o0 += s0;
+            o1 += s1;
+        }
+        t[ot] += acc;
+    } else {
+        for _ in 0..len {
+            t[ot] += in0[o0] * in1[o1];
+            o0 += s0;
+            o1 += s1;
+            ot += st;
         }
     }
 }
@@ -153,29 +245,13 @@ fn dispatch_inner(plan: &ExecPlan, idx: &[usize; 3], ext: &[usize; 3], ws: &mut 
 fn exec_writeback(
     plan: &ExecPlan,
     lvl: usize,
-    idx: &mut [usize; 3],
-    ext: &mut [usize; 3],
+    idx: &mut [usize; MAX_DIMS],
+    ext: &mut [usize; MAX_DIMS],
     ws: &mut Workspace,
 ) {
     let levels = &plan.sched.wb_levels;
     if lvl + 1 == levels.len() {
-        let p = ws.problem;
-        let last = levels[lvl];
-        // Iterate the last level directly with a copy microkernel.
-        let d = last.dim.index();
-        debug_assert_eq!(last.stride, 1, "deepest write-back level");
-        match last.dim {
-            Dim::N => {
-                debug_assert_eq!(ext[0], 1);
-                mk::copy_row(&mut ws.c, &ws.t, p.n, idx[0], idx[1], ext[d]);
-            }
-            Dim::M => {
-                debug_assert_eq!(ext[1], 1);
-                mk::copy_col(&mut ws.c, &ws.t, p.n, idx[0], idx[1], ext[d]);
-            }
-            Dim::K => unreachable!("write-back nest has no k loop"),
-        }
-        return;
+        return writeback_inner(plan, idx, ext, ws);
     }
     let Level { dim, stride } = levels[lvl];
     let d = dim.index();
@@ -191,16 +267,101 @@ fn exec_writeback(
     ext[d] = total;
 }
 
-/// Naive reference result for verification.
+/// Innermost write-back level: apply the epilogue along one dim.
+fn writeback_inner(
+    plan: &ExecPlan,
+    idx: &[usize; MAX_DIMS],
+    ext: &[usize; MAX_DIMS],
+    ws: &mut Workspace,
+) {
+    let p = ws.problem;
+    let last = *plan.sched.wb_levels.last().expect("non-empty write-back nest");
+    debug_assert_eq!(last.stride, 1, "deepest write-back level");
+    let d = last.dim;
+    let len = ext[d.index()];
+    // `d` is an output dim, so the out access indexes it with stride >= 1.
+    let sc = p.out_access().stride_or_zero(d);
+    debug_assert!(sc >= 1);
+    let base = p.out_access().offset(idx);
+    let bias_access: Option<&Access> = p.bias().map(|b| &b.access);
+    if bias_access.is_none() && !p.relu() && sc == 1 {
+        ws.c[base..base + len].copy_from_slice(&ws.t[base..base + len]);
+        return;
+    }
+    let (sb, mut ob) = match bias_access {
+        Some(a) => (a.stride_or_zero(d), a.offset(idx)),
+        None => (0, 0),
+    };
+    let relu = p.relu();
+    let has_bias = bias_access.is_some();
+    let Workspace { bias, t, c, .. } = ws;
+    let mut o = base;
+    for _ in 0..len {
+        let mut v = t[o];
+        if has_bias {
+            v += bias[ob];
+            ob += sb;
+        }
+        if relu {
+            v = v.max(0.0);
+        }
+        c[o] = v;
+        o += sc;
+    }
+}
+
+/// Naive reference result for verification: walk the full iteration space
+/// point by point through the access maps, then apply the epilogue.
 pub fn reference(ws: &Workspace) -> Vec<f32> {
     let p = ws.problem;
-    let mut c = vec![0.0f32; p.m * p.n];
-    for i in 0..p.m {
-        for l in 0..p.k {
-            let av = ws.a[i * p.k + l];
-            for j in 0..p.n {
-                c[i * p.n + j] += av * ws.b[l * p.n + j];
+    let nd = p.n_dims();
+    let [ti0, ti1] = *p.inputs();
+    let out = *p.out_access();
+    let mut t = vec![0.0f32; p.out_len()];
+    let mut idx = [0usize; MAX_DIMS];
+    'space: loop {
+        t[out.offset(&idx)] += ws.inputs[0][ti0.access.offset(&idx)]
+            * ws.inputs[1][ti1.access.offset(&idx)];
+        // Odometer over all dims, innermost-last.
+        let mut d = nd;
+        loop {
+            if d == 0 {
+                break 'space;
             }
+            d -= 1;
+            idx[d] += 1;
+            if idx[d] < p.extent(Dim::new(d)) {
+                break;
+            }
+            idx[d] = 0;
+        }
+    }
+    // Epilogue over the output index space.
+    let out_dims: Vec<Dim> = p.output_dims().collect();
+    let mut c = vec![0.0f32; p.out_len()];
+    let mut idx = [0usize; MAX_DIMS];
+    'out: loop {
+        let o = out.offset(&idx);
+        let mut v = t[o];
+        if let Some(b) = p.bias() {
+            v += ws.bias[b.access.offset(&idx)];
+        }
+        if p.relu() {
+            v = v.max(0.0);
+        }
+        c[o] = v;
+        let mut i = out_dims.len();
+        loop {
+            if i == 0 {
+                break 'out;
+            }
+            i -= 1;
+            let d = out_dims[i];
+            idx[d.index()] += 1;
+            if idx[d.index()] < p.extent(d) {
+                break;
+            }
+            idx[d.index()] = 0;
         }
     }
     c
@@ -209,7 +370,9 @@ pub fn reference(ws: &Workspace) -> Vec<f32> {
 /// Measurement configuration (paper §III-B protocol, budget-scaled).
 #[derive(Clone, Copy, Debug)]
 pub struct MeasureCfg {
+    /// Untimed warm-up runs before measurement.
     pub warmup: usize,
+    /// Timed runs; the fastest is reported.
     pub repeats: usize,
 }
 
@@ -243,6 +406,7 @@ pub struct ExecutorBackend {
 }
 
 impl ExecutorBackend {
+    /// Backend with the given measurement protocol.
     pub fn new(cfg: MeasureCfg) -> Self {
         ExecutorBackend { ws: None, cfg, evals: 0, seed: 0x5eed }
     }
@@ -291,7 +455,8 @@ mod tests {
         let d = max_abs_diff(&ws.c, &want);
         assert!(
             d < 1e-3,
-            "schedule {} diff {d}",
+            "{} schedule {} diff {d}",
+            nest.problem,
             crate::ir::transform::schedule_signature(nest)
         );
     }
@@ -300,6 +465,31 @@ mod tests {
     fn initial_schedule_is_correct() {
         check_nest(&Nest::initial(Problem::new(17, 23, 31)));
         check_nest(&Nest::initial(Problem::new(64, 64, 64)));
+    }
+
+    #[test]
+    fn initial_generalized_workloads_are_correct() {
+        check_nest(&Nest::initial(Problem::batched_matmul(3, 10, 12, 14)));
+        check_nest(&Nest::initial(Problem::conv1d(20, 6, 5, 4)));
+        check_nest(&Nest::initial(Problem::conv2d(13, 11, 3, 5)));
+        check_nest(&Nest::initial(Problem::mlp(9, 14, 20)));
+        check_nest(&Nest::initial(Problem::matmul_transposed(12, 18, 7)));
+    }
+
+    #[test]
+    fn mlp_epilogue_applies_bias_and_relu() {
+        let p = Problem::mlp(6, 8, 10);
+        let mut ws = Workspace::new(p, 2);
+        let pl = plan(lower(&Nest::initial(p)));
+        run_once(&pl, &mut ws);
+        // Spot-check the epilogue independently of `reference`.
+        let n = 8usize;
+        for (i, &cv) in ws.c.iter().enumerate() {
+            let want = (ws.t[i] + ws.bias[i % n]).max(0.0);
+            assert!((cv - want).abs() < 1e-6, "c[{i}] = {cv}, want {want}");
+        }
+        assert!(ws.c.iter().all(|&v| v >= 0.0), "relu clamps negatives");
+        check_nest(&Nest::initial(p));
     }
 
     #[test]
@@ -343,16 +533,23 @@ mod tests {
         check_nest(&n);
     }
 
-    /// Property: random schedules always produce the exact contraction.
+    /// Property: random schedules always produce the exact contraction,
+    /// for every workload family (clamped tails, permutations, deep tiles).
     #[test]
     fn prop_random_schedules_correct() {
         for seed in 0..15u64 {
             let mut rng = Pcg32::new(seed * 31 + 7);
-            let p = Problem::new(
-                8 + rng.below(40),
-                8 + rng.below(40),
-                8 + rng.below(40),
-            );
+            let p = match seed % 5 {
+                0 => Problem::batched_matmul(2 + rng.below(3), 6 + rng.below(10), 8, 9),
+                1 => Problem::conv1d(10 + rng.below(20), 4 + rng.below(6), 3, 5),
+                2 => Problem::conv2d(8 + rng.below(12), 8 + rng.below(12), 3, 3),
+                3 => Problem::mlp(8 + rng.below(20), 8 + rng.below(20), 8 + rng.below(20)),
+                _ => Problem::new(
+                    8 + rng.below(40),
+                    8 + rng.below(40),
+                    8 + rng.below(40),
+                ),
+            };
             let mut n = Nest::initial(p);
             for _ in 0..25 {
                 match rng.below(5) {
@@ -384,6 +581,16 @@ mod tests {
         n3.split(8).unwrap(); // m n k k:8 -> (k,k) not a pair -> single k
         let pl = plan(lower(&n3));
         assert_eq!(pl.inner, InnerKind::Single(Dim::K));
+
+        // MLP compute is matmul-shaped: fast path stays active.
+        let pl = plan(lower(&Nest::initial(Problem::mlp(8, 8, 8))));
+        assert_eq!(pl.inner, InnerKind::PairNK);
+
+        // Non-matmul access maps go generic.
+        let pl = plan(lower(&Nest::initial(Problem::conv2d(8, 8, 3, 3))));
+        assert_eq!(pl.inner, InnerKind::Generic);
+        let pl = plan(lower(&Nest::initial(Problem::matmul_transposed(8, 8, 8))));
+        assert_eq!(pl.inner, InnerKind::Generic);
     }
 
     #[test]
@@ -393,5 +600,9 @@ mod tests {
         let g = be.eval(&n);
         assert!(g > 0.01, "gflops {g}");
         assert_eq!(be.eval_count(), 1);
+
+        // Non-matmul workloads also measure end-to-end.
+        let g = be.eval(&Nest::initial(Problem::conv2d(16, 16, 3, 3)));
+        assert!(g > 0.0, "conv gflops {g}");
     }
 }

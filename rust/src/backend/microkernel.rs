@@ -17,6 +17,11 @@
 //! so LLVM auto-vectorizes the unit-stride loops (verified via the
 //! `executor` bench; see EXPERIMENTS.md §Perf).
 
+// The microkernel signatures mirror hand-written BLAS inner loops: flat
+// buffers + explicit leading dimensions + tile coordinates. Bundling them
+// into structs would cost the hot path its #[inline] simplicity.
+#![allow(clippy::too_many_arguments)]
+
 /// T[m, n0..n0+len] += A[m, k] * B[k, n0..n0+len]   (axpy row update)
 #[inline]
 pub fn inner_n(t: &mut [f32], a: &[f32], b: &[f32], big_n: usize, big_k: usize,
@@ -136,23 +141,6 @@ pub fn nk_tile(t: &mut [f32], a: &[f32], b: &[f32], big_n: usize, big_k: usize,
     }
 }
 
-/// Unit-stride copy row for the write-back nest: C[m, n0..n0+len] = T[..].
-#[inline]
-pub fn copy_row(c: &mut [f32], t: &[f32], big_n: usize, m: usize, n0: usize, len: usize) {
-    let base = m * big_n + n0;
-    c[base..base + len].copy_from_slice(&t[base..base + len]);
-}
-
-/// Strided copy column: C[m0..m0+len, n] = T[.., n].
-#[inline]
-pub fn copy_col(c: &mut [f32], t: &[f32], big_n: usize, m0: usize, n: usize, len: usize) {
-    let mut idx = m0 * big_n + n;
-    for _ in 0..len {
-        c[idx] = t[idx];
-        idx += big_n;
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -249,21 +237,5 @@ mod tests {
             }
         }
         assert_eq!(t, want);
-    }
-
-    #[test]
-    fn copy_kernels() {
-        let n = 6;
-        let t: Vec<f32> = (0..24).map(|x| x as f32).collect();
-        let mut c = vec![0.0f32; 24];
-        for m in 0..4 {
-            copy_row(&mut c, &t, n, m, 0, n);
-        }
-        assert_eq!(c, t);
-        let mut c = vec![0.0f32; 24];
-        for j in 0..n {
-            copy_col(&mut c, &t, n, 0, j, 4);
-        }
-        assert_eq!(c, t);
     }
 }

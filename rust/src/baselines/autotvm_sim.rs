@@ -67,7 +67,7 @@ impl Baseline for AutoTvm {
     fn run(&mut self, problem: Problem, backend: &SharedBackend) -> BaselineResult {
         let t0 = Instant::now();
         let e0 = backend.eval_count();
-        let mut rng = Pcg32::new(self.seed ^ problem.m as u64 ^ (problem.n as u64) << 20);
+        let mut rng = Pcg32::new(self.seed ^ problem.dim_hash());
         let space = templates::enumerate();
         let mut measured_x: Vec<Vec<f32>> = Vec::new();
         let mut measured_y: Vec<f64> = Vec::new();

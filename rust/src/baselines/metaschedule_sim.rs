@@ -28,8 +28,7 @@ impl Baseline for MetaSchedule {
     fn run(&mut self, problem: Problem, backend: &SharedBackend) -> BaselineResult {
         let t0 = Instant::now();
         let e0 = backend.eval_count();
-        let mut rng =
-            Pcg32::new(self.seed ^ (problem.k as u64) << 40 ^ problem.n as u64);
+        let mut rng = Pcg32::new(self.seed ^ problem.dim_hash().rotate_left(17));
         let mut best: Option<(f64, crate::ir::Nest)> = None;
         for _ in 0..self.trials {
             let t = TemplatePoint::random(&mut rng);

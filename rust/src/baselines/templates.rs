@@ -1,6 +1,9 @@
 //! Schedule templates shared by the tuner simulators: parameterized
 //! blocked-matmul schedules instantiated through the IR's own transforms,
-//! so every generated schedule is valid by construction.
+//! so every generated schedule is valid by construction. The template
+//! knobs cover the three matmul-layout dims (`Dim::M/N/K`), so they apply
+//! to any 3-dim problem (matmul, transposed matmul, MLP); the write-back
+//! nest is derived from the problem's output dims.
 
 use crate::env::actions::SPLIT_FACTORS;
 use crate::ir::{Dim, Kind, Loop, Nest, Problem};
@@ -31,6 +34,9 @@ impl TemplatePoint {
     /// tiled dim gets one tile level appended inside (in the root order),
     /// so e.g. order (m,k,n) with tiles on k,n yields m k n k' n'.
     pub fn instantiate(&self, problem: Problem) -> Nest {
+        // Hard assert: in release a 4+-dim problem would otherwise yield a
+        // nest silently missing compute loops and wrong baseline numbers.
+        assert_eq!(problem.n_dims(), 3, "templates cover 3-dim (matmul-layout) problems");
         let mut loops: Vec<Loop> = self
             .order
             .iter()
@@ -44,8 +50,11 @@ impl TemplatePoint {
                 }
             }
         }
-        loops.push(Loop { dim: Dim::M, factor: None, kind: Kind::WriteBack });
-        loops.push(Loop { dim: Dim::N, factor: None, kind: Kind::WriteBack });
+        loops.extend(
+            problem
+                .output_dims()
+                .map(|dim| Loop { dim, factor: None, kind: Kind::WriteBack }),
+        );
         let nest = Nest { problem, loops, cursor: 0 };
         debug_assert!(nest.check_invariants().is_ok(), "{nest}");
         nest

@@ -45,15 +45,18 @@ impl Table1Row {
 /// (`mm_64` ...), `nest` the schedule our backend should run.
 pub fn row(rt: &Runtime, entry: &str, nest: &Nest, reps: usize) -> Result<Table1Row> {
     let p = nest.problem;
+    let (m, n, k) = p
+        .as_matmul()
+        .ok_or_else(|| anyhow::anyhow!("Table I XLA rows require plain matmul, got {p}"))?;
     // --- XLA compile time (fresh, uncached) ---
     let xla_compile = rt.time_compile(entry)?;
 
     // --- XLA execution GFLOPS ---
     let mut rng = Pcg32::new(0xab);
-    let x: Vec<f32> = (0..p.m * p.k).map(|_| rng.next_f32() - 0.5).collect();
-    let y: Vec<f32> = (0..p.k * p.n).map(|_| rng.next_f32() - 0.5).collect();
-    let lx = lit_f32(&x, &[p.m, p.k])?;
-    let ly = lit_f32(&y, &[p.k, p.n])?;
+    let x: Vec<f32> = (0..m * k).map(|_| rng.next_f32() - 0.5).collect();
+    let y: Vec<f32> = (0..k * n).map(|_| rng.next_f32() - 0.5).collect();
+    let lx = lit_f32(&x, &[m, k])?;
+    let ly = lit_f32(&y, &[k, n])?;
     // Warmup + min-of-reps, same protocol as our executor.
     rt.exec(entry, &[lx.clone(), ly.clone()])?;
     let mut best = f64::INFINITY;
@@ -106,7 +109,8 @@ mod tests {
     #[test]
     fn conv_problems_are_valid() {
         for (name, p) in super::conv_as_matmul_problems() {
-            assert!(p.m > 0 && p.n > 0 && p.k > 0, "{name}");
+            let (m, n, k) = p.as_matmul().expect("im2col rows are plain matmul");
+            assert!(m > 0 && n > 0 && k > 0, "{name}");
             assert!(p.flops() > 1_000_000, "{name} too small");
         }
     }

@@ -98,8 +98,9 @@ mod tests {
     #[test]
     fn all_dims_in_range() {
         for p in all_problems() {
-            for d in [p.m, p.n, p.k] {
-                assert!(d >= DIM_START && d <= DIM_END && (d - DIM_START) % DIM_STEP == 0);
+            for d in p.dims() {
+                let e = p.extent(d);
+                assert!(e >= DIM_START && e <= DIM_END && (e - DIM_START) % DIM_STEP == 0);
             }
         }
     }

@@ -3,7 +3,9 @@
 //! `split` family with fixed power-of-two parameters.
 //!
 //! The discrete indices here are the network's output layer order; they
-//! must match `NUM_ACTIONS` in `python/compile/model.py`.
+//! must match `NUM_ACTIONS` in `python/compile/model.py` — the coupling is
+//! enforced by `rust/tests/model_contract.rs`, which parses the constants
+//! out of `model.py` and compares them against this crate's.
 
 use crate::ir::transform::Invalid;
 use crate::ir::Nest;
@@ -40,8 +42,11 @@ impl Action {
         ]
     }
 
-    pub fn from_index(i: usize) -> Action {
-        Action::all()[i]
+    /// Action at network-output index `i`, or `None` when `i` is out of
+    /// range (e.g. an argmax over a stale artifact with a wider head, or a
+    /// corrupt replay record) — callers decide how to degrade.
+    pub fn from_index(i: usize) -> Option<Action> {
+        Action::all().get(i).copied()
     }
 
     pub fn index(self) -> usize {
@@ -102,9 +107,21 @@ mod tests {
     fn index_roundtrip() {
         for (i, a) in Action::all().iter().enumerate() {
             assert_eq!(a.index(), i);
-            assert_eq!(Action::from_index(i), *a);
+            assert_eq!(Action::from_index(i), Some(*a));
         }
         assert_eq!(Action::all().len(), NUM_ACTIONS);
+    }
+
+    /// Satellite: `index(from_index(i)) == i` for every `i < NUM_ACTIONS`,
+    /// and out-of-range indices return `None` instead of panicking.
+    #[test]
+    fn from_index_total_roundtrip_and_bounds() {
+        for i in 0..NUM_ACTIONS {
+            let a = Action::from_index(i).expect("index in range");
+            assert_eq!(a.index(), i);
+        }
+        assert_eq!(Action::from_index(NUM_ACTIONS), None);
+        assert_eq!(Action::from_index(usize::MAX), None);
     }
 
     #[test]

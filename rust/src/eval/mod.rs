@@ -6,6 +6,7 @@
 
 pub mod experiments;
 pub mod perf_profile;
+pub mod workloads;
 
 use std::path::Path;
 

@@ -1,0 +1,180 @@
+//! Workload registry: named multi-workload benchmark suites over the
+//! generalized contraction IR.
+//!
+//! The paper's own benchmark set is square-ish matmul (`dataset.rs`); the
+//! registry adds the operator families LoopStack and "Learning to Optimize
+//! Tensor Programs" evaluate across — batched matmul, convolutions, MLP
+//! layers — each as a deterministic list of [`Problem`]s. `tune-many
+//! --suite <name>` batch-tunes a whole suite and writes a per-suite JSON
+//! report (see `search::batch` and `main.rs`).
+//!
+//! Every suite is sized so the initial nest fits `MAX_LOOPS` (pinned by a
+//! test below), keeping state vectors and the trained-policy contract
+//! unchanged across workloads.
+
+use crate::ir::Problem;
+
+/// A named problem suite.
+pub struct Suite {
+    /// Registry name (the `--suite` argument).
+    pub name: &'static str,
+    /// One-line description for listings.
+    pub description: &'static str,
+    /// The problems, in deterministic order.
+    pub problems: Vec<Problem>,
+}
+
+/// Names of all registered suites, in report order.
+pub const SUITE_NAMES: [&str; 6] = ["matmul", "mmt", "bmm", "conv1d", "conv2d", "mlp"];
+
+/// Look up a suite by name. Each arm carries its own canonical name, so
+/// the registry has a single source of truth per suite; `SUITE_NAMES`
+/// only fixes the listing order (a test pins the two in sync).
+pub fn suite(name: &str) -> Option<Suite> {
+    let s = match name {
+        "matmul" => Suite {
+            name: "matmul",
+            description: "square-ish matmul grid, m/n/k in {64,128,192,256}",
+            problems: grid3(&[64, 128, 192, 256], Problem::matmul),
+        },
+        "mmt" => Suite {
+            name: "mmt",
+            description: "transposed-A matmul (C = A^T B), m/n/k in {64,128,256}",
+            problems: grid3(&[64, 128, 256], Problem::matmul_transposed),
+        },
+        "bmm" => Suite {
+            name: "bmm",
+            description: "batched matmul, batch in {2,4}, m/n/k in {64,128,256}",
+            problems: bmm(),
+        },
+        "conv1d" => Suite {
+            name: "conv1d",
+            description: "1-D convolution with channels (oh, oc, kw, ic)",
+            problems: conv1d(),
+        },
+        "conv2d" => Suite {
+            name: "conv2d",
+            description: "single-channel 2-D convolution (oh, ow, kh, kw)",
+            problems: conv2d(),
+        },
+        "mlp" => Suite {
+            name: "mlp",
+            description: "MLP layers: matmul + fused bias/ReLU write-back",
+            problems: mlp(),
+        },
+        _ => return None,
+    };
+    Some(s)
+}
+
+/// All registered suites, in report order.
+pub fn all() -> Vec<Suite> {
+    SUITE_NAMES.iter().map(|n| suite(n).expect("registered suite")).collect()
+}
+
+fn grid3(vals: &[usize], ctor: fn(usize, usize, usize) -> Problem) -> Vec<Problem> {
+    let mut out = Vec::with_capacity(vals.len().pow(3));
+    for &m in vals {
+        for &n in vals {
+            for &k in vals {
+                out.push(ctor(m, n, k));
+            }
+        }
+    }
+    out
+}
+
+fn bmm() -> Vec<Problem> {
+    let mut out = Vec::new();
+    for b in [2usize, 4] {
+        for &m in &[64usize, 128, 256] {
+            for &n in &[64usize, 128, 256] {
+                for &k in &[64usize, 128, 256] {
+                    out.push(Problem::batched_matmul(b, m, n, k));
+                }
+            }
+        }
+    }
+    out
+}
+
+fn conv1d() -> Vec<Problem> {
+    let mut out = Vec::new();
+    for &oh in &[64usize, 128, 256] {
+        for &oc in &[16usize, 32, 64] {
+            for &(kw, ic) in &[(3usize, 8usize), (5, 16), (7, 32)] {
+                out.push(Problem::conv1d(oh, oc, kw, ic));
+            }
+        }
+    }
+    out
+}
+
+fn conv2d() -> Vec<Problem> {
+    let mut out = Vec::new();
+    for &(oh, ow) in &[(28usize, 28usize), (56, 56), (112, 112), (56, 28), (112, 56)] {
+        for &k in &[3usize, 5] {
+            out.push(Problem::conv2d(oh, ow, k, k));
+        }
+    }
+    out
+}
+
+fn mlp() -> Vec<Problem> {
+    let mut out = Vec::new();
+    for &m in &[32usize, 64, 128, 256] {
+        for &(n, k) in &[(256usize, 256usize), (512, 512), (256, 1024), (1024, 256)] {
+            out.push(Problem::mlp(m, n, k));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{Nest, MAX_LOOPS};
+
+    #[test]
+    fn registry_is_complete_and_sized() {
+        let sizes: Vec<(&str, usize)> =
+            all().iter().map(|s| (s.name, s.problems.len())).collect();
+        assert_eq!(
+            sizes,
+            [
+                ("matmul", 64),
+                ("mmt", 27),
+                ("bmm", 54),
+                ("conv1d", 27),
+                ("conv2d", 10),
+                ("mlp", 16),
+            ]
+        );
+        assert!(suite("nope").is_none());
+    }
+
+    #[test]
+    fn all_problems_are_unique_and_start_valid() {
+        for s in all() {
+            let mut seen = std::collections::HashSet::new();
+            for &p in &s.problems {
+                assert!(seen.insert(p.id()), "{}: duplicate {p}", s.name);
+                let n = Nest::initial(p);
+                n.check_invariants().unwrap_or_else(|e| panic!("{p}: {e}"));
+                assert!(
+                    n.loops.len() <= MAX_LOOPS,
+                    "{p}: initial nest exceeds MAX_LOOPS"
+                );
+                assert!(p.flops() > 0);
+            }
+        }
+    }
+
+    #[test]
+    fn suite_kinds_match_their_constructors() {
+        for s in all() {
+            let kind = s.problems[0].kind();
+            assert!(s.problems.iter().all(|p| p.kind() == kind), "{}", s.name);
+        }
+    }
+}

@@ -10,31 +10,38 @@
 //!  for n in 96
 //!   C[m, n] = T[m, n]
 //! ```
+//!
+//! The body lines are generated from the problem's tensors and access
+//! maps, so every workload family renders its own contraction (e.g.
+//! `T[oh, ow] += In[oh, kh, ow, kw] * W[kh, kw]` for conv2d, and
+//! `C[m, n] = relu(T[m, n] + bias[n])` for the MLP epilogue).
 
-use super::{Kind, Nest};
+use super::problem::TensorInfo;
+use super::{Kind, Nest, Problem, MAX_DIMS};
 use std::fmt::Write;
 
 /// Render the nest as indented pseudo-code with the agent cursor marked.
 pub fn render(nest: &Nest) -> String {
     let mut out = String::new();
-    let mut level_per_dim = [0usize; 3];
+    let mut level_per_dim = [0usize; MAX_DIMS];
     let mut depth = 0usize;
     let mut prev_kind = None;
 
     for (i, l) in nest.loops.iter().enumerate() {
         if prev_kind == Some(Kind::Compute) && l.kind == Kind::WriteBack {
             // Close the compute nest with its body first.
-            write_body(&mut out, depth, Kind::Compute);
+            write_body(&mut out, depth, Kind::Compute, &nest.problem);
             depth = 0;
-            level_per_dim = [0; 3];
+            level_per_dim = [0; MAX_DIMS];
         }
         prev_kind = Some(l.kind);
 
         let d = l.dim.index();
+        let dim_name = nest.problem.dim_name(l.dim);
         let name = if count_dim(nest, i) > 1 {
-            format!("{}_{}", l.dim.name(), level_per_dim[d])
+            format!("{}_{}", dim_name, level_per_dim[d])
         } else {
-            l.dim.name().to_string()
+            dim_name.to_string()
         };
         level_per_dim[d] += 1;
 
@@ -52,7 +59,7 @@ pub fn render(nest: &Nest) -> String {
         );
         depth += 1;
     }
-    write_body(&mut out, depth, prev_kind.unwrap_or(Kind::Compute));
+    write_body(&mut out, depth, prev_kind.unwrap_or(Kind::Compute), &nest.problem);
     out
 }
 
@@ -64,10 +71,45 @@ fn count_dim(nest: &Nest, idx: usize) -> usize {
         .count()
 }
 
-fn write_body(out: &mut String, depth: usize, kind: Kind) {
+/// `A[m, k]`-style term: the tensor name plus the dims indexing it, in
+/// decreasing-stride (memory-layout) order.
+fn tensor_term(problem: &Problem, t: &TensorInfo) -> String {
+    let mut ds: Vec<(usize, usize)> = problem
+        .dims()
+        .filter_map(|d| t.access.stride(d).map(|s| (s, d.index())))
+        .collect();
+    ds.sort_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+    let names: Vec<&str> = ds
+        .iter()
+        .map(|&(_, i)| problem.dim_name(super::Dim::new(i)))
+        .collect();
+    format!("{}[{}]", t.name, names.join(", "))
+}
+
+fn write_body(out: &mut String, depth: usize, kind: Kind, problem: &Problem) {
     let body = match kind {
-        Kind::Compute => "T[m, n] += A[m, k] * B[k, n]",
-        Kind::WriteBack => "C[m, n] = T[m, n]",
+        Kind::Compute => {
+            let [in0, in1] = problem.inputs();
+            format!(
+                "{} += {} * {}",
+                tensor_term(problem, &problem.accumulator()),
+                tensor_term(problem, in0),
+                tensor_term(problem, in1),
+            )
+        }
+        Kind::WriteBack => {
+            let t = tensor_term(problem, &problem.accumulator());
+            let c = tensor_term(problem, &problem.output());
+            let rhs = match problem.bias() {
+                Some(b) => format!("{t} + {}", tensor_term(problem, b)),
+                None => t,
+            };
+            if problem.relu() {
+                format!("{c} = relu({rhs})")
+            } else {
+                format!("{c} = {rhs}")
+            }
+        }
     };
     let _ = writeln!(out, "{}{}", " ".repeat(depth), body);
 }
@@ -106,5 +148,19 @@ mod tests {
         n.split(48).unwrap();
         let s = super::render(&n);
         assert!(s.contains("tail 4"), "{s}");
+    }
+
+    #[test]
+    fn render_generalized_bodies() {
+        let s = super::render(&Nest::initial(Problem::conv2d(28, 28, 3, 3)));
+        assert!(s.contains("for oh in 28"), "{s}");
+        assert!(s.contains("T[oh, ow] += In[oh, kh, ow, kw] * W[kh, kw]"), "{s}");
+        assert!(s.contains("C[oh, ow] = T[oh, ow]"), "{s}");
+
+        let s = super::render(&Nest::initial(Problem::mlp(32, 64, 128)));
+        assert!(s.contains("C[m, n] = relu(T[m, n] + bias[n])"), "{s}");
+
+        let s = super::render(&Nest::initial(Problem::batched_matmul(2, 8, 8, 8)));
+        assert!(s.contains("T[b, m, n] += A[b, m, k] * B[b, k, n]"), "{s}");
     }
 }

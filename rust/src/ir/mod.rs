@@ -1,10 +1,12 @@
 //! Loop-nest IR — the "LoopTool" substrate (paper §III, Fig 3/4).
 //!
 //! A [`Nest`] is an ordered list of loops (outermost first), partitioned
-//! into a *compute* nest (accumulates `T[m,n] += A[m,k] * B[k,n]`) and a
-//! *write-back* nest (copies `T` into `C`). Each dimension (m/n/k) has one
-//! **root** loop per nest kind plus zero or more **tile** loops created by
-//! `split` actions.
+//! into a *compute* nest (accumulates `T[out] += In0[..] * In1[..]` over
+//! the problem's reduction dims) and a *write-back* nest (applies the
+//! problem's epilogue — plain copy, or bias + ReLU — from `T` into `C`).
+//! Each iteration dim of the [`Problem`] has one **root** loop per nest
+//! kind plus zero or more **tile** loops created by `split` actions; the
+//! write-back nest iterates only the output (non-reduction) dims.
 //!
 //! Semantics (documented precisely because they drive both the executor
 //! and the featurizer):
@@ -29,7 +31,7 @@ pub mod display;
 pub mod problem;
 pub mod transform;
 
-pub use problem::{Problem, Tensor};
+pub use problem::{Access, Dim, Problem, TensorInfo, TensorList, MAX_DIMS};
 
 use crate::util::ceil_div;
 
@@ -39,47 +41,28 @@ pub const MAX_LOOPS: usize = 10;
 /// Which nest a loop belongs to.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum Kind {
+    /// The contraction nest (reads inputs, accumulates into `T`).
     Compute,
+    /// The epilogue nest (reads `T` and bias, writes `C`).
     WriteBack,
-}
-
-/// A contraction dimension. For matmul: M, N, K.
-#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
-pub enum Dim {
-    M = 0,
-    N = 1,
-    K = 2,
-}
-
-impl Dim {
-    pub const ALL: [Dim; 3] = [Dim::M, Dim::N, Dim::K];
-
-    pub fn name(self) -> &'static str {
-        match self {
-            Dim::M => "m",
-            Dim::N => "n",
-            Dim::K => "k",
-        }
-    }
-
-    pub fn index(self) -> usize {
-        self as usize
-    }
 }
 
 /// One loop level.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct Loop {
+    /// The iteration dim this loop advances.
     pub dim: Dim,
     /// `None` = root loop (covers the remaining extent), `Some(f)` = tile
     /// loop created by `split(f)`.
     pub factor: Option<usize>,
+    /// Which nest the loop belongs to.
     pub kind: Kind,
 }
 
 /// A scheduled loop nest for one contraction problem, plus the agent cursor.
 #[derive(Clone, Debug, PartialEq, Eq, Hash)]
 pub struct Nest {
+    /// The problem this nest schedules.
     pub problem: Problem,
     /// Outermost first. All `Kind::Compute` loops precede all
     /// `Kind::WriteBack` loops.
@@ -89,18 +72,25 @@ pub struct Nest {
 }
 
 impl Nest {
-    /// The untiled starting nest: compute `m, n, k`; write-back `m, n`.
+    /// The untiled starting nest: one compute root per problem dim (in
+    /// declaration order), one write-back root per output dim. For matmul:
+    /// compute `m, n, k`; write-back `m, n`.
     pub fn initial(problem: Problem) -> Self {
-        let loops = vec![
-            Loop { dim: Dim::M, factor: None, kind: Kind::Compute },
-            Loop { dim: Dim::N, factor: None, kind: Kind::Compute },
-            Loop { dim: Dim::K, factor: None, kind: Kind::Compute },
-            Loop { dim: Dim::M, factor: None, kind: Kind::WriteBack },
-            Loop { dim: Dim::N, factor: None, kind: Kind::WriteBack },
-        ];
-        Nest { problem, loops, cursor: 0 }
+        let mut loops: Vec<Loop> = problem
+            .dims()
+            .map(|dim| Loop { dim, factor: None, kind: Kind::Compute })
+            .collect();
+        loops.extend(
+            problem
+                .output_dims()
+                .map(|dim| Loop { dim, factor: None, kind: Kind::WriteBack }),
+        );
+        let nest = Nest { problem, loops, cursor: 0 };
+        debug_assert!(nest.check_invariants().is_ok());
+        nest
     }
 
+    /// Extent of `dim` in this nest's problem.
     pub fn extent(&self, dim: Dim) -> usize {
         self.problem.extent(dim)
     }
@@ -197,8 +187,11 @@ impl Nest {
             }
         }
         // Per (dim, kind): exactly one root, and it precedes all tiles.
+        // The compute nest must cover every dim; the write-back nest must
+        // cover exactly the output dims.
         for kind in [Kind::Compute, Kind::WriteBack] {
-            for dim in Dim::ALL {
+            for dim in self.problem.dims() {
+                let name = self.problem.dim_name(dim);
                 let idxs: Vec<usize> = self
                     .loops
                     .iter()
@@ -206,21 +199,23 @@ impl Nest {
                     .filter(|(_, l)| l.dim == dim && l.kind == kind)
                     .map(|(i, _)| i)
                     .collect();
+                let required = kind == Kind::Compute || !self.problem.is_reduce(dim);
                 if idxs.is_empty() {
-                    if kind == Kind::Compute || dim != Dim::K {
-                        if !(kind == Kind::WriteBack && dim == Dim::K) {
-                            return Err(format!("missing {dim:?} loop in {kind:?}"));
-                        }
+                    if required {
+                        return Err(format!("missing {name} loop in {kind:?}"));
                     }
                     continue;
+                }
+                if !required {
+                    return Err(format!("reduction dim {name} in {kind:?} nest"));
                 }
                 let roots =
                     idxs.iter().filter(|&&i| self.loops[i].factor.is_none()).count();
                 if roots != 1 {
-                    return Err(format!("{roots} roots for {dim:?} in {kind:?}"));
+                    return Err(format!("{roots} roots for {name} in {kind:?}"));
                 }
                 if self.loops[idxs[0]].factor.is_some() {
-                    return Err(format!("root not outermost for {dim:?} in {kind:?}"));
+                    return Err(format!("root not outermost for {name} in {kind:?}"));
                 }
                 for &i in &idxs {
                     if let Some(f) = self.loops[i].factor {
@@ -251,6 +246,30 @@ mod tests {
         assert_eq!(n.count_kind(Kind::Compute), 3);
         assert_eq!(n.count_kind(Kind::WriteBack), 2);
         assert_eq!(n.cursor, 0);
+    }
+
+    #[test]
+    fn initial_shape_generalized_workloads() {
+        // bmm: 4 compute roots + 3 write-back roots.
+        let n = Nest::initial(Problem::batched_matmul(4, 64, 64, 64));
+        n.check_invariants().unwrap();
+        assert_eq!(n.count_kind(Kind::Compute), 4);
+        assert_eq!(n.count_kind(Kind::WriteBack), 3);
+        assert!(n.loops.len() <= MAX_LOOPS);
+
+        // conv2d: 4 compute roots (oh ow kh kw) + 2 write-back (oh ow).
+        let n = Nest::initial(Problem::conv2d(28, 28, 3, 3));
+        n.check_invariants().unwrap();
+        assert_eq!(n.count_kind(Kind::Compute), 4);
+        assert_eq!(n.count_kind(Kind::WriteBack), 2);
+        assert_eq!(n.trip(2), 3); // kh root
+
+        // conv1d and mlp also start valid and within the loop bound.
+        for p in [Problem::conv1d(64, 32, 5, 16), Problem::mlp(64, 64, 64)] {
+            let n = Nest::initial(p);
+            n.check_invariants().unwrap();
+            assert!(n.loops.len() <= MAX_LOOPS);
+        }
     }
 
     #[test]
@@ -295,6 +314,74 @@ mod tests {
         assert_eq!(n.tail(1), 4 % 1); // deepest level: 0
     }
 
+    /// Satellite: split-tail semantics on non-dividing extents of the
+    /// generalized dims (conv spatial dims), pinning the module-doc
+    /// invariant `tail(l_i) = tail(l_{i-1}) % stride(l_i)`.
+    #[test]
+    fn tail_cascade_on_conv_spatial_dims() {
+        let p = Problem::conv2d(28, 30, 3, 3);
+        let mut n = Nest::initial(p);
+        // Split oh (extent 28) by 16, then the 16-tile by 3:
+        // oh root (stride 18), oh:6 (stride 3), oh:3 (stride 1).
+        n.cursor = 0;
+        n.split(16).unwrap();
+        n.cursor = 1;
+        n.split(3).unwrap();
+        assert_eq!(n.loops[1].factor, Some(6)); // ceil(16/3)
+        assert_eq!(n.stride(0), 18);
+        assert_eq!(n.tail(0), 28 % 18); // 10
+        assert_eq!(n.tail(1), 10 % 3); // 1
+        assert_eq!(n.tail(2), 1 % 1); // 0
+        n.check_invariants().unwrap();
+    }
+
+    /// Property over all workload families: every loop's tail equals the
+    /// parent tail modulo its own stride, after random transform chains.
+    #[test]
+    fn prop_tail_cascade_all_workloads() {
+        use crate::util::rng::Pcg32;
+        let problems = [
+            Problem::new(100, 96, 64),
+            Problem::batched_matmul(3, 50, 64, 48),
+            Problem::conv1d(75, 24, 5, 12),
+            Problem::conv2d(27, 29, 3, 5),
+            Problem::mlp(90, 70, 110),
+        ];
+        for (pi, &p) in problems.iter().enumerate() {
+            let mut rng = Pcg32::new(0x7a11 + pi as u64);
+            let mut n = Nest::initial(p);
+            for _ in 0..50 {
+                match rng.below(5) {
+                    0 => drop(n.cursor_up()),
+                    1 => drop(n.cursor_down()),
+                    2 => drop(n.swap_up()),
+                    3 => drop(n.swap_down()),
+                    _ => drop(n.split(*rng.choose(&[2usize, 3, 4, 7, 16]))),
+                }
+                n.check_invariants().unwrap_or_else(|e| panic!("{p}: {e}"));
+                // Cascade check per (dim, kind) chain, outer to inner.
+                for kind in [Kind::Compute, Kind::WriteBack] {
+                    for dim in p.dims() {
+                        let chain: Vec<usize> = n
+                            .loops
+                            .iter()
+                            .enumerate()
+                            .filter(|(_, l)| l.dim == dim && l.kind == kind)
+                            .map(|(i, _)| i)
+                            .collect();
+                        for w in chain.windows(2) {
+                            let expect = n.tail(w[0]) % n.stride(w[1]);
+                            assert_eq!(n.tail(w[1]), expect, "{p}: loops {w:?}");
+                        }
+                        if let Some(&root) = chain.first() {
+                            assert_eq!(n.tail(root), p.extent(dim) % n.stride(root));
+                        }
+                    }
+                }
+            }
+        }
+    }
+
     #[test]
     fn invariants_catch_violations() {
         let mut n = nest();
@@ -307,6 +394,11 @@ mod tests {
 
         let mut n = nest();
         n.loops.swap(2, 3); // compute k after wb m
+        assert!(n.check_invariants().is_err());
+
+        // Reduction dim in the write-back nest is invalid.
+        let mut n = nest();
+        n.loops.push(Loop { dim: Dim::K, factor: None, kind: Kind::WriteBack });
         assert!(n.check_invariants().is_err());
     }
 }

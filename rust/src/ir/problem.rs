@@ -1,45 +1,450 @@
-//! Contraction problems. The paper's benchmark suite is square-ish matrix
-//! multiplication `C[M,N] = sum_k A[M,K] * B[K,N]` with M, N, K in
-//! `{64, 80, ..., 256}` (13 values each, 2197 problems).
+//! Generalized contraction problems.
+//!
+//! A [`Problem`] describes an arbitrary tensor contraction as
+//!
+//! - a set of named **iteration dims** with extents, each flagged as a
+//!   *reduction* dim (summed over) or an *output* dim (indexes the result),
+//! - two **input tensors**, each carrying a per-dim **access map**: the
+//!   element stride the tensor address advances per step of that dim
+//!   (`None` = the tensor is not indexed by the dim, i.e. full reuse),
+//! - an output access map shared by the accumulator `T` and the final
+//!   output `C`, plus an optional bias tensor and ReLU flag applied by the
+//!   write-back nest (the MLP epilogue).
+//!
+//! Linear access maps cover every workload family here: plain and
+//! transposed matmul, batched matmul, and convolutions (a conv input is
+//! indexed by *two* dims with the same stride — `In[oh + kh]` is
+//! `oh * stride + kh * stride` — so overlap needs no special casing).
+//! Matmul is just one constructor among several; the paper's benchmark
+//! suite (square-ish matmul, M, N, K in `{64, 80, ..., 256}`) lives in
+//! `dataset.rs`, the multi-workload suites in `eval/workloads.rs`.
 
-use super::Dim;
+/// Maximum number of iteration dims a problem may declare. Bounded so
+/// [`Problem`] stays `Copy` (fixed-size arrays) and executor index vectors
+/// live on the stack.
+pub const MAX_DIMS: usize = 6;
 
-/// A matmul contraction instance (extents of m, n, k).
-#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
-pub struct Problem {
-    pub m: usize,
-    pub n: usize,
-    pub k: usize,
-}
+/// Handle for one iteration dim of a [`Problem`]: an index into the
+/// problem's dim table. Extent, name, and reduction status are looked up
+/// through the problem.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Dim(u8);
 
-impl Problem {
-    pub fn new(m: usize, n: usize, k: usize) -> Self {
-        assert!(m > 0 && n > 0 && k > 0);
-        Problem { m, n, k }
+impl Dim {
+    /// Handle for dim number `index` of a problem.
+    pub const fn new(index: usize) -> Dim {
+        Dim(index as u8)
     }
 
-    pub fn extent(&self, dim: Dim) -> usize {
-        match dim {
-            Dim::M => self.m,
-            Dim::N => self.n,
-            Dim::K => self.k,
+    /// Position of this dim in the problem's dim table.
+    pub fn index(self) -> usize {
+        self.0 as usize
+    }
+
+    /// Dim 0 of the matmul-layout constructors (`m`).
+    pub const M: Dim = Dim(0);
+    /// Dim 1 of the matmul-layout constructors (`n`).
+    pub const N: Dim = Dim(1);
+    /// Dim 2 of the matmul-layout constructors (`k`, the reduction).
+    pub const K: Dim = Dim(2);
+}
+
+/// Per-dim metadata of one problem dim.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+struct DimInfo {
+    name: &'static str,
+    extent: usize,
+    reduce: bool,
+}
+
+/// Linear access map of one tensor: element stride per dim, `0` meaning
+/// the tensor is not indexed by that dim (full reuse). The address of an
+/// element is `sum_d idx[d] * stride[d]`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub struct Access {
+    strides: [usize; MAX_DIMS],
+}
+
+impl Access {
+    /// The empty access map (indexed by no dim).
+    pub const fn none() -> Access {
+        Access { strides: [0; MAX_DIMS] }
+    }
+
+    /// Builder: set the stride for `d` (must be > 0).
+    pub fn with(mut self, d: Dim, stride: usize) -> Access {
+        assert!(stride > 0, "access stride must be > 0");
+        self.strides[d.index()] = stride;
+        self
+    }
+
+    /// Element stride w.r.t. `d`, `None` if the tensor is not indexed by it.
+    pub fn stride(&self, d: Dim) -> Option<usize> {
+        match self.strides[d.index()] {
+            0 => None,
+            s => Some(s),
         }
     }
 
-    /// Floating-point operations of the contraction (mul + add).
+    /// Element stride w.r.t. `d`, `0` if the tensor is not indexed by it.
+    pub fn stride_or_zero(&self, d: Dim) -> usize {
+        self.strides[d.index()]
+    }
+
+    /// Whether the tensor is indexed by `d` at all.
+    pub fn indexed(&self, d: Dim) -> bool {
+        self.strides[d.index()] != 0
+    }
+
+    /// Element offset of the point `idx` (the executor's address map).
+    pub fn offset(&self, idx: &[usize; MAX_DIMS]) -> usize {
+        let mut off = 0;
+        for (i, &s) in self.strides.iter().enumerate() {
+            off += idx[i] * s;
+        }
+        off
+    }
+}
+
+/// One tensor of a problem: a display name plus its access map.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub struct TensorInfo {
+    /// Display name used in rendered nests and reports.
+    pub name: &'static str,
+    /// Per-dim access map.
+    pub access: Access,
+}
+
+/// Fixed-capacity list of tensors (no allocation in featurizer/cost-model
+/// hot paths). Derefs to a slice.
+#[derive(Clone, Copy, Debug)]
+pub struct TensorList {
+    items: [TensorInfo; 4],
+    len: usize,
+}
+
+impl TensorList {
+    fn new(items: &[TensorInfo]) -> TensorList {
+        let mut arr = [TensorInfo::default(); 4];
+        arr[..items.len()].copy_from_slice(items);
+        TensorList { items: arr, len: items.len() }
+    }
+}
+
+impl std::ops::Deref for TensorList {
+    type Target = [TensorInfo];
+
+    fn deref(&self) -> &[TensorInfo] {
+        &self.items[..self.len]
+    }
+}
+
+/// A tensor-contraction instance: iteration dims, input access maps, and
+/// the write-back epilogue. `Copy + Eq + Hash` so nests and cache keys can
+/// embed it directly.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Problem {
+    kind: &'static str,
+    n_dims: u8,
+    dims: [DimInfo; MAX_DIMS],
+    inputs: [TensorInfo; 2],
+    /// Access map shared by the accumulator `T` and the output `C`
+    /// (row-major over the output dims).
+    out: Access,
+    bias: Option<TensorInfo>,
+    relu: bool,
+}
+
+impl Problem {
+    fn base(kind: &'static str, dims: &[(&'static str, usize, bool)]) -> Problem {
+        assert!(!dims.is_empty() && dims.len() <= MAX_DIMS);
+        let mut di = [DimInfo::default(); MAX_DIMS];
+        for (i, &(name, extent, reduce)) in dims.iter().enumerate() {
+            assert!(extent > 0, "dim {name} extent must be > 0");
+            di[i] = DimInfo { name, extent, reduce };
+        }
+        Problem {
+            kind,
+            n_dims: dims.len() as u8,
+            dims: di,
+            inputs: [TensorInfo::default(); 2],
+            out: Access::none(),
+            bias: None,
+            relu: false,
+        }
+    }
+
+    /// Plain matmul `C[m, n] = sum_k A[m, k] * B[k, n]`, row-major.
+    pub fn matmul(m: usize, n: usize, k: usize) -> Problem {
+        let mut p = Problem::base("mm", &[("m", m, false), ("n", n, false), ("k", k, true)]);
+        p.inputs[0] = TensorInfo {
+            name: "A",
+            access: Access::none().with(Dim::M, k).with(Dim::K, 1),
+        };
+        p.inputs[1] = TensorInfo {
+            name: "B",
+            access: Access::none().with(Dim::K, n).with(Dim::N, 1),
+        };
+        p.out = Access::none().with(Dim::M, n).with(Dim::N, 1);
+        p
+    }
+
+    /// Back-compat alias for [`Problem::matmul`] (the seed's only workload).
+    pub fn new(m: usize, n: usize, k: usize) -> Problem {
+        Problem::matmul(m, n, k)
+    }
+
+    /// Transposed-A matmul `C[m, n] = sum_k A[k, m] * B[k, n]` — same dims
+    /// as matmul, different access map on `A` (column walk).
+    pub fn matmul_transposed(m: usize, n: usize, k: usize) -> Problem {
+        let mut p = Problem::matmul(m, n, k);
+        p.kind = "mmt";
+        p.inputs[0] = TensorInfo {
+            name: "At",
+            access: Access::none().with(Dim::K, m).with(Dim::M, 1),
+        };
+        p
+    }
+
+    /// MLP layer: matmul with a fused `C = relu(T + bias[n])` write-back.
+    pub fn mlp(m: usize, n: usize, k: usize) -> Problem {
+        let mut p = Problem::matmul(m, n, k);
+        p.kind = "mlp";
+        p.bias = Some(TensorInfo { name: "bias", access: Access::none().with(Dim::N, 1) });
+        p.relu = true;
+        p
+    }
+
+    /// Batched matmul `C[b, m, n] = sum_k A[b, m, k] * B[b, k, n]`.
+    pub fn batched_matmul(b: usize, m: usize, n: usize, k: usize) -> Problem {
+        let mut p = Problem::base(
+            "bmm",
+            &[("b", b, false), ("m", m, false), ("n", n, false), ("k", k, true)],
+        );
+        let (db, dm, dn, dk) = (Dim::new(0), Dim::new(1), Dim::new(2), Dim::new(3));
+        p.inputs[0] = TensorInfo {
+            name: "A",
+            access: Access::none().with(db, m * k).with(dm, k).with(dk, 1),
+        };
+        p.inputs[1] = TensorInfo {
+            name: "B",
+            access: Access::none().with(db, k * n).with(dk, n).with(dn, 1),
+        };
+        p.out = Access::none().with(db, m * n).with(dm, n).with(dn, 1);
+        p
+    }
+
+    /// 1-D convolution with channels:
+    /// `C[oh, oc] = sum_{kw, ic} In[oh + kw, ic] * W[oc, kw, ic]`.
+    /// The input is indexed by `oh` and `kw` with the *same* stride — the
+    /// overlapping window expressed as a linear access map.
+    pub fn conv1d(oh: usize, oc: usize, kw: usize, ic: usize) -> Problem {
+        let mut p = Problem::base(
+            "conv1d",
+            &[("oh", oh, false), ("oc", oc, false), ("kw", kw, true), ("ic", ic, true)],
+        );
+        let (doh, doc, dkw, dic) = (Dim::new(0), Dim::new(1), Dim::new(2), Dim::new(3));
+        p.inputs[0] = TensorInfo {
+            name: "In",
+            access: Access::none().with(doh, ic).with(dkw, ic).with(dic, 1),
+        };
+        p.inputs[1] = TensorInfo {
+            name: "W",
+            access: Access::none().with(doc, kw * ic).with(dkw, ic).with(dic, 1),
+        };
+        p.out = Access::none().with(doh, oc).with(doc, 1);
+        p
+    }
+
+    /// Single-channel 2-D convolution:
+    /// `C[oh, ow] = sum_{kh, kw} In[oh + kh, ow + kw] * W[kh, kw]`.
+    pub fn conv2d(oh: usize, ow: usize, kh: usize, kw: usize) -> Problem {
+        let mut p = Problem::base(
+            "conv2d",
+            &[("oh", oh, false), ("ow", ow, false), ("kh", kh, true), ("kw", kw, true)],
+        );
+        let (doh, dow, dkh, dkw) = (Dim::new(0), Dim::new(1), Dim::new(2), Dim::new(3));
+        let iw = ow + kw - 1; // input row length
+        p.inputs[0] = TensorInfo {
+            name: "In",
+            access: Access::none().with(doh, iw).with(dkh, iw).with(dow, 1).with(dkw, 1),
+        };
+        p.inputs[1] =
+            TensorInfo { name: "W", access: Access::none().with(dkh, kw).with(dkw, 1) };
+        p.out = Access::none().with(doh, ow).with(dow, 1);
+        p
+    }
+
+    /// Workload family tag (`"mm"`, `"bmm"`, `"conv1d"`, ...).
+    pub fn kind(&self) -> &'static str {
+        self.kind
+    }
+
+    /// Number of iteration dims.
+    pub fn n_dims(&self) -> usize {
+        self.n_dims as usize
+    }
+
+    /// All dim handles, in declaration order (output dims first by
+    /// constructor convention).
+    pub fn dims(&self) -> impl Iterator<Item = Dim> {
+        (0..self.n_dims).map(Dim)
+    }
+
+    /// Extent of `d`.
+    pub fn extent(&self, d: Dim) -> usize {
+        self.dims[d.index()].extent
+    }
+
+    /// Display name of `d`.
+    pub fn dim_name(&self, d: Dim) -> &'static str {
+        self.dims[d.index()].name
+    }
+
+    /// Whether `d` is a reduction dim (summed over, absent from the output).
+    pub fn is_reduce(&self, d: Dim) -> bool {
+        self.dims[d.index()].reduce
+    }
+
+    /// Output (non-reduction) dims, in declaration order.
+    pub fn output_dims(&self) -> impl Iterator<Item = Dim> + '_ {
+        self.dims().filter(move |&d| !self.is_reduce(d))
+    }
+
+    /// The two input tensors.
+    pub fn inputs(&self) -> &[TensorInfo; 2] {
+        &self.inputs
+    }
+
+    /// Access map of the accumulator/output.
+    pub fn out_access(&self) -> &Access {
+        &self.out
+    }
+
+    /// The accumulator written by the compute nest.
+    pub fn accumulator(&self) -> TensorInfo {
+        TensorInfo { name: "T", access: self.out }
+    }
+
+    /// The final output written by the write-back nest.
+    pub fn output(&self) -> TensorInfo {
+        TensorInfo { name: "C", access: self.out }
+    }
+
+    /// Optional bias tensor read by the write-back nest.
+    pub fn bias(&self) -> Option<&TensorInfo> {
+        self.bias.as_ref()
+    }
+
+    /// Whether the write-back applies ReLU.
+    pub fn relu(&self) -> bool {
+        self.relu
+    }
+
+    /// Tensors accessed by the compute nest (inputs + accumulator).
+    pub fn compute_tensors(&self) -> TensorList {
+        TensorList::new(&[self.inputs[0], self.inputs[1], self.accumulator()])
+    }
+
+    /// Tensors accessed by the write-back nest (T, optional bias, C).
+    pub fn writeback_tensors(&self) -> TensorList {
+        match self.bias {
+            Some(b) => TensorList::new(&[self.accumulator(), b, self.output()]),
+            None => TensorList::new(&[self.accumulator(), self.output()]),
+        }
+    }
+
+    /// Number of elements of a tensor with access map `a`: the largest
+    /// reachable offset plus one.
+    pub fn access_len(&self, a: &Access) -> usize {
+        let mut len = 1;
+        for d in self.dims() {
+            len += (self.extent(d) - 1) * a.stride_or_zero(d);
+        }
+        len
+    }
+
+    /// Number of elements of tensor `t`.
+    pub fn tensor_len(&self, t: &TensorInfo) -> usize {
+        self.access_len(&t.access)
+    }
+
+    /// Elements of the accumulator/output.
+    pub fn out_len(&self) -> usize {
+        self.access_len(&self.out)
+    }
+
+    /// Total iteration-space volume (product of all extents).
+    pub fn iter_space(&self) -> u64 {
+        self.dims().map(|d| self.extent(d) as u64).product()
+    }
+
+    /// Floating-point operations of the contraction (mul + add per point).
     pub fn flops(&self) -> u64 {
-        2 * self.m as u64 * self.n as u64 * self.k as u64
+        2 * self.iter_space()
     }
 
-    /// Bytes touched at least once (A + B + C + accumulator T), f32.
+    /// Bytes touched at least once (inputs + bias + accumulator + output),
+    /// f32.
     pub fn footprint_bytes(&self) -> u64 {
-        4 * (self.m as u64 * self.k as u64
-            + self.k as u64 * self.n as u64
-            + 2 * self.m as u64 * self.n as u64)
+        let bias = self.bias.map(|b| self.tensor_len(&b)).unwrap_or(0);
+        4 * (self.tensor_len(&self.inputs[0])
+            + self.tensor_len(&self.inputs[1])
+            + bias
+            + 2 * self.out_len()) as u64
     }
 
+    /// Stable identifier, e.g. `mm_64x80x96` or `conv2d_28x28x3x3`.
     pub fn id(&self) -> String {
-        format!("mm_{}x{}x{}", self.m, self.n, self.k)
+        let exts: Vec<String> = self.dims().map(|d| self.extent(d).to_string()).collect();
+        format!("{}_{}", self.kind, exts.join("x"))
+    }
+
+    /// `(m, n, k)` when this is a *plain* matmul problem.
+    pub fn as_matmul(&self) -> Option<(usize, usize, usize)> {
+        if self.kind == "mm" {
+            Some((self.extent(Dim::M), self.extent(Dim::N), self.extent(Dim::K)))
+        } else {
+            None
+        }
+    }
+
+    /// `(m, n, k)` when the *compute* nest is exactly a row-major matmul
+    /// (structural check — also true for MLP, whose epilogue differs but
+    /// whose accumulation is matmul-shaped). Gates the executor's
+    /// microkernel fast path.
+    pub fn mm_kernel_shape(&self) -> Option<(usize, usize, usize)> {
+        if self.n_dims != 3 {
+            return None;
+        }
+        let (m, n, k) = (self.extent(Dim::M), self.extent(Dim::N), self.extent(Dim::K));
+        let a = Access::none().with(Dim::M, k).with(Dim::K, 1);
+        let b = Access::none().with(Dim::K, n).with(Dim::N, 1);
+        let o = Access::none().with(Dim::M, n).with(Dim::N, 1);
+        let reduce_ok =
+            !self.is_reduce(Dim::M) && !self.is_reduce(Dim::N) && self.is_reduce(Dim::K);
+        let access_ok =
+            self.inputs[0].access == a && self.inputs[1].access == b && self.out == o;
+        if reduce_ok && access_ok {
+            Some((m, n, k))
+        } else {
+            None
+        }
+    }
+
+    /// Deterministic hash of (kind, extents) — used for per-problem seeds.
+    pub fn dim_hash(&self) -> u64 {
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        let mut mix = |v: u64| {
+            h = (h ^ v).wrapping_mul(0x0000_0100_0000_01b3);
+        };
+        for b in self.kind.bytes() {
+            mix(b as u64);
+        }
+        for d in self.dims() {
+            mix(self.extent(d) as u64);
+        }
+        h
     }
 }
 
@@ -49,83 +454,104 @@ impl std::fmt::Display for Problem {
     }
 }
 
-/// Row-major element strides of each tensor with respect to each dim.
-/// `None` = the tensor is not indexed by that dim (full reuse).
-///
-/// A is M x K, B is K x N, T/C are M x N.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum Tensor {
-    A,
-    B,
-    /// Accumulator written by the compute nest, read by write-back.
-    T,
-    /// Final output written by the write-back nest.
-    C,
-}
-
-impl Tensor {
-    pub const COMPUTE: [Tensor; 3] = [Tensor::A, Tensor::B, Tensor::T];
-    pub const WRITEBACK: [Tensor; 2] = [Tensor::T, Tensor::C];
-
-    pub fn name(self) -> &'static str {
-        match self {
-            Tensor::A => "A",
-            Tensor::B => "B",
-            Tensor::T => "T",
-            Tensor::C => "C",
-        }
-    }
-
-    /// Element stride of this tensor w.r.t. `dim`, for `problem`.
-    pub fn stride(self, problem: &Problem, dim: Dim) -> Option<usize> {
-        match (self, dim) {
-            (Tensor::A, Dim::M) => Some(problem.k),
-            (Tensor::A, Dim::K) => Some(1),
-            (Tensor::A, Dim::N) => None,
-            (Tensor::B, Dim::K) => Some(problem.n),
-            (Tensor::B, Dim::N) => Some(1),
-            (Tensor::B, Dim::M) => None,
-            (Tensor::T | Tensor::C, Dim::M) => Some(problem.n),
-            (Tensor::T | Tensor::C, Dim::N) => Some(1),
-            (Tensor::T | Tensor::C, Dim::K) => None,
-        }
-    }
-
-    /// Number of elements of this tensor for `problem`.
-    pub fn len(self, problem: &Problem) -> usize {
-        match self {
-            Tensor::A => problem.m * problem.k,
-            Tensor::B => problem.k * problem.n,
-            Tensor::T | Tensor::C => problem.m * problem.n,
-        }
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
 
     #[test]
-    fn strides_are_row_major() {
+    fn matmul_strides_are_row_major() {
         let p = Problem::new(4, 8, 16);
-        assert_eq!(Tensor::A.stride(&p, Dim::M), Some(16));
-        assert_eq!(Tensor::A.stride(&p, Dim::K), Some(1));
-        assert_eq!(Tensor::A.stride(&p, Dim::N), None);
-        assert_eq!(Tensor::B.stride(&p, Dim::K), Some(8));
-        assert_eq!(Tensor::B.stride(&p, Dim::N), Some(1));
-        assert_eq!(Tensor::T.stride(&p, Dim::M), Some(8));
-        assert_eq!(Tensor::C.stride(&p, Dim::K), None);
+        let [a, b] = *p.inputs();
+        assert_eq!(a.access.stride(Dim::M), Some(16));
+        assert_eq!(a.access.stride(Dim::K), Some(1));
+        assert_eq!(a.access.stride(Dim::N), None);
+        assert_eq!(b.access.stride(Dim::K), Some(8));
+        assert_eq!(b.access.stride(Dim::N), Some(1));
+        assert_eq!(p.out_access().stride(Dim::M), Some(8));
+        assert_eq!(p.out_access().stride(Dim::N), Some(1));
+        assert_eq!(p.out_access().stride(Dim::K), None);
     }
 
     #[test]
-    fn flops_and_footprint() {
+    fn matmul_flops_footprint_lens() {
         let p = Problem::new(64, 64, 64);
         assert_eq!(p.flops(), 2 * 64 * 64 * 64);
         assert_eq!(p.footprint_bytes(), 4 * (64 * 64 * 4) as u64);
+        assert_eq!(p.tensor_len(&p.inputs()[0]), 64 * 64);
+        assert_eq!(p.out_len(), 64 * 64);
+        assert_eq!(p.as_matmul(), Some((64, 64, 64)));
+        assert_eq!(p.mm_kernel_shape(), Some((64, 64, 64)));
     }
 
     #[test]
     fn id_format() {
         assert_eq!(Problem::new(64, 80, 96).id(), "mm_64x80x96");
+        assert_eq!(Problem::batched_matmul(2, 64, 80, 96).id(), "bmm_2x64x80x96");
+        assert_eq!(Problem::conv2d(28, 28, 3, 3).id(), "conv2d_28x28x3x3");
+    }
+
+    #[test]
+    fn reduction_dim_sets() {
+        let p = Problem::conv2d(28, 28, 3, 3);
+        let reds: Vec<&str> = p
+            .dims()
+            .filter(|&d| p.is_reduce(d))
+            .map(|d| p.dim_name(d))
+            .collect();
+        assert_eq!(reds, ["kh", "kw"]);
+        let outs: Vec<&str> = p.output_dims().map(|d| p.dim_name(d)).collect();
+        assert_eq!(outs, ["oh", "ow"]);
+    }
+
+    #[test]
+    fn conv2d_input_covers_halo() {
+        // In is (oh+kh-1) x (ow+kw-1): overlapping windows via shared strides.
+        let p = Problem::conv2d(28, 26, 3, 5);
+        let input = p.inputs()[0];
+        assert_eq!(p.tensor_len(&input), (28 + 3 - 1) * (26 + 5 - 1));
+        assert_eq!(input.access.stride(Dim::new(0)), input.access.stride(Dim::new(2)));
+    }
+
+    #[test]
+    fn batched_matmul_layout() {
+        let p = Problem::batched_matmul(4, 8, 16, 32);
+        let [a, b] = *p.inputs();
+        assert_eq!(a.access.stride(Dim::new(0)), Some(8 * 32));
+        assert_eq!(b.access.stride(Dim::new(0)), Some(32 * 16));
+        assert_eq!(p.out_access().stride(Dim::new(0)), Some(8 * 16));
+        assert_eq!(p.tensor_len(&a), 4 * 8 * 32);
+        assert_eq!(p.out_len(), 4 * 8 * 16);
+        assert_eq!(p.flops(), 2 * 4 * 8 * 16 * 32);
+        assert_eq!(p.mm_kernel_shape(), None);
+    }
+
+    #[test]
+    fn mlp_has_bias_relu_and_matmul_kernel_shape() {
+        let p = Problem::mlp(32, 64, 128);
+        assert!(p.relu());
+        let bias = p.bias().expect("mlp has bias");
+        assert_eq!(p.tensor_len(bias), 64);
+        assert_eq!(p.as_matmul(), None);
+        assert_eq!(p.mm_kernel_shape(), Some((32, 64, 128)));
+        assert_eq!(p.writeback_tensors().len(), 3);
+    }
+
+    #[test]
+    fn transposed_matmul_swaps_a_strides() {
+        let p = Problem::matmul_transposed(8, 16, 32);
+        let a = p.inputs()[0];
+        assert_eq!(a.access.stride(Dim::M), Some(1));
+        assert_eq!(a.access.stride(Dim::K), Some(8));
+        assert_eq!(p.mm_kernel_shape(), None);
+        assert_eq!(p.tensor_len(&a), 8 * 32);
+    }
+
+    #[test]
+    fn dim_hash_distinguishes_kind_and_extents() {
+        let a = Problem::new(64, 64, 64);
+        assert_eq!(a.dim_hash(), Problem::new(64, 64, 64).dim_hash());
+        assert_ne!(a.dim_hash(), Problem::new(64, 64, 80).dim_hash());
+        assert_ne!(a.dim_hash(), Problem::mlp(64, 64, 64).dim_hash());
+        assert_ne!(a.dim_hash(), Problem::matmul_transposed(64, 64, 64).dim_hash());
     }
 }

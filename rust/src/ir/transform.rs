@@ -131,9 +131,10 @@ pub fn schedule_signature(nest: &Nest) -> String {
         .iter()
         .enumerate()
         .map(|(i, l)| {
+            let name = nest.problem.dim_name(l.dim);
             let base = match l.kind {
-                Kind::Compute => l.dim.name().to_string(),
-                Kind::WriteBack => format!("w{}", l.dim.name()),
+                Kind::Compute => name.to_string(),
+                Kind::WriteBack => format!("w{name}"),
             };
             match l.factor {
                 Some(f) => format!("{base}:{f}"),
@@ -252,11 +253,18 @@ mod tests {
     fn prop_random_transforms_preserve_invariants() {
         for seed in 0..40u64 {
             let mut rng = Pcg32::new(seed);
-            let p = Problem::new(
-                64 + 16 * rng.below(13),
-                64 + 16 * rng.below(13),
-                64 + 16 * rng.below(13),
-            );
+            // Rotate through workload families so the closure property is
+            // pinned on generalized dims too, not just matmul.
+            let p = match seed % 4 {
+                0 => Problem::batched_matmul(2 + rng.below(4), 64, 64 + 16 * rng.below(4), 64),
+                1 => Problem::conv2d(16 + rng.below(48), 16 + rng.below(48), 3, 5),
+                2 => Problem::conv1d(32 + rng.below(64), 16, 5, 8 + rng.below(8)),
+                _ => Problem::new(
+                    64 + 16 * rng.below(13),
+                    64 + 16 * rng.below(13),
+                    64 + 16 * rng.below(13),
+                ),
+            };
             let mut n = Nest::initial(p);
             for _ in 0..60 {
                 match rng.below(5) {

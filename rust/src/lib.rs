@@ -3,7 +3,10 @@
 //! Reproduction of *LoopTune: Optimizing Tensor Computations with
 //! Reinforcement Learning* (Grubisic et al., 2023) as a three-layer stack:
 //!
-//! - **L3 (this crate)**: the coordinator — loop-nest IR ("LoopTool"),
+//! - **L3 (this crate)**: the coordinator — a generalized loop-nest IR
+//!   ("LoopTool") over arbitrary tensor contractions (named dims +
+//!   per-tensor access maps; matmul, batched matmul, convolutions and MLP
+//!   layers are constructors, see [`ir::Problem`] and `eval::workloads`),
 //!   cursor-based action space, graph-derived state featurizer, the
 //!   "LoopNest" backend substrate (schedule executor + analytical cost
 //!   model + empirical peak), classical searches, RL trainers, simulated

@@ -8,7 +8,10 @@
 //!   tune      --mnk M,N,K         tune one problem with a trained policy
 //!   search    --algo A --mnk ...  run one classical search
 //!   tune-many --algo A ...        batch-tune a whole problem set across
-//!                                 worker threads; writes a JSON report
+//!                                 worker threads; writes a JSON report.
+//!                                 --suite bmm|conv1d|conv2d|mlp|... runs a
+//!                                 workload suite from the registry
+//!   workloads                     list the registered workload suites
 //!   eval      <experiment>        regenerate a paper table/figure
 //!   artifacts                     check the AOT artifacts load
 //!
@@ -19,7 +22,7 @@
 use anyhow::{anyhow, bail, Result};
 use looptune::backend::peak;
 use looptune::config::Config;
-use looptune::eval::{experiments, EvalCfg};
+use looptune::eval::{experiments, workloads, EvalCfg};
 use looptune::ir::{Nest, Problem};
 use looptune::rl::{self, params::ParamSet};
 use looptune::runtime::Runtime;
@@ -138,7 +141,12 @@ fn main() -> Result<()> {
                 ds.test.len(),
                 dataset::dims()
             );
-            println!("state vector: {} loops x {} feats = {}", looptune::ir::MAX_LOOPS, FEATS, STATE_DIM);
+            println!(
+                "state vector: {} loops x {} feats = {}",
+                looptune::ir::MAX_LOOPS,
+                FEATS,
+                STATE_DIM
+            );
             for p in dataset::sample_test(&ds, 5, seed) {
                 println!("  sample test problem: {p}");
             }
@@ -152,7 +160,12 @@ fn main() -> Result<()> {
             println!("constants: {:?}", rt.constants);
             for name in rt.entry_names() {
                 let e = rt.entry(name)?;
-                println!("  {name}: {} inputs, {} outputs ({})", e.inputs.len(), e.num_outputs, e.file);
+                println!(
+                    "  {name}: {} inputs, {} outputs ({})",
+                    e.inputs.len(),
+                    e.num_outputs,
+                    e.file
+                );
             }
         }
         "train" => {
@@ -262,7 +275,8 @@ fn main() -> Result<()> {
                 if out.stopped_early { ", early stop" } else { "" },
                 if trained { "" } else { ", UNTRAINED policy" },
             );
-            println!("actions: {}", out.actions.iter().map(|a| a.name()).collect::<Vec<_>>().join(" "));
+            let names: Vec<String> = out.actions.iter().map(|a| a.name()).collect();
+            println!("actions: {}", names.join(" "));
             print!("{}", out.nest);
         }
         "search" => {
@@ -307,13 +321,31 @@ fn main() -> Result<()> {
         "tune-many" => {
             // Batch-tune a problem set across worker threads; per-problem
             // budgets, deterministic per-problem seeds, JSON report.
-            let ds = dataset::canonical();
-            let problems: Vec<Problem> =
-                match args.flags.get("split").map(String::as_str).unwrap_or("test") {
-                    "all" => dataset::all_problems(),
-                    "train" => ds.train.clone(),
-                    "test" => ds.test.clone(),
-                    other => bail!("unknown --split {other} (all|train|test)"),
+            // --suite NAME picks a workload suite from the registry
+            // (bmm, conv1d, conv2d, mlp, ...); otherwise --split selects
+            // from the paper's matmul dataset.
+            let (problems, suite): (Vec<Problem>, &'static str) =
+                if let Some(name) = args.flags.get("suite") {
+                    if args.flags.contains_key("split") {
+                        bail!("--suite and --split are mutually exclusive");
+                    }
+                    let s = workloads::suite(name).ok_or_else(|| {
+                        anyhow!(
+                            "unknown suite {name} (available: {})",
+                            workloads::SUITE_NAMES.join("|")
+                        )
+                    })?;
+                    (s.problems, s.name)
+                } else {
+                    let ds = dataset::canonical();
+                    let ps = match args.flags.get("split").map(String::as_str).unwrap_or("test")
+                    {
+                        "all" => dataset::all_problems(),
+                        "train" => ds.train.clone(),
+                        "test" => ds.test.clone(),
+                        other => bail!("unknown --split {other} (all|train|test)"),
+                    };
+                    (ps, "dataset")
                 };
             let problems = match args.flags.get("limit").and_then(|s| s.parse().ok()) {
                 Some(l) => problems.into_iter().take(l).collect(),
@@ -367,12 +399,26 @@ fn main() -> Result<()> {
                     .unwrap_or(1),
             };
             let be = ecfg.backend();
-            let report = batch::run(&problems, &be, &bcfg);
+            let report = batch::run(&problems, &be, &bcfg).with_suite(suite);
             println!("{}", report.summary());
             std::fs::create_dir_all(&out_dir)?;
-            let path = out_dir.join("tune_many.json");
+            let file = if suite == "dataset" {
+                "tune_many.json".to_string()
+            } else {
+                format!("tune_many_{suite}.json")
+            };
+            let path = out_dir.join(file);
             std::fs::write(&path, report.to_json())?;
             println!("report -> {}", path.display());
+        }
+        "workloads" => {
+            // List the registered workload suites (README workload table).
+            println!("{:<8} {:>9}  description", "suite", "problems");
+            for s in workloads::all() {
+                println!("{:<8} {:>9}  {}", s.name, s.problems.len(), s.description);
+                let sample = &s.problems[0];
+                println!("{:<8} {:>9}  e.g. {sample}", "", "");
+            }
         }
         "eval" => {
             let exp = args.pos.first().map(String::as_str).unwrap_or("all");
@@ -450,11 +496,13 @@ fn main() -> Result<()> {
             println!(
                 "looptune — RL loop-schedule auto-tuner (LoopTune reproduction)\n\n\
                  usage: looptune <cmd> [flags]\n\
-                 cmds:  peak | dataset | render | artifacts | train | tune | search\n       \
-                 | tune-many | eval\n\
+                 cmds:  peak | dataset | workloads | render | artifacts | train | tune\n       \
+                 | search | tune-many | eval\n\
                  flags: --mnk M,N,K --algo NAME --iters N --budget SECS --out DIR\n       \
                  --params FILE --config FILE --seed N --quick --cost-model --untrained\n       \
-                 --threads N --expand-threads N --budget-evals N --split S --limit N"
+                 --threads N --expand-threads N --budget-evals N --split S --limit N\n       \
+                 --suite NAME (tune-many over a workload suite: matmul|mmt|bmm|\n       \
+                 conv1d|conv2d|mlp)"
             );
         }
     }

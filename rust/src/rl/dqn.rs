@@ -180,7 +180,9 @@ impl DqnTrainer {
             } else {
                 super::argmax(&self.q_values(&state)?)
             };
-            let step = env.step(Action::from_index(a_idx));
+            let action = Action::from_index(a_idx)
+                .ok_or_else(|| anyhow::anyhow!("action index {a_idx} out of range"))?;
+            let step = env.step(action);
             total += step.reward;
             let done = env.steps >= self.cfg.episode_len;
             let t = Transition {

@@ -142,7 +142,9 @@ impl PpoTrainer {
             let (logits, value) = self.pv_cached(&state)?;
             let a = super::sample_categorical(&logits, &mut self.rng);
             let logp = super::log_softmax(&logits)[a];
-            let st = env.step(Action::from_index(a));
+            let action = Action::from_index(a)
+                .ok_or_else(|| anyhow::anyhow!("action index {a} out of range"))?;
+            let st = env.step(action);
             total += st.reward;
             steps.push(RolloutStep {
                 state: std::mem::take(&mut state),

@@ -58,7 +58,8 @@ pub fn tune(
         order.sort_by(|&a, &b| q[b].partial_cmp(&q[a]).unwrap());
         let mut applied = None;
         for idx in order {
-            let action = Action::from_index(idx);
+            // Skip indices past the action table (stale/oversized artifact).
+            let Some(action) = Action::from_index(idx) else { continue };
             let mut next = nest.clone();
             if action.apply(&mut next).is_ok() {
                 applied = Some((action, next));

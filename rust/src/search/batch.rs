@@ -55,13 +55,10 @@ impl Default for BatchCfg {
 }
 
 /// Deterministic per-problem seed: a splitmix64 finalizer over the batch
-/// seed and the problem dims, independent of scheduling order.
+/// seed and the problem's (kind, extents) hash, independent of scheduling
+/// order and of the workload family mix in the batch.
 pub fn problem_seed(seed: u64, p: Problem) -> u64 {
-    let mut x = seed
-        ^ 0x9e37_79b9_7f4a_7c15
-        ^ ((p.m as u64) << 42)
-        ^ ((p.n as u64) << 21)
-        ^ (p.k as u64);
+    let mut x = seed ^ 0x9e37_79b9_7f4a_7c15 ^ p.dim_hash();
     x ^= x >> 30;
     x = x.wrapping_mul(0xbf58_476d_1ce4_e5b9);
     x ^= x >> 27;
@@ -92,6 +89,10 @@ pub struct ProblemOutcome {
 /// Aggregate result of a batch run.
 #[derive(Clone, Debug)]
 pub struct BatchReport {
+    /// Workload-suite name (see `eval::workloads`); `"custom"` when the
+    /// problem list did not come from the registry. Set by the caller via
+    /// [`BatchReport::with_suite`] and carried into the JSON report.
+    pub suite: String,
     /// Algorithm name.
     pub algo: &'static str,
     /// Backend kind used for scoring.
@@ -109,6 +110,12 @@ pub struct BatchReport {
 }
 
 impl BatchReport {
+    /// Tag the report with the workload-suite name it was run over.
+    pub fn with_suite(mut self, suite: &str) -> BatchReport {
+        self.suite = suite.to_string();
+        self
+    }
+
     /// Problems tuned per wall-clock second.
     pub fn problems_per_sec(&self) -> f64 {
         self.outcomes.len() as f64 / self.wall_secs.max(1e-9)
@@ -158,6 +165,7 @@ impl BatchReport {
     /// Machine-readable JSON report.
     pub fn to_json(&self) -> String {
         let mut root = BTreeMap::new();
+        root.insert("suite".to_string(), Json::Str(self.suite.clone()));
         root.insert("algo".to_string(), Json::Str(self.algo.to_string()));
         root.insert("backend".to_string(), Json::Str(self.backend.to_string()));
         root.insert("threads".to_string(), Json::Num(self.threads as f64));
@@ -183,10 +191,16 @@ impl BatchReport {
             .iter()
             .map(|o| {
                 let mut row = BTreeMap::new();
-                row.insert("problem".to_string(), Json::Str(format!("{}", o.problem)));
-                row.insert("m".to_string(), Json::Num(o.problem.m as f64));
-                row.insert("n".to_string(), Json::Num(o.problem.n as f64));
-                row.insert("k".to_string(), Json::Num(o.problem.k as f64));
+                row.insert("problem".to_string(), Json::Str(o.problem.to_string()));
+                row.insert("kind".to_string(), Json::Str(o.problem.kind().to_string()));
+                let mut dims = BTreeMap::new();
+                for d in o.problem.dims() {
+                    dims.insert(
+                        o.problem.dim_name(d).to_string(),
+                        Json::Num(o.problem.extent(d) as f64),
+                    );
+                }
+                row.insert("dims".to_string(), Json::Obj(dims));
                 row.insert("best_gflops".to_string(), Json::Num(o.best_gflops));
                 row.insert("initial_gflops".to_string(), Json::Num(o.initial_gflops));
                 row.insert("speedup".to_string(), Json::Num(o.speedup));
@@ -238,6 +252,7 @@ pub fn run(problems: &[Problem], backend: &SharedBackend, cfg: &BatchCfg) -> Bat
     });
 
     BatchReport {
+        suite: "custom".to_string(),
         algo: cfg.algo.name(),
         backend: backend.name(),
         threads,
@@ -322,6 +337,29 @@ mod tests {
         );
         let summary = report.summary();
         assert!(summary.contains("3 problems"), "{summary}");
+    }
+
+    #[test]
+    fn batch_tunes_generalized_workloads_and_tags_suite() {
+        let ps = vec![
+            Problem::batched_matmul(2, 64, 64, 64),
+            Problem::conv2d(28, 28, 3, 3),
+            Problem::mlp(64, 64, 64),
+        ];
+        let cfg = BatchCfg { threads: 2, budget: Budget::evals(60), ..BatchCfg::default() };
+        let report = run(&ps, &be(), &cfg).with_suite("mixed");
+        assert_eq!(report.outcomes.len(), 3);
+        for o in &report.outcomes {
+            assert!(o.best_gflops > 0.0, "{}", o.problem);
+            assert!(o.speedup >= 1.0 - 1e-9, "{}", o.problem);
+        }
+        let doc = json::parse(&report.to_json()).unwrap();
+        assert_eq!(doc.get("suite").unwrap().as_str(), Some("mixed"));
+        let rows = doc.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(rows[1].get("kind").unwrap().as_str(), Some("conv2d"));
+        let dims = rows[1].get("dims").unwrap().as_obj().unwrap();
+        assert_eq!(dims.get("oh").unwrap().as_usize(), Some(28));
+        assert_eq!(dims.get("kw").unwrap().as_usize(), Some(3));
     }
 
     #[test]

@@ -1,0 +1,70 @@
+//! Pins the Rust <-> Python model contract: the state/action shape
+//! constants in `python/compile/model.py` must equal this crate's, or the
+//! AOT artifacts and the coordinator silently disagree. This replaces the
+//! comment-only coupling between `rust/src/env/actions.rs` and `model.py`
+//! with an executable assertion that parses the constants out of the
+//! Python source.
+
+use std::path::PathBuf;
+
+fn model_py() -> String {
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../python/compile/model.py");
+    std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("cannot read {}: {e}", path.display()))
+}
+
+/// Parse a `NAME = <int>` top-level assignment (trailing `#` comments ok).
+fn parse_const(src: &str, name: &str) -> usize {
+    for line in src.lines() {
+        if let Some(rest) = line.trim_end().strip_prefix(name) {
+            let rest = rest.trim_start();
+            if let Some(val) = rest.strip_prefix('=') {
+                let val = val.split('#').next().unwrap_or("").trim();
+                if let Ok(v) = val.parse::<usize>() {
+                    return v;
+                }
+            }
+        }
+    }
+    panic!("constant {name} not found as an integer assignment in model.py");
+}
+
+#[test]
+fn python_model_constants_match_rust() {
+    let src = model_py();
+    assert_eq!(
+        parse_const(&src, "MAX_LOOPS"),
+        looptune::MAX_LOOPS,
+        "MAX_LOOPS diverged between model.py and rust/src/ir/mod.rs"
+    );
+    assert_eq!(
+        parse_const(&src, "FEATS"),
+        looptune::FEATS,
+        "FEATS diverged between model.py and rust/src/lib.rs"
+    );
+    assert_eq!(
+        parse_const(&src, "NUM_ACTIONS"),
+        looptune::NUM_ACTIONS,
+        "NUM_ACTIONS diverged between model.py and rust/src/env/actions.rs"
+    );
+}
+
+#[test]
+fn state_dim_is_derived_identically() {
+    // Both sides derive STATE_DIM = MAX_LOOPS * FEATS rather than pinning
+    // a third number that could drift.
+    let src = model_py();
+    assert!(
+        src.contains("STATE_DIM = MAX_LOOPS * FEATS"),
+        "model.py no longer derives STATE_DIM from MAX_LOOPS * FEATS"
+    );
+    assert_eq!(looptune::STATE_DIM, looptune::MAX_LOOPS * looptune::FEATS);
+}
+
+#[test]
+fn action_table_width_matches_network_head() {
+    // The action indices are the network output order; the table length is
+    // the contract the argmax relies on.
+    assert_eq!(looptune::Action::all().len(), looptune::NUM_ACTIONS);
+    assert_eq!(parse_const(&model_py(), "NUM_ACTIONS"), looptune::Action::all().len());
+}

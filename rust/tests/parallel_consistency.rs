@@ -81,7 +81,7 @@ impl Backend for SlowCounting {
             acc += ((i * nest.loops.len()) as f64).sqrt();
         }
         std::hint::black_box(acc);
-        nest.loops.len() as f64 + nest.problem.m as f64 / 1e6
+        nest.loops.len() as f64 + nest.problem.extent(looptune::ir::Dim::M) as f64 / 1e6
     }
     fn name(&self) -> &'static str {
         "slow_counting"

@@ -97,7 +97,8 @@ fn prop_action_closure_preserves_coverage() {
         let p = random_problem(&mut rng);
         let mut nest = Nest::initial(p);
         for _ in 0..30 {
-            let a = Action::from_index(rng.below(looptune::NUM_ACTIONS));
+            let a = Action::from_index(rng.below(looptune::NUM_ACTIONS))
+                .expect("index below NUM_ACTIONS");
             let _ = a.apply(&mut nest);
         }
         nest.check_invariants().unwrap();
