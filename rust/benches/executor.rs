@@ -54,6 +54,36 @@ fn main() {
         println!();
     }
 
+    // Generic-path families: initial order vs. the order that hits the
+    // structural pair kernels (bmm keeps (n, k) innermost from the start;
+    // conv2d needs (kw, ow) innermost).
+    {
+        let bmm = Nest::initial(looptune::ir::Problem::batched_matmul(4, 128, 128, 128));
+        let p = looptune::ir::Problem::conv2d(56, 56, 3, 3);
+        let naive = Nest::initial(p);
+        let mut tuned = Nest::initial(p); // oh ow kh kw
+        tuned.cursor = 1;
+        tuned.swap_down().unwrap();
+        tuned.swap_down().unwrap(); // oh kh kw ow -> (kw, ow) pair
+        let cases = [
+            ("bmm4x128 initial", &bmm),
+            ("conv2d56 initial", &naive),
+            ("conv2d56 kw/ow pair", &tuned),
+        ];
+        for (name, nest) in cases {
+            let g = gflops(nest, 5);
+            let pl = plan(lower(nest));
+            println!(
+                "{:<28} {:>10.2} {:>8.1}%  [{}]",
+                name,
+                g,
+                100.0 * g / pk,
+                pl.dispatch()
+            );
+        }
+        println!();
+    }
+
     // Schedule lowering ("compile") throughput.
     let nest = TemplatePoint {
         order: [Dim::M, Dim::N, Dim::K],

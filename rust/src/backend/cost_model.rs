@@ -134,14 +134,13 @@ impl CostModel {
             LaneClass::Red => m.red_lanes,
             LaneClass::Strided => m.strided_lanes,
         };
-        // Fused stride-1 innermost pairs: (reduction, vectorizable)
-        // recovers full vectorization — via the executor's kn_tile on the
-        // matmul fast path, and via LLVM auto-vectorizing the unit-stride
-        // generic inner loop elsewhere (an idealized assumption there: the
-        // model stays consistent per workload, which is what ranking
-        // needs; absolute GFLOPS is only pinned against measurement for
-        // matmul in cost_vs_measured.rs). The reverse order runs wide
-        // independent dot products.
+        // Fused stride-1 innermost pairs, recognized by the *same*
+        // structural query the executor's plan step dispatches on
+        // (`Problem::pair_roles`): reduction-outer order runs the
+        // row-vectorized kn kernel (full lanes), the reverse order runs
+        // wide independent dot products. Pairs the kernels cannot tile
+        // (no contiguous dot row / row panel) keep their single-level
+        // class, exactly as they execute.
         let lanes = match pair_kind(&p, levels) {
             Some(PairKind::RedVec) => m.vec_lanes,
             Some(PairKind::VecRed) => m.red_lanes * 2.0,
@@ -313,14 +312,16 @@ fn pair_kind(p: &Problem, levels: &[Level]) -> Option<PairKind> {
     }
     let a = levels[levels.len() - 2];
     let b = levels[levels.len() - 1];
-    if a.stride != 1 || b.stride != 1 || a.dim == b.dim {
+    if a.stride != 1 || b.stride != 1 {
         return None;
     }
-    match (lane_class(p, a.dim), lane_class(p, b.dim)) {
-        (LaneClass::Red, LaneClass::Vec) => Some(PairKind::RedVec),
-        (LaneClass::Vec, LaneClass::Red) => Some(PairKind::VecRed),
-        _ => None,
-    }
+    // Same structural recognition the executor's plan step uses: the model
+    // only credits a fused pair when the access maps actually admit the
+    // register-tiled kernels (e.g. conv1d's (ic, oc) pair and transposed
+    // matmul look Red/Vec by lane class but have no contiguous row panel,
+    // so they stay on the single-level class above).
+    let roles = p.pair_roles(a.dim, b.dim)?;
+    Some(if roles.red_outer { PairKind::RedVec } else { PairKind::VecRed })
 }
 
 impl Backend for CostModel {

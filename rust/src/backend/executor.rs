@@ -2,23 +2,35 @@
 //! and measures GFLOPS. This is our LoopNest: the schedule decides loop
 //! order, tiling and therefore the memory-access pattern; the executor
 //! contributes the hardware-specific layer (vectorized innermost
-//! microkernels for matmul-shaped compute nests, a generic access-map
-//! interpreter for every other contraction, clamped tails everywhere).
+//! microkernels, clamped tails everywhere).
 //!
-//! Two compute paths, selected at plan time:
+//! The engine is *compiled at plan time*, not interpreted per point:
 //!
-//! - **Matmul fast path** (`Problem::mm_kernel_shape()` is `Some`): the
-//!   innermost level(s) dispatch to the register-tiled microkernels in
-//!   [`super::microkernel`], exactly as the seed did — plain matmul and
-//!   MLP layers keep their measured performance characteristics.
-//! - **Generic path**: the innermost level walks each tensor by its
-//!   access-map stride (`T[out] (+)= In0 * In1`), which executes *any*
-//!   linear-access contraction — batched matmul, convolutions, transposed
-//!   matmul — correctly, including clamped partial chunks.
+//! - **Loop programs**: `plan()` flattens the compute and write-back nests
+//!   into iterative loop programs whose levels carry precomputed
+//!   per-tensor offset deltas (`level stride × access stride`). Execution
+//!   keeps one running offset per tensor and never touches an index
+//!   vector or recomputes `Access::offset`; boundary tails are handled by
+//!   clamping each level's per-iteration chunk against the elements its
+//!   parent level handed down.
+//! - **Structural pair dispatch**: when the two innermost compute levels
+//!   form a register-tileable pair (one reduction dim read contiguously by
+//!   a *dot-row* operand, one unit-stride output dim read contiguously by
+//!   a *row-panel* operand — see [`Problem::pair_roles`]), they dispatch
+//!   to the register-tiled `kn`/`nk` microkernels at the current base
+//!   offsets. Plain/batched matmul, MLP layers and conv2d's `(kw, ow)`
+//!   spatial pair all hit this path; it is recognized from the access
+//!   maps, with no per-workload special case.
+//! - **Stride-signature kernels**: a single remaining innermost level is
+//!   specialized on its `(s0, s1, st)` access-stride signature —
+//!   unit-stride dot product, strided dot, axpy, elementwise
+//!   multiply-accumulate, broadcast-scale — each a fixed-stride loop the
+//!   autovectorizer handles; only truly strided walks stay scalar.
 //!
-//! The write-back nest is always executed generically (copy, or the
-//! problem's bias + ReLU epilogue), with a `copy_from_slice` fast path for
-//! unit-stride plain copies.
+//! The write-back program applies the problem's epilogue (plain copy, or
+//! bias + ReLU) with a `copy_from_slice` fast path for unit-stride plain
+//! copies. [`reference`] uses the same incremental-offset idea over a
+//! naive odometer, so verification stays cheap on big problems.
 //!
 //! Measurement follows the paper's protocol (warm-up runs excluded, fastest
 //! of several timed executions), with the warm-up count reduced from 20 to
@@ -27,59 +39,327 @@
 use super::microkernel as mk;
 use super::schedule::{lower, CompiledSchedule, Level};
 use super::Backend;
-use crate::ir::{Access, Dim, Nest, Problem, MAX_DIMS};
+use crate::ir::{Dim, Nest, Problem, MAX_DIMS, MAX_LOOPS};
 use crate::util::rng::Pcg32;
 use std::time::Instant;
 
-/// How the innermost compute level(s) are dispatched.
+/// Tensor slots a loop program tracks running offsets for. Compute uses
+/// `[in0, in1, T]`; write-back uses `[T/C, bias, unused]`.
+const SLOTS: usize = 3;
+
+/// One level of a flattened loop program.
+#[derive(Clone, Copy, Debug)]
+struct ProgLevel {
+    /// Elements of the level's dim advanced per iteration.
+    stride: usize,
+    /// Running-offset deltas added per iteration, one per tensor slot
+    /// (`stride × access stride` — precomputed at plan time).
+    delta: [usize; SLOTS],
+    /// Index of the nearest outer level of the same dim (whose current
+    /// clamped chunk bounds this level), or `usize::MAX` for none.
+    parent: usize,
+    /// Full extent of the dim (the chunk when there is no parent).
+    extent: usize,
+}
+
+/// Where an inner kernel reads the current clamped chunk of one dim: the
+/// current iteration of an outer-program level, or the full extent.
+#[derive(Clone, Copy, Debug)]
+struct ChunkSrc {
+    /// Level index in the outer program, or `usize::MAX` for none.
+    level: usize,
+    /// Full-extent fallback.
+    extent: usize,
+}
+
+impl ChunkSrc {
+    #[inline]
+    fn get(&self, cur: &[usize; MAX_LOOPS]) -> usize {
+        if self.level == usize::MAX {
+            self.extent
+        } else {
+            cur[self.level]
+        }
+    }
+}
+
+/// Stride-signature classes of a single innermost level (`s0`/`s1` are the
+/// input strides along the level's dim, `st` the output stride).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
-enum InnerKind {
-    /// Generic access-map interpreter over the innermost level.
-    Generic,
-    /// Matmul fast path: single innermost level, by matmul dim.
-    Single(Dim),
-    /// Matmul fused (k, n) pair: k at depth L-2, n at depth L-1.
-    PairKN,
-    /// Matmul fused (n, k) pair: n at depth L-2, k at depth L-1.
-    PairNK,
+enum Loop1Kind {
+    /// `(1, 1, 0)` — unit-stride dot product (matmul `k` fast case,
+    /// conv's innermost reduction when both operands are contiguous).
+    DotUnit,
+    /// `(_, _, 0)` — strided dot product (reduction innermost).
+    Dot,
+    /// `(0, 1, 1)` — axpy with `in0` as the broadcast scalar.
+    Axpy0,
+    /// `(1, 0, 1)` — axpy with `in1` as the broadcast scalar.
+    Axpy1,
+    /// `(1, 1, 1)` — elementwise multiply-accumulate.
+    MulAcc,
+    /// `(0, 0, 1)` — both operands constant: broadcast-scale the output.
+    Scale,
+    /// Anything else — scalar strided walk.
+    Strided,
 }
 
-/// Lowered-and-planned schedule ready to execute.
+/// How the innermost compute level(s) are dispatched.
+#[derive(Clone, Copy, Debug)]
+enum Kernel {
+    /// Structural register-tiled pair (see [`Problem::pair_roles`]).
+    Pair {
+        /// Input slot of the dot-row operand.
+        a_slot: usize,
+        /// Row stride of the row-panel operand along the reduction dim.
+        brs: usize,
+        /// Reduction dim outer (`kn` order) vs. inner (`nk` order).
+        red_outer: bool,
+        /// Chunk source of the vectorized (output) dim.
+        chunk_v: ChunkSrc,
+        /// Chunk source of the reduction dim.
+        chunk_r: ChunkSrc,
+    },
+    /// Single innermost level, stride-signature specialized.
+    Loop1 {
+        kind: Loop1Kind,
+        s0: usize,
+        s1: usize,
+        st: usize,
+        chunk: ChunkSrc,
+    },
+}
+
+/// Innermost write-back step: epilogue along the deepest write-back dim.
+#[derive(Clone, Copy, Debug)]
+struct WbInner {
+    chunk: ChunkSrc,
+    /// Output stride along the dim (>= 1: it is an output dim).
+    sc: usize,
+    /// Bias stride along the dim (0 without bias).
+    sb: usize,
+    /// Unit-stride plain copy (`copy_from_slice` fast path).
+    plain: bool,
+    relu: bool,
+    has_bias: bool,
+}
+
+/// Lowered-and-planned schedule ready to execute: flattened loop programs
+/// plus the chosen innermost dispatch.
 pub struct ExecPlan {
-    sched: CompiledSchedule,
-    inner: InnerKind,
-    /// Number of leading compute levels executed by the generic recursion.
-    cut: usize,
-    /// `(m, n, k)` extents when the matmul fast path is active.
-    mm: (usize, usize, usize),
+    problem: Problem,
+    /// Compute levels above the innermost kernel, outermost first.
+    c_levels: Vec<ProgLevel>,
+    kernel: Kernel,
+    /// Write-back levels above the innermost epilogue step.
+    w_levels: Vec<ProgLevel>,
+    wb: WbInner,
 }
 
-/// Plan a compiled schedule: choose the innermost dispatch.
+/// Nearest level of `dim` among the outer-program `levels`, as a chunk
+/// source (fallback: the dim's full extent).
+fn chunk_src(levels: &[Level], p: &Problem, dim: Dim) -> ChunkSrc {
+    let level = levels.iter().rposition(|l| l.dim == dim).unwrap_or(usize::MAX);
+    ChunkSrc { level, extent: p.extent(dim) }
+}
+
+/// Flatten `levels` into a loop program over tensors with access strides
+/// looked up by `acc(slot, dim)`.
+fn build_levels(
+    levels: &[Level],
+    p: &Problem,
+    parent_of: impl Fn(usize) -> Option<usize>,
+    acc: impl Fn(usize, Dim) -> usize,
+) -> Vec<ProgLevel> {
+    levels
+        .iter()
+        .enumerate()
+        .map(|(i, l)| ProgLevel {
+            stride: l.stride,
+            delta: [
+                l.stride * acc(0, l.dim),
+                l.stride * acc(1, l.dim),
+                l.stride * acc(2, l.dim),
+            ],
+            parent: parent_of(i).unwrap_or(usize::MAX),
+            extent: p.extent(l.dim),
+        })
+        .collect()
+}
+
+/// Plan a compiled schedule: flatten the nests into loop programs and
+/// choose the innermost dispatch structurally from the access maps.
 pub fn plan(sched: CompiledSchedule) -> ExecPlan {
+    let p = sched.problem;
     let n = sched.levels.len();
-    let Some(mm) = sched.problem.mm_kernel_shape() else {
-        return ExecPlan { sched, inner: InnerKind::Generic, cut: n - 1, mm: (0, 0, 0) };
-    };
-    let inner = if n >= 2 {
+
+    // Structural pair on the two innermost levels (both necessarily the
+    // deepest level of their dim when their IR stride is 1).
+    let pair = if n >= 2 {
         let a = sched.levels[n - 2];
         let b = sched.levels[n - 1];
-        // Deepest level of any dim has IR stride 1; a fused pair needs both
-        // ranges contiguous.
-        if a.stride == 1 && b.stride == 1 && a.dim == Dim::K && b.dim == Dim::N {
-            InnerKind::PairKN
-        } else if a.stride == 1 && b.stride == 1 && a.dim == Dim::N && b.dim == Dim::K {
-            InnerKind::PairNK
+        if a.stride == 1 && b.stride == 1 {
+            p.pair_roles(a.dim, b.dim).map(|roles| (roles, a.dim, b.dim))
         } else {
-            InnerKind::Single(b.dim)
+            None
         }
     } else {
-        InnerKind::Single(sched.levels[n - 1].dim)
+        None
     };
-    let cut = match inner {
-        InnerKind::PairKN | InnerKind::PairNK => n - 2,
-        _ => n - 1,
+
+    let (cut, kernel) = match pair {
+        Some((roles, outer, inner)) => {
+            let cut = n - 2;
+            let (rdim, vdim) = if roles.red_outer { (outer, inner) } else { (inner, outer) };
+            let kernel = Kernel::Pair {
+                a_slot: roles.a_input,
+                brs: roles.b_row_stride,
+                red_outer: roles.red_outer,
+                chunk_v: chunk_src(&sched.levels[..cut], &p, vdim),
+                chunk_r: chunk_src(&sched.levels[..cut], &p, rdim),
+            };
+            (cut, kernel)
+        }
+        None => {
+            let cut = n - 1;
+            let d = sched.levels[cut].dim;
+            debug_assert_eq!(sched.levels[cut].stride, 1, "deepest level");
+            let [ti0, ti1] = *p.inputs();
+            let (s0, s1) = (ti0.access.stride_or_zero(d), ti1.access.stride_or_zero(d));
+            let st = p.out_access().stride_or_zero(d);
+            let kind = match (s0, s1, st) {
+                (1, 1, 0) => Loop1Kind::DotUnit,
+                (_, _, 0) => Loop1Kind::Dot,
+                (0, 1, 1) => Loop1Kind::Axpy0,
+                (1, 0, 1) => Loop1Kind::Axpy1,
+                (1, 1, 1) => Loop1Kind::MulAcc,
+                (0, 0, 1) => Loop1Kind::Scale,
+                _ => Loop1Kind::Strided,
+            };
+            let chunk = chunk_src(&sched.levels[..cut], &p, d);
+            let kernel = Kernel::Loop1 { kind, s0, s1, st, chunk };
+            (cut, kernel)
+        }
     };
-    ExecPlan { sched, inner, cut, mm }
+
+    let [ti0, ti1] = *p.inputs();
+    let out = *p.out_access();
+    let c_levels = build_levels(
+        &sched.levels[..cut],
+        &p,
+        |i| sched.parent_of(i),
+        |slot, d| match slot {
+            0 => ti0.access.stride_or_zero(d),
+            1 => ti1.access.stride_or_zero(d),
+            _ => out.stride_or_zero(d),
+        },
+    );
+
+    let wn = sched.wb_levels.len();
+    let last = *sched.wb_levels.last().expect("non-empty write-back nest");
+    debug_assert_eq!(last.stride, 1, "deepest write-back level");
+    let bias_acc = p.bias().map(|b| b.access);
+    let w_levels = build_levels(
+        &sched.wb_levels[..wn - 1],
+        &p,
+        |i| sched.wb_parent_of(i),
+        |slot, d| match slot {
+            0 => out.stride_or_zero(d),
+            1 => bias_acc.map_or(0, |a| a.stride_or_zero(d)),
+            _ => 0,
+        },
+    );
+    let sc = out.stride_or_zero(last.dim);
+    debug_assert!(sc >= 1, "write-back dim indexes the output");
+    let wb = WbInner {
+        chunk: chunk_src(&sched.wb_levels[..wn - 1], &p, last.dim),
+        sc,
+        sb: bias_acc.map_or(0, |a| a.stride_or_zero(last.dim)),
+        plain: bias_acc.is_none() && !p.relu() && sc == 1,
+        relu: p.relu(),
+        has_bias: bias_acc.is_some(),
+    };
+
+    ExecPlan { problem: p, c_levels, kernel, w_levels, wb }
+}
+
+impl ExecPlan {
+    /// The problem this plan executes.
+    pub fn problem(&self) -> Problem {
+        self.problem
+    }
+
+    /// Stable name of the innermost dispatch path chosen at plan time:
+    /// `"pair_kn"` / `"pair_nk"` (structural register-tiled pairs) or a
+    /// stride-signature class (`"dot11"`, `"dot"`, `"axpy"`, `"mul11"`,
+    /// `"scale"`, `"strided"`). Tests pin which path each workload family
+    /// selects; the bench harness records it per measured schedule.
+    pub fn dispatch(&self) -> &'static str {
+        match self.kernel {
+            Kernel::Pair { red_outer: true, .. } => "pair_kn",
+            Kernel::Pair { .. } => "pair_nk",
+            Kernel::Loop1 { kind, .. } => match kind {
+                Loop1Kind::DotUnit => "dot11",
+                Loop1Kind::Dot => "dot",
+                Loop1Kind::Axpy0 | Loop1Kind::Axpy1 => "axpy",
+                Loop1Kind::MulAcc => "mul11",
+                Loop1Kind::Scale => "scale",
+                Loop1Kind::Strided => "strided",
+            },
+        }
+    }
+}
+
+/// Iterative walk of a flattened loop program: calls `body(off, cur)` once
+/// per innermost entry, where `off` holds the running per-slot offsets and
+/// `cur[l]` the clamped chunk of level `l`'s current iteration. Tails need
+/// no special casing: a level's remaining elements come from its parent's
+/// current (possibly clamped) chunk, and the last iteration clamps to
+/// whatever is left.
+#[inline]
+fn walk<F: FnMut(&[usize; SLOTS], &[usize; MAX_LOOPS])>(levels: &[ProgLevel], mut body: F) {
+    let depth = levels.len();
+    let mut off = [0usize; SLOTS];
+    if depth == 0 {
+        return body(&off, &[0; MAX_LOOPS]);
+    }
+    debug_assert!(depth <= MAX_LOOPS);
+    let mut rem = [0usize; MAX_LOOPS]; // elements left at each level
+    let mut cur = [0usize; MAX_LOOPS]; // clamped chunk of the current iter
+    let mut saved = [[0usize; SLOTS]; MAX_LOOPS]; // offsets at level entry
+    let mut l = 0usize;
+    rem[0] = levels[0].extent;
+    loop {
+        let lv = &levels[l];
+        cur[l] = lv.stride.min(rem[l]);
+        if l + 1 < depth {
+            // Descend: the child's available elements are its parent
+            // level's current chunk (or its full extent).
+            l += 1;
+            let nl = &levels[l];
+            rem[l] = if nl.parent == usize::MAX { nl.extent } else { cur[nl.parent] };
+            saved[l] = off;
+            continue;
+        }
+        body(&off, &cur);
+        // Advance the deepest level; ascend through exhausted levels,
+        // restoring each level's entry offsets.
+        loop {
+            let lv = &levels[l];
+            rem[l] -= cur[l];
+            if rem[l] > 0 {
+                for (o, d) in off.iter_mut().zip(lv.delta) {
+                    *o += d;
+                }
+                break;
+            }
+            if l == 0 {
+                return;
+            }
+            off = saved[l];
+            l -= 1;
+        }
+    }
 }
 
 /// Workspace: input/accumulator/output buffers for one problem.
@@ -114,204 +394,94 @@ impl Workspace {
     }
 }
 
-/// Initial per-dim index/extent arrays for a problem.
-fn full_extents(p: &Problem) -> [usize; MAX_DIMS] {
-    let mut ext = [1usize; MAX_DIMS];
-    for d in p.dims() {
-        ext[d.index()] = p.extent(d);
-    }
-    ext
-}
-
-/// Execute the compute + write-back nests once. T is zeroed first (part of
-/// the timed work, as LoopNest initializes its accumulator).
+/// Execute the compute + write-back programs once. T is zeroed first (part
+/// of the timed work, as LoopNest initializes its accumulator).
 pub fn run_once(plan: &ExecPlan, ws: &mut Workspace) {
+    debug_assert_eq!(plan.problem, ws.problem, "plan/workspace mismatch");
     ws.t.fill(0.0);
-    let p = ws.problem;
-    let mut idx = [0usize; MAX_DIMS];
-    let mut ext = full_extents(&p);
-    exec_compute(plan, 0, &mut idx, &mut ext, ws);
-
-    let mut idx = [0usize; MAX_DIMS];
-    let mut ext = full_extents(&p);
-    exec_writeback(plan, 0, &mut idx, &mut ext, ws);
+    run_compute(plan, ws);
+    run_writeback(plan, ws);
 }
 
-fn exec_compute(
-    plan: &ExecPlan,
-    lvl: usize,
-    idx: &mut [usize; MAX_DIMS],
-    ext: &mut [usize; MAX_DIMS],
-    ws: &mut Workspace,
-) {
-    if lvl == plan.cut {
-        return dispatch_inner(plan, idx, ext, ws);
-    }
-    let Level { dim, stride } = plan.sched.levels[lvl];
-    let d = dim.index();
-    let (base, total) = (idx[d], ext[d]);
-    let mut off = 0;
-    while off < total {
-        idx[d] = base + off;
-        ext[d] = stride.min(total - off);
-        exec_compute(plan, lvl + 1, idx, ext, ws);
-        off += stride;
-    }
-    idx[d] = base;
-    ext[d] = total;
-}
-
-#[inline]
-fn dispatch_inner(
-    plan: &ExecPlan,
-    idx: &[usize; MAX_DIMS],
-    ext: &[usize; MAX_DIMS],
-    ws: &mut Workspace,
-) {
-    if plan.inner == InnerKind::Generic {
-        return generic_inner(plan, idx, ext, ws);
-    }
-    // Matmul fast path: dims 0/1/2 are m/n/k by `mm_kernel_shape`.
-    let (_, bn, bk) = plan.mm;
-    let (m0, n0, k0) = (idx[0], idx[1], idx[2]);
-    let Workspace { inputs, t, .. } = ws;
-    let a = &inputs[0][..];
-    let b = &inputs[1][..];
-    match plan.inner {
-        InnerKind::PairKN => {
-            debug_assert_eq!(ext[0], 1);
-            mk::kn_tile(t, a, b, bn, bk, m0, n0, ext[1], k0, ext[2]);
-        }
-        InnerKind::PairNK => {
-            debug_assert_eq!(ext[0], 1);
-            mk::nk_tile(t, a, b, bn, bk, m0, n0, ext[1], k0, ext[2]);
-        }
-        InnerKind::Single(d) if d == Dim::N => {
-            debug_assert!(ext[0] == 1 && ext[2] == 1);
-            mk::inner_n(t, a, b, bn, bk, m0, n0, k0, ext[1]);
-        }
-        InnerKind::Single(d) if d == Dim::K => {
-            debug_assert!(ext[0] == 1 && ext[1] == 1);
-            mk::inner_k(t, a, b, bn, bk, m0, n0, k0, ext[2]);
-        }
-        InnerKind::Single(_) => {
-            debug_assert!(ext[1] == 1 && ext[2] == 1);
-            mk::inner_m(t, a, b, bn, bk, m0, n0, k0, ext[0]);
-        }
-        InnerKind::Generic => unreachable!("handled above"),
-    }
-}
-
-/// Generic innermost compute: walk the innermost level, advancing every
-/// tensor by its access-map stride. At this depth every other dim's chunk
-/// is 1 (its stride-1 loop is further out), so base offsets come straight
-/// from `idx`.
-fn generic_inner(
-    plan: &ExecPlan,
-    idx: &[usize; MAX_DIMS],
-    ext: &[usize; MAX_DIMS],
-    ws: &mut Workspace,
-) {
-    let p = ws.problem;
-    let d = plan.sched.levels[plan.cut].dim;
-    let len = ext[d.index()];
-    let [ti0, ti1] = *p.inputs();
-    let (s0, s1) = (ti0.access.stride_or_zero(d), ti1.access.stride_or_zero(d));
-    let st = p.out_access().stride_or_zero(d);
-    let (mut o0, mut o1) = (ti0.access.offset(idx), ti1.access.offset(idx));
-    let mut ot = p.out_access().offset(idx);
+fn run_compute(plan: &ExecPlan, ws: &mut Workspace) {
     let Workspace { inputs, t, .. } = ws;
     let in0 = &inputs[0][..];
     let in1 = &inputs[1][..];
-    if st == 0 {
-        // Reduction-dim innermost: accumulate into one output element.
-        let mut acc = 0.0f32;
-        for _ in 0..len {
-            acc += in0[o0] * in1[o1];
-            o0 += s0;
-            o1 += s1;
+    let t = &mut t[..];
+    match plan.kernel {
+        Kernel::Pair { a_slot, brs, red_outer, chunk_v, chunk_r } => {
+            let (a, b) = if a_slot == 0 { (in0, in1) } else { (in1, in0) };
+            walk(&plan.c_levels, |off, cur| {
+                let (oa, ob) = (off[a_slot], off[1 - a_slot]);
+                let (vlen, rlen) = (chunk_v.get(cur), chunk_r.get(cur));
+                if red_outer {
+                    mk::kn_tile_g(t, a, b, off[2], oa, ob, brs, vlen, rlen);
+                } else {
+                    mk::nk_tile_g(t, a, b, off[2], oa, ob, brs, vlen, rlen);
+                }
+            });
         }
-        t[ot] += acc;
-    } else {
-        for _ in 0..len {
-            t[ot] += in0[o0] * in1[o1];
-            o0 += s0;
-            o1 += s1;
-            ot += st;
+        Kernel::Loop1 { kind, s0, s1, st, chunk } => {
+            walk(&plan.c_levels, |off, cur| {
+                let len = chunk.get(cur);
+                let (o0, o1, ot) = (off[0], off[1], off[2]);
+                match kind {
+                    Loop1Kind::DotUnit => mk::dot_unit(t, in0, in1, ot, o0, o1, len),
+                    Loop1Kind::Dot => {
+                        mk::dot_strided(t, in0, in1, ot, o0, o1, s0, s1, len)
+                    }
+                    Loop1Kind::Axpy0 => mk::axpy(t, in0[o0], in1, ot, o1, len),
+                    Loop1Kind::Axpy1 => mk::axpy(t, in1[o1], in0, ot, o0, len),
+                    Loop1Kind::MulAcc => mk::mul_acc(t, in0, in1, ot, o0, o1, len),
+                    Loop1Kind::Scale => mk::add_const(t, in0[o0] * in1[o1], ot, len),
+                    Loop1Kind::Strided => {
+                        let (mut o0, mut o1, mut ot) = (o0, o1, ot);
+                        for _ in 0..len {
+                            t[ot] += in0[o0] * in1[o1];
+                            o0 += s0;
+                            o1 += s1;
+                            ot += st;
+                        }
+                    }
+                }
+            });
         }
     }
 }
 
-fn exec_writeback(
-    plan: &ExecPlan,
-    lvl: usize,
-    idx: &mut [usize; MAX_DIMS],
-    ext: &mut [usize; MAX_DIMS],
-    ws: &mut Workspace,
-) {
-    let levels = &plan.sched.wb_levels;
-    if lvl + 1 == levels.len() {
-        return writeback_inner(plan, idx, ext, ws);
-    }
-    let Level { dim, stride } = levels[lvl];
-    let d = dim.index();
-    let (base, total) = (idx[d], ext[d]);
-    let mut off = 0;
-    while off < total {
-        idx[d] = base + off;
-        ext[d] = stride.min(total - off);
-        exec_writeback(plan, lvl + 1, idx, ext, ws);
-        off += stride;
-    }
-    idx[d] = base;
-    ext[d] = total;
-}
-
-/// Innermost write-back level: apply the epilogue along one dim.
-fn writeback_inner(
-    plan: &ExecPlan,
-    idx: &[usize; MAX_DIMS],
-    ext: &[usize; MAX_DIMS],
-    ws: &mut Workspace,
-) {
-    let p = ws.problem;
-    let last = *plan.sched.wb_levels.last().expect("non-empty write-back nest");
-    debug_assert_eq!(last.stride, 1, "deepest write-back level");
-    let d = last.dim;
-    let len = ext[d.index()];
-    // `d` is an output dim, so the out access indexes it with stride >= 1.
-    let sc = p.out_access().stride_or_zero(d);
-    debug_assert!(sc >= 1);
-    let base = p.out_access().offset(idx);
-    let bias_access: Option<&Access> = p.bias().map(|b| &b.access);
-    if bias_access.is_none() && !p.relu() && sc == 1 {
-        ws.c[base..base + len].copy_from_slice(&ws.t[base..base + len]);
-        return;
-    }
-    let (sb, mut ob) = match bias_access {
-        Some(a) => (a.stride_or_zero(d), a.offset(idx)),
-        None => (0, 0),
-    };
-    let relu = p.relu();
-    let has_bias = bias_access.is_some();
+fn run_writeback(plan: &ExecPlan, ws: &mut Workspace) {
+    let wb = plan.wb;
     let Workspace { bias, t, c, .. } = ws;
-    let mut o = base;
-    for _ in 0..len {
-        let mut v = t[o];
-        if has_bias {
-            v += bias[ob];
-            ob += sb;
+    let t = &t[..];
+    let c = &mut c[..];
+    let bias = &bias[..];
+    walk(&plan.w_levels, |off, cur| {
+        let len = wb.chunk.get(cur);
+        let base = off[0];
+        if wb.plain {
+            c[base..base + len].copy_from_slice(&t[base..base + len]);
+            return;
         }
-        if relu {
-            v = v.max(0.0);
+        let (mut o, mut ob) = (base, off[1]);
+        for _ in 0..len {
+            let mut v = t[o];
+            if wb.has_bias {
+                v += bias[ob];
+                ob += wb.sb;
+            }
+            if wb.relu {
+                v = v.max(0.0);
+            }
+            c[o] = v;
+            o += wb.sc;
         }
-        c[o] = v;
-        o += sc;
-    }
+    });
 }
 
 /// Naive reference result for verification: walk the full iteration space
-/// point by point through the access maps, then apply the epilogue.
+/// point by point, then apply the epilogue. Offsets are maintained
+/// incrementally by the odometer (wrapping a dim subtracts its span), so
+/// even the reference does no per-point `offset()` recompute.
 pub fn reference(ws: &Workspace) -> Vec<f32> {
     let p = ws.problem;
     let nd = p.n_dims();
@@ -319,9 +489,9 @@ pub fn reference(ws: &Workspace) -> Vec<f32> {
     let out = *p.out_access();
     let mut t = vec![0.0f32; p.out_len()];
     let mut idx = [0usize; MAX_DIMS];
+    let (mut o0, mut o1, mut ot) = (0usize, 0usize, 0usize);
     'space: loop {
-        t[out.offset(&idx)] += ws.inputs[0][ti0.access.offset(&idx)]
-            * ws.inputs[1][ti1.access.offset(&idx)];
+        t[ot] += ws.inputs[0][o0] * ws.inputs[1][o1];
         // Odometer over all dims, innermost-last.
         let mut d = nd;
         loop {
@@ -329,22 +499,31 @@ pub fn reference(ws: &Workspace) -> Vec<f32> {
                 break 'space;
             }
             d -= 1;
+            let dim = Dim::new(d);
             idx[d] += 1;
-            if idx[d] < p.extent(Dim::new(d)) {
+            if idx[d] < p.extent(dim) {
+                o0 += ti0.access.stride_or_zero(dim);
+                o1 += ti1.access.stride_or_zero(dim);
+                ot += out.stride_or_zero(dim);
                 break;
             }
             idx[d] = 0;
+            let span = p.extent(dim) - 1;
+            o0 -= span * ti0.access.stride_or_zero(dim);
+            o1 -= span * ti1.access.stride_or_zero(dim);
+            ot -= span * out.stride_or_zero(dim);
         }
     }
     // Epilogue over the output index space.
     let out_dims: Vec<Dim> = p.output_dims().collect();
+    let bias_acc = p.bias().map(|b| b.access);
     let mut c = vec![0.0f32; p.out_len()];
     let mut idx = [0usize; MAX_DIMS];
+    let (mut o, mut ob) = (0usize, 0usize);
     'out: loop {
-        let o = out.offset(&idx);
         let mut v = t[o];
-        if let Some(b) = p.bias() {
-            v += ws.bias[b.access.offset(&idx)];
+        if bias_acc.is_some() {
+            v += ws.bias[ob];
         }
         if p.relu() {
             v = v.max(0.0);
@@ -356,12 +535,17 @@ pub fn reference(ws: &Workspace) -> Vec<f32> {
                 break 'out;
             }
             i -= 1;
-            let d = out_dims[i];
-            idx[d.index()] += 1;
-            if idx[d.index()] < p.extent(d) {
+            let dim = out_dims[i];
+            idx[dim.index()] += 1;
+            if idx[dim.index()] < p.extent(dim) {
+                o += out.stride_or_zero(dim);
+                ob += bias_acc.map_or(0, |a| a.stride_or_zero(dim));
                 break;
             }
-            idx[d.index()] = 0;
+            idx[dim.index()] = 0;
+            let span = p.extent(dim) - 1;
+            o -= span * out.stride_or_zero(dim);
+            ob -= span * bias_acc.map_or(0, |a| a.stride_or_zero(dim));
         }
     }
     c
@@ -565,32 +749,34 @@ mod tests {
     }
 
     #[test]
-    fn pair_dispatch_detection() {
+    fn structural_dispatch_detection() {
         let n = Nest::initial(Problem::new(8, 8, 8)); // m n k -> (n,k) pair
-        let pl = plan(lower(&n));
-        assert_eq!(pl.inner, InnerKind::PairNK);
+        assert_eq!(plan(lower(&n)).dispatch(), "pair_nk");
 
         let mut n2 = Nest::initial(Problem::new(8, 8, 8));
         n2.cursor = 1;
         n2.swap_down().unwrap(); // m k n -> (k,n) pair
-        let pl = plan(lower(&n2));
-        assert_eq!(pl.inner, InnerKind::PairKN);
+        assert_eq!(plan(lower(&n2)).dispatch(), "pair_kn");
 
         let mut n3 = Nest::initial(Problem::new(32, 32, 32));
         n3.cursor = 2;
-        n3.split(8).unwrap(); // m n k k:8 -> (k,k) not a pair -> single k
-        let pl = plan(lower(&n3));
-        assert_eq!(pl.inner, InnerKind::Single(Dim::K));
+        n3.split(8).unwrap(); // m n k k:8 -> (k,k) not a pair -> strided dot
+        assert_eq!(plan(lower(&n3)).dispatch(), "dot");
 
-        // MLP compute is matmul-shaped: fast path stays active.
-        let pl = plan(lower(&Nest::initial(Problem::mlp(8, 8, 8))));
-        assert_eq!(pl.inner, InnerKind::PairNK);
+        // MLP compute is matmul-shaped: the pair path stays active.
+        assert_eq!(plan(lower(&Nest::initial(Problem::mlp(8, 8, 8)))).dispatch(), "pair_nk");
 
-        // Non-matmul access maps go generic.
-        let pl = plan(lower(&Nest::initial(Problem::conv2d(8, 8, 3, 3))));
-        assert_eq!(pl.inner, InnerKind::Generic);
-        let pl = plan(lower(&Nest::initial(Problem::matmul_transposed(8, 8, 8))));
-        assert_eq!(pl.inner, InnerKind::Generic);
+        // bmm's per-batch matmul structure now hits the pair kernels too.
+        let bmm = Nest::initial(Problem::batched_matmul(2, 8, 8, 8));
+        assert_eq!(plan(lower(&bmm)).dispatch(), "pair_nk");
+
+        // conv2d initial ends (kh, kw): two reduction dims -> unit dot.
+        let conv = Nest::initial(Problem::conv2d(8, 8, 3, 3));
+        assert_eq!(plan(lower(&conv)).dispatch(), "dot11");
+
+        // Transposed matmul: A's k-walk is strided -> no pair, strided dot.
+        let mmt = Nest::initial(Problem::matmul_transposed(8, 8, 8));
+        assert_eq!(plan(lower(&mmt)).dispatch(), "dot");
     }
 
     #[test]

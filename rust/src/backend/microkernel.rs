@@ -2,20 +2,28 @@
 //! delegates to LoopNest ("automatically vectorizes the innermost loop and
 //! applies register tiling").
 //!
-//! The executor recurses over outer levels and dispatches the innermost
-//! level (always IR-stride 1) to one of these tight loops. Which dim is
-//! innermost determines the memory pattern, exactly the effect the RL agent
-//! must learn:
+//! The executor's plan step (see executor.rs) walks a flattened loop
+//! program over the outer levels and dispatches the innermost level(s) to
+//! one of these tight loops. Which dims sit innermost determines the
+//! memory pattern, exactly the effect the RL agent must learn:
 //!
-//! - `n` innermost: unit stride on B and T, A broadcast -> vectorizes (axpy)
-//! - `k` innermost: unit stride on A, stride-N gather on B -> dot product
-//! - `m` innermost: stride-K on A, stride-N on T -> worst case
+//! - a structural (reduction, unit-stride-output) *pair* with contiguous
+//!   accesses dispatches to the base-offset register-tiled kernels
+//!   [`kn_tile_g`]/[`nk_tile_g`] — matmul's `(k, n)`/`(n, k)`, batched
+//!   matmul per batch, conv2d's `(kw, ow)` window;
+//! - a single innermost level dispatches on its stride signature:
+//!   [`dot_unit`]/[`dot_strided`] (reduction innermost), [`axpy`],
+//!   [`mul_acc`], [`add_const`] (unit-stride output innermost);
+//! - only truly strided walks fall back to a scalar loop in the executor.
 //!
-//! Two-level register-tiled kernels (`kn_tile`, `nk_tile`) cover the
-//! innermost *pair* when profitable; the executor selects them during
-//! lowering (see executor.rs). All kernels are plain safe-ish Rust written
-//! so LLVM auto-vectorizes the unit-stride loops (verified via the
-//! `executor` bench; see EXPERIMENTS.md §Perf).
+//! The row-major matmul wrappers (`kn_tile`, `nk_tile`) remain as the
+//! kernel-level test/bench surface. `inner_n`/`inner_k`/`inner_m` are no
+//! longer dispatched by the executor (the stride-signature kernels above
+//! subsume them); they stay, unit-tested, as the readable per-dim
+//! statement of the memory patterns the RL agent must learn. All kernels
+//! are plain safe-ish Rust written so LLVM auto-vectorizes the
+//! unit-stride loops (verified via the `executor` bench; see
+//! EXPERIMENTS.md §Perf).
 
 // The microkernel signatures mirror hand-written BLAS inner loops: flat
 // buffers + explicit leading dimensions + tile coordinates. Bundling them
@@ -62,37 +70,96 @@ pub fn inner_m(t: &mut [f32], a: &[f32], b: &[f32], big_n: usize, big_k: usize,
     }
 }
 
-/// Register-tiled pair: innermost (k outer, n inner). The k loop is
-/// unrolled 4-wide so each T-row element is loaded/stored once per FOUR
-/// FMAs instead of once per FMA — the memory-traffic reduction that makes
-/// this the fastest innermost pair (§Perf: +~2x over the 1-wide version,
-/// kept below as `kn_tile_ref` for the ablation bench and tests).
+/// Structural register-tiled pair at explicit base offsets, reduction dim
+/// outer (`kn` order):
+///
+/// `t[ot + j] += Σ_{r < rlen} a[oa + r] * b[ob + r*brs + j]` for `j < vlen`.
+///
+/// `a` is the *dot-row* operand (unit stride along the reduction dim, not
+/// indexed by the vectorized dim), `b` the *row panel* (unit stride along
+/// the vectorized dim, advancing `brs` per reduction step; `brs` may be
+/// any value ≥ 0, including 1 for conv's overlapping windows and 0 for an
+/// operand the reduction does not index). The reduction loop is unrolled
+/// 4-wide so each T element is loaded/stored once per FOUR FMAs — the
+/// memory-traffic reduction that makes this the fastest innermost pair
+/// (§Perf: +~2x over the 1-wide `kn_tile_ref`).
 #[inline]
-pub fn kn_tile(t: &mut [f32], a: &[f32], b: &[f32], big_n: usize, big_k: usize,
-               m: usize, n0: usize, nlen: usize, k0: usize, klen: usize) {
-    let trow = &mut t[m * big_n + n0..m * big_n + n0 + nlen];
-    let arow = &a[m * big_k + k0..m * big_k + k0 + klen];
-    let mut kk = 0;
-    while kk + 4 <= klen {
-        let (a0, a1, a2, a3) = (arow[kk], arow[kk + 1], arow[kk + 2], arow[kk + 3]);
-        let base = (k0 + kk) * big_n + n0;
-        let b0 = &b[base..base + nlen];
-        let b1 = &b[base + big_n..base + big_n + nlen];
-        let b2 = &b[base + 2 * big_n..base + 2 * big_n + nlen];
-        let b3 = &b[base + 3 * big_n..base + 3 * big_n + nlen];
-        for j in 0..nlen {
+pub fn kn_tile_g(t: &mut [f32], a: &[f32], b: &[f32], ot: usize, oa: usize,
+                 ob: usize, brs: usize, vlen: usize, rlen: usize) {
+    let trow = &mut t[ot..ot + vlen];
+    let arow = &a[oa..oa + rlen];
+    let mut rr = 0;
+    while rr + 4 <= rlen {
+        let (a0, a1, a2, a3) = (arow[rr], arow[rr + 1], arow[rr + 2], arow[rr + 3]);
+        let base = ob + rr * brs;
+        let b0 = &b[base..base + vlen];
+        let b1 = &b[base + brs..base + brs + vlen];
+        let b2 = &b[base + 2 * brs..base + 2 * brs + vlen];
+        let b3 = &b[base + 3 * brs..base + 3 * brs + vlen];
+        for j in 0..vlen {
             trow[j] += a0 * b0[j] + a1 * b1[j] + a2 * b2[j] + a3 * b3[j];
         }
-        kk += 4;
+        rr += 4;
     }
-    while kk < klen {
-        let av = arow[kk];
-        let brow = &b[(k0 + kk) * big_n + n0..(k0 + kk) * big_n + n0 + nlen];
+    while rr < rlen {
+        let av = arow[rr];
+        let brow = &b[ob + rr * brs..ob + rr * brs + vlen];
         for (tv, bv) in trow.iter_mut().zip(brow.iter()) {
             *tv += av * bv;
         }
-        kk += 1;
+        rr += 1;
     }
+}
+
+/// Structural register-tiled pair at explicit base offsets, vectorized dim
+/// outer (`nk` order): same tile as [`kn_tile_g`], computed as dot
+/// products — four carried in independent accumulators to hide FMA
+/// latency, reading `b` four-contiguous per reduction step.
+#[inline]
+pub fn nk_tile_g(t: &mut [f32], a: &[f32], b: &[f32], ot: usize, oa: usize,
+                 ob: usize, brs: usize, vlen: usize, rlen: usize) {
+    let arow = &a[oa..oa + rlen];
+    let mut vv = 0;
+    while vv + 4 <= vlen {
+        let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+        let mut bidx = ob + vv;
+        for &av in arow {
+            s0 += av * b[bidx];
+            s1 += av * b[bidx + 1];
+            s2 += av * b[bidx + 2];
+            s3 += av * b[bidx + 3];
+            bidx += brs;
+        }
+        t[ot + vv] += s0;
+        t[ot + vv + 1] += s1;
+        t[ot + vv + 2] += s2;
+        t[ot + vv + 3] += s3;
+        vv += 4;
+    }
+    while vv < vlen {
+        let mut acc = 0.0f32;
+        let mut bidx = ob + vv;
+        for &av in arow {
+            acc += av * b[bidx];
+            bidx += brs;
+        }
+        t[ot + vv] += acc;
+        vv += 1;
+    }
+}
+
+/// Register-tiled pair: innermost (k outer, n inner). Row-major matmul
+/// convenience wrapper over [`kn_tile_g`].
+#[inline]
+pub fn kn_tile(t: &mut [f32], a: &[f32], b: &[f32], big_n: usize, big_k: usize,
+               m: usize, n0: usize, nlen: usize, k0: usize, klen: usize) {
+    kn_tile_g(
+        t, a, b,
+        m * big_n + n0,
+        m * big_k + k0,
+        k0 * big_n + n0,
+        big_n, nlen, klen,
+    );
 }
 
 /// Reference (1-wide) version of [`kn_tile`]; used by tests to validate
@@ -110,34 +177,96 @@ pub fn kn_tile_ref(t: &mut [f32], a: &[f32], b: &[f32], big_n: usize, big_k: usi
     }
 }
 
-/// Register-tiled pair: innermost (n outer, k inner). Four dot products
-/// carried in independent accumulators to hide FMA latency.
+/// Register-tiled pair: innermost (n outer, k inner). Row-major matmul
+/// convenience wrapper over [`nk_tile_g`].
 #[inline]
 pub fn nk_tile(t: &mut [f32], a: &[f32], b: &[f32], big_n: usize, big_k: usize,
                m: usize, n0: usize, nlen: usize, k0: usize, klen: usize) {
-    let arow = &a[m * big_k + k0..m * big_k + k0 + klen];
-    let mut nn = 0;
-    // 4-wide over n: amortizes the strided walk down B's rows.
-    while nn + 4 <= nlen {
-        let (mut a0, mut a1, mut a2, mut a3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
-        let mut bidx = k0 * big_n + n0 + nn;
-        for &av in arow {
-            a0 += av * b[bidx];
-            a1 += av * b[bidx + 1];
-            a2 += av * b[bidx + 2];
-            a3 += av * b[bidx + 3];
-            bidx += big_n;
-        }
-        let tbase = m * big_n + n0 + nn;
-        t[tbase] += a0;
-        t[tbase + 1] += a1;
-        t[tbase + 2] += a2;
-        t[tbase + 3] += a3;
-        nn += 4;
+    nk_tile_g(
+        t, a, b,
+        m * big_n + n0,
+        m * big_k + k0,
+        k0 * big_n + n0,
+        big_n, nlen, klen,
+    );
+}
+
+// ---- stride-signature kernels for the specialized generic inner loop ----
+//
+// The executor classifies the single remaining innermost level by its
+// `(s0, s1, st)` access-stride signature and dispatches to one of these
+// fixed-stride loops; with the strides known to be 0/1 at the call site,
+// LLVM auto-vectorizes each of them (the runtime-stride generic walk in
+// the executor cannot assume unit stride and stays scalar).
+
+/// Unit-stride dot product: `t[ot] += Σ_{i<len} a[oa+i] * b[ob+i]`.
+/// Four independent partial sums hide FMA latency and vectorize.
+#[inline]
+pub fn dot_unit(t: &mut [f32], a: &[f32], b: &[f32], ot: usize, oa: usize,
+                ob: usize, len: usize) {
+    let ar = &a[oa..oa + len];
+    let br = &b[ob..ob + len];
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    let mut i = 0;
+    while i + 4 <= len {
+        s0 += ar[i] * br[i];
+        s1 += ar[i + 1] * br[i + 1];
+        s2 += ar[i + 2] * br[i + 2];
+        s3 += ar[i + 3] * br[i + 3];
+        i += 4;
     }
-    while nn < nlen {
-        inner_k(t, a, b, big_n, big_k, m, n0 + nn, k0, klen);
-        nn += 1;
+    let mut acc = (s0 + s1) + (s2 + s3);
+    while i < len {
+        acc += ar[i] * br[i];
+        i += 1;
+    }
+    t[ot] += acc;
+}
+
+/// Strided dot product: `t[ot] += Σ_{i<len} a[oa+i*sa] * b[ob+i*sb]`
+/// (either stride may be 0: that operand is a broadcast scalar).
+#[inline]
+pub fn dot_strided(t: &mut [f32], a: &[f32], b: &[f32], ot: usize, oa: usize,
+                   ob: usize, sa: usize, sb: usize, len: usize) {
+    let (mut ia, mut ib) = (oa, ob);
+    let mut acc = 0.0f32;
+    for _ in 0..len {
+        acc += a[ia] * b[ib];
+        ia += sa;
+        ib += sb;
+    }
+    t[ot] += acc;
+}
+
+/// Axpy row update: `t[ot+j] += s * x[ox+j]` for `j < len` (the scalar
+/// operand is hoisted by the caller).
+#[inline]
+pub fn axpy(t: &mut [f32], s: f32, x: &[f32], ot: usize, ox: usize, len: usize) {
+    let trow = &mut t[ot..ot + len];
+    let xrow = &x[ox..ox + len];
+    for (tv, xv) in trow.iter_mut().zip(xrow.iter()) {
+        *tv += s * xv;
+    }
+}
+
+/// Elementwise multiply-accumulate: `t[ot+j] += a[oa+j] * b[ob+j]`.
+#[inline]
+pub fn mul_acc(t: &mut [f32], a: &[f32], b: &[f32], ot: usize, oa: usize,
+               ob: usize, len: usize) {
+    let trow = &mut t[ot..ot + len];
+    let ar = &a[oa..oa + len];
+    let br = &b[ob..ob + len];
+    for j in 0..len {
+        trow[j] += ar[j] * br[j];
+    }
+}
+
+/// Broadcast-scale update: `t[ot+j] += c` for `j < len` (both operands
+/// constant along the innermost dim; `c` is their product).
+#[inline]
+pub fn add_const(t: &mut [f32], c: f32, ot: usize, len: usize) {
+    for tv in &mut t[ot..ot + len] {
+        *tv += c;
     }
 }
 
@@ -220,6 +349,74 @@ mod tests {
             nk_tile(&mut t, &a, &b, n, k, i, 0, n, 0, k);
         }
         assert_eq!(t, want, "nk_tile");
+    }
+
+    #[test]
+    fn generalized_tiles_at_base_offsets() {
+        // kn_tile_g/nk_tile_g with explicit bases and a non-row-major
+        // panel stride (brs = 3 on a flat buffer).
+        let a: Vec<f32> = (0..16).map(|i| i as f32 - 4.0).collect();
+        let b: Vec<f32> = (0..40).map(|i| (i % 9) as f32 - 4.0).collect();
+        let (oa, ob, ot, brs, vlen, rlen) = (2usize, 5usize, 1usize, 3usize, 3usize, 4usize);
+        let mut want = vec![0.0f32; 12];
+        for j in 0..vlen {
+            for r in 0..rlen {
+                want[ot + j] += a[oa + r] * b[ob + r * brs + j];
+            }
+        }
+        let mut t = vec![0.0f32; 12];
+        kn_tile_g(&mut t, &a, &b, ot, oa, ob, brs, vlen, rlen);
+        assert_eq!(t, want, "kn_tile_g");
+        let mut t = vec![0.0f32; 12];
+        nk_tile_g(&mut t, &a, &b, ot, oa, ob, brs, vlen, rlen);
+        assert_eq!(t, want, "nk_tile_g");
+
+        // brs = 0: the panel operand is not indexed by the reduction dim.
+        let mut want0 = vec![0.0f32; 12];
+        let asum: f32 = a[oa..oa + rlen].iter().sum();
+        for j in 0..vlen {
+            want0[ot + j] = asum * b[ob + j];
+        }
+        let mut t = vec![0.0f32; 12];
+        kn_tile_g(&mut t, &a, &b, ot, oa, ob, 0, vlen, rlen);
+        assert_eq!(t, want0, "kn_tile_g brs=0");
+        let mut t = vec![0.0f32; 12];
+        nk_tile_g(&mut t, &a, &b, ot, oa, ob, 0, vlen, rlen);
+        assert_eq!(t, want0, "nk_tile_g brs=0");
+    }
+
+    #[test]
+    fn stride_signature_kernels() {
+        let a: Vec<f32> = (0..30).map(|i| (i % 11) as f32 - 5.0).collect();
+        let b: Vec<f32> = (0..30).map(|i| (i % 7) as f32 - 3.0).collect();
+
+        // dot_unit == dot_strided(1, 1), length 9 exercises the remainder.
+        let (mut t1, mut t2) = (vec![1.5f32; 2], vec![1.5f32; 2]);
+        dot_unit(&mut t1, &a, &b, 1, 3, 4, 9);
+        dot_strided(&mut t2, &a, &b, 1, 3, 4, 1, 1, 9);
+        assert!((t1[1] - t2[1]).abs() < 1e-4, "{} vs {}", t1[1], t2[1]);
+        assert_eq!(t1[0], 1.5);
+
+        // dot_strided with a 0 stride = scalar * sum walk.
+        let mut t = vec![0.0f32; 1];
+        dot_strided(&mut t, &a, &b, 0, 2, 4, 0, 3, 5);
+        let want: f32 = (0..5).map(|i| a[2] * b[4 + 3 * i]).sum();
+        assert!((t[0] - want).abs() < 1e-5);
+
+        // axpy / mul_acc / add_const against hand rolls.
+        let mut t = vec![2.0f32; 8];
+        axpy(&mut t, 3.0, &b, 1, 2, 5);
+        for j in 0..5 {
+            assert_eq!(t[1 + j], 2.0 + 3.0 * b[2 + j]);
+        }
+        let mut t = vec![0.0f32; 8];
+        mul_acc(&mut t, &a, &b, 1, 4, 6, 5);
+        for j in 0..5 {
+            assert_eq!(t[1 + j], a[4 + j] * b[6 + j]);
+        }
+        let mut t = vec![1.0f32; 6];
+        add_const(&mut t, 2.5, 2, 3);
+        assert_eq!(t, vec![1.0, 1.0, 3.5, 3.5, 3.5, 1.0]);
     }
 
     #[test]

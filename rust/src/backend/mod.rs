@@ -52,14 +52,19 @@ pub trait Backend {
 pub struct Cached<B: Backend> {
     /// The wrapped backend.
     pub inner: B,
-    cache: HashMap<CacheKey, f64>,
+    cache: KeyMap<f64>,
     /// Number of evaluations served from the cache.
     pub hits: u64,
 }
 
 /// Cache key: the schedule modulo the agent cursor. Cursor moves do not
 /// change the generated code, so they must not cost an evaluation.
-#[derive(Clone, PartialEq, Eq, Hash)]
+///
+/// Keys are stored in hash-indexed buckets (`HashMap<u64, Vec<...>>`, a
+/// hand-rolled raw-entry map): lookups hash and compare *borrowed* nest
+/// data, so the hot path — a cache hit — allocates nothing. The owning
+/// clone of `nest.loops` happens only when a miss inserts.
+#[derive(Clone, PartialEq, Eq)]
 struct CacheKey {
     problem: crate::ir::Problem,
     loops: Vec<crate::ir::Loop>,
@@ -70,29 +75,62 @@ impl CacheKey {
         CacheKey { problem: nest.problem, loops: nest.loops.clone() }
     }
 
-    fn shard(&self, n_shards: usize) -> usize {
+    /// Hash of a nest's (problem, loops) — computable without owning them.
+    fn hash_of(nest: &Nest) -> u64 {
         let mut h = DefaultHasher::new();
-        self.hash(&mut h);
-        (h.finish() as usize) % n_shards
+        nest.problem.hash(&mut h);
+        nest.loops.hash(&mut h);
+        h.finish()
+    }
+
+    /// Whether this stored key describes `nest`'s schedule.
+    fn matches(&self, nest: &Nest) -> bool {
+        self.problem == nest.problem && self.loops == nest.loops
+    }
+}
+
+/// Hash-bucketed key/value store shared by [`Cached`] and the shard maps:
+/// get borrows, insert owns (collisions chain in the bucket Vec).
+struct KeyMap<V> {
+    buckets: HashMap<u64, Vec<(CacheKey, V)>>,
+}
+
+impl<V> KeyMap<V> {
+    fn new() -> Self {
+        KeyMap { buckets: HashMap::new() }
+    }
+
+    fn get(&self, hash: u64, nest: &Nest) -> Option<&V> {
+        self.buckets
+            .get(&hash)?
+            .iter()
+            .find(|(k, _)| k.matches(nest))
+            .map(|(_, v)| v)
+    }
+
+    fn insert(&mut self, hash: u64, nest: &Nest, v: V) -> &mut V {
+        let bucket = self.buckets.entry(hash).or_default();
+        bucket.push((CacheKey::of(nest), v));
+        &mut bucket.last_mut().expect("just pushed").1
     }
 }
 
 impl<B: Backend> Cached<B> {
     /// Wrap `inner` with an empty cache.
     pub fn new(inner: B) -> Self {
-        Cached { inner, cache: HashMap::new(), hits: 0 }
+        Cached { inner, cache: KeyMap::new(), hits: 0 }
     }
 }
 
 impl<B: Backend> Backend for Cached<B> {
     fn eval(&mut self, nest: &Nest) -> f64 {
-        let key = CacheKey::of(nest);
-        if let Some(&g) = self.cache.get(&key) {
+        let hash = CacheKey::hash_of(nest);
+        if let Some(&g) = self.cache.get(hash, nest) {
             self.hits += 1;
             return g;
         }
         let g = self.inner.eval(nest);
-        self.cache.insert(key, g);
+        self.cache.insert(hash, nest, g);
         g
     }
 
@@ -111,7 +149,7 @@ impl<B: Backend> Backend for Cached<B> {
 const CACHE_SHARDS: usize = 64;
 
 struct Shard {
-    map: Mutex<HashMap<CacheKey, Arc<OnceLock<f64>>>>,
+    map: Mutex<KeyMap<Arc<OnceLock<f64>>>>,
 }
 
 /// Factory producing fresh backend instances for additional worker threads.
@@ -190,7 +228,7 @@ impl SharedBackend {
         name: &'static str,
     ) -> Self {
         let shards = (0..CACHE_SHARDS)
-            .map(|_| Shard { map: Mutex::new(HashMap::new()) })
+            .map(|_| Shard { map: Mutex::new(KeyMap::new()) })
             .collect();
         SharedBackend(Arc::new(SharedInner {
             shards,
@@ -212,11 +250,17 @@ impl SharedBackend {
     /// evaluation (`true` = cache miss). Searches use the flag for exact
     /// per-search budget accounting even when the handle is shared.
     pub fn eval_detail(&self, nest: &Nest) -> (f64, bool) {
-        let key = CacheKey::of(nest);
-        let shard = &self.0.shards[key.shard(CACHE_SHARDS)];
+        // Hash the borrowed nest once; the owning key clone happens only
+        // when a miss inserts a fresh cell into the shard.
+        let hash = CacheKey::hash_of(nest);
+        let shard = &self.0.shards[(hash as usize) % CACHE_SHARDS];
         let cell = {
             let mut map = shard.map.lock().expect("cache shard poisoned");
-            map.entry(key).or_insert_with(|| Arc::new(OnceLock::new())).clone()
+            let existing = map.get(hash, nest).cloned();
+            match existing {
+                Some(cell) => cell,
+                None => map.insert(hash, nest, Arc::new(OnceLock::new())).clone(),
+            }
         };
         let mut computed = false;
         let g = *cell.get_or_init(|| {

@@ -50,6 +50,22 @@ impl CompiledSchedule {
     pub fn chunk(&self, level: usize) -> usize {
         self.levels[level].stride
     }
+
+    /// Index of the nearest *compute* level above `level` iterating the
+    /// same dim — the level whose per-iteration chunk bounds `level`'s
+    /// trip count (`None`: the full extent does). Used by the executor's
+    /// plan step to wire up chunk sources and by anything reasoning about
+    /// tile nesting.
+    pub fn parent_of(&self, level: usize) -> Option<usize> {
+        let dim = self.levels[level].dim;
+        (0..level).rev().find(|&i| self.levels[i].dim == dim)
+    }
+
+    /// Like [`Self::parent_of`], over the write-back nest.
+    pub fn wb_parent_of(&self, level: usize) -> Option<usize> {
+        let dim = self.wb_levels[level].dim;
+        (0..level).rev().find(|&i| self.wb_levels[i].dim == dim)
+    }
 }
 
 #[cfg(test)]
@@ -73,5 +89,18 @@ mod tests {
         let s = lower(&n);
         assert_eq!(s.levels[0], Level { dim: Dim::M, stride: 16 });
         assert_eq!(s.levels[1], Level { dim: Dim::M, stride: 1 });
+    }
+
+    #[test]
+    fn parent_links_follow_same_dim_nesting() {
+        let mut n = Nest::initial(Problem::new(64, 96, 128));
+        n.split(16).unwrap(); // m m:16 n k | wb m n
+        let s = lower(&n);
+        assert_eq!(s.parent_of(0), None); // m root
+        assert_eq!(s.parent_of(1), Some(0)); // m:16 bounded by m root
+        assert_eq!(s.parent_of(2), None); // n
+        assert_eq!(s.parent_of(3), None); // k
+        assert_eq!(s.wb_parent_of(0), None);
+        assert_eq!(s.wb_parent_of(1), None);
     }
 }

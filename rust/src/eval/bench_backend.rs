@@ -1,0 +1,272 @@
+//! Tracked backend benchmark — the measurement substrate behind
+//! `looptune bench` and the committed `BENCH_backend.json` trajectory.
+//!
+//! The paper's premise is that the backend is *fast enough to be the
+//! reward signal*, so its throughput is a first-class artifact: this
+//! driver times, per workload family at the suite's default shape,
+//!
+//! - **executor GFLOPS** of the initial schedule and of a tuned schedule
+//!   (greedy search over the cost model, then measured for real), with
+//!   the innermost dispatch path each plan selected,
+//! - **cost-model evals/sec** (the training-reward hot path),
+//! - **end-to-end search evals/sec** (schedule generation + lowering +
+//!   planning + scoring through the shared cache),
+//!
+//! and emits a stable JSON document (`schema: bench_backend/v1`) so this
+//! and every future perf PR is measured against the same harness. The
+//! initial-vs-tuned comparison across families is summarized through the
+//! Dolan–Moré machinery in [`super::perf_profile`].
+//!
+//! `--smoke` mode shrinks shapes and budgets to CI scale (milliseconds);
+//! CI asserts the JSON is well-formed and every GFLOPS entry is positive,
+//! so the harness cannot rot. (Per-dispatch-path coverage is the job of
+//! `rust/tests/exec_engine.rs`, not the smoke bench.)
+
+use crate::backend::cost_model::CostModel;
+use crate::backend::executor::{measure, plan, MeasureCfg, Workspace};
+use crate::backend::schedule::lower;
+use crate::backend::{Backend, SharedBackend};
+use crate::eval::{perf_profile, workloads};
+use crate::ir::Nest;
+use crate::search::{Budget, SearchAlgo};
+use crate::util::json::{write_json, Json};
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+/// Bench-harness configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchCfg {
+    /// Tiny shapes and budgets (CI smoke mode).
+    pub smoke: bool,
+    /// Seed for workspace fills and search tie-breaking.
+    pub seed: u64,
+}
+
+impl Default for BenchCfg {
+    fn default() -> Self {
+        BenchCfg { smoke: false, seed: 7 }
+    }
+}
+
+/// Per-family measurement row.
+#[derive(Clone, Debug)]
+pub struct FamilyRow {
+    /// Suite/family name (`matmul`, `bmm`, ...).
+    pub family: String,
+    /// Problem id of the measured shape.
+    pub problem: String,
+    /// Innermost dispatch path of the initial schedule's plan.
+    pub dispatch_initial: &'static str,
+    /// Innermost dispatch path of the tuned schedule's plan.
+    pub dispatch_tuned: &'static str,
+    /// Measured GFLOPS of the untiled initial schedule.
+    pub gflops_initial: f64,
+    /// Measured GFLOPS of the tuned schedule (the headline number).
+    pub gflops: f64,
+    /// Cost-model evaluations the tuning search consumed.
+    pub search_evals: u64,
+    /// Wall-clock seconds of the tuning search.
+    pub search_secs: f64,
+}
+
+/// Full bench report.
+#[derive(Clone, Debug)]
+pub struct BenchReport {
+    /// Configuration the report was produced under.
+    pub smoke: bool,
+    /// One row per registered workload family.
+    pub rows: Vec<FamilyRow>,
+    /// Cost-model throughput (predictions/sec on a tiled matmul nest).
+    pub cost_model_evals_per_sec: f64,
+    /// Aggregate search throughput (evals/sec across all family searches).
+    pub search_evals_per_sec: f64,
+    /// Fraction of families where the tuned schedule is the best method
+    /// (Dolan–Moré win rate over {initial, tuned}).
+    pub tuned_win_rate: f64,
+    /// Fraction of families where the initial schedule reaches ≥ half of
+    /// the best method's GFLOPS.
+    pub initial_at_half_best: f64,
+}
+
+/// Search budget per family.
+fn search_budget(cfg: &BenchCfg) -> Budget {
+    Budget::evals(if cfg.smoke { 40 } else { 300 })
+}
+
+/// Run the backend bench over every registered workload family.
+pub fn run(cfg: &BenchCfg) -> BenchReport {
+    let mcfg = MeasureCfg { warmup: 1, repeats: if cfg.smoke { 2 } else { 5 } };
+    let mut rows = Vec::new();
+    let (mut total_evals, mut total_secs) = (0u64, 0.0f64);
+    for name in workloads::SUITE_NAMES {
+        let p = if cfg.smoke {
+            workloads::smoke_problem(name).expect("registered family")
+        } else {
+            workloads::default_problem(name).expect("registered family")
+        };
+        // Tune on the cost model (fast, deterministic), measure for real.
+        let be = SharedBackend::with_factory(CostModel::default);
+        let r = SearchAlgo::Greedy2.run(p, be, search_budget(cfg), 10, cfg.seed);
+        total_evals += r.evals;
+        total_secs += r.elapsed;
+
+        let mut ws = Workspace::new(p, cfg.seed);
+        let initial_plan = plan(lower(&Nest::initial(p)));
+        let tuned_plan = plan(lower(&r.best));
+        let gflops_initial = measure(&initial_plan, &mut ws, mcfg);
+        let gflops = measure(&tuned_plan, &mut ws, mcfg);
+        rows.push(FamilyRow {
+            family: name.to_string(),
+            problem: p.id(),
+            dispatch_initial: initial_plan.dispatch(),
+            dispatch_tuned: tuned_plan.dispatch(),
+            gflops_initial,
+            gflops,
+            search_evals: r.evals,
+            search_secs: r.elapsed,
+        });
+    }
+
+    // Cost-model throughput on a representative tiled nest.
+    let model_iters = if cfg.smoke { 2_000 } else { 20_000 };
+    let mut model = CostModel::default();
+    let mut nest = Nest::initial(workloads::default_problem("matmul").unwrap());
+    nest.cursor = 0;
+    nest.split(32).expect("tile m");
+    let t0 = Instant::now();
+    let mut sink = 0.0f64;
+    for _ in 0..model_iters {
+        sink += model.eval(&nest);
+    }
+    std::hint::black_box(sink);
+    let cost_model_evals_per_sec = model_iters as f64 / t0.elapsed().as_secs_f64();
+
+    // Initial-vs-tuned perf profile across families (Dolan–Moré).
+    let mut scores: BTreeMap<String, Vec<f64>> = BTreeMap::new();
+    scores.insert("initial".into(), rows.iter().map(|r| r.gflops_initial).collect());
+    scores.insert("tuned".into(), rows.iter().map(|r| r.gflops).collect());
+    let profile = perf_profile::build(&scores);
+
+    BenchReport {
+        smoke: cfg.smoke,
+        rows,
+        cost_model_evals_per_sec,
+        search_evals_per_sec: total_evals as f64 / total_secs.max(1e-9),
+        tuned_win_rate: profile.win_rate("tuned"),
+        initial_at_half_best: profile.at("initial", 0.5),
+    }
+}
+
+impl BenchReport {
+    /// Stable JSON document (`schema: bench_backend/v1`; see README).
+    pub fn to_json(&self) -> String {
+        let mut families = Vec::new();
+        for r in &self.rows {
+            let mut row = BTreeMap::new();
+            row.insert("family".into(), Json::Str(r.family.clone()));
+            row.insert("problem".into(), Json::Str(r.problem.clone()));
+            row.insert("dispatch_initial".into(), Json::Str(r.dispatch_initial.into()));
+            row.insert("dispatch_tuned".into(), Json::Str(r.dispatch_tuned.into()));
+            row.insert("gflops_initial".into(), Json::Num(r.gflops_initial));
+            row.insert("gflops".into(), Json::Num(r.gflops));
+            row.insert("search_evals".into(), Json::Num(r.search_evals as f64));
+            row.insert("search_secs".into(), Json::Num(r.search_secs));
+            families.push(Json::Obj(row));
+        }
+        let mut cost_model = BTreeMap::new();
+        cost_model
+            .insert("evals_per_sec".into(), Json::Num(self.cost_model_evals_per_sec));
+        let mut search = BTreeMap::new();
+        search.insert("algo".into(), Json::Str("greedy2".into()));
+        search.insert("backend".into(), Json::Str("cost_model".into()));
+        search.insert("evals_per_sec".into(), Json::Num(self.search_evals_per_sec));
+        let mut profile = BTreeMap::new();
+        profile.insert("tuned_win_rate".into(), Json::Num(self.tuned_win_rate));
+        profile
+            .insert("initial_at_half_best".into(), Json::Num(self.initial_at_half_best));
+        let mut doc = BTreeMap::new();
+        doc.insert("schema".into(), Json::Str("bench_backend/v1".into()));
+        doc.insert("smoke".into(), Json::Bool(self.smoke));
+        doc.insert("families".into(), Json::Arr(families));
+        doc.insert("cost_model".into(), Json::Obj(cost_model));
+        doc.insert("search".into(), Json::Obj(search));
+        doc.insert("profile".into(), Json::Obj(profile));
+        let mut out = String::new();
+        write_json(&Json::Obj(doc), &mut out);
+        out.push('\n');
+        out
+    }
+
+    /// Human-readable table for the CLI.
+    pub fn summary(&self) -> String {
+        let mut s = format!(
+            "{:<8} {:<18} {:>10} {:>10} {:>9} {:>11}\n",
+            "family", "problem", "initial", "tuned", "speedup", "dispatch"
+        );
+        for r in &self.rows {
+            s.push_str(&format!(
+                "{:<8} {:<18} {:>10.2} {:>10.2} {:>8.2}x {:>11}\n",
+                r.family,
+                r.problem,
+                r.gflops_initial,
+                r.gflops,
+                r.gflops / r.gflops_initial.max(1e-9),
+                r.dispatch_tuned,
+            ));
+        }
+        s.push_str(&format!(
+            "cost model: {:.0} evals/sec; search: {:.0} evals/sec (greedy2 on cost model)\n",
+            self.cost_model_evals_per_sec, self.search_evals_per_sec
+        ));
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    #[test]
+    fn smoke_bench_produces_wellformed_positive_report() {
+        let report = run(&BenchCfg { smoke: true, seed: 3 });
+        assert_eq!(report.rows.len(), workloads::SUITE_NAMES.len());
+        for r in &report.rows {
+            assert!(r.gflops_initial > 0.0, "{}: initial", r.family);
+            assert!(r.gflops > 0.0, "{}: tuned", r.family);
+            assert!(r.search_evals > 0, "{}", r.family);
+        }
+        // Acceptance gate: plain/batched matmul plans keep selecting the
+        // register-tiled pair kernels (dispatch is seed-independent).
+        for fam in ["matmul", "bmm"] {
+            let row = report.rows.iter().find(|r| r.family == fam).unwrap();
+            let d = row.dispatch_initial;
+            assert!(d.starts_with("pair_"), "{fam}: {d}");
+        }
+        assert!(report.cost_model_evals_per_sec > 0.0);
+        assert!(report.search_evals_per_sec > 0.0);
+
+        let doc = json::parse(&report.to_json()).expect("valid JSON");
+        assert_eq!(
+            doc.get("schema").unwrap().as_str(),
+            Some("bench_backend/v1")
+        );
+        let fams = doc.get("families").unwrap().as_arr().unwrap();
+        assert_eq!(fams.len(), workloads::SUITE_NAMES.len());
+        for f in fams {
+            assert!(f.get("gflops").unwrap().as_f64().unwrap() > 0.0);
+            assert!(!f.get("dispatch_tuned").unwrap().as_str().unwrap().is_empty());
+        }
+        assert!(
+            doc.get("cost_model")
+                .unwrap()
+                .get("evals_per_sec")
+                .unwrap()
+                .as_f64()
+                .unwrap()
+                > 0.0
+        );
+        assert!(!report.summary().is_empty());
+    }
+
+}

@@ -4,6 +4,7 @@
 //! into an output directory and returns the summary string; the CLI
 //! (`looptune eval <exp>`) and EXPERIMENTS.md consume these.
 
+pub mod bench_backend;
 pub mod experiments;
 pub mod perf_profile;
 pub mod workloads;

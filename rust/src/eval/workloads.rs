@@ -72,6 +72,36 @@ pub fn all() -> Vec<Suite> {
     SUITE_NAMES.iter().map(|n| suite(n).expect("registered suite")).collect()
 }
 
+/// The representative problem of a suite at its default shape — the shape
+/// the `bench` harness times (mid-sized member of each family, stable
+/// across PRs so `BENCH_backend.json` numbers are comparable over time).
+pub fn default_problem(name: &str) -> Option<Problem> {
+    Some(match name {
+        "matmul" => Problem::matmul(128, 128, 128),
+        "mmt" => Problem::matmul_transposed(128, 128, 128),
+        "bmm" => Problem::batched_matmul(4, 128, 128, 128),
+        "conv1d" => Problem::conv1d(128, 32, 5, 16),
+        "conv2d" => Problem::conv2d(56, 56, 3, 3),
+        "mlp" => Problem::mlp(128, 256, 256),
+        _ => return None,
+    })
+}
+
+/// Tiny per-family shapes for the bench harness's `--smoke` mode (CI: a
+/// few milliseconds per family). Exhaustive per-dispatch-path coverage
+/// lives in `rust/tests/exec_engine.rs`, not here.
+pub fn smoke_problem(name: &str) -> Option<Problem> {
+    Some(match name {
+        "matmul" => Problem::matmul(16, 16, 16),
+        "mmt" => Problem::matmul_transposed(16, 16, 16),
+        "bmm" => Problem::batched_matmul(2, 12, 12, 12),
+        "conv1d" => Problem::conv1d(16, 8, 3, 4),
+        "conv2d" => Problem::conv2d(12, 12, 3, 3),
+        "mlp" => Problem::mlp(12, 16, 16),
+        _ => return None,
+    })
+}
+
 fn grid3(vals: &[usize], ctor: fn(usize, usize, usize) -> Problem) -> Vec<Problem> {
     let mut out = Vec::with_capacity(vals.len().pow(3));
     for &m in vals {
@@ -168,6 +198,25 @@ mod tests {
                 assert!(p.flops() > 0);
             }
         }
+    }
+
+    #[test]
+    fn default_and_smoke_problems_belong_to_their_suites() {
+        for name in SUITE_NAMES {
+            let d = default_problem(name).expect("default shape");
+            let s = smoke_problem(name).expect("smoke shape");
+            let kind = suite(name).unwrap().problems[0].kind();
+            assert_eq!(d.kind(), kind, "{name}");
+            assert_eq!(s.kind(), kind, "{name}");
+            assert!(s.iter_space() < d.iter_space(), "{name}: smoke not tiny");
+            // Default shapes come from the suite grids (stable over time).
+            assert!(
+                suite(name).unwrap().problems.iter().any(|p| p.id() == d.id()),
+                "{name}: default {d} not in suite"
+            );
+        }
+        assert!(default_problem("nope").is_none());
+        assert!(smoke_problem("nope").is_none());
     }
 
     #[test]

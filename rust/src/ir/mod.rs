@@ -31,7 +31,7 @@ pub mod display;
 pub mod problem;
 pub mod transform;
 
-pub use problem::{Access, Dim, Problem, TensorInfo, TensorList, MAX_DIMS};
+pub use problem::{Access, Dim, PairRoles, Problem, TensorInfo, TensorList, MAX_DIMS};
 
 use crate::util::ceil_div;
 

@@ -275,6 +275,49 @@ impl Problem {
         p
     }
 
+    /// Fully custom contraction: named dims (`(name, extent, is_reduce)`),
+    /// two input access maps, and the output access map. The output map
+    /// must index exactly the non-reduction dims, and at least one dim
+    /// must be an output dim (every nest carries a write-back over them).
+    /// This is the extension point for workload families without a
+    /// dedicated constructor (and lets tests build problems that exercise
+    /// specific stride signatures).
+    pub fn custom(
+        kind: &'static str,
+        dims: &[(&'static str, usize, bool)],
+        in0: (&'static str, Access),
+        in1: (&'static str, Access),
+        out: Access,
+    ) -> Problem {
+        let mut p = Problem::base(kind, dims);
+        p.inputs[0] = TensorInfo { name: in0.0, access: in0.1 };
+        p.inputs[1] = TensorInfo { name: in1.0, access: in1.1 };
+        p.out = out;
+        // Every nest has a write-back over the output dims, so a problem
+        // must have at least one (a full scalar reduction has none and
+        // would lower to an empty write-back nest).
+        assert!(
+            p.dims().any(|d| !p.is_reduce(d)),
+            "problem must have at least one output dim"
+        );
+        for d in p.dims() {
+            if p.is_reduce(d) {
+                assert!(
+                    !out.indexed(d),
+                    "reduction dim {} must not index the output",
+                    p.dim_name(d)
+                );
+            } else {
+                assert!(
+                    out.indexed(d),
+                    "output dim {} must index the output",
+                    p.dim_name(d)
+                );
+            }
+        }
+        p
+    }
+
     /// Workload family tag (`"mm"`, `"bmm"`, `"conv1d"`, ...).
     pub fn kind(&self) -> &'static str {
         self.kind
@@ -432,6 +475,45 @@ impl Problem {
         }
     }
 
+    /// Structural register-tile query over the access maps: can an
+    /// innermost `(outer, inner)` loop-level pair dispatch to the
+    /// register-tiled microkernels?
+    ///
+    /// The pattern (the *structure* of a matmul inner pair, with no
+    /// reference to any particular constructor) is: one dim is a reduction
+    /// `r`, the other an output dim `v` written at unit stride; one input
+    /// (the *dot-row* operand) walks `r` contiguously and ignores `v`; the
+    /// other (the *row-panel* operand) walks `v` contiguously. Plain and
+    /// batched matmul `(k, n)`/`(n, k)`, MLP layers, and conv2d's
+    /// `(kw, ow)` spatial pair all match; transposed matmul (strided `A`
+    /// rows) and conv1d's `(ic, oc)` (strided `W` columns) do not.
+    pub fn pair_roles(&self, outer: Dim, inner: Dim) -> Option<PairRoles> {
+        if outer == inner {
+            return None;
+        }
+        let (r, v, red_outer) = if self.is_reduce(outer) && !self.is_reduce(inner) {
+            (outer, inner, true)
+        } else if !self.is_reduce(outer) && self.is_reduce(inner) {
+            (inner, outer, false)
+        } else {
+            return None;
+        };
+        if self.out.stride(v) != Some(1) || self.out.indexed(r) {
+            return None;
+        }
+        let [i0, i1] = self.inputs;
+        for (a_input, a, b) in [(0, i0.access, i1.access), (1, i1.access, i0.access)] {
+            if a.stride(r) == Some(1) && !a.indexed(v) && b.stride(v) == Some(1) {
+                return Some(PairRoles {
+                    a_input,
+                    b_row_stride: b.stride_or_zero(r),
+                    red_outer,
+                });
+            }
+        }
+        None
+    }
+
     /// Deterministic hash of (kind, extents) — used for per-problem seeds.
     pub fn dim_hash(&self) -> u64 {
         let mut h = 0xcbf2_9ce4_8422_2325u64;
@@ -446,6 +528,21 @@ impl Problem {
         }
         h
     }
+}
+
+/// Operand roles for dispatching an innermost level pair to the
+/// register-tiled microkernels (see [`Problem::pair_roles`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PairRoles {
+    /// Index (into [`Problem::inputs`]) of the dot-row operand: unit
+    /// stride along the reduction dim, not indexed by the output dim.
+    pub a_input: usize,
+    /// Stride of the row-panel operand along the reduction dim (`0` when
+    /// it is not indexed by it).
+    pub b_row_stride: usize,
+    /// Whether the reduction dim is the *outer* level of the pair (the
+    /// `kn`-order kernel; `false` = `nk` order).
+    pub red_outer: bool,
 }
 
 impl std::fmt::Display for Problem {
@@ -544,6 +641,87 @@ mod tests {
         assert_eq!(a.access.stride(Dim::K), Some(8));
         assert_eq!(p.mm_kernel_shape(), None);
         assert_eq!(p.tensor_len(&a), 8 * 32);
+    }
+
+    #[test]
+    fn pair_roles_matmul_orders() {
+        let p = Problem::new(8, 16, 32);
+        // (k, n): reduction outer -> kn order; A is the dot-row operand.
+        let kn = p.pair_roles(Dim::K, Dim::N).expect("kn pair");
+        assert_eq!(kn, PairRoles { a_input: 0, b_row_stride: 16, red_outer: true });
+        // (n, k): vectorizable outer -> nk order.
+        let nk = p.pair_roles(Dim::N, Dim::K).expect("nk pair");
+        assert!(!nk.red_outer);
+        assert_eq!((nk.a_input, nk.b_row_stride), (0, 16));
+        // Two output dims, same dim, or (m, k) with strided A: no pair.
+        assert_eq!(p.pair_roles(Dim::M, Dim::N), None);
+        assert_eq!(p.pair_roles(Dim::K, Dim::K), None);
+        assert_eq!(p.pair_roles(Dim::M, Dim::K), None);
+    }
+
+    #[test]
+    fn pair_roles_generalized_families() {
+        // bmm: per-batch matmul structure, same roles as plain matmul.
+        let p = Problem::batched_matmul(2, 8, 16, 32);
+        let (dn, dk) = (Dim::new(2), Dim::new(3));
+        let r = p.pair_roles(dn, dk).expect("bmm nk pair");
+        assert_eq!(r, PairRoles { a_input: 0, b_row_stride: 16, red_outer: false });
+
+        // conv2d (kw, ow): W is the dot-row operand, In the row panel with
+        // row stride 1 (the overlapping window).
+        let p = Problem::conv2d(8, 8, 3, 3);
+        let (dow, dkw) = (Dim::new(1), Dim::new(3));
+        let r = p.pair_roles(dkw, dow).expect("conv2d kw/ow pair");
+        assert_eq!(r, PairRoles { a_input: 1, b_row_stride: 1, red_outer: true });
+
+        // Transposed matmul: A walks k at stride m -> no dot-row operand.
+        let p = Problem::matmul_transposed(8, 16, 32);
+        assert_eq!(p.pair_roles(Dim::K, Dim::N), None);
+        assert_eq!(p.pair_roles(Dim::N, Dim::K), None);
+
+        // conv1d (ic, oc): W's oc stride is kw*ic, not 1 -> no row panel.
+        let p = Problem::conv1d(16, 8, 3, 4);
+        assert_eq!(p.pair_roles(Dim::new(3), Dim::new(1)), None);
+    }
+
+    #[test]
+    fn custom_constructor_validates_and_sizes() {
+        // Elementwise product: C[i, j] = A[i, j] * B[i, j] (no reduction).
+        let (di, dj) = (Dim::new(0), Dim::new(1));
+        let a = Access::none().with(di, 6).with(dj, 1);
+        let p = Problem::custom(
+            "ew",
+            &[("i", 4, false), ("j", 6, false)],
+            ("A", a),
+            ("B", a),
+            a,
+        );
+        assert_eq!(p.out_len(), 24);
+        assert_eq!(p.flops(), 2 * 24);
+        assert_eq!(p.id(), "ew_4x6");
+        assert_eq!(p.mm_kernel_shape(), None);
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one output dim")]
+    fn custom_rejects_all_reduce_problems() {
+        let di = Dim::new(0);
+        let a = Access::none().with(di, 1);
+        Problem::custom("dotp", &[("i", 8, true)], ("A", a), ("B", a), Access::none());
+    }
+
+    #[test]
+    #[should_panic(expected = "must index the output")]
+    fn custom_rejects_unindexed_output_dim() {
+        let di = Dim::new(0);
+        let a = Access::none().with(di, 1);
+        Problem::custom(
+            "bad",
+            &[("i", 4, false), ("j", 6, false)],
+            ("A", a),
+            ("B", a),
+            a,
+        );
     }
 
     #[test]

@@ -12,6 +12,10 @@
 //!                                 --suite bmm|conv1d|conv2d|mlp|... runs a
 //!                                 workload suite from the registry
 //!   workloads                     list the registered workload suites
+//!   bench     [--smoke]           time the backend substrate (executor
+//!                                 GFLOPS per family, cost-model and
+//!                                 search evals/sec); writes the tracked
+//!                                 BENCH_backend.json
 //!   eval      <experiment>        regenerate a paper table/figure
 //!   artifacts                     check the AOT artifacts load
 //!
@@ -45,7 +49,7 @@ fn parse_args() -> Args {
         if let Some(name) = a.strip_prefix("--") {
             // boolean flags have no value; value flags consume the next arg
             match name {
-                "quick" | "cost-model" | "measured" | "untrained" => {
+                "quick" | "cost-model" | "measured" | "untrained" | "smoke" => {
                     flags.insert(name.to_string(), "true".into());
                 }
                 _ => {
@@ -411,6 +415,27 @@ fn main() -> Result<()> {
             std::fs::write(&path, report.to_json())?;
             println!("report -> {}", path.display());
         }
+        "bench" => {
+            // Backend measurement substrate: executor GFLOPS per workload
+            // family (initial + tuned schedules, dispatch paths), cost
+            // model and search throughput. Writes the tracked
+            // BENCH_backend.json (schema bench_backend/v1, see README);
+            // --smoke shrinks shapes/budgets to CI scale and --json PATH
+            // overrides the output location.
+            let cfg = looptune::eval::bench_backend::BenchCfg {
+                smoke: args.flags.contains_key("smoke"),
+                seed,
+            };
+            let report = looptune::eval::bench_backend::run(&cfg);
+            print!("{}", report.summary());
+            let path = args
+                .flags
+                .get("json")
+                .cloned()
+                .unwrap_or_else(|| "BENCH_backend.json".into());
+            std::fs::write(&path, report.to_json())?;
+            println!("report -> {path}");
+        }
         "workloads" => {
             // List the registered workload suites (README workload table).
             println!("{:<8} {:>9}  description", "suite", "problems");
@@ -497,12 +522,13 @@ fn main() -> Result<()> {
                 "looptune — RL loop-schedule auto-tuner (LoopTune reproduction)\n\n\
                  usage: looptune <cmd> [flags]\n\
                  cmds:  peak | dataset | workloads | render | artifacts | train | tune\n       \
-                 | search | tune-many | eval\n\
+                 | search | tune-many | bench | eval\n\
                  flags: --mnk M,N,K --algo NAME --iters N --budget SECS --out DIR\n       \
                  --params FILE --config FILE --seed N --quick --cost-model --untrained\n       \
                  --threads N --expand-threads N --budget-evals N --split S --limit N\n       \
                  --suite NAME (tune-many over a workload suite: matmul|mmt|bmm|\n       \
-                 conv1d|conv2d|mlp)"
+                 conv1d|conv2d|mlp)\n       \
+                 --smoke --json PATH (bench: tiny CI shapes, output path)"
             );
         }
     }

@@ -211,7 +211,7 @@ impl SearchCtx {
                 let g = self.eval(&next, depth);
                 out.push((action, next, g));
             }
-            out.sort_by(|a, b| b.2.partial_cmp(&a.2).unwrap());
+            out.sort_by(|a, b| desc_score(b.2, a.2));
             return out;
         }
 
@@ -243,7 +243,7 @@ impl SearchCtx {
             self.observe(&next, g, depth);
             out.push((action, next, g));
         }
-        out.sort_by(|a, b| b.2.partial_cmp(&a.2).unwrap());
+        out.sort_by(|a, b| desc_score(b.2, a.2));
         out
     }
 
@@ -270,6 +270,17 @@ impl SearchCtx {
             trace: self.trace,
         }
     }
+}
+
+/// Descending-order comparator for candidate scores: higher GFLOPS first,
+/// with NaN ranked *worst*. A backend returning NaN must neither panic
+/// the sort (`f64::total_cmp` is total) nor steer beam/greedy selection
+/// toward a broken schedule, which ranking +NaN above +inf in raw total
+/// order would do.
+/// Use as `sort_by(|a, b| desc_score(b.2, a.2))`.
+fn desc_score(x: f64, y: f64) -> std::cmp::Ordering {
+    let key = |g: f64| if g.is_nan() { f64::NEG_INFINITY } else { g };
+    key(x).total_cmp(&key(y))
 }
 
 /// The search algorithms of Fig. 6/8/9/10, by name.
@@ -423,6 +434,52 @@ mod tests {
             assert_eq!(x.2, y.2, "score diverged");
         }
         assert_eq!(serial.evals(), parallel.evals());
+    }
+
+    #[test]
+    fn expand_survives_nan_scores() {
+        // A backend that returns NaN for some schedules must not panic the
+        // sort (f64::total_cmp orders NaN deterministically).
+        struct NanBackend;
+        impl crate::backend::Backend for NanBackend {
+            fn eval(&mut self, nest: &Nest) -> f64 {
+                if nest.loops.len() % 2 == 0 {
+                    f64::NAN
+                } else {
+                    nest.loops.len() as f64
+                }
+            }
+            fn name(&self) -> &'static str {
+                "nan"
+            }
+            fn eval_count(&self) -> u64 {
+                0
+            }
+        }
+        let p = Problem::new(64, 64, 64);
+        for threads in [1usize, 4] {
+            let mut ctx = SearchCtx::with_threads(
+                p,
+                SharedBackend::new(NanBackend),
+                Budget::evals(1000),
+                threads,
+            );
+            let exp = ctx.expand(&Nest::initial(p), 1);
+            assert!(!exp.is_empty());
+            // NaN candidates rank worst (a broken score must not steer
+            // beam/greedy selection); the finite head stays descending.
+            if let Some(first_nan) = exp.iter().position(|e| e.2.is_nan()) {
+                assert!(
+                    exp[first_nan..].iter().all(|e| e.2.is_nan()),
+                    "NaN scores must sort last"
+                );
+            }
+            let finite: Vec<f64> =
+                exp.iter().map(|e| e.2).filter(|g| !g.is_nan()).collect();
+            for w in finite.windows(2) {
+                assert!(w[0] >= w[1], "finite scores out of order: {finite:?}");
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,232 @@
+//! Execution-engine acceptance tests: every innermost dispatch path the
+//! planner can select (structural register-tiled pairs, each
+//! stride-signature specialization, the scalar strided fallback) is
+//! exercised against the naive access-map reference, including clamped
+//! tails, and the path each workload family's plan selects is pinned.
+
+use looptune::backend::executor::{plan, reference, run_once, ExecPlan, Workspace};
+use looptune::backend::schedule::lower;
+use looptune::ir::{Access, Dim, Nest, Problem};
+
+fn planned(nest: &Nest) -> ExecPlan {
+    plan(lower(nest))
+}
+
+/// Execute `nest` and compare against the naive access-map reference.
+fn check_vs_reference(nest: &Nest, seed: u64) {
+    let pl = planned(nest);
+    let mut ws = Workspace::new(nest.problem, seed);
+    run_once(&pl, &mut ws);
+    let want = reference(&ws);
+    let diff = ws
+        .c
+        .iter()
+        .zip(&want)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(
+        diff < 1e-3,
+        "{} [{}]: max diff {diff}",
+        nest.problem,
+        pl.dispatch()
+    );
+}
+
+/// Execute `nest`, compare against the reference, and assert the planner
+/// chose `want_dispatch`.
+fn check(nest: &Nest, want_dispatch: &str) {
+    assert_eq!(
+        planned(nest).dispatch(),
+        want_dispatch,
+        "{}: unexpected dispatch",
+        nest.problem
+    );
+    check_vs_reference(nest, 17);
+}
+
+#[test]
+fn plan_shape_per_workload_family() {
+    // Which path each family's *initial* schedule selects.
+    let cases: [(Problem, &str); 6] = [
+        (Problem::matmul(24, 20, 28), "pair_nk"),
+        (Problem::matmul_transposed(24, 20, 28), "dot"),
+        (Problem::batched_matmul(2, 12, 10, 14), "pair_nk"),
+        (Problem::conv1d(18, 6, 3, 5), "dot11"),
+        (Problem::conv2d(12, 14, 3, 3), "dot11"),
+        (Problem::mlp(12, 10, 14), "pair_nk"),
+    ];
+    for (p, want) in cases {
+        assert_eq!(planned(&Nest::initial(p)).dispatch(), want, "{p}");
+    }
+}
+
+#[test]
+fn pair_nk_on_bmm_with_clamped_tails() {
+    // bmm initial ends (n, k): structural nk pair. Non-dividing tiles on
+    // n and m clamp both the vectorized chunk and a walked level.
+    let mut n = Nest::initial(Problem::batched_matmul(3, 9, 11, 13));
+    check(&n, "pair_nk");
+    n.cursor = 2; // n root
+    n.split(4).unwrap(); // b m n(4) n:4 k — pair (n:4, k), 11 % 4 = 3 tail
+    check(&n, "pair_nk");
+    n.cursor = 1; // m root
+    n.split(4).unwrap(); // 9 % 4 = 1 tail on a walked level
+    check(&n, "pair_nk");
+}
+
+#[test]
+fn pair_kn_on_conv2d_spatial_pair_with_tails() {
+    // conv2d with (kw, ow) innermost: W is the dot-row operand, In the
+    // row panel at row stride 1 (the overlapping window).
+    let p = Problem::conv2d(13, 17, 3, 5);
+    let mut n = Nest::initial(p); // oh ow kh kw
+    n.cursor = 1; // ow
+    n.swap_down().unwrap(); // oh kh ow kw
+    n.swap_down().unwrap(); // oh kh kw ow
+    check(&n, "pair_kn");
+    // Tail on a walked level: oh split 4 (13 % 4 = 1).
+    n.cursor = 0;
+    n.split(4).unwrap();
+    check(&n, "pair_kn");
+    // Tail on the vectorized chunk itself: tile ow by 8 (17 % 8 = 1) and
+    // hoist the ow root back above kw so the pair survives.
+    let mut n = Nest::initial(p);
+    n.cursor = 1;
+    n.swap_down().unwrap();
+    n.swap_down().unwrap(); // oh kh kw ow
+    n.cursor = 3;
+    n.split(8).unwrap(); // oh kh kw ow(8) ow:8
+    n.cursor = 3;
+    n.swap_up().unwrap(); // oh kh ow(8) kw ow:8
+    check(&n, "pair_kn");
+}
+
+#[test]
+fn pair_kn_on_matmul_and_mlp() {
+    for p in [Problem::matmul(10, 14, 18), Problem::mlp(10, 14, 18)] {
+        let mut n = Nest::initial(p); // m n k
+        n.cursor = 1;
+        n.swap_down().unwrap(); // m k n
+        check(&n, "pair_kn");
+    }
+}
+
+#[test]
+fn dot11_unit_stride_reduction_with_tails() {
+    // conv1d initial ends (kw, ic): both reductions, both unit stride on
+    // the inputs -> unit-stride dot (ic = 7 exercises the 4-wide
+    // remainder).
+    let mut n = Nest::initial(Problem::conv1d(19, 6, 3, 7));
+    check(&n, "dot11");
+    // Tiling ic keeps the signature but clamps the chunk (7 % 4 = 3).
+    n.cursor = 3; // ic root
+    n.split(4).unwrap();
+    check(&n, "dot11");
+    // conv2d initial ends (kh, kw): same class.
+    check(&Nest::initial(Problem::conv2d(9, 11, 3, 5)), "dot11");
+}
+
+#[test]
+fn strided_dot_with_tails() {
+    // Transposed matmul: A walks k at stride m -> strided dot.
+    check(&Nest::initial(Problem::matmul_transposed(9, 11, 13)), "dot");
+    // Plain matmul with a tiled k innermost: (k, k:8) is no pair; the
+    // deepest k level runs the strided dot over clamped chunks
+    // (31 % 8 = 7).
+    let mut n = Nest::initial(Problem::matmul(9, 11, 31));
+    n.cursor = 2;
+    n.split(8).unwrap();
+    check(&n, "dot");
+}
+
+#[test]
+fn axpy_with_tails() {
+    // m k n with n tiled: the deepest n level is a lone unit-stride
+    // output walk with A broadcast (0, 1, 1) -> axpy; 21 % 8 = 5 tail.
+    let mut n = Nest::initial(Problem::matmul(9, 21, 7));
+    n.cursor = 1;
+    n.swap_down().unwrap(); // m k n
+    n.cursor = 2;
+    n.split(8).unwrap(); // m k n(8) n:8
+    check(&n, "axpy");
+}
+
+#[test]
+fn strided_fallback_with_tails() {
+    // n k m order: m innermost walks A at stride k and T at stride n —
+    // the scalar strided fallback.
+    let mut n = Nest::initial(Problem::matmul(9, 11, 13));
+    n.cursor = 0;
+    n.swap_down().unwrap();
+    n.swap_down().unwrap(); // n k m
+    check(&n, "strided");
+    n.cursor = 2; // m root
+    n.split(4).unwrap(); // 9 % 4 = 1 tail
+    check(&n, "strided");
+}
+
+#[test]
+fn mul11_and_scale_on_custom_problems() {
+    // Elementwise product: C[i, j] = A[i, j] * B[i, j] -> (1, 1, 1).
+    let (di, dj) = (Dim::new(0), Dim::new(1));
+    let dense = Access::none().with(di, 7).with(dj, 1);
+    let ew = Problem::custom(
+        "ew",
+        &[("i", 5, false), ("j", 7, false)],
+        ("A", dense),
+        ("B", dense),
+        dense,
+    );
+    let mut n = Nest::initial(ew);
+    check(&n, "mul11");
+    n.cursor = 1; // j root
+    n.split(4).unwrap(); // 7 % 4 = 3 tail
+    check(&n, "mul11");
+
+    // Broadcast: C[i, j] = A[i] * B[i] for all j -> (0, 0, 1).
+    let vec_i = Access::none().with(di, 1);
+    let bc = Problem::custom(
+        "bcast",
+        &[("i", 5, false), ("j", 7, false)],
+        ("A", vec_i),
+        ("B", vec_i),
+        dense,
+    );
+    let mut n = Nest::initial(bc);
+    check(&n, "scale");
+    n.cursor = 1;
+    n.split(4).unwrap();
+    check(&n, "scale");
+}
+
+#[test]
+fn deep_random_schedules_agree_on_every_family() {
+    // Random transform chains over every family: whatever path the
+    // planner picks, the result must match the reference bit-for-bit
+    // within tolerance.
+    use looptune::util::rng::Pcg32;
+    let problems = [
+        Problem::matmul(18, 22, 26),
+        Problem::matmul_transposed(14, 10, 18),
+        Problem::batched_matmul(2, 9, 13, 11),
+        Problem::conv1d(21, 10, 3, 6),
+        Problem::conv2d(11, 13, 3, 3),
+        Problem::mlp(13, 17, 11),
+    ];
+    for (pi, &p) in problems.iter().enumerate() {
+        let mut rng = Pcg32::new(0xe4e + pi as u64);
+        let mut n = Nest::initial(p);
+        for step in 0..30 {
+            match rng.below(5) {
+                0 => drop(n.cursor_up()),
+                1 => drop(n.cursor_down()),
+                2 => drop(n.swap_up()),
+                3 => drop(n.swap_down()),
+                _ => drop(n.split(*rng.choose(&[2usize, 3, 4, 8]))),
+            }
+            if step % 6 == 5 {
+                check_vs_reference(&n, 23);
+            }
+        }
+    }
+}
