@@ -12,7 +12,7 @@ use looptune::backend::{peak, SharedBackend};
 use looptune::dataset;
 use looptune::rl::{self, dqn};
 use looptune::runtime::Runtime;
-use std::rc::Rc;
+use std::sync::Arc;
 
 fn main() -> anyhow::Result<()> {
     let iters: usize = std::env::args()
@@ -20,7 +20,7 @@ fn main() -> anyhow::Result<()> {
         .and_then(|s| s.parse().ok())
         .unwrap_or(120);
 
-    let rt = Rc::new(Runtime::load_default()?);
+    let rt = Arc::new(Runtime::load_default()?);
     let ds = dataset::canonical();
     println!(
         "training APEX_DQN for {iters} iterations on {} train problems",

@@ -1,0 +1,375 @@
+//! The tuning service API — the crate's front door (DESIGN.md §9).
+//!
+//! Every way of producing a tuned schedule — trained-policy rollout
+//! ([`crate::rl::tune`]), the classical searches
+//! ([`crate::search::SearchAlgo`]), and the simulated baseline tuners
+//! ([`crate::baselines`]) — is one implementation of the single
+//! [`Strategy`] trait, so callers pick strategies by value instead of by
+//! divergent function signatures. Typed [`TuneRequest`]/[`TuneResponse`]
+//! messages (JSON-codable, see [`request`]) describe one tuning job, and
+//! [`TuningService`] serves them over long-lived warm state: the
+//! [`SharedBackend`] pool, loaded policy [`ParamSet`]s keyed by path, and
+//! the measured machine peak.
+//!
+//! The CLI subcommands (`tune`, `search`, `tune-many`, `serve`), the
+//! batch driver ([`crate::search::batch`]) and the evaluation experiments
+//! are all thin adapters over this module.
+//!
+//! [`SharedBackend`]: crate::backend::SharedBackend
+//! [`ParamSet`]: crate::rl::params::ParamSet
+
+pub mod request;
+pub mod service;
+pub mod spec;
+
+pub use request::{BackendChoice, TuneRequest, TuneResponse};
+pub use service::{ServiceCfg, TuningService};
+
+pub use crate::baselines::BaselineKind;
+
+use crate::backend::SharedBackend;
+use crate::baselines::Baseline;
+use crate::env::Env;
+use crate::featurize::FeatureMask;
+use crate::ir::{Nest, Problem};
+use crate::rl::{self, params::ParamSet};
+use crate::runtime::Runtime;
+use crate::search::{Budget, SearchAlgo, TracePoint};
+use anyhow::Result;
+use std::sync::Arc;
+
+/// Per-request knobs shared by every strategy: max action-sequence depth
+/// (searches) / rollout steps (policy), the deterministic seed, and the
+/// candidate-scoring fan-out inside one search.
+#[derive(Clone, Copy, Debug)]
+pub struct TuneOpts {
+    /// Max action-sequence length (search depth / policy rollout steps).
+    pub depth: usize,
+    /// Deterministic seed for this request.
+    pub seed: u64,
+    /// Worker threads inside one search's candidate expansion.
+    pub expand_threads: usize,
+}
+
+impl Default for TuneOpts {
+    fn default() -> Self {
+        TuneOpts { depth: 10, seed: 7, expand_threads: 1 }
+    }
+}
+
+/// What every strategy returns: the tuned schedule plus the bookkeeping
+/// a [`TuneResponse`] reports.
+#[derive(Clone, Debug)]
+pub struct TuneResult {
+    /// Strategy label (e.g. `greedy2`, `policy`, `autotvm`).
+    pub strategy: String,
+    /// Best schedule found.
+    pub best: Nest,
+    /// GFLOPS of the best schedule.
+    pub best_gflops: f64,
+    /// GFLOPS of the untiled initial schedule.
+    pub initial_gflops: f64,
+    /// Backend evaluations this request consumed (cache misses it caused).
+    pub evals: u64,
+    /// Evaluations served from the shared cache. Searches and the policy
+    /// attribute every hit exactly; the baseline simulators only count
+    /// the hits the strategy wrapper itself observes.
+    pub cache_hits: u64,
+    /// Tuning time attributed to the strategy, seconds (policy: pure
+    /// inference; baselines: simulator-attributed tune time).
+    pub elapsed: f64,
+    /// Per-step improvement trace (Fig.-10 style).
+    pub trace: Vec<TracePoint>,
+    /// Action names of the rollout (policy strategy; empty otherwise).
+    pub actions: Vec<String>,
+    /// Caveat attached to the result (e.g. "untrained policy").
+    pub note: Option<String>,
+}
+
+impl TuneResult {
+    /// Speedup of the best schedule over the untiled starting point.
+    pub fn speedup(&self) -> f64 {
+        self.best_gflops / self.initial_gflops.max(1e-12)
+    }
+}
+
+/// One way of tuning a problem. The environment carries the problem (at
+/// its untiled initial schedule), the warm [`SharedBackend`] handle, the
+/// machine peak, and the feature mask; the strategy owns everything else.
+///
+/// Strategies tune `env.nest.problem` from its *initial* schedule — the
+/// env is handed over unevaluated ([`Env::deferred`]) so a strategy's own
+/// evaluation accounting is exactly what a cold standalone run performs.
+pub trait Strategy {
+    /// Report label of this strategy.
+    fn label(&self) -> String;
+
+    /// Tune the environment's problem within `budget`.
+    fn tune(&self, env: &mut Env, budget: Budget, opts: &TuneOpts) -> Result<TuneResult>;
+}
+
+/// Run `strategy` on `problem` over `backend` — the one code path every
+/// entry point (service, batch driver, eval experiments) funnels through.
+pub fn run_strategy(
+    strategy: &dyn Strategy,
+    backend: &SharedBackend,
+    problem: Problem,
+    peak: f64,
+    mask: FeatureMask,
+    budget: Budget,
+    opts: &TuneOpts,
+) -> Result<TuneResult> {
+    let mut env = Env::deferred(problem, backend.clone(), peak);
+    env.mask = mask;
+    strategy.tune(&mut env, budget, opts)
+}
+
+// ---------------------------------------------------------------------------
+// Strategy implementations
+// ---------------------------------------------------------------------------
+
+impl Strategy for SearchAlgo {
+    fn label(&self) -> String {
+        self.name().to_string()
+    }
+
+    fn tune(&self, env: &mut Env, budget: Budget, opts: &TuneOpts) -> Result<TuneResult> {
+        let r = self.run_threaded(
+            env.nest.problem,
+            env.backend.clone(),
+            budget,
+            opts.depth,
+            opts.seed,
+            opts.expand_threads,
+        );
+        Ok(TuneResult {
+            strategy: r.algo.clone(),
+            best: r.best,
+            best_gflops: r.best_gflops,
+            initial_gflops: r.initial_gflops,
+            evals: r.evals,
+            cache_hits: r.cache_hits,
+            elapsed: r.elapsed,
+            trace: r.trace,
+            actions: Vec::new(),
+            note: None,
+        })
+    }
+}
+
+/// Trained-policy rollout (the paper's headline tuner): greedy
+/// `argmax Q(s, ·)` for up to `opts.depth` steps, no backend evaluation
+/// in the loop. Holds the warm runtime + parameter handles the service
+/// keeps alive across requests.
+pub struct PolicyRollout {
+    /// PJRT runtime executing the AOT policy network.
+    pub runtime: Arc<Runtime>,
+    /// Policy parameters (trained, or a fresh init).
+    pub params: Arc<ParamSet>,
+    /// Whether `params` came from a trained checkpoint.
+    pub trained: bool,
+}
+
+impl Strategy for PolicyRollout {
+    fn label(&self) -> String {
+        "policy".to_string()
+    }
+
+    fn tune(&self, env: &mut Env, _budget: Budget, opts: &TuneOpts) -> Result<TuneResult> {
+        let out = rl::tune_masked(
+            &self.runtime,
+            &self.params,
+            env.nest.problem,
+            opts.depth,
+            &env.backend,
+            env.mask,
+        )?;
+        let trace = vec![TracePoint {
+            elapsed: out.infer_secs,
+            evals: out.evals,
+            depth: out.actions.len(),
+            best_gflops: out.gflops,
+        }];
+        // Keep the rollout's caveats visible end to end: the CLI printed
+        // "early stop" before the redesign, and wire consumers need it to
+        // tell oscillation-stop from depth exhaustion.
+        let mut notes = Vec::new();
+        if !self.trained {
+            notes.push("untrained policy");
+        }
+        if out.stopped_early {
+            notes.push("early stop (state revisit)");
+        }
+        Ok(TuneResult {
+            strategy: self.label(),
+            best_gflops: out.gflops,
+            initial_gflops: out.initial_gflops,
+            evals: out.evals,
+            cache_hits: out.cache_hits,
+            elapsed: out.infer_secs,
+            trace,
+            actions: out.actions.iter().map(|a| a.name()).collect(),
+            note: if notes.is_empty() { None } else { Some(notes.join("; ")) },
+            best: out.nest,
+        })
+    }
+}
+
+/// Each tune request constructs a fresh seeded simulator through
+/// [`BaselineKind::simulator`], so per-problem results match a standalone
+/// [`Baseline::run`] at the same seed exactly.
+impl Strategy for BaselineKind {
+    fn label(&self) -> String {
+        self.name().to_string()
+    }
+
+    fn tune(&self, env: &mut Env, _budget: Budget, opts: &TuneOpts) -> Result<TuneResult> {
+        let problem = env.nest.problem;
+        let mut sim = self.simulator(opts.seed);
+        let r = sim.run(problem, &env.backend);
+        // Scored after the simulator ran, so its internal search is
+        // byte-identical to a standalone run; often a cache hit anyway.
+        let (initial_gflops, miss) = env.backend.eval_detail(&Nest::initial(problem));
+        let trace = vec![TracePoint {
+            elapsed: r.tune_secs,
+            // Same accounting as the top-level counter below, so trace
+            // totals and response counters cross-check for every strategy.
+            evals: r.evals + miss as u64,
+            depth: 0,
+            best_gflops: r.gflops,
+        }];
+        Ok(TuneResult {
+            strategy: self.label(),
+            best: r.nest,
+            best_gflops: r.gflops,
+            initial_gflops,
+            // The simulators don't attribute their own cache hits, but
+            // the initial-nest score here is attributable either way.
+            evals: r.evals + miss as u64,
+            cache_hits: !miss as u64,
+            elapsed: r.tune_secs,
+            trace,
+            actions: Vec::new(),
+            note: None,
+        })
+    }
+}
+
+/// Request-level strategy selector: one name space over every
+/// [`Strategy`] family.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StrategyKind {
+    /// Trained-policy rollout ([`PolicyRollout`]).
+    Policy,
+    /// A classical search ([`SearchAlgo`]).
+    Search(SearchAlgo),
+    /// A simulated comparator ([`BaselineKind`]).
+    Baseline(BaselineKind),
+}
+
+impl StrategyKind {
+    /// Resolve a strategy by name: `policy` (alias `looptune`), any
+    /// [`SearchAlgo::name`], or any [`BaselineKind::name`].
+    pub fn parse(s: &str) -> Option<StrategyKind> {
+        if s == "policy" || s == "looptune" {
+            return Some(StrategyKind::Policy);
+        }
+        if let Some(a) = SearchAlgo::from_name(s) {
+            return Some(StrategyKind::Search(a));
+        }
+        BaselineKind::from_name(s).map(StrategyKind::Baseline)
+    }
+
+    /// Canonical name (round-trips through [`Self::parse`]).
+    pub fn name(&self) -> &'static str {
+        match self {
+            StrategyKind::Policy => "policy",
+            StrategyKind::Search(a) => a.name(),
+            StrategyKind::Baseline(b) => b.name(),
+        }
+    }
+
+    /// Whether this strategy consumes a budget (and would spin forever on
+    /// an unlimited one). Policy rollout and the baseline simulators run
+    /// a fixed amount of work regardless.
+    pub fn needs_budget(&self) -> bool {
+        matches!(self, StrategyKind::Search(_))
+    }
+
+    /// Every servable strategy name (help text, tests).
+    pub fn all_names() -> Vec<&'static str> {
+        let mut v = vec!["policy"];
+        v.extend(SearchAlgo::ALL.iter().map(|a| a.name()));
+        v.extend(BaselineKind::ALL.iter().map(|b| b.name()));
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::cost_model::CostModel;
+
+    fn be() -> SharedBackend {
+        SharedBackend::with_factory(CostModel::default)
+    }
+
+    #[test]
+    fn strategy_names_round_trip() {
+        for name in StrategyKind::all_names() {
+            let k = StrategyKind::parse(name).unwrap_or_else(|| panic!("{name}"));
+            assert_eq!(k.name(), name);
+        }
+        assert_eq!(StrategyKind::parse("looptune"), Some(StrategyKind::Policy));
+        assert_eq!(StrategyKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn only_searches_need_budgets() {
+        assert!(!StrategyKind::Policy.needs_budget());
+        assert!(StrategyKind::Search(SearchAlgo::Greedy2).needs_budget());
+        assert!(!StrategyKind::Baseline(BaselineKind::AutoTvm).needs_budget());
+    }
+
+    #[test]
+    fn search_strategy_matches_direct_run() {
+        let p = Problem::matmul(96, 96, 96);
+        let budget = Budget::evals(150);
+        let direct = SearchAlgo::Greedy2.run(p, be(), budget, 10, 11);
+        let via = run_strategy(
+            &SearchAlgo::Greedy2,
+            &be(),
+            p,
+            1.0,
+            FeatureMask::default(),
+            budget,
+            &TuneOpts { depth: 10, seed: 11, expand_threads: 1 },
+        )
+        .unwrap();
+        assert_eq!(via.best.loops, direct.best.loops);
+        assert_eq!(via.best_gflops, direct.best_gflops);
+        assert_eq!(via.evals, direct.evals);
+        assert_eq!(via.cache_hits, direct.cache_hits);
+    }
+
+    #[test]
+    fn baseline_strategy_matches_direct_run() {
+        let p = Problem::matmul(128, 128, 128);
+        for kind in [BaselineKind::TvmOpt, BaselineKind::AutoTvm] {
+            let direct = kind.simulator(5).run(p, &be());
+            let via = run_strategy(
+                &kind,
+                &be(),
+                p,
+                1.0,
+                FeatureMask::default(),
+                Budget::unlimited(),
+                &TuneOpts { depth: 10, seed: 5, expand_threads: 1 },
+            )
+            .unwrap();
+            assert_eq!(via.best.loops, direct.nest.loops, "{}", kind.name());
+            assert_eq!(via.best_gflops, direct.gflops, "{}", kind.name());
+            assert!(via.initial_gflops > 0.0);
+        }
+    }
+}

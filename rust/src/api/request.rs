@@ -1,0 +1,583 @@
+//! Typed request/response messages for the tuning service, with JSON
+//! encode/decode over [`crate::util::json`] (schema `tune_request/v1` /
+//! `tune_response/v1`). The `serve` CLI subcommand, the CI smoke step,
+//! and any out-of-process caller speak exactly these documents.
+
+use super::spec;
+use super::StrategyKind;
+use crate::featurize::FeatureMask;
+use crate::ir::Problem;
+use crate::search::{Budget, TracePoint};
+use crate::util::json::{parse, write_json, Json};
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+/// Which evaluation backend scores schedules for a request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, Default)]
+pub enum BackendChoice {
+    /// The real executor (wall-clock measured GFLOPS).
+    Measured,
+    /// The analytical cache-reuse model (deterministic, ~10^4x faster).
+    #[default]
+    CostModel,
+}
+
+impl BackendChoice {
+    /// Wire/report name.
+    pub fn name(self) -> &'static str {
+        match self {
+            BackendChoice::Measured => "measured",
+            BackendChoice::CostModel => "cost_model",
+        }
+    }
+
+    /// Inverse of [`Self::name`].
+    pub fn from_name(s: &str) -> Option<BackendChoice> {
+        match s {
+            "measured" => Some(BackendChoice::Measured),
+            "cost_model" => Some(BackendChoice::CostModel),
+            _ => None,
+        }
+    }
+}
+
+/// One tuning job: a problem spec, a strategy, a budget, and the knobs
+/// the old CLI subcommands each parsed their own way.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TuneRequest {
+    /// Single-problem spec (see [`spec::parse_problem`]).
+    pub problem: String,
+    /// Strategy name (see [`StrategyKind::parse`]).
+    pub strategy: String,
+    /// Search budget. Searches reject [`Budget::unlimited`]; the
+    /// budget-free strategies (policy, baselines) ignore it.
+    pub budget: Budget,
+    /// Deterministic seed; `None` derives one from the service seed and
+    /// the problem (the batch driver's per-problem seeding).
+    pub seed: Option<u64>,
+    /// Backend choice.
+    pub backend: BackendChoice,
+    /// Max action-sequence depth (searches) / rollout steps (policy).
+    pub depth: usize,
+    /// Worker threads inside one search's candidate expansion.
+    pub expand_threads: usize,
+    /// Policy parameter file; `None` uses the service default.
+    pub params: Option<PathBuf>,
+    /// Force a fresh (untrained) policy init, ignoring parameter files.
+    pub untrained: bool,
+    /// Feature groups zeroed in the state vector
+    /// (`cursor|size|tail|kind|hist` — ablation studies).
+    pub features_off: Vec<String>,
+}
+
+impl TuneRequest {
+    /// Request with default knobs (cost-model backend, depth 10).
+    pub fn new(problem: impl Into<String>, strategy: impl Into<String>, budget: Budget) -> Self {
+        TuneRequest {
+            problem: problem.into(),
+            strategy: strategy.into(),
+            budget,
+            seed: None,
+            backend: BackendChoice::CostModel,
+            depth: 10,
+            expand_threads: 1,
+            params: None,
+            untrained: false,
+            features_off: Vec::new(),
+        }
+    }
+
+    /// Validate the request at the API boundary: parse the problem and
+    /// strategy, reject an unlimited budget on strategies that would spin
+    /// forever, and build the feature mask.
+    pub fn validate(&self) -> Result<(Problem, StrategyKind, FeatureMask)> {
+        let problem = spec::parse_problem(&self.problem)?;
+        let strategy = StrategyKind::parse(&self.strategy).ok_or_else(|| {
+            anyhow!(
+                "unknown strategy {:?} (one of: {})",
+                self.strategy,
+                StrategyKind::all_names().join("|")
+            )
+        })?;
+        if strategy.needs_budget() && self.budget.is_unlimited() {
+            bail!(
+                "strategy {} requires a budget: set `budget.secs` and/or \
+                 `budget.evals` (an unlimited search never terminates)",
+                strategy.name()
+            );
+        }
+        if self.depth == 0 {
+            bail!("depth must be >= 1");
+        }
+        let mut mask = FeatureMask::default();
+        for g in &self.features_off {
+            match g.as_str() {
+                "cursor" => mask.cursor = false,
+                "size" => mask.size = false,
+                "tail" => mask.tail = false,
+                "kind" => mask.kind = false,
+                "hist" => mask.hist = false,
+                other => bail!(
+                    "unknown feature group {other:?} (cursor|size|tail|kind|hist)"
+                ),
+            }
+        }
+        Ok((problem, strategy, mask))
+    }
+
+    /// Encode as a `tune_request/v1` JSON document.
+    pub fn to_json(&self) -> String {
+        let mut root = BTreeMap::new();
+        root.insert("schema".into(), Json::Str("tune_request/v1".into()));
+        root.insert("problem".into(), Json::Str(self.problem.clone()));
+        root.insert("strategy".into(), Json::Str(self.strategy.clone()));
+        root.insert("budget".into(), budget_to_json(&self.budget));
+        if let Some(s) = self.seed {
+            root.insert("seed".into(), Json::Str(s.to_string()));
+        }
+        root.insert("backend".into(), Json::Str(self.backend.name().into()));
+        root.insert("depth".into(), Json::Num(self.depth as f64));
+        root.insert("expand_threads".into(), Json::Num(self.expand_threads as f64));
+        if let Some(p) = &self.params {
+            root.insert("params".into(), Json::Str(p.display().to_string()));
+        }
+        if self.untrained {
+            root.insert("untrained".into(), Json::Bool(true));
+        }
+        if !self.features_off.is_empty() {
+            root.insert(
+                "features_off".into(),
+                Json::Arr(self.features_off.iter().map(|s| Json::Str(s.clone())).collect()),
+            );
+        }
+        let mut out = String::new();
+        write_json(&Json::Obj(root), &mut out);
+        out
+    }
+
+    /// Decode a `tune_request/v1` JSON document. Optional fields default
+    /// as in [`TuneRequest::new`]; malformed documents are `Err`s.
+    pub fn from_json(text: &str) -> Result<TuneRequest> {
+        let doc = parse(text).map_err(|e| anyhow!("{e}"))?;
+        Self::from_json_value(&doc)
+    }
+
+    /// Decode an already-parsed JSON value (the `serve` loop parses once).
+    pub fn from_json_value(doc: &Json) -> Result<TuneRequest> {
+        let Some(obj) = doc.as_obj() else {
+            bail!("tune request must be a JSON object");
+        };
+        // Reject unknown knobs: a typo'd field name must not silently run
+        // the request with defaults (mirrors the strict budget object).
+        const KNOWN: [&str; 11] = [
+            "schema",
+            "problem",
+            "strategy",
+            "budget",
+            "seed",
+            "backend",
+            "depth",
+            "expand_threads",
+            "params",
+            "untrained",
+            "features_off",
+        ];
+        for k in obj.keys() {
+            if !KNOWN.contains(&k.as_str()) {
+                bail!("unknown request field {k:?} (one of: {})", KNOWN.join("|"));
+            }
+        }
+        if let Some(s) = doc.get("schema").and_then(Json::as_str) {
+            if s != "tune_request/v1" {
+                bail!("unsupported request schema {s:?} (want tune_request/v1)");
+            }
+        }
+        let problem = doc
+            .get("problem")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("request missing string field \"problem\""))?;
+        let strategy = doc
+            .get("strategy")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("request missing string field \"strategy\""))?;
+        let mut req = TuneRequest::new(problem, strategy, Budget::unlimited());
+        req.budget = match doc.get("budget") {
+            Some(b) => budget_from_json(b)?,
+            None => Budget::unlimited(),
+        };
+        req.seed = match doc.get("seed") {
+            None | Some(Json::Null) => None,
+            Some(v) => Some(json_u64(v).ok_or_else(|| anyhow!("bad seed {v:?}"))?),
+        };
+        if let Some(b) = doc.get("backend") {
+            let name = b.as_str().ok_or_else(|| anyhow!("backend must be a string"))?;
+            req.backend = BackendChoice::from_name(name)
+                .ok_or_else(|| anyhow!("unknown backend {name:?} (measured|cost_model)"))?;
+        }
+        if let Some(d) = doc.get("depth") {
+            req.depth = json_u64(d)
+                .ok_or_else(|| anyhow!("bad depth {d:?} (want a non-negative integer)"))?
+                as usize;
+        }
+        if let Some(t) = doc.get("expand_threads") {
+            req.expand_threads = json_u64(t)
+                .ok_or_else(|| anyhow!("bad expand_threads {t:?} (want a non-negative integer)"))?
+                as usize;
+        }
+        req.params = match doc.get("params") {
+            None | Some(Json::Null) => None,
+            Some(p) => Some(PathBuf::from(
+                p.as_str().ok_or_else(|| anyhow!("params must be a path string"))?,
+            )),
+        };
+        if let Some(u) = doc.get("untrained") {
+            req.untrained = u.as_bool().ok_or_else(|| anyhow!("untrained must be a boolean"))?;
+        }
+        if let Some(f) = doc.get("features_off") {
+            let arr = f.as_arr().ok_or_else(|| anyhow!("features_off must be an array"))?;
+            req.features_off = arr
+                .iter()
+                .map(|v| {
+                    v.as_str()
+                        .map(String::from)
+                        .ok_or_else(|| anyhow!("features_off entries must be strings"))
+                })
+                .collect::<Result<_>>()?;
+        }
+        Ok(req)
+    }
+}
+
+/// What a served request reports back: the tuned schedule (signature,
+/// rendered nest, executor dispatch label, stable hash), GFLOPS before
+/// and after, the improvement trace, and the eval/cache accounting.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TuneResponse {
+    /// Stable problem id (e.g. `mm_64x80x96`); re-parseable as a spec.
+    pub problem: String,
+    /// Workload family tag (`mm`, `bmm`, `conv2d`, ...).
+    pub kind: String,
+    /// Strategy that produced the schedule.
+    pub strategy: String,
+    /// Backend that scored it.
+    pub backend: String,
+    /// The seed the request actually ran with (explicit or derived).
+    pub seed: u64,
+    /// Compact schedule signature (`ir::transform::schedule_signature`).
+    pub schedule: String,
+    /// Rendered loop nest (display form).
+    pub nest: String,
+    /// Stable 64-bit hash of (problem, loops) as lower-hex.
+    pub nest_hash: String,
+    /// Executor dispatch label for the tuned schedule.
+    pub dispatch: String,
+    /// GFLOPS of the untiled initial schedule.
+    pub gflops_initial: f64,
+    /// GFLOPS of the tuned schedule.
+    pub gflops: f64,
+    /// `gflops / gflops_initial`.
+    pub speedup: f64,
+    /// Backend evaluations the request consumed (cache misses).
+    pub evals: u64,
+    /// Evaluations served from the warm cache.
+    pub cache_hits: u64,
+    /// Strategy-attributed tuning seconds.
+    pub tune_secs: f64,
+    /// End-to-end serve time, seconds.
+    pub wall_secs: f64,
+    /// Per-step improvement trace.
+    pub trace: Vec<TracePoint>,
+    /// Rollout action names (policy strategy; empty otherwise).
+    pub actions: Vec<String>,
+    /// Caveat attached to the result (e.g. "untrained policy").
+    pub note: Option<String>,
+}
+
+impl TuneResponse {
+    /// Encode as a `tune_response/v1` JSON document.
+    pub fn to_json(&self) -> String {
+        let mut root = BTreeMap::new();
+        root.insert("schema".into(), Json::Str("tune_response/v1".into()));
+        root.insert("problem".into(), Json::Str(self.problem.clone()));
+        root.insert("kind".into(), Json::Str(self.kind.clone()));
+        root.insert("strategy".into(), Json::Str(self.strategy.clone()));
+        root.insert("backend".into(), Json::Str(self.backend.clone()));
+        root.insert("seed".into(), Json::Str(self.seed.to_string()));
+        root.insert("schedule".into(), Json::Str(self.schedule.clone()));
+        root.insert("nest".into(), Json::Str(self.nest.clone()));
+        root.insert("nest_hash".into(), Json::Str(self.nest_hash.clone()));
+        root.insert("dispatch".into(), Json::Str(self.dispatch.clone()));
+        root.insert("gflops_initial".into(), Json::Num(self.gflops_initial));
+        root.insert("gflops".into(), Json::Num(self.gflops));
+        root.insert("speedup".into(), Json::Num(self.speedup));
+        root.insert("evals".into(), Json::Num(self.evals as f64));
+        root.insert("cache_hits".into(), Json::Num(self.cache_hits as f64));
+        root.insert("tune_secs".into(), Json::Num(self.tune_secs));
+        root.insert("wall_secs".into(), Json::Num(self.wall_secs));
+        let trace: Vec<Json> = self
+            .trace
+            .iter()
+            .map(|t| {
+                let mut row = BTreeMap::new();
+                row.insert("elapsed".into(), Json::Num(t.elapsed));
+                row.insert("evals".into(), Json::Num(t.evals as f64));
+                row.insert("depth".into(), Json::Num(t.depth as f64));
+                row.insert("best_gflops".into(), Json::Num(t.best_gflops));
+                Json::Obj(row)
+            })
+            .collect();
+        root.insert("trace".into(), Json::Arr(trace));
+        root.insert(
+            "actions".into(),
+            Json::Arr(self.actions.iter().map(|a| Json::Str(a.clone())).collect()),
+        );
+        if let Some(n) = &self.note {
+            root.insert("note".into(), Json::Str(n.clone()));
+        }
+        let mut out = String::new();
+        write_json(&Json::Obj(root), &mut out);
+        out
+    }
+
+    /// The error form of the wire contract, kept next to the success form
+    /// so the whole `tune_response/v1` schema lives in this module:
+    /// `{"schema":"tune_response/v1","error":...}`.
+    pub fn error_json(e: &anyhow::Error) -> String {
+        let mut obj = BTreeMap::new();
+        obj.insert("schema".to_string(), Json::Str("tune_response/v1".into()));
+        obj.insert("error".to_string(), Json::Str(format!("{e:#}")));
+        let mut out = String::new();
+        write_json(&Json::Obj(obj), &mut out);
+        out
+    }
+
+    /// Decode a `tune_response/v1` JSON document.
+    pub fn from_json(text: &str) -> Result<TuneResponse> {
+        let doc = parse(text).map_err(|e| anyhow!("{e}"))?;
+        if let Some(s) = doc.get("schema").and_then(Json::as_str) {
+            if s != "tune_response/v1" {
+                bail!("unsupported response schema {s:?} (want tune_response/v1)");
+            }
+        }
+        let s = |k: &str| -> Result<String> {
+            doc.get(k)
+                .and_then(Json::as_str)
+                .map(String::from)
+                .ok_or_else(|| anyhow!("response missing string field {k:?}"))
+        };
+        let f = |k: &str| -> Result<f64> {
+            doc.get(k)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow!("response missing number field {k:?}"))
+        };
+        let trace = doc
+            .get("trace")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("response missing trace array"))?
+            .iter()
+            .map(|t| {
+                let g = |k: &str| -> Result<f64> {
+                    t.get(k)
+                        .and_then(Json::as_f64)
+                        .ok_or_else(|| anyhow!("trace point missing {k:?}"))
+                };
+                Ok(TracePoint {
+                    elapsed: g("elapsed")?,
+                    evals: g("evals")? as u64,
+                    depth: g("depth")? as usize,
+                    best_gflops: g("best_gflops")?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let actions = doc
+            .get("actions")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("response missing actions array"))?
+            .iter()
+            .map(|a| {
+                a.as_str()
+                    .map(String::from)
+                    .ok_or_else(|| anyhow!("actions entries must be strings"))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(TuneResponse {
+            problem: s("problem")?,
+            kind: s("kind")?,
+            strategy: s("strategy")?,
+            backend: s("backend")?,
+            seed: doc
+                .get("seed")
+                .and_then(json_u64)
+                .ok_or_else(|| anyhow!("response missing seed"))?,
+            schedule: s("schedule")?,
+            nest: s("nest")?,
+            nest_hash: s("nest_hash")?,
+            dispatch: s("dispatch")?,
+            gflops_initial: f("gflops_initial")?,
+            gflops: f("gflops")?,
+            speedup: f("speedup")?,
+            evals: f("evals")? as u64,
+            cache_hits: f("cache_hits")? as u64,
+            tune_secs: f("tune_secs")?,
+            wall_secs: f("wall_secs")?,
+            trace,
+            actions,
+            note: doc.get("note").and_then(Json::as_str).map(String::from),
+        })
+    }
+}
+
+/// Budget as JSON: `{"secs": S}` and/or `{"evals": N}`, empty = unlimited.
+fn budget_to_json(b: &Budget) -> Json {
+    let mut obj = BTreeMap::new();
+    if let Some(t) = b.time {
+        obj.insert("secs".into(), Json::Num(t.as_secs_f64()));
+    }
+    if let Some(n) = b.max_evals {
+        obj.insert("evals".into(), Json::Num(n as f64));
+    }
+    Json::Obj(obj)
+}
+
+fn budget_from_json(v: &Json) -> Result<Budget> {
+    let obj = v.as_obj().ok_or_else(|| anyhow!("budget must be an object"))?;
+    for k in obj.keys() {
+        if k != "secs" && k != "evals" {
+            bail!("unknown budget field {k:?} (secs|evals)");
+        }
+    }
+    let secs = match obj.get("secs") {
+        None | Some(Json::Null) => None,
+        Some(s) => {
+            let s = s.as_f64().ok_or_else(|| anyhow!("budget.secs must be a number"))?;
+            if s <= 0.0 || !s.is_finite() {
+                bail!("budget.secs must be a positive finite number");
+            }
+            Some(s)
+        }
+    };
+    let evals = match obj.get("evals") {
+        None | Some(Json::Null) => None,
+        Some(n) => {
+            let n = n.as_f64().ok_or_else(|| anyhow!("budget.evals must be a number"))?;
+            if n < 1.0 || n.fract() != 0.0 {
+                bail!("budget.evals must be a positive integer");
+            }
+            Some(n as u64)
+        }
+    };
+    Ok(match (secs, evals) {
+        (Some(s), Some(n)) => Budget::both(s, n),
+        (Some(s), None) => Budget::seconds(s),
+        (None, Some(n)) => Budget::evals(n),
+        (None, None) => Budget::unlimited(),
+    })
+}
+
+/// u64 from either a JSON number (≤ 2^53) or a decimal string (the full
+/// 64-bit range — derived per-problem seeds use all 64 bits).
+fn json_u64(v: &Json) -> Option<u64> {
+    match v {
+        Json::Num(n) if *n >= 0.0 && n.fract() == 0.0 && *n <= 9.007_199_254_740_992e15 => {
+            Some(*n as u64)
+        }
+        Json::Str(s) => s.parse().ok(),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_json_round_trip_minimal_and_full() {
+        let minimal = TuneRequest::new("matmul:64x64x64", "greedy2", Budget::evals(100));
+        assert_eq!(TuneRequest::from_json(&minimal.to_json()).unwrap(), minimal);
+
+        let full = TuneRequest {
+            problem: "conv2d:28x28x3x3".into(),
+            strategy: "beam4bfs".into(),
+            budget: Budget::both(2.5, 400),
+            seed: Some(u64::MAX - 3),
+            backend: BackendChoice::Measured,
+            depth: 8,
+            expand_threads: 4,
+            params: Some("results/apex_dqn.ltps".into()),
+            untrained: true,
+            features_off: vec!["hist".into(), "cursor".into()],
+        };
+        assert_eq!(TuneRequest::from_json(&full.to_json()).unwrap(), full);
+    }
+
+    #[test]
+    fn request_from_bare_json_uses_defaults() {
+        let req = TuneRequest::from_json(
+            r#"{"problem": "64x64x64", "strategy": "random", "budget": {"evals": 50}}"#,
+        )
+        .unwrap();
+        assert_eq!(req.depth, 10);
+        assert_eq!(req.backend, BackendChoice::CostModel);
+        assert_eq!(req.seed, None);
+        assert_eq!(req.budget.max_evals, Some(50));
+        assert_eq!(req.budget.time, None);
+    }
+
+    #[test]
+    fn malformed_requests_are_errors() {
+        assert!(TuneRequest::from_json("not json").is_err());
+        assert!(TuneRequest::from_json("[1,2]").is_err());
+        assert!(TuneRequest::from_json(r#"{"strategy": "greedy2"}"#).is_err());
+        assert!(TuneRequest::from_json(
+            r#"{"problem": "64x64x64", "strategy": "greedy2", "budget": {"iters": 5}}"#
+        )
+        .is_err());
+        assert!(TuneRequest::from_json(
+            r#"{"problem": "64x64x64", "strategy": "greedy2", "budget": {"evals": -2}}"#
+        )
+        .is_err());
+        assert!(TuneRequest::from_json(
+            r#"{"schema": "tune_request/v2", "problem": "64x64x64", "strategy": "greedy2"}"#
+        )
+        .is_err());
+        // A typo'd knob must error, not silently run with defaults.
+        assert!(TuneRequest::from_json(
+            r#"{"problem": "64x64x64", "strategy": "greedy2", "sead": "42"}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn validation_rejects_unlimited_search_budgets() {
+        let req = TuneRequest::new("matmul:64x64x64", "greedy2", Budget::unlimited());
+        let err = req.validate().unwrap_err().to_string();
+        assert!(err.contains("budget"), "{err}");
+        // Budget-free strategies accept an unlimited budget.
+        TuneRequest::new("matmul:64x64x64", "tvm_opt", Budget::unlimited())
+            .validate()
+            .unwrap();
+        TuneRequest::new("matmul:64x64x64", "policy", Budget::unlimited())
+            .validate()
+            .unwrap();
+    }
+
+    #[test]
+    fn validation_rejects_bad_strategy_and_features() {
+        assert!(TuneRequest::new("64x64x64", "nope", Budget::evals(1)).validate().is_err());
+        let mut req = TuneRequest::new("64x64x64", "greedy1", Budget::evals(1));
+        req.features_off = vec!["colour".into()];
+        assert!(req.validate().is_err());
+        req.features_off = vec!["hist".into()];
+        let (_, _, mask) = req.validate().unwrap();
+        assert!(!mask.hist && mask.cursor);
+    }
+
+    #[test]
+    fn seed_survives_full_64_bit_range() {
+        let mut req = TuneRequest::new("64x64x64", "random", Budget::evals(10));
+        req.seed = Some(0xdead_beef_dead_beef);
+        let back = TuneRequest::from_json(&req.to_json()).unwrap();
+        assert_eq!(back.seed, Some(0xdead_beef_dead_beef));
+    }
+}

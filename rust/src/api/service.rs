@@ -1,0 +1,326 @@
+//! The long-lived tuning service: warm state + request serving.
+//!
+//! A [`TuningService`] owns everything worth keeping hot across requests
+//! — one [`SharedBackend`] (schedule cache + backend-instance pool) per
+//! backend kind, loaded policy [`ParamSet`]s keyed by file path, the PJRT
+//! runtime, and the measured machine peak — and serves single requests or
+//! whole batches. Batches fan out over the same scoped worker-pool driver
+//! the `tune-many` batch engine uses ([`crate::util::parallel_indexed_map`],
+//! DESIGN.md §6), with deterministic per-request seeds derived exactly as
+//! [`crate::search::batch::problem_seed`] derives them, so a service batch
+//! reproduces the pre-service CLI paths bit for bit.
+//!
+//! [`ParamSet`]: crate::rl::params::ParamSet
+
+use super::request::{BackendChoice, TuneRequest, TuneResponse};
+use super::{run_strategy, BaselineKind, PolicyRollout, Strategy, StrategyKind, TuneOpts};
+use crate::backend::{peak, SharedBackend};
+use crate::ir::{Nest, Problem};
+use crate::rl::params::ParamSet;
+use crate::runtime::Runtime;
+use crate::search::batch::problem_seed;
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Service construction knobs.
+#[derive(Clone, Debug)]
+pub struct ServiceCfg {
+    /// Batch seed: requests without an explicit seed derive theirs from
+    /// this and the problem (see [`problem_seed`]).
+    pub seed: u64,
+    /// Worker threads for batch serving.
+    pub threads: usize,
+    /// Policy parameter file used when a request names none.
+    pub default_params: Option<PathBuf>,
+}
+
+impl Default for ServiceCfg {
+    fn default() -> Self {
+        ServiceCfg { seed: 7, threads: crate::util::default_threads(), default_params: None }
+    }
+}
+
+/// The session-owning tuning front door. `Send + Sync`: clone-free
+/// sharing across serving threads (asserted by a test below).
+pub struct TuningService {
+    cfg: ServiceCfg,
+    backends: Mutex<HashMap<BackendChoice, SharedBackend>>,
+    params: Mutex<HashMap<PathBuf, Arc<ParamSet>>>,
+    runtime: Mutex<Option<Arc<Runtime>>>,
+}
+
+impl TuningService {
+    /// Service with the given configuration and empty warm state.
+    pub fn new(cfg: ServiceCfg) -> Self {
+        TuningService {
+            cfg,
+            backends: Mutex::new(HashMap::new()),
+            params: Mutex::new(HashMap::new()),
+            runtime: Mutex::new(None),
+        }
+    }
+
+    /// The warm shared evaluation handle for `choice` (created on first
+    /// use; every later request reuses its schedule cache and instance
+    /// pool).
+    pub fn backend(&self, choice: BackendChoice) -> SharedBackend {
+        let mut map = self.backends.lock().expect("backend map poisoned");
+        map.entry(choice)
+            .or_insert_with(|| match choice {
+                BackendChoice::Measured => {
+                    SharedBackend::with_factory(crate::backend::executor::ExecutorBackend::default)
+                }
+                BackendChoice::CostModel => {
+                    SharedBackend::with_factory(crate::backend::cost_model::CostModel::default)
+                }
+            })
+            .clone()
+    }
+
+    /// Machine peak GFLOPS for `choice`: the empirical FMA peak for the
+    /// measured backend (measured once per process — `peak_gflops` is
+    /// globally memoized), the cost model's compute roofline otherwise.
+    /// Serving never calls this (no strategy consumes the peak); it is
+    /// the warm-state accessor for callers that normalize rewards.
+    pub fn peak(&self, choice: BackendChoice) -> f64 {
+        match choice {
+            BackendChoice::Measured => peak::peak_gflops(),
+            BackendChoice::CostModel => {
+                crate::backend::cost_model::Machine::default().roofline_gflops()
+            }
+        }
+    }
+
+    /// The warm PJRT runtime, loaded on the first policy request.
+    pub fn runtime(&self) -> Result<Arc<Runtime>> {
+        let mut slot = self.runtime.lock().expect("runtime slot poisoned");
+        if let Some(rt) = &*slot {
+            return Ok(rt.clone());
+        }
+        let rt = Arc::new(
+            Runtime::load_default().map_err(|e| anyhow!("loading the policy runtime: {e}"))?,
+        );
+        *slot = Some(rt.clone());
+        Ok(rt)
+    }
+
+    /// Trained policy parameters from `path` (or the service default),
+    /// loaded once per path and shared across requests. The load-or-init
+    /// fallback rule itself lives in [`ParamSet::load_or_init`] — one
+    /// copy shared with the CLI eval experiments; this method only adds
+    /// the warm cross-request cache.
+    fn policy(
+        &self,
+        rt: &Arc<Runtime>,
+        path: Option<&Path>,
+        untrained: bool,
+        seed: u64,
+    ) -> Result<(Arc<ParamSet>, bool)> {
+        let path =
+            if untrained { None } else { path.or_else(|| self.cfg.default_params.as_deref()) };
+        if let Some(p) = path {
+            let map = self.params.lock().expect("param map poisoned");
+            if let Some(ps) = map.get(p) {
+                return Ok((ps.clone(), true));
+            }
+        }
+        let (ps, trained) = ParamSet::load_or_init(rt, path, seed as i32)?;
+        let ps = Arc::new(ps);
+        if trained {
+            if let Some(p) = path {
+                let mut map = self.params.lock().expect("param map poisoned");
+                map.insert(p.to_path_buf(), ps.clone());
+            }
+        }
+        Ok((ps, trained))
+    }
+
+    /// Materialize the strategy a validated request names.
+    pub fn strategy_for(
+        &self,
+        kind: StrategyKind,
+        req: &TuneRequest,
+        seed: u64,
+    ) -> Result<Box<dyn Strategy>> {
+        Ok(match kind {
+            StrategyKind::Search(a) => Box::new(a),
+            StrategyKind::Baseline(b) => Box::new(b),
+            StrategyKind::Policy => {
+                let rt = self.runtime()?;
+                let (params, trained) =
+                    self.policy(&rt, req.params.as_deref(), req.untrained, seed)?;
+                Box::new(PolicyRollout { runtime: rt, params, trained })
+            }
+        })
+    }
+
+    /// The seed a request runs with: explicit, or derived from the
+    /// service seed and the problem exactly as the batch driver does.
+    pub fn request_seed(&self, req: &TuneRequest, problem: Problem) -> u64 {
+        req.seed.unwrap_or_else(|| problem_seed(self.cfg.seed, problem))
+    }
+
+    /// Serve one request against the service's own warm backend.
+    pub fn serve(&self, req: &TuneRequest) -> Result<TuneResponse> {
+        let backend = self.backend(req.backend);
+        self.serve_on(&backend, req)
+    }
+
+    /// Serve one request against a caller-provided backend handle (the
+    /// batch driver and tests route their own warm handle through here).
+    pub fn serve_on(&self, backend: &SharedBackend, req: &TuneRequest) -> Result<TuneResponse> {
+        let t0 = Instant::now();
+        let (problem, kind, mask) = req.validate()?;
+        let seed = self.request_seed(req, problem);
+        let opts = TuneOpts { depth: req.depth, seed, expand_threads: req.expand_threads };
+        let strategy = self.strategy_for(kind, req, seed)?;
+        // No current strategy consumes `env.peak` (reward normalization is
+        // a training-time concern), so serving must not pay the ~seconds
+        // of empirical peak measurement per request; callers that need
+        // the warm peak ask [`Self::peak`] explicitly (memoized).
+        let result =
+            run_strategy(strategy.as_ref(), backend, problem, 1.0, mask, req.budget, &opts)?;
+        let lowered = crate::backend::schedule::lower(&result.best);
+        let dispatch = crate::backend::executor::plan(lowered).dispatch().to_string();
+        Ok(TuneResponse {
+            problem: problem.id(),
+            kind: problem.kind().to_string(),
+            strategy: result.strategy.clone(),
+            backend: backend.name().to_string(),
+            seed,
+            schedule: crate::ir::transform::schedule_signature(&result.best),
+            nest: result.best.to_string(),
+            nest_hash: format!("{:016x}", nest_hash(&result.best)),
+            dispatch,
+            gflops_initial: result.initial_gflops,
+            gflops: result.best_gflops,
+            speedup: result.speedup(),
+            evals: result.evals,
+            cache_hits: result.cache_hits,
+            tune_secs: result.elapsed,
+            wall_secs: t0.elapsed().as_secs_f64(),
+            trace: result.trace,
+            actions: result.actions,
+            note: result.note,
+        })
+    }
+
+    /// Serve a batch concurrently across `cfg.threads` workers (same
+    /// scoped-pool driver as `tune-many`). Responses come back in request
+    /// order; a request that fails validation or strategy setup yields
+    /// its own `Err` without sinking the batch.
+    pub fn serve_batch(&self, reqs: &[TuneRequest]) -> Vec<Result<TuneResponse>> {
+        let threads = self.cfg.threads.max(1).min(reqs.len().max(1));
+        crate::util::parallel_indexed_map(reqs.len(), threads, |i| self.serve(&reqs[i]))
+    }
+}
+
+/// Stable 64-bit identity of a schedule: hash of (problem, loops),
+/// cursor-independent — the same key the evaluation cache dedups on
+/// (delegates to [`crate::backend::schedule_hash`]).
+pub fn nest_hash(nest: &Nest) -> u64 {
+    crate::backend::schedule_hash(nest)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::search::{Budget, SearchAlgo};
+
+    fn svc() -> TuningService {
+        TuningService::new(ServiceCfg { seed: 7, threads: 2, default_params: None })
+    }
+
+    // The pjrt feature swaps in the real bindings, whose handle types own
+    // foreign pointers; the service's thread-safety contract is asserted
+    // against the offline build (DESIGN.md §9).
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn service_is_send_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<TuningService>();
+    }
+
+    #[test]
+    fn serves_a_search_request() {
+        let req = TuneRequest::new("matmul:64x64x64", "greedy2", Budget::evals(80));
+        let resp = svc().serve(&req).unwrap();
+        assert_eq!(resp.strategy, "greedy2");
+        assert_eq!(resp.kind, "mm");
+        assert_eq!(resp.problem, "mm_64x64x64");
+        assert!(resp.gflops >= resp.gflops_initial);
+        assert!(resp.evals > 0 && resp.evals <= 80 + crate::NUM_ACTIONS as u64);
+        assert!(!resp.schedule.is_empty() && !resp.dispatch.is_empty());
+        assert_eq!(resp.nest_hash.len(), 16);
+        assert!(!resp.trace.is_empty());
+    }
+
+    #[test]
+    fn rejects_invalid_requests() {
+        let s = svc();
+        assert!(s.serve(&TuneRequest::new("garbage", "greedy2", Budget::evals(5))).is_err());
+        assert!(s.serve(&TuneRequest::new("64x64x64", "nope", Budget::evals(5))).is_err());
+        assert!(s
+            .serve(&TuneRequest::new("64x64x64", "greedy2", Budget::unlimited()))
+            .is_err());
+    }
+
+    #[test]
+    fn warm_cache_survives_across_requests() {
+        let s = svc();
+        // Ample budget: the first search explores to its natural end, so
+        // the second identical request is served entirely from the warm
+        // cache (evals = 0) with the identical schedule.
+        let req = TuneRequest::new("matmul:96x96x96", "greedy2", Budget::evals(1_000_000));
+        let a = s.serve(&req).unwrap();
+        let b = s.serve(&req).unwrap();
+        assert_eq!(a.nest_hash, b.nest_hash);
+        assert_eq!(a.gflops, b.gflops);
+        assert!(a.evals > 0);
+        assert_eq!(b.evals, 0, "second request must be all cache hits");
+        assert!(b.cache_hits > 0);
+    }
+
+    #[test]
+    fn derived_seeds_match_the_batch_driver() {
+        let s = svc();
+        let p = Problem::matmul(64, 80, 96);
+        let req = TuneRequest::new("matmul:64x80x96", "random", Budget::evals(10));
+        assert_eq!(s.request_seed(&req, p), problem_seed(7, p));
+        let mut req2 = req.clone();
+        req2.seed = Some(42);
+        assert_eq!(s.request_seed(&req2, p), 42);
+    }
+
+    #[test]
+    fn batch_serving_keeps_request_order() {
+        let s = svc();
+        let reqs: Vec<TuneRequest> = [(64usize, 64usize), (80, 96), (96, 64)]
+            .iter()
+            .map(|&(m, n)| {
+                TuneRequest::new(format!("matmul:{m}x{n}x64"), "greedy1", Budget::evals(40))
+            })
+            .collect();
+        let out = s.serve_batch(&reqs);
+        assert_eq!(out.len(), 3);
+        for (r, req) in out.iter().zip(&reqs) {
+            let resp = r.as_ref().unwrap();
+            let (p, _, _) = req.validate().unwrap();
+            assert_eq!(resp.problem, p.id());
+        }
+    }
+
+    #[test]
+    fn all_search_strategies_serve() {
+        let s = svc();
+        for algo in SearchAlgo::ALL {
+            let req = TuneRequest::new("matmul:64x64x64", algo.name(), Budget::evals(60));
+            let resp = s.serve(&req).unwrap();
+            assert_eq!(resp.strategy, algo.name());
+            assert!(resp.gflops > 0.0, "{}", algo.name());
+        }
+    }
+}

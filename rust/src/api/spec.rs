@@ -1,0 +1,193 @@
+//! Textual problem specs — the one parser every entry point shares.
+//!
+//! A *single-problem* spec is `kind:extents`, e.g. `matmul:64x64x64`,
+//! `conv2d:28x28x3x3`, `bmm:2x64x64x64`; the `_`-separated form produced
+//! by [`Problem::id`] (`mm_64x80x96`) parses too, so ids round-trip. A
+//! bare extent list (`64x64x64` or the legacy `64,64,64` of `--mnk`)
+//! means plain matmul.
+//!
+//! A *problem-set* spec additionally accepts every registered workload
+//! suite name (`bmm`, `conv2d`, ... — see [`crate::eval::workloads`]) and
+//! the paper's matmul dataset as `dataset` / `dataset:train` /
+//! `dataset:test` / `dataset:all`.
+//!
+//! All failures are `Err`s with a message naming the offending piece —
+//! never panics — so malformed requests bounce off the API boundary.
+
+use crate::eval::workloads;
+use crate::ir::Problem;
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Parse a single-problem spec (`kind:e1xe2x...`, `kind_e1xe2x...`, or a
+/// bare matmul extent list).
+///
+/// ```
+/// use looptune::api::spec::parse_problem;
+/// use looptune::Problem;
+///
+/// assert_eq!(parse_problem("matmul:64x96x128").unwrap(), Problem::matmul(64, 96, 128));
+/// assert_eq!(parse_problem("64,96,128").unwrap(), Problem::matmul(64, 96, 128));
+/// assert_eq!(parse_problem("conv2d_28x28x3x3").unwrap(), Problem::conv2d(28, 28, 3, 3));
+/// assert!(parse_problem("matmul:64x64").is_err());
+/// ```
+pub fn parse_problem(spec: &str) -> Result<Problem> {
+    let spec = spec.trim();
+    if spec.is_empty() {
+        bail!("empty problem spec");
+    }
+    let (kind, dims_str) = match spec.split_once([':', '_']) {
+        Some((k, d)) => (k, d),
+        None => ("matmul", spec),
+    };
+    let dims =
+        parse_extents(dims_str).map_err(|e| anyhow!("problem spec {spec:?}: {e}"))?;
+    let arity = |n: usize, names: &str| -> Result<()> {
+        if dims.len() != n {
+            bail!("problem spec {spec:?}: {kind} takes {n} extents ({names}), got {}", dims.len());
+        }
+        Ok(())
+    };
+    Ok(match kind {
+        "matmul" | "mm" => {
+            arity(3, "m x n x k")?;
+            Problem::matmul(dims[0], dims[1], dims[2])
+        }
+        "mmt" => {
+            arity(3, "m x n x k")?;
+            Problem::matmul_transposed(dims[0], dims[1], dims[2])
+        }
+        "mlp" => {
+            arity(3, "m x n x k")?;
+            Problem::mlp(dims[0], dims[1], dims[2])
+        }
+        "bmm" => {
+            arity(4, "b x m x n x k")?;
+            Problem::batched_matmul(dims[0], dims[1], dims[2], dims[3])
+        }
+        "conv1d" => {
+            arity(4, "oh x oc x kw x ic")?;
+            Problem::conv1d(dims[0], dims[1], dims[2], dims[3])
+        }
+        "conv2d" => {
+            arity(4, "oh x ow x kh x kw")?;
+            Problem::conv2d(dims[0], dims[1], dims[2], dims[3])
+        }
+        other => bail!(
+            "problem spec {spec:?}: unknown kind {other:?} \
+             (matmul|mm|mmt|mlp|bmm|conv1d|conv2d)"
+        ),
+    })
+}
+
+/// Parse a problem-*set* spec: a workload suite name, a dataset split, or
+/// a single-problem spec. Returns the problems plus the label batch
+/// reports carry as their suite tag.
+pub fn parse_problems(spec: &str) -> Result<(Vec<Problem>, String)> {
+    let spec = spec.trim();
+    if let Some(s) = workloads::suite(spec) {
+        return Ok((s.problems, s.name.to_string()));
+    }
+    if spec == "dataset" || spec.starts_with("dataset:") {
+        let split = spec.strip_prefix("dataset:").unwrap_or("test");
+        let ds = crate::dataset::canonical();
+        let problems = match split {
+            "all" => crate::dataset::all_problems(),
+            "train" => ds.train,
+            "test" => ds.test,
+            other => bail!("unknown dataset split {other:?} (all|train|test)"),
+        };
+        return Ok((problems, "dataset".to_string()));
+    }
+    let p = parse_problem(spec).map_err(|e| {
+        anyhow!(
+            "spec {spec:?} is neither a workload suite ({}), a dataset split, \
+             nor a single problem: {e}",
+            workloads::SUITE_NAMES.join("|")
+        )
+    })?;
+    Ok((vec![p], "custom".to_string()))
+}
+
+fn parse_extents(s: &str) -> Result<Vec<usize>> {
+    let mut out = Vec::new();
+    for part in s.split(['x', 'X', ',']) {
+        let part = part.trim();
+        let n: usize = part
+            .parse()
+            .with_context(|| format!("bad extent {part:?} (want a positive integer)"))?;
+        if n == 0 {
+            bail!("extent 0 is not a valid dimension size");
+        }
+        out.push(n);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_problem_forms() {
+        assert_eq!(parse_problem("matmul:64x96x128").unwrap(), Problem::matmul(64, 96, 128));
+        assert_eq!(parse_problem("mm:64x96x128").unwrap(), Problem::matmul(64, 96, 128));
+        assert_eq!(parse_problem("64x96x128").unwrap(), Problem::matmul(64, 96, 128));
+        assert_eq!(parse_problem(" 64, 96, 128 ").unwrap(), Problem::matmul(64, 96, 128));
+        assert_eq!(parse_problem("mmt:64x64x64").unwrap(), Problem::matmul_transposed(64, 64, 64));
+        assert_eq!(parse_problem("mlp:32x256x256").unwrap(), Problem::mlp(32, 256, 256));
+        let bmm = parse_problem("bmm:2x64x64x64").unwrap();
+        assert_eq!(bmm, Problem::batched_matmul(2, 64, 64, 64));
+        assert_eq!(parse_problem("conv1d:64x16x3x8").unwrap(), Problem::conv1d(64, 16, 3, 8));
+        assert_eq!(parse_problem("conv2d:28x28x3x3").unwrap(), Problem::conv2d(28, 28, 3, 3));
+    }
+
+    #[test]
+    fn problem_ids_round_trip() {
+        let samples = [
+            Problem::matmul(64, 80, 96),
+            Problem::matmul_transposed(64, 128, 256),
+            Problem::mlp(32, 512, 512),
+            Problem::batched_matmul(4, 128, 128, 128),
+            Problem::conv1d(128, 32, 5, 16),
+            Problem::conv2d(56, 56, 3, 3),
+        ];
+        for p in samples {
+            assert_eq!(parse_problem(&p.id()).unwrap(), p, "{}", p.id());
+        }
+    }
+
+    #[test]
+    fn malformed_specs_error_not_panic() {
+        for bad in [
+            "",
+            "matmul:64x64",
+            "matmul:64x64x64x64",
+            "matmul:0x2x3",
+            "matmul:axbxc",
+            "nope:1x2x3",
+            "bmm:1x2x3",
+            "conv2d:28x28x3",
+            "matmul:",
+            ":64x64x64",
+        ] {
+            assert!(parse_problem(bad).is_err(), "{bad:?} should be rejected");
+        }
+    }
+
+    #[test]
+    fn problem_set_specs() {
+        for name in workloads::SUITE_NAMES {
+            let (ps, label) = parse_problems(name).unwrap();
+            assert_eq!(label, name);
+            assert_eq!(ps.len(), workloads::suite(name).unwrap().problems.len());
+        }
+        let (ps, label) = parse_problems("dataset:test").unwrap();
+        assert_eq!(label, "dataset");
+        assert!(!ps.is_empty());
+        let (one, label) = parse_problems("conv2d:28x28x3x3").unwrap();
+        assert_eq!(label, "custom");
+        assert_eq!(one, vec![Problem::conv2d(28, 28, 3, 3)]);
+        assert!(parse_problems("dataset:nope").is_err());
+        assert!(parse_problems("garbage").is_err());
+    }
+}

@@ -64,6 +64,16 @@ pub struct Machine {
     pub call_overhead: f64,
 }
 
+impl Machine {
+    /// The model's compute roofline in GFLOPS (2 flops per FMA lane per
+    /// cycle) — the cost-model analogue of the measured empirical peak,
+    /// used for reward normalization (`eval::experiments::peak_for`, the
+    /// tuning service's `peak`).
+    pub fn roofline_gflops(&self) -> f64 {
+        2.0 * self.vec_lanes * self.freq_ghz
+    }
+}
+
 impl Default for Machine {
     fn default() -> Self {
         Machine {

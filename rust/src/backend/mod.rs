@@ -70,6 +70,14 @@ struct CacheKey {
     loops: Vec<crate::ir::Loop>,
 }
 
+/// Stable 64-bit identity of a schedule: hash of (problem, loops),
+/// cursor-independent — exactly the key the evaluation caches dedup on.
+/// The service API reports it as `nest_hash` so out-of-process callers
+/// can compare schedules without parsing rendered nests.
+pub fn schedule_hash(nest: &Nest) -> u64 {
+    CacheKey::hash_of(nest)
+}
+
 impl CacheKey {
     fn of(nest: &Nest) -> CacheKey {
         CacheKey { problem: nest.problem, loops: nest.loops.clone() }

@@ -44,15 +44,64 @@ pub trait Baseline {
     fn run(&mut self, problem: Problem, backend: &SharedBackend) -> BaselineResult;
 }
 
+/// The simulated comparators by name — the single source of truth for
+/// simulator construction (seeding, trial counts). The service API
+/// (`crate::api`) re-exports this and implements its `Strategy` trait on
+/// it, so every baseline is also servable through one `TuneRequest`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[allow(missing_docs)]
+pub enum BaselineKind {
+    Numpy,
+    TvmBase,
+    TvmOpt,
+    AutoTvm,
+    MetaSchedule,
+}
+
+impl BaselineKind {
+    /// All simulated baselines, in report order.
+    pub const ALL: [BaselineKind; 5] = [
+        BaselineKind::Numpy,
+        BaselineKind::TvmBase,
+        BaselineKind::TvmOpt,
+        BaselineKind::AutoTvm,
+        BaselineKind::MetaSchedule,
+    ];
+
+    /// Report name (matches each simulator's `Baseline::name`).
+    pub fn name(self) -> &'static str {
+        match self {
+            BaselineKind::Numpy => "numpy",
+            BaselineKind::TvmBase => "tvm_base",
+            BaselineKind::TvmOpt => "tvm_opt",
+            BaselineKind::AutoTvm => "autotvm",
+            BaselineKind::MetaSchedule => "metaschedule",
+        }
+    }
+
+    /// Inverse of [`Self::name`].
+    pub fn from_name(s: &str) -> Option<BaselineKind> {
+        Self::ALL.iter().copied().find(|b| b.name() == s)
+    }
+
+    /// Fresh simulator instance at `seed` (64 measured trials for the
+    /// search-based simulators, matching the paper's AutoTVM budget).
+    pub fn simulator(self, seed: u64) -> Box<dyn Baseline> {
+        match self {
+            BaselineKind::Numpy => Box::new(numpy_sim::NumpyOracle::new(seed)),
+            BaselineKind::TvmBase => Box::new(tvm_sim::TvmBase),
+            BaselineKind::TvmOpt => Box::new(tvm_sim::TvmOpt),
+            BaselineKind::AutoTvm => Box::new(autotvm_sim::AutoTvm::new(64, seed)),
+            BaselineKind::MetaSchedule => {
+                Box::new(metaschedule_sim::MetaSchedule::new(64, seed))
+            }
+        }
+    }
+}
+
 /// All Fig.-11 comparators, in report order.
 pub fn all_baselines(seed: u64) -> Vec<Box<dyn Baseline>> {
-    vec![
-        Box::new(numpy_sim::NumpyOracle::new(seed)),
-        Box::new(tvm_sim::TvmBase),
-        Box::new(tvm_sim::TvmOpt),
-        Box::new(autotvm_sim::AutoTvm::new(64, seed)),
-        Box::new(metaschedule_sim::MetaSchedule::new(64, seed)),
-    ]
+    BaselineKind::ALL.iter().map(|k| k.simulator(seed)).collect()
 }
 
 #[cfg(test)]

@@ -84,6 +84,26 @@ impl Env {
         }
     }
 
+    /// Environment at the untiled initial schedule of `problem`, *without*
+    /// scoring it: `gflops`/`initial_gflops` start at 0.0 and are filled
+    /// in by the first `reset`. The tuning service hands strategies their
+    /// environment through this constructor so a strategy's own evaluation
+    /// accounting (budgets, eval counts) is exactly what a cold standalone
+    /// run performs — an eager initial eval here would pre-warm the cache
+    /// and shift every count by one. RL training loops, which do need a
+    /// scored starting state, use [`Env::new`] / [`Env::reset`] instead.
+    pub fn deferred(problem: Problem, backend: SharedBackend, peak: f64) -> Self {
+        Env {
+            nest: Nest::initial(problem),
+            backend,
+            peak,
+            gflops: 0.0,
+            steps: 0,
+            initial_gflops: 0.0,
+            mask: crate::featurize::FeatureMask::default(),
+        }
+    }
+
     /// Reset to the untiled nest of `problem`. Returns the state vector.
     pub fn reset(&mut self, problem: Problem) -> Vec<f32> {
         self.nest = Nest::initial(problem);

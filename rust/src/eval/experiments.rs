@@ -1,9 +1,11 @@
 //! One driver per paper table/figure. See DESIGN.md §5 for the index.
 
 use super::{write_out, EvalCfg};
+use crate::api::{self, BaselineKind, PolicyRollout, TuneOpts};
 use crate::backend::peak;
 use crate::baselines::{self, xla_compile, Baseline};
 use crate::dataset;
+use crate::featurize::FeatureMask;
 use crate::ir::Problem;
 use crate::rl::{self, params::ParamSet};
 use crate::runtime::Runtime;
@@ -12,29 +14,23 @@ use crate::util::stats;
 use anyhow::Result;
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
-use std::rc::Rc;
+use std::sync::Arc;
 
 /// Peak GFLOPS for reward normalization, per backend kind.
 pub fn peak_for(cfg: &EvalCfg) -> f64 {
     if cfg.measured {
         peak::peak_gflops()
     } else {
-        // The cost model's compute roofline: 2 flops x vec lanes x freq.
-        let m = crate::backend::cost_model::Machine::default();
-        2.0 * m.vec_lanes * m.freq_ghz
+        crate::backend::cost_model::Machine::default().roofline_gflops()
     }
 }
 
 /// Load trained policy params, or fall back to a fresh init (headline
 /// numbers then reflect the untrained policy; the summary says which).
+/// Delegates to [`ParamSet::load_or_init`] — the same rule the tuning
+/// service applies per request.
 pub fn load_policy(rt: &Runtime, cfg: &EvalCfg) -> Result<(ParamSet, bool)> {
-    if let Some(p) = &cfg.params_path {
-        if p.exists() {
-            return Ok((ParamSet::load(p)?, true));
-        }
-        eprintln!("warning: params {p:?} not found; using untrained policy");
-    }
-    Ok((ParamSet::init(rt, "q_init", cfg.seed as i32)?, false))
+    ParamSet::load_or_init(rt, cfg.params_path.as_deref(), cfg.seed as i32)
 }
 
 // ---------------------------------------------------------------------------
@@ -116,7 +112,7 @@ pub fn table1(rt: &Runtime, cfg: &EvalCfg) -> Result<String> {
 // Fig. 7 — RL algorithm comparison (episode_reward_mean training curves)
 // ---------------------------------------------------------------------------
 
-pub fn fig7(rt: Rc<Runtime>, cfg: &EvalCfg, iters: usize) -> Result<String> {
+pub fn fig7(rt: Arc<Runtime>, cfg: &EvalCfg, iters: usize) -> Result<String> {
     // Training always rewards via the cost model (fast, deterministic);
     // DESIGN.md §4 records the substitution.
     let train_cfg = EvalCfg { measured: false, ..cfg.clone() };
@@ -206,13 +202,13 @@ pub struct MethodRun {
 /// `budget_secs` wall-clock each (the paper gives them 60 s; policy
 /// inference needs none).
 ///
-/// The classical searches go through the [`batch`] driver: one shared
-/// cache handle per algorithm, problems fanned across `cfg.threads`
-/// workers. Budgets stay comparable because each search accounts its
-/// evaluations locally and cache keys are problem-scoped. Policy tuning
-/// stays serial — the PJRT runtime is single-threaded by design.
+/// Every method goes through the single [`api::Strategy`] code path: the
+/// classical searches via the [`batch`] driver (one shared cache handle
+/// per algorithm, problems fanned across `cfg.threads` workers), the
+/// policy as an [`api::PolicyRollout`] run serially (measured timings
+/// must not contend).
 pub fn run_comparison(
-    rt: &Runtime,
+    rt: &Arc<Runtime>,
     cfg: &EvalCfg,
     problems: &[Problem],
     budget_secs: f64,
@@ -221,6 +217,7 @@ pub fn run_comparison(
     if !trained {
         eprintln!("note: comparison uses an UNTRAINED policy");
     }
+    let policy = PolicyRollout { runtime: rt.clone(), params: Arc::new(params), trained };
     let mut rows = Vec::new();
     // Measured GFLOPS are wall-clock timings: running several on one
     // machine at once depresses and noises every number, so the measured
@@ -249,15 +246,24 @@ pub fn run_comparison(
             });
         }
     }
+    let opts = TuneOpts { depth: 10, seed: cfg.seed, expand_threads: 1 };
     for (i, &p) in problems.iter().enumerate() {
         eprintln!("[fig8/9] looptune policy {}/{} {p}", i + 1, problems.len());
         let be = cfg.backend();
-        let out = rl::tune(rt, &params, p, 10, &be)?;
+        let out = api::run_strategy(
+            &policy,
+            &be,
+            p,
+            1.0,
+            FeatureMask::default(),
+            Budget::unlimited(),
+            &opts,
+        )?;
         rows.push(MethodRun {
             method: "looptune".into(),
             problem: p,
-            gflops: out.gflops,
-            secs: out.infer_secs,
+            gflops: out.best_gflops,
+            secs: out.elapsed,
             speedup_vs_initial: out.speedup(),
         });
     }
@@ -292,7 +298,7 @@ fn summarize_methods(rows: &[MethodRun]) -> String {
     md
 }
 
-pub fn fig8(rt: &Runtime, cfg: &EvalCfg, budget_secs: f64) -> Result<String> {
+pub fn fig8(rt: &Arc<Runtime>, cfg: &EvalCfg, budget_secs: f64) -> Result<String> {
     let ds = dataset::canonical();
     let n = cfg.scaled(25);
     let problems = dataset::sample_test(&ds, n, cfg.seed);
@@ -306,7 +312,7 @@ pub fn fig8(rt: &Runtime, cfg: &EvalCfg, budget_secs: f64) -> Result<String> {
     Ok(md)
 }
 
-pub fn fig9(rt: &Runtime, cfg: &EvalCfg, budget_secs: f64, n: usize) -> Result<String> {
+pub fn fig9(rt: &Arc<Runtime>, cfg: &EvalCfg, budget_secs: f64, n: usize) -> Result<String> {
     let ds = dataset::canonical();
     let n = cfg.scaled(n);
     let problems: Vec<Problem> = ds.test.iter().take(n).copied().collect();
@@ -345,9 +351,18 @@ pub fn fig9(rt: &Runtime, cfg: &EvalCfg, budget_secs: f64, n: usize) -> Result<S
 pub fn fig10(cfg: &EvalCfg, problem: Problem, budget_secs: f64) -> Result<String> {
     let mut csv = String::from("algo,elapsed_s,evals,depth,best_gflops\n");
     let mut md = format!("# Fig. 10 analogue: search traces on {problem}\n\n");
+    let opts = TuneOpts { depth: 10, seed: cfg.seed, expand_threads: 1 };
     for algo in SearchAlgo::ALL {
         let be = cfg.backend();
-        let r = algo.run(problem, be, Budget::seconds(budget_secs), 10, cfg.seed);
+        let r = api::run_strategy(
+            &algo,
+            &be,
+            problem,
+            1.0,
+            FeatureMask::default(),
+            Budget::seconds(budget_secs),
+            &opts,
+        )?;
         for t in &r.trace {
             let _ = writeln!(
                 csv,
@@ -378,7 +393,7 @@ pub fn fig10(cfg: &EvalCfg, problem: Problem, budget_secs: f64) -> Result<String
 // Fig. 11 — compile/tune time + execution performance profiles
 // ---------------------------------------------------------------------------
 
-pub fn fig11(rt: &Runtime, cfg: &EvalCfg, n: usize) -> Result<String> {
+pub fn fig11(rt: &Arc<Runtime>, cfg: &EvalCfg, n: usize) -> Result<String> {
     let ds = dataset::canonical();
     let n = cfg.scaled(n);
     let problems: Vec<Problem> = ds.test.iter().take(n).copied().collect();
@@ -386,25 +401,44 @@ pub fn fig11(rt: &Runtime, cfg: &EvalCfg, n: usize) -> Result<String> {
     if !trained {
         eprintln!("note: fig11 uses an UNTRAINED policy");
     }
+    let policy = PolicyRollout { runtime: rt.clone(), params: Arc::new(params), trained };
 
     let be = cfg.backend(); // shared cache across methods: fair, faster
     let mut scores: BTreeMap<String, Vec<f64>> = BTreeMap::new();
     let mut times: BTreeMap<String, Vec<f64>> = BTreeMap::new();
     let mut csv = String::from("problem,method,gflops,tune_secs\n");
 
-    let mut bls = baselines::all_baselines(cfg.seed);
+    // Every comparator — the five simulated baselines and the policy —
+    // runs through the single `api::Strategy` code path.
+    let opts = TuneOpts { depth: 10, seed: cfg.seed, expand_threads: 1 };
     for (i, &p) in problems.iter().enumerate() {
         eprintln!("[fig11] bench {}/{} {p}", i + 1, problems.len());
-        for b in bls.iter_mut() {
-            let r = b.run(p, &be);
-            scores.entry(r.name.clone()).or_default().push(r.gflops);
-            times.entry(r.name.clone()).or_default().push(r.tune_secs);
-            let _ = writeln!(csv, "{p},{},{:.4},{:.4}", r.name, r.gflops, r.tune_secs);
+        for kind in BaselineKind::ALL {
+            let r = api::run_strategy(
+                &kind,
+                &be,
+                p,
+                1.0,
+                FeatureMask::default(),
+                Budget::unlimited(),
+                &opts,
+            )?;
+            scores.entry(r.strategy.clone()).or_default().push(r.best_gflops);
+            times.entry(r.strategy.clone()).or_default().push(r.elapsed);
+            let _ = writeln!(csv, "{p},{},{:.4},{:.4}", r.strategy, r.best_gflops, r.elapsed);
         }
-        let out = rl::tune(rt, &params, p, 10, &be)?;
-        scores.entry("looptune".into()).or_default().push(out.gflops);
-        times.entry("looptune".into()).or_default().push(out.infer_secs);
-        let _ = writeln!(csv, "{p},looptune,{:.4},{:.4}", out.gflops, out.infer_secs);
+        let out = api::run_strategy(
+            &policy,
+            &be,
+            p,
+            1.0,
+            FeatureMask::default(),
+            Budget::unlimited(),
+            &opts,
+        )?;
+        scores.entry("looptune".into()).or_default().push(out.best_gflops);
+        times.entry("looptune".into()).or_default().push(out.elapsed);
+        let _ = writeln!(csv, "{p},looptune,{:.4},{:.4}", out.best_gflops, out.elapsed);
     }
     write_out(&cfg.out_dir, "fig11.csv", &csv)?;
 
@@ -438,7 +472,7 @@ pub fn fig11(rt: &Runtime, cfg: &EvalCfg, n: usize) -> Result<String> {
 // Headline numbers (abstract / conclusion claims)
 // ---------------------------------------------------------------------------
 
-pub fn headline(rt: &Runtime, cfg: &EvalCfg, budget_secs: f64, n: usize) -> Result<String> {
+pub fn headline(rt: &Arc<Runtime>, cfg: &EvalCfg, budget_secs: f64, n: usize) -> Result<String> {
     let ds = dataset::canonical();
     let n = cfg.scaled(n);
     let problems: Vec<Problem> = dataset::sample_test(&ds, n, cfg.seed ^ 0xbead);
@@ -503,7 +537,7 @@ pub fn headline(rt: &Runtime, cfg: &EvalCfg, budget_secs: f64, n: usize) -> Resu
 /// unnormalized rewards), comparing final episode_reward_mean. Tests the
 /// paper's §III-C "minimal set of features" claim and the §III-B reward
 /// normalization choice.
-pub fn ablation(rt: Rc<Runtime>, cfg: &EvalCfg, iters: usize) -> Result<String> {
+pub fn ablation(rt: Arc<Runtime>, cfg: &EvalCfg, iters: usize) -> Result<String> {
     use crate::featurize::FeatureMask;
     let train_cfg = EvalCfg { measured: false, ..cfg.clone() };
     let pk = peak_for(&train_cfg);
@@ -560,7 +594,7 @@ pub fn ablation(rt: Rc<Runtime>, cfg: &EvalCfg, iters: usize) -> Result<String> 
 /// the paper reports its best trained policy, and so do we (documented in
 /// EXPERIMENTS.md).
 pub fn train_selected(
-    rt: Rc<Runtime>,
+    rt: Arc<Runtime>,
     cfg: &EvalCfg,
     iters: usize,
     n_seeds: u64,

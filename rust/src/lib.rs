@@ -25,9 +25,18 @@
 //! threads, and [`search::batch`] (the `tune-many` subcommand) fans whole
 //! problem sets across a scoped thread pool. See DESIGN.md §6 and
 //! README.md for the architecture and reproduction commands.
+//!
+//! The crate's front door is [`api`] (DESIGN.md §9): every tuner — policy
+//! rollout, classical search, simulated baseline — implements the one
+//! [`api::Strategy`] trait, typed [`api::TuneRequest`] /
+//! [`api::TuneResponse`] messages (JSON-codable) describe jobs, and
+//! [`api::TuningService`] serves them over warm cross-request state (the
+//! shared backend pool, loaded policies, the measured peak). The CLI
+//! subcommands are thin adapters over it.
 
 #![warn(missing_docs)]
 
+pub mod api;
 pub mod backend;
 pub mod baselines;
 pub mod config;

@@ -3,14 +3,17 @@
 //! Subcommands:
 //!   peak                          measure empirical peak GFLOPS
 //!   dataset                       dataset statistics (2197 problems, split)
-//!   render    --mnk M,N,K         print the IR of the initial nest
+//!   render    --spec S            print the IR of the initial nest
 //!   train     --algo A --iters N  train a policy (saves .ltps params)
-//!   tune      --mnk M,N,K         tune one problem with a trained policy
-//!   search    --algo A --mnk ...  run one classical search
+//!   tune      --spec S            tune one problem with a trained policy
+//!   search    --algo A --spec S   run one classical search
 //!   tune-many --algo A ...        batch-tune a whole problem set across
 //!                                 worker threads; writes a JSON report.
 //!                                 --suite bmm|conv1d|conv2d|mlp|... runs a
 //!                                 workload suite from the registry
+//!   serve     [--once] [--file F] serve JSON tune requests: one
+//!                                 `tune_request/v1` document (--once) or
+//!                                 one per line, responses to stdout
 //!   workloads                     list the registered workload suites
 //!   bench     [--smoke]           time the backend substrate (executor
 //!                                 GFLOPS per family, cost-model and
@@ -19,20 +22,28 @@
 //!   eval      <experiment>        regenerate a paper table/figure
 //!   artifacts                     check the AOT artifacts load
 //!
+//! Every tuning subcommand is a thin adapter over the service API
+//! (`looptune::api`): it builds a `TuneRequest`, hands it to the
+//! `TuningService`, and prints the `TuneResponse` — strategy dispatch,
+//! problem parsing, and backend setup all live behind that one door.
+//! Problem specs are textual (`matmul:64x64x64`, `conv2d:28x28x3x3`;
+//! `--mnk M,N,K` still works as a matmul shorthand).
+//!
 //! Global flags: --config FILE (TOML subset, see config.rs), --out DIR,
 //! --params FILE, --seed N, --threads N, --cost-model (use the analytical
 //! model instead of measured execution), --quick (scale budgets ~10x down).
 
 use anyhow::{anyhow, bail, Result};
+use looptune::api::{spec, BackendChoice, ServiceCfg, TuneRequest, TuneResponse, TuningService};
 use looptune::backend::peak;
 use looptune::config::Config;
 use looptune::eval::{experiments, workloads, EvalCfg};
-use looptune::ir::{Nest, Problem};
-use looptune::rl::{self, params::ParamSet};
+use looptune::ir::Nest;
+use looptune::rl;
 use looptune::runtime::Runtime;
 use looptune::search::{batch, Budget, SearchAlgo};
 use looptune::{dataset, FEATS, STATE_DIM};
-use std::rc::Rc;
+use std::sync::Arc;
 
 struct Args {
     cmd: String,
@@ -49,7 +60,7 @@ fn parse_args() -> Args {
         if let Some(name) = a.strip_prefix("--") {
             // boolean flags have no value; value flags consume the next arg
             match name {
-                "quick" | "cost-model" | "measured" | "untrained" | "smoke" => {
+                "quick" | "cost-model" | "measured" | "untrained" | "smoke" | "once" => {
                     flags.insert(name.to_string(), "true".into());
                 }
                 _ => {
@@ -64,16 +75,36 @@ fn parse_args() -> Args {
     Args { cmd, pos, flags }
 }
 
-fn parse_mnk(s: &str) -> Result<Problem> {
-    let parts: Vec<usize> = s
-        .split(',')
-        .map(|x| x.trim().parse::<usize>())
-        .collect::<std::result::Result<_, _>>()
-        .map_err(|e| anyhow!("bad --mnk {s:?}: {e}"))?;
-    if parts.len() != 3 {
-        bail!("--mnk expects M,N,K");
+/// The problem spec a subcommand was given: `--spec` (any form the spec
+/// parser accepts) or the legacy `--mnk M,N,K` matmul shorthand.
+fn problem_spec(args: &Args, default: &str) -> String {
+    args.flags
+        .get("spec")
+        .or_else(|| args.flags.get("mnk"))
+        .cloned()
+        .unwrap_or_else(|| default.to_string())
+}
+
+fn print_response(resp: &TuneResponse) {
+    println!(
+        "{}: {:.2} -> {:.2} GFLOPS ({:.2}x) in {:.3}s, {} evals ({} cache hits){}",
+        resp.problem,
+        resp.gflops_initial,
+        resp.gflops,
+        resp.speedup,
+        resp.tune_secs,
+        resp.evals,
+        resp.cache_hits,
+        match &resp.note {
+            Some(n) => format!(", {}", n.to_uppercase()),
+            None => String::new(),
+        },
+    );
+    if !resp.actions.is_empty() {
+        println!("actions: {}", resp.actions.join(" "));
     }
-    Ok(Problem::new(parts[0], parts[1], parts[2]))
+    println!("schedule: {}  (dispatch {})", resp.schedule, resp.dispatch);
+    print!("{}", resp.nest);
 }
 
 fn main() -> Result<()> {
@@ -126,10 +157,19 @@ fn main() -> Result<()> {
         out_dir: out_dir.clone(),
         measured,
         scale: if quick { 0.2 } else { 1.0 },
-        params_path,
+        params_path: params_path.clone(),
         seed,
         threads,
     };
+
+    // One warm service per process: backend pool, loaded policies, peak.
+    let backend_choice =
+        if measured { BackendChoice::Measured } else { BackendChoice::CostModel };
+    let service = TuningService::new(ServiceCfg {
+        seed,
+        threads,
+        default_params: params_path,
+    });
 
     match args.cmd.as_str() {
         "peak" => {
@@ -156,7 +196,7 @@ fn main() -> Result<()> {
             }
         }
         "render" => {
-            let p = parse_mnk(args.flags.get("mnk").map(String::as_str).unwrap_or("64,96,128"))?;
+            let p = spec::parse_problem(&problem_spec(&args, "64,96,128"))?;
             print!("{}", Nest::initial(p));
         }
         "artifacts" => {
@@ -173,7 +213,7 @@ fn main() -> Result<()> {
             }
         }
         "train" => {
-            let rt = Rc::new(Runtime::load_default()?);
+            let rt = Arc::new(Runtime::load_default()?);
             let algo = args
                 .flags
                 .get("algo")
@@ -258,35 +298,19 @@ fn main() -> Result<()> {
             );
         }
         "tune" => {
-            let rt = Runtime::load_default()?;
-            let p = parse_mnk(
-                args.flags.get("mnk").map(String::as_str).unwrap_or("128,128,128"),
-            )?;
-            let (params, trained) = if args.flags.contains_key("untrained") {
-                (ParamSet::init(&rt, "q_init", seed as i32)?, false)
-            } else {
-                experiments::load_policy(&rt, &ecfg)?
-            };
-            let be = ecfg.backend();
-            let out = rl::tune(&rt, &params, p, 10, &be)?;
-            println!(
-                "{p}: {:.2} -> {:.2} GFLOPS ({:.2}x) in {:.3}s ({} actions{}{})",
-                out.initial_gflops,
-                out.gflops,
-                out.speedup(),
-                out.infer_secs,
-                out.actions.len(),
-                if out.stopped_early { ", early stop" } else { "" },
-                if trained { "" } else { ", UNTRAINED policy" },
+            let mut req = TuneRequest::new(
+                problem_spec(&args, "128,128,128"),
+                "policy",
+                Budget::unlimited(),
             );
-            let names: Vec<String> = out.actions.iter().map(|a| a.name()).collect();
-            println!("actions: {}", names.join(" "));
-            print!("{}", out.nest);
+            req.seed = Some(seed);
+            req.backend = backend_choice;
+            req.untrained = args.flags.contains_key("untrained");
+            let resp = service.serve(&req)?;
+            print_response(&resp);
         }
         "search" => {
-            let p = parse_mnk(
-                args.flags.get("mnk").map(String::as_str).unwrap_or("128,128,128"),
-            )?;
+            let spec = problem_spec(&args, "128,128,128");
             let budget = args
                 .flags
                 .get("budget")
@@ -303,22 +327,19 @@ fn main() -> Result<()> {
                 .and_then(|s| s.parse().ok())
                 .unwrap_or(1);
             for algo in algos {
+                let mut req =
+                    TuneRequest::new(spec.clone(), algo.name(), Budget::seconds(budget));
+                req.seed = Some(seed);
+                req.backend = backend_choice;
+                req.expand_threads = expand_threads;
+                // Fresh eval cache per algorithm (matching the historical
+                // behavior of `search --algo all`: algorithms must not
+                // inherit each other's warm cache or the comparison skews).
                 let be = ecfg.backend();
-                let r = algo.run_threaded(
-                    p,
-                    be,
-                    Budget::seconds(budget),
-                    10,
-                    seed,
-                    expand_threads,
-                );
+                let r = service.serve_on(&be, &req)?;
                 println!(
                     "{:<10} best {:.2} GFLOPS ({:.2}x) evals {} time {:.2}s",
-                    algo.name(),
-                    r.best_gflops,
-                    r.speedup(),
-                    r.evals,
-                    r.elapsed
+                    r.strategy, r.gflops, r.speedup, r.evals, r.tune_secs
                 );
             }
         }
@@ -328,29 +349,18 @@ fn main() -> Result<()> {
             // --suite NAME picks a workload suite from the registry
             // (bmm, conv1d, conv2d, mlp, ...); otherwise --split selects
             // from the paper's matmul dataset.
-            let (problems, suite): (Vec<Problem>, &'static str) =
-                if let Some(name) = args.flags.get("suite") {
-                    if args.flags.contains_key("split") {
-                        bail!("--suite and --split are mutually exclusive");
-                    }
-                    let s = workloads::suite(name).ok_or_else(|| {
-                        anyhow!(
-                            "unknown suite {name} (available: {})",
-                            workloads::SUITE_NAMES.join("|")
-                        )
-                    })?;
-                    (s.problems, s.name)
-                } else {
-                    let ds = dataset::canonical();
-                    let ps = match args.flags.get("split").map(String::as_str).unwrap_or("test")
-                    {
-                        "all" => dataset::all_problems(),
-                        "train" => ds.train.clone(),
-                        "test" => ds.test.clone(),
-                        other => bail!("unknown --split {other} (all|train|test)"),
-                    };
-                    (ps, "dataset")
-                };
+            let set_spec = if let Some(name) = args.flags.get("suite") {
+                if args.flags.contains_key("split") {
+                    bail!("--suite and --split are mutually exclusive");
+                }
+                name.clone()
+            } else {
+                format!(
+                    "dataset:{}",
+                    args.flags.get("split").map(String::as_str).unwrap_or("test")
+                )
+            };
+            let (problems, suite) = spec::parse_problems(&set_spec)?;
             let problems = match args.flags.get("limit").and_then(|s| s.parse().ok()) {
                 Some(l) => problems.into_iter().take(l).collect(),
                 None => problems,
@@ -402,8 +412,8 @@ fn main() -> Result<()> {
                     .and_then(|s| s.parse().ok())
                     .unwrap_or(1),
             };
-            let be = ecfg.backend();
-            let report = batch::run(&problems, &be, &bcfg).with_suite(suite);
+            let be = service.backend(backend_choice);
+            let report = batch::run(&problems, &be, &bcfg).with_suite(&suite);
             println!("{}", report.summary());
             std::fs::create_dir_all(&out_dir)?;
             let file = if suite == "dataset" {
@@ -414,6 +424,64 @@ fn main() -> Result<()> {
             let path = out_dir.join(file);
             std::fs::write(&path, report.to_json())?;
             println!("report -> {}", path.display());
+        }
+        "serve" => {
+            // JSON front door: `tune_request/v1` in, `tune_response/v1`
+            // out. --once serves exactly one document (the CI smoke path);
+            // otherwise each non-empty input line is one request and
+            // responses stream back one line each, errors as
+            // {"schema":"tune_response/v1","error":...}. Only JSON goes
+            // to stdout; notes and warnings go to stderr.
+            if args.flags.contains_key("once") {
+                let text = match args.flags.get("file") {
+                    Some(f) => std::fs::read_to_string(f)?,
+                    None => {
+                        use std::io::Read as _;
+                        let mut s = String::new();
+                        std::io::stdin().read_to_string(&mut s)?;
+                        s
+                    }
+                };
+                // Same wire contract as streaming mode: errors are still
+                // a parseable tune_response/v1 document on stdout (plus a
+                // nonzero exit for shell callers).
+                match TuneRequest::from_json(text.trim()).and_then(|req| service.serve(&req)) {
+                    Ok(resp) => println!("{}", resp.to_json()),
+                    Err(e) => {
+                        println!("{}", TuneResponse::error_json(&e));
+                        std::process::exit(1);
+                    }
+                }
+            } else {
+                // Streaming: serve and flush each line as it arrives, so a
+                // client that waits for its response before sending the
+                // next request never deadlocks against buffered input.
+                use std::io::{BufRead as _, Write as _};
+                let serve_line = |line: &str| {
+                    if line.trim().is_empty() {
+                        return;
+                    }
+                    let out = match TuneRequest::from_json(line).and_then(|r| service.serve(&r)) {
+                        Ok(resp) => resp.to_json(),
+                        Err(e) => TuneResponse::error_json(&e),
+                    };
+                    println!("{out}");
+                    let _ = std::io::stdout().flush();
+                };
+                match args.flags.get("file") {
+                    Some(f) => {
+                        for line in std::fs::read_to_string(f)?.lines() {
+                            serve_line(line);
+                        }
+                    }
+                    None => {
+                        let stdin = std::io::stdin();
+                        for line in stdin.lock().lines() {
+                            serve_line(&line?);
+                        }
+                    }
+                }
+            }
         }
         "bench" => {
             // Backend measurement substrate: executor GFLOPS per workload
@@ -469,36 +537,31 @@ fn main() -> Result<()> {
                         experiments::table1(&rt, &ecfg)?
                     }
                     "fig7" => {
-                        let rt = Rc::new(Runtime::load_default()?);
+                        let rt = Arc::new(Runtime::load_default()?);
                         experiments::fig7(rt, &ecfg, iters)?
                     }
                     "fig8" => {
-                        let rt = Runtime::load_default()?;
+                        let rt = Arc::new(Runtime::load_default()?);
                         experiments::fig8(&rt, &ecfg, budget)?
                     }
                     "fig9" => {
-                        let rt = Runtime::load_default()?;
+                        let rt = Arc::new(Runtime::load_default()?);
                         experiments::fig9(&rt, &ecfg, budget, n)?
                     }
                     "fig10" => {
-                        let p = parse_mnk(
-                            args.flags
-                                .get("mnk")
-                                .map(String::as_str)
-                                .unwrap_or("192,192,192"),
-                        )?;
+                        let p = spec::parse_problem(&problem_spec(&args, "192,192,192"))?;
                         experiments::fig10(&ecfg, p, budget)?
                     }
                     "fig11" => {
-                        let rt = Runtime::load_default()?;
+                        let rt = Arc::new(Runtime::load_default()?);
                         experiments::fig11(&rt, &ecfg, n)?
                     }
                     "headline" => {
-                        let rt = Runtime::load_default()?;
+                        let rt = Arc::new(Runtime::load_default()?);
                         experiments::headline(&rt, &ecfg, budget, 25)?
                     }
                     "ablation" => {
-                        let rt = Rc::new(Runtime::load_default()?);
+                        let rt = Arc::new(Runtime::load_default()?);
                         experiments::ablation(rt, &ecfg, iters)?
                     }
                     other => bail!("unknown experiment {other}"),
@@ -522,12 +585,14 @@ fn main() -> Result<()> {
                 "looptune — RL loop-schedule auto-tuner (LoopTune reproduction)\n\n\
                  usage: looptune <cmd> [flags]\n\
                  cmds:  peak | dataset | workloads | render | artifacts | train | tune\n       \
-                 | search | tune-many | bench | eval\n\
-                 flags: --mnk M,N,K --algo NAME --iters N --budget SECS --out DIR\n       \
+                 | search | tune-many | serve | bench | eval\n\
+                 flags: --spec KIND:DIMS (matmul:64x64x64, conv2d:28x28x3x3, ...)\n       \
+                 --mnk M,N,K --algo NAME --iters N --budget SECS --out DIR\n       \
                  --params FILE --config FILE --seed N --quick --cost-model --untrained\n       \
                  --threads N --expand-threads N --budget-evals N --split S --limit N\n       \
                  --suite NAME (tune-many over a workload suite: matmul|mmt|bmm|\n       \
                  conv1d|conv2d|mlp)\n       \
+                 --once --file PATH (serve: one JSON request, from a file)\n       \
                  --smoke --json PATH (bench: tiny CI shapes, output path)"
             );
         }

@@ -19,7 +19,7 @@ use crate::runtime::{xla, Runtime};
 use crate::util::rng::Pcg32;
 use crate::STATE_DIM;
 use anyhow::Result;
-use std::rc::Rc;
+use std::sync::Arc;
 use std::time::Instant;
 
 #[derive(Clone, Debug)]
@@ -96,7 +96,7 @@ pub fn vtrace(
 }
 
 pub struct A2cTrainer {
-    rt: Rc<Runtime>,
+    rt: Arc<Runtime>,
     pub cfg: A2cConfig,
     pub params: ParamSet,
     adam_step: f32,
@@ -111,7 +111,7 @@ pub struct A2cTrainer {
 }
 
 impl A2cTrainer {
-    pub fn new(rt: Rc<Runtime>, cfg: A2cConfig) -> Result<Self> {
+    pub fn new(rt: Arc<Runtime>, cfg: A2cConfig) -> Result<Self> {
         let params = ParamSet::init(&rt, "pv_init", cfg.seed as i32)?;
         let params_lits = params.to_literals()?;
         let behavior_lits = params.to_literals()?;

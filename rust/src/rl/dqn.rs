@@ -23,7 +23,7 @@ use crate::runtime::{xla, Runtime};
 use crate::util::rng::Pcg32;
 use crate::{NUM_ACTIONS, STATE_DIM};
 use anyhow::Result;
-use std::rc::Rc;
+use std::sync::Arc;
 use std::time::Instant;
 
 #[derive(Clone, Debug)]
@@ -95,7 +95,7 @@ enum Replay {
 }
 
 pub struct DqnTrainer {
-    rt: Rc<Runtime>,
+    rt: Arc<Runtime>,
     pub cfg: DqnConfig,
     /// Host copy of the online params (kept in sync for save()/inspection).
     pub params: ParamSet,
@@ -113,7 +113,7 @@ pub struct DqnTrainer {
 }
 
 impl DqnTrainer {
-    pub fn new(rt: Rc<Runtime>, cfg: DqnConfig) -> Result<Self> {
+    pub fn new(rt: Arc<Runtime>, cfg: DqnConfig) -> Result<Self> {
         let params = ParamSet::init(&rt, "q_init", cfg.seed as i32)?;
         let params_lits = params.to_literals()?;
         let target_lits = params.to_literals()?;

@@ -21,7 +21,7 @@ pub mod tune;
 use crate::runtime::literal::HostTensor;
 
 pub use params::ParamSet;
-pub use tune::{tune, TuneOutcome};
+pub use tune::{tune, tune_masked, TuneOutcome};
 
 /// Per-training-iteration statistics (Fig. 7 plots `episode_reward_mean`).
 #[derive(Clone, Debug)]

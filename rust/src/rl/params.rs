@@ -61,6 +61,25 @@ impl ParamSet {
             .sqrt()
     }
 
+    /// The one policy-loading rule every entry point shares (CLI eval
+    /// experiments and the tuning service): load `path` if it names an
+    /// existing file, else fall back to a fresh `q_init` at `seed` —
+    /// returning whether the result is a *trained* checkpoint — warning
+    /// on a named-but-missing path.
+    pub fn load_or_init(
+        rt: &Runtime,
+        path: Option<&Path>,
+        seed: i32,
+    ) -> Result<(ParamSet, bool)> {
+        if let Some(p) = path {
+            if p.exists() {
+                return Ok((ParamSet::load(p)?, true));
+            }
+            eprintln!("warning: params {p:?} not found; using untrained policy");
+        }
+        Ok((ParamSet::init(rt, "q_init", seed)?, false))
+    }
+
     // ---- binary save/load: "LTPS" magic, version, tensor table ----
 
     pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {

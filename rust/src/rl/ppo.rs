@@ -13,7 +13,7 @@ use crate::runtime::{xla, Runtime};
 use crate::util::rng::Pcg32;
 use crate::STATE_DIM;
 use anyhow::Result;
-use std::rc::Rc;
+use std::sync::Arc;
 use std::time::Instant;
 
 #[derive(Clone, Debug)]
@@ -108,7 +108,7 @@ pub fn pv_with_lits(
 }
 
 pub struct PpoTrainer {
-    rt: Rc<Runtime>,
+    rt: Arc<Runtime>,
     pub cfg: PpoConfig,
     pub params: ParamSet,
     adam_step: f32,
@@ -120,7 +120,7 @@ pub struct PpoTrainer {
 }
 
 impl PpoTrainer {
-    pub fn new(rt: Rc<Runtime>, cfg: PpoConfig) -> Result<Self> {
+    pub fn new(rt: Arc<Runtime>, cfg: PpoConfig) -> Result<Self> {
         let params = ParamSet::init(&rt, "pv_init", cfg.seed as i32)?;
         let params_lits = params.to_literals()?;
         let m_lits = params.zeros_like().to_literals()?;

@@ -6,10 +6,16 @@
 //! the paper's implicit stop: "when the agent starts oscillating between
 //! states that differ only by the cursor position" — detected here as a
 //! revisit of an already-seen (schedule, cursor) state.
+//!
+//! The service API drives this through [`crate::api::PolicyRollout`];
+//! [`tune_masked`] additionally zeroes feature groups in the state vector
+//! (the ablation studies' [`FeatureMask`]) — the default mask reproduces
+//! [`tune`] bit for bit.
 
 use super::params::ParamSet;
 use crate::backend::SharedBackend;
 use crate::env::actions::Action;
+use crate::featurize::FeatureMask;
 use crate::ir::{Nest, Problem};
 use crate::runtime::Runtime;
 use std::collections::HashSet;
@@ -26,6 +32,11 @@ pub struct TuneOutcome {
     pub gflops: f64,
     pub initial_gflops: f64,
     pub stopped_early: bool,
+    /// Backend evaluations this tune performed (cache misses: at most the
+    /// initial and final schedule scores).
+    pub evals: u64,
+    /// Scores served from the shared cache instead.
+    pub cache_hits: u64,
 }
 
 impl TuneOutcome {
@@ -43,6 +54,18 @@ pub fn tune(
     steps: usize,
     backend: &SharedBackend,
 ) -> anyhow::Result<TuneOutcome> {
+    tune_masked(rt, params, problem, steps, backend, FeatureMask::default())
+}
+
+/// [`tune`] with ablation feature groups zeroed in every state vector.
+pub fn tune_masked(
+    rt: &Runtime,
+    params: &ParamSet,
+    problem: Problem,
+    steps: usize,
+    backend: &SharedBackend,
+    mask: FeatureMask,
+) -> anyhow::Result<TuneOutcome> {
     let t0 = Instant::now();
     let mut nest = Nest::initial(problem);
     let mut actions = Vec::new();
@@ -51,7 +74,8 @@ pub fn tune(
     let mut stopped_early = false;
 
     for _ in 0..steps {
-        let state = crate::featurize::state_vector(&nest);
+        let mut state = crate::featurize::state_vector(&nest);
+        mask.apply(&mut state);
         let q = super::dqn::q_values_with(rt, params, &state)?;
         // Greedy over valid actions: try best-ranked first.
         let mut order: Vec<usize> = (0..q.len()).collect();
@@ -77,8 +101,8 @@ pub fn tune(
     }
     let infer_secs = t0.elapsed().as_secs_f64();
 
-    let initial_gflops = backend.eval(&Nest::initial(problem));
-    let gflops = backend.eval(&nest);
+    let (initial_gflops, m0) = backend.eval_detail(&Nest::initial(problem));
+    let (gflops, m1) = backend.eval_detail(&nest);
     Ok(TuneOutcome {
         nest,
         actions,
@@ -86,5 +110,7 @@ pub fn tune(
         gflops,
         initial_gflops,
         stopped_early,
+        evals: m0 as u64 + m1 as u64,
+        cache_hits: !m0 as u64 + !m1 as u64,
     })
 }

@@ -24,10 +24,9 @@ pub use ::xla;
 use self::xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
 
 use anyhow::{anyhow, bail, Context, Result};
-use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
-use std::rc::Rc;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::util::json::{self, Json};
@@ -70,7 +69,10 @@ pub struct Runtime {
     dir: PathBuf,
     pub constants: Constants,
     entries: HashMap<String, EntrySpec>,
-    exes: RefCell<HashMap<String, Rc<PjRtLoadedExecutable>>>,
+    /// Lazily compiled executables, behind a mutex so one warm `Runtime`
+    /// can be shared across the tuning service's worker threads (compiles
+    /// serialize; a key is compiled at most once).
+    exes: Mutex<HashMap<String, Arc<PjRtLoadedExecutable>>>,
 }
 
 impl Runtime {
@@ -158,7 +160,7 @@ impl Runtime {
             dir,
             constants,
             entries,
-            exes: RefCell::new(HashMap::new()),
+            exes: Mutex::new(HashMap::new()),
         })
     }
 
@@ -180,8 +182,9 @@ impl Runtime {
         v
     }
 
-    fn executable(&self, name: &str) -> Result<Rc<PjRtLoadedExecutable>> {
-        if let Some(exe) = self.exes.borrow().get(name) {
+    fn executable(&self, name: &str) -> Result<Arc<PjRtLoadedExecutable>> {
+        let mut exes = self.exes.lock().expect("executable cache poisoned");
+        if let Some(exe) = exes.get(name) {
             return Ok(exe.clone());
         }
         let spec = self.entry(name)?;
@@ -191,12 +194,12 @@ impl Runtime {
         )
         .with_context(|| format!("parsing HLO text {path:?}"))?;
         let comp = XlaComputation::from_proto(&proto);
-        let exe = Rc::new(
+        let exe = Arc::new(
             self.client
                 .compile(&comp)
                 .with_context(|| format!("compiling {name}"))?,
         );
-        self.exes.borrow_mut().insert(name.to_string(), exe.clone());
+        exes.insert(name.to_string(), exe.clone());
         Ok(exe)
     }
 

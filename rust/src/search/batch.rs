@@ -5,8 +5,11 @@
 //! against the shared [`SharedBackend`] handle (one process-wide schedule
 //! cache — keys are problem-scoped, so sharing changes no per-problem
 //! result, only the accounting granularity), and reports per-problem and
-//! aggregate statistics. The evaluation experiments (`eval/experiments.rs`)
-//! and the `tune-many` CLI subcommand both drive this module.
+//! aggregate statistics. Each per-problem search goes through the single
+//! [`crate::api::Strategy`] code path (the service's, DESIGN.md §9). The
+//! evaluation experiments (`eval/experiments.rs`) and the `tune-many` CLI
+//! subcommand both drive this module; [`crate::api::TuningService`] fans
+//! heterogeneous request batches out over the same worker-pool driver.
 //!
 //! Determinism: per-problem seeds derive from the batch seed and the
 //! problem dims (not from scheduling order), and each search counts its
@@ -219,14 +222,23 @@ impl BatchReport {
 }
 
 fn tune_one(problem: Problem, backend: &SharedBackend, cfg: &BatchCfg) -> ProblemOutcome {
-    let r = cfg.algo.run_threaded(
+    // All batch tuning flows through the one `api::Strategy` trait — the
+    // same code path the service and the CLI adapters use.
+    let opts = crate::api::TuneOpts {
+        depth: cfg.depth,
+        seed: problem_seed(cfg.seed, problem),
+        expand_threads: cfg.expand_threads,
+    };
+    let r = crate::api::run_strategy(
+        &cfg.algo,
+        backend,
         problem,
-        backend.clone(),
+        1.0, // peak: unused by search strategies (reward normalization only)
+        crate::featurize::FeatureMask::default(),
         cfg.budget,
-        cfg.depth,
-        problem_seed(cfg.seed, problem),
-        cfg.expand_threads,
-    );
+        &opts,
+    )
+    .expect("search strategies are infallible");
     ProblemOutcome {
         problem,
         best_gflops: r.best_gflops,

@@ -20,7 +20,7 @@ use std::collections::HashSet;
 use std::time::{Duration, Instant};
 
 /// Search budget: wall-clock and/or evaluation-count limits.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Budget {
     /// Wall-clock limit, if any.
     pub time: Option<Duration>,
@@ -43,11 +43,24 @@ impl Budget {
     pub fn both(s: f64, n: u64) -> Self {
         Budget { time: Some(Duration::from_secs_f64(s)), max_evals: Some(n) }
     }
+
+    /// No limit at all. Only meaningful for strategies that terminate on
+    /// their own (policy rollout, fixed-trial baselines): the service API
+    /// rejects unlimited budgets on searches at the request boundary
+    /// (`api::TuneRequest::validate`) instead of spinning forever.
+    pub fn unlimited() -> Self {
+        Budget { time: None, max_evals: None }
+    }
+
+    /// Whether neither limit is set.
+    pub fn is_unlimited(&self) -> bool {
+        self.time.is_none() && self.max_evals.is_none()
+    }
 }
 
 /// One point of the Fig.-10 style trace: best GFLOPS known after `evals`
 /// evaluations / `elapsed` seconds, at search-tree depth `depth`.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct TracePoint {
     /// Seconds since the search started.
     pub elapsed: f64,
@@ -72,6 +85,8 @@ pub struct SearchResult {
     pub initial_gflops: f64,
     /// Evaluations consumed (cache misses attributable to this search).
     pub evals: u64,
+    /// Evaluations served from the shared cache during this search.
+    pub cache_hits: u64,
     /// Wall-clock seconds spent.
     pub elapsed: f64,
     /// Fig.-10 style improvement trace.
@@ -107,6 +122,7 @@ pub struct SearchCtx {
     /// Improvement trace.
     pub trace: Vec<TracePoint>,
     evals_local: u64,
+    hits_local: u64,
     threads: usize,
     visited: HashSet<(Vec<Loop>, usize)>,
 }
@@ -135,6 +151,7 @@ impl SearchCtx {
             initial_gflops: g,
             trace: Vec::new(),
             evals_local: miss as u64,
+            hits_local: !miss as u64,
             threads: threads.max(1),
             visited: HashSet::new(),
         };
@@ -145,6 +162,11 @@ impl SearchCtx {
     /// Evaluations consumed by this search (cache misses it caused).
     pub fn evals(&self) -> u64 {
         self.evals_local
+    }
+
+    /// Evaluations this search had served from the shared cache.
+    pub fn cache_hits(&self) -> u64 {
+        self.hits_local
     }
 
     /// Whether any budget limit has fired.
@@ -167,6 +189,8 @@ impl SearchCtx {
         let (g, miss) = self.backend.eval_detail(nest);
         if miss {
             self.evals_local += 1;
+        } else {
+            self.hits_local += 1;
         }
         self.observe(nest, g, depth);
         g
@@ -239,6 +263,8 @@ impl SearchCtx {
         for ((action, next), (g, miss)) in cands.into_iter().zip(scores) {
             if miss {
                 self.evals_local += 1;
+            } else {
+                self.hits_local += 1;
             }
             self.observe(&next, g, depth);
             out.push((action, next, g));
@@ -258,6 +284,7 @@ impl SearchCtx {
     /// Consume the context into a [`SearchResult`].
     pub fn finish(self, algo: &str) -> SearchResult {
         let evals = self.evals();
+        let cache_hits = self.cache_hits();
         let elapsed = self.start.elapsed().as_secs_f64();
         let (best, best_gflops) = self.best.expect("at least initial state");
         SearchResult {
@@ -266,6 +293,7 @@ impl SearchCtx {
             best_gflops,
             initial_gflops: self.initial_gflops,
             evals,
+            cache_hits,
             elapsed,
             trace: self.trace,
         }

@@ -8,14 +8,14 @@ use looptune::backend::SharedBackend;
 use looptune::ir::Problem;
 use looptune::rl::{self, dqn};
 use looptune::runtime::Runtime;
-use std::rc::Rc;
+use std::sync::Arc;
 
-fn runtime() -> Option<Rc<Runtime>> {
+fn runtime() -> Option<Arc<Runtime>> {
     if !Runtime::available("artifacts") {
         eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
         return None;
     }
-    Some(Rc::new(Runtime::load("artifacts").expect("load runtime")))
+    Some(Arc::new(Runtime::load("artifacts").expect("load runtime")))
 }
 
 fn backend() -> SharedBackend {

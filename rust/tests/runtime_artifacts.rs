@@ -11,14 +11,14 @@ use looptune::rl::{self, dqn, ppo};
 use looptune::runtime::literal::{lit_f32, lit_f32_scalar, lit_i32};
 use looptune::runtime::Runtime;
 use looptune::{NUM_ACTIONS, STATE_DIM};
-use std::rc::Rc;
+use std::sync::Arc;
 
-fn runtime() -> Option<Rc<Runtime>> {
+fn runtime() -> Option<Arc<Runtime>> {
     if !Runtime::available("artifacts") {
         eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
         return None;
     }
-    Some(Rc::new(Runtime::load("artifacts").expect("load runtime")))
+    Some(Arc::new(Runtime::load("artifacts").expect("load runtime")))
 }
 
 fn backend() -> SharedBackend {

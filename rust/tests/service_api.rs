@@ -1,0 +1,251 @@
+//! Service-API contract tests: request/response JSON round-trips, the
+//! shared problem-spec parser, budget validation at the API boundary, and
+//! — the redesign's safety net — bit-identical equivalence between the
+//! `TuningService` path and the pre-redesign direct code paths at fixed
+//! seeds (same best-nest hash, same eval count, for every strategy
+//! family).
+
+use looptune::api::service::nest_hash;
+use looptune::api::{
+    spec, BackendChoice, BaselineKind, ServiceCfg, TuneRequest, TuneResponse, TuningService,
+};
+use looptune::backend::cost_model::CostModel;
+use looptune::backend::SharedBackend;
+use looptune::eval::workloads;
+use looptune::ir::Problem;
+use looptune::search::batch::{problem_seed, BatchCfg};
+use looptune::search::{batch, Budget, SearchAlgo};
+
+fn be() -> SharedBackend {
+    SharedBackend::with_factory(CostModel::default)
+}
+
+fn svc(seed: u64) -> TuningService {
+    TuningService::new(ServiceCfg { seed, threads: 2, default_params: None })
+}
+
+fn cost_req(problem: &str, strategy: &str, budget: Budget, seed: u64) -> TuneRequest {
+    let mut req = TuneRequest::new(problem, strategy, budget);
+    req.seed = Some(seed);
+    req.backend = BackendChoice::CostModel;
+    req
+}
+
+// ---------------------------------------------------------------------------
+// Problem-spec parser
+// ---------------------------------------------------------------------------
+
+#[test]
+fn every_registered_suite_name_parses() {
+    for name in workloads::SUITE_NAMES {
+        let (problems, label) = spec::parse_problems(name)
+            .unwrap_or_else(|e| panic!("suite {name} must parse: {e}"));
+        assert_eq!(label, name);
+        assert_eq!(problems, workloads::suite(name).unwrap().problems, "{name}");
+    }
+}
+
+#[test]
+fn malformed_specs_are_errors_not_panics() {
+    for bad in [
+        "", " ", "matmul:", "matmul:64", "matmul:64x64x64x64", "matmul:0x1x2",
+        "matmul:-3x4x5", "conv3d:1x2x3x4", "bmm:64x64x64", "dataset:validation", "mm:axbxc",
+        "mm:64x64xNaN",
+    ] {
+        assert!(spec::parse_problems(bad).is_err(), "{bad:?} must be rejected");
+    }
+}
+
+#[test]
+fn single_specs_round_trip_through_problem_ids() {
+    for (spec_str, want) in [
+        ("matmul:64x80x96", Problem::matmul(64, 80, 96)),
+        ("64,80,96", Problem::matmul(64, 80, 96)),
+        ("mmt:64x64x128", Problem::matmul_transposed(64, 64, 128)),
+        ("mlp:32x256x512", Problem::mlp(32, 256, 512)),
+        ("bmm:2x64x96x64", Problem::batched_matmul(2, 64, 96, 64)),
+        ("conv1d:128x32x5x16", Problem::conv1d(128, 32, 5, 16)),
+        ("conv2d:56x56x3x3", Problem::conv2d(56, 56, 3, 3)),
+    ] {
+        let p = spec::parse_problem(spec_str).unwrap();
+        assert_eq!(p, want, "{spec_str}");
+        assert_eq!(spec::parse_problem(&p.id()).unwrap(), p, "id {} reparses", p.id());
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Request/response JSON
+// ---------------------------------------------------------------------------
+
+#[test]
+fn request_json_round_trips() {
+    let mut req = cost_req("conv2d:28x28x3x3", "beam2bfs", Budget::both(1.5, 300), 99);
+    req.depth = 6;
+    req.expand_threads = 2;
+    req.features_off = vec!["hist".into()];
+    let back = TuneRequest::from_json(&req.to_json()).unwrap();
+    assert_eq!(back, req);
+}
+
+#[test]
+fn served_response_json_round_trips() {
+    let service = svc(7);
+    let req = cost_req("matmul:64x64x64", "greedy2", Budget::evals(60), 13);
+    let resp = service.serve(&req).unwrap();
+    let text = resp.to_json();
+    let back = TuneResponse::from_json(&text).unwrap();
+    assert_eq!(back, resp);
+    // The document is self-describing for out-of-process consumers.
+    let doc = looptune::util::json::parse(&text).unwrap();
+    assert_eq!(doc.get("schema").unwrap().as_str(), Some("tune_response/v1"));
+    assert_eq!(doc.get("kind").unwrap().as_str(), Some("mm"));
+    assert!(!doc.get("trace").unwrap().as_arr().unwrap().is_empty());
+}
+
+#[test]
+fn unbounded_search_budgets_bounce_at_the_boundary() {
+    let service = svc(7);
+    for algo in SearchAlgo::ALL {
+        let req = cost_req("matmul:64x64x64", algo.name(), Budget::unlimited(), 1);
+        let err = service.serve(&req).unwrap_err().to_string();
+        assert!(err.contains("budget"), "{}: {err}", algo.name());
+    }
+    assert!(Budget::unlimited().is_unlimited());
+    assert!(!Budget::evals(1).is_unlimited());
+}
+
+// ---------------------------------------------------------------------------
+// Equivalence: service output == pre-redesign code paths at fixed seed
+// ---------------------------------------------------------------------------
+
+#[test]
+fn every_search_strategy_is_bit_identical_to_the_direct_path() {
+    let p = Problem::matmul(96, 112, 128);
+    let budget = Budget::evals(150);
+    for algo in SearchAlgo::ALL {
+        // Pre-redesign CLI path: fresh backend, direct run.
+        let direct = algo.run(p, be(), budget, 10, 21);
+        // Service path: fresh service, same request parameters.
+        let resp = svc(7)
+            .serve(&cost_req("matmul:96x112x128", algo.name(), budget, 21))
+            .unwrap();
+        assert_eq!(
+            resp.nest_hash,
+            format!("{:016x}", nest_hash(&direct.best)),
+            "{}: schedule diverged",
+            algo.name()
+        );
+        assert_eq!(resp.gflops, direct.best_gflops, "{}", algo.name());
+        assert_eq!(resp.gflops_initial, direct.initial_gflops, "{}", algo.name());
+        assert_eq!(resp.evals, direct.evals, "{}: eval count diverged", algo.name());
+        assert_eq!(resp.cache_hits, direct.cache_hits, "{}", algo.name());
+    }
+}
+
+#[test]
+fn baseline_strategies_are_bit_identical_to_the_simulators() {
+    let p = Problem::matmul(128, 96, 160);
+    for kind in BaselineKind::ALL {
+        let direct = kind.simulator(33).run(p, &be());
+        let resp = svc(7)
+            .serve(&cost_req("matmul:128x96x160", kind.name(), Budget::unlimited(), 33))
+            .unwrap();
+        assert_eq!(
+            resp.nest_hash,
+            format!("{:016x}", nest_hash(&direct.nest)),
+            "{}: schedule diverged",
+            kind.name()
+        );
+        assert_eq!(resp.gflops, direct.gflops, "{}", kind.name());
+        // The service additionally scores the initial nest (one extra
+        // distinct schedule at most).
+        assert!(
+            resp.evals >= direct.evals && resp.evals <= direct.evals + 1,
+            "{}: {} vs {}",
+            kind.name(),
+            resp.evals,
+            direct.evals
+        );
+    }
+}
+
+#[test]
+fn batch_driver_is_bit_identical_to_per_problem_direct_runs() {
+    // `tune-many` semantics: per-problem seeds derived from the batch
+    // seed, one shared backend handle. Replicate the pre-redesign
+    // tune_one inline and compare.
+    let problems: Vec<Problem> = (0..6)
+        .map(|i| Problem::matmul(64 + 16 * (i % 3), 64 + 16 * (i / 3), 96))
+        .collect();
+    let cfg = BatchCfg {
+        algo: SearchAlgo::Greedy2,
+        budget: Budget::evals(80),
+        depth: 10,
+        seed: 7,
+        threads: 2,
+        expand_threads: 1,
+    };
+    let report = batch::run(&problems, &be(), &cfg);
+
+    let direct_backend = be();
+    for (o, &p) in report.outcomes.iter().zip(&problems) {
+        let direct = SearchAlgo::Greedy2.run(
+            p,
+            direct_backend.clone(),
+            cfg.budget,
+            cfg.depth,
+            problem_seed(cfg.seed, p),
+        );
+        assert_eq!(o.best_gflops, direct.best_gflops, "{p}");
+        assert_eq!(o.evals, direct.evals, "{p}");
+        assert_eq!(
+            o.schedule,
+            looptune::ir::transform::schedule_signature(&direct.best),
+            "{p}"
+        );
+    }
+}
+
+#[test]
+fn policy_requests_error_cleanly_without_artifacts_or_serve_when_present() {
+    // The policy strategy needs the PJRT runtime; in the offline build
+    // without artifacts that must surface as an error (never a panic),
+    // and with artifacts present the service path must match rl::tune.
+    let service = svc(7);
+    let req = cost_req("matmul:64x64x64", "policy", Budget::unlimited(), 5);
+    match service.serve(&req) {
+        Err(e) => {
+            let msg = format!("{e:#}").to_lowercase();
+            assert!(msg.contains("runtime") || msg.contains("pjrt"), "{msg}");
+        }
+        Ok(resp) => {
+            assert_eq!(resp.strategy, "policy");
+            assert!(resp.gflops > 0.0);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Warm cross-request state
+// ---------------------------------------------------------------------------
+
+#[test]
+fn one_service_serves_mixed_workload_batches_with_warm_state() {
+    let service = svc(7);
+    // Ample budget: the first pass explores each search to its natural
+    // end, so the repeat batch must be answered entirely from the warm
+    // cache with identical schedules.
+    let reqs: Vec<TuneRequest> = ["matmul:64x64x64", "bmm:2x32x32x32", "conv2d:16x16x3x3"]
+        .iter()
+        .map(|s| cost_req(s, "greedy1", Budget::evals(1_000_000), 3))
+        .collect();
+    let first = service.serve_batch(&reqs);
+    let again = service.serve_batch(&reqs);
+    for (a, b) in first.iter().zip(&again) {
+        let (a, b) = (a.as_ref().unwrap(), b.as_ref().unwrap());
+        assert_eq!(a.nest_hash, b.nest_hash, "{}", a.problem);
+        assert!(a.evals > 0, "{}", a.problem);
+        assert_eq!(b.evals, 0, "{}: repeat must be all cache hits", a.problem);
+        assert!(b.cache_hits > 0, "{}", a.problem);
+    }
+}
