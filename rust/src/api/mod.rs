@@ -34,7 +34,7 @@ use crate::featurize::FeatureMask;
 use crate::ir::{Nest, Problem};
 use crate::rl::{self, params::ParamSet};
 use crate::runtime::Runtime;
-use crate::search::{Budget, SearchAlgo, TracePoint};
+use crate::search::{Budget, SearchAlgo, SearchResult, TracePoint};
 use anyhow::Result;
 use std::sync::Arc;
 
@@ -91,6 +91,24 @@ impl TuneResult {
     pub fn speedup(&self) -> f64 {
         self.best_gflops / self.initial_gflops.max(1e-12)
     }
+
+    /// Adopt a classical-search result wholesale: the strategy label is
+    /// the algorithm name, searches trace no actions, and no note is
+    /// attached (callers add one when there is a caveat to surface).
+    pub fn from_search(r: SearchResult) -> TuneResult {
+        TuneResult {
+            strategy: r.algo,
+            best: r.best,
+            best_gflops: r.best_gflops,
+            initial_gflops: r.initial_gflops,
+            evals: r.evals,
+            cache_hits: r.cache_hits,
+            elapsed: r.elapsed,
+            trace: r.trace,
+            actions: Vec::new(),
+            note: None,
+        }
+    }
 }
 
 /// One way of tuning a problem. The environment carries the problem (at
@@ -142,18 +160,7 @@ impl Strategy for SearchAlgo {
             opts.seed,
             opts.expand_threads,
         );
-        Ok(TuneResult {
-            strategy: r.algo.clone(),
-            best: r.best,
-            best_gflops: r.best_gflops,
-            initial_gflops: r.initial_gflops,
-            evals: r.evals,
-            cache_hits: r.cache_hits,
-            elapsed: r.elapsed,
-            trace: r.trace,
-            actions: Vec::new(),
-            note: None,
-        })
+        Ok(TuneResult::from_search(r))
     }
 }
 
@@ -215,6 +222,46 @@ impl Strategy for PolicyRollout {
     }
 }
 
+/// A classical search with the learned cost ranker attached (DESIGN.md
+/// §10): candidate expansion is pre-ordered by predicted GFLOPS, so a
+/// truncating budget is spent on the most promising actions first. The
+/// service builds this wrapper automatically when configured with a
+/// ranker; the strategy label stays the algorithm name so reports remain
+/// comparable, with the ranking surfaced in the note.
+pub struct RankedSearch {
+    /// The wrapped search algorithm.
+    pub algo: SearchAlgo,
+    /// The learned ranker ordering candidate scoring.
+    pub ranker: std::sync::Arc<crate::store::cost::CostRanker>,
+}
+
+impl Strategy for RankedSearch {
+    fn label(&self) -> String {
+        self.algo.name().to_string()
+    }
+
+    fn tune(&self, env: &mut Env, budget: Budget, opts: &TuneOpts) -> Result<TuneResult> {
+        // Random search never expands candidates, so the ranker cannot
+        // steer it — don't pass one and don't claim on the wire that
+        // ranking happened.
+        let ranked = !matches!(self.algo, SearchAlgo::Random);
+        let r = self.algo.run_ranked(
+            env.nest.problem,
+            env.backend.clone(),
+            budget,
+            opts.depth,
+            opts.seed,
+            opts.expand_threads,
+            if ranked { Some(self.ranker.clone()) } else { None },
+        );
+        let mut out = TuneResult::from_search(r);
+        if ranked {
+            out.note = Some("cost-model pre-ranked expansion".to_string());
+        }
+        Ok(out)
+    }
+}
+
 /// Each tune request constructs a fresh seeded simulator through
 /// [`BaselineKind::simulator`], so per-problem results match a standalone
 /// [`Baseline::run`] at the same seed exactly.
@@ -265,14 +312,23 @@ pub enum StrategyKind {
     Search(SearchAlgo),
     /// A simulated comparator ([`BaselineKind`]).
     Baseline(BaselineKind),
+    /// Replay recorded neighbor schedules from the tuning store, falling
+    /// back to search on a cold miss
+    /// ([`crate::store::transfer::TransferStrategy`]; requires the service
+    /// to be configured with a store).
+    Transfer,
 }
 
 impl StrategyKind {
-    /// Resolve a strategy by name: `policy` (alias `looptune`), any
-    /// [`SearchAlgo::name`], or any [`BaselineKind::name`].
+    /// Resolve a strategy by name: `policy` (alias `looptune`),
+    /// `transfer`, any [`SearchAlgo::name`], or any
+    /// [`BaselineKind::name`].
     pub fn parse(s: &str) -> Option<StrategyKind> {
         if s == "policy" || s == "looptune" {
             return Some(StrategyKind::Policy);
+        }
+        if s == "transfer" {
+            return Some(StrategyKind::Transfer);
         }
         if let Some(a) = SearchAlgo::from_name(s) {
             return Some(StrategyKind::Search(a));
@@ -286,14 +342,16 @@ impl StrategyKind {
             StrategyKind::Policy => "policy",
             StrategyKind::Search(a) => a.name(),
             StrategyKind::Baseline(b) => b.name(),
+            StrategyKind::Transfer => "transfer",
         }
     }
 
     /// Whether this strategy consumes a budget (and would spin forever on
     /// an unlimited one). Policy rollout and the baseline simulators run
-    /// a fixed amount of work regardless.
+    /// a fixed amount of work regardless; transfer needs a budget for its
+    /// cold-miss search fallback.
     pub fn needs_budget(&self) -> bool {
-        matches!(self, StrategyKind::Search(_))
+        matches!(self, StrategyKind::Search(_) | StrategyKind::Transfer)
     }
 
     /// Every servable strategy name (help text, tests).
@@ -301,6 +359,7 @@ impl StrategyKind {
         let mut v = vec!["policy"];
         v.extend(SearchAlgo::ALL.iter().map(|a| a.name()));
         v.extend(BaselineKind::ALL.iter().map(|b| b.name()));
+        v.push("transfer");
         v
     }
 }
@@ -329,6 +388,8 @@ mod tests {
         assert!(!StrategyKind::Policy.needs_budget());
         assert!(StrategyKind::Search(SearchAlgo::Greedy2).needs_budget());
         assert!(!StrategyKind::Baseline(BaselineKind::AutoTvm).needs_budget());
+        // Transfer's cold-miss fallback is a search, so it needs one too.
+        assert!(StrategyKind::Transfer.needs_budget());
     }
 
     #[test]

@@ -266,7 +266,9 @@ pub struct TuneResponse {
     pub seed: u64,
     /// Compact schedule signature (`ir::transform::schedule_signature`).
     pub schedule: String,
-    /// Rendered loop nest (display form).
+    /// Rendered loop nest (display form; the agent cursor is normalized
+    /// to the outermost loop so warm store hits render byte-identically
+    /// to the fresh responses they replay).
     pub nest: String,
     /// Stable 64-bit hash of (problem, loops) as lower-hex.
     pub nest_hash: String,
@@ -292,6 +294,10 @@ pub struct TuneResponse {
     pub actions: Vec<String>,
     /// Caveat attached to the result (e.g. "untrained policy").
     pub note: Option<String>,
+    /// Result provenance: `Some("store")` when the response was served
+    /// from the persistent tuning store without running a strategy
+    /// (DESIGN.md §10); `None` for a freshly tuned result.
+    pub cache: Option<String>,
 }
 
 impl TuneResponse {
@@ -334,6 +340,9 @@ impl TuneResponse {
         );
         if let Some(n) = &self.note {
             root.insert("note".into(), Json::Str(n.clone()));
+        }
+        if let Some(c) = &self.cache {
+            root.insert("cache".into(), Json::Str(c.clone()));
         }
         let mut out = String::new();
         write_json(&Json::Obj(root), &mut out);
@@ -424,6 +433,7 @@ impl TuneResponse {
             trace,
             actions,
             note: doc.get("note").and_then(Json::as_str).map(String::from),
+            cache: doc.get("cache").and_then(Json::as_str).map(String::from),
         })
     }
 }

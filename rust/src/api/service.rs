@@ -13,12 +13,17 @@
 //! [`ParamSet`]: crate::rl::params::ParamSet
 
 use super::request::{BackendChoice, TuneRequest, TuneResponse};
-use super::{run_strategy, BaselineKind, PolicyRollout, Strategy, StrategyKind, TuneOpts};
+use super::{
+    run_strategy, BaselineKind, PolicyRollout, RankedSearch, Strategy, StrategyKind, TuneOpts,
+};
 use crate::backend::{peak, SharedBackend};
 use crate::ir::{Nest, Problem};
 use crate::rl::params::ParamSet;
 use crate::runtime::Runtime;
 use crate::search::batch::problem_seed;
+use crate::store::cost::CostRanker;
+use crate::store::transfer::TransferStrategy;
+use crate::store::{TuneRecord, TuningStore};
 use anyhow::{anyhow, Result};
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -26,7 +31,7 @@ use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 /// Service construction knobs.
-#[derive(Clone, Debug)]
+#[derive(Clone)]
 pub struct ServiceCfg {
     /// Batch seed: requests without an explicit seed derive theirs from
     /// this and the problem (see [`problem_seed`]).
@@ -35,11 +40,25 @@ pub struct ServiceCfg {
     pub threads: usize,
     /// Policy parameter file used when a request names none.
     pub default_params: Option<PathBuf>,
+    /// Persistent tuning store (DESIGN.md §10). When set, exact repeat
+    /// problems are served from the store with zero backend evaluations,
+    /// every completed tune is recorded, and the `transfer` strategy
+    /// becomes servable. `None` = the historical stateless service.
+    pub store: Option<TuningStore>,
+    /// Learned cost ranker: search strategies pre-order candidate
+    /// expansion with it and the transfer strategy orders its replays.
+    pub ranker: Option<Arc<CostRanker>>,
 }
 
 impl Default for ServiceCfg {
     fn default() -> Self {
-        ServiceCfg { seed: 7, threads: crate::util::default_threads(), default_params: None }
+        ServiceCfg {
+            seed: 7,
+            threads: crate::util::default_threads(),
+            default_params: None,
+            store: None,
+            ranker: None,
+        }
     }
 }
 
@@ -146,13 +165,28 @@ impl TuningService {
         seed: u64,
     ) -> Result<Box<dyn Strategy>> {
         Ok(match kind {
-            StrategyKind::Search(a) => Box::new(a),
+            StrategyKind::Search(a) => match &self.cfg.ranker {
+                Some(rk) => Box::new(RankedSearch { algo: a, ranker: rk.clone() }),
+                None => Box::new(a),
+            },
             StrategyKind::Baseline(b) => Box::new(b),
             StrategyKind::Policy => {
                 let rt = self.runtime()?;
                 let (params, trained) =
                     self.policy(&rt, req.params.as_deref(), req.untrained, seed)?;
                 Box::new(PolicyRollout { runtime: rt, params, trained })
+            }
+            StrategyKind::Transfer => {
+                let store = self.cfg.store.clone().ok_or_else(|| {
+                    anyhow!(
+                        "strategy transfer requires a tuning store \
+                         (start the service with --store PATH)"
+                    )
+                })?;
+                Box::new(TransferStrategy {
+                    ranker: self.cfg.ranker.clone(),
+                    ..TransferStrategy::new(store)
+                })
             }
         })
     }
@@ -171,10 +205,31 @@ impl TuningService {
 
     /// Serve one request against a caller-provided backend handle (the
     /// batch driver and tests route their own warm handle through here).
+    ///
+    /// When the service owns a [`TuningStore`], an exact problem hit
+    /// (same problem id, same backend kind, finite recorded GFLOPS) is
+    /// answered straight from the store — zero backend evaluations, the
+    /// recorded schedule verified bit-exact against its stored hash, and
+    /// `cache: "store"` provenance on the response. Every freshly tuned
+    /// result is appended to the store.
+    ///
+    /// Warm serving is deliberately strategy- and budget-blind: the store
+    /// answers with the best *recorded* schedule for the problem, whoever
+    /// produced it — the response carries the recording strategy's name
+    /// so callers can tell. The flip side is that hits never re-tune, so
+    /// a problem first recorded from a weak tune keeps serving that
+    /// record until a better one is appended externally; to force a fresh
+    /// tune of a specific problem, serve it without the store (or
+    /// `db compact` / edit the corpus).
     pub fn serve_on(&self, backend: &SharedBackend, req: &TuneRequest) -> Result<TuneResponse> {
         let t0 = Instant::now();
         let (problem, kind, mask) = req.validate()?;
         let seed = self.request_seed(req, problem);
+        if let Some(store) = &self.cfg.store {
+            if let Some(resp) = self.store_hit(store, backend, problem, seed, &t0) {
+                return Ok(resp);
+            }
+        }
         let opts = TuneOpts { depth: req.depth, seed, expand_threads: req.expand_threads };
         let strategy = self.strategy_for(kind, req, seed)?;
         // No current strategy consumes `env.peak` (reward normalization is
@@ -183,6 +238,12 @@ impl TuningService {
         // the warm peak ask [`Self::peak`] explicitly (memoized).
         let result =
             run_strategy(strategy.as_ref(), backend, problem, 1.0, mask, req.budget, &opts)?;
+        if let Some(store) = &self.cfg.store {
+            let rec = TuneRecord::from_result(problem, &result, backend.name(), seed);
+            if let Err(e) = store.append(rec) {
+                eprintln!("warning: recording tune for {} failed: {e:#}", problem.id());
+            }
+        }
         let lowered = crate::backend::schedule::lower(&result.best);
         let dispatch = crate::backend::executor::plan(lowered).dispatch().to_string();
         Ok(TuneResponse {
@@ -192,7 +253,7 @@ impl TuningService {
             backend: backend.name().to_string(),
             seed,
             schedule: crate::ir::transform::schedule_signature(&result.best),
-            nest: result.best.to_string(),
+            nest: rendered_nest(&result.best),
             nest_hash: format!("{:016x}", nest_hash(&result.best)),
             dispatch,
             gflops_initial: result.initial_gflops,
@@ -205,6 +266,87 @@ impl TuningService {
             trace: result.trace,
             actions: result.actions,
             note: result.note,
+            cache: None,
+        })
+    }
+
+    /// Try to answer a request from the store: the best *verifiable*
+    /// record for the exact problem id and backend kind — records are
+    /// tried best-GFLOPS-first, each replayed and checked against its
+    /// stored schedule hash. A record that fails the check is skipped in
+    /// favor of the next-best (a corrupt entry must degrade gracefully,
+    /// never wedge warm serving for the problem or produce a wrong
+    /// answer); only when no record verifies does the request fall
+    /// through to a fresh tune.
+    fn store_hit(
+        &self,
+        store: &TuningStore,
+        backend: &SharedBackend,
+        problem: Problem,
+        seed: u64,
+        t0: &Instant,
+    ) -> Option<TuneResponse> {
+        let mut recs: Vec<_> = store
+            .records_for(&problem.id())
+            .into_iter()
+            // Both measurements must be finite: a NaN gflops_initial
+            // (failed initial eval, JSON null) would put a garbage
+            // speedup on the wire.
+            .filter(|r| {
+                r.backend == backend.name()
+                    && r.gflops.is_finite()
+                    && r.gflops_initial.is_finite()
+            })
+            .collect();
+        recs.sort_by(|a, b| b.gflops.total_cmp(&a.gflops));
+        let (rec, nest) = recs.into_iter().find_map(|rec| {
+            match rec.replay(problem) {
+                Ok(nest) if nest_hash(&nest) == rec.nest_hash => Some((rec, nest)),
+                Ok(_) => {
+                    eprintln!(
+                        "warning: store record for {} hash mismatch; trying next-best",
+                        problem.id()
+                    );
+                    None
+                }
+                Err(e) => {
+                    eprintln!(
+                        "warning: store record for {} failed replay: {e:#}; trying next-best",
+                        problem.id()
+                    );
+                    None
+                }
+            }
+        })?;
+        let hash = rec.nest_hash;
+        let lowered = crate::backend::schedule::lower(&nest);
+        let dispatch = crate::backend::executor::plan(lowered).dispatch().to_string();
+        Some(TuneResponse {
+            problem: problem.id(),
+            kind: problem.kind().to_string(),
+            strategy: rec.strategy.clone(),
+            backend: backend.name().to_string(),
+            seed,
+            schedule: crate::ir::transform::schedule_signature(&nest),
+            nest: rendered_nest(&nest),
+            nest_hash: format!("{hash:016x}"),
+            dispatch,
+            gflops_initial: rec.gflops_initial,
+            gflops: rec.gflops,
+            speedup: rec.gflops / rec.gflops_initial.max(1e-12),
+            evals: 0,
+            cache_hits: 0,
+            tune_secs: 0.0,
+            wall_secs: t0.elapsed().as_secs_f64(),
+            trace: vec![crate::search::TracePoint {
+                elapsed: 0.0,
+                evals: 0,
+                depth: 0,
+                best_gflops: rec.gflops,
+            }],
+            actions: rec.actions.clone(),
+            note: Some("served from store".to_string()),
+            cache: Some("store".to_string()),
         })
     }
 
@@ -225,13 +367,35 @@ pub fn nest_hash(nest: &Nest) -> u64 {
     crate::backend::schedule_hash(nest)
 }
 
+/// Render a response's nest with the agent cursor normalized to the
+/// outermost loop: a response describes a *schedule*, not an agent
+/// mid-walk, and the store does not record cursors (hashes and caches are
+/// cursor-independent) — normalizing keeps a warm store hit's rendering
+/// byte-identical to the fresh response it replays.
+fn rendered_nest(nest: &Nest) -> String {
+    let mut n = nest.clone();
+    n.cursor = 0;
+    n.to_string()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::search::{Budget, SearchAlgo};
 
     fn svc() -> TuningService {
-        TuningService::new(ServiceCfg { seed: 7, threads: 2, default_params: None })
+        TuningService::new(ServiceCfg { seed: 7, threads: 2, ..ServiceCfg::default() })
+    }
+
+    fn svc_with_store() -> (TuningService, TuningStore) {
+        let store = TuningStore::in_memory();
+        let cfg = ServiceCfg {
+            seed: 7,
+            threads: 2,
+            store: Some(store.clone()),
+            ..ServiceCfg::default()
+        };
+        (TuningService::new(cfg), store)
     }
 
     // The pjrt feature swaps in the real bindings, whose handle types own
@@ -311,6 +475,97 @@ mod tests {
             let (p, _, _) = req.validate().unwrap();
             assert_eq!(resp.problem, p.id());
         }
+    }
+
+    #[test]
+    fn store_records_and_serves_exact_repeats() {
+        let (s, store) = svc_with_store();
+        let req = TuneRequest::new("matmul:80x80x80", "greedy2", Budget::evals(120));
+        let a = s.serve(&req).unwrap();
+        assert_eq!(a.cache, None);
+        assert!(a.evals > 0);
+        assert_eq!(store.len(), 1, "completed tune must be recorded");
+
+        // The repeat is served from the store: identical schedule, zero
+        // backend evaluations, provenance on the wire.
+        let b = s.serve(&req).unwrap();
+        assert_eq!(b.cache.as_deref(), Some("store"));
+        assert_eq!(b.evals, 0);
+        assert_eq!(b.cache_hits, 0);
+        assert_eq!(b.nest_hash, a.nest_hash);
+        assert_eq!(b.schedule, a.schedule);
+        assert_eq!(b.gflops, a.gflops);
+        assert_eq!(b.gflops_initial, a.gflops_initial);
+        assert_eq!(store.len(), 1, "a store hit must not append a new record");
+
+        // Warm serving is keyed per backend: the cost_model record must
+        // not answer an executor-scored request.
+        assert!(store.lookup("mm_80x80x80", "executor").is_none());
+        let rec = store.lookup("mm_80x80x80", "cost_model").unwrap();
+        assert_eq!(rec.strategy, "greedy2");
+        rec.replay_exact().unwrap();
+    }
+
+    #[test]
+    fn corrupt_store_record_degrades_to_next_best_or_fresh_tune() {
+        let (s, store) = svc_with_store();
+        let req = TuneRequest::new("matmul:64x80x96", "greedy1", Budget::evals(80));
+        let a = s.serve(&req).unwrap();
+        let good = (*store.lookup("mm_64x80x96", "cost_model").unwrap()).clone();
+        // Poison a copy with a broken hash AND an inflated GFLOPS, so it
+        // outranks the good record in best-first order.
+        let mut bad = good.clone();
+        bad.nest_hash ^= 1;
+        bad.gflops = good.gflops * 10.0;
+
+        // Corrupt best + valid runner-up: serving falls back to the
+        // next-best record instead of wedging warm serving forever.
+        let poisoned = TuningStore::in_memory();
+        poisoned.append(bad.clone()).unwrap();
+        poisoned.append(good).unwrap();
+        let cfg = ServiceCfg {
+            seed: 7,
+            threads: 2,
+            store: Some(poisoned.clone()),
+            ..ServiceCfg::default()
+        };
+        let b = TuningService::new(cfg).serve(&req).unwrap();
+        assert_eq!(b.cache.as_deref(), Some("store"));
+        assert_eq!(b.nest_hash, a.nest_hash);
+        assert_eq!(b.gflops, a.gflops, "the corrupt record's GFLOPS must not serve");
+        assert_eq!(poisoned.len(), 2, "a store hit appends nothing");
+
+        // Only a corrupt record: the request re-tunes from scratch and
+        // records a fresh, valid record that serves future repeats.
+        let only_bad = TuningStore::in_memory();
+        only_bad.append(bad).unwrap();
+        let cfg = ServiceCfg {
+            seed: 7,
+            threads: 2,
+            store: Some(only_bad.clone()),
+            ..ServiceCfg::default()
+        };
+        let s3 = TuningService::new(cfg);
+        let c = s3.serve(&req).unwrap();
+        assert_eq!(c.cache, None, "corrupt-only store must re-tune");
+        assert_eq!(c.nest_hash, a.nest_hash);
+        assert_eq!(only_bad.len(), 2, "fresh tune recorded next to the corrupt one");
+        let d = s3.serve(&req).unwrap();
+        assert_eq!(d.cache.as_deref(), Some("store"), "fresh record serves repeats");
+    }
+
+    #[test]
+    fn transfer_strategy_requires_a_store() {
+        let s = svc();
+        let req = TuneRequest::new("matmul:64x64x64", "transfer", Budget::evals(50));
+        let err = s.serve(&req).unwrap_err().to_string();
+        assert!(err.contains("store"), "{err}");
+
+        // With a store (even an empty one) transfer serves via fallback.
+        let (s, _store) = svc_with_store();
+        let resp = s.serve(&req).unwrap();
+        assert_eq!(resp.strategy, "transfer");
+        assert!(resp.note.unwrap().contains("cold miss"));
     }
 
     #[test]

@@ -38,6 +38,38 @@ pub struct Dataset {
     pub test: Vec<Problem>,
 }
 
+impl Dataset {
+    /// Canonical spec strings of the train split, in split order: each is
+    /// the problem's [`Problem::id`] (`mm_64x80x96`), which parses back
+    /// through `api::spec::parse_problem`. This is the one representation
+    /// tuning-store keys, request specs, and dataset membership share —
+    /// the dataset no longer produces problems that bypass the spec
+    /// parser.
+    pub fn train_specs(&self) -> Vec<String> {
+        self.train.iter().map(|p| p.id()).collect()
+    }
+
+    /// Canonical spec strings of the test split, in split order.
+    pub fn test_specs(&self) -> Vec<String> {
+        self.test.iter().map(|p| p.id()).collect()
+    }
+
+    /// Split membership by spec string — any form the shared spec parser
+    /// accepts (`mm_64x80x96`, `matmul:64x80x96`, `64,80,96` all name the
+    /// same problem). `Some("train")` / `Some("test")`, `None` when the
+    /// spec is malformed or the problem is not in the dataset.
+    pub fn split_of(&self, spec: &str) -> Option<&'static str> {
+        let p = crate::api::spec::parse_problem(spec).ok()?;
+        if self.train.contains(&p) {
+            Some("train")
+        } else if self.test.contains(&p) {
+            Some("test")
+        } else {
+            None
+        }
+    }
+}
+
 pub fn split(seed: u64) -> Dataset {
     let mut all = all_problems();
     let mut rng = Pcg32::new(seed);
@@ -103,6 +135,40 @@ mod tests {
                 assert!(e >= DIM_START && e <= DIM_END && (e - DIM_START) % DIM_STEP == 0);
             }
         }
+    }
+
+    #[test]
+    fn split_specs_round_trip_through_the_spec_parser() {
+        let ds = canonical();
+        let train_specs = ds.train_specs();
+        let test_specs = ds.test_specs();
+        assert_eq!(train_specs.len(), ds.train.len());
+        assert_eq!(test_specs.len(), ds.test.len());
+        // Every spec string parses back to exactly its problem (sampled
+        // across the split for speed; ids are deterministic).
+        for (spec, &p) in train_specs.iter().zip(&ds.train).step_by(97) {
+            assert_eq!(crate::api::spec::parse_problem(spec).unwrap(), p, "{spec}");
+        }
+        for (spec, &p) in test_specs.iter().zip(&ds.test).step_by(41) {
+            assert_eq!(crate::api::spec::parse_problem(spec).unwrap(), p, "{spec}");
+        }
+    }
+
+    #[test]
+    fn split_membership_by_spec_string() {
+        let ds = canonical();
+        // Membership round-trips through every accepted spelling.
+        let p = ds.train[0];
+        let (m, n, k) = p.as_matmul().unwrap();
+        assert_eq!(ds.split_of(&p.id()), Some("train"));
+        assert_eq!(ds.split_of(&format!("matmul:{m}x{n}x{k}")), Some("train"));
+        assert_eq!(ds.split_of(&format!("{m},{n},{k}")), Some("train"));
+        let t = ds.test[0];
+        assert_eq!(ds.split_of(&t.id()), Some("test"));
+        // Out-of-dataset problems and malformed specs are None.
+        assert_eq!(ds.split_of("mm_63x64x64"), None);
+        assert_eq!(ds.split_of("conv2d:28x28x3x3"), None);
+        assert_eq!(ds.split_of("garbage"), None);
     }
 
     #[test]

@@ -585,6 +585,130 @@ pub fn ablation(rt: Arc<Runtime>, cfg: &EvalCfg, iters: usize) -> Result<String>
 }
 
 // ---------------------------------------------------------------------------
+// Store: warm-vs-cold transfer tuning (DESIGN.md §10)
+// ---------------------------------------------------------------------------
+
+/// Warm-vs-cold transfer experiment: warm a tuning store with greedy
+/// searches on the nearest *train*-split neighbors of `n` held-out test
+/// problems, then tune the test problems both cold (fresh greedy-2 at
+/// `budget_evals`) and warm (the `transfer` strategy replaying stored
+/// neighbor schedules). Reports the GFLOPS ratio (geomean of per-problem
+/// transfer/cold) and the eval ratio, and writes the tracked
+/// `BENCH_store.json` (schema `bench_store/v1`). Cost-model scored, so
+/// the numbers are deterministic at a fixed seed.
+pub fn store_transfer(cfg: &EvalCfg, n: usize, budget_evals: u64) -> Result<String> {
+    use crate::search::batch::problem_seed;
+    use crate::store::transfer::{nearest_problems, TransferStrategy};
+    use crate::store::TuningStore;
+    use crate::util::json::{write_json, Json};
+
+    let tcfg = EvalCfg { measured: false, ..cfg.clone() };
+    let ds = dataset::canonical();
+    let n = cfg.scaled(n).max(2);
+    let tests = dataset::sample_test(&ds, n, cfg.seed ^ 0x570e);
+
+    // Warm corpus: the 3 nearest train problems of each test problem,
+    // deduped — the "history" a serving system would have accumulated.
+    let mut warm_ids = std::collections::BTreeSet::new();
+    let mut warm = Vec::new();
+    for &t in &tests {
+        for p in nearest_problems(&ds.train, t, 3) {
+            if warm_ids.insert(p.id()) {
+                warm.push(p);
+            }
+        }
+    }
+    let store = TuningStore::in_memory();
+    let bcfg = batch::BatchCfg {
+        algo: SearchAlgo::Greedy2,
+        budget: Budget::evals(budget_evals),
+        depth: 10,
+        seed: cfg.seed,
+        threads: cfg.threads,
+        expand_threads: 1,
+    };
+    batch::run_recorded(&warm, &tcfg.backend(), &bcfg, Some(&store), None);
+
+    // Cold: fresh greedy-2 per test problem. Warm: transfer replays.
+    let cold = batch::run(&tests, &tcfg.backend(), &bcfg);
+    let strategy = TransferStrategy::new(store.clone());
+    let be_warm = tcfg.backend();
+    let mut rows = Vec::new();
+    let mut ratios = Vec::new();
+    let (mut cold_evals, mut warm_evals) = (0u64, 0u64);
+    for (o, &p) in cold.outcomes.iter().zip(&tests) {
+        let opts = TuneOpts { depth: 10, seed: problem_seed(cfg.seed, p), expand_threads: 1 };
+        let r = api::run_strategy(
+            &strategy,
+            &be_warm,
+            p,
+            1.0,
+            FeatureMask::default(),
+            Budget::evals(budget_evals),
+            &opts,
+        )?;
+        let ratio = r.best_gflops / o.best_gflops.max(1e-12);
+        ratios.push(ratio);
+        cold_evals += o.evals;
+        warm_evals += r.evals;
+        rows.push((p, o.best_gflops, o.evals, r.best_gflops, r.evals, ratio));
+    }
+    let gflops_ratio = stats::geomean(&ratios);
+    let evals_ratio = warm_evals as f64 / cold_evals.max(1) as f64;
+
+    let mut csv = String::from(
+        "problem,cold_gflops,cold_evals,transfer_gflops,transfer_evals,gflops_ratio\n",
+    );
+    let mut json_rows = Vec::new();
+    for (p, cg, ce, tg, te, ratio) in &rows {
+        let _ = writeln!(csv, "{p},{cg:.4},{ce},{tg:.4},{te},{ratio:.4}");
+        let mut row = BTreeMap::new();
+        row.insert("problem".to_string(), Json::Str(p.id()));
+        row.insert("cold_gflops".to_string(), Json::Num(*cg));
+        row.insert("cold_evals".to_string(), Json::Num(*ce as f64));
+        row.insert("transfer_gflops".to_string(), Json::Num(*tg));
+        row.insert("transfer_evals".to_string(), Json::Num(*te as f64));
+        row.insert("gflops_ratio".to_string(), Json::Num(*ratio));
+        json_rows.push(Json::Obj(row));
+    }
+    let mut root = BTreeMap::new();
+    root.insert("schema".to_string(), Json::Str("bench_store/v1".into()));
+    root.insert("problems".to_string(), Json::Num(tests.len() as f64));
+    root.insert("warm_problems".to_string(), Json::Num(warm.len() as f64));
+    root.insert("records".to_string(), Json::Num(store.len() as f64));
+    root.insert("budget_evals".to_string(), Json::Num(budget_evals as f64));
+    root.insert("cold_evals".to_string(), Json::Num(cold_evals as f64));
+    root.insert("transfer_evals".to_string(), Json::Num(warm_evals as f64));
+    root.insert("gflops_ratio".to_string(), Json::Num(gflops_ratio));
+    root.insert("evals_ratio".to_string(), Json::Num(evals_ratio));
+    root.insert("results".to_string(), Json::Arr(json_rows));
+    let mut json_text = String::new();
+    write_json(&Json::Obj(root), &mut json_text);
+    json_text.push('\n');
+    std::fs::write("BENCH_store.json", &json_text)?;
+    write_out(&cfg.out_dir, "store_transfer.csv", &csv)?;
+
+    let md = format!(
+        "# Warm-vs-cold transfer tuning ({} test problems, {} warm neighbors, \
+         budget {budget_evals} evals)\n\n\
+         - transfer reaches **{:.1}%** of cold greedy-2 GFLOPS (geomean)\n\
+         - using **{:.1}%** of its evaluations ({} vs {})\n\
+         - store: {} records over {} problems\n\n\
+         BENCH_store.json written (schema bench_store/v1).\n",
+        tests.len(),
+        warm.len(),
+        100.0 * gflops_ratio,
+        100.0 * evals_ratio,
+        warm_evals,
+        cold_evals,
+        store.len(),
+        warm.len(),
+    );
+    write_out(&cfg.out_dir, "store_transfer.md", &md)?;
+    Ok(md)
+}
+
+// ---------------------------------------------------------------------------
 // Policy training with seed selection
 // ---------------------------------------------------------------------------
 

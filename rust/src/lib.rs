@@ -33,6 +33,13 @@
 //! [`api::TuningService`] serves them over warm cross-request state (the
 //! shared backend pool, loaded policies, the measured peak). The CLI
 //! subcommands are thin adapters over it.
+//!
+//! [`store`] (DESIGN.md §10) is the serving system's memory: every
+//! completed tune is persisted as a `tune_record/v1` JSONL line, repeat
+//! traffic for an exact problem is served from the store with zero
+//! backend evaluations, cold misses can be transfer-tuned by replaying
+//! the nearest recorded schedules, and a learned cost ranker trained from
+//! the corpus pre-orders search expansion.
 
 #![warn(missing_docs)]
 
@@ -48,6 +55,7 @@ pub mod ir;
 pub mod rl;
 pub mod runtime;
 pub mod search;
+pub mod store;
 pub mod util;
 
 pub use env::actions::{Action, NUM_ACTIONS};

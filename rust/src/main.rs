@@ -13,7 +13,13 @@
 //!                                 workload suite from the registry
 //!   serve     [--once] [--file F] serve JSON tune requests: one
 //!                                 `tune_request/v1` document (--once) or
-//!                                 one per line, responses to stdout
+//!                                 one per line, responses to stdout;
+//!                                 --store makes repeats store hits
+//!   db        stats|export|compact --store F
+//!                                 inspect / dump / dedupe the tuning
+//!                                 store (tune_record/v1 JSONL)
+//!   fit-cost-model --store F      train the learned cost ranker from the
+//!                                 store; --save P writes the .ltps model
 //!   workloads                     list the registered workload suites
 //!   bench     [--smoke]           time the backend substrate (executor
 //!                                 GFLOPS per family, cost-model and
@@ -31,7 +37,9 @@
 //!
 //! Global flags: --config FILE (TOML subset, see config.rs), --out DIR,
 //! --params FILE, --seed N, --threads N, --cost-model (use the analytical
-//! model instead of measured execution), --quick (scale budgets ~10x down).
+//! model instead of measured execution), --quick (scale budgets ~10x down),
+//! --store FILE (persistent tuning store, DESIGN.md §10), --ranker FILE
+//! (learned cost model trained by fit-cost-model).
 
 use anyhow::{anyhow, bail, Result};
 use looptune::api::{spec, BackendChoice, ServiceCfg, TuneRequest, TuneResponse, TuningService};
@@ -165,10 +173,23 @@ fn main() -> Result<()> {
     // One warm service per process: backend pool, loaded policies, peak.
     let backend_choice =
         if measured { BackendChoice::Measured } else { BackendChoice::CostModel };
+    // Persistent tuning store / learned ranker (DESIGN.md §10). The
+    // `search` subcommand compares algorithms on fresh state, so it must
+    // not let one algorithm's record answer the next one's request.
+    let store = match args.flags.get("store") {
+        Some(p) => Some(looptune::store::TuningStore::open(p)?),
+        None => None,
+    };
+    let ranker = match args.flags.get("ranker") {
+        Some(p) => Some(std::sync::Arc::new(looptune::store::cost::CostRanker::load(p)?)),
+        None => None,
+    };
     let service = TuningService::new(ServiceCfg {
         seed,
         threads,
         default_params: params_path,
+        store: if args.cmd == "search" { None } else { store.clone() },
+        ranker: ranker.clone(),
     });
 
     match args.cmd.as_str() {
@@ -413,7 +434,13 @@ fn main() -> Result<()> {
                     .unwrap_or(1),
             };
             let be = service.backend(backend_choice);
-            let report = batch::run(&problems, &be, &bcfg).with_suite(&suite);
+            // --store: append every completed tune to the persistent store
+            // (the corpus `fit-cost-model` and the transfer strategy feed
+            // on); recording never changes tuning results. --ranker:
+            // pre-order candidate expansion with the learned cost model.
+            let report =
+                batch::run_recorded(&problems, &be, &bcfg, store.as_ref(), ranker.as_ref())
+                    .with_suite(&suite);
             println!("{}", report.summary());
             std::fs::create_dir_all(&out_dir)?;
             let file = if suite == "dataset" {
@@ -504,6 +531,69 @@ fn main() -> Result<()> {
             std::fs::write(&path, report.to_json())?;
             println!("report -> {path}");
         }
+        "db" => {
+            // Tuning-store maintenance: stats (human + JSON), export
+            // (JSONL to stdout), compact (best record per problem/backend).
+            let store = store.ok_or_else(|| {
+                anyhow!("db requires --store PATH (the tune_record/v1 JSONL file)")
+            })?;
+            match args.pos.first().map(String::as_str).unwrap_or("stats") {
+                "stats" => {
+                    let stats = store.stats();
+                    println!("{}", stats.summary());
+                    println!("{}", stats.to_json());
+                }
+                "export" => print!("{}", store.export_jsonl()),
+                "compact" => {
+                    let (kept, dropped) = store.compact()?;
+                    println!(
+                        "compacted: kept {kept} best record(s), dropped {dropped} \
+                         (one per problem x backend)"
+                    );
+                }
+                other => bail!("unknown db action {other:?} (stats|export|compact)"),
+            }
+        }
+        "fit-cost-model" => {
+            // Train the learned cost ranker from the recorded corpus and
+            // save it through the shared LTPS parameter format; load it
+            // back into any tuning subcommand with --ranker.
+            let store = store
+                .ok_or_else(|| anyhow!("fit-cost-model requires --store PATH"))?;
+            let lambda = args
+                .flags
+                .get("lambda")
+                .and_then(|s| s.parse().ok())
+                .unwrap_or(1.0);
+            let save = args
+                .flags
+                .get("save")
+                .cloned()
+                .unwrap_or_else(|| format!("{}/cost_model.ltps", out_dir.display()));
+            // Measured and modeled GFLOPS are incommensurate, so the fit
+            // is per backend: --fit-backend picks one explicitly, else
+            // the backend with the most records in the corpus wins.
+            let fit_backend = match args.flags.get("fit-backend") {
+                Some(b) => b.clone(),
+                None => store
+                    .stats()
+                    .by_backend
+                    .into_iter()
+                    .max_by(|a, b| a.1.cmp(&b.1).then_with(|| b.0.cmp(&a.0)))
+                    .map(|(k, _)| k)
+                    .ok_or_else(|| anyhow!("store holds no records to fit on"))?,
+            };
+            println!("fitting on {fit_backend}-scored records (override: --fit-backend)");
+            let (ranker, report) =
+                looptune::store::cost::CostRanker::fit_from_store(&store, &fit_backend, lambda)?;
+            if let Some(parent) = std::path::Path::new(&save).parent() {
+                if !parent.as_os_str().is_empty() {
+                    std::fs::create_dir_all(parent)?;
+                }
+            }
+            ranker.save(&save)?;
+            println!("{report}\nmodel -> {save}");
+        }
         "workloads" => {
             // List the registered workload suites (README workload table).
             println!("{:<8} {:>9}  description", "suite", "problems");
@@ -560,6 +650,15 @@ fn main() -> Result<()> {
                         let rt = Arc::new(Runtime::load_default()?);
                         experiments::headline(&rt, &ecfg, budget, 25)?
                     }
+                    "store" => {
+                        // Warm-vs-cold transfer tuning; writes the tracked
+                        // BENCH_store.json (no runtime needed).
+                        experiments::store_transfer(
+                            &ecfg,
+                            n.min(12),
+                            if quick { 120 } else { 300 },
+                        )?
+                    }
                     "ablation" => {
                         let rt = Arc::new(Runtime::load_default()?);
                         experiments::ablation(rt, &ecfg, iters)?
@@ -570,9 +669,10 @@ fn main() -> Result<()> {
                 Ok(())
             };
             if exp == "all" {
-                for e in
-                    ["table1", "fig7", "fig8", "fig9", "fig10", "fig11", "headline", "ablation"]
-                {
+                for e in [
+                    "table1", "fig7", "fig8", "fig9", "fig10", "fig11", "headline", "ablation",
+                    "store",
+                ] {
                     println!("==== {e} ====");
                     run(e)?;
                 }
@@ -585,7 +685,7 @@ fn main() -> Result<()> {
                 "looptune — RL loop-schedule auto-tuner (LoopTune reproduction)\n\n\
                  usage: looptune <cmd> [flags]\n\
                  cmds:  peak | dataset | workloads | render | artifacts | train | tune\n       \
-                 | search | tune-many | serve | bench | eval\n\
+                 | search | tune-many | serve | db | fit-cost-model | bench | eval\n\
                  flags: --spec KIND:DIMS (matmul:64x64x64, conv2d:28x28x3x3, ...)\n       \
                  --mnk M,N,K --algo NAME --iters N --budget SECS --out DIR\n       \
                  --params FILE --config FILE --seed N --quick --cost-model --untrained\n       \
@@ -593,7 +693,11 @@ fn main() -> Result<()> {
                  --suite NAME (tune-many over a workload suite: matmul|mmt|bmm|\n       \
                  conv1d|conv2d|mlp)\n       \
                  --once --file PATH (serve: one JSON request, from a file)\n       \
-                 --smoke --json PATH (bench: tiny CI shapes, output path)"
+                 --smoke --json PATH (bench: tiny CI shapes, output path)\n       \
+                 --store PATH (persistent tuning store: serve hits, record all,\n       \
+                 enable the transfer strategy; db/fit-cost-model operate on it)\n       \
+                 --ranker PATH --lambda X --save PATH --fit-backend NAME\n       \
+                 (learned cost model; the fit is per scoring backend)"
             );
         }
     }

@@ -221,16 +221,28 @@ impl BatchReport {
     }
 }
 
-fn tune_one(problem: Problem, backend: &SharedBackend, cfg: &BatchCfg) -> ProblemOutcome {
+fn tune_one(
+    problem: Problem,
+    backend: &SharedBackend,
+    cfg: &BatchCfg,
+    store: Option<&crate::store::TuningStore>,
+    ranker: Option<&std::sync::Arc<crate::store::cost::CostRanker>>,
+) -> ProblemOutcome {
     // All batch tuning flows through the one `api::Strategy` trait — the
-    // same code path the service and the CLI adapters use.
-    let opts = crate::api::TuneOpts {
-        depth: cfg.depth,
-        seed: problem_seed(cfg.seed, problem),
-        expand_threads: cfg.expand_threads,
+    // same code path the service and the CLI adapters use. A learned
+    // ranker wraps the search exactly as the service does.
+    let seed = problem_seed(cfg.seed, problem);
+    let opts = crate::api::TuneOpts { depth: cfg.depth, seed, expand_threads: cfg.expand_threads };
+    let ranked;
+    let strategy: &dyn crate::api::Strategy = match ranker {
+        Some(rk) => {
+            ranked = crate::api::RankedSearch { algo: cfg.algo, ranker: rk.clone() };
+            &ranked
+        }
+        None => &cfg.algo,
     };
     let r = crate::api::run_strategy(
-        &cfg.algo,
+        strategy,
         backend,
         problem,
         1.0, // peak: unused by search strategies (reward normalization only)
@@ -239,6 +251,12 @@ fn tune_one(problem: Problem, backend: &SharedBackend, cfg: &BatchCfg) -> Proble
         &opts,
     )
     .expect("search strategies are infallible");
+    if let Some(store) = store {
+        let rec = crate::store::TuneRecord::from_result(problem, &r, backend.name(), seed);
+        if let Err(e) = store.append(rec) {
+            eprintln!("warning: recording tune for {} failed: {e:#}", problem.id());
+        }
+    }
     ProblemOutcome {
         problem,
         best_gflops: r.best_gflops,
@@ -254,13 +272,31 @@ fn tune_one(problem: Problem, backend: &SharedBackend, cfg: &BatchCfg) -> Proble
 /// `cfg.threads` scoped worker threads over the shared `backend` handle.
 /// Outcomes come back in input order regardless of scheduling.
 pub fn run(problems: &[Problem], backend: &SharedBackend, cfg: &BatchCfg) -> BatchReport {
+    run_recorded(problems, backend, cfg, None, None)
+}
+
+/// Like [`run`], additionally appending every per-problem result to a
+/// tuning `store` as the workers complete it — the batch driver's side of
+/// the store's concurrent-writer contract (`tune-many --store`, corpus
+/// generation for `fit-cost-model`) — and, when a learned `ranker` is
+/// given, pre-ordering each search's candidate expansion with it
+/// (`tune-many --ranker`), exactly as the service does. Recording does
+/// not change tuning results; a failed append is a warning, not a batch
+/// failure.
+pub fn run_recorded(
+    problems: &[Problem],
+    backend: &SharedBackend,
+    cfg: &BatchCfg,
+    store: Option<&crate::store::TuningStore>,
+    ranker: Option<&std::sync::Arc<crate::store::cost::CostRanker>>,
+) -> BatchReport {
     let t0 = Instant::now();
     let evals0 = backend.eval_count();
     let hits0 = backend.hits();
     let threads = cfg.threads.max(1).min(problems.len().max(1));
 
     let outcomes = crate::util::parallel_indexed_map(problems.len(), threads, |i| {
-        tune_one(problems[i], backend, cfg)
+        tune_one(problems[i], backend, cfg, store, ranker)
     });
 
     BatchReport {
@@ -372,6 +408,29 @@ mod tests {
         let dims = rows[1].get("dims").unwrap().as_obj().unwrap();
         assert_eq!(dims.get("oh").unwrap().as_usize(), Some(28));
         assert_eq!(dims.get("kw").unwrap().as_usize(), Some(3));
+    }
+
+    #[test]
+    fn recorded_batch_appends_one_record_per_problem() {
+        let ps = problems(5);
+        let store = crate::store::TuningStore::in_memory();
+        let cfg = BatchCfg { threads: 3, budget: Budget::evals(60), ..BatchCfg::default() };
+        let report = run_recorded(&ps, &be(), &cfg, Some(&store), None);
+        assert_eq!(store.len(), ps.len() as u64);
+        for (o, &p) in report.outcomes.iter().zip(&ps) {
+            let rec = store.lookup(&p.id(), "cost_model").expect("recorded");
+            assert_eq!(rec.gflops, o.best_gflops, "{p}");
+            assert_eq!(rec.strategy, "greedy2");
+            assert_eq!(rec.seed, problem_seed(cfg.seed, p), "{p}");
+            // Recorded schedules replay bit-exact.
+            rec.replay_exact().unwrap();
+        }
+        // Recording must not perturb results vs an unrecorded run.
+        let plain = run(&ps, &be(), &cfg);
+        for (a, b) in report.outcomes.iter().zip(&plain.outcomes) {
+            assert_eq!(a.best_gflops, b.best_gflops);
+            assert_eq!(a.evals, b.evals);
+        }
     }
 
     #[test]

@@ -10,10 +10,13 @@
 use super::{Budget, SearchCtx, SearchResult};
 use crate::backend::SharedBackend;
 use crate::ir::{Nest, Problem};
+use crate::store::cost::CostRanker;
 use std::collections::VecDeque;
+use std::sync::Arc;
 
 /// Beam search, depth-first expansion. Each node's candidates are scored
-/// concurrently when `expand_threads > 1`.
+/// concurrently when `expand_threads > 1`; a learned `ranker` (if any)
+/// pre-orders candidate scoring inside each expansion.
 pub fn dfs(
     problem: Problem,
     backend: SharedBackend,
@@ -21,8 +24,12 @@ pub fn dfs(
     depth: usize,
     width: usize,
     expand_threads: usize,
+    ranker: Option<Arc<CostRanker>>,
 ) -> SearchResult {
     let mut ctx = SearchCtx::with_threads(problem, backend, budget, expand_threads);
+    if let Some(r) = ranker {
+        ctx.set_ranker(r);
+    }
     let root = Nest::initial(problem);
     ctx.mark_visited(&root);
     dfs_rec(&mut ctx, &root, depth, 0, width);
@@ -46,7 +53,8 @@ fn dfs_rec(ctx: &mut SearchCtx, nest: &Nest, depth: usize, cur: usize, width: us
 }
 
 /// Beam search, breadth-first expansion. Each node's candidates are scored
-/// concurrently when `expand_threads > 1`.
+/// concurrently when `expand_threads > 1`; a learned `ranker` (if any)
+/// pre-orders candidate scoring inside each expansion.
 pub fn bfs(
     problem: Problem,
     backend: SharedBackend,
@@ -54,8 +62,12 @@ pub fn bfs(
     depth: usize,
     width: usize,
     expand_threads: usize,
+    ranker: Option<Arc<CostRanker>>,
 ) -> SearchResult {
     let mut ctx = SearchCtx::with_threads(problem, backend, budget, expand_threads);
+    if let Some(r) = ranker {
+        ctx.set_ranker(r);
+    }
     let root = Nest::initial(problem);
     ctx.mark_visited(&root);
     let mut queue: VecDeque<(Nest, usize)> = VecDeque::new();
@@ -90,8 +102,8 @@ mod tests {
     #[test]
     fn dfs_and_bfs_improve() {
         let p = Problem::new(128, 128, 128);
-        let d = dfs(p, be(), Budget::evals(500), 6, 2, 1);
-        let b = bfs(p, be(), Budget::evals(500), 6, 2, 1);
+        let d = dfs(p, be(), Budget::evals(500), 6, 2, 1, None);
+        let b = bfs(p, be(), Budget::evals(500), 6, 2, 1, None);
         assert!(d.speedup() >= 1.0);
         assert!(b.speedup() >= 1.0);
         assert_eq!(d.algo, "beam2dfs");
@@ -103,8 +115,8 @@ mod tests {
         // With an ample budget and small depth both widths complete their
         // trees; width 4's tree is a superset of width 2's.
         let p = Problem::new(96, 96, 96);
-        let w2 = dfs(p, be(), Budget::evals(100_000), 3, 2, 1);
-        let w4 = dfs(p, be(), Budget::evals(100_000), 3, 4, 1);
+        let w2 = dfs(p, be(), Budget::evals(100_000), 3, 2, 1, None);
+        let w4 = dfs(p, be(), Budget::evals(100_000), 3, 4, 1, None);
         assert!(
             w4.best_gflops >= w2.best_gflops * 0.999,
             "w4 {} < w2 {}",
@@ -116,9 +128,9 @@ mod tests {
     #[test]
     fn budget_stops_expansion() {
         let p = Problem::new(128, 128, 128);
-        let r = dfs(p, be(), Budget::evals(50), 10, 4, 1);
+        let r = dfs(p, be(), Budget::evals(50), 10, 4, 1, None);
         assert!(r.evals <= 60, "evals {}", r.evals);
-        let r = bfs(p, be(), Budget::evals(50), 10, 4, 1);
+        let r = bfs(p, be(), Budget::evals(50), 10, 4, 1, None);
         assert!(r.evals <= 60, "evals {}", r.evals);
     }
 
@@ -126,15 +138,15 @@ mod tests {
     fn bfs_explores_layer_by_layer() {
         // With a tiny depth, BFS trace depths never exceed the limit.
         let p = Problem::new(96, 96, 96);
-        let r = bfs(p, be(), Budget::evals(2000), 2, 2, 1);
+        let r = bfs(p, be(), Budget::evals(2000), 2, 2, 1, None);
         assert!(r.trace.iter().all(|t| t.depth <= 2));
     }
 
     #[test]
     fn parallel_expansion_matches_serial_tree() {
         let p = Problem::new(144, 144, 144);
-        let serial = bfs(p, be(), Budget::evals(100_000), 3, 4, 1);
-        let threaded = bfs(p, be(), Budget::evals(100_000), 3, 4, 4);
+        let serial = bfs(p, be(), Budget::evals(100_000), 3, 4, 1, None);
+        let threaded = bfs(p, be(), Budget::evals(100_000), 3, 4, 4, None);
         assert_eq!(serial.best.loops, threaded.best.loops);
         assert_eq!(serial.best_gflops, threaded.best_gflops);
         assert_eq!(serial.evals, threaded.evals);

@@ -13,8 +13,12 @@ use super::{Budget, SearchCtx, SearchResult};
 use crate::backend::SharedBackend;
 use crate::env::actions::Action;
 use crate::ir::{Nest, Problem};
+use crate::store::cost::CostRanker;
+use std::sync::Arc;
 
-/// Greedy search with `lookahead`-step exploration per move.
+/// Greedy search with `lookahead`-step exploration per move. A learned
+/// `ranker` (if any) pre-orders candidate scoring inside each expansion
+/// (see [`SearchCtx::set_ranker`]).
 pub fn search(
     problem: Problem,
     backend: SharedBackend,
@@ -22,9 +26,13 @@ pub fn search(
     depth: usize,
     lookahead: usize,
     expand_threads: usize,
+    ranker: Option<Arc<CostRanker>>,
 ) -> SearchResult {
     assert!(lookahead >= 1);
     let mut ctx = SearchCtx::with_threads(problem, backend, budget, expand_threads);
+    if let Some(r) = ranker {
+        ctx.set_ranker(r);
+    }
     let mut cur = Nest::initial(problem);
     let mut cur_g = ctx.initial_gflops;
 
@@ -87,7 +95,7 @@ mod tests {
         // local minimum" — reaching m k n from m n k needs two steps
         // (down, swap_down), which lookahead 1 cannot see. It must still
         // never regress below the initial schedule.
-        let r = search(Problem::new(128, 128, 128), be(), Budget::evals(5000), 10, 1, 1);
+        let r = search(Problem::new(128, 128, 128), be(), Budget::evals(5000), 10, 1, 1, None);
         assert!(r.speedup() >= 1.0, "speedup {}", r.speedup());
         assert!(r.evals < 100, "greedy1 should stop early, used {}", r.evals);
         assert_eq!(r.algo, "greedy1");
@@ -95,15 +103,15 @@ mod tests {
 
     #[test]
     fn greedy2_escapes_the_one_step_local_minimum() {
-        let r = search(Problem::new(128, 128, 128), be(), Budget::evals(20_000), 10, 2, 1);
+        let r = search(Problem::new(128, 128, 128), be(), Budget::evals(20_000), 10, 2, 1, None);
         assert!(r.speedup() > 1.0, "speedup {}", r.speedup());
     }
 
     #[test]
     fn greedy2_at_least_matches_greedy1() {
         let p = Problem::new(160, 160, 160);
-        let g1 = search(p, be(), Budget::evals(20_000), 8, 1, 1);
-        let g2 = search(p, be(), Budget::evals(20_000), 8, 2, 1);
+        let g1 = search(p, be(), Budget::evals(20_000), 8, 1, 1, None);
+        let g2 = search(p, be(), Budget::evals(20_000), 8, 2, 1, None);
         assert!(
             g2.best_gflops >= g1.best_gflops * 0.999,
             "g2 {} < g1 {}",
@@ -114,15 +122,15 @@ mod tests {
 
     #[test]
     fn respects_eval_budget() {
-        let r = search(Problem::new(128, 128, 128), be(), Budget::evals(30), 10, 2, 1);
+        let r = search(Problem::new(128, 128, 128), be(), Budget::evals(30), 10, 2, 1, None);
         assert!(r.evals <= 40, "evals {}", r.evals);
     }
 
     #[test]
     fn parallel_expansion_reaches_same_quality() {
         let p = Problem::new(128, 128, 128);
-        let serial = search(p, be(), Budget::evals(100_000), 6, 2, 1);
-        let threaded = search(p, be(), Budget::evals(100_000), 6, 2, 4);
+        let serial = search(p, be(), Budget::evals(100_000), 6, 2, 1, None);
+        let threaded = search(p, be(), Budget::evals(100_000), 6, 2, 4, None);
         assert_eq!(serial.best_gflops, threaded.best_gflops);
         assert_eq!(serial.evals, threaded.evals);
     }

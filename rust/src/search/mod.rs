@@ -16,7 +16,9 @@ pub mod random;
 use crate::backend::SharedBackend;
 use crate::env::actions::Action;
 use crate::ir::{Loop, Nest, Problem};
+use crate::store::cost::CostRanker;
 use std::collections::HashSet;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// Search budget: wall-clock and/or evaluation-count limits.
@@ -125,6 +127,7 @@ pub struct SearchCtx {
     hits_local: u64,
     threads: usize,
     visited: HashSet<(Vec<Loop>, usize)>,
+    ranker: Option<Arc<CostRanker>>,
 }
 
 impl SearchCtx {
@@ -154,6 +157,7 @@ impl SearchCtx {
             hits_local: !miss as u64,
             threads: threads.max(1),
             visited: HashSet::new(),
+            ranker: None,
         };
         ctx.observe(&nest, g, 0);
         ctx
@@ -214,23 +218,46 @@ impl SearchCtx {
         self.visited.insert((nest.loops.clone(), nest.cursor))
     }
 
+    /// Attach a learned cost ranker (DESIGN.md §10): [`Self::expand`]
+    /// pre-orders candidate actions by predicted GFLOPS before scoring,
+    /// so a truncating eval budget is spent on the most promising
+    /// candidates first. Without a ranker, candidates are scored in
+    /// action order (the historical behavior, bit-identical).
+    pub fn set_ranker(&mut self, ranker: Arc<CostRanker>) {
+        self.ranker = Some(ranker);
+    }
+
     /// Expand all valid actions of `nest`, scored. Sorted best-first.
     ///
     /// With `threads > 1` (see [`Self::with_threads`]) all candidates are
     /// scored concurrently through the shared backend; bookkeeping (budget
     /// accounting, incumbent, trace) is then replayed in deterministic
-    /// action order, so results are independent of thread interleaving.
+    /// candidate order, so results are independent of thread interleaving.
     pub fn expand(&mut self, nest: &Nest, depth: usize) -> Vec<(Action, Nest, f64)> {
+        let mut cands: Vec<(Action, Nest)> = Vec::with_capacity(crate::NUM_ACTIONS);
+        for action in Action::all() {
+            let mut next = nest.clone();
+            if action.apply(&mut next).is_ok() {
+                cands.push((action, next));
+            }
+        }
+        // Learned pre-ranking: order candidates by predicted GFLOPS so a
+        // budget that cannot afford them all scores the best-looking ones
+        // first. The stable sort keeps action order on ties, so ranked
+        // runs stay deterministic.
+        if let Some(rk) = &self.ranker {
+            let mut scored: Vec<(f64, Action, Nest)> =
+                cands.into_iter().map(|(a, n)| (rk.predict(&n), a, n)).collect();
+            scored.sort_by(|a, b| desc_score(b.0, a.0));
+            cands = scored.into_iter().map(|(_, a, n)| (a, n)).collect();
+        }
+
         if self.threads <= 1 {
             // Serial path: keeps the historical per-candidate budget check.
-            let mut out = Vec::with_capacity(crate::NUM_ACTIONS);
-            for action in Action::all() {
+            let mut out = Vec::with_capacity(cands.len());
+            for (action, next) in cands {
                 if self.exhausted() {
                     break;
-                }
-                let mut next = nest.clone();
-                if action.apply(&mut next).is_err() {
-                    continue;
                 }
                 let g = self.eval(&next, depth);
                 out.push((action, next, g));
@@ -242,16 +269,9 @@ impl SearchCtx {
         if self.exhausted() {
             return Vec::new();
         }
-        let mut cands: Vec<(Action, Nest)> = Vec::with_capacity(crate::NUM_ACTIONS);
-        for action in Action::all() {
-            let mut next = nest.clone();
-            if action.apply(&mut next).is_ok() {
-                cands.push((action, next));
-            }
-        }
         // Never exceed an eval-count budget: score at most the remaining
         // allowance (pessimistically assuming every candidate misses), in
-        // the same action order the serial path uses.
+        // the same candidate order the serial path uses.
         if let Some(max_evals) = self.budget.max_evals {
             let remaining = max_evals.saturating_sub(self.evals_local) as usize;
             if remaining < cands.len() {
@@ -305,8 +325,9 @@ impl SearchCtx {
 /// the sort (`f64::total_cmp` is total) nor steer beam/greedy selection
 /// toward a broken schedule, which ranking +NaN above +inf in raw total
 /// order would do.
-/// Use as `sort_by(|a, b| desc_score(b.2, a.2))`.
-fn desc_score(x: f64, y: f64) -> std::cmp::Ordering {
+/// Use as `sort_by(|a, b| desc_score(b.2, a.2))`. Crate-visible so the
+/// transfer strategy ranks its replay candidates under the same policy.
+pub(crate) fn desc_score(x: f64, y: f64) -> std::cmp::Ordering {
     let key = |g: f64| if g.is_nan() { f64::NEG_INFINITY } else { g };
     key(x).total_cmp(&key(y))
 }
@@ -395,15 +416,34 @@ impl SearchAlgo {
         seed: u64,
         expand_threads: usize,
     ) -> SearchResult {
+        self.run_ranked(problem, backend, budget, depth, seed, expand_threads, None)
+    }
+
+    /// Like [`Self::run_threaded`], with an optional learned cost ranker
+    /// pre-ordering each node's candidate actions before they are scored
+    /// (see [`SearchCtx::set_ranker`], DESIGN.md §10). `None` is
+    /// bit-identical to the unranked run.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_ranked(
+        self,
+        problem: Problem,
+        backend: SharedBackend,
+        budget: Budget,
+        depth: usize,
+        seed: u64,
+        expand_threads: usize,
+        ranker: Option<Arc<CostRanker>>,
+    ) -> SearchResult {
         let t = expand_threads.max(1);
+        let r = ranker;
         match self {
-            SearchAlgo::Greedy1 => greedy::search(problem, backend, budget, depth, 1, t),
-            SearchAlgo::Greedy2 => greedy::search(problem, backend, budget, depth, 2, t),
-            SearchAlgo::Beam2Dfs => beam::dfs(problem, backend, budget, depth, 2, t),
-            SearchAlgo::Beam4Dfs => beam::dfs(problem, backend, budget, depth, 4, t),
-            SearchAlgo::Beam2Bfs => beam::bfs(problem, backend, budget, depth, 2, t),
-            SearchAlgo::Beam4Bfs => beam::bfs(problem, backend, budget, depth, 4, t),
-            SearchAlgo::Random => random::search(problem, backend, budget, depth, seed, t),
+            SearchAlgo::Greedy1 => greedy::search(problem, backend, budget, depth, 1, t, r),
+            SearchAlgo::Greedy2 => greedy::search(problem, backend, budget, depth, 2, t, r),
+            SearchAlgo::Beam2Dfs => beam::dfs(problem, backend, budget, depth, 2, t, r),
+            SearchAlgo::Beam4Dfs => beam::dfs(problem, backend, budget, depth, 4, t, r),
+            SearchAlgo::Beam2Bfs => beam::bfs(problem, backend, budget, depth, 2, t, r),
+            SearchAlgo::Beam4Bfs => beam::bfs(problem, backend, budget, depth, 4, t, r),
+            SearchAlgo::Random => random::search(problem, backend, budget, depth, seed, t, r),
         }
     }
 }
@@ -508,6 +548,65 @@ mod tests {
                 assert!(w[0] >= w[1], "finite scores out of order: {finite:?}");
             }
         }
+    }
+
+    #[test]
+    fn ranked_expand_scores_best_candidates_first() {
+        // A ranker that prefers deeper nests must move splits to the front
+        // of the scoring order without changing the returned (sorted) set,
+        // and with an ample budget the search outcome is unchanged.
+        let p = Problem::new(96, 128, 160);
+        let n = Nest::initial(p);
+        let ranker = Arc::new(
+            CostRanker::fit(
+                &{
+                    // Train y = "how many loops carry a size feature":
+                    // splits grow the nest, so predictions favor them.
+                    let mut xs = Vec::new();
+                    for k in 1..20usize {
+                        let mut x = vec![0.0f32; crate::STATE_DIM];
+                        for chunk in x.chunks_mut(crate::FEATS).take(k) {
+                            chunk[1] = 1.0;
+                        }
+                        xs.push(x);
+                    }
+                    xs
+                },
+                &(1..20).map(|k| k as f64).collect::<Vec<_>>(),
+                1e-6,
+            )
+            .unwrap(),
+        );
+
+        let mut plain = SearchCtx::new(p, be(), Budget::evals(10_000));
+        let mut ranked = SearchCtx::new(p, be(), Budget::evals(10_000));
+        ranked.set_ranker(ranker.clone());
+        let a = plain.expand(&n, 1);
+        let b = ranked.expand(&n, 1);
+        // Same candidate set, scores, and eval count — pre-ranking only
+        // reorders *scoring*, not the result (tie order may differ, so
+        // compare as score-keyed sets).
+        assert_eq!(a.len(), b.len());
+        let key = |v: &[(Action, Nest, f64)]| {
+            let mut k: Vec<(usize, u64)> =
+                v.iter().map(|(a, _, g)| (a.index(), g.to_bits())).collect();
+            k.sort_unstable();
+            k
+        };
+        assert_eq!(key(&a), key(&b));
+        assert_eq!(plain.evals(), ranked.evals());
+
+        // Under a truncating budget, the ranked context spends its evals
+        // on the predicted-best candidates (splits grow the nest, so the
+        // size-sum ranker puts them first).
+        let mut tight = SearchCtx::with_threads(p, be(), Budget::evals(4), 2);
+        tight.set_ranker(ranker);
+        let exp = tight.expand(&n, 1);
+        assert_eq!(exp.len(), 3, "3 evals left after the initial nest");
+        assert!(
+            exp.iter().all(|(a, _, _)| matches!(a, Action::Split(_))),
+            "ranker must steer the tight budget to splits: {exp:?}"
+        );
     }
 
     #[test]

@@ -7,12 +7,16 @@ use super::{Budget, SearchCtx, SearchResult};
 use crate::backend::SharedBackend;
 use crate::env::actions::Action;
 use crate::ir::{Nest, Problem};
+use crate::store::cost::CostRanker;
 use crate::util::rng::Pcg32;
+use std::sync::Arc;
 
 /// Random action-sequence search. `expand_threads` is accepted for
 /// interface uniformity; random search evaluates one rollout state at a
 /// time, so its parallelism comes from the [`super::batch`] driver running
-/// many problems (or seeds) at once.
+/// many problems (or seeds) at once. The `ranker` is likewise accepted
+/// for uniformity but unused: random search never calls `expand`, and
+/// steering its draws would make it non-random.
 pub fn search(
     problem: Problem,
     backend: SharedBackend,
@@ -20,6 +24,7 @@ pub fn search(
     depth: usize,
     seed: u64,
     expand_threads: usize,
+    _ranker: Option<Arc<CostRanker>>,
 ) -> SearchResult {
     let mut ctx = SearchCtx::with_threads(problem, backend, budget, expand_threads);
     let mut rng = Pcg32::new(seed);
@@ -58,15 +63,15 @@ mod tests {
 
     #[test]
     fn improves_with_budget() {
-        let r = search(Problem::new(128, 128, 128), be(), Budget::evals(400), 10, 7, 1);
+        let r = search(Problem::new(128, 128, 128), be(), Budget::evals(400), 10, 7, 1, None);
         assert!(r.speedup() > 1.0, "speedup {}", r.speedup());
     }
 
     #[test]
     fn deterministic_for_seed() {
         let p = Problem::new(96, 112, 128);
-        let a = search(p, be(), Budget::evals(200), 10, 123, 1);
-        let b = search(p, be(), Budget::evals(200), 10, 123, 1);
+        let a = search(p, be(), Budget::evals(200), 10, 123, 1, None);
+        let b = search(p, be(), Budget::evals(200), 10, 123, 1, None);
         assert_eq!(a.best_gflops, b.best_gflops);
         assert_eq!(a.best.loops, b.best.loops);
     }
@@ -74,8 +79,8 @@ mod tests {
     #[test]
     fn different_seeds_explore_differently() {
         let p = Problem::new(96, 112, 128);
-        let a = search(p, be(), Budget::evals(150), 10, 1, 1);
-        let b = search(p, be(), Budget::evals(150), 10, 2, 1);
+        let a = search(p, be(), Budget::evals(150), 10, 1, 1, None);
+        let b = search(p, be(), Budget::evals(150), 10, 2, 1, None);
         // Not a hard guarantee, but with 150 evals the visited sets differ.
         assert!(a.best.loops != b.best.loops || a.best_gflops == b.best_gflops);
     }

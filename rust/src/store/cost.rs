@@ -1,0 +1,347 @@
+//! Learned cost model: a ridge-regression ranker over the featurizer's
+//! state vector, trained from the tuning store (DESIGN.md §10).
+//!
+//! The full analytical cost model predicts GFLOPS from first principles;
+//! this model *learns* the mapping from recorded measurements instead
+//! (the AutoTVM / TPU-learned-cost-model direction), and is used purely
+//! as a **ranker**: [`crate::search::SearchCtx`] pre-orders expansion
+//! candidates by predicted GFLOPS so a truncating eval budget is spent on
+//! the most promising actions first, and the transfer strategy orders
+//! neighbor schedules before paying for real evaluations. Only the
+//! *ordering* of predictions matters, so a small linear model over the
+//! [`crate::featurize::state_vector`] features (trip counts, tails, nest
+//! kind, stride histograms — the same 200 values the RL networks see) is
+//! enough to be useful while staying dependency-free.
+//!
+//! Weights are stored through the [`ParamSet`] plumbing (`LTPS` binary,
+//! the same format trained policies use), so `fit-cost-model --save` and
+//! `--ranker` round-trip without a new file format.
+
+use super::TuningStore;
+use crate::featurize::state_vector;
+use crate::ir::Nest;
+use crate::rl::params::ParamSet;
+use crate::runtime::literal::HostTensor;
+use crate::STATE_DIM;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// Model size: one weight per state feature plus a bias.
+pub const COST_FEATS: usize = STATE_DIM + 1;
+
+/// Linear ranker `predict(nest) = w · state_vector(nest) + b`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CostRanker {
+    /// `COST_FEATS` weights; the last entry is the bias.
+    weights: Vec<f32>,
+}
+
+/// Training summary of one fit.
+#[derive(Clone, Debug)]
+pub struct FitReport {
+    /// Distinct (schedule, GFLOPS) samples used.
+    pub samples: usize,
+    /// Records skipped (non-finite GFLOPS, failed replay, duplicates).
+    pub skipped: usize,
+    /// Root-mean-square error on the training samples, GFLOPS.
+    pub rmse: f64,
+    /// Pairwise ranking accuracy on the training samples (fraction of
+    /// sampled pairs whose predicted order matches the measured order;
+    /// 0.5 = chance).
+    pub rank_accuracy: f64,
+}
+
+impl std::fmt::Display for FitReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "fit: {} samples ({} skipped), train RMSE {:.3} GFLOPS, \
+             pairwise rank accuracy {:.1}%",
+            self.samples,
+            self.skipped,
+            self.rmse,
+            100.0 * self.rank_accuracy
+        )
+    }
+}
+
+impl CostRanker {
+    /// Ranker from explicit weights (must be `COST_FEATS` long).
+    pub fn from_weights(weights: Vec<f32>) -> Result<CostRanker> {
+        if weights.len() != COST_FEATS {
+            bail!("cost ranker wants {COST_FEATS} weights, got {}", weights.len());
+        }
+        Ok(CostRanker { weights })
+    }
+
+    /// Predicted GFLOPS of a schedule. Cheap (one dot product over the
+    /// state vector); only the ordering of predictions is meaningful.
+    pub fn predict(&self, nest: &Nest) -> f64 {
+        self.predict_features(&state_vector(nest))
+    }
+
+    /// The model itself: bias + dot product over a raw feature vector.
+    /// Shared by [`Self::predict`] and the fit diagnostics so both always
+    /// score the same function.
+    fn predict_features(&self, x: &[f32]) -> f64 {
+        let mut y = self.weights[STATE_DIM] as f64;
+        for (w, v) in self.weights[..STATE_DIM].iter().zip(x) {
+            y += *w as f64 * *v as f64;
+        }
+        y
+    }
+
+    /// Ridge regression on explicit `(features, gflops)` samples: solves
+    /// `(XᵀX + λI) w = Xᵀy` by Gaussian elimination with partial pivoting
+    /// (the system is `COST_FEATS`-square — milliseconds).
+    pub fn fit(xs: &[Vec<f32>], ys: &[f64], lambda: f64) -> Result<CostRanker> {
+        if xs.len() != ys.len() || xs.is_empty() {
+            bail!("fit wants equally many features and targets (> 0)");
+        }
+        let d = COST_FEATS;
+        for x in xs {
+            if x.len() != STATE_DIM {
+                bail!("feature vector has {} entries, want {STATE_DIM}", x.len());
+            }
+        }
+        // Augmented normal matrix [A | b], with a constant 1.0 feature for
+        // the bias at index STATE_DIM.
+        let mut a = vec![vec![0.0f64; d + 1]; d];
+        let feat = |x: &Vec<f32>, i: usize| -> f64 {
+            if i == STATE_DIM {
+                1.0
+            } else {
+                x[i] as f64
+            }
+        };
+        for (x, &y) in xs.iter().zip(ys) {
+            for i in 0..d {
+                let xi = feat(x, i);
+                if xi == 0.0 {
+                    continue;
+                }
+                for (j, cell) in a[i][..d].iter_mut().enumerate().skip(i) {
+                    *cell += xi * feat(x, j);
+                }
+                a[i][d] += xi * y;
+            }
+        }
+        // Mirror the upper triangle and add the ridge.
+        for i in 0..d {
+            for j in 0..i {
+                a[i][j] = a[j][i];
+            }
+            a[i][i] += lambda.max(1e-12);
+        }
+        // Gaussian elimination with partial pivoting.
+        for col in 0..d {
+            let pivot = (col..d)
+                .max_by(|&r1, &r2| a[r1][col].abs().total_cmp(&a[r2][col].abs()))
+                .expect("non-empty range");
+            a.swap(col, pivot);
+            let p = a[col][col];
+            if p.abs() < 1e-30 {
+                continue; // fully regularized system keeps this unreachable
+            }
+            for row in col + 1..d {
+                let f = a[row][col] / p;
+                if f == 0.0 {
+                    continue;
+                }
+                let (top, bottom) = a.split_at_mut(row);
+                let (pivot_row, target) = (&top[col], &mut bottom[0]);
+                for k in col..=d {
+                    target[k] -= f * pivot_row[k];
+                }
+            }
+        }
+        let mut w = vec![0.0f64; d];
+        for col in (0..d).rev() {
+            let mut acc = a[col][d];
+            for k in col + 1..d {
+                acc -= a[col][k] * w[k];
+            }
+            w[col] = if a[col][col].abs() < 1e-30 { 0.0 } else { acc / a[col][col] };
+        }
+        CostRanker::from_weights(w.into_iter().map(|v| v as f32).collect())
+    }
+
+    /// Fit from every replayable record in `store` scored by `backend`
+    /// (plus each problem's untiled initial schedule, so the model sees
+    /// both ends of the quality range). Records of other backends are
+    /// skipped, not pooled — measured and modeled GFLOPS live on
+    /// incommensurate scales, and a ranker mixing them would mis-order
+    /// both. Duplicated schedules and non-finite measurements are
+    /// skipped too.
+    pub fn fit_from_store(
+        store: &TuningStore,
+        backend: &str,
+        lambda: f64,
+    ) -> Result<(CostRanker, FitReport)> {
+        let mut xs: Vec<Vec<f32>> = Vec::new();
+        let mut ys: Vec<f64> = Vec::new();
+        let mut skipped = 0usize;
+        let mut seen = std::collections::HashSet::new();
+        for (_, problem, records) in store.snapshot() {
+            let Some(p) = problem else {
+                skipped += records.len();
+                continue;
+            };
+            let mut initial_done = false;
+            for rec in records {
+                if rec.backend != backend {
+                    skipped += 1;
+                    continue;
+                }
+                match rec.replay(p) {
+                    Ok(nest) if rec.gflops.is_finite() => {
+                        if seen.insert(crate::backend::schedule_hash(&nest)) {
+                            xs.push(state_vector(&nest));
+                            ys.push(rec.gflops);
+                        } else {
+                            skipped += 1;
+                        }
+                        if !initial_done && rec.gflops_initial.is_finite() {
+                            let init = Nest::initial(p);
+                            if seen.insert(crate::backend::schedule_hash(&init)) {
+                                xs.push(state_vector(&init));
+                                ys.push(rec.gflops_initial);
+                            }
+                            initial_done = true;
+                        }
+                    }
+                    _ => skipped += 1,
+                }
+            }
+        }
+        if xs.len() < 8 {
+            bail!(
+                "cost-model fit needs at least 8 distinct {backend}-scored samples, \
+                 store yields {} (record more tunes first, e.g. `tune-many --store`)",
+                xs.len()
+            );
+        }
+        let ranker = CostRanker::fit(&xs, &ys, lambda)?;
+
+        // Training diagnostics.
+        let preds: Vec<f64> = xs.iter().map(|x| ranker.predict_features(x)).collect();
+        let rmse = (preds
+            .iter()
+            .zip(&ys)
+            .map(|(p, y)| (p - y) * (p - y))
+            .sum::<f64>()
+            / ys.len() as f64)
+            .sqrt();
+        let cap = 400.min(ys.len());
+        let (mut agree, mut pairs) = (0usize, 0usize);
+        for i in 0..cap {
+            for j in i + 1..cap {
+                if ys[i] == ys[j] {
+                    continue;
+                }
+                pairs += 1;
+                if (preds[i] - preds[j]).signum() == (ys[i] - ys[j]).signum() {
+                    agree += 1;
+                }
+            }
+        }
+        let report = FitReport {
+            samples: xs.len(),
+            skipped,
+            rmse,
+            rank_accuracy: if pairs == 0 { 0.0 } else { agree as f64 / pairs as f64 },
+        };
+        Ok((ranker, report))
+    }
+
+    /// Save through the shared `LTPS` parameter format.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        ParamSet::new(vec![HostTensor::new(vec![COST_FEATS], self.weights.clone())])
+            .save(path)
+    }
+
+    /// Load a ranker saved by [`Self::save`].
+    pub fn load(path: impl AsRef<Path>) -> Result<CostRanker> {
+        let path = path.as_ref();
+        let ps = ParamSet::load(path).with_context(|| format!("loading ranker {path:?}"))?;
+        let [tensor] = ps.tensors.as_slice() else {
+            bail!("ranker file {path:?} must hold exactly one tensor");
+        };
+        CostRanker::from_weights(tensor.data.clone())
+            .with_context(|| format!("ranker file {path:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::TuneResult;
+    use crate::backend::cost_model::CostModel;
+    use crate::backend::SharedBackend;
+    use crate::ir::Problem;
+    use crate::search::{Budget, SearchAlgo};
+    use crate::store::TuneRecord;
+
+    #[test]
+    fn fit_recovers_a_linear_target() {
+        // y = 3*x2 - 2*x5 + 1 over sparse one-hot-ish features.
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        for i in 0..40 {
+            let mut x = vec![0.0f32; STATE_DIM];
+            x[2] = (i % 7) as f32;
+            x[5] = (i % 5) as f32;
+            xs.push(x.clone());
+            ys.push(3.0 * x[2] as f64 - 2.0 * x[5] as f64 + 1.0);
+        }
+        let r = CostRanker::fit(&xs, &ys, 1e-6).unwrap();
+        for (x, y) in xs.iter().zip(&ys) {
+            let pred = r.predict_features(x);
+            assert!((pred - y).abs() < 1e-3, "pred {pred} want {y}");
+        }
+    }
+
+    #[test]
+    fn save_load_round_trip() {
+        let dir = std::env::temp_dir().join(format!("lt_cost_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cost.ltps");
+        let r =
+            CostRanker::from_weights((0..COST_FEATS).map(|i| i as f32 * 0.25).collect()).unwrap();
+        r.save(&path).unwrap();
+        assert_eq!(CostRanker::load(&path).unwrap(), r);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn fit_from_store_ranks_better_than_chance() {
+        // Warm a store with greedy searches over a spread of matmuls and
+        // check the learned ranker orders schedules usefully.
+        let store = crate::store::TuningStore::in_memory();
+        let be = SharedBackend::with_factory(CostModel::default);
+        for m in [64usize, 96, 128, 160, 192] {
+            for n in [64usize, 128] {
+                let p = Problem::matmul(m, n, 96);
+                let r = SearchAlgo::Greedy2.run(p, be.clone(), Budget::evals(120), 8, 7);
+                let result = TuneResult::from_search(r);
+                store.append(TuneRecord::from_result(p, &result, be.name(), 7)).unwrap();
+            }
+        }
+        let (ranker, report) =
+            CostRanker::fit_from_store(&store, "cost_model", 1.0).unwrap();
+        assert!(report.samples >= 16, "{report}");
+        assert!(report.rank_accuracy > 0.6, "{report}");
+        // Predictions must be finite and reproducible.
+        let p = Problem::matmul(80, 80, 96);
+        let nest = crate::ir::Nest::initial(p);
+        let a = ranker.predict(&nest);
+        assert!(a.is_finite());
+        assert_eq!(a, ranker.predict(&nest));
+    }
+
+    #[test]
+    fn fit_from_store_rejects_tiny_corpora() {
+        let store = crate::store::TuningStore::in_memory();
+        assert!(CostRanker::fit_from_store(&store, "cost_model", 1.0).is_err());
+    }
+}

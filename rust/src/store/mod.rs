@@ -1,0 +1,582 @@
+//! Persistent tuning store + learned cost model (DESIGN.md §10).
+//!
+//! The serving-system memory the stateless tuner lacked: every completed
+//! tune is recorded as a [`TuneRecord`] (`tune_record/v1` JSONL, see
+//! [`record`]), repeat traffic for an exact problem is answered from the
+//! store with zero backend evaluations, and cold misses can be
+//! *transfer-tuned* by replaying the best schedules of the nearest
+//! recorded problems ([`transfer`]). A small ridge-regression ranker
+//! trained from the store ([`cost`]) pre-orders search expansion and
+//! replay candidates.
+//!
+//! [`TuningStore`] is a cheap-to-clone `Arc` handle over an append-only
+//! JSONL file plus an in-memory index sharded across [`STORE_SHARDS`]
+//! locks (keyed by exact problem id): the service and the batch driver
+//! share one handle, lookups on the hot serve path never contend on a
+//! single lock, and appends serialize only on the file itself (one JSONL
+//! fd). Loading tolerates corrupt lines (counted, skipped) so a torn
+//! append never poisons the whole store.
+
+pub mod cost;
+pub mod record;
+pub mod transfer;
+
+pub use record::{decode_loops, encode_loops, TuneRecord, RECORD_SCHEMA};
+
+use crate::ir::Problem;
+use crate::util::json::{write_json, Json};
+use anyhow::{Context, Result};
+use std::collections::{BTreeMap, HashMap};
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Number of independent index shards (same rationale as the evaluation
+/// cache: uniform key hashing keeps concurrent writers off each other's
+/// locks).
+pub const STORE_SHARDS: usize = 16;
+
+/// One problem's slot in the index: its decoded [`Problem`] (None when the
+/// recorded spec no longer parses — e.g. a custom kind) and every record
+/// seen for it, in append order.
+struct ProblemEntry {
+    problem: Option<Problem>,
+    records: Vec<Arc<TuneRecord>>,
+}
+
+struct Shard {
+    by_problem: HashMap<String, ProblemEntry>,
+}
+
+struct StoreInner {
+    /// Backing JSONL file; `None` = in-memory only (tests, experiments).
+    path: Option<PathBuf>,
+    file: Mutex<Option<std::fs::File>>,
+    shards: Vec<Mutex<Shard>>,
+    records: AtomicU64,
+    corrupt: AtomicU64,
+}
+
+/// Arc-shared handle over the tuning-record store. Clone freely; all
+/// clones share one index and one append file.
+#[derive(Clone)]
+pub struct TuningStore(Arc<StoreInner>);
+
+/// One indexed problem as [`TuningStore::snapshot`] returns it: the
+/// problem-id key, its decoded [`Problem`] (None when the recorded spec
+/// no longer parses), and every record in append order.
+pub type ProblemRecords = (String, Option<Problem>, Vec<Arc<TuneRecord>>);
+
+/// FNV-1a over the problem-id string — the shard selector.
+fn id_hash(id: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in id.bytes() {
+        h = (h ^ b as u64).wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+impl TuningStore {
+    fn build(path: Option<PathBuf>, file: Option<std::fs::File>) -> Self {
+        let shards = (0..STORE_SHARDS)
+            .map(|_| Mutex::new(Shard { by_problem: HashMap::new() }))
+            .collect();
+        TuningStore(Arc::new(StoreInner {
+            path,
+            file: Mutex::new(file),
+            shards,
+            records: AtomicU64::new(0),
+            corrupt: AtomicU64::new(0),
+        }))
+    }
+
+    /// Volatile store with no backing file (experiments, tests).
+    pub fn in_memory() -> Self {
+        Self::build(None, None)
+    }
+
+    /// Open (or create) the JSONL store at `path`, loading every existing
+    /// record. Unreadable lines are counted as corrupt and skipped — a
+    /// torn final append must not lose the rest of the corpus.
+    pub fn open(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)
+                    .with_context(|| format!("creating store dir {parent:?}"))?;
+            }
+        }
+        // Stream line by line: corpora grow without bound, so loading
+        // must not hold the whole file in memory on top of the index.
+        let existing = match std::fs::File::open(path) {
+            Ok(f) => Some(std::io::BufReader::new(f)),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => None,
+            Err(e) => return Err(e).with_context(|| format!("reading store {path:?}")),
+        };
+        let file = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(path)
+            .with_context(|| format!("opening store {path:?} for append"))?;
+        let store = Self::build(Some(path.to_path_buf()), Some(file));
+        if let Some(reader) = existing {
+            use std::io::BufRead as _;
+            for line in reader.lines() {
+                let line = line.with_context(|| format!("reading store {path:?}"))?;
+                if line.trim().is_empty() {
+                    continue;
+                }
+                match TuneRecord::from_json(&line) {
+                    Ok(rec) => store.index(Arc::new(rec)),
+                    Err(_) => {
+                        store.0.corrupt.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            }
+        }
+        Ok(store)
+    }
+
+    /// Path of the backing file, if any.
+    pub fn path(&self) -> Option<&Path> {
+        self.0.path.as_deref()
+    }
+
+    fn shard_for(&self, id: &str) -> &Mutex<Shard> {
+        &self.0.shards[(id_hash(id) as usize) % STORE_SHARDS]
+    }
+
+    /// Index a record (no file write).
+    fn index(&self, rec: Arc<TuneRecord>) {
+        let mut shard = self.shard_for(&rec.problem).lock().expect("store shard poisoned");
+        let entry = shard.by_problem.entry(rec.problem.clone()).or_insert_with(|| ProblemEntry {
+            problem: crate::api::spec::parse_problem(&rec.problem).ok(),
+            records: Vec::new(),
+        });
+        entry.records.push(rec);
+        self.0.records.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Append one record: indexed and written to the backing file under
+    /// the file lock, so an append is atomic with respect to
+    /// [`Self::compact`] (it lands either wholly before or wholly after a
+    /// compaction, never half-indexed). Appends therefore serialize on
+    /// the file lock — inherent to one JSONL fd anyway; the shard
+    /// striping keeps the hot *read* path (lookups, the serve path)
+    /// contention-free.
+    pub fn append(&self, rec: TuneRecord) -> Result<()> {
+        let rec = Arc::new(rec);
+        let mut guard = self.0.file.lock().expect("store file poisoned");
+        self.index(rec.clone());
+        if let Some(f) = guard.as_mut() {
+            let mut line = rec.to_json_line();
+            line.push('\n');
+            f.write_all(line.as_bytes())
+                .with_context(|| format!("appending to store {:?}", self.0.path))?;
+        }
+        drop(guard);
+        Ok(())
+    }
+
+    /// Best (highest finite-GFLOPS) record for an exact problem id scored
+    /// by `backend` — the warm-serving lookup.
+    pub fn lookup(&self, problem_id: &str, backend: &str) -> Option<Arc<TuneRecord>> {
+        let shard = self.shard_for(problem_id).lock().expect("store shard poisoned");
+        let entry = shard.by_problem.get(problem_id)?;
+        entry
+            .records
+            .iter()
+            .filter(|r| r.backend == backend && r.gflops.is_finite())
+            .max_by(|a, b| a.gflops.total_cmp(&b.gflops))
+            .cloned()
+    }
+
+    /// Every record of an exact problem id, in append order.
+    pub fn records_for(&self, problem_id: &str) -> Vec<Arc<TuneRecord>> {
+        let shard = self.shard_for(problem_id).lock().expect("store shard poisoned");
+        shard.by_problem.get(problem_id).map(|e| e.records.clone()).unwrap_or_default()
+    }
+
+    /// Snapshot of the whole index: `(decoded problem, records)` per
+    /// problem id, sorted by id for deterministic iteration. Records are
+    /// `Arc`-shared, so this clones handles, not data.
+    pub fn snapshot(&self) -> Vec<ProblemRecords> {
+        let mut out = Vec::new();
+        for shard in &self.0.shards {
+            let shard = shard.lock().expect("store shard poisoned");
+            for (id, entry) in &shard.by_problem {
+                out.push((id.clone(), entry.problem, entry.records.clone()));
+            }
+        }
+        out.sort_by(|a, b| a.0.cmp(&b.0));
+        out
+    }
+
+    /// The `k` nearest recorded problems to `target` with a best record
+    /// scored by `backend`: same workload kind and dim count, ranked by
+    /// L2 distance over per-dim `log2(extent)` (ties broken by problem id
+    /// for determinism). Returns `(distance, problem, best record)`.
+    pub fn nearest(
+        &self,
+        target: Problem,
+        backend: &str,
+        k: usize,
+    ) -> Vec<(f64, Problem, Arc<TuneRecord>)> {
+        // Scan shard by shard, filtering to transfer-compatible problems
+        // *before* cloning anything: the serve path calls this per cold
+        // miss, so it must not copy the whole index (only the same-kind
+        // candidates, typically a small fraction of the corpus).
+        let mut cands = Vec::new();
+        for shard in &self.0.shards {
+            let shard = shard.lock().expect("store shard poisoned");
+            for (id, entry) in &shard.by_problem {
+                let Some(p) = entry.problem else { continue };
+                let Some(d) = transfer::problem_distance(p, target) else { continue };
+                let best = entry
+                    .records
+                    .iter()
+                    .filter(|r| r.backend == backend && r.gflops.is_finite())
+                    .max_by(|a, b| a.gflops.total_cmp(&b.gflops));
+                if let Some(rec) = best {
+                    cands.push((d, id.clone(), p, rec.clone()));
+                }
+            }
+        }
+        cands.sort_by(|a, b| a.0.total_cmp(&b.0).then_with(|| a.1.cmp(&b.1)));
+        cands.truncate(k);
+        cands.into_iter().map(|(d, _, p, r)| (d, p, r)).collect()
+    }
+
+    /// Number of indexed records.
+    pub fn len(&self) -> u64 {
+        self.0.records.load(Ordering::Relaxed)
+    }
+
+    /// Whether the store holds no records.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Corrupt lines skipped while loading the backing file.
+    pub fn corrupt_lines(&self) -> u64 {
+        self.0.corrupt.load(Ordering::Relaxed)
+    }
+
+    /// Aggregate statistics (the `db stats` subcommand).
+    pub fn stats(&self) -> StoreStats {
+        let mut by_kind = BTreeMap::new();
+        let mut by_strategy = BTreeMap::new();
+        let mut by_backend = BTreeMap::new();
+        let mut problems = 0u64;
+        let mut records = 0u64;
+        for (_, _, recs) in self.snapshot() {
+            problems += 1;
+            for r in recs {
+                records += 1;
+                *by_kind.entry(r.kind.clone()).or_insert(0u64) += 1;
+                *by_strategy.entry(r.strategy.clone()).or_insert(0u64) += 1;
+                *by_backend.entry(r.backend.clone()).or_insert(0u64) += 1;
+            }
+        }
+        StoreStats {
+            records,
+            problems,
+            corrupt_lines: self.corrupt_lines(),
+            by_kind,
+            by_strategy,
+            by_backend,
+        }
+    }
+
+    /// All records as JSONL, sorted by (problem id, descending GFLOPS) —
+    /// the `db export` subcommand.
+    pub fn export_jsonl(&self) -> String {
+        let mut out = String::new();
+        for (_, _, mut recs) in self.snapshot() {
+            recs.sort_by(|a, b| b.gflops.total_cmp(&a.gflops));
+            for r in recs {
+                out.push_str(&r.to_json_line());
+                out.push('\n');
+            }
+        }
+        out
+    }
+
+    /// Drop everything but the best finite-GFLOPS record per
+    /// (problem, backend) and rewrite the backing file atomically
+    /// (tmp + rename). Returns `(kept, dropped)`.
+    ///
+    /// Safe against concurrent appends *within this process*: appends
+    /// hold the same file lock, so they land wholly before or wholly
+    /// after the compaction. Compacting a file that a **separate
+    /// process** is appending to is unsupported — the other process's
+    /// append fd keeps pointing at the replaced (unlinked) inode and its
+    /// subsequent writes are lost; run `db compact` only when no other
+    /// process serves the store.
+    pub fn compact(&self) -> Result<(u64, u64)> {
+        // The file lock gates the whole rewrite; in-process appenders
+        // block until the rebuilt index + reopened file are in place.
+        let mut file_guard = self.0.file.lock().expect("store file poisoned");
+        let mut kept: Vec<Arc<TuneRecord>> = Vec::new();
+        let mut dropped = 0u64;
+        for (_, _, recs) in self.snapshot() {
+            let mut best: HashMap<&str, &Arc<TuneRecord>> = HashMap::new();
+            for r in &recs {
+                if !r.gflops.is_finite() {
+                    continue;
+                }
+                match best.get(r.backend.as_str()) {
+                    Some(b) if b.gflops >= r.gflops => {}
+                    _ => {
+                        best.insert(r.backend.as_str(), r);
+                    }
+                }
+            }
+            let keep: Vec<Arc<TuneRecord>> = best.into_values().cloned().collect();
+            dropped += recs.len() as u64 - keep.len() as u64;
+            kept.extend(keep);
+        }
+        kept.sort_by(|a, b| a.problem.cmp(&b.problem).then_with(|| a.backend.cmp(&b.backend)));
+
+        if let Some(path) = &self.0.path {
+            let tmp = path.with_extension("tmp");
+            let mut text = String::new();
+            for r in &kept {
+                text.push_str(&r.to_json_line());
+                text.push('\n');
+            }
+            std::fs::write(&tmp, text).with_context(|| format!("writing {tmp:?}"))?;
+            std::fs::rename(&tmp, path)
+                .with_context(|| format!("replacing store {path:?}"))?;
+            *file_guard = Some(
+                std::fs::OpenOptions::new()
+                    .append(true)
+                    .open(path)
+                    .with_context(|| format!("reopening store {path:?}"))?,
+            );
+        }
+
+        // Rebuild the index from the kept set.
+        for shard in &self.0.shards {
+            shard.lock().expect("store shard poisoned").by_problem.clear();
+        }
+        self.0.records.store(0, Ordering::Relaxed);
+        let n = kept.len() as u64;
+        for r in kept {
+            self.index(r);
+        }
+        drop(file_guard);
+        Ok((n, dropped))
+    }
+}
+
+/// Aggregate store statistics.
+#[derive(Clone, Debug)]
+pub struct StoreStats {
+    /// Total indexed records.
+    pub records: u64,
+    /// Distinct problem ids.
+    pub problems: u64,
+    /// Corrupt lines skipped at load.
+    pub corrupt_lines: u64,
+    /// Record count per workload kind.
+    pub by_kind: BTreeMap<String, u64>,
+    /// Record count per producing strategy.
+    pub by_strategy: BTreeMap<String, u64>,
+    /// Record count per scoring backend.
+    pub by_backend: BTreeMap<String, u64>,
+}
+
+impl StoreStats {
+    /// Human-readable multi-line summary.
+    pub fn summary(&self) -> String {
+        let fmt = |m: &BTreeMap<String, u64>| {
+            m.iter().map(|(k, v)| format!("{k}={v}")).collect::<Vec<_>>().join(" ")
+        };
+        format!(
+            "tuning store: {} records over {} problems ({} corrupt lines skipped)\n  \
+             by kind:     {}\n  by strategy: {}\n  by backend:  {}",
+            self.records,
+            self.problems,
+            self.corrupt_lines,
+            fmt(&self.by_kind),
+            fmt(&self.by_strategy),
+            fmt(&self.by_backend),
+        )
+    }
+
+    /// JSON form (machine-readable `db stats`).
+    pub fn to_json(&self) -> String {
+        let counts = |m: &BTreeMap<String, u64>| {
+            Json::Obj(m.iter().map(|(k, v)| (k.clone(), Json::Num(*v as f64))).collect())
+        };
+        let mut root = BTreeMap::new();
+        root.insert("schema".into(), Json::Str("store_stats/v1".into()));
+        root.insert("records".into(), Json::Num(self.records as f64));
+        root.insert("problems".into(), Json::Num(self.problems as f64));
+        root.insert("corrupt_lines".into(), Json::Num(self.corrupt_lines as f64));
+        root.insert("by_kind".into(), counts(&self.by_kind));
+        root.insert("by_strategy".into(), counts(&self.by_strategy));
+        root.insert("by_backend".into(), counts(&self.by_backend));
+        let mut out = String::new();
+        write_json(&Json::Obj(root), &mut out);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::TuneResult;
+    use crate::ir::Nest;
+
+    fn result_for(problem: Problem, strategy: &str, gflops: f64) -> TuneResult {
+        let mut nest = Nest::initial(problem);
+        let _ = nest.split(8);
+        TuneResult {
+            strategy: strategy.to_string(),
+            best: nest,
+            best_gflops: gflops,
+            initial_gflops: 1.0,
+            evals: 10,
+            cache_hits: 0,
+            elapsed: 0.01,
+            trace: Vec::new(),
+            actions: Vec::new(),
+            note: None,
+        }
+    }
+
+    fn rec(problem: Problem, strategy: &str, gflops: f64) -> TuneRecord {
+        TuneRecord::from_result(problem, &result_for(problem, strategy, gflops), "cost_model", 7)
+    }
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("lt_store_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn append_lookup_and_best_selection() {
+        let store = TuningStore::in_memory();
+        let p = Problem::matmul(64, 64, 64);
+        store.append(rec(p, "greedy2", 5.0)).unwrap();
+        store.append(rec(p, "random", 9.0)).unwrap();
+        store.append(rec(p, "beam4bfs", f64::NAN)).unwrap();
+        let hit = store.lookup(&p.id(), "cost_model").unwrap();
+        assert_eq!(hit.strategy, "random");
+        assert_eq!(hit.gflops, 9.0);
+        assert!(store.lookup(&p.id(), "executor").is_none());
+        assert!(store.lookup("mm_1x1x1", "cost_model").is_none());
+        assert_eq!(store.len(), 3);
+        assert_eq!(store.records_for(&p.id()).len(), 3);
+    }
+
+    #[test]
+    fn reload_from_disk_round_trips_and_tolerates_corruption() {
+        let dir = tmpdir("reload");
+        let path = dir.join("tune.db");
+        {
+            let store = TuningStore::open(&path).unwrap();
+            store.append(rec(Problem::matmul(64, 64, 64), "greedy2", 4.0)).unwrap();
+            store.append(rec(Problem::matmul(96, 96, 96), "greedy2", 6.0)).unwrap();
+        }
+        // Simulate a torn append plus line noise.
+        let mut text = std::fs::read_to_string(&path).unwrap();
+        text.push_str("{\"schema\":\"tune_record/v1\",\"problem\":\"mm_1\n");
+        text.push_str("not json at all\n");
+        std::fs::write(&path, &text).unwrap();
+
+        let store = TuningStore::open(&path).unwrap();
+        assert_eq!(store.len(), 2);
+        assert_eq!(store.corrupt_lines(), 2);
+        let hit = store.lookup("mm_96x96x96", "cost_model").unwrap();
+        assert_eq!(hit.gflops, 6.0);
+        // Replay of a reloaded record is bit-exact.
+        hit.replay_exact().unwrap();
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn stats_and_export_cover_all_records() {
+        let store = TuningStore::in_memory();
+        store.append(rec(Problem::matmul(64, 64, 64), "greedy2", 4.0)).unwrap();
+        store.append(rec(Problem::matmul(64, 64, 64), "random", 5.0)).unwrap();
+        store.append(rec(Problem::conv2d(16, 16, 3, 3), "greedy2", 2.0)).unwrap();
+        let stats = store.stats();
+        assert_eq!(stats.records, 3);
+        assert_eq!(stats.problems, 2);
+        assert_eq!(stats.by_kind["mm"], 2);
+        assert_eq!(stats.by_kind["conv2d"], 1);
+        assert_eq!(stats.by_strategy["greedy2"], 2);
+        assert!(stats.summary().contains("3 records"));
+        crate::util::json::parse(&stats.to_json()).unwrap();
+        let export = store.export_jsonl();
+        assert_eq!(export.lines().count(), 3);
+        for line in export.lines() {
+            TuneRecord::from_json(line).unwrap();
+        }
+    }
+
+    #[test]
+    fn compact_keeps_best_per_problem_backend_and_rewrites_file() {
+        let dir = tmpdir("compact");
+        let path = dir.join("tune.db");
+        let store = TuningStore::open(&path).unwrap();
+        let p = Problem::matmul(64, 64, 64);
+        store.append(rec(p, "greedy2", 4.0)).unwrap();
+        store.append(rec(p, "random", 9.0)).unwrap();
+        store.append(rec(p, "beam2dfs", f64::NAN)).unwrap();
+        store.append(rec(Problem::matmul(96, 96, 96), "greedy2", 6.0)).unwrap();
+        let (kept, dropped) = store.compact().unwrap();
+        assert_eq!((kept, dropped), (2, 2));
+        assert_eq!(store.len(), 2);
+        assert_eq!(store.lookup(&p.id(), "cost_model").unwrap().gflops, 9.0);
+        // The rewritten file reloads to the compacted state, and appends
+        // after compaction still land on disk.
+        store.append(rec(Problem::matmul(80, 80, 80), "greedy2", 3.0)).unwrap();
+        let reloaded = TuningStore::open(&path).unwrap();
+        assert_eq!(reloaded.len(), 3);
+        assert_eq!(reloaded.corrupt_lines(), 0);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn nearest_ranks_by_dim_distance_within_kind() {
+        let store = TuningStore::in_memory();
+        for (m, g) in [(64usize, 3.0), (96, 4.0), (256, 5.0)] {
+            store.append(rec(Problem::matmul(m, 64, 64), "greedy2", g)).unwrap();
+        }
+        store.append(rec(Problem::conv2d(16, 16, 3, 3), "greedy2", 2.0)).unwrap();
+        let near = store.nearest(Problem::matmul(80, 64, 64), "cost_model", 2);
+        assert_eq!(near.len(), 2);
+        let ids: Vec<String> = near.iter().map(|(_, p, _)| p.id()).collect();
+        // log2(96/80) < log2(80/64): the 96 neighbor is nearer than the 64.
+        assert_eq!(ids, ["mm_96x64x64", "mm_64x64x64"]);
+        assert!(near[0].0 <= near[1].0);
+        // Wrong backend: nothing transferable.
+        assert!(store.nearest(Problem::matmul(80, 64, 64), "executor", 4).is_empty());
+    }
+
+    #[test]
+    fn concurrent_appends_from_many_threads_all_index() {
+        let store = TuningStore::in_memory();
+        std::thread::scope(|s| {
+            for t in 0..8usize {
+                let store = store.clone();
+                s.spawn(move || {
+                    for i in 0..25usize {
+                        let p = Problem::matmul(64 + 16 * (i % 13), 64 + 16 * t, 64);
+                        store.append(rec(p, "greedy2", (t * 100 + i) as f64)).unwrap();
+                    }
+                });
+            }
+        });
+        assert_eq!(store.len(), 8 * 25);
+        let stats = store.stats();
+        assert_eq!(stats.records, 200);
+        assert!(stats.problems <= 13 * 8);
+    }
+}

@@ -1,0 +1,390 @@
+//! One tuning measurement as a durable record (`tune_record/v1`).
+//!
+//! A [`TuneRecord`] captures everything needed to *replay* a completed
+//! tune without re-running the strategy: the problem's canonical spec
+//! string ([`crate::ir::Problem::id`], re-parseable by
+//! [`crate::api::spec::parse_problem`]), a canonical loops encoding of the
+//! best schedule (see [`encode_loops`]), the schedule's stable
+//! [`crate::backend::schedule_hash`], the measured GFLOPS before/after,
+//! and the provenance (backend kind, strategy, seed, eval count, action
+//! trace when the strategy produced one).
+//!
+//! Records are one JSON document per line over [`crate::util::json`] —
+//! the append-only JSONL format the [`super::TuningStore`] persists.
+//! `u64` identities (`dim_hash`, `nest_hash`) travel as 16-digit
+//! lower-hex strings and seeds as decimal strings so the full 64-bit
+//! range survives the f64 number type (same convention as
+//! `tune_request/v1`). A non-finite GFLOPS (a failed measurement) is
+//! emitted as JSON `null` and decoded back to NaN.
+
+use crate::api::TuneResult;
+use crate::ir::{Dim, Kind, Loop, Nest, Problem};
+use crate::util::json::{parse, write_json, Json};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+
+/// Wire schema tag of one record line.
+pub const RECORD_SCHEMA: &str = "tune_record/v1";
+
+/// One durable tuning measurement. See the module doc for field semantics.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TuneRecord {
+    /// Canonical problem spec (`Problem::id`, e.g. `mm_64x80x96`).
+    pub problem: String,
+    /// Workload family tag (`mm`, `bmm`, `conv2d`, ...).
+    pub kind: String,
+    /// [`Problem::dim_hash`] of the problem (fast integrity/seed key).
+    pub dim_hash: u64,
+    /// Canonical loops encoding of the best schedule ([`encode_loops`]).
+    pub loops: String,
+    /// Human-readable schedule signature (display only; `loops` is the
+    /// authoritative replay form).
+    pub schedule: String,
+    /// Action names of the rollout that produced the schedule (policy
+    /// strategy; empty when the strategy does not trace actions).
+    pub actions: Vec<String>,
+    /// Stable schedule hash ([`crate::backend::schedule_hash`] of the
+    /// replayed nest) — replays are verified against it bit-exactly.
+    pub nest_hash: u64,
+    /// Measured GFLOPS of the best schedule (NaN = failed measurement).
+    pub gflops: f64,
+    /// Measured GFLOPS of the untiled initial schedule.
+    pub gflops_initial: f64,
+    /// Backend kind that scored the schedule (`cost_model` / `executor`).
+    pub backend: String,
+    /// Strategy that produced the schedule (`greedy2`, `policy`, ...).
+    pub strategy: String,
+    /// Seed the producing request ran with.
+    pub seed: u64,
+    /// Backend evaluations the producing tune consumed.
+    pub evals: u64,
+}
+
+impl TuneRecord {
+    /// Record a completed [`TuneResult`] for `problem`.
+    pub fn from_result(problem: Problem, r: &TuneResult, backend: &str, seed: u64) -> TuneRecord {
+        TuneRecord {
+            problem: problem.id(),
+            kind: problem.kind().to_string(),
+            dim_hash: problem.dim_hash(),
+            loops: encode_loops(&r.best),
+            schedule: crate::ir::transform::schedule_signature(&r.best),
+            actions: r.actions.clone(),
+            nest_hash: crate::backend::schedule_hash(&r.best),
+            gflops: r.best_gflops,
+            gflops_initial: r.initial_gflops,
+            backend: backend.to_string(),
+            strategy: r.strategy.clone(),
+            seed,
+            evals: r.evals,
+        }
+    }
+
+    /// Replay the recorded schedule onto `problem` (the record's own
+    /// problem, or a structurally compatible neighbor for transfer
+    /// tuning). Fails when the encoding does not form a valid nest for
+    /// `problem`.
+    pub fn replay(&self, problem: Problem) -> Result<Nest> {
+        decode_loops(problem, &self.loops)
+    }
+
+    /// Replay onto the record's own problem and verify bit-exactness: the
+    /// decoded nest must hash back to the recorded `nest_hash`.
+    pub fn replay_exact(&self) -> Result<Nest> {
+        let problem = crate::api::spec::parse_problem(&self.problem)
+            .with_context(|| format!("record problem spec {:?}", self.problem))?;
+        let nest = self.replay(problem)?;
+        let h = crate::backend::schedule_hash(&nest);
+        if h != self.nest_hash {
+            bail!(
+                "replayed schedule hash {h:016x} != recorded {:016x} for {}",
+                self.nest_hash,
+                self.problem
+            );
+        }
+        Ok(nest)
+    }
+
+    /// Encode as one `tune_record/v1` JSON line (no trailing newline).
+    pub fn to_json_line(&self) -> String {
+        let mut root = BTreeMap::new();
+        root.insert("schema".into(), Json::Str(RECORD_SCHEMA.into()));
+        root.insert("problem".into(), Json::Str(self.problem.clone()));
+        root.insert("kind".into(), Json::Str(self.kind.clone()));
+        root.insert("dim_hash".into(), Json::Str(format!("{:016x}", self.dim_hash)));
+        root.insert("loops".into(), Json::Str(self.loops.clone()));
+        root.insert("schedule".into(), Json::Str(self.schedule.clone()));
+        if !self.actions.is_empty() {
+            root.insert(
+                "actions".into(),
+                Json::Arr(self.actions.iter().map(|a| Json::Str(a.clone())).collect()),
+            );
+        }
+        root.insert("nest_hash".into(), Json::Str(format!("{:016x}", self.nest_hash)));
+        root.insert("gflops".into(), Json::Num(self.gflops));
+        root.insert("gflops_initial".into(), Json::Num(self.gflops_initial));
+        root.insert("backend".into(), Json::Str(self.backend.clone()));
+        root.insert("strategy".into(), Json::Str(self.strategy.clone()));
+        root.insert("seed".into(), Json::Str(self.seed.to_string()));
+        root.insert("evals".into(), Json::Num(self.evals as f64));
+        let mut out = String::new();
+        write_json(&Json::Obj(root), &mut out);
+        out
+    }
+
+    /// Decode one `tune_record/v1` JSON line. Malformed lines are `Err`s
+    /// (the store counts them as corrupt and keeps loading).
+    pub fn from_json(text: &str) -> Result<TuneRecord> {
+        let doc = parse(text).map_err(|e| anyhow!("{e}"))?;
+        if let Some(s) = doc.get("schema").and_then(Json::as_str) {
+            if s != RECORD_SCHEMA {
+                bail!("unsupported record schema {s:?} (want {RECORD_SCHEMA})");
+            }
+        }
+        let s = |k: &str| -> Result<String> {
+            doc.get(k)
+                .and_then(Json::as_str)
+                .map(String::from)
+                .ok_or_else(|| anyhow!("record missing string field {k:?}"))
+        };
+        // A failed measurement is recorded as null -> NaN; a missing field
+        // is still an error (the producer always writes it).
+        let g = |k: &str| -> Result<f64> {
+            match doc.get(k) {
+                Some(Json::Null) => Ok(f64::NAN),
+                Some(v) => v.as_f64().ok_or_else(|| anyhow!("record field {k:?} not a number")),
+                None => Err(anyhow!("record missing number field {k:?}")),
+            }
+        };
+        let hex = |k: &str| -> Result<u64> {
+            let v = s(k)?;
+            u64::from_str_radix(&v, 16).map_err(|_| anyhow!("record field {k:?}: bad hex {v:?}"))
+        };
+        let actions = match doc.get("actions") {
+            None => Vec::new(),
+            Some(v) => v
+                .as_arr()
+                .ok_or_else(|| anyhow!("record actions must be an array"))?
+                .iter()
+                .map(|a| {
+                    a.as_str()
+                        .map(String::from)
+                        .ok_or_else(|| anyhow!("record action entries must be strings"))
+                })
+                .collect::<Result<_>>()?,
+        };
+        let seed = match doc.get("seed") {
+            None => 0,
+            Some(Json::Str(v)) => v.parse().map_err(|_| anyhow!("bad record seed {v:?}"))?,
+            Some(Json::Num(n)) if *n >= 0.0 && n.fract() == 0.0 => *n as u64,
+            Some(v) => bail!("bad record seed {v:?}"),
+        };
+        Ok(TuneRecord {
+            problem: s("problem")?,
+            kind: s("kind")?,
+            dim_hash: hex("dim_hash")?,
+            loops: s("loops")?,
+            schedule: s("schedule").unwrap_or_default(),
+            actions,
+            nest_hash: hex("nest_hash")?,
+            gflops: g("gflops")?,
+            gflops_initial: g("gflops_initial")?,
+            backend: s("backend")?,
+            strategy: s("strategy")?,
+            seed,
+            evals: g("evals").unwrap_or(0.0) as u64,
+        })
+    }
+}
+
+/// Canonical textual encoding of a nest's loops, e.g. `c0 c0x16 c1 c2 w0 w1`:
+/// one token per loop, `c`/`w` for compute/write-back, the dim index, and
+/// `xF` for a tile loop of factor `F` (roots carry no factor). Cursor
+/// position is deliberately not encoded — schedules are cached and hashed
+/// modulo the cursor.
+pub fn encode_loops(nest: &Nest) -> String {
+    nest.loops
+        .iter()
+        .map(|l| {
+            let tag = match l.kind {
+                Kind::Compute => 'c',
+                Kind::WriteBack => 'w',
+            };
+            match l.factor {
+                None => format!("{tag}{}", l.dim.index()),
+                Some(f) => format!("{tag}{}x{f}", l.dim.index()),
+            }
+        })
+        .collect::<Vec<_>>()
+        .join(" ")
+}
+
+/// Inverse of [`encode_loops`], instantiated for `problem` (which may be a
+/// different problem of the same dim structure — the transfer strategy's
+/// replay). The decoded nest is invariant-checked; any violation is an
+/// `Err`, never a panic.
+pub fn decode_loops(problem: Problem, encoded: &str) -> Result<Nest> {
+    let mut loops = Vec::new();
+    for tok in encoded.split_whitespace() {
+        let kind = match tok.as_bytes().first() {
+            Some(b'c') => Kind::Compute,
+            Some(b'w') => Kind::WriteBack,
+            _ => bail!("bad loop token {tok:?} (want c.../w...)"),
+        };
+        let rest = &tok[1..];
+        let (dim_s, factor) = match rest.split_once('x') {
+            Some((d, f)) => {
+                let f: usize =
+                    f.parse().with_context(|| format!("bad tile factor in {tok:?}"))?;
+                if f < 2 {
+                    bail!("tile factor {f} < 2 in {tok:?}");
+                }
+                (d, Some(f))
+            }
+            None => (rest, None),
+        };
+        let di: usize =
+            dim_s.parse().with_context(|| format!("bad dim index in {tok:?}"))?;
+        if di >= problem.n_dims() {
+            bail!("dim index {di} out of range for {}", problem.id());
+        }
+        loops.push(Loop { dim: Dim::new(di), factor, kind });
+    }
+    let nest = Nest { problem, loops, cursor: 0 };
+    nest.check_invariants()
+        .map_err(|e| anyhow!("replayed schedule invalid for {}: {e}", problem.id()))?;
+    Ok(nest)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn sample_record() -> TuneRecord {
+        let p = Problem::matmul(64, 80, 96);
+        let mut nest = Nest::initial(p);
+        nest.split(16).unwrap();
+        TuneRecord {
+            problem: p.id(),
+            kind: p.kind().to_string(),
+            dim_hash: p.dim_hash(),
+            loops: encode_loops(&nest),
+            schedule: crate::ir::transform::schedule_signature(&nest),
+            actions: vec!["split_16".into()],
+            nest_hash: crate::backend::schedule_hash(&nest),
+            gflops: 12.5,
+            gflops_initial: 3.25,
+            backend: "cost_model".into(),
+            strategy: "greedy2".into(),
+            seed: 0xdead_beef_dead_beef,
+            evals: 42,
+        }
+    }
+
+    #[test]
+    fn json_line_round_trips() {
+        let rec = sample_record();
+        let back = TuneRecord::from_json(&rec.to_json_line()).unwrap();
+        assert_eq!(back, rec);
+    }
+
+    #[test]
+    fn non_finite_gflops_round_trips_as_null() {
+        let mut rec = sample_record();
+        rec.gflops = f64::NAN;
+        let line = rec.to_json_line();
+        assert!(line.contains("\"gflops\":null"), "{line}");
+        let back = TuneRecord::from_json(&line).unwrap();
+        assert!(back.gflops.is_nan());
+        assert_eq!(back.gflops_initial, rec.gflops_initial);
+    }
+
+    #[test]
+    fn malformed_lines_are_errors() {
+        assert!(TuneRecord::from_json("not json").is_err());
+        assert!(TuneRecord::from_json("{}").is_err());
+        assert!(TuneRecord::from_json(r#"{"schema":"tune_record/v9"}"#).is_err());
+        let mut line = sample_record().to_json_line();
+        line.truncate(line.len() / 2);
+        assert!(TuneRecord::from_json(&line).is_err());
+    }
+
+    #[test]
+    fn replay_exact_verifies_the_hash() {
+        let rec = sample_record();
+        let nest = rec.replay_exact().unwrap();
+        assert_eq!(crate::backend::schedule_hash(&nest), rec.nest_hash);
+        let mut broken = rec.clone();
+        broken.nest_hash ^= 1;
+        assert!(broken.replay_exact().is_err());
+    }
+
+    #[test]
+    fn loops_encoding_round_trips_random_schedules() {
+        let problems = [
+            Problem::matmul(100, 96, 64),
+            Problem::batched_matmul(3, 50, 64, 48),
+            Problem::conv1d(75, 24, 5, 12),
+            Problem::conv2d(27, 29, 3, 5),
+            Problem::mlp(90, 70, 110),
+            Problem::matmul_transposed(64, 96, 80),
+        ];
+        for (pi, &p) in problems.iter().enumerate() {
+            let mut rng = Pcg32::new(0x5703 + pi as u64);
+            let mut n = Nest::initial(p);
+            for _ in 0..60 {
+                match rng.below(5) {
+                    0 => drop(n.cursor_up()),
+                    1 => drop(n.cursor_down()),
+                    2 => drop(n.swap_up()),
+                    3 => drop(n.swap_down()),
+                    _ => drop(n.split(*rng.choose(&[2usize, 4, 8, 16]))),
+                }
+                let decoded = decode_loops(p, &encode_loops(&n)).unwrap();
+                assert_eq!(decoded.loops, n.loops, "{p}");
+                assert_eq!(
+                    crate::backend::schedule_hash(&decoded),
+                    crate::backend::schedule_hash(&n),
+                    "{p}: hash must be cursor-independent"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn replay_transfers_onto_neighbor_problems() {
+        // A schedule recorded on one matmul replays onto another matmul of
+        // different extents (the transfer strategy's core move).
+        let src = Problem::matmul(128, 128, 128);
+        let mut nest = Nest::initial(src);
+        nest.split(16).unwrap();
+        nest.cursor = 2;
+        nest.swap_up().unwrap();
+        let enc = encode_loops(&nest);
+        let dst = Problem::matmul(96, 112, 160);
+        let replayed = decode_loops(dst, &enc).unwrap();
+        replayed.check_invariants().unwrap();
+        assert_eq!(replayed.problem, dst);
+        assert_eq!(replayed.loops.len(), nest.loops.len());
+        // A conv2d schedule does not decode onto a 3-dim matmul.
+        let conv = Problem::conv2d(28, 28, 3, 3);
+        let cnest = Nest::initial(conv);
+        assert!(decode_loops(src, &encode_loops(&cnest)).is_err());
+    }
+
+    #[test]
+    fn decode_rejects_garbage() {
+        let p = Problem::matmul(64, 64, 64);
+        for bad in [
+            "z0 c1 c2 w0 w1",      // bad kind tag
+            "c0 c1 c2 w0",         // missing write-back root
+            "c9 c1 c2 w0 w1",      // dim out of range
+            "c0x1 c0 c1 c2 w0 w1", // factor < 2
+            "c0xq c0 c1 c2 w0 w1", // unparseable factor
+            "c0x8 c1 c2 w0 w1",    // tile before (i.e. without) its root
+        ] {
+            assert!(decode_loops(p, bad).is_err(), "{bad:?} must be rejected");
+        }
+    }
+}

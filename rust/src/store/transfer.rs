@@ -1,0 +1,333 @@
+//! Transfer tuning: serve a cold miss by replaying recorded schedules
+//! from the nearest neighbor problems (DESIGN.md §10).
+//!
+//! A schedule tuned for `mm_128x128x128` is usually near-optimal for
+//! `mm_144x128x128` too — the action space is structural (which dims to
+//! tile, by how much, in what order), not extent-specific. The
+//! [`TransferStrategy`] exploits that: it asks the store for the
+//! [`TuningStore::nearest`] recorded problems (same workload kind, L2
+//! distance over per-dim `log2(extent)` — [`problem_distance`]), replays
+//! each neighbor's best schedule onto the target problem, optionally
+//! pre-orders the replays with the learned [`CostRanker`], and pays for
+//! real evaluations only on the top few. A problem with no transferable
+//! history falls back to a full classical search under the same budget.
+//!
+//! The result: warm-corpus tuning at a handful of evaluations instead of
+//! hundreds (pinned by `BENCH_store.json` and the deterministic transfer
+//! test in `rust/tests/store_roundtrip.rs`).
+
+use super::cost::CostRanker;
+use super::TuningStore;
+use crate::api::{Strategy, TuneOpts, TuneResult};
+use crate::env::Env;
+use crate::ir::{Nest, Problem};
+use crate::search::{Budget, SearchAlgo, TracePoint};
+use anyhow::Result;
+use std::collections::HashSet;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Structural distance between two problems: `None` when they are not
+/// transfer-compatible (different workload kind or dim count), else the
+/// L2 norm of the per-dim `log2(extent)` differences. Identical problems
+/// have distance 0.
+pub fn problem_distance(a: Problem, b: Problem) -> Option<f64> {
+    if a.kind() != b.kind() || a.n_dims() != b.n_dims() {
+        return None;
+    }
+    let mut d = 0.0;
+    for dim in a.dims() {
+        let x = (a.extent(dim) as f64).log2() - (b.extent(dim) as f64).log2();
+        d += x * x;
+    }
+    Some(d.sqrt())
+}
+
+/// The `k` problems in `pool` nearest to `target` (excluding `target`
+/// itself), by [`problem_distance`] with id tie-breaks — used to pick
+/// which problems to warm a store with for a given serving mix.
+pub fn nearest_problems(pool: &[Problem], target: Problem, k: usize) -> Vec<Problem> {
+    let mut cands: Vec<(f64, String, Problem)> = pool
+        .iter()
+        .filter_map(|&p| {
+            let d = problem_distance(p, target)?;
+            let id = p.id();
+            if id == target.id() {
+                None
+            } else {
+                Some((d, id, p))
+            }
+        })
+        .collect();
+    cands.sort_by(|a, b| a.0.total_cmp(&b.0).then_with(|| a.1.cmp(&b.1)));
+    cands.truncate(k);
+    cands.into_iter().map(|(_, _, p)| p).collect()
+}
+
+/// Warm-corpus tuning strategy: replay the best recorded schedules of the
+/// nearest problems, fall back to a classical search on a true cold miss.
+/// Served by name as `transfer` (requires the service to be configured
+/// with a store).
+pub struct TransferStrategy {
+    /// The record corpus consulted for neighbors.
+    pub store: TuningStore,
+    /// Neighbor problems consulted per request.
+    pub neighbors: usize,
+    /// Replayed schedules actually evaluated (after ranking).
+    pub replay_top: usize,
+    /// Optional learned ranker ordering the replays before evaluation.
+    pub ranker: Option<Arc<CostRanker>>,
+    /// Search run (under the request budget) when nothing transfers.
+    pub fallback: SearchAlgo,
+}
+
+impl TransferStrategy {
+    /// Strategy with default knobs over `store`: 8 neighbors consulted,
+    /// 4 replays evaluated, greedy-2 fallback.
+    pub fn new(store: TuningStore) -> TransferStrategy {
+        TransferStrategy {
+            store,
+            neighbors: 8,
+            replay_top: 4,
+            ranker: None,
+            fallback: SearchAlgo::Greedy2,
+        }
+    }
+}
+
+impl Strategy for TransferStrategy {
+    fn label(&self) -> String {
+        "transfer".to_string()
+    }
+
+    fn tune(&self, env: &mut Env, budget: Budget, opts: &TuneOpts) -> Result<TuneResult> {
+        let t0 = Instant::now();
+        let problem = env.nest.problem;
+        let backend = env.backend.clone();
+
+        // Decode every transferable neighbor schedule, deduped by the
+        // schedule hash (two neighbors often converged to the same tiling).
+        let neighbors = self.store.nearest(problem, backend.name(), self.neighbors);
+        let n_neighbors = neighbors.len();
+        let mut seen = HashSet::new();
+        let mut cands: Vec<Nest> = Vec::new();
+        for (_, _, rec) in neighbors {
+            if let Ok(nest) = rec.replay(problem) {
+                if seen.insert(crate::backend::schedule_hash(&nest)) {
+                    cands.push(nest);
+                }
+            }
+        }
+
+        if cands.is_empty() {
+            // True cold miss: no transferable history at all. Run the
+            // fallback search under the request's own budget.
+            let r = self.fallback.run_threaded(
+                problem,
+                backend,
+                budget,
+                opts.depth,
+                opts.seed,
+                opts.expand_threads,
+            );
+            let mut out = TuneResult::from_search(r);
+            out.strategy = self.label();
+            out.elapsed = t0.elapsed().as_secs_f64();
+            out.note = Some(format!("cold miss: {} fallback", self.fallback.name()));
+            return Ok(out);
+        }
+
+        // Order replays: learned ranker when available, distance order
+        // otherwise (nearest() already sorted them).
+        if let Some(rk) = &self.ranker {
+            let mut scored: Vec<(f64, Nest)> =
+                cands.into_iter().map(|n| (rk.predict(&n), n)).collect();
+            scored.sort_by(|a, b| crate::search::desc_score(b.0, a.0));
+            cands = scored.into_iter().map(|(_, n)| n).collect();
+        }
+
+        let mut evals = 0u64;
+        let mut hits = 0u64;
+        let exhausted = |evals: u64, t0: &Instant| {
+            budget.max_evals.is_some_and(|m| evals >= m)
+                || budget.time.is_some_and(|t| t0.elapsed() >= t)
+        };
+
+        let initial = Nest::initial(problem);
+        let (initial_gflops, miss) = backend.eval_detail(&initial);
+        if miss {
+            evals += 1;
+        } else {
+            hits += 1;
+        }
+        let mut best = (initial, initial_gflops);
+        let mut trace = vec![TracePoint {
+            elapsed: t0.elapsed().as_secs_f64(),
+            evals,
+            depth: 0,
+            best_gflops: initial_gflops,
+        }];
+
+        let mut replayed = 0usize;
+        for nest in cands.into_iter().take(self.replay_top.max(1)) {
+            if exhausted(evals, &t0) {
+                break;
+            }
+            let (g, miss) = backend.eval_detail(&nest);
+            if miss {
+                evals += 1;
+            } else {
+                hits += 1;
+            }
+            replayed += 1;
+            if g > best.1 {
+                best = (nest, g);
+                trace.push(TracePoint {
+                    elapsed: t0.elapsed().as_secs_f64(),
+                    evals,
+                    depth: replayed,
+                    best_gflops: g,
+                });
+            }
+        }
+
+        Ok(TuneResult {
+            strategy: self.label(),
+            best_gflops: best.1,
+            best: best.0,
+            initial_gflops,
+            evals,
+            cache_hits: hits,
+            elapsed: t0.elapsed().as_secs_f64(),
+            trace,
+            actions: Vec::new(),
+            note: Some(format!(
+                "replayed {replayed} schedule(s) from {n_neighbors} stored neighbor(s)"
+            )),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::{run_strategy, TuneResult};
+    use crate::backend::cost_model::CostModel;
+    use crate::backend::SharedBackend;
+    use crate::featurize::FeatureMask;
+    use crate::store::TuneRecord;
+
+    fn be() -> SharedBackend {
+        SharedBackend::with_factory(CostModel::default)
+    }
+
+    fn warm(store: &TuningStore, problems: &[Problem], budget: u64) {
+        let be = be();
+        for &p in problems {
+            let r = SearchAlgo::Greedy2.run(p, be.clone(), Budget::evals(budget), 10, 7);
+            let result = TuneResult::from_search(r);
+            store.append(TuneRecord::from_result(p, &result, be.name(), 7)).unwrap();
+        }
+    }
+
+    #[test]
+    fn distance_respects_kind_and_extents() {
+        let a = Problem::matmul(64, 64, 64);
+        assert_eq!(problem_distance(a, a), Some(0.0));
+        let near = problem_distance(a, Problem::matmul(80, 64, 64)).unwrap();
+        let far = problem_distance(a, Problem::matmul(256, 256, 64)).unwrap();
+        assert!(near < far);
+        assert_eq!(problem_distance(a, Problem::conv2d(16, 16, 3, 3)), None);
+        assert_eq!(problem_distance(a, Problem::mlp(64, 64, 64)), None);
+    }
+
+    #[test]
+    fn nearest_problems_orders_and_excludes_self() {
+        let pool = [
+            Problem::matmul(64, 64, 64),
+            Problem::matmul(96, 64, 64),
+            Problem::matmul(80, 64, 64),
+            Problem::conv2d(16, 16, 3, 3),
+        ];
+        let near = nearest_problems(&pool, Problem::matmul(80, 64, 64), 2);
+        assert_eq!(near.len(), 2);
+        assert!(near.iter().all(|p| p.id() != "mm_80x64x64"));
+        assert_eq!(near[0].id(), "mm_96x64x64");
+    }
+
+    #[test]
+    fn warm_transfer_uses_few_evals_and_matches_search_quality() {
+        let store = TuningStore::in_memory();
+        let target = Problem::matmul(112, 112, 112);
+        warm(&store, &nearest_problems(&crate::dataset::canonical().train, target, 3), 200);
+
+        let strategy = TransferStrategy::new(store);
+        let r = run_strategy(
+            &strategy,
+            &be(),
+            target,
+            1.0,
+            FeatureMask::default(),
+            Budget::evals(50),
+            &TuneOpts { depth: 10, seed: 7, expand_threads: 1 },
+        )
+        .unwrap();
+        assert_eq!(r.strategy, "transfer");
+        assert!(r.evals <= 1 + 4, "evals {}", r.evals);
+        assert!(r.speedup() > 1.0, "replays must beat the untiled nest");
+
+        let cold = SearchAlgo::Greedy2.run(target, be(), Budget::evals(200), 10, 7);
+        assert!(
+            r.best_gflops >= 0.9 * cold.best_gflops,
+            "transfer {} vs cold {}",
+            r.best_gflops,
+            cold.best_gflops
+        );
+    }
+
+    #[test]
+    fn cold_miss_falls_back_to_search() {
+        let strategy = TransferStrategy::new(TuningStore::in_memory());
+        let target = Problem::matmul(96, 96, 96);
+        let r = run_strategy(
+            &strategy,
+            &be(),
+            target,
+            1.0,
+            FeatureMask::default(),
+            Budget::evals(120),
+            &TuneOpts { depth: 10, seed: 7, expand_threads: 1 },
+        )
+        .unwrap();
+        let direct = SearchAlgo::Greedy2.run(target, be(), Budget::evals(120), 10, 7);
+        assert_eq!(r.strategy, "transfer");
+        assert_eq!(r.best.loops, direct.best.loops);
+        assert_eq!(r.evals, direct.evals);
+        assert!(r.note.unwrap().contains("cold miss"));
+    }
+
+    #[test]
+    fn transfer_is_deterministic_for_a_fixed_store() {
+        let store = TuningStore::in_memory();
+        let target = Problem::matmul(144, 96, 128);
+        warm(&store, &nearest_problems(&crate::dataset::canonical().train, target, 4), 150);
+        let strategy = TransferStrategy::new(store);
+        let run = || {
+            run_strategy(
+                &strategy,
+                &be(),
+                target,
+                1.0,
+                FeatureMask::default(),
+                Budget::evals(50),
+                &TuneOpts { depth: 10, seed: 7, expand_threads: 1 },
+            )
+            .unwrap()
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.best.loops, b.best.loops);
+        assert_eq!(a.best_gflops, b.best_gflops);
+        assert_eq!(a.evals, b.evals);
+    }
+}

@@ -260,7 +260,12 @@ pub fn write_json(v: &Json, out: &mut String) {
         Json::Null => out.push_str("null"),
         Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
         Json::Num(n) => {
-            if n.fract() == 0.0 && n.abs() < 1e15 {
+            if !n.is_finite() {
+                // JSON has no NaN/Infinity literal; `n.to_string()` would
+                // emit invalid JSON. Null is the portable encoding of "no
+                // measurable value" (e.g. GFLOPS of a failed eval).
+                out.push_str("null");
+            } else if n.fract() == 0.0 && n.abs() < 1e15 {
                 out.push_str(&(*n as i64).to_string());
             } else {
                 out.push_str(&n.to_string());
@@ -358,6 +363,32 @@ mod tests {
         assert!(parse("[1,]").is_err());
         assert!(parse("hello").is_err());
         assert!(parse("{\"a\": 1} x").is_err());
+    }
+
+    #[test]
+    fn non_finite_numbers_emit_null() {
+        // `NaN`/`inf` have no JSON literal; emitting them verbatim would
+        // produce an unparseable document.
+        for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let mut s = String::new();
+            write_json(&Json::Num(bad), &mut s);
+            assert_eq!(s, "null");
+        }
+        let mut s = String::new();
+        write_json(
+            &Json::Arr(vec![Json::Num(1.5), Json::Num(f64::NAN), Json::Num(2.0)]),
+            &mut s,
+        );
+        assert_eq!(s, "[1.5,null,2]");
+        // The emitted document parses back (null, not a bare NaN token).
+        assert_eq!(
+            parse(&s).unwrap(),
+            Json::Arr(vec![Json::Num(1.5), Json::Null, Json::Num(2.0)])
+        );
+        // Finite extremes still round-trip as numbers.
+        let mut s = String::new();
+        write_json(&Json::Num(1e300), &mut s);
+        assert_eq!(parse(&s).unwrap(), Json::Num(1e300));
     }
 
     #[test]

@@ -21,7 +21,7 @@ fn be() -> SharedBackend {
 }
 
 fn svc(seed: u64) -> TuningService {
-    TuningService::new(ServiceCfg { seed, threads: 2, default_params: None })
+    TuningService::new(ServiceCfg { seed, threads: 2, ..ServiceCfg::default() })
 }
 
 fn cost_req(problem: &str, strategy: &str, budget: Budget, seed: u64) -> TuneRequest {

@@ -1,0 +1,301 @@
+//! Tuning-store contract tests: spec/id round-trips across every workload
+//! family, JSONL store round-trips (append, reload, index hit, corrupt
+//! lines), bit-exact warm serving through the service, the transfer
+//! strategy's warm-vs-cold acceptance bar, and the learned-cost-model
+//! train/save/load loop.
+
+use looptune::api::{spec, ServiceCfg, TuneRequest, TuningService};
+use looptune::backend::cost_model::CostModel;
+use looptune::backend::SharedBackend;
+use looptune::dataset;
+use looptune::ir::Problem;
+use looptune::search::batch::{self, problem_seed, BatchCfg};
+use looptune::search::{Budget, SearchAlgo};
+use looptune::store::cost::CostRanker;
+use looptune::store::transfer::{nearest_problems, TransferStrategy};
+use looptune::store::TuningStore;
+use looptune::util::rng::Pcg32;
+use std::path::PathBuf;
+
+fn be() -> SharedBackend {
+    SharedBackend::with_factory(CostModel::default)
+}
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("lt_it_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Warm `store` by greedy-tuning `problems` (recorded through the batch
+/// driver, exactly as `tune-many --store` does).
+fn warm_store(store: &TuningStore, problems: &[Problem], budget: u64, threads: usize) {
+    let cfg = BatchCfg {
+        algo: SearchAlgo::Greedy2,
+        budget: Budget::evals(budget),
+        depth: 10,
+        seed: 7,
+        threads,
+        expand_threads: 1,
+    };
+    batch::run_recorded(problems, &be(), &cfg, Some(store), None);
+}
+
+// ---------------------------------------------------------------------------
+// Satellite: property test — every workload family round-trips through
+// spec parse -> Problem::id -> parse.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_every_family_round_trips_spec_id_spec() {
+    let mut rng = Pcg32::new(0x1d5_7ec);
+    let dim = |rng: &mut Pcg32, lo: usize, hi: usize| lo + rng.below(hi - lo + 1);
+    for case in 0..200usize {
+        let p = match case % 6 {
+            0 => Problem::matmul(
+                dim(&mut rng, 1, 300),
+                dim(&mut rng, 1, 300),
+                dim(&mut rng, 1, 300),
+            ),
+            1 => Problem::matmul_transposed(
+                dim(&mut rng, 1, 300),
+                dim(&mut rng, 1, 300),
+                dim(&mut rng, 1, 300),
+            ),
+            2 => Problem::batched_matmul(
+                dim(&mut rng, 1, 8),
+                dim(&mut rng, 1, 128),
+                dim(&mut rng, 1, 128),
+                dim(&mut rng, 1, 128),
+            ),
+            3 => Problem::conv1d(
+                dim(&mut rng, 1, 128),
+                dim(&mut rng, 1, 64),
+                dim(&mut rng, 1, 9),
+                dim(&mut rng, 1, 32),
+            ),
+            4 => Problem::conv2d(
+                dim(&mut rng, 1, 64),
+                dim(&mut rng, 1, 64),
+                dim(&mut rng, 1, 7),
+                dim(&mut rng, 1, 7),
+            ),
+            _ => Problem::mlp(dim(&mut rng, 1, 128), dim(&mut rng, 1, 512), dim(&mut rng, 1, 512)),
+        };
+        let id = p.id();
+        let reparsed = spec::parse_problem(&id)
+            .unwrap_or_else(|e| panic!("id {id} must parse: {e}"));
+        assert_eq!(reparsed, p, "{id}");
+        assert_eq!(reparsed.id(), id, "{id}: id must be a fixed point");
+        // The colon spelling of the same id parses identically.
+        let colon = id.replacen('_', ":", 1);
+        assert_eq!(spec::parse_problem(&colon).unwrap(), p, "{colon}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Store round-trip: append, reload, index hit, corrupt-line tolerance.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn store_appends_reload_and_tolerate_corruption() {
+    let dir = tmpdir("reload");
+    let path = dir.join("tune.db");
+    let problems: Vec<Problem> =
+        (0..6).map(|i| Problem::matmul(64 + 16 * i, 96, 128)).collect();
+    {
+        let store = TuningStore::open(&path).unwrap();
+        warm_store(&store, &problems, 80, 2);
+        assert_eq!(store.len(), 6);
+    }
+    // Corrupt the file: a torn half-line plus garbage in the middle.
+    let text = std::fs::read_to_string(&path).unwrap();
+    let mut lines: Vec<&str> = text.lines().collect();
+    lines.insert(3, "{\"schema\":\"tune_record/v1\",\"problem\":\"mm_");
+    lines.insert(1, "garbage line");
+    std::fs::write(&path, lines.join("\n")).unwrap();
+
+    let store = TuningStore::open(&path).unwrap();
+    assert_eq!(store.len(), 6, "valid records survive corruption");
+    assert_eq!(store.corrupt_lines(), 2);
+    for &p in &problems {
+        let rec = store.lookup(&p.id(), "cost_model").expect("index hit after reload");
+        assert_eq!(rec.problem, p.id());
+        // Round trip is bit-exact: the stored schedule replays to the
+        // recorded nest hash.
+        let nest = rec.replay_exact().unwrap();
+        assert_eq!(looptune::backend::schedule_hash(&nest), rec.nest_hash);
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// Acceptance: a warm serve hit returns the identical schedule with zero
+// backend evals (store round trip is bit-exact end to end).
+// ---------------------------------------------------------------------------
+
+#[test]
+fn warm_serve_hit_is_bit_exact_with_zero_evals() {
+    let dir = tmpdir("serve");
+    let path = dir.join("tune.db");
+    let store = TuningStore::open(&path).unwrap();
+    let cfg = ServiceCfg { seed: 7, threads: 2, store: Some(store), ..ServiceCfg::default() };
+    let service = TuningService::new(cfg);
+    let req = TuneRequest::new("matmul:96x112x128", "beam2bfs", Budget::evals(150));
+    let cold = service.serve(&req).unwrap();
+    assert_eq!(cold.cache, None);
+    assert!(cold.evals > 0);
+
+    // Same request, new process (reload from disk): the response carries
+    // the identical schedule with zero evaluations and store provenance.
+    let reloaded = TuningStore::open(&path).unwrap();
+    let cfg = ServiceCfg { seed: 7, threads: 2, store: Some(reloaded), ..ServiceCfg::default() };
+    let service2 = TuningService::new(cfg);
+    let warm = service2.serve(&req).unwrap();
+    assert_eq!(warm.cache.as_deref(), Some("store"));
+    assert_eq!(warm.evals, 0);
+    assert_eq!(warm.cache_hits, 0);
+    assert_eq!(warm.nest_hash, cold.nest_hash);
+    assert_eq!(warm.schedule, cold.schedule);
+    assert_eq!(warm.nest, cold.nest);
+    assert_eq!(warm.dispatch, cold.dispatch);
+    assert_eq!(warm.gflops, cold.gflops);
+    assert_eq!(warm.gflops_initial, cold.gflops_initial);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// Acceptance: transfer reaches >= 90% of cold greedy GFLOPS on matmul
+// test-split problems using <= 25% of its evals (deterministic seed).
+// ---------------------------------------------------------------------------
+
+#[test]
+fn transfer_beats_the_acceptance_bar_on_the_test_split() {
+    let ds = dataset::canonical();
+    let tests: Vec<Problem> = dataset::sample_test(&ds, 8, 0x570e);
+
+    // Warm the store with the nearest train neighbors of each test
+    // problem (the history a serving system accumulates).
+    let store = TuningStore::in_memory();
+    let mut warm: Vec<Problem> = Vec::new();
+    let mut seen = std::collections::BTreeSet::new();
+    for &t in &tests {
+        for p in nearest_problems(&ds.train, t, 3) {
+            if seen.insert(p.id()) {
+                warm.push(p);
+            }
+        }
+    }
+    warm_store(&store, &warm, 200, 4);
+
+    let strategy = TransferStrategy::new(store);
+    let backend = be();
+    let cold_backend = be();
+    let (mut cold_evals, mut warm_evals) = (0u64, 0u64);
+    let mut ratios = Vec::new();
+    for &p in &tests {
+        let cold = SearchAlgo::Greedy2.run(
+            p,
+            cold_backend.clone(),
+            Budget::evals(200),
+            10,
+            problem_seed(7, p),
+        );
+        let r = looptune::api::run_strategy(
+            &strategy,
+            &backend,
+            p,
+            1.0,
+            looptune::featurize::FeatureMask::default(),
+            Budget::evals(200),
+            &looptune::api::TuneOpts {
+                depth: 10,
+                seed: problem_seed(7, p),
+                expand_threads: 1,
+            },
+        )
+        .unwrap();
+        cold_evals += cold.evals;
+        warm_evals += r.evals;
+        ratios.push(r.best_gflops / cold.best_gflops.max(1e-12));
+    }
+    let geomean =
+        (ratios.iter().map(|r| r.ln()).sum::<f64>() / ratios.len() as f64).exp();
+    assert!(
+        geomean >= 0.90,
+        "transfer reaches only {:.1}% of cold greedy GFLOPS ({ratios:?})",
+        100.0 * geomean
+    );
+    assert!(
+        (warm_evals as f64) <= 0.25 * cold_evals as f64,
+        "transfer used {warm_evals} evals vs cold {cold_evals} (> 25%)"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Learned cost model: fit from a recorded corpus, save/load, rank.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn cost_model_fits_saves_loads_and_ranks() {
+    let dir = tmpdir("cost");
+    let store = TuningStore::in_memory();
+    let problems: Vec<Problem> = (0..10)
+        .map(|i| Problem::matmul(64 + 16 * (i % 5), 64 + 32 * (i / 5), 96))
+        .collect();
+    warm_store(&store, &problems, 120, 4);
+
+    let (ranker, report) = CostRanker::fit_from_store(&store, "cost_model", 1.0).unwrap();
+    assert!(report.samples >= problems.len());
+    assert!(report.rank_accuracy > 0.55, "{report}");
+
+    let path = dir.join("cost_model.ltps");
+    ranker.save(&path).unwrap();
+    let loaded = CostRanker::load(&path).unwrap();
+    assert_eq!(loaded, ranker);
+
+    // The loaded ranker orders a tuned schedule above the untiled one for
+    // a problem it has records of.
+    let p = problems[0];
+    let rec = store.lookup(&p.id(), "cost_model").unwrap();
+    let tuned = rec.replay_exact().unwrap();
+    let initial = looptune::ir::Nest::initial(p);
+    assert!(
+        loaded.predict(&tuned) > loaded.predict(&initial),
+        "tuned {} vs initial {}",
+        loaded.predict(&tuned),
+        loaded.predict(&initial)
+    );
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// Ranked search through the service: a configured ranker serves every
+// search strategy and steers truncating budgets.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn service_with_ranker_serves_searches() {
+    let store = TuningStore::in_memory();
+    warm_store(
+        &store,
+        &[Problem::matmul(64, 64, 64), Problem::matmul(96, 96, 96), Problem::matmul(128, 128, 128)],
+        100,
+        2,
+    );
+    let (ranker, _) = CostRanker::fit_from_store(&store, "cost_model", 1.0).unwrap();
+    let cfg = ServiceCfg {
+        seed: 7,
+        threads: 2,
+        ranker: Some(std::sync::Arc::new(ranker)),
+        ..ServiceCfg::default()
+    };
+    let service = TuningService::new(cfg);
+    let resp = service
+        .serve(&TuneRequest::new("matmul:112x112x112", "greedy2", Budget::evals(60)))
+        .unwrap();
+    assert_eq!(resp.strategy, "greedy2");
+    assert!(resp.gflops >= resp.gflops_initial);
+    assert!(resp.evals <= 60 + looptune::NUM_ACTIONS as u64);
+    assert_eq!(resp.note.as_deref(), Some("cost-model pre-ranked expansion"));
+}
