@@ -24,7 +24,8 @@ from .kernels.linear import linear
 MAX_LOOPS = 10
 FEATS = 20
 STATE_DIM = MAX_LOOPS * FEATS  # 200
-NUM_ACTIONS = 10  # up, down, swap_up, swap_down, split{2,4,8,16,32,64}
+# Contract v2: parallelize appended at index 10 (indices 0-9 unchanged).
+NUM_ACTIONS = 11  # up, down, swap_up, swap_down, split{2,4,8,16,32,64}, parallelize
 HIDDEN = 256
 BATCH = 64
 

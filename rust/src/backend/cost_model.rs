@@ -62,6 +62,11 @@ pub struct Machine {
     pub strided_lanes: f64,
     /// Cycles of overhead per innermost-kernel invocation.
     pub call_overhead: f64,
+    /// Worker cores available to the chunked parallel executor.
+    pub cores: usize,
+    /// Cycles to spawn/join one scoped worker thread (paid per execution
+    /// by the parallel path, amortized over the chunk work).
+    pub spawn_cycles: f64,
 }
 
 impl Machine {
@@ -90,6 +95,8 @@ impl Default for Machine {
             red_lanes: 4.0,
             strided_lanes: 1.0,
             call_overhead: 6.0,
+            cores: 8,
+            spawn_cycles: 25_000.0,
         }
     }
 }
@@ -199,7 +206,25 @@ impl CostModel {
             mem_cycles += (here - deeper).max(0.0) * latency;
         }
 
-        let cycles = compute_cycles.max(mem_cycles) + overhead_cycles;
+        let serial_cycles = compute_cycles.max(mem_cycles) + overhead_cycles;
+
+        // ---- parallel term: chunk load balance + spawn + merge cost ----
+        // A parallel level with `c` chunks on `cores` workers runs in
+        // ceil(c / cores) waves, so the work shrinks by c / ceil(c/cores)
+        // (chunk imbalance: 9 chunks on 8 cores speed up 4.5x, not 8x).
+        // On top come the per-execution thread spawn/join cost and the
+        // serial chunk-ordered merge of the privatized accumulators
+        // (chunks x out_len element adds, vectorizable).
+        let cycles = match parallel_chunks(sched) {
+            Some(chunks) => {
+                let waves = crate::util::ceil_div(chunks, m.cores.max(1)) as f64;
+                let speedup = chunks as f64 / waves;
+                let spawn = m.cores.min(chunks) as f64 * m.spawn_cycles;
+                let merge = chunks as f64 * p.out_len() as f64 / m.vec_lanes;
+                serial_cycles / speedup + spawn + merge
+            }
+            None => serial_cycles,
+        };
         // time_sec = cycles / (freq_ghz * 1e9); GFLOPS = flops / time / 1e9.
         flops * m.freq_ghz / cycles
     }
@@ -269,9 +294,18 @@ impl CostModel {
     }
 }
 
+/// Chunk count of the schedule's parallel level (its trip count), or
+/// `None` when the schedule is serial or the level has a single chunk —
+/// mirroring the executor's plan-time fallback.
+fn parallel_chunks(sched: &CompiledSchedule) -> Option<usize> {
+    let idx = sched.levels.iter().position(|l| l.parallel)?;
+    let chunks = trip(sched, idx);
+    (chunks >= 2).then_some(chunks)
+}
+
 /// Trip count of a lowered level (root trips derived from extent).
 fn trip(sched: &CompiledSchedule, idx: usize) -> usize {
-    let Level { dim, stride } = sched.levels[idx];
+    let Level { dim, stride, .. } = sched.levels[idx];
     // A level's trip = chunk available to it / its stride, where the chunk
     // is the stride of the nearest outer level of the same dim (or the
     // extent for the outermost).
@@ -496,6 +530,36 @@ mod tests {
         let small = gflops(&mkn_nest(Problem::new(64, 64, 64)));
         let big = gflops(&mkn_nest(Problem::new(256, 256, 256)));
         assert!(small >= big * 0.8, "small {small} big {big}");
+    }
+
+    #[test]
+    fn parallel_speedup_and_overheads_rank_sanely() {
+        // Large problem: chunking the outer m loop across 8 modeled cores
+        // must beat the serial schedule despite spawn + merge overhead.
+        let p = Problem::new(256, 256, 256);
+        let serial = mkn_nest(p);
+        let mut par = mkn_nest(p);
+        par.cursor = 0;
+        par.split(32).unwrap(); // m m:32 k n -> root trip 8
+        par.cursor = 0;
+        par.parallelize().unwrap();
+        let mut serial_tiled = par.clone();
+        serial_tiled.loops[0].parallel = false;
+        assert!(
+            gflops(&par) > gflops(&serial_tiled),
+            "par {} <= serial tiled {}",
+            gflops(&par),
+            gflops(&serial_tiled)
+        );
+        assert!(gflops(&par) > gflops(&serial));
+
+        // A single modeled core gets no parallel benefit: overheads make
+        // the parallel variant strictly worse.
+        let one_core = CostModel::new(Machine { cores: 1, ..Machine::default() });
+        assert!(
+            one_core.predict(&lower(&par)) < one_core.predict(&lower(&serial_tiled)),
+            "1-core parallel should pay overhead"
+        );
     }
 
     #[test]

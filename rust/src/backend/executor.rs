@@ -27,6 +27,20 @@
 //!   multiply-accumulate, broadcast-scale — each a fixed-stride loop the
 //!   autovectorizer handles; only truly strided walks stay scalar.
 //!
+//! - **Chunked parallel execution**: when the schedule carries a
+//!   `parallelize` mark (one compute root), `plan()` records the marked
+//!   level and its trip count. `run_once` then executes one *chunk* per
+//!   iteration of that level — each chunk walks the whole program with the
+//!   marked level pinned to its (boundary-clamped) iteration and a
+//!   precomputed base offset — on up to `LOOPTUNE_EXEC_THREADS` scoped
+//!   worker threads. Every chunk accumulates into its own zeroed
+//!   privatized buffer; the buffers are merged into `T` serially in
+//!   ascending chunk order, so the result is **bit-identical for every
+//!   thread count** (including 1). Chunks of an *output* dim touch
+//!   disjoint `T` elements and reproduce the serial executor exactly;
+//!   chunks of a *reduction* dim re-associate the accumulation at chunk
+//!   granularity (deterministically), like any privatized reduction.
+//!
 //! The write-back program applies the problem's epilogue (plain copy, or
 //! bias + ReLU) with a `copy_from_slice` fast path for unit-stride plain
 //! copies. [`reference`] uses the same incremental-offset idea over a
@@ -144,6 +158,15 @@ struct WbInner {
     has_bias: bool,
 }
 
+/// Chunked multi-thread execution of one compute level (see module doc).
+#[derive(Clone, Copy, Debug)]
+struct ParInfo {
+    /// Index of the parallel level within `c_levels`.
+    level: usize,
+    /// Number of chunks: the level's trip count.
+    chunks: usize,
+}
+
 /// Lowered-and-planned schedule ready to execute: flattened loop programs
 /// plus the chosen innermost dispatch.
 pub struct ExecPlan {
@@ -154,6 +177,9 @@ pub struct ExecPlan {
     /// Write-back levels above the innermost epilogue step.
     w_levels: Vec<ProgLevel>,
     wb: WbInner,
+    /// `Some` when a compute level is marked parallel and sits above the
+    /// kernel cut with >= 2 chunks; `None` executes fully serially.
+    par: Option<ParInfo>,
 }
 
 /// Nearest level of `dim` among the outer-program `levels`, as a chunk
@@ -280,13 +306,29 @@ pub fn plan(sched: CompiledSchedule) -> ExecPlan {
         has_bias: bias_acc.is_some(),
     };
 
-    ExecPlan { problem: p, c_levels, kernel, w_levels, wb }
+    // A parallel mark at/below the kernel cut (or with a single chunk)
+    // cannot be chunked — fall back to serial execution; the legality
+    // rules in `Nest::parallelize` make this rare (outer roots only).
+    let par = sched.levels[..cut].iter().position(|l| l.parallel).and_then(|i| {
+        let lv = &c_levels[i];
+        let chunks = crate::util::ceil_div(lv.extent, lv.stride);
+        (chunks >= 2).then_some(ParInfo { level: i, chunks })
+    });
+
+    ExecPlan { problem: p, c_levels, kernel, w_levels, wb, par }
 }
 
 impl ExecPlan {
     /// The problem this plan executes.
     pub fn problem(&self) -> Problem {
         self.problem
+    }
+
+    /// Number of parallel chunks this plan fans out per execution, or
+    /// `None` when it executes fully serially (no parallel mark, or the
+    /// mark fell at/below the kernel cut).
+    pub fn parallel_chunks(&self) -> Option<usize> {
+        self.par.map(|p| p.chunks)
     }
 
     /// Stable name of the innermost dispatch path chosen at plan time:
@@ -317,9 +359,21 @@ impl ExecPlan {
 /// current (possibly clamped) chunk, and the last iteration clamps to
 /// whatever is left.
 #[inline]
-fn walk<F: FnMut(&[usize; SLOTS], &[usize; MAX_LOOPS])>(levels: &[ProgLevel], mut body: F) {
+fn walk<F: FnMut(&[usize; SLOTS], &[usize; MAX_LOOPS])>(levels: &[ProgLevel], body: F) {
+    walk_base(levels, [0; SLOTS], body)
+}
+
+/// [`walk`] from a non-zero starting offset per tensor slot — the chunked
+/// parallel path pins the marked level to one iteration by clamping its
+/// extent and pre-adding `chunk_index × delta` here.
+#[inline]
+fn walk_base<F: FnMut(&[usize; SLOTS], &[usize; MAX_LOOPS])>(
+    levels: &[ProgLevel],
+    base: [usize; SLOTS],
+    mut body: F,
+) {
     let depth = levels.len();
-    let mut off = [0usize; SLOTS];
+    let mut off = base;
     if depth == 0 {
         return body(&off, &[0; MAX_LOOPS]);
     }
@@ -394,24 +448,81 @@ impl Workspace {
     }
 }
 
+/// Worker-thread count for the chunked parallel path: the
+/// `LOOPTUNE_EXEC_THREADS` environment variable (>= 1), else every
+/// available core. Read per call so tests can vary it; thread count never
+/// changes results (see module doc), only wall-clock.
+pub fn exec_threads() -> usize {
+    std::env::var("LOOPTUNE_EXEC_THREADS")
+        .ok()
+        .and_then(|v| v.trim().parse::<usize>().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or_else(crate::util::default_threads)
+}
+
 /// Execute the compute + write-back programs once. T is zeroed first (part
-/// of the timed work, as LoopNest initializes its accumulator).
+/// of the timed work, as LoopNest initializes its accumulator). Parallel
+/// plans fan their chunks out across [`exec_threads`] workers.
 pub fn run_once(plan: &ExecPlan, ws: &mut Workspace) {
+    run_once_threaded(plan, ws, exec_threads());
+}
+
+/// [`run_once`] with an explicit worker-thread count. The result is
+/// bit-identical for every `threads` value (chunk-ordered privatized
+/// merge); `threads <= 1` runs the chunks inline on the caller's thread.
+pub fn run_once_threaded(plan: &ExecPlan, ws: &mut Workspace, threads: usize) {
     debug_assert_eq!(plan.problem, ws.problem, "plan/workspace mismatch");
     ws.t.fill(0.0);
-    run_compute(plan, ws);
+    run_compute(plan, ws, threads);
     run_writeback(plan, ws);
 }
 
-fn run_compute(plan: &ExecPlan, ws: &mut Workspace) {
+fn run_compute(plan: &ExecPlan, ws: &mut Workspace, threads: usize) {
     let Workspace { inputs, t, .. } = ws;
     let in0 = &inputs[0][..];
     let in1 = &inputs[1][..];
     let t = &mut t[..];
+    let Some(par) = plan.par else {
+        return run_compute_levels(plan, &plan.c_levels, [0; SLOTS], in0, in1, t);
+    };
+    // Chunked parallel execution: one chunk per iteration of the marked
+    // level, each into a privatized zeroed buffer, merged in ascending
+    // chunk order. Output-dim chunks write disjoint elements (the merge
+    // just places them); reduction-dim chunks are privatized reductions
+    // combined at chunk granularity.
+    let lv = plan.c_levels[par.level];
+    let out_len = t.len();
+    let partials = crate::util::parallel_indexed_map(par.chunks, threads, |c| {
+        let mut levels = plan.c_levels.clone();
+        levels[par.level].extent = lv.stride.min(lv.extent - c * lv.stride);
+        let base = [c * lv.delta[0], c * lv.delta[1], c * lv.delta[2]];
+        let mut buf = vec![0.0f32; out_len];
+        run_compute_levels(plan, &levels, base, in0, in1, &mut buf);
+        buf
+    });
+    for partial in &partials {
+        for (dst, v) in t.iter_mut().zip(partial) {
+            *dst += *v;
+        }
+    }
+}
+
+/// The compute loop program over an explicit level array, starting offsets
+/// and output buffer — shared by the serial path (`plan.c_levels`, zero
+/// base, the workspace accumulator) and each parallel chunk (clamped
+/// levels, chunk base offsets, a privatized buffer).
+fn run_compute_levels(
+    plan: &ExecPlan,
+    levels: &[ProgLevel],
+    base: [usize; SLOTS],
+    in0: &[f32],
+    in1: &[f32],
+    t: &mut [f32],
+) {
     match plan.kernel {
         Kernel::Pair { a_slot, brs, red_outer, chunk_v, chunk_r } => {
             let (a, b) = if a_slot == 0 { (in0, in1) } else { (in1, in0) };
-            walk(&plan.c_levels, |off, cur| {
+            walk_base(levels, base, |off, cur| {
                 let (oa, ob) = (off[a_slot], off[1 - a_slot]);
                 let (vlen, rlen) = (chunk_v.get(cur), chunk_r.get(cur));
                 if red_outer {
@@ -422,7 +533,7 @@ fn run_compute(plan: &ExecPlan, ws: &mut Workspace) {
             });
         }
         Kernel::Loop1 { kind, s0, s1, st, chunk } => {
-            walk(&plan.c_levels, |off, cur| {
+            walk_base(levels, base, |off, cur| {
                 let len = chunk.get(cur);
                 let (o0, o1, ot) = (off[0], off[1], off[2]);
                 match kind {
@@ -736,16 +847,104 @@ mod tests {
             };
             let mut n = Nest::initial(p);
             for _ in 0..25 {
-                match rng.below(5) {
+                match rng.below(6) {
                     0 => drop(n.cursor_up()),
                     1 => drop(n.cursor_down()),
                     2 => drop(n.swap_up()),
                     3 => drop(n.swap_down()),
+                    4 => drop(n.parallelize()),
                     _ => drop(n.split(*rng.choose(&[2usize, 4, 8, 16]))),
                 }
             }
             check_nest(&n);
         }
+    }
+
+    #[test]
+    fn parallel_plan_chunks_and_serial_fallback() {
+        // Split m then parallelize the m root: ceil(64/16) = 4 chunks.
+        let mut n = Nest::initial(Problem::new(64, 64, 64));
+        n.cursor = 0;
+        n.split(16).unwrap();
+        n.parallelize().unwrap();
+        assert_eq!(plan(lower(&n)).parallel_chunks(), Some(4));
+
+        // A mark swapped down to the innermost compute level lands at the
+        // kernel cut: the plan falls back to serial execution (and still
+        // computes the right answer).
+        let mut f = Nest::initial(Problem::new(8, 8, 8));
+        f.cursor = 0;
+        f.parallelize().unwrap();
+        f.swap_down().unwrap();
+        f.swap_down().unwrap(); // n k m*: the mark is the deepest level
+        assert_eq!(plan(lower(&f)).parallel_chunks(), None);
+        check_nest(&f);
+    }
+
+    #[test]
+    fn parallel_output_chunks_match_serial_exactly_per_thread_count() {
+        // Chunks of an output dim (m) write disjoint T elements: the
+        // parallel path must reproduce the serial executor bit for bit at
+        // every thread count. 100/32 leaves a clamped tail chunk.
+        let p = Problem::new(100, 36, 28);
+        let mut serial = Nest::initial(p);
+        serial.cursor = 0;
+        serial.split(32).unwrap();
+        let mut par = serial.clone();
+        par.cursor = 0;
+        par.parallelize().unwrap();
+
+        let mut ws = Workspace::new(p, 9);
+        run_once_threaded(&plan(lower(&serial)), &mut ws, 1);
+        let want = ws.c.clone();
+
+        let pp = plan(lower(&par));
+        assert_eq!(pp.parallel_chunks(), Some(4)); // ceil(100/32)
+        for threads in [1usize, 2, 4, 9] {
+            run_once_threaded(&pp, &mut ws, threads);
+            assert_eq!(ws.c, want, "threads {threads}");
+        }
+        assert!(max_abs_diff(&want, &reference(&ws)) < 1e-3);
+    }
+
+    #[test]
+    fn parallel_reduction_chunks_are_thread_invariant() {
+        // Parallelizing the k (reduction) root privatizes the whole
+        // accumulator per chunk; the chunk-ordered merge keeps the result
+        // identical for every thread count (though re-associated vs. the
+        // serial plan, so correctness is pinned against `reference`).
+        let p = Problem::new(24, 20, 90);
+        let mut n = Nest::initial(p);
+        n.cursor = 2;
+        n.split(32).unwrap(); // k root trip = ceil(90/32) = 3
+        n.swap_up().unwrap();
+        n.swap_up().unwrap(); // k m n k:32
+        n.parallelize().unwrap();
+
+        let pp = plan(lower(&n));
+        assert_eq!(pp.parallel_chunks(), Some(3));
+        let mut ws = Workspace::new(p, 5);
+        run_once_threaded(&pp, &mut ws, 1);
+        let first = ws.c.clone();
+        for threads in [2usize, 3, 8] {
+            run_once_threaded(&pp, &mut ws, threads);
+            assert_eq!(ws.c, first, "threads {threads}");
+        }
+        assert!(max_abs_diff(&first, &reference(&ws)) < 1e-3);
+    }
+
+    #[test]
+    fn exec_threads_reads_env_per_call() {
+        // Serialized via the env var name itself: this is the only test
+        // in this binary that sets it.
+        std::env::set_var("LOOPTUNE_EXEC_THREADS", "3");
+        assert_eq!(exec_threads(), 3);
+        std::env::set_var("LOOPTUNE_EXEC_THREADS", "0");
+        assert_eq!(exec_threads(), crate::util::default_threads());
+        std::env::set_var("LOOPTUNE_EXEC_THREADS", "nope");
+        assert_eq!(exec_threads(), crate::util::default_threads());
+        std::env::remove_var("LOOPTUNE_EXEC_THREADS");
+        assert_eq!(exec_threads(), crate::util::default_threads());
     }
 
     #[test]

@@ -11,6 +11,8 @@ pub struct Level {
     pub dim: Dim,
     /// Elements of `dim` advanced per iteration of this level.
     pub stride: usize,
+    /// Marked for chunked multi-thread execution (see `Nest::parallelize`).
+    pub parallel: bool,
 }
 
 /// Flat, validated schedule.
@@ -30,7 +32,7 @@ pub fn lower(nest: &Nest) -> CompiledSchedule {
     let mut levels = Vec::with_capacity(nest.loops.len());
     let mut wb_levels = Vec::with_capacity(4);
     for (i, l) in nest.loops.iter().enumerate() {
-        let level = Level { dim: l.dim, stride: nest.stride(i) };
+        let level = Level { dim: l.dim, stride: nest.stride(i), parallel: l.parallel };
         match l.kind {
             Kind::Compute => levels.push(level),
             Kind::WriteBack => wb_levels.push(level),
@@ -87,8 +89,19 @@ mod tests {
         let mut n = Nest::initial(Problem::new(64, 96, 128));
         n.split(16).unwrap(); // m -> m(stride16), m:16
         let s = lower(&n);
-        assert_eq!(s.levels[0], Level { dim: Dim::M, stride: 16 });
-        assert_eq!(s.levels[1], Level { dim: Dim::M, stride: 1 });
+        assert_eq!(s.levels[0], Level { dim: Dim::M, stride: 16, parallel: false });
+        assert_eq!(s.levels[1], Level { dim: Dim::M, stride: 1, parallel: false });
+    }
+
+    #[test]
+    fn lower_propagates_the_parallel_mark() {
+        let mut n = Nest::initial(Problem::new(64, 96, 128));
+        n.split(16).unwrap();
+        n.parallelize().unwrap(); // m root
+        let s = lower(&n);
+        assert!(s.levels[0].parallel);
+        assert!(s.levels[1..].iter().all(|l| !l.parallel));
+        assert!(s.wb_levels.iter().all(|l| !l.parallel));
     }
 
     #[test]

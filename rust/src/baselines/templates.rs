@@ -40,20 +40,20 @@ impl TemplatePoint {
         let mut loops: Vec<Loop> = self
             .order
             .iter()
-            .map(|&dim| Loop { dim, factor: None, kind: Kind::Compute })
+            .map(|&dim| Loop { dim, factor: None, kind: Kind::Compute, parallel: false })
             .collect();
         for &dim in &self.order {
             if let Some(f) = self.tile[dim.index()] {
                 // Tile only if it actually divides the range (trip > f).
                 if problem.extent(dim) > f {
-                    loops.push(Loop { dim, factor: Some(f), kind: Kind::Compute });
+                    loops.push(Loop { dim, factor: Some(f), kind: Kind::Compute, parallel: false });
                 }
             }
         }
         loops.extend(
             problem
                 .output_dims()
-                .map(|dim| Loop { dim, factor: None, kind: Kind::WriteBack }),
+                .map(|dim| Loop { dim, factor: None, kind: Kind::WriteBack, parallel: false }),
         );
         let nest = Nest { problem, loops, cursor: 0 };
         debug_assert!(nest.check_invariants().is_ok(), "{nest}");

@@ -1,6 +1,8 @@
 //! The LoopTune action space (paper §III-A, Fig. 3): a cursor-based,
-//! non-parametric action set — `up`, `down`, `swap_up`, `swap_down`, and a
-//! `split` family with fixed power-of-two parameters.
+//! non-parametric action set — `up`, `down`, `swap_up`, `swap_down`, a
+//! `split` family with fixed power-of-two parameters, and `parallelize`
+//! (the fourth canonical schedule primitive: mark the cursor loop for
+//! chunked multi-thread execution).
 //!
 //! The discrete indices here are the network's output layer order; they
 //! must match `NUM_ACTIONS` in `python/compile/model.py` — the coupling is
@@ -13,8 +15,10 @@ use crate::ir::Nest;
 /// Split parameters (paper Fig. 3 uses powers of two up to 64).
 pub const SPLIT_FACTORS: [usize; 6] = [2, 4, 8, 16, 32, 64];
 
-/// Total number of discrete actions.
-pub const NUM_ACTIONS: usize = 4 + SPLIT_FACTORS.len();
+/// Total number of discrete actions. Contract v2: `Parallelize` was
+/// appended at index 10 (indices 0-9 are stable across contract versions,
+/// so old replay records decode unchanged).
+pub const NUM_ACTIONS: usize = 4 + SPLIT_FACTORS.len() + 1;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Action {
@@ -23,6 +27,7 @@ pub enum Action {
     SwapUp,
     SwapDown,
     Split(usize),
+    Parallelize,
 }
 
 impl Action {
@@ -39,6 +44,7 @@ impl Action {
             Action::Split(SPLIT_FACTORS[3]),
             Action::Split(SPLIT_FACTORS[4]),
             Action::Split(SPLIT_FACTORS[5]),
+            Action::Parallelize,
         ]
     }
 
@@ -61,6 +67,7 @@ impl Action {
                     .position(|&x| x == f)
                     .expect("unknown split factor")
             }
+            Action::Parallelize => 4 + SPLIT_FACTORS.len(),
         }
     }
 
@@ -73,6 +80,7 @@ impl Action {
             Action::SwapUp => nest.swap_up(),
             Action::SwapDown => nest.swap_down(),
             Action::Split(f) => nest.split(f),
+            Action::Parallelize => nest.parallelize(),
         }
     }
 
@@ -88,6 +96,7 @@ impl Action {
             Action::SwapUp => "swap_up".into(),
             Action::SwapDown => "swap_down".into(),
             Action::Split(f) => format!("split_{f}"),
+            Action::Parallelize => "parallelize".into(),
         }
     }
 }
@@ -142,5 +151,22 @@ mod tests {
         assert!(!Action::Down.mutates_schedule());
         assert!(Action::SwapUp.mutates_schedule());
         assert!(Action::Split(2).mutates_schedule());
+        assert!(Action::Parallelize.mutates_schedule());
+    }
+
+    #[test]
+    fn parallelize_is_the_appended_contract_v2_action() {
+        // Index stability: indices 0-9 are the v1 contract; Parallelize
+        // extends the head without renumbering anything.
+        assert_eq!(NUM_ACTIONS, 11);
+        assert_eq!(Action::Parallelize.index(), 10);
+        assert_eq!(Action::from_index(10), Some(Action::Parallelize));
+        assert_eq!(Action::Parallelize.name(), "parallelize");
+
+        let mut n = Nest::initial(Problem::new(64, 64, 64));
+        Action::Parallelize.apply(&mut n).unwrap();
+        assert!(n.loops[0].parallel);
+        // Idempotence is rejected, like every other invalid action.
+        assert!(Action::Parallelize.apply(&mut n).is_err());
     }
 }

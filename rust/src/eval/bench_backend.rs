@@ -11,6 +11,9 @@
 //! - **cost-model evals/sec** (the training-reward hot path),
 //! - **end-to-end search evals/sec** (schedule generation + lowering +
 //!   planning + scoring through the shared cache),
+//! - **parallel-execution GFLOPS**: the tuned schedule with its best
+//!   `parallelize` mark vs. serial, on the real worker pool — always at
+//!   the default shapes (smoke shapes are too small to amortize spawn),
 //!
 //! and emits a stable JSON document (`schema: bench_backend/v1`) so this
 //! and every future perf PR is measured against the same harness. The
@@ -69,6 +72,35 @@ pub struct FamilyRow {
     pub search_secs: f64,
 }
 
+/// Per-family parallel-execution measurement: the tuned schedule with and
+/// without the best `parallelize` mark, measured for real on the worker
+/// pool. Always taken at the suite's *default* shape (even in smoke mode):
+/// smoke shapes finish in microseconds, far below thread-spawn cost, so a
+/// parallel measurement there would only measure overhead.
+#[derive(Clone, Debug)]
+pub struct ParallelRow {
+    /// Suite/family name (`matmul`, `bmm`, ...).
+    pub family: String,
+    /// Problem id of the measured shape.
+    pub problem: String,
+    /// Worker threads the parallel measurement ran with.
+    pub threads: usize,
+    /// Chunks the parallel plan fans out (0: no legal mark on this nest).
+    pub chunks: usize,
+    /// Measured GFLOPS of the tuned schedule, serial execution.
+    pub gflops_serial: f64,
+    /// Measured GFLOPS of the tuned schedule with the best parallel mark
+    /// (equals `gflops_serial` when no legal mark exists).
+    pub gflops_parallel: f64,
+}
+
+impl ParallelRow {
+    /// Parallel-over-serial throughput ratio.
+    pub fn speedup(&self) -> f64 {
+        self.gflops_parallel / self.gflops_serial.max(1e-9)
+    }
+}
+
 /// Full bench report.
 #[derive(Clone, Debug)]
 pub struct BenchReport {
@@ -76,6 +108,8 @@ pub struct BenchReport {
     pub smoke: bool,
     /// One row per registered workload family.
     pub rows: Vec<FamilyRow>,
+    /// One parallel-execution row per family (default shapes).
+    pub parallel: Vec<ParallelRow>,
     /// Cost-model throughput (predictions/sec on a tiled matmul nest).
     pub cost_model_evals_per_sec: f64,
     /// Aggregate search throughput (evals/sec across all family searches).
@@ -91,6 +125,73 @@ pub struct BenchReport {
 /// Search budget per family.
 fn search_budget(cfg: &BenchCfg) -> Budget {
     Budget::evals(if cfg.smoke { 40 } else { 300 })
+}
+
+/// The best legal `parallelize` placement on `nest` by cost-model score,
+/// or `None` when no loop accepts the mark.
+fn best_parallel_variant(nest: &Nest, model: &mut CostModel) -> Option<Nest> {
+    let mut best: Option<(f64, Nest)> = None;
+    for cursor in 0..nest.loops.len() {
+        let mut cand = nest.clone();
+        cand.cursor = cursor;
+        if cand.parallelize().is_err() {
+            continue;
+        }
+        let g = model.eval(&cand);
+        if best.as_ref().map_or(true, |(bg, _)| g > *bg) {
+            best = Some((g, cand));
+        }
+    }
+    best.map(|(_, n)| n)
+}
+
+/// Measure the parallel-execution rows: per family, the tuned schedule
+/// serial vs. with its best parallel mark, on the real worker pool.
+fn run_parallel_rows(cfg: &BenchCfg, mcfg: MeasureCfg) -> Vec<ParallelRow> {
+    let threads = crate::backend::executor::exec_threads();
+    let mut rows = Vec::new();
+    for name in workloads::SUITE_NAMES {
+        let p = workloads::default_problem(name).expect("registered family");
+        let be = SharedBackend::with_factory(CostModel::default);
+        let r = SearchAlgo::Greedy2.run(p, be, search_budget(cfg), 10, cfg.seed);
+
+        // The search itself may already have taken the `parallelize`
+        // action; strip the mark for the serial baseline and keep (or
+        // find) the best-scoring marked variant for the parallel side.
+        let mut serial_nest = r.best.clone();
+        for l in &mut serial_nest.loops {
+            l.parallel = false;
+        }
+        let mut model = CostModel::default();
+        let par_nest = Some(r.best.clone())
+            .filter(|n| {
+                // Keep the search's own mark only if it actually chunks
+                // (a later swap could have pushed it to the kernel cut).
+                n.loops.iter().any(|l| l.parallel)
+                    && plan(lower(n)).parallel_chunks().is_some()
+            })
+            .or_else(|| best_parallel_variant(&serial_nest, &mut model));
+
+        let mut ws = Workspace::new(p, cfg.seed);
+        let serial_plan = plan(lower(&serial_nest));
+        let gflops_serial = measure(&serial_plan, &mut ws, mcfg);
+        let (chunks, gflops_parallel) = match par_nest {
+            Some(n) => {
+                let pl = plan(lower(&n));
+                (pl.parallel_chunks().unwrap_or(0), measure(&pl, &mut ws, mcfg))
+            }
+            None => (0, gflops_serial),
+        };
+        rows.push(ParallelRow {
+            family: name.to_string(),
+            problem: p.id(),
+            threads,
+            chunks,
+            gflops_serial,
+            gflops_parallel,
+        });
+    }
+    rows
 }
 
 /// Run the backend bench over every registered workload family.
@@ -147,9 +248,12 @@ pub fn run(cfg: &BenchCfg) -> BenchReport {
     scores.insert("tuned".into(), rows.iter().map(|r| r.gflops).collect());
     let profile = perf_profile::build(&scores);
 
+    let parallel = run_parallel_rows(cfg, mcfg);
+
     BenchReport {
         smoke: cfg.smoke,
         rows,
+        parallel,
         cost_model_evals_per_sec,
         search_evals_per_sec: total_evals as f64 / total_secs.max(1e-9),
         tuned_win_rate: profile.win_rate("tuned"),
@@ -173,6 +277,18 @@ impl BenchReport {
             row.insert("search_secs".into(), Json::Num(r.search_secs));
             families.push(Json::Obj(row));
         }
+        let mut parallel = Vec::new();
+        for r in &self.parallel {
+            let mut row = BTreeMap::new();
+            row.insert("family".into(), Json::Str(r.family.clone()));
+            row.insert("problem".into(), Json::Str(r.problem.clone()));
+            row.insert("threads".into(), Json::Num(r.threads as f64));
+            row.insert("chunks".into(), Json::Num(r.chunks as f64));
+            row.insert("gflops_serial".into(), Json::Num(r.gflops_serial));
+            row.insert("gflops_parallel".into(), Json::Num(r.gflops_parallel));
+            row.insert("speedup".into(), Json::Num(r.speedup()));
+            parallel.push(Json::Obj(row));
+        }
         let mut cost_model = BTreeMap::new();
         cost_model
             .insert("evals_per_sec".into(), Json::Num(self.cost_model_evals_per_sec));
@@ -188,6 +304,7 @@ impl BenchReport {
         doc.insert("schema".into(), Json::Str("bench_backend/v1".into()));
         doc.insert("smoke".into(), Json::Bool(self.smoke));
         doc.insert("families".into(), Json::Arr(families));
+        doc.insert("parallel".into(), Json::Arr(parallel));
         doc.insert("cost_model".into(), Json::Obj(cost_model));
         doc.insert("search".into(), Json::Obj(search));
         doc.insert("profile".into(), Json::Obj(profile));
@@ -218,6 +335,22 @@ impl BenchReport {
             "cost model: {:.0} evals/sec; search: {:.0} evals/sec (greedy2 on cost model)\n",
             self.cost_model_evals_per_sec, self.search_evals_per_sec
         ));
+        s.push_str(&format!(
+            "{:<8} {:<18} {:>8} {:>7} {:>10} {:>10} {:>9}\n",
+            "parallel", "problem", "threads", "chunks", "serial", "parallel", "speedup"
+        ));
+        for r in &self.parallel {
+            s.push_str(&format!(
+                "{:<8} {:<18} {:>8} {:>7} {:>10.2} {:>10.2} {:>8.2}x\n",
+                r.family,
+                r.problem,
+                r.threads,
+                r.chunks,
+                r.gflops_serial,
+                r.gflops_parallel,
+                r.speedup(),
+            ));
+        }
         s
     }
 }
@@ -266,6 +399,23 @@ mod tests {
                 .unwrap()
                 > 0.0
         );
+
+        // Parallel section: one row per family, all measurements positive,
+        // and the natural chunking axes actually fan out. (The speedup
+        // assertion itself lives in CI, where the thread count is known.)
+        assert_eq!(report.parallel.len(), workloads::SUITE_NAMES.len());
+        for r in &report.parallel {
+            assert!(r.threads >= 1, "{}", r.family);
+            assert!(r.gflops_serial > 0.0, "{}", r.family);
+            assert!(r.gflops_parallel > 0.0, "{}", r.family);
+        }
+        let bmm = report.parallel.iter().find(|r| r.family == "bmm").unwrap();
+        assert!(bmm.chunks >= 2, "bmm batch axis should chunk: {}", bmm.chunks);
+        let rows = doc.get("parallel").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), workloads::SUITE_NAMES.len());
+        for row in rows {
+            assert!(row.get("speedup").unwrap().as_f64().unwrap() > 0.0);
+        }
         assert!(!report.summary().is_empty());
     }
 

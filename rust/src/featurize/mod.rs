@@ -8,7 +8,10 @@
 //! 1. agent-cursor bit
 //! 2. loop size (trip count), log2-scaled
 //! 3. loop tail, log2-scaled
-//! 4. compute-nest (1) vs write-back-nest (0) bit
+//! 4. nest-kind feature: write-back loop 0, serial compute loop 1,
+//!    parallel-marked compute loop 2 (the `parallelize` mark rides the
+//!    existing slot, so `FEATS`/`STATE_DIM` — and with them every AOT
+//!    artifact shape — are unchanged by the parallel contract)
 //! 5–20. 16-bin histogram of memory-access stride frequencies, bins of
 //!    size 2^N, N in 0..=15 (cache-line-scale discretization)
 //!
@@ -81,7 +84,11 @@ pub fn loop_features(nest: &Nest, idx: usize, out: &mut [f32]) {
     out[0] = if idx == nest.cursor { 1.0 } else { 0.0 };
     out[1] = log2f(nest.trip(idx));
     out[2] = log2f(nest.tail(idx));
-    out[3] = if l.kind == Kind::Compute { 1.0 } else { 0.0 };
+    out[3] = match (l.kind, l.parallel) {
+        (Kind::WriteBack, _) => 0.0,
+        (Kind::Compute, false) => 1.0,
+        (Kind::Compute, true) => 2.0,
+    };
 
     let tensors = match l.kind {
         Kind::Compute => nest.problem.compute_tensors(),
@@ -148,6 +155,20 @@ mod tests {
         let v = state_vector(&n);
         assert_eq!(v[3], 1.0); // compute m
         assert_eq!(v[3 * FEATS + 3], 0.0); // write-back m
+    }
+
+    #[test]
+    fn parallel_mark_is_visible_to_the_network() {
+        let mut n = nest();
+        n.split(16).unwrap();
+        n.parallelize().unwrap();
+        let v = state_vector(&n);
+        assert_eq!(v[3], 2.0); // parallel compute m root
+        assert_eq!(v[FEATS + 3], 1.0); // serial compute m:16 tile
+        // The kind mask still zeroes the slot.
+        let mut masked = v.clone();
+        FeatureMask { kind: false, ..Default::default() }.apply(&mut masked);
+        assert!(masked.chunks(FEATS).all(|c| c[3] == 0.0));
     }
 
     #[test]

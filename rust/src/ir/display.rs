@@ -47,13 +47,15 @@ pub fn render(nest: &Nest) -> String {
 
         let tail = nest.tail(i);
         let tail_s = if tail > 0 { format!(" tail {tail}") } else { String::new() };
+        let par_s = if l.parallel { " parallel" } else { "" };
         let cursor_s = if i == nest.cursor { "   <- agent" } else { "" };
         let _ = writeln!(
             out,
-            "{}for {} in {}{}{}",
+            "{}for {} in {}{}{}{}",
             " ".repeat(depth),
             name,
             nest.trip(i),
+            par_s,
             tail_s,
             cursor_s
         );
@@ -148,6 +150,15 @@ mod tests {
         n.split(48).unwrap();
         let s = super::render(&n);
         assert!(s.contains("tail 4"), "{s}");
+    }
+
+    #[test]
+    fn render_marks_parallel_loops() {
+        let mut n = Nest::initial(Problem::new(64, 96, 128));
+        n.split(16).unwrap();
+        n.parallelize().unwrap();
+        let s = super::render(&n);
+        assert!(s.contains("for m_0 in 4 parallel"), "{s}");
     }
 
     #[test]

@@ -57,6 +57,12 @@ pub struct Loop {
     pub factor: Option<usize>,
     /// Which nest the loop belongs to.
     pub kind: Kind,
+    /// Marked for chunked multi-thread execution by the `parallelize`
+    /// transform. At most one loop per nest carries this flag, it is
+    /// always a compute root, and the executor distributes its iterations
+    /// across a scoped thread pool with per-chunk privatized accumulators
+    /// merged in ascending chunk order (bit-exact for any thread count).
+    pub parallel: bool,
 }
 
 /// A scheduled loop nest for one contraction problem, plus the agent cursor.
@@ -78,12 +84,12 @@ impl Nest {
     pub fn initial(problem: Problem) -> Self {
         let mut loops: Vec<Loop> = problem
             .dims()
-            .map(|dim| Loop { dim, factor: None, kind: Kind::Compute })
+            .map(|dim| Loop { dim, factor: None, kind: Kind::Compute, parallel: false })
             .collect();
         loops.extend(
             problem
                 .output_dims()
-                .map(|dim| Loop { dim, factor: None, kind: Kind::WriteBack }),
+                .map(|dim| Loop { dim, factor: None, kind: Kind::WriteBack, parallel: false }),
         );
         let nest = Nest { problem, loops, cursor: 0 };
         debug_assert!(nest.check_invariants().is_ok());
@@ -226,6 +232,28 @@ impl Nest {
                 }
             }
         }
+        // Parallel marks: at most one, and only on a compute root. (The
+        // "enough deeper loops" check is a parallelize()-time legality rule,
+        // not an invariant — later swaps may move loops past the mark.)
+        let par: Vec<usize> = self
+            .loops
+            .iter()
+            .enumerate()
+            .filter(|(_, l)| l.parallel)
+            .map(|(i, _)| i)
+            .collect();
+        if par.len() > 1 {
+            return Err(format!("{} parallel loops (max 1)", par.len()));
+        }
+        if let Some(&i) = par.first() {
+            let l = self.loops[i];
+            if l.kind != Kind::Compute {
+                return Err("parallel mark on a write-back loop".into());
+            }
+            if l.factor.is_some() {
+                return Err("parallel mark on a tile loop (roots only)".into());
+            }
+        }
         Ok(())
     }
 }
@@ -292,7 +320,7 @@ mod tests {
         // m root, m tile(16), n, k  (hand-built)
         n.loops.insert(
             1,
-            Loop { dim: Dim::M, factor: Some(16), kind: Kind::Compute },
+            Loop { dim: Dim::M, factor: Some(16), kind: Kind::Compute, parallel: false },
         );
         n.check_invariants().unwrap();
         assert_eq!(n.stride(0), 16); // root m advances 16 elements/iter
@@ -307,7 +335,7 @@ mod tests {
         let mut n = Nest::initial(Problem::new(100, 64, 64));
         n.loops.insert(
             1,
-            Loop { dim: Dim::M, factor: Some(48), kind: Kind::Compute },
+            Loop { dim: Dim::M, factor: Some(48), kind: Kind::Compute, parallel: false },
         );
         assert_eq!(n.trip(0), ceil_div(100, 48)); // 3
         assert_eq!(n.tail(0), 100 % 48); // 4 leftover elements
@@ -398,7 +426,7 @@ mod tests {
 
         // Reduction dim in the write-back nest is invalid.
         let mut n = nest();
-        n.loops.push(Loop { dim: Dim::K, factor: None, kind: Kind::WriteBack });
+        n.loops.push(Loop { dim: Dim::K, factor: None, kind: Kind::WriteBack, parallel: false });
         assert!(n.check_invariants().is_err());
     }
 }

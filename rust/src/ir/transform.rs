@@ -16,6 +16,13 @@ pub enum Invalid {
     TooManyLoops,
     /// Split factor >= the loop's current trip count (no-op split).
     FactorTooLarge,
+    /// The nest already has a parallel loop (one per nest).
+    AlreadyParallel,
+    /// Parallelize applies only to compute roots with enough inner work
+    /// (at least two deeper compute loops to amortize chunk dispatch).
+    NotParallelizable,
+    /// Trip count < 2: nothing to distribute across threads.
+    TripTooSmall,
 }
 
 impl std::fmt::Display for Invalid {
@@ -26,6 +33,11 @@ impl std::fmt::Display for Invalid {
             Invalid::SameDim => "swap of two loops of the same dimension",
             Invalid::TooManyLoops => "nest already at MAX_LOOPS",
             Invalid::FactorTooLarge => "split factor >= current trip count",
+            Invalid::AlreadyParallel => "nest already has a parallel loop",
+            Invalid::NotParallelizable => {
+                "parallelize applies only to compute roots with inner work"
+            }
+            Invalid::TripTooSmall => "trip count < 2: nothing to parallelize",
         };
         f.write_str(s)
     }
@@ -111,8 +123,43 @@ impl Nest {
         }
         self.loops.insert(
             idx + 1,
-            Loop { dim: l.dim, factor: Some(factor), kind: l.kind },
+            Loop { dim: l.dim, factor: Some(factor), kind: l.kind, parallel: false },
         );
+        debug_assert!(self.check_invariants().is_ok());
+        Ok(())
+    }
+
+    /// Mark the cursor loop for chunked multi-thread execution (the
+    /// `parallel` schedule primitive). Legality:
+    ///
+    /// - no loop in the nest is already parallel (one mark per nest);
+    /// - the cursor loop is a **compute root** — roots iterate disjoint
+    ///   element ranges, so chunks either write disjoint output slices
+    ///   (output dims) or accumulate into privatized buffers merged
+    ///   deterministically (reduction dims);
+    /// - at least two deeper compute loops exist, so each chunk carries
+    ///   enough work to amortize thread dispatch (this also keeps the
+    ///   parallel level above the executor's kernel cut in the common case;
+    ///   the executor falls back to serial execution otherwise);
+    /// - trip count >= 2, otherwise there is nothing to distribute.
+    pub fn parallelize(&mut self) -> Result<(), Invalid> {
+        if self.loops.iter().any(|l| l.parallel) {
+            return Err(Invalid::AlreadyParallel);
+        }
+        let idx = self.cursor;
+        let l = self.loops[idx];
+        if l.kind != Kind::Compute || l.factor.is_some() {
+            return Err(Invalid::NotParallelizable);
+        }
+        let deeper_compute =
+            self.loops[idx + 1..].iter().filter(|o| o.kind == Kind::Compute).count();
+        if deeper_compute < 2 {
+            return Err(Invalid::NotParallelizable);
+        }
+        if self.trip(idx) < 2 {
+            return Err(Invalid::TripTooSmall);
+        }
+        self.loops[idx].parallel = true;
         debug_assert!(self.check_invariants().is_ok());
         Ok(())
     }
@@ -136,9 +183,10 @@ pub fn schedule_signature(nest: &Nest) -> String {
                 Kind::Compute => name.to_string(),
                 Kind::WriteBack => format!("w{name}"),
             };
+            let par = if l.parallel { "*" } else { "" };
             match l.factor {
-                Some(f) => format!("{base}:{f}"),
-                None => format!("{base}:{}", nest.trip(i)),
+                Some(f) => format!("{base}:{f}{par}"),
+                None => format!("{base}:{}{par}", nest.trip(i)),
             }
         })
         .collect::<Vec<_>>()
@@ -267,7 +315,7 @@ mod tests {
             };
             let mut n = Nest::initial(p);
             for _ in 0..60 {
-                match rng.below(5) {
+                match rng.below(6) {
                     0 => {
                         let _ = n.cursor_up();
                     }
@@ -279,6 +327,9 @@ mod tests {
                     }
                     3 => {
                         let _ = n.swap_down();
+                    }
+                    4 => {
+                        let _ = n.parallelize();
                     }
                     _ => {
                         let f = *rng.choose(&[2usize, 4, 8, 16, 32, 64]);
@@ -305,5 +356,53 @@ mod tests {
         let mut n = nest();
         n.split(16).unwrap();
         assert_eq!(schedule_signature(&n), "m:4 m:16 n:96 k:128 wm:64 wn:96");
+    }
+
+    #[test]
+    fn parallelize_marks_compute_root_and_shows_in_signature() {
+        let mut n = nest();
+        n.split(16).unwrap(); // m:4 m:16 n k ...
+        n.parallelize().unwrap();
+        assert!(n.loops[0].parallel);
+        n.check_invariants().unwrap();
+        assert_eq!(schedule_signature(&n), "m:4* m:16 n:96 k:128 wm:64 wn:96");
+        // A second mark anywhere is rejected.
+        n.cursor = 2;
+        assert_eq!(n.parallelize(), Err(Invalid::AlreadyParallel));
+    }
+
+    #[test]
+    fn parallelize_legality_rules() {
+        // Tile loop: not a root.
+        let mut n = nest();
+        n.split(16).unwrap();
+        n.cursor = 1;
+        assert_eq!(n.parallelize(), Err(Invalid::NotParallelizable));
+
+        // Write-back loop.
+        let mut n = nest();
+        n.cursor = 3;
+        assert_eq!(n.parallelize(), Err(Invalid::NotParallelizable));
+
+        // Too little inner work: cursor on innermost compute root (k) has
+        // zero deeper compute loops.
+        let mut n = nest();
+        n.cursor = 2;
+        assert_eq!(n.parallelize(), Err(Invalid::NotParallelizable));
+
+        // Trip 1: an extent-1 root (batch of 1) has nothing to distribute.
+        let mut n = Nest::initial(Problem::batched_matmul(1, 64, 64, 64));
+        assert_eq!(n.cursor, 0); // batch root, trip 1
+        assert_eq!(n.parallelize(), Err(Invalid::TripTooSmall));
+
+        // Reduction root with inner work IS parallelizable (privatized
+        // accumulators make the merge deterministic).
+        let mut n = nest();
+        n.cursor = 2; // k
+        n.swap_up().unwrap();
+        n.swap_up().unwrap(); // k m n ...
+        assert_eq!(n.cursor, 0);
+        n.parallelize().unwrap();
+        assert!(n.loops[0].parallel);
     }
 }

@@ -697,7 +697,9 @@ fn main() -> Result<()> {
                  --store PATH (persistent tuning store: serve hits, record all,\n       \
                  enable the transfer strategy; db/fit-cost-model operate on it)\n       \
                  --ranker PATH --lambda X --save PATH --fit-backend NAME\n       \
-                 (learned cost model; the fit is per scoring backend)"
+                 (learned cost model; the fit is per scoring backend)\n\
+                 env:   LOOPTUNE_EXEC_THREADS=N (executor worker pool for\n       \
+                 parallelized schedules; default: all cores)"
             );
         }
     }

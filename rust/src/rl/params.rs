@@ -65,7 +65,9 @@ impl ParamSet {
     /// experiments and the tuning service): load `path` if it names an
     /// existing file, else fall back to a fresh `q_init` at `seed` —
     /// returning whether the result is a *trained* checkpoint — warning
-    /// on a named-but-missing path.
+    /// on a named-but-missing path. Loaded checkpoints are contract-checked
+    /// (see [`Self::validate_contract`]) so a stale artifact fails with a
+    /// descriptive error instead of a shape panic deep in the runtime.
     pub fn load_or_init(
         rt: &Runtime,
         path: Option<&Path>,
@@ -73,11 +75,58 @@ impl ParamSet {
     ) -> Result<(ParamSet, bool)> {
         if let Some(p) = path {
             if p.exists() {
-                return Ok((ParamSet::load(p)?, true));
+                return Ok((ParamSet::load_validated(p)?, true));
             }
             eprintln!("warning: params {p:?} not found; using untrained policy");
         }
         Ok((ParamSet::init(rt, "q_init", seed)?, false))
+    }
+
+    /// [`Self::load`] followed by [`Self::validate_contract`], naming the
+    /// file in any error.
+    pub fn load_validated(path: impl AsRef<Path>) -> Result<Self> {
+        let p = ParamSet::load(path.as_ref())?;
+        p.validate_contract()
+            .with_context(|| format!("loading {:?}", path.as_ref()))?;
+        Ok(p)
+    }
+
+    /// Check this parameter set against the crate's current network
+    /// contract: the first matrix must consume `STATE_DIM` features and
+    /// the last tensor's trailing dim must equal `NUM_ACTIONS` (the
+    /// network head the argmax indexes). Checkpoints saved under an older
+    /// contract — e.g. the 10-action head from before `parallelize` was
+    /// added — are rejected here with a migration hint instead of
+    /// panicking on a shape mismatch inside the compiled executable.
+    pub fn validate_contract(&self) -> Result<()> {
+        if self.tensors.is_empty() {
+            bail!("empty parameter set");
+        }
+        if let Some(t) = self.tensors.iter().find(|t| t.shape.len() == 2) {
+            if t.shape[0] != crate::STATE_DIM {
+                bail!(
+                    "parameter contract mismatch: first weight matrix consumes \
+                     {} features, this build expects STATE_DIM = {} \
+                     (checkpoint from an incompatible contract version; retrain \
+                     or regenerate it)",
+                    t.shape[0],
+                    crate::STATE_DIM
+                );
+            }
+        }
+        let head = self.tensors.last().expect("non-empty");
+        let width = head.shape.last().copied().unwrap_or(0);
+        if width != crate::NUM_ACTIONS {
+            bail!(
+                "parameter contract mismatch: network head is {} actions wide, \
+                 this build expects NUM_ACTIONS = {} (contract v2 appended \
+                 `parallelize` at index 10; checkpoints from the 10-action \
+                 contract must be retrained)",
+                width,
+                crate::NUM_ACTIONS
+            );
+        }
+        Ok(())
     }
 
     // ---- binary save/load: "LTPS" magic, version, tensor table ----

@@ -77,7 +77,10 @@ pub fn tune_masked(
         let mut state = crate::featurize::state_vector(&nest);
         mask.apply(&mut state);
         let q = super::dqn::q_values_with(rt, params, &state)?;
-        // Greedy over valid actions: try best-ranked first.
+        // Greedy over valid actions: try best-ranked first. Legality *is*
+        // the mask — an action whose `apply` errs (cursor at a boundary,
+        // split factor too large, `parallelize` on an illegal loop or a
+        // nest that already has a mark) is skipped, never taken.
         let mut order: Vec<usize> = (0..q.len()).collect();
         order.sort_by(|&a, &b| q[b].partial_cmp(&q[a]).unwrap());
         let mut applied = None;

@@ -87,6 +87,11 @@ pub struct ProblemOutcome {
     pub elapsed: f64,
     /// Compact signature of the best schedule.
     pub schedule: String,
+    /// Stable hash of the best schedule ([`crate::backend::schedule_hash`]),
+    /// the same identity the service API reports as `nest_hash` — lets
+    /// batch reports from different runs (or thread counts) be compared
+    /// for schedule-level, not just score-level, agreement.
+    pub nest_hash: u64,
 }
 
 /// Aggregate result of a batch run.
@@ -210,6 +215,10 @@ impl BatchReport {
                 row.insert("evals".to_string(), Json::Num(o.evals as f64));
                 row.insert("elapsed_secs".to_string(), Json::Num(o.elapsed));
                 row.insert("schedule".to_string(), Json::Str(o.schedule.clone()));
+                row.insert(
+                    "nest_hash".to_string(),
+                    Json::Str(format!("{:016x}", o.nest_hash)),
+                );
                 Json::Obj(row)
             })
             .collect();
@@ -265,6 +274,7 @@ fn tune_one(
         evals: r.evals,
         elapsed: r.elapsed,
         schedule: crate::ir::transform::schedule_signature(&r.best),
+        nest_hash: crate::backend::schedule_hash(&r.best),
     }
 }
 
@@ -357,6 +367,7 @@ mod tests {
             assert_eq!(x.best_gflops, y.best_gflops, "{}", x.problem);
             assert_eq!(x.evals, y.evals, "{}", x.problem);
             assert_eq!(x.schedule, y.schedule, "{}", x.problem);
+            assert_eq!(x.nest_hash, y.nest_hash, "{}", x.problem);
         }
         // Same problems, same budgets: the shared cache sees the same keys.
         assert_eq!(a.evals, b.evals);
@@ -383,6 +394,11 @@ mod tests {
             doc.get("results").unwrap().as_arr().unwrap().len(),
             3
         );
+        for row in doc.get("results").unwrap().as_arr().unwrap() {
+            let h = row.get("nest_hash").unwrap().as_str().unwrap();
+            assert_eq!(h.len(), 16, "{h}");
+            assert!(h.chars().all(|c| c.is_ascii_hexdigit()), "{h}");
+        }
         let summary = report.summary();
         assert!(summary.contains("3 problems"), "{summary}");
     }

@@ -243,12 +243,16 @@ impl SearchCtx {
         }
         // Learned pre-ranking: order candidates by predicted GFLOPS so a
         // budget that cannot afford them all scores the best-looking ones
-        // first. The stable sort keeps action order on ties, so ranked
-        // runs stay deterministic.
+        // first. Ties break on action index — an explicit key rather than
+        // stable-sort insertion order, so the ordering is a property of
+        // the candidates themselves and cannot drift with how they were
+        // produced.
         if let Some(rk) = &self.ranker {
             let mut scored: Vec<(f64, Action, Nest)> =
                 cands.into_iter().map(|(a, n)| (rk.predict(&n), a, n)).collect();
-            scored.sort_by(|a, b| desc_score(b.0, a.0));
+            scored.sort_by(|a, b| {
+                desc_score(b.0, a.0).then_with(|| a.1.index().cmp(&b.1.index()))
+            });
             cands = scored.into_iter().map(|(_, a, n)| (a, n)).collect();
         }
 
@@ -262,7 +266,7 @@ impl SearchCtx {
                 let g = self.eval(&next, depth);
                 out.push((action, next, g));
             }
-            out.sort_by(|a, b| desc_score(b.2, a.2));
+            sort_candidates(&mut out);
             return out;
         }
 
@@ -289,7 +293,7 @@ impl SearchCtx {
             self.observe(&next, g, depth);
             out.push((action, next, g));
         }
-        out.sort_by(|a, b| desc_score(b.2, a.2));
+        sort_candidates(&mut out);
         out
     }
 
@@ -330,6 +334,16 @@ impl SearchCtx {
 pub(crate) fn desc_score(x: f64, y: f64) -> std::cmp::Ordering {
     let key = |g: f64| if g.is_nan() { f64::NEG_INFINITY } else { g };
     key(x).total_cmp(&key(y))
+}
+
+/// Canonical ordering of scored expansion candidates: score descending,
+/// ties broken by action index ascending. The tie-break is an explicit
+/// sort key (not stable-sort insertion order) so equal-score candidates
+/// come out identically whether they were scored serially, concurrently,
+/// or pre-ordered by a ranker — pinned by
+/// `tests::expand_breaks_score_ties_by_action_index`.
+fn sort_candidates(out: &mut [(Action, Nest, f64)]) {
+    out.sort_by(|a, b| desc_score(b.2, a.2).then_with(|| a.0.index().cmp(&b.0.index())));
 }
 
 /// The search algorithms of Fig. 6/8/9/10, by name.
@@ -480,11 +494,50 @@ mod tests {
             SearchCtx::new(Problem::new(64, 64, 64), be(), Budget::evals(1000));
         let n = Nest::initial(Problem::new(64, 64, 64));
         let exp = ctx.expand(&n, 1);
-        // cursor at 0: Up and SwapUp invalid; split_64 invalid (trip == 64).
-        assert!(exp.len() >= 6 && exp.len() <= 8, "{}", exp.len());
+        // cursor at 0: Up and SwapUp invalid; split_64 invalid (trip == 64);
+        // parallelize valid (compute root with deeper work).
+        assert!(exp.len() >= 7 && exp.len() <= 9, "{}", exp.len());
+        assert!(exp.iter().any(|(a, _, _)| *a == Action::Parallelize));
         for w in exp.windows(2) {
             assert!(w[0].2 >= w[1].2);
         }
+    }
+
+    /// Satellite: equal-score candidates come back in action-index order —
+    /// an explicit sort key, so serial, concurrent, and ranked expansion
+    /// all agree and parallel scoring can never reorder ties.
+    #[test]
+    fn expand_breaks_score_ties_by_action_index() {
+        struct ConstBackend;
+        impl crate::backend::Backend for ConstBackend {
+            fn eval(&mut self, _nest: &Nest) -> f64 {
+                7.5
+            }
+            fn name(&self) -> &'static str {
+                "const"
+            }
+            fn eval_count(&self) -> u64 {
+                0
+            }
+        }
+        let p = Problem::new(64, 64, 64);
+        let n = Nest::initial(p);
+        let mut orders = Vec::new();
+        for threads in [1usize, 2, 4] {
+            let mut ctx = SearchCtx::with_threads(
+                p,
+                SharedBackend::with_factory(|| ConstBackend),
+                Budget::evals(1000),
+                threads,
+            );
+            let exp = ctx.expand(&n, 1);
+            let idxs: Vec<usize> = exp.iter().map(|(a, _, _)| a.index()).collect();
+            let mut sorted = idxs.clone();
+            sorted.sort_unstable();
+            assert_eq!(idxs, sorted, "ties must come out in action-index order");
+            orders.push(idxs);
+        }
+        assert!(orders.windows(2).all(|w| w[0] == w[1]), "order varies with threads");
     }
 
     #[test]

@@ -199,9 +199,11 @@ impl TuneRecord {
 
 /// Canonical textual encoding of a nest's loops, e.g. `c0 c0x16 c1 c2 w0 w1`:
 /// one token per loop, `c`/`w` for compute/write-back, the dim index, and
-/// `xF` for a tile loop of factor `F` (roots carry no factor). Cursor
-/// position is deliberately not encoded — schedules are cached and hashed
-/// modulo the cursor.
+/// `xF` for a tile loop of factor `F` (roots carry no factor). A loop
+/// marked by `parallelize` gets a trailing `*` (e.g. `c0*`) — records
+/// written before the parallel contract simply never carry the suffix, so
+/// old stores decode unchanged. Cursor position is deliberately not
+/// encoded — schedules are cached and hashed modulo the cursor.
 pub fn encode_loops(nest: &Nest) -> String {
     nest.loops
         .iter()
@@ -210,9 +212,10 @@ pub fn encode_loops(nest: &Nest) -> String {
                 Kind::Compute => 'c',
                 Kind::WriteBack => 'w',
             };
+            let par = if l.parallel { "*" } else { "" };
             match l.factor {
-                None => format!("{tag}{}", l.dim.index()),
-                Some(f) => format!("{tag}{}x{f}", l.dim.index()),
+                None => format!("{tag}{}{par}", l.dim.index()),
+                Some(f) => format!("{tag}{}x{f}{par}", l.dim.index()),
             }
         })
         .collect::<Vec<_>>()
@@ -231,7 +234,10 @@ pub fn decode_loops(problem: Problem, encoded: &str) -> Result<Nest> {
             Some(b'w') => Kind::WriteBack,
             _ => bail!("bad loop token {tok:?} (want c.../w...)"),
         };
-        let rest = &tok[1..];
+        let (rest, parallel) = match tok[1..].strip_suffix('*') {
+            Some(r) => (r, true),
+            None => (&tok[1..], false),
+        };
         let (dim_s, factor) = match rest.split_once('x') {
             Some((d, f)) => {
                 let f: usize =
@@ -248,7 +254,7 @@ pub fn decode_loops(problem: Problem, encoded: &str) -> Result<Nest> {
         if di >= problem.n_dims() {
             bail!("dim index {di} out of range for {}", problem.id());
         }
-        loops.push(Loop { dim: Dim::new(di), factor, kind });
+        loops.push(Loop { dim: Dim::new(di), factor, kind, parallel });
     }
     let nest = Nest { problem, loops, cursor: 0 };
     nest.check_invariants()
@@ -334,11 +340,12 @@ mod tests {
             let mut rng = Pcg32::new(0x5703 + pi as u64);
             let mut n = Nest::initial(p);
             for _ in 0..60 {
-                match rng.below(5) {
+                match rng.below(6) {
                     0 => drop(n.cursor_up()),
                     1 => drop(n.cursor_down()),
                     2 => drop(n.swap_up()),
                     3 => drop(n.swap_down()),
+                    4 => drop(n.parallelize()),
                     _ => drop(n.split(*rng.choose(&[2usize, 4, 8, 16]))),
                 }
                 let decoded = decode_loops(p, &encode_loops(&n)).unwrap();
@@ -383,6 +390,8 @@ mod tests {
             "c0x1 c0 c1 c2 w0 w1", // factor < 2
             "c0xq c0 c1 c2 w0 w1", // unparseable factor
             "c0x8 c1 c2 w0 w1",    // tile before (i.e. without) its root
+            "c0* c1* c2 w0 w1",    // two parallel marks
+            "c0 c1 c2 w0* w1",     // parallel mark on a write-back loop
         ] {
             assert!(decode_loops(p, bad).is_err(), "{bad:?} must be rejected");
         }

@@ -68,3 +68,66 @@ fn action_table_width_matches_network_head() {
     assert_eq!(looptune::Action::all().len(), looptune::NUM_ACTIONS);
     assert_eq!(parse_const(&model_py(), "NUM_ACTIONS"), looptune::Action::all().len());
 }
+
+#[test]
+fn contract_v2_pins_parallelize_at_the_appended_index() {
+    // Contract v2: `parallelize` was appended at index 10, leaving indices
+    // 0-9 (and therefore every pre-existing checkpoint's action meaning,
+    // if not its head width) untouched. Both sides must say 11.
+    assert_eq!(looptune::NUM_ACTIONS, 11);
+    assert_eq!(parse_const(&model_py(), "NUM_ACTIONS"), 11);
+    assert_eq!(looptune::Action::Parallelize.index(), 10);
+    assert_eq!(looptune::Action::from_index(10), Some(looptune::Action::Parallelize));
+    assert!(
+        model_py().contains("parallelize"),
+        "model.py's NUM_ACTIONS comment no longer names the appended action"
+    );
+}
+
+#[test]
+fn old_contract_param_set_is_rejected_with_a_descriptive_error() {
+    use looptune::rl::params::ParamSet;
+    use looptune::runtime::literal::HostTensor;
+
+    let dir = std::env::temp_dir().join(format!("ltps_contract_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+
+    // A checkpoint from the 10-action contract: right STATE_DIM, stale head.
+    let old_width = looptune::NUM_ACTIONS - 1;
+    let old = ParamSet::new(vec![
+        HostTensor::new(vec![looptune::STATE_DIM, 4], vec![0.0; looptune::STATE_DIM * 4]),
+        HostTensor::new(vec![old_width], vec![0.0; old_width]),
+    ]);
+    let old_path = dir.join("old.ltps");
+    old.save(&old_path).unwrap();
+    // The raw loader still reads it (the file itself is well-formed) ...
+    ParamSet::load(&old_path).unwrap();
+    // ... but the validated path must fail — an Err, not a shape panic —
+    // and the message must tell the user what to do about it.
+    let err = format!("{:#}", ParamSet::load_validated(&old_path).unwrap_err());
+    assert!(err.contains("NUM_ACTIONS"), "{err}");
+    assert!(err.contains("retrained"), "{err}");
+    assert!(err.contains("old.ltps"), "error names the file: {err}");
+
+    // Wrong STATE_DIM is caught too, independent of the head width.
+    let sd = looptune::STATE_DIM - 20;
+    let stale_dim = ParamSet::new(vec![
+        HostTensor::new(vec![sd, 4], vec![0.0; sd * 4]),
+        HostTensor::new(vec![looptune::NUM_ACTIONS], vec![0.0; looptune::NUM_ACTIONS]),
+    ]);
+    let dim_path = dir.join("dim.ltps");
+    stale_dim.save(&dim_path).unwrap();
+    let err = format!("{:#}", ParamSet::load_validated(&dim_path).unwrap_err());
+    assert!(err.contains("STATE_DIM"), "{err}");
+
+    // A current-contract set passes the same gate.
+    let good = ParamSet::new(vec![
+        HostTensor::new(vec![looptune::STATE_DIM, 4], vec![0.0; looptune::STATE_DIM * 4]),
+        HostTensor::new(vec![looptune::NUM_ACTIONS], vec![0.0; looptune::NUM_ACTIONS]),
+    ]);
+    let good_path = dir.join("good.ltps");
+    good.save(&good_path).unwrap();
+    ParamSet::load_validated(&good_path).unwrap();
+
+    std::fs::remove_dir_all(&dir).unwrap();
+}

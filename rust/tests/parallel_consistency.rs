@@ -39,11 +39,86 @@ fn parallel_tune_many_matches_serial_bit_for_bit() {
         assert_eq!(a.initial_gflops, b.initial_gflops, "{}", a.problem);
         assert_eq!(a.evals, b.evals, "{}", a.problem);
         assert_eq!(a.schedule, b.schedule, "{}", a.problem);
+        assert_eq!(a.nest_hash, b.nest_hash, "{}", a.problem);
     }
     // Aggregate accounting also agrees: distinct problems -> the shared
     // cache sees the same miss set regardless of interleaving.
     assert_eq!(serial.evals, parallel.evals);
     assert_eq!(serial.cache_hits, parallel.cache_hits);
+}
+
+/// Executor-backed scoring whose value depends deterministically on the
+/// *bits* the execution engine produces (no wall-clock): the cost-model
+/// score perturbed by a checksum of the executed output. If the engine's
+/// result ever varied with its worker-thread count, scores — and with
+/// them tuning trajectories, schedules and nest hashes — would diverge.
+struct BitScore {
+    cm: CostModel,
+    threads: usize,
+    evals: u64,
+}
+
+impl Backend for BitScore {
+    fn eval(&mut self, nest: &Nest) -> f64 {
+        use looptune::backend::executor::{plan, run_once_threaded, Workspace};
+        self.evals += 1;
+        let pl = plan(looptune::backend::schedule::lower(nest));
+        let mut ws = Workspace::new(nest.problem, 0xc0de);
+        run_once_threaded(&pl, &mut ws, self.threads);
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        for v in &ws.c {
+            h = (h ^ v.to_bits() as u64).wrapping_mul(0x100_0000_01b3);
+        }
+        self.cm.eval(nest) * (1.0 + (h % 1024) as f64 * 1e-12)
+    }
+    fn name(&self) -> &'static str {
+        "bit_score"
+    }
+    fn eval_count(&self) -> u64 {
+        self.evals
+    }
+}
+
+/// Suite-wide determinism regression: a fixed-seed `tune-many` over every
+/// workload family produces identical per-problem nest hashes, schedules
+/// and eval counts whether the *execution engine* runs its chunks on 1
+/// worker thread or 4 — the contract the chunk-ordered privatized merge
+/// guarantees (DESIGN.md §11).
+#[test]
+fn tune_many_suite_is_invariant_to_executor_thread_pool() {
+    use looptune::eval::workloads;
+    let problems: Vec<Problem> = workloads::SUITE_NAMES
+        .iter()
+        .map(|n| workloads::smoke_problem(n).expect("smoke shape"))
+        .collect();
+    let cfg = BatchCfg {
+        algo: SearchAlgo::Greedy2,
+        budget: Budget::evals(60),
+        depth: 8,
+        seed: 42,
+        threads: 2,
+        expand_threads: 1,
+    };
+    let run_at = |exec_threads: usize| {
+        let be = SharedBackend::with_factory(move || BitScore {
+            cm: CostModel::default(),
+            threads: exec_threads,
+            evals: 0,
+        });
+        batch::run(&problems, &be, &cfg).with_suite("smoke-all")
+    };
+    let one = run_at(1);
+    let four = run_at(4);
+    assert_eq!(one.outcomes.len(), four.outcomes.len());
+    for (a, b) in one.outcomes.iter().zip(&four.outcomes) {
+        assert_eq!(a.problem, b.problem);
+        assert_eq!(a.nest_hash, b.nest_hash, "{}", a.problem);
+        assert_eq!(a.schedule, b.schedule, "{}", a.problem);
+        assert_eq!(a.evals, b.evals, "{}", a.problem);
+        assert_eq!(a.best_gflops, b.best_gflops, "{}", a.problem);
+    }
+    assert_eq!(one.evals, four.evals);
+    assert_eq!(one.cache_hits, four.cache_hits);
 }
 
 #[test]

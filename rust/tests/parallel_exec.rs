@@ -1,0 +1,194 @@
+//! Determinism suite for the chunked parallel executor: for every workload
+//! family, a `parallelize`-marked schedule must produce the **same bits at
+//! every worker-thread count** (the chunk-ordered privatized merge), agree
+//! with the access-map reference, and — when the parallel dim is an output
+//! dim, so chunks touch disjoint accumulator elements — reproduce the
+//! fully serial executor exactly. Clamped tail chunks (non-dividing
+//! extents) and privatized-reduction merges (a parallel reduction root)
+//! are covered explicitly.
+
+use looptune::backend::executor::{plan, reference, run_once_threaded, ExecPlan, Workspace};
+use looptune::backend::schedule::lower;
+use looptune::ir::{Nest, Problem};
+
+const THREADS: [usize; 3] = [1, 2, 4];
+
+fn planned(nest: &Nest) -> ExecPlan {
+    plan(lower(nest))
+}
+
+fn run_at(plan: &ExecPlan, seed: u64, threads: usize) -> Vec<f32> {
+    let mut ws = Workspace::new(plan.problem(), seed);
+    run_once_threaded(plan, &mut ws, threads);
+    ws.c
+}
+
+fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+}
+
+/// Run `par` (which must actually plan parallel chunks) at every thread
+/// count: all runs bit-identical, and within tolerance of the reference.
+/// Returns the (thread-invariant) output for further comparison.
+fn check_thread_invariant(par: &Nest, seed: u64) -> Vec<f32> {
+    let pl = planned(par);
+    assert!(
+        pl.parallel_chunks().is_some(),
+        "{}: schedule {} did not plan parallel chunks",
+        par.problem,
+        looptune::ir::transform::schedule_signature(par)
+    );
+    let first = run_at(&pl, seed, THREADS[0]);
+    for &threads in &THREADS[1..] {
+        let got = run_at(&pl, seed, threads);
+        assert_eq!(
+            got, first,
+            "{}: threads {} diverged from threads {}",
+            par.problem, threads, THREADS[0]
+        );
+    }
+    let ws = Workspace::new(par.problem, seed);
+    let want = reference(&ws);
+    let d = max_abs_diff(&first, &want);
+    assert!(d < 1e-3, "{}: max diff vs reference {d}", par.problem);
+    first
+}
+
+/// [`check_thread_invariant`], additionally asserting the parallel output
+/// is **bit-identical** to the same schedule executed without the mark —
+/// valid whenever the parallel dim is an output dim (disjoint chunks).
+fn check_exact_vs_serial(serial: &Nest, par: &Nest, seed: u64) {
+    let got = check_thread_invariant(par, seed);
+    let want = run_at(&planned(serial), seed, 1);
+    assert_eq!(got, want, "{}: parallel output != serial output", par.problem);
+}
+
+/// Parallelize the cursor-0 root of `nest`'s clone and check it against
+/// the unmarked original (the root must be an output dim).
+fn check_output_root_parallel(nest: &Nest, seed: u64) {
+    let mut par = nest.clone();
+    par.cursor = 0;
+    par.parallelize().unwrap();
+    check_exact_vs_serial(nest, &par, seed);
+}
+
+#[test]
+fn matmul_parallel_rows_exact_with_tail_chunks() {
+    // 50 split 16 -> chunks of 16,16,16 and a clamped tail of 2.
+    let mut n = Nest::initial(Problem::matmul(50, 36, 28));
+    n.cursor = 0;
+    n.split(16).unwrap();
+    let mut par = n.clone();
+    par.parallelize().unwrap();
+    assert_eq!(planned(&par).parallel_chunks(), Some(4));
+    check_output_root_parallel(&n, 11);
+    // Unsplit root: one chunk per m row (50 chunks of 1).
+    check_output_root_parallel(&Nest::initial(Problem::matmul(50, 36, 28)), 12);
+}
+
+#[test]
+fn matmul_transposed_parallel_rows_exact() {
+    let mut n = Nest::initial(Problem::matmul_transposed(45, 24, 32));
+    n.cursor = 0;
+    n.split(8).unwrap(); // ceil(45/8) = 6 chunks, tail 5
+    check_output_root_parallel(&n, 21);
+}
+
+#[test]
+fn bmm_parallel_over_batch_exact() {
+    // The natural LoopTune parallel axis: one chunk per batch entry.
+    check_output_root_parallel(&Nest::initial(Problem::batched_matmul(6, 12, 14, 16)), 31);
+    // Chunked batch with a tail: 7 split 2 -> 4 chunks, last of size 1.
+    let mut n = Nest::initial(Problem::batched_matmul(7, 10, 12, 8));
+    n.cursor = 0;
+    n.split(2).unwrap();
+    check_output_root_parallel(&n, 32);
+}
+
+#[test]
+fn conv1d_parallel_over_output_rows_exact() {
+    // In conv1d chunks of oh read *overlapping* input windows but write
+    // disjoint output rows — still exact vs serial.
+    let mut n = Nest::initial(Problem::conv1d(27, 8, 3, 6));
+    n.cursor = 0;
+    n.split(8).unwrap(); // ceil(27/8) = 4 chunks, tail 3
+    check_output_root_parallel(&n, 41);
+}
+
+#[test]
+fn conv2d_parallel_over_output_rows_exact() {
+    let mut n = Nest::initial(Problem::conv2d(21, 17, 3, 5));
+    n.cursor = 0;
+    n.split(4).unwrap(); // ceil(21/4) = 6 chunks, tail 1
+    check_output_root_parallel(&n, 51);
+}
+
+#[test]
+fn mlp_parallel_rows_exact_through_epilogue() {
+    // Bias + ReLU write-back runs after the merge, on the merged T.
+    let mut n = Nest::initial(Problem::mlp(38, 24, 20));
+    n.cursor = 0;
+    n.split(16).unwrap(); // ceil(38/16) = 3 chunks, tail 6
+    check_output_root_parallel(&n, 61);
+}
+
+#[test]
+fn reduction_root_parallel_is_thread_invariant_on_every_family() {
+    // Privatized-reduction merge: parallelizing a *reduction* root
+    // re-associates the accumulation at chunk granularity, so the result
+    // is pinned to the reference (1e-3) and to itself across thread
+    // counts (bit-exact), but not to the serial plan.
+    let cases: [(Problem, usize); 3] = [
+        (Problem::matmul(20, 16, 60), 2),            // k root at index 2
+        (Problem::matmul_transposed(18, 14, 52), 2), // k root at index 2
+        (Problem::conv1d(16, 6, 3, 40), 3),          // ic root at index 3
+    ];
+    for (p, red_idx) in cases {
+        let mut n = Nest::initial(p);
+        n.cursor = red_idx;
+        n.split(16).unwrap(); // chunked reduction, non-dividing -> tail
+        // Hoist the reduction root to the top so >= 2 compute loops
+        // remain below it (parallelize legality).
+        for _ in 0..red_idx {
+            n.swap_up().unwrap();
+        }
+        n.parallelize().unwrap();
+        check_thread_invariant(&n, 71);
+    }
+}
+
+#[test]
+fn deep_parallel_schedules_agree_on_every_family() {
+    // Random transform chains with parallelize in the action mix: any
+    // legally marked schedule stays thread-invariant and correct.
+    use looptune::util::rng::Pcg32;
+    let problems = [
+        Problem::matmul(18, 22, 26),
+        Problem::matmul_transposed(14, 10, 18),
+        Problem::batched_matmul(2, 9, 13, 11),
+        Problem::conv1d(21, 10, 3, 6),
+        Problem::conv2d(11, 13, 3, 3),
+        Problem::mlp(13, 17, 11),
+    ];
+    for (pi, &p) in problems.iter().enumerate() {
+        let mut rng = Pcg32::new(0x9a7 + pi as u64);
+        let mut n = Nest::initial(p);
+        for _ in 0..30 {
+            match rng.below(6) {
+                0 => drop(n.cursor_up()),
+                1 => drop(n.cursor_down()),
+                2 => drop(n.swap_up()),
+                3 => drop(n.swap_down()),
+                4 => drop(n.parallelize()),
+                _ => drop(n.split(*rng.choose(&[2usize, 3, 4, 8]))),
+            }
+        }
+        let pl = planned(&n);
+        let first = run_at(&pl, 81, 1);
+        for threads in [2, 4] {
+            assert_eq!(run_at(&pl, 81, threads), first, "{p}");
+        }
+        let ws = Workspace::new(p, 81);
+        assert!(max_abs_diff(&first, &reference(&ws)) < 1e-3, "{p}");
+    }
+}

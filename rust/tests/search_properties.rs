@@ -113,6 +113,84 @@ fn prop_action_closure_preserves_coverage() {
     }
 }
 
+/// `Action::from_index` round-trips over the whole (contract v2) action
+/// space, and every out-of-range index is rejected — the coordinator's
+/// argmax relies on this exact table.
+#[test]
+fn prop_action_index_roundtrips_over_enlarged_space() {
+    assert_eq!(Action::all().len(), looptune::NUM_ACTIONS);
+    for (i, &a) in Action::all().iter().enumerate() {
+        assert_eq!(a.index(), i, "{}", a.name());
+        assert_eq!(Action::from_index(i), Some(a));
+    }
+    assert_eq!(Action::from_index(looptune::NUM_ACTIONS), None);
+    let mut rng = Pcg32::new(0xac7);
+    for _ in 0..200 {
+        let i = looptune::NUM_ACTIONS + rng.below(1000);
+        assert_eq!(Action::from_index(i), None, "index {i}");
+    }
+}
+
+/// `Parallelize` is masked (apply errs, leaving the nest untouched)
+/// exactly on illegal loops: a second mark anywhere in the nest, tile
+/// loops and write-back loops, reduction roots without enough inner work
+/// to privatize over, and trip counts < 2. On a legal compute root it
+/// succeeds and the nest stays invariant-clean.
+#[test]
+fn prop_parallelize_masked_exactly_on_illegal_loops() {
+    let mut rng = Pcg32::new(0x9a11);
+    for _ in 0..25 {
+        let p = random_problem(&mut rng);
+        let mut nest = Nest::initial(p);
+        // Random warp-up so masking is checked on non-trivial nests too.
+        for _ in 0..rng.below(12) {
+            let _ = Action::from_index(rng.below(looptune::NUM_ACTIONS - 1))
+                .expect("pre-parallel action")
+                .apply(&mut nest);
+        }
+        for cursor in 0..nest.loops.len() {
+            let mut n = nest.clone();
+            n.cursor = cursor;
+            let before = n.loops.clone();
+            let l = n.loops[cursor];
+            let deeper = n.loops[cursor + 1..]
+                .iter()
+                .filter(|o| o.kind == looptune::ir::Kind::Compute)
+                .count();
+            let legal = l.kind == looptune::ir::Kind::Compute
+                && l.factor.is_none()
+                && deeper >= 2
+                && n.trip(cursor) >= 2;
+            let r = Action::Parallelize.apply(&mut n);
+            assert_eq!(r.is_ok(), legal, "{p} cursor {cursor}: {r:?}");
+            if legal {
+                assert!(n.loops[cursor].parallel);
+                n.check_invariants().unwrap();
+                // One mark per nest: every second attempt is masked, at
+                // every cursor position.
+                for c2 in 0..n.loops.len() {
+                    let mut m = n.clone();
+                    m.cursor = c2;
+                    assert!(Action::Parallelize.apply(&mut m).is_err());
+                }
+            } else {
+                assert_eq!(n.loops, before, "masked action mutated the nest");
+            }
+        }
+    }
+}
+
+/// The trip-count mask concretely: a batch dim of extent 1 (bmm with a
+/// single batch) has nothing to distribute.
+#[test]
+fn parallelize_masked_on_unit_trip_root() {
+    let mut n = Nest::initial(Problem::batched_matmul(1, 64, 64, 64));
+    n.cursor = 0;
+    assert!(Action::Parallelize.apply(&mut n).is_err());
+    n.cursor = 1; // m root: trip 64, three deeper compute loops
+    Action::Parallelize.apply(&mut n).unwrap();
+}
+
 /// Wider beams dominate narrower ones when both complete their trees.
 #[test]
 fn prop_beam_width_monotonicity_small_depth() {
