@@ -317,11 +317,16 @@ pub enum StrategyKind {
     /// ([`crate::store::transfer::TransferStrategy`]; requires the service
     /// to be configured with a store).
     Transfer,
+    /// Population-based evolutionary search: rank whole generations with
+    /// the learned cost model, measure only the predicted top-k
+    /// ([`crate::search::evolve::EvolveStrategy`]; store and ranker are
+    /// optional enrichments).
+    Evolve,
 }
 
 impl StrategyKind {
     /// Resolve a strategy by name: `policy` (alias `looptune`),
-    /// `transfer`, any [`SearchAlgo::name`], or any
+    /// `transfer`, `evolve`, any [`SearchAlgo::name`], or any
     /// [`BaselineKind::name`].
     pub fn parse(s: &str) -> Option<StrategyKind> {
         if s == "policy" || s == "looptune" {
@@ -329,6 +334,9 @@ impl StrategyKind {
         }
         if s == "transfer" {
             return Some(StrategyKind::Transfer);
+        }
+        if s == "evolve" {
+            return Some(StrategyKind::Evolve);
         }
         if let Some(a) = SearchAlgo::from_name(s) {
             return Some(StrategyKind::Search(a));
@@ -343,15 +351,20 @@ impl StrategyKind {
             StrategyKind::Search(a) => a.name(),
             StrategyKind::Baseline(b) => b.name(),
             StrategyKind::Transfer => "transfer",
+            StrategyKind::Evolve => "evolve",
         }
     }
 
     /// Whether this strategy consumes a budget (and would spin forever on
     /// an unlimited one). Policy rollout and the baseline simulators run
     /// a fixed amount of work regardless; transfer needs a budget for its
-    /// cold-miss search fallback.
+    /// cold-miss search fallback, and evolve paces its measurement loop
+    /// off the budget.
     pub fn needs_budget(&self) -> bool {
-        matches!(self, StrategyKind::Search(_) | StrategyKind::Transfer)
+        matches!(
+            self,
+            StrategyKind::Search(_) | StrategyKind::Transfer | StrategyKind::Evolve
+        )
     }
 
     /// Every servable strategy name (help text, tests).
@@ -360,6 +373,7 @@ impl StrategyKind {
         v.extend(SearchAlgo::ALL.iter().map(|a| a.name()));
         v.extend(BaselineKind::ALL.iter().map(|b| b.name()));
         v.push("transfer");
+        v.push("evolve");
         v
     }
 }
@@ -390,6 +404,8 @@ mod tests {
         assert!(!StrategyKind::Baseline(BaselineKind::AutoTvm).needs_budget());
         // Transfer's cold-miss fallback is a search, so it needs one too.
         assert!(StrategyKind::Transfer.needs_budget());
+        // Evolve's measurement loop is paced by the budget.
+        assert!(StrategyKind::Evolve.needs_budget());
     }
 
     #[test]

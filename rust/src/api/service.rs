@@ -21,6 +21,7 @@ use crate::ir::{Nest, Problem};
 use crate::rl::params::ParamSet;
 use crate::runtime::Runtime;
 use crate::search::batch::problem_seed;
+use crate::search::evolve::EvolveStrategy;
 use crate::store::cost::CostRanker;
 use crate::store::transfer::TransferStrategy;
 use crate::store::{TuneRecord, TuningStore};
@@ -188,6 +189,15 @@ impl TuningService {
                     ..TransferStrategy::new(store)
                 })
             }
+            // Store and ranker are optional enrichments here, not
+            // requirements: evolve seeds from history when a store is
+            // attached and bootstraps its own ranker from online
+            // measurements otherwise.
+            StrategyKind::Evolve => Box::new(EvolveStrategy {
+                store: self.cfg.store.clone(),
+                ranker: self.cfg.ranker.clone(),
+                ..EvolveStrategy::default()
+            }),
         })
     }
 

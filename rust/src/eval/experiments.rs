@@ -709,6 +709,139 @@ pub fn store_transfer(cfg: &EvalCfg, n: usize, budget_evals: u64) -> Result<Stri
 }
 
 // ---------------------------------------------------------------------------
+// Search: evolve-vs-greedy2 sample efficiency (DESIGN.md §12)
+// ---------------------------------------------------------------------------
+
+/// Evolutionary-search sample-efficiency experiment: tune `n` held-out
+/// test problems cold with greedy-2 at `budget_evals` backend
+/// evaluations, then again with the population-based `evolve` strategy
+/// at **one tenth** of that budget — ranker-scored populations and a
+/// store warmed on nearest train-split neighbors (the same corpus recipe
+/// as [`store_transfer`]) stand in for the measurements evolve skips.
+/// Reports the GFLOPS ratio (geomean of per-problem evolve/cold) and the
+/// backend-eval ratio, and writes the tracked `BENCH_search.json`
+/// (schema `bench_search/v1`). Cost-model scored, so the numbers are
+/// deterministic at a fixed seed; the pin is evolve >= cold greedy-2
+/// GFLOPS at <= 10% of its evaluations.
+pub fn bench_search(cfg: &EvalCfg, n: usize, budget_evals: u64) -> Result<String> {
+    use crate::search::batch::problem_seed;
+    use crate::search::evolve::EvolveStrategy;
+    use crate::store::transfer::nearest_problems;
+    use crate::store::TuningStore;
+    use crate::util::json::{write_json, Json};
+
+    let tcfg = EvalCfg { measured: false, ..cfg.clone() };
+    let ds = dataset::canonical();
+    let n = cfg.scaled(n).max(2);
+    let tests = dataset::sample_test(&ds, n, cfg.seed ^ 0x5e4c);
+    let evolve_budget = (budget_evals / 10).max(1);
+
+    // Warm corpus: the 3 nearest train problems of each test problem,
+    // deduped — evolve's generation-0 seeds and ranker training corpus.
+    let mut warm_ids = std::collections::BTreeSet::new();
+    let mut warm = Vec::new();
+    for &t in &tests {
+        for p in nearest_problems(&ds.train, t, 3) {
+            if warm_ids.insert(p.id()) {
+                warm.push(p);
+            }
+        }
+    }
+    let store = TuningStore::in_memory();
+    let bcfg = batch::BatchCfg {
+        algo: SearchAlgo::Greedy2,
+        budget: Budget::evals(budget_evals),
+        depth: 10,
+        seed: cfg.seed,
+        threads: cfg.threads,
+        expand_threads: 1,
+    };
+    batch::run_recorded(&warm, &tcfg.backend(), &bcfg, Some(&store), None);
+
+    // Cold: fresh greedy-2 per test problem at the full budget. Evolve:
+    // population search at a tenth of it, seeded from the warm store,
+    // refitting its ranker online from its own measurements.
+    let cold = batch::run(&tests, &tcfg.backend(), &bcfg);
+    let strategy = EvolveStrategy::with_store(store.clone());
+    let be_evolve = tcfg.backend();
+    let mut rows = Vec::new();
+    let mut ratios = Vec::new();
+    let (mut cold_evals, mut evolve_evals) = (0u64, 0u64);
+    for (o, &p) in cold.outcomes.iter().zip(&tests) {
+        let opts = TuneOpts { depth: 10, seed: problem_seed(cfg.seed, p), expand_threads: 1 };
+        let r = api::run_strategy(
+            &strategy,
+            &be_evolve,
+            p,
+            1.0,
+            FeatureMask::default(),
+            Budget::evals(evolve_budget),
+            &opts,
+        )?;
+        let ratio = r.best_gflops / o.best_gflops.max(1e-12);
+        ratios.push(ratio);
+        cold_evals += o.evals;
+        evolve_evals += r.evals;
+        rows.push((p, o.best_gflops, o.evals, r.best_gflops, r.evals, ratio));
+    }
+    let gflops_ratio = stats::geomean(&ratios);
+    let evals_ratio = evolve_evals as f64 / cold_evals.max(1) as f64;
+
+    let mut csv = String::from(
+        "problem,cold_gflops,cold_evals,evolve_gflops,evolve_evals,gflops_ratio\n",
+    );
+    let mut json_rows = Vec::new();
+    for (p, cg, ce, eg, ee, ratio) in &rows {
+        let _ = writeln!(csv, "{p},{cg:.4},{ce},{eg:.4},{ee},{ratio:.4}");
+        let mut row = BTreeMap::new();
+        row.insert("problem".to_string(), Json::Str(p.id()));
+        row.insert("cold_gflops".to_string(), Json::Num(*cg));
+        row.insert("cold_evals".to_string(), Json::Num(*ce as f64));
+        row.insert("evolve_gflops".to_string(), Json::Num(*eg));
+        row.insert("evolve_evals".to_string(), Json::Num(*ee as f64));
+        row.insert("gflops_ratio".to_string(), Json::Num(*ratio));
+        json_rows.push(Json::Obj(row));
+    }
+    let mut root = BTreeMap::new();
+    root.insert("schema".to_string(), Json::Str("bench_search/v1".into()));
+    root.insert("problems".to_string(), Json::Num(tests.len() as f64));
+    root.insert("warm_problems".to_string(), Json::Num(warm.len() as f64));
+    root.insert("records".to_string(), Json::Num(store.len() as f64));
+    root.insert("budget_evals".to_string(), Json::Num(budget_evals as f64));
+    root.insert("evolve_budget_evals".to_string(), Json::Num(evolve_budget as f64));
+    root.insert("cold_evals".to_string(), Json::Num(cold_evals as f64));
+    root.insert("evolve_evals".to_string(), Json::Num(evolve_evals as f64));
+    root.insert("gflops_ratio".to_string(), Json::Num(gflops_ratio));
+    root.insert("evals_ratio".to_string(), Json::Num(evals_ratio));
+    root.insert("results".to_string(), Json::Arr(json_rows));
+    let mut json_text = String::new();
+    write_json(&Json::Obj(root), &mut json_text);
+    json_text.push('\n');
+    std::fs::write("BENCH_search.json", &json_text)?;
+    write_out(&cfg.out_dir, "search_evolve.csv", &csv)?;
+
+    let md = format!(
+        "# Evolve-vs-greedy2 sample efficiency ({} test problems, {} warm \
+         neighbors, cold budget {budget_evals} evals, evolve budget \
+         {evolve_budget} evals)\n\n\
+         - evolve reaches **{:.1}%** of cold greedy-2 GFLOPS (geomean)\n\
+         - using **{:.1}%** of its backend evaluations ({} vs {})\n\
+         - store: {} records over {} problems seed generation 0\n\n\
+         BENCH_search.json written (schema bench_search/v1).\n",
+        tests.len(),
+        warm.len(),
+        100.0 * gflops_ratio,
+        100.0 * evals_ratio,
+        evolve_evals,
+        cold_evals,
+        store.len(),
+        warm.len(),
+    );
+    write_out(&cfg.out_dir, "search_evolve.md", &md)?;
+    Ok(md)
+}
+
+// ---------------------------------------------------------------------------
 // Policy training with seed selection
 // ---------------------------------------------------------------------------
 

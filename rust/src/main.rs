@@ -6,11 +6,16 @@
 //!   render    --spec S            print the IR of the initial nest
 //!   train     --algo A --iters N  train a policy (saves .ltps params)
 //!   tune      --spec S            tune one problem with a trained policy
+//!                                 (--strategy evolve|transfer|greedy2|...
+//!                                 picks any service strategy instead)
 //!   search    --algo A --spec S   run one classical search
 //!   tune-many --algo A ...        batch-tune a whole problem set across
 //!                                 worker threads; writes a JSON report.
 //!                                 --suite bmm|conv1d|conv2d|mlp|... runs a
-//!                                 workload suite from the registry
+//!                                 workload suite from the registry;
+//!                                 --strategy evolve runs the population
+//!                                 search; --smoke tunes one tiny shape
+//!                                 per family (the CI evolve gate)
 //!   serve     [--once] [--file F] serve JSON tune requests: one
 //!                                 `tune_request/v1` document (--once) or
 //!                                 one per line, responses to stdout;
@@ -319,11 +324,28 @@ fn main() -> Result<()> {
             );
         }
         "tune" => {
-            let mut req = TuneRequest::new(
-                problem_spec(&args, "128,128,128"),
-                "policy",
-                Budget::unlimited(),
-            );
+            // --strategy picks any service strategy (policy, greedy2,
+            // transfer, evolve, ...); the trained-policy rollout stays the
+            // default. Strategies that search take a real budget
+            // (--budget-evals / --budget), defaulting to an eval count;
+            // the policy rollout is a fixed-depth episode and keeps
+            // running unlimited.
+            let strategy = args
+                .flags
+                .get("strategy")
+                .cloned()
+                .unwrap_or_else(|| "policy".into());
+            let budget = match (
+                args.flags.get("budget-evals").and_then(|s| s.parse().ok()),
+                args.flags.get("budget").and_then(|s| s.parse::<f64>().ok()),
+            ) {
+                (Some(n), Some(s)) => Budget::both(s, n),
+                (Some(n), None) => Budget::evals(n),
+                (None, Some(s)) => Budget::seconds(s),
+                (None, None) if strategy == "policy" => Budget::unlimited(),
+                (None, None) => Budget::evals(if quick { 100 } else { 400 }),
+            };
+            let mut req = TuneRequest::new(problem_spec(&args, "128,128,128"), strategy, budget);
             req.seed = Some(seed);
             req.backend = backend_choice;
             req.untrained = args.flags.contains_key("untrained");
@@ -370,23 +392,46 @@ fn main() -> Result<()> {
             // --suite NAME picks a workload suite from the registry
             // (bmm, conv1d, conv2d, mlp, ...); otherwise --split selects
             // from the paper's matmul dataset.
-            let set_spec = if let Some(name) = args.flags.get("suite") {
-                if args.flags.contains_key("split") {
-                    bail!("--suite and --split are mutually exclusive");
+            // --smoke tunes one tiny shape per registered workload family
+            // (the bench harness's CI shapes) under the suite name
+            // "smoke" — the fixture the CI evolve-vs-greedy2 gate runs on.
+            let (problems, suite) = if args.flags.contains_key("smoke") {
+                if args.flags.contains_key("suite") || args.flags.contains_key("split") {
+                    bail!("--smoke picks its own problem set (one tiny shape per family)");
                 }
-                name.clone()
+                let problems: Vec<_> = workloads::all()
+                    .iter()
+                    .map(|s| workloads::smoke_problem(s.name).expect("registered family"))
+                    .collect();
+                (problems, "smoke".to_string())
             } else {
-                format!(
-                    "dataset:{}",
-                    args.flags.get("split").map(String::as_str).unwrap_or("test")
-                )
+                let set_spec = if let Some(name) = args.flags.get("suite") {
+                    if args.flags.contains_key("split") {
+                        bail!("--suite and --split are mutually exclusive");
+                    }
+                    name.clone()
+                } else {
+                    format!(
+                        "dataset:{}",
+                        args.flags.get("split").map(String::as_str).unwrap_or("test")
+                    )
+                };
+                spec::parse_problems(&set_spec)?
             };
-            let (problems, suite) = spec::parse_problems(&set_spec)?;
             let problems = match args.flags.get("limit").and_then(|s| s.parse().ok()) {
                 Some(l) => problems.into_iter().take(l).collect(),
                 None => problems,
             };
-            let algo = match args.flags.get("algo").map(String::as_str) {
+            // --strategy evolve routes the batch through the population
+            // search (store seeds generation 0, ranker warm-starts the
+            // online refit); any other --strategy name means the same as
+            // --algo NAME.
+            let strategy = args.flags.get("strategy").map(String::as_str);
+            let evolve = strategy == Some("evolve");
+            let algo = match strategy
+                .filter(|s| *s != "evolve")
+                .or_else(|| args.flags.get("algo").map(String::as_str))
+            {
                 Some(name) => SearchAlgo::from_name(name)
                     .ok_or_else(|| anyhow!("unknown search {name}"))?,
                 None => SearchAlgo::Greedy2,
@@ -438,9 +483,12 @@ fn main() -> Result<()> {
             // (the corpus `fit-cost-model` and the transfer strategy feed
             // on); recording never changes tuning results. --ranker:
             // pre-order candidate expansion with the learned cost model.
-            let report =
+            let report = if evolve {
+                batch::run_evolve(&problems, &be, &bcfg, store.as_ref(), ranker.as_ref())
+            } else {
                 batch::run_recorded(&problems, &be, &bcfg, store.as_ref(), ranker.as_ref())
-                    .with_suite(&suite);
+            }
+            .with_suite(&suite);
             println!("{}", report.summary());
             std::fs::create_dir_all(&out_dir)?;
             let file = if suite == "dataset" {
@@ -659,6 +707,15 @@ fn main() -> Result<()> {
                             if quick { 120 } else { 300 },
                         )?
                     }
+                    "search" => {
+                        // Evolve-vs-greedy2 sample efficiency; writes the
+                        // tracked BENCH_search.json (no runtime needed).
+                        experiments::bench_search(
+                            &ecfg,
+                            n.min(12),
+                            if quick { 120 } else { 300 },
+                        )?
+                    }
                     "ablation" => {
                         let rt = Arc::new(Runtime::load_default()?);
                         experiments::ablation(rt, &ecfg, iters)?
@@ -671,7 +728,7 @@ fn main() -> Result<()> {
             if exp == "all" {
                 for e in [
                     "table1", "fig7", "fig8", "fig9", "fig10", "fig11", "headline", "ablation",
-                    "store",
+                    "store", "search",
                 ] {
                     println!("==== {e} ====");
                     run(e)?;
@@ -690,8 +747,10 @@ fn main() -> Result<()> {
                  --mnk M,N,K --algo NAME --iters N --budget SECS --out DIR\n       \
                  --params FILE --config FILE --seed N --quick --cost-model --untrained\n       \
                  --threads N --expand-threads N --budget-evals N --split S --limit N\n       \
+                 --strategy NAME (tune / tune-many: policy|evolve|transfer|greedy2|...;\n       \
+                 evolve = population search scored by the learned ranker)\n       \
                  --suite NAME (tune-many over a workload suite: matmul|mmt|bmm|\n       \
-                 conv1d|conv2d|mlp)\n       \
+                 conv1d|conv2d|mlp); tune-many --smoke (tiny per-family shapes)\n       \
                  --once --file PATH (serve: one JSON request, from a file)\n       \
                  --smoke --json PATH (bench: tiny CI shapes, output path)\n       \
                  --store PATH (persistent tuning store: serve hits, record all,\n       \

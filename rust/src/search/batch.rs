@@ -260,6 +260,18 @@ fn tune_one(
         &opts,
     )
     .expect("search strategies are infallible");
+    record_and_summarize(problem, r, backend, store, seed)
+}
+
+/// Append the result to `store` (when given) and fold it into a
+/// [`ProblemOutcome`] row — shared by the search and evolve batch paths.
+fn record_and_summarize(
+    problem: Problem,
+    r: crate::api::TuneResult,
+    backend: &SharedBackend,
+    store: Option<&crate::store::TuningStore>,
+    seed: u64,
+) -> ProblemOutcome {
     if let Some(store) = store {
         let rec = crate::store::TuneRecord::from_result(problem, &r, backend.name(), seed);
         if let Err(e) = store.append(rec) {
@@ -312,6 +324,60 @@ pub fn run_recorded(
     BatchReport {
         suite: "custom".to_string(),
         algo: cfg.algo.name(),
+        backend: backend.name(),
+        threads,
+        outcomes,
+        wall_secs: t0.elapsed().as_secs_f64(),
+        evals: backend.eval_count() - evals0,
+        cache_hits: backend.hits() - hits0,
+    }
+}
+
+/// Like [`run_recorded`], but tuning every problem with the
+/// population-based [`crate::search::evolve::EvolveStrategy`] instead of
+/// the classical search named by `cfg.algo` (which this path ignores).
+/// The `store` plays both of its evolve roles — generation-0 seeding via
+/// neighbor replays *and* result recording — and `ranker` warm-starts the
+/// online-refit loop. Per-problem seeds derive exactly as in [`run`], so
+/// evolve batches are deterministic and thread-count independent too.
+pub fn run_evolve(
+    problems: &[Problem],
+    backend: &SharedBackend,
+    cfg: &BatchCfg,
+    store: Option<&crate::store::TuningStore>,
+    ranker: Option<&std::sync::Arc<crate::store::cost::CostRanker>>,
+) -> BatchReport {
+    let t0 = Instant::now();
+    let evals0 = backend.eval_count();
+    let hits0 = backend.hits();
+    let threads = cfg.threads.max(1).min(problems.len().max(1));
+
+    let outcomes = crate::util::parallel_indexed_map(problems.len(), threads, |i| {
+        let problem = problems[i];
+        let seed = problem_seed(cfg.seed, problem);
+        let opts =
+            crate::api::TuneOpts { depth: cfg.depth, seed, expand_threads: cfg.expand_threads };
+        let strategy = crate::search::evolve::EvolveStrategy {
+            store: store.cloned(),
+            ranker: ranker.cloned(),
+            ..crate::search::evolve::EvolveStrategy::default()
+        };
+        let r = crate::api::run_strategy(
+            &strategy,
+            backend,
+            problem,
+            1.0,
+            crate::featurize::FeatureMask::default(),
+            cfg.budget,
+            &opts,
+        )
+        .expect("evolve strategy is infallible");
+        record_and_summarize(problem, r, backend, store, seed)
+    });
+
+    BatchReport {
+        suite: "custom".to_string(),
+        algo: "evolve",
         backend: backend.name(),
         threads,
         outcomes,

@@ -1,0 +1,539 @@
+//! Population-based evolutionary search at Ansor scale (ROADMAP item 2):
+//! generate large candidate populations, rank them all with the learned
+//! cost model in one batched pass, and spend scarce backend measurements
+//! only on the predicted best.
+//!
+//! Where greedy/beam ([`super::SearchAlgo`]) pay one backend evaluation
+//! per candidate *considered*, [`EvolveStrategy`] pays one ranker dot
+//! product — so it can consider thousands of schedules per generation and
+//! measure a handful. Each generation:
+//!
+//! 1. **Grow** the population from the surviving elites via
+//!    legality-checked random [`mutate`] chains (uniform over the full
+//!    action space, `Parallelize` included) and [`crossover`] (splicing
+//!    the compute-nest schedule encodings of two parents at a dim
+//!    boundary).
+//! 2. **Score** every candidate with one
+//!    [`CostRanker::predict_batch`] pass over a reused [`FeatureMatrix`].
+//! 3. **Measure** the predicted top-k on the real backend, reserving an
+//!    epsilon-greedy slice of the measurement budget for low-ranked
+//!    candidates so a mis-calibrated ranker cannot starve exploration.
+//! 4. **Refit** the ranker online from every `(features, measured
+//!    GFLOPS)` pair seen so far, so rank accuracy improves within a
+//!    single tuning session.
+//!
+//! The population seeds from the three canonical starting schedules
+//! (untiled, tiled, tiled+parallel) plus replayed high-performers pulled
+//! from the [`TuningStore`] neighbor lookup when a store is attached —
+//! the same transfer move `store/transfer.rs` makes, feeding warm history
+//! into the first generation.
+//!
+//! Everything is deterministic at a fixed seed: mutation and crossover
+//! draw from one [`Pcg32`] stream, candidate ordering ties break on
+//! insertion index, measurements run in selection order, and the
+//! executor's chunked merge is thread-count-invariant — so the full
+//! population trajectory is bit-identical across `LOOPTUNE_EXEC_THREADS`
+//! settings (pinned by `rust/tests/evolve_search.rs`).
+
+use super::{desc_score, Budget, TracePoint};
+use crate::api::{Strategy, TuneOpts, TuneResult};
+use crate::env::actions::Action;
+use crate::env::Env;
+use crate::ir::{Kind, Nest};
+use crate::store::cost::{cost_features, CostRanker, FeatureMatrix};
+use crate::store::TuningStore;
+use crate::util::rng::Pcg32;
+use anyhow::Result;
+use std::collections::HashSet;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Salt mixed into the request seed so the evolve RNG stream is
+/// decorrelated from the dataset split / baseline streams at equal seeds.
+const EVOLVE_SALT: u64 = 0x5eed_e701_ace5_c0de;
+
+/// One random legality-checked mutation of `parent`: a short chain of
+/// 1–3 actions drawn uniformly from the full action space (cursor moves,
+/// swaps, splits, `Parallelize`), each applied only if legal. Returns
+/// `None` when no legal action landed (the parent is saturated), so every
+/// returned offspring differs from its parent by a legal action chain and
+/// satisfies the nest invariants by construction.
+pub fn mutate(parent: &Nest, rng: &mut Pcg32) -> Option<Nest> {
+    let mut n = parent.clone();
+    let steps = 1 + rng.below(3);
+    for _ in 0..steps {
+        // A bounded number of draws per step: saturated nests reject most
+        // actions, and an unbounded retry loop would stall on states with
+        // no legal moves left.
+        for _ in 0..8 {
+            let a = Action::from_index(rng.below(crate::NUM_ACTIONS))
+                .expect("index < NUM_ACTIONS");
+            if a.apply(&mut n).is_ok() {
+                break;
+            }
+        }
+    }
+    // Only a real schedule change counts as an offspring: pure cursor
+    // walks and self-cancelling swap pairs hash identically to the parent
+    // and would dilute the population with duplicates.
+    if crate::backend::schedule_hash(&n) != crate::backend::schedule_hash(parent) {
+        Some(n)
+    } else {
+        None
+    }
+}
+
+/// Splice the compute-nest schedules of two parents: dims below a random
+/// cut keep parent `a`'s loops (root + tiles, in `a`'s interleaved
+/// order), dims at or above it take parent `b`'s; the write-back nest
+/// comes from `a` wholesale. Parallel marks are dropped (the splice could
+/// otherwise inherit two) and re-enter through mutation. Returns `None`
+/// when the spliced child violates the nest invariants.
+pub fn crossover(a: &Nest, b: &Nest, rng: &mut Pcg32) -> Option<Nest> {
+    debug_assert_eq!(a.problem, b.problem);
+    let n_dims = a.problem.n_dims();
+    if n_dims < 2 {
+        return None;
+    }
+    let cut = 1 + rng.below(n_dims - 1); // 1..n_dims: both sides non-empty
+    let mut loops = Vec::with_capacity(a.loops.len().max(b.loops.len()));
+    for l in a.loops.iter().filter(|l| l.kind == Kind::Compute) {
+        if l.dim.index() < cut {
+            loops.push(crate::ir::Loop { parallel: false, ..*l });
+        }
+    }
+    for l in b.loops.iter().filter(|l| l.kind == Kind::Compute) {
+        if l.dim.index() >= cut {
+            loops.push(crate::ir::Loop { parallel: false, ..*l });
+        }
+    }
+    loops.extend(a.loops.iter().filter(|l| l.kind == Kind::WriteBack).copied());
+    if loops.len() > crate::ir::MAX_LOOPS {
+        return None;
+    }
+    let child = Nest { problem: a.problem, loops, cursor: 0 };
+    child.check_invariants().ok()?;
+    Some(child)
+}
+
+/// Population-based evolutionary tuning strategy. Served by name as
+/// `evolve`; a [`TuningStore`] and a pre-fitted [`CostRanker`] are both
+/// optional enrichments (history seeding and a warm-started ranker) — the
+/// strategy bootstraps its own ranker from online measurements otherwise.
+pub struct EvolveStrategy {
+    /// Optional record corpus: neighbor best-schedules seed generation 0.
+    pub store: Option<TuningStore>,
+    /// Optional pre-fitted ranker; online refits replace it as
+    /// measurements accumulate.
+    pub ranker: Option<Arc<CostRanker>>,
+    /// Candidate population size scored (not measured!) per generation.
+    pub population: usize,
+    /// Backend measurements spent per generation.
+    pub measure_per_gen: usize,
+    /// Hard cap on generations (the eval/time budget usually fires first).
+    pub generations: usize,
+    /// Stored neighbor problems consulted for seeding.
+    pub neighbors: usize,
+    /// Fraction of each generation's measurements spent on low-ranked
+    /// candidates (epsilon-greedy exploration).
+    pub epsilon: f64,
+    /// Measured elites surviving into the next generation's parent pool.
+    pub keep: usize,
+}
+
+impl Default for EvolveStrategy {
+    fn default() -> Self {
+        EvolveStrategy {
+            store: None,
+            ranker: None,
+            population: 256,
+            measure_per_gen: 6,
+            generations: 64,
+            neighbors: 8,
+            epsilon: 0.2,
+            keep: 8,
+        }
+    }
+}
+
+impl EvolveStrategy {
+    /// Strategy with default knobs and no store/ranker attached.
+    pub fn new() -> EvolveStrategy {
+        EvolveStrategy::default()
+    }
+
+    /// Default knobs over a tuning store (history-seeded generation 0).
+    pub fn with_store(store: TuningStore) -> EvolveStrategy {
+        EvolveStrategy { store: Some(store), ..EvolveStrategy::default() }
+    }
+
+    /// The three canonical starting schedules: untiled, tiled, and
+    /// tiled+parallel — built by replaying fixed action chains with
+    /// illegal steps skipped, so each is legal for every workload kind
+    /// and shape (a 16-extent smoke problem simply drops the too-large
+    /// splits).
+    fn canonical_seeds(&self, initial: &Nest) -> Vec<Nest> {
+        let tiled_chain = [
+            Action::Split(16),
+            Action::Down,
+            Action::Down,
+            Action::Split(8),
+            Action::Down,
+            Action::Down,
+            Action::Split(4),
+        ];
+        let mut seeds = vec![initial.clone()];
+        let mut tiled = initial.clone();
+        for a in tiled_chain {
+            let _ = a.apply(&mut tiled);
+        }
+        tiled.cursor = 0;
+        seeds.push(tiled);
+        let mut par = initial.clone();
+        let _ = Action::Parallelize.apply(&mut par);
+        for a in [Action::Split(16), Action::Down, Action::Down, Action::Split(8)] {
+            let _ = a.apply(&mut par);
+        }
+        par.cursor = 0;
+        seeds.push(par);
+        seeds
+    }
+}
+
+impl Strategy for EvolveStrategy {
+    fn label(&self) -> String {
+        "evolve".to_string()
+    }
+
+    fn tune(&self, env: &mut Env, budget: Budget, opts: &TuneOpts) -> Result<TuneResult> {
+        let t0 = Instant::now();
+        let problem = env.nest.problem;
+        let backend = env.backend.clone();
+        let mut rng = Pcg32::new(opts.seed ^ EVOLVE_SALT);
+
+        let mut evals = 0u64;
+        let mut hits = 0u64;
+        let exhausted = |evals: u64, t0: &Instant| {
+            budget.max_evals.is_some_and(|m| evals >= m)
+                || budget.time.is_some_and(|t| t0.elapsed() >= t)
+        };
+
+        // Measure the untiled starting point (the speedup denominator).
+        let initial = Nest::initial(problem);
+        let (initial_gflops, miss) = backend.eval_detail(&initial);
+        if miss {
+            evals += 1;
+        } else {
+            hits += 1;
+        }
+        let mut best = (initial.clone(), initial_gflops);
+        let mut trace = vec![TracePoint {
+            elapsed: t0.elapsed().as_secs_f64(),
+            evals,
+            depth: 0,
+            best_gflops: initial_gflops,
+        }];
+
+        // Online training set: every (features, measured GFLOPS) pair,
+        // deduped by schedule hash. The initial measurement is sample 0.
+        let mut train_x: Vec<Vec<f32>> = vec![cost_features(&initial)];
+        let mut train_y: Vec<f64> = vec![initial_gflops];
+        let mut measured: HashSet<u64> = HashSet::new();
+        measured.insert(crate::backend::schedule_hash(&initial));
+
+        // Generation-0 parents: canonical seeds + stored neighbor replays.
+        let mut pop: Vec<Nest> = Vec::new();
+        let mut pop_hashes: HashSet<u64> = HashSet::new();
+        for nest in self.canonical_seeds(&initial) {
+            if pop_hashes.insert(crate::backend::schedule_hash(&nest)) {
+                pop.push(nest);
+            }
+        }
+        let mut store_seeds = 0usize;
+        if let Some(store) = &self.store {
+            for (_, _, rec) in store.nearest(problem, backend.name(), self.neighbors) {
+                if let Ok(nest) = rec.replay(problem) {
+                    if pop_hashes.insert(crate::backend::schedule_hash(&nest)) {
+                        pop.push(nest);
+                        store_seeds += 1;
+                    }
+                }
+            }
+        }
+
+        let mut ranker: Option<Arc<CostRanker>> = self.ranker.clone();
+        let mut feats = FeatureMatrix::new();
+        let mut elites: Vec<(f64, u64, Nest)> = Vec::new(); // (gflops, hash, nest)
+        let (mut gens, mut refits, mut total_measured) = (0usize, 0usize, 0usize);
+
+        for depth in 1..=self.generations.max(1) {
+            if exhausted(evals, &t0) {
+                break;
+            }
+            gens = depth;
+
+            // 1. Grow the generation from the parent pool.
+            let mut gen: Vec<Nest> = pop.clone();
+            let mut gen_hashes = pop_hashes.clone();
+            let mut attempts = 0usize;
+            while gen.len() < self.population && attempts < self.population * 10 {
+                attempts += 1;
+                let child = if gen.len() >= 2 && rng.next_f64() < 0.3 {
+                    let i = rng.below(gen.len());
+                    let j = rng.below(gen.len());
+                    crossover(&gen[i], &gen[j], &mut rng)
+                } else {
+                    let i = rng.below(gen.len());
+                    mutate(&gen[i], &mut rng)
+                };
+                if let Some(nest) = child {
+                    if gen_hashes.insert(crate::backend::schedule_hash(&nest)) {
+                        gen.push(nest);
+                    }
+                }
+            }
+
+            // 2. One batched ranker pass over the whole generation.
+            feats.clear();
+            for nest in &gen {
+                feats.push(nest);
+            }
+            let scores: Vec<f64> = match &ranker {
+                Some(rk) => rk.predict_batch(&feats),
+                // No ranker yet (no checkpoint, < 8 samples): flat scores
+                // keep insertion order, which starts at the seeds.
+                None => vec![0.0; gen.len()],
+            };
+            let mut order: Vec<usize> = (0..gen.len()).collect();
+            order.sort_by(|&i, &j| desc_score(scores[j], scores[i]).then_with(|| i.cmp(&j)));
+
+            // 3. Measure the predicted top-k plus an epsilon slice of the
+            // low-ranked remainder.
+            let eligible: Vec<usize> = order
+                .into_iter()
+                .filter(|&i| !measured.contains(&crate::backend::schedule_hash(&gen[i])))
+                .collect();
+            if eligible.is_empty() {
+                break; // population converged onto already-measured ground
+            }
+            let slots = self.measure_per_gen.max(1).min(eligible.len());
+            let explore = ((slots as f64 * self.epsilon).round() as usize).min(slots - 1);
+            let exploit = slots - explore;
+            let mut picks: Vec<usize> = eligible[..exploit].to_vec();
+            if explore > 0 && eligible.len() > exploit {
+                // Sample (without replacement) from the low-ranked tail.
+                let mut tail: Vec<usize> = eligible[exploit..].to_vec();
+                for _ in 0..explore.min(tail.len()) {
+                    let k = rng.below(tail.len());
+                    picks.push(tail.swap_remove(k));
+                }
+            }
+
+            for &i in &picks {
+                if exhausted(evals, &t0) {
+                    break;
+                }
+                let nest = &gen[i];
+                let (g, miss) = backend.eval_detail(nest);
+                if miss {
+                    evals += 1;
+                } else {
+                    hits += 1;
+                }
+                total_measured += 1;
+                let h = crate::backend::schedule_hash(nest);
+                if measured.insert(h) {
+                    train_x.push(cost_features(nest));
+                    train_y.push(g);
+                }
+                if g.is_finite() {
+                    elites.push((g, h, nest.clone()));
+                }
+                if g > best.1 {
+                    best = (nest.clone(), g);
+                    trace.push(TracePoint {
+                        elapsed: t0.elapsed().as_secs_f64(),
+                        evals,
+                        depth,
+                        best_gflops: g,
+                    });
+                }
+            }
+
+            // 4. Refit the ranker online from everything measured so far.
+            if train_y.len() >= 8 {
+                if let Ok(rk) = CostRanker::fit(&train_x, &train_y, 1.0) {
+                    ranker = Some(Arc::new(rk));
+                    refits += 1;
+                }
+            }
+
+            // Survivor selection: the measured elites parent the next
+            // generation (hash tie-break keeps the order deterministic).
+            elites.sort_by(|a, b| desc_score(b.0, a.0).then_with(|| a.1.cmp(&b.1)));
+            elites.truncate(self.keep.max(1));
+            pop = elites.iter().map(|(_, _, n)| n.clone()).collect();
+            pop_hashes = elites.iter().map(|(_, h, _)| *h).collect();
+            if pop.is_empty() {
+                pop.push(initial.clone());
+                pop_hashes.insert(crate::backend::schedule_hash(&initial));
+            }
+        }
+
+        Ok(TuneResult {
+            strategy: self.label(),
+            best_gflops: best.1,
+            best: best.0,
+            initial_gflops,
+            evals,
+            cache_hits: hits,
+            elapsed: t0.elapsed().as_secs_f64(),
+            trace,
+            actions: Vec::new(),
+            note: Some(format!(
+                "{gens} generation(s) of {}, {total_measured} measured, \
+                 {refits} ranker refit(s), {store_seeds} store seed(s)",
+                self.population
+            )),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::run_strategy;
+    use crate::backend::cost_model::CostModel;
+    use crate::backend::SharedBackend;
+    use crate::featurize::FeatureMask;
+    use crate::ir::Problem;
+
+    fn be() -> SharedBackend {
+        SharedBackend::with_factory(CostModel::default)
+    }
+
+    fn tune(p: Problem, budget: u64, seed: u64) -> TuneResult {
+        run_strategy(
+            &EvolveStrategy::new(),
+            &be(),
+            p,
+            1.0,
+            FeatureMask::default(),
+            Budget::evals(budget),
+            &TuneOpts { depth: 10, seed, expand_threads: 1 },
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn respects_eval_budget_and_improves() {
+        let r = tune(Problem::matmul(128, 128, 128), 40, 7);
+        assert_eq!(r.strategy, "evolve");
+        assert!(r.evals <= 40, "evals {}", r.evals);
+        assert!(r.speedup() > 1.0, "speedup {}", r.speedup());
+        assert!(!r.trace.is_empty());
+        assert!(r.note.unwrap().contains("generation"));
+    }
+
+    #[test]
+    fn deterministic_at_fixed_seed() {
+        let p = Problem::matmul(96, 112, 128);
+        let a = tune(p, 30, 13);
+        let b = tune(p, 30, 13);
+        assert_eq!(a.best.loops, b.best.loops);
+        assert_eq!(a.best_gflops, b.best_gflops);
+        assert_eq!(a.evals, b.evals);
+        assert_eq!(
+            crate::backend::schedule_hash(&a.best),
+            crate::backend::schedule_hash(&b.best)
+        );
+    }
+
+    #[test]
+    fn different_seeds_explore_differently() {
+        let p = Problem::matmul(96, 112, 128);
+        let a = tune(p, 30, 1);
+        let c = tune(p, 30, 2);
+        // Both improve; the trajectories need not match (and almost
+        // surely don't), proving the seed reaches the RNG.
+        assert!(a.speedup() >= 1.0 && c.speedup() >= 1.0);
+    }
+
+    #[test]
+    fn store_seeding_reaches_warm_quality_fast() {
+        use crate::search::SearchAlgo;
+        use crate::store::transfer::nearest_problems;
+        use crate::store::{TuneRecord, TuningStore};
+        let store = TuningStore::in_memory();
+        let target = Problem::matmul(112, 112, 112);
+        let be_shared = be();
+        for p in nearest_problems(&crate::dataset::canonical().train, target, 3) {
+            let r = SearchAlgo::Greedy2.run(p, be_shared.clone(), Budget::evals(200), 10, 7);
+            let result = TuneResult::from_search(r);
+            store.append(TuneRecord::from_result(p, &result, be_shared.name(), 7)).unwrap();
+        }
+        let strategy = EvolveStrategy::with_store(store);
+        let r = run_strategy(
+            &strategy,
+            &be(),
+            target,
+            1.0,
+            FeatureMask::default(),
+            Budget::evals(25),
+            &TuneOpts { depth: 10, seed: 7, expand_threads: 1 },
+        )
+        .unwrap();
+        let cold = SearchAlgo::Greedy2.run(target, be(), Budget::evals(250), 10, 7);
+        assert!(
+            r.best_gflops >= 0.9 * cold.best_gflops,
+            "evolve {} vs cold greedy2 {}",
+            r.best_gflops,
+            cold.best_gflops
+        );
+        assert!(r.evals <= 25);
+        assert!(r.note.unwrap().contains("store seed"));
+    }
+
+    #[test]
+    fn mutation_offspring_are_legal_and_distinct() {
+        let mut rng = Pcg32::new(99);
+        let p = Problem::matmul(128, 96, 160);
+        let mut parent = Nest::initial(p);
+        for step in 0..200 {
+            if let Some(child) = mutate(&parent, &mut rng) {
+                child.check_invariants().unwrap_or_else(|e| panic!("step {step}: {e}"));
+                assert_ne!(
+                    crate::backend::schedule_hash(&child),
+                    crate::backend::schedule_hash(&parent),
+                    "mutate must change the schedule"
+                );
+                parent = child;
+            }
+        }
+    }
+
+    #[test]
+    fn crossover_children_are_legal_or_rejected() {
+        let mut rng = Pcg32::new(5);
+        let p = Problem::conv2d(28, 28, 3, 3);
+        let mut a = Nest::initial(p);
+        let mut b = Nest::initial(p);
+        for _ in 0..12 {
+            if let Some(n) = mutate(&a, &mut rng) {
+                a = n;
+            }
+            if let Some(n) = mutate(&b, &mut rng) {
+                b = n;
+            }
+        }
+        let mut produced = 0;
+        for _ in 0..50 {
+            if let Some(child) = crossover(&a, &b, &mut rng) {
+                child.check_invariants().unwrap();
+                assert!(child.loops.iter().all(|l| !l.parallel));
+                produced += 1;
+            }
+        }
+        assert!(produced > 0, "crossover never produced a child");
+    }
+}

@@ -10,13 +10,14 @@
 
 pub mod batch;
 pub mod beam;
+pub mod evolve;
 pub mod greedy;
 pub mod random;
 
 use crate::backend::SharedBackend;
 use crate::env::actions::Action;
 use crate::ir::{Loop, Nest, Problem};
-use crate::store::cost::CostRanker;
+use crate::store::cost::{CostRanker, FeatureMatrix};
 use std::collections::HashSet;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -128,6 +129,10 @@ pub struct SearchCtx {
     threads: usize,
     visited: HashSet<(Vec<Loop>, usize)>,
     ranker: Option<Arc<CostRanker>>,
+    // Reused per-expansion featurization buffer for ranked pre-ordering:
+    // features are computed once per candidate (not per comparison) and
+    // the allocation survives across expand() calls.
+    feat_scratch: FeatureMatrix,
 }
 
 impl SearchCtx {
@@ -158,6 +163,7 @@ impl SearchCtx {
             threads: threads.max(1),
             visited: HashSet::new(),
             ranker: None,
+            feat_scratch: FeatureMatrix::new(),
         };
         ctx.observe(&nest, g, 0);
         ctx
@@ -243,13 +249,24 @@ impl SearchCtx {
         }
         // Learned pre-ranking: order candidates by predicted GFLOPS so a
         // budget that cannot afford them all scores the best-looking ones
-        // first. Ties break on action index — an explicit key rather than
+        // first. Features go through the reusable scratch matrix — once
+        // per candidate, scored in one `predict_batch` pass (bit-identical
+        // to per-candidate `predict`), then sorted by the cached score.
+        // Ties break on action index — an explicit key rather than
         // stable-sort insertion order, so the ordering is a property of
         // the candidates themselves and cannot drift with how they were
         // produced.
-        if let Some(rk) = &self.ranker {
-            let mut scored: Vec<(f64, Action, Nest)> =
-                cands.into_iter().map(|(a, n)| (rk.predict(&n), a, n)).collect();
+        if let Some(rk) = self.ranker.clone() {
+            self.feat_scratch.clear();
+            for (_, n) in &cands {
+                self.feat_scratch.push(n);
+            }
+            let mut scored: Vec<(f64, Action, Nest)> = rk
+                .predict_batch(&self.feat_scratch)
+                .into_iter()
+                .zip(cands)
+                .map(|(s, (a, n))| (s, a, n))
+                .collect();
             scored.sort_by(|a, b| {
                 desc_score(b.0, a.0).then_with(|| a.1.index().cmp(&b.1.index()))
             });
@@ -617,8 +634,13 @@ mod tests {
                     // splits grow the nest, so predictions favor them.
                     let mut xs = Vec::new();
                     for k in 1..20usize {
-                        let mut x = vec![0.0f32; crate::STATE_DIM];
-                        for chunk in x.chunks_mut(crate::FEATS).take(k) {
+                        let mut x = vec![0.0f32; crate::store::cost::COST_IN];
+                        // Only touch the state-vector region: the trailing
+                        // parallelism features must keep ~zero weight so
+                        // the ranker prefers splits, not Parallelize.
+                        for chunk in
+                            x[..crate::STATE_DIM].chunks_mut(crate::FEATS).take(k)
+                        {
                             chunk[1] = 1.0;
                         }
                         xs.push(x);

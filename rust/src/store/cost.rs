@@ -6,12 +6,15 @@
 //! (the AutoTVM / TPU-learned-cost-model direction), and is used purely
 //! as a **ranker**: [`crate::search::SearchCtx`] pre-orders expansion
 //! candidates by predicted GFLOPS so a truncating eval budget is spent on
-//! the most promising actions first, and the transfer strategy orders
-//! neighbor schedules before paying for real evaluations. Only the
-//! *ordering* of predictions matters, so a small linear model over the
-//! [`crate::featurize::state_vector`] features (trip counts, tails, nest
-//! kind, stride histograms — the same 200 values the RL networks see) is
-//! enough to be useful while staying dependency-free.
+//! the most promising actions first, the transfer strategy orders
+//! neighbor schedules before paying for real evaluations, and the
+//! `evolve` population search scores whole generations in one
+//! [`CostRanker::predict_batch`] pass and measures only the predicted
+//! best. Only the *ordering* of predictions matters, so a small linear
+//! model over [`cost_features`] — the [`crate::featurize::state_vector`]
+//! features (trip counts, tails, nest kind, stride histograms — the same
+//! 200 values the RL networks see) plus two dedicated parallelism
+//! features — is enough to be useful while staying dependency-free.
 //!
 //! Weights are stored through the [`ParamSet`] plumbing (`LTPS` binary,
 //! the same format trained policies use), so `fit-cost-model --save` and
@@ -26,8 +29,84 @@ use crate::STATE_DIM;
 use anyhow::{bail, Context, Result};
 use std::path::Path;
 
-/// Model size: one weight per state feature plus a bias.
-pub const COST_FEATS: usize = STATE_DIM + 1;
+/// Ranker input dimension: the featurizer state vector plus two
+/// dedicated parallelism features (see [`cost_features`]).
+pub const COST_IN: usize = STATE_DIM + 2;
+
+/// Model size: one weight per input feature plus a bias.
+pub const COST_FEATS: usize = COST_IN + 1;
+
+/// Weight count of v1 checkpoints, fitted before the parallelism
+/// features existed. Kept only to recognize old files and emit a
+/// migration error instead of silently mis-indexing the bias.
+const COST_FEATS_V1: usize = STATE_DIM + 1;
+
+/// Ranker input features of a schedule: the shared RL state vector plus
+/// a 0/1 flag for the presence of a parallel mark and `log2(trip + 1)`
+/// of the marked loop (a chunk-count proxy). The state vector encodes
+/// the mark only as a ±1.0 shift of one loop-kind slot, which a ridge
+/// ranker trained mostly on serial schedules weights near zero; the
+/// dedicated features give `Parallelize` an unshared direction so
+/// schedules differing only in the mark can be ordered.
+pub fn cost_features(nest: &Nest) -> Vec<f32> {
+    let mut x = state_vector(nest);
+    x.reserve_exact(2);
+    match nest.loops.iter().position(|l| l.parallel) {
+        Some(idx) => {
+            x.push(1.0);
+            x.push(((nest.trip(idx) + 1) as f32).log2());
+        }
+        None => {
+            x.push(0.0);
+            x.push(0.0);
+        }
+    }
+    x
+}
+
+/// Flat row-major scratch buffer of [`cost_features`] rows, reused
+/// across batched prediction calls (`clear` keeps the allocation) so
+/// per-generation population scoring and per-expansion candidate
+/// ranking don't reallocate per candidate.
+#[derive(Clone, Debug, Default)]
+pub struct FeatureMatrix {
+    data: Vec<f32>,
+    rows: usize,
+}
+
+impl FeatureMatrix {
+    /// Empty matrix; buffers grow on first use.
+    pub fn new() -> FeatureMatrix {
+        FeatureMatrix::default()
+    }
+
+    /// Append one schedule's feature row.
+    pub fn push(&mut self, nest: &Nest) {
+        self.data.extend_from_slice(&cost_features(nest));
+        self.rows += 1;
+    }
+
+    /// Number of rows currently held.
+    pub fn len(&self) -> usize {
+        self.rows
+    }
+
+    /// True when no rows have been pushed since the last [`Self::clear`].
+    pub fn is_empty(&self) -> bool {
+        self.rows == 0
+    }
+
+    /// Drop all rows but keep the allocation.
+    pub fn clear(&mut self) {
+        self.data.clear();
+        self.rows = 0;
+    }
+
+    /// Feature row `i`.
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * COST_IN..(i + 1) * COST_IN]
+    }
+}
 
 /// Linear ranker `predict(nest) = w · state_vector(nest) + b`.
 #[derive(Clone, Debug, PartialEq)]
@@ -68,6 +147,14 @@ impl std::fmt::Display for FitReport {
 impl CostRanker {
     /// Ranker from explicit weights (must be `COST_FEATS` long).
     pub fn from_weights(weights: Vec<f32>) -> Result<CostRanker> {
+        if weights.len() == COST_FEATS_V1 {
+            bail!(
+                "cost ranker checkpoint holds {COST_FEATS_V1} weights — the v1 \
+                 layout without the parallelism features (want {COST_FEATS}); \
+                 refit it from your store with `fit-cost-model --store PATH \
+                 --save RANKER`"
+            );
+        }
         if weights.len() != COST_FEATS {
             bail!("cost ranker wants {COST_FEATS} weights, got {}", weights.len());
         }
@@ -75,17 +162,25 @@ impl CostRanker {
     }
 
     /// Predicted GFLOPS of a schedule. Cheap (one dot product over the
-    /// state vector); only the ordering of predictions is meaningful.
+    /// feature vector); only the ordering of predictions is meaningful.
     pub fn predict(&self, nest: &Nest) -> f64 {
-        self.predict_features(&state_vector(nest))
+        self.predict_features(&cost_features(nest))
+    }
+
+    /// Score every row of a feature matrix. The per-row arithmetic is
+    /// the scalar [`Self::predict`] path verbatim (same accumulation
+    /// order), so batch and scalar predictions agree bit-for-bit — the
+    /// batch form exists to amortize featurization, not to change math.
+    pub fn predict_batch(&self, m: &FeatureMatrix) -> Vec<f64> {
+        (0..m.len()).map(|i| self.predict_features(m.row(i))).collect()
     }
 
     /// The model itself: bias + dot product over a raw feature vector.
-    /// Shared by [`Self::predict`] and the fit diagnostics so both always
-    /// score the same function.
+    /// Shared by [`Self::predict`], [`Self::predict_batch`], and the fit
+    /// diagnostics so all paths score the same function.
     fn predict_features(&self, x: &[f32]) -> f64 {
-        let mut y = self.weights[STATE_DIM] as f64;
-        for (w, v) in self.weights[..STATE_DIM].iter().zip(x) {
+        let mut y = self.weights[COST_IN] as f64;
+        for (w, v) in self.weights[..COST_IN].iter().zip(x) {
             y += *w as f64 * *v as f64;
         }
         y
@@ -100,15 +195,15 @@ impl CostRanker {
         }
         let d = COST_FEATS;
         for x in xs {
-            if x.len() != STATE_DIM {
-                bail!("feature vector has {} entries, want {STATE_DIM}", x.len());
+            if x.len() != COST_IN {
+                bail!("feature vector has {} entries, want {COST_IN}", x.len());
             }
         }
         // Augmented normal matrix [A | b], with a constant 1.0 feature for
-        // the bias at index STATE_DIM.
+        // the bias at index COST_IN.
         let mut a = vec![vec![0.0f64; d + 1]; d];
         let feat = |x: &Vec<f32>, i: usize| -> f64 {
-            if i == STATE_DIM {
+            if i == COST_IN {
                 1.0
             } else {
                 x[i] as f64
@@ -196,7 +291,7 @@ impl CostRanker {
                 match rec.replay(p) {
                     Ok(nest) if rec.gflops.is_finite() => {
                         if seen.insert(crate::backend::schedule_hash(&nest)) {
-                            xs.push(state_vector(&nest));
+                            xs.push(cost_features(&nest));
                             ys.push(rec.gflops);
                         } else {
                             skipped += 1;
@@ -204,7 +299,7 @@ impl CostRanker {
                         if !initial_done && rec.gflops_initial.is_finite() {
                             let init = Nest::initial(p);
                             if seen.insert(crate::backend::schedule_hash(&init)) {
-                                xs.push(state_vector(&init));
+                                xs.push(cost_features(&init));
                                 ys.push(rec.gflops_initial);
                             }
                             initial_done = true;
@@ -288,7 +383,7 @@ mod tests {
         let mut xs = Vec::new();
         let mut ys = Vec::new();
         for i in 0..40 {
-            let mut x = vec![0.0f32; STATE_DIM];
+            let mut x = vec![0.0f32; COST_IN];
             x[2] = (i % 7) as f32;
             x[5] = (i % 5) as f32;
             xs.push(x.clone());
@@ -343,5 +438,54 @@ mod tests {
     fn fit_from_store_rejects_tiny_corpora() {
         let store = crate::store::TuningStore::in_memory();
         assert!(CostRanker::fit_from_store(&store, "cost_model", 1.0).is_err());
+    }
+
+    #[test]
+    fn v1_checkpoint_gives_migration_error() {
+        let dir = std::env::temp_dir().join(format!("lt_cost_v1_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("old.ltps");
+        ParamSet::new(vec![HostTensor::new(
+            vec![COST_FEATS_V1],
+            vec![0.5f32; COST_FEATS_V1],
+        )])
+        .save(&path)
+        .unwrap();
+        let err = CostRanker::load(&path).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("v1"), "{msg}");
+        assert!(msg.contains("fit-cost-model"), "{msg}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn batch_predictions_match_scalar_bit_for_bit() {
+        let r = CostRanker::from_weights(
+            (0..COST_FEATS).map(|i| ((i * 37 + 11) % 97) as f32 * 0.03 - 1.0).collect(),
+        )
+        .unwrap();
+        let mut nests = Vec::new();
+        let p = Problem::matmul(96, 64, 128);
+        let mut n = crate::ir::Nest::initial(p);
+        nests.push(n.clone());
+        n.split(16).unwrap();
+        nests.push(n.clone());
+        n.parallelize().unwrap();
+        nests.push(n.clone());
+        let mut m = FeatureMatrix::new();
+        for nest in &nests {
+            m.push(nest);
+        }
+        let batch = r.predict_batch(&m);
+        assert_eq!(batch.len(), nests.len());
+        for (b, nest) in batch.iter().zip(&nests) {
+            assert_eq!(*b, r.predict(nest), "batch vs scalar must be bit-identical");
+        }
+        // The parallel mark must move the prediction: the last two nests
+        // differ only in the mark, and their dedicated features differ.
+        assert_ne!(cost_features(&nests[1])[STATE_DIM..], cost_features(&nests[2])[STATE_DIM..]);
+        m.clear();
+        assert!(m.is_empty());
+        assert!(r.predict_batch(&m).is_empty());
     }
 }

@@ -268,15 +268,36 @@ impl TuningStore {
         let mut by_kind = BTreeMap::new();
         let mut by_strategy = BTreeMap::new();
         let mut by_backend = BTreeMap::new();
+        let mut by_kind_backend = BTreeMap::new();
+        let mut best_by_problem: BTreeMap<String, ProblemBest> = BTreeMap::new();
         let mut problems = 0u64;
         let mut records = 0u64;
-        for (_, _, recs) in self.snapshot() {
+        for (id, _, recs) in self.snapshot() {
             problems += 1;
             for r in recs {
                 records += 1;
                 *by_kind.entry(r.kind.clone()).or_insert(0u64) += 1;
                 *by_strategy.entry(r.strategy.clone()).or_insert(0u64) += 1;
                 *by_backend.entry(r.backend.clone()).or_insert(0u64) += 1;
+                *by_kind_backend
+                    .entry(format!("{}/{}", r.kind, r.backend))
+                    .or_insert(0u64) += 1;
+                if r.gflops.is_finite() {
+                    let better = best_by_problem
+                        .get(&id)
+                        .map(|b| r.gflops > b.gflops)
+                        .unwrap_or(true);
+                    if better {
+                        best_by_problem.insert(
+                            id.clone(),
+                            ProblemBest {
+                                backend: r.backend.clone(),
+                                strategy: r.strategy.clone(),
+                                gflops: r.gflops,
+                            },
+                        );
+                    }
+                }
             }
         }
         StoreStats {
@@ -286,6 +307,8 @@ impl TuningStore {
             by_kind,
             by_strategy,
             by_backend,
+            by_kind_backend,
+            best_by_problem,
         }
     }
 
@@ -386,6 +409,25 @@ pub struct StoreStats {
     pub by_strategy: BTreeMap<String, u64>,
     /// Record count per scoring backend.
     pub by_backend: BTreeMap<String, u64>,
+    /// Record count per `kind/backend` pair (the family-by-backend
+    /// breakdown of `db stats`).
+    pub by_kind_backend: BTreeMap<String, u64>,
+    /// Best finite-GFLOPS record per problem id. GFLOPS from different
+    /// scoring backends are incommensurate, so each entry carries the
+    /// backend (and strategy) that produced it.
+    pub best_by_problem: BTreeMap<String, ProblemBest>,
+}
+
+/// The best recorded result for one problem (see
+/// [`StoreStats::best_by_problem`]).
+#[derive(Clone, Debug)]
+pub struct ProblemBest {
+    /// Scoring backend of the best record.
+    pub backend: String,
+    /// Strategy that produced the best record.
+    pub strategy: String,
+    /// Best finite GFLOPS recorded for the problem.
+    pub gflops: f64,
 }
 
 impl StoreStats {
@@ -394,16 +436,33 @@ impl StoreStats {
         let fmt = |m: &BTreeMap<String, u64>| {
             m.iter().map(|(k, v)| format!("{k}={v}")).collect::<Vec<_>>().join(" ")
         };
-        format!(
+        let mut out = format!(
             "tuning store: {} records over {} problems ({} corrupt lines skipped)\n  \
-             by kind:     {}\n  by strategy: {}\n  by backend:  {}",
+             by kind:     {}\n  by strategy: {}\n  by backend:  {}\n  \
+             by kind/backend: {}",
             self.records,
             self.problems,
             self.corrupt_lines,
             fmt(&self.by_kind),
             fmt(&self.by_strategy),
             fmt(&self.by_backend),
-        )
+            fmt(&self.by_kind_backend),
+        );
+        // Best-GFLOPS-per-problem leaderboard: the top entries by score
+        // (backends are incommensurate, so each line names its backend).
+        let mut best: Vec<(&String, &ProblemBest)> = self.best_by_problem.iter().collect();
+        best.sort_by(|a, b| b.1.gflops.total_cmp(&a.1.gflops).then_with(|| a.0.cmp(b.0)));
+        const SHOW: usize = 8;
+        for (id, b) in best.iter().take(SHOW) {
+            out.push_str(&format!(
+                "\n  best {id}: {:.2} GFLOPS ({} on {})",
+                b.gflops, b.strategy, b.backend
+            ));
+        }
+        if best.len() > SHOW {
+            out.push_str(&format!("\n  ... ({} more problems)", best.len() - SHOW));
+        }
+        out
     }
 
     /// JSON form (machine-readable `db stats`).
@@ -419,6 +478,20 @@ impl StoreStats {
         root.insert("by_kind".into(), counts(&self.by_kind));
         root.insert("by_strategy".into(), counts(&self.by_strategy));
         root.insert("by_backend".into(), counts(&self.by_backend));
+        root.insert("by_kind_backend".into(), counts(&self.by_kind_backend));
+        let best = Json::Obj(
+            self.best_by_problem
+                .iter()
+                .map(|(id, b)| {
+                    let mut row = BTreeMap::new();
+                    row.insert("backend".to_string(), Json::Str(b.backend.clone()));
+                    row.insert("strategy".to_string(), Json::Str(b.strategy.clone()));
+                    row.insert("gflops".to_string(), Json::Num(b.gflops));
+                    (id.clone(), Json::Obj(row))
+                })
+                .collect(),
+        );
+        root.insert("best_by_problem".into(), best);
         let mut out = String::new();
         write_json(&Json::Obj(root), &mut out);
         out
@@ -511,8 +584,21 @@ mod tests {
         assert_eq!(stats.by_kind["mm"], 2);
         assert_eq!(stats.by_kind["conv2d"], 1);
         assert_eq!(stats.by_strategy["greedy2"], 2);
-        assert!(stats.summary().contains("3 records"));
-        crate::util::json::parse(&stats.to_json()).unwrap();
+        assert_eq!(stats.by_kind_backend["mm/cost_model"], 2);
+        assert_eq!(stats.by_kind_backend["conv2d/cost_model"], 1);
+        let best = &stats.best_by_problem[&Problem::matmul(64, 64, 64).id()];
+        assert_eq!(best.gflops, 5.0);
+        assert_eq!(best.strategy, "random");
+        assert_eq!(best.backend, "cost_model");
+        assert_eq!(stats.best_by_problem.len(), 2);
+        let summary = stats.summary();
+        assert!(summary.contains("3 records"));
+        assert!(summary.contains("by kind/backend"));
+        assert!(summary.contains("random on cost_model"));
+        let json = crate::util::json::parse(&stats.to_json()).unwrap();
+        let Json::Obj(root) = &json else { panic!("stats JSON is an object") };
+        assert!(root.contains_key("by_kind_backend"));
+        assert!(root.contains_key("best_by_problem"));
         let export = store.export_jsonl();
         assert_eq!(export.lines().count(), 3);
         for line in export.lines() {

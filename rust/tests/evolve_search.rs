@@ -1,0 +1,183 @@
+//! Evolve-search property tests: every mutation/crossover offspring is a
+//! legal schedule that round-trips through the tuning-store record
+//! encoding bit-exactly (`replay_exact` semantics) and executes correctly
+//! against the naive access-map reference; and the full population
+//! trajectory at a fixed seed is bit-identical whether the execution
+//! engine runs on 1 worker thread or 4 (the property
+//! `LOOPTUNE_EXEC_THREADS` controls in production — pinned here by
+//! passing the thread count explicitly, the same chunk-ordered merge).
+
+use looptune::api::{run_strategy, TuneOpts, TuneResult};
+use looptune::backend::cost_model::CostModel;
+use looptune::backend::executor::{plan, reference, run_once_threaded, Workspace};
+use looptune::backend::schedule::lower;
+use looptune::backend::{schedule_hash, Backend, SharedBackend};
+use looptune::featurize::FeatureMask;
+use looptune::ir::{Nest, Problem};
+use looptune::search::evolve::{crossover, mutate, EvolveStrategy};
+use looptune::search::Budget;
+use looptune::store::TuneRecord;
+use looptune::util::rng::Pcg32;
+
+/// Grow an offspring population exactly the way the evolve generation
+/// loop does: legality-checked mutation chains with occasional crossover,
+/// starting from the untiled nest.
+fn offspring_population(p: Problem, seed: u64, n: usize) -> Vec<Nest> {
+    let mut rng = Pcg32::new(seed);
+    let mut pop = vec![Nest::initial(p)];
+    let mut attempts = 0;
+    while pop.len() < n && attempts < n * 20 {
+        attempts += 1;
+        let child = if pop.len() >= 2 && rng.next_f64() < 0.3 {
+            let i = rng.below(pop.len());
+            let j = rng.below(pop.len());
+            crossover(&pop[i], &pop[j], &mut rng)
+        } else {
+            let i = rng.below(pop.len());
+            mutate(&pop[i], &mut rng)
+        };
+        if let Some(c) = child {
+            pop.push(c);
+        }
+    }
+    assert!(pop.len() > n / 2, "{p}: offspring generation stalled at {}", pop.len());
+    pop
+}
+
+/// Wrap an offspring nest in a [`TuneResult`] so it can pass through the
+/// store's record encoding (the shape `TuneRecord::from_result` expects).
+fn result_for(nest: Nest) -> TuneResult {
+    TuneResult {
+        strategy: "evolve".to_string(),
+        best_gflops: 1.0,
+        best: nest,
+        initial_gflops: 1.0,
+        evals: 1,
+        cache_hits: 0,
+        elapsed: 0.0,
+        trace: Vec::new(),
+        actions: Vec::new(),
+        note: None,
+    }
+}
+
+/// Every offspring a mutation/crossover chain can produce (a) satisfies
+/// the nest invariants, (b) survives the store's encode -> decode -> hash
+/// round trip bit-exactly (`replay_exact`), and (c) executes within 1e-3
+/// of the naive reference — including offspring carrying a `Parallelize`
+/// mark, run on a multi-worker pool.
+#[test]
+fn offspring_replay_exact_and_execute_correctly() {
+    let problems = [
+        Problem::matmul(48, 32, 40),
+        Problem::matmul_transposed(24, 20, 28),
+        Problem::batched_matmul(2, 12, 10, 14),
+        Problem::conv2d(16, 14, 3, 3),
+        Problem::mlp(12, 16, 16),
+    ];
+    let mut parallel_seen = 0usize;
+    for (pi, &p) in problems.iter().enumerate() {
+        for nest in offspring_population(p, 1000 + pi as u64, 40) {
+            nest.check_invariants().unwrap_or_else(|e| panic!("{p}: {e}"));
+
+            // replay_exact semantics: the record's loop encoding decodes
+            // back to a nest hashing bit-exactly to the recorded hash.
+            let rec = TuneRecord::from_result(p, &result_for(nest.clone()), "cost_model", 7);
+            let replayed = rec.replay_exact().unwrap_or_else(|e| panic!("{p}: {e:#}"));
+            assert_eq!(schedule_hash(&replayed), schedule_hash(&nest), "{p}");
+
+            // Executor-vs-reference agreement on the offspring schedule.
+            let pl = plan(lower(&nest));
+            let mut ws = Workspace::new(p, 17);
+            run_once_threaded(&pl, &mut ws, 2);
+            let want = reference(&ws);
+            let diff = ws
+                .c
+                .iter()
+                .zip(&want)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            assert!(diff < 1e-3, "{p} [{}]: max diff {diff}", pl.dispatch());
+
+            if nest.loops.iter().any(|l| l.parallel) {
+                parallel_seen += 1;
+            }
+        }
+    }
+    // The action space genuinely includes Parallelize: some offspring
+    // must carry the mark, or the sweep above proved nothing about the
+    // parallel execution path.
+    assert!(parallel_seen > 0, "no offspring ever parallelized");
+}
+
+/// Executor-backed scoring whose value depends deterministically on the
+/// *bits* the execution engine produces (no wall-clock) — the idiom of
+/// `tests/parallel_consistency.rs`. If the engine's result varied with
+/// its worker-thread count, evolve's measurements — and with them the
+/// online ranker refits, survivor selection, and the whole population
+/// trajectory — would diverge between thread counts.
+struct BitScore {
+    cm: CostModel,
+    threads: usize,
+    evals: u64,
+}
+
+impl Backend for BitScore {
+    fn eval(&mut self, nest: &Nest) -> f64 {
+        self.evals += 1;
+        let pl = plan(lower(nest));
+        let mut ws = Workspace::new(nest.problem, 0xc0de);
+        run_once_threaded(&pl, &mut ws, self.threads);
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        for v in &ws.c {
+            h = (h ^ v.to_bits() as u64).wrapping_mul(0x100_0000_01b3);
+        }
+        self.cm.eval(nest) * (1.0 + (h % 1024) as f64 * 1e-12)
+    }
+    fn name(&self) -> &'static str {
+        "bit_score"
+    }
+    fn eval_count(&self) -> u64 {
+        self.evals
+    }
+}
+
+/// The full evolve population trajectory at a fixed seed is bit-identical
+/// across executor worker-pool sizes: same best schedule hash, same eval
+/// accounting, same improvement trace, same generation count.
+#[test]
+fn population_trajectory_invariant_to_executor_threads() {
+    let p = Problem::matmul(32, 24, 40);
+    let run_at = |exec_threads: usize| {
+        let be = SharedBackend::with_factory(move || BitScore {
+            cm: CostModel::default(),
+            threads: exec_threads,
+            evals: 0,
+        });
+        run_strategy(
+            &EvolveStrategy::new(),
+            &be,
+            p,
+            1.0,
+            FeatureMask::default(),
+            Budget::evals(25),
+            &TuneOpts { depth: 10, seed: 42, expand_threads: 1 },
+        )
+        .unwrap()
+    };
+    let one = run_at(1);
+    let four = run_at(4);
+
+    assert_eq!(schedule_hash(&one.best), schedule_hash(&four.best));
+    assert_eq!(one.best.loops, four.best.loops);
+    assert_eq!(one.best_gflops, four.best_gflops);
+    assert_eq!(one.evals, four.evals);
+    assert_eq!(one.cache_hits, four.cache_hits);
+    assert_eq!(one.note, four.note);
+    assert_eq!(one.trace.len(), four.trace.len());
+    for (a, b) in one.trace.iter().zip(&four.trace) {
+        assert_eq!(a.evals, b.evals);
+        assert_eq!(a.best_gflops, b.best_gflops);
+        assert_eq!(a.depth, b.depth);
+    }
+}
