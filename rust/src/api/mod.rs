@@ -19,10 +19,12 @@
 //! [`ParamSet`]: crate::rl::params::ParamSet
 
 pub mod request;
+pub mod server;
 pub mod service;
 pub mod spec;
 
 pub use request::{BackendChoice, TuneRequest, TuneResponse};
+pub use server::{Server, ServerCfg};
 pub use service::{ServiceCfg, TuningService};
 
 pub use crate::baselines::BaselineKind;
@@ -322,6 +324,12 @@ pub enum StrategyKind {
     /// ([`crate::search::evolve::EvolveStrategy`]; store and ranker are
     /// optional enrichments).
     Evolve,
+    /// Fault-injection probe: a strategy that always panics mid-tune
+    /// ([`PanicProbe`]). It exists so the concurrent server's
+    /// `catch_unwind` isolation is exercised end to end by `loadgen
+    /// --poison`, the CI load smoke, and tests — never useful for real
+    /// tuning.
+    PanicTest,
 }
 
 impl StrategyKind {
@@ -338,6 +346,9 @@ impl StrategyKind {
         if s == "evolve" {
             return Some(StrategyKind::Evolve);
         }
+        if s == "panic_test" {
+            return Some(StrategyKind::PanicTest);
+        }
         if let Some(a) = SearchAlgo::from_name(s) {
             return Some(StrategyKind::Search(a));
         }
@@ -352,6 +363,7 @@ impl StrategyKind {
             StrategyKind::Baseline(b) => b.name(),
             StrategyKind::Transfer => "transfer",
             StrategyKind::Evolve => "evolve",
+            StrategyKind::PanicTest => "panic_test",
         }
     }
 
@@ -367,7 +379,9 @@ impl StrategyKind {
         )
     }
 
-    /// Every servable strategy name (help text, tests).
+    /// Every servable strategy name (help text, tests). The `panic_test`
+    /// fault-injection probe is deliberately excluded: it is reachable by
+    /// name but not advertised as a tuning strategy.
     pub fn all_names() -> Vec<&'static str> {
         let mut v = vec!["policy"];
         v.extend(SearchAlgo::ALL.iter().map(|a| a.name()));
@@ -375,6 +389,24 @@ impl StrategyKind {
         v.push("transfer");
         v.push("evolve");
         v
+    }
+}
+
+/// The `panic_test` strategy: panics as soon as it is asked to tune.
+/// This is the serving layer's fault-injection probe — a request naming
+/// it reaches a worker thread like any other and then blows up there, so
+/// tests and `loadgen --poison` can assert the server's `catch_unwind`
+/// isolation turns the panic into an error response instead of a dead
+/// worker.
+pub struct PanicProbe;
+
+impl Strategy for PanicProbe {
+    fn label(&self) -> String {
+        "panic_test".to_string()
+    }
+
+    fn tune(&self, env: &mut Env, _budget: Budget, _opts: &TuneOpts) -> Result<TuneResult> {
+        panic!("panic_test strategy: injected fault for {}", env.nest.problem.id());
     }
 }
 

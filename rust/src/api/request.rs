@@ -296,8 +296,20 @@ pub struct TuneResponse {
     pub note: Option<String>,
     /// Result provenance: `Some("store")` when the response was served
     /// from the persistent tuning store without running a strategy
-    /// (DESIGN.md §10); `None` for a freshly tuned result.
+    /// (DESIGN.md §10), `Some("coalesced")` when the concurrent server
+    /// deduplicated this request onto an identical in-flight one and
+    /// replayed the leader's result (DESIGN.md §13); `None` for a freshly
+    /// tuned result.
     pub cache: Option<String>,
+    /// Request id the concurrent server tags responses with so callers
+    /// can match unordered responses back to submissions; `None` for the
+    /// direct (`serve --once` / in-process) path.
+    pub id: Option<u64>,
+    /// `Some(reason)` when the server degraded this request (served a
+    /// cheap store/transfer answer instead of the requested full search)
+    /// under load or a short deadline; encoded on the wire as
+    /// `"degraded": true` plus `"degraded_reason"`.
+    pub degraded: Option<String>,
 }
 
 impl TuneResponse {
@@ -344,6 +356,13 @@ impl TuneResponse {
         if let Some(c) = &self.cache {
             root.insert("cache".into(), Json::Str(c.clone()));
         }
+        if let Some(id) = self.id {
+            root.insert("id".into(), Json::Num(id as f64));
+        }
+        if let Some(r) = &self.degraded {
+            root.insert("degraded".into(), Json::Bool(true));
+            root.insert("degraded_reason".into(), Json::Str(r.clone()));
+        }
         let mut out = String::new();
         write_json(&Json::Obj(root), &mut out);
         out
@@ -353,9 +372,25 @@ impl TuneResponse {
     /// so the whole `tune_response/v1` schema lives in this module:
     /// `{"schema":"tune_response/v1","error":...}`.
     pub fn error_json(e: &anyhow::Error) -> String {
+        Self::error_json_tagged(&format!("{e:#}"), None, None)
+    }
+
+    /// Tagged error document: the concurrent server attaches the request
+    /// id and (for malformed/panicking requests) an echo of the offending
+    /// input so callers can match failures back to submissions.
+    pub fn error_json_tagged(msg: &str, id: Option<u64>, request: Option<&str>) -> String {
         let mut obj = BTreeMap::new();
         obj.insert("schema".to_string(), Json::Str("tune_response/v1".into()));
-        obj.insert("error".to_string(), Json::Str(format!("{e:#}")));
+        obj.insert("error".to_string(), Json::Str(msg.to_string()));
+        if let Some(id) = id {
+            obj.insert("id".to_string(), Json::Num(id as f64));
+        }
+        if let Some(req) = request {
+            // Echo at most 256 chars: enough to identify the request,
+            // bounded so an oversized line cannot reflect itself back.
+            let echo: String = req.chars().take(256).collect();
+            obj.insert("request".to_string(), Json::Str(echo));
+        }
         let mut out = String::new();
         write_json(&Json::Obj(obj), &mut out);
         out
@@ -434,11 +469,25 @@ impl TuneResponse {
             actions,
             note: doc.get("note").and_then(Json::as_str).map(String::from),
             cache: doc.get("cache").and_then(Json::as_str).map(String::from),
+            id: doc.get("id").and_then(json_u64),
+            degraded: match doc.get("degraded").and_then(Json::as_bool) {
+                Some(true) => Some(
+                    doc.get("degraded_reason")
+                        .and_then(Json::as_str)
+                        .unwrap_or("unspecified")
+                        .to_string(),
+                ),
+                _ => None,
+            },
         })
     }
 }
 
-/// Budget as JSON: `{"secs": S}` and/or `{"evals": N}`, empty = unlimited.
+/// Budget as JSON: `{"secs": S}`, `{"evals": N}` and/or
+/// `{"deadline_ms": D}`; empty = unlimited. `deadline_ms` is *relative*
+/// on the wire (milliseconds the caller is willing to wait end-to-end)
+/// and anchored to an absolute `Instant` at decode time, so a re-encoded
+/// budget reports the milliseconds still remaining.
 fn budget_to_json(b: &Budget) -> Json {
     let mut obj = BTreeMap::new();
     if let Some(t) = b.time {
@@ -447,14 +496,18 @@ fn budget_to_json(b: &Budget) -> Json {
     if let Some(n) = b.max_evals {
         obj.insert("evals".into(), Json::Num(n as f64));
     }
+    if let Some(d) = b.deadline {
+        let left = d.saturating_duration_since(std::time::Instant::now());
+        obj.insert("deadline_ms".into(), Json::Num(left.as_secs_f64() * 1e3));
+    }
     Json::Obj(obj)
 }
 
 fn budget_from_json(v: &Json) -> Result<Budget> {
     let obj = v.as_obj().ok_or_else(|| anyhow!("budget must be an object"))?;
     for k in obj.keys() {
-        if k != "secs" && k != "evals" {
-            bail!("unknown budget field {k:?} (secs|evals)");
+        if k != "secs" && k != "evals" && k != "deadline_ms" {
+            bail!("unknown budget field {k:?} (secs|evals|deadline_ms)");
         }
     }
     let secs = match obj.get("secs") {
@@ -477,12 +530,23 @@ fn budget_from_json(v: &Json) -> Result<Budget> {
             Some(n as u64)
         }
     };
-    Ok(match (secs, evals) {
+    let mut budget = match (secs, evals) {
         (Some(s), Some(n)) => Budget::both(s, n),
         (Some(s), None) => Budget::seconds(s),
         (None, Some(n)) => Budget::evals(n),
         (None, None) => Budget::unlimited(),
-    })
+    };
+    if let Some(d) = obj.get("deadline_ms") {
+        if !matches!(d, Json::Null) {
+            let ms = d.as_f64().ok_or_else(|| anyhow!("budget.deadline_ms must be a number"))?;
+            if ms <= 0.0 || !ms.is_finite() {
+                bail!("budget.deadline_ms must be a positive finite number");
+            }
+            let at = std::time::Instant::now() + std::time::Duration::from_secs_f64(ms / 1e3);
+            budget = budget.with_deadline(at);
+        }
+    }
+    Ok(budget)
 }
 
 /// u64 from either a JSON number (≤ 2^53) or a decimal string (the full
@@ -581,6 +645,59 @@ mod tests {
         req.features_off = vec!["hist".into()];
         let (_, _, mask) = req.validate().unwrap();
         assert!(!mask.hist && mask.cursor);
+    }
+
+    #[test]
+    fn budget_deadline_ms_round_trips_and_validates() {
+        let req = TuneRequest::from_json(
+            r#"{"problem": "64x64x64", "strategy": "greedy2",
+                "budget": {"deadline_ms": 250}}"#,
+        )
+        .unwrap();
+        let d = req.budget.deadline.expect("deadline set");
+        let left = d.saturating_duration_since(std::time::Instant::now());
+        assert!(left.as_millis() <= 250, "{left:?}");
+        assert!(!req.budget.is_unlimited());
+        // A deadline alone satisfies the needs-budget check.
+        req.validate().unwrap();
+        // Re-encoding reports the remaining milliseconds.
+        let back = TuneRequest::from_json(&req.to_json()).unwrap();
+        assert!(back.budget.deadline.is_some());
+        // Non-positive and non-numeric deadlines are rejected.
+        for bad in [r#"{"deadline_ms": 0}"#, r#"{"deadline_ms": "soon"}"#] {
+            let doc = format!(
+                r#"{{"problem": "64x64x64", "strategy": "greedy2", "budget": {bad}}}"#
+            );
+            assert!(TuneRequest::from_json(&doc).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn response_id_and_degraded_round_trip() {
+        let text = r#"{"problem": "conv2d:16x16x3x3", "strategy": "greedy2",
+            "budget": {"evals": 40}, "seed": 1}"#;
+        let req = TuneRequest::from_json(text).unwrap();
+        let svc = crate::api::TuningService::new(crate::api::ServiceCfg::default());
+        let mut resp = svc.serve(&req).unwrap();
+        assert_eq!(resp.id, None);
+        assert_eq!(resp.degraded, None);
+        resp.id = Some(17);
+        resp.degraded = Some("queue depth 9 >= 4".into());
+        let back = TuneResponse::from_json(&resp.to_json()).unwrap();
+        assert_eq!(back.id, Some(17));
+        assert_eq!(back.degraded.as_deref(), Some("queue depth 9 >= 4"));
+        assert_eq!(back, resp);
+    }
+
+    #[test]
+    fn tagged_error_json_carries_id_and_bounded_echo() {
+        let long_req = "x".repeat(10_000);
+        let doc = TuneResponse::error_json_tagged("boom", Some(5), Some(&long_req));
+        let parsed = parse(&doc).unwrap();
+        assert_eq!(parsed.get("error").and_then(Json::as_str), Some("boom"));
+        assert_eq!(parsed.get("id").and_then(Json::as_f64), Some(5.0));
+        let echo = parsed.get("request").and_then(Json::as_str).unwrap();
+        assert_eq!(echo.len(), 256);
     }
 
     #[test]

@@ -1,0 +1,853 @@
+//! The concurrent serving front end (DESIGN.md §13).
+//!
+//! [`Server`] puts a robust multi-threaded loop in front of
+//! [`TuningService`]: the submitting thread parses and enqueues, a
+//! bounded worker pool tunes, and responses are emitted over a channel
+//! tagged with their request id (callers reorder with [`pump`] when they
+//! need submission order). Three robustness mechanisms are the point:
+//!
+//! - **Single-flight coalescing** — identical requests (same problem id,
+//!   backend, strategy, seed, depth, budget) share one tune: the first
+//!   becomes the *leader*, later arrivals attach as followers and receive
+//!   the leader's response with `cache:"coalesced"` provenance and zero
+//!   evals of their own.
+//! - **Admission control and graceful degradation** — the queue is
+//!   bounded (overflow requests are shed with a structured error, never
+//!   buffered without bound), request eval budgets can be clamped, and
+//!   when the queue is deep or a request's deadline is short the server
+//!   degrades the request to the cheap store/transfer path (zero or few
+//!   evals), tagging the response `degraded:true` with the reason.
+//! - **Fault isolation** — each tune runs under `catch_unwind`, so a
+//!   panicking strategy produces an error response carrying the request
+//!   echo while the worker survives; malformed and oversized input lines
+//!   are rejected with structured errors and the loop keeps draining.
+//!
+//! A line `{"type":"metrics"}` is answered inline with a
+//! `serve_metrics/v1` snapshot (throughput, latency percentiles, queue
+//! depth, coalescing/degradation/fault counters). [`loadgen`] replays a
+//! synthetic request mix against an in-process server at a target rate —
+//! the CI load smoke and `eval serve` are built on it.
+
+use super::request::{TuneRequest, TuneResponse};
+use super::{StrategyKind, TuningService};
+use crate::util::json::{parse, write_json, Json};
+use crate::util::lines::{BoundedLines, Line};
+use crate::util::stats::percentile;
+use anyhow::Result;
+use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::io::{BufRead, Write};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// Server construction knobs.
+#[derive(Clone, Debug)]
+pub struct ServerCfg {
+    /// Worker threads tuning dequeued requests.
+    pub workers: usize,
+    /// Max requests waiting in the queue; arrivals beyond this are shed
+    /// with a structured error (admission control).
+    pub queue_depth: usize,
+    /// Queue length at or above which new search requests degrade to the
+    /// cheap store/transfer path instead of queueing a full tune.
+    pub degrade_at: usize,
+    /// Requests whose deadline has fewer than this many milliseconds left
+    /// at admission degrade immediately (a full search could not finish).
+    pub degrade_deadline_ms: u64,
+    /// Eval cap applied to degraded requests.
+    pub degraded_evals: u64,
+    /// Server-wide eval clamp: request budgets above this (or absent) are
+    /// clamped down to it. `None` trusts request budgets.
+    pub max_evals: Option<u64>,
+    /// Max bytes of one input line ([`Server::serve_reader`]); longer
+    /// lines are drained and rejected.
+    pub max_line_bytes: usize,
+    /// Whether identical in-flight requests coalesce onto one tune.
+    pub coalesce: bool,
+    /// Whether overload/deadline degradation is enabled.
+    pub degrade: bool,
+    /// Start with the worker pool paused (tests and benches submit a
+    /// deterministic burst, then [`Server::resume`]).
+    pub start_paused: bool,
+}
+
+impl Default for ServerCfg {
+    fn default() -> Self {
+        ServerCfg {
+            workers: crate::util::default_threads(),
+            queue_depth: 64,
+            degrade_at: 32,
+            degrade_deadline_ms: 50,
+            degraded_evals: 8,
+            max_evals: None,
+            max_line_bytes: 1 << 20,
+            coalesce: true,
+            degrade: true,
+            start_paused: false,
+        }
+    }
+}
+
+/// One emitted output line, tagged with the request id it answers.
+#[derive(Debug)]
+pub struct OutLine {
+    /// Id assigned at submission (dense from 0, in submission order).
+    pub id: u64,
+    /// The JSON document (a `tune_response/v1` or `serve_metrics/v1`).
+    pub line: String,
+}
+
+/// Point-in-time serving counters (the `metrics` request answers with
+/// exactly this, as `serve_metrics/v1`).
+#[derive(Clone, Debug, Default)]
+pub struct MetricsSnapshot {
+    /// Seconds since the server started.
+    pub uptime_secs: f64,
+    /// Input lines/requests submitted (including malformed and metrics).
+    pub received: u64,
+    /// Successful tune responses emitted (leaders + followers).
+    pub served: u64,
+    /// Error responses emitted (all causes).
+    pub errors: u64,
+    /// Tunes that panicked (caught; worker survived).
+    pub panics: u64,
+    /// Requests shed because the queue was full.
+    pub shed: u64,
+    /// Responses served degraded (store/transfer fallback under load).
+    pub degraded: u64,
+    /// Followers that coalesced onto an identical in-flight tune.
+    pub coalesced: u64,
+    /// Responses answered from the persistent store.
+    pub store_hits: u64,
+    /// Lines that failed JSON parsing / request decoding.
+    pub malformed: u64,
+    /// Lines rejected for exceeding the byte bound.
+    pub oversized: u64,
+    /// Requests whose eval budget was clamped at admission.
+    pub clamped: u64,
+    /// Backend evaluations consumed by tunes the server ran.
+    pub evals_total: u64,
+    /// Evaluations followers would have spent without coalescing.
+    pub evals_saved: u64,
+    /// Requests waiting in the queue right now.
+    pub queue_depth: usize,
+    /// Configured worker count.
+    pub workers: usize,
+    /// served / uptime.
+    pub qps: f64,
+    /// Median end-to-end latency (submit → response), milliseconds.
+    pub p50_ms: f64,
+    /// 99th-percentile end-to-end latency, milliseconds.
+    pub p99_ms: f64,
+}
+
+impl MetricsSnapshot {
+    /// Encode as a `serve_metrics/v1` document, tagged with the id of the
+    /// metrics request it answers when served in-band.
+    pub fn to_json(&self, id: Option<u64>) -> String {
+        let mut o = BTreeMap::new();
+        o.insert("schema".to_string(), Json::Str("serve_metrics/v1".into()));
+        if let Some(id) = id {
+            o.insert("id".to_string(), Json::Num(id as f64));
+        }
+        o.insert("uptime_secs".to_string(), Json::Num(self.uptime_secs));
+        o.insert("received".to_string(), Json::Num(self.received as f64));
+        o.insert("served".to_string(), Json::Num(self.served as f64));
+        o.insert("errors".to_string(), Json::Num(self.errors as f64));
+        o.insert("panics".to_string(), Json::Num(self.panics as f64));
+        o.insert("shed".to_string(), Json::Num(self.shed as f64));
+        o.insert("degraded".to_string(), Json::Num(self.degraded as f64));
+        o.insert("coalesced".to_string(), Json::Num(self.coalesced as f64));
+        o.insert("store_hits".to_string(), Json::Num(self.store_hits as f64));
+        o.insert("malformed".to_string(), Json::Num(self.malformed as f64));
+        o.insert("oversized".to_string(), Json::Num(self.oversized as f64));
+        o.insert("clamped".to_string(), Json::Num(self.clamped as f64));
+        o.insert("evals_total".to_string(), Json::Num(self.evals_total as f64));
+        o.insert("evals_saved".to_string(), Json::Num(self.evals_saved as f64));
+        o.insert("queue_depth".to_string(), Json::Num(self.queue_depth as f64));
+        o.insert("workers".to_string(), Json::Num(self.workers as f64));
+        o.insert("qps".to_string(), Json::Num(self.qps));
+        o.insert("p50_ms".to_string(), Json::Num(self.p50_ms));
+        o.insert("p99_ms".to_string(), Json::Num(self.p99_ms));
+        let mut out = String::new();
+        write_json(&Json::Obj(o), &mut out);
+        out
+    }
+}
+
+/// Cap on retained latency samples (a ring: old samples age out so the
+/// percentiles track recent behavior at bounded memory).
+const LATENCY_RING: usize = 4096;
+
+#[derive(Default)]
+struct Metrics {
+    received: AtomicU64,
+    served: AtomicU64,
+    errors: AtomicU64,
+    panics: AtomicU64,
+    shed: AtomicU64,
+    degraded: AtomicU64,
+    coalesced: AtomicU64,
+    store_hits: AtomicU64,
+    malformed: AtomicU64,
+    oversized: AtomicU64,
+    clamped: AtomicU64,
+    evals_total: AtomicU64,
+    evals_saved: AtomicU64,
+    latencies_ms: Mutex<VecDeque<f64>>,
+}
+
+impl Metrics {
+    fn lat(&self, ms: f64) {
+        let mut ring = self.latencies_ms.lock().expect("latency ring poisoned");
+        if ring.len() >= LATENCY_RING {
+            ring.pop_front();
+        }
+        ring.push_back(ms);
+    }
+}
+
+/// A queued tuning job (one leader; followers wait in `inflight`).
+struct Job {
+    id: u64,
+    req: TuneRequest,
+    key: Option<String>,
+    degraded: Option<String>,
+    echo: String,
+    submitted: Instant,
+}
+
+struct Follower {
+    id: u64,
+    submitted: Instant,
+}
+
+struct Inner {
+    service: Arc<TuningService>,
+    cfg: ServerCfg,
+    queue: Mutex<VecDeque<Job>>,
+    cv: Condvar,
+    inflight: Mutex<HashMap<String, Vec<Follower>>>,
+    paused: AtomicBool,
+    closed: AtomicBool,
+    next_id: AtomicU64,
+    started: Instant,
+    metrics: Metrics,
+}
+
+/// The running server: submit lines/requests, read responses from the
+/// receiver returned by [`Server::start`], then [`Server::shutdown`].
+pub struct Server {
+    inner: Arc<Inner>,
+    tx: Sender<OutLine>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl Server {
+    /// Start the worker pool; returns the server handle and the response
+    /// channel (one [`OutLine`] per submitted id, in completion order).
+    pub fn start(service: Arc<TuningService>, cfg: ServerCfg) -> (Server, Receiver<OutLine>) {
+        let (tx, rx) = mpsc::channel::<OutLine>();
+        let inner = Arc::new(Inner {
+            service,
+            paused: AtomicBool::new(cfg.start_paused),
+            cfg,
+            queue: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+            inflight: Mutex::new(HashMap::new()),
+            closed: AtomicBool::new(false),
+            next_id: AtomicU64::new(0),
+            started: Instant::now(),
+            metrics: Metrics::default(),
+        });
+        let n = inner.cfg.workers.max(1);
+        let workers = (0..n)
+            .map(|i| {
+                let inner = inner.clone();
+                let tx = tx.clone();
+                std::thread::Builder::new()
+                    .name(format!("lt-serve-{i}"))
+                    .spawn(move || inner.work(&tx))
+                    .expect("spawning server worker")
+            })
+            .collect();
+        (Server { inner, tx, workers }, rx)
+    }
+
+    /// Unpause the worker pool (no-op when not started paused).
+    pub fn resume(&self) {
+        self.inner.paused.store(false, Ordering::SeqCst);
+        self.inner.cv.notify_all();
+    }
+
+    /// Requests currently waiting in the queue.
+    pub fn queue_len(&self) -> usize {
+        self.inner.queue.lock().expect("queue poisoned").len()
+    }
+
+    /// Point-in-time counters.
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.inner.snapshot()
+    }
+
+    /// Submit one raw input line; returns the id its response will carry.
+    pub fn submit_line(&self, line: &str) -> u64 {
+        let id = self.inner.next_id.fetch_add(1, Ordering::SeqCst);
+        self.inner.metrics.received.fetch_add(1, Ordering::Relaxed);
+        let doc = match parse(line) {
+            Ok(doc) => doc,
+            Err(e) => {
+                self.inner.metrics.malformed.fetch_add(1, Ordering::Relaxed);
+                self.inner.emit_error(&self.tx, id, &format!("malformed JSON: {e}"), Some(line));
+                return id;
+            }
+        };
+        if doc.get("type").and_then(Json::as_str) == Some("metrics") {
+            let _ = self.tx.send(OutLine { id, line: self.inner.snapshot().to_json(Some(id)) });
+            return id;
+        }
+        match TuneRequest::from_json_value(&doc) {
+            Ok(req) => self.inner.admit(&self.tx, id, req, line),
+            Err(e) => {
+                self.inner.metrics.malformed.fetch_add(1, Ordering::Relaxed);
+                self.inner.emit_error(&self.tx, id, &format!("{e:#}"), Some(line));
+            }
+        }
+        id
+    }
+
+    /// Submit an already-built request (tests, loadgen); same admission
+    /// path as [`Self::submit_line`].
+    pub fn submit(&self, req: &TuneRequest) -> u64 {
+        let id = self.inner.next_id.fetch_add(1, Ordering::SeqCst);
+        self.inner.metrics.received.fetch_add(1, Ordering::Relaxed);
+        let echo = req.to_json();
+        self.inner.admit(&self.tx, id, req.clone(), &echo);
+        id
+    }
+
+    /// Drive the server from a line stream with bounded per-line memory:
+    /// oversized lines are rejected in-stream ([`BoundedLines`]), blank
+    /// lines are skipped, and a truncated final line is still served.
+    pub fn serve_reader<R: BufRead>(&self, r: R) {
+        let mut lines = BoundedLines::new(r, self.inner.cfg.max_line_bytes);
+        for item in &mut lines {
+            match item {
+                Line::Text(line) => {
+                    if !line.trim().is_empty() {
+                        self.submit_line(&line);
+                    }
+                }
+                Line::Oversized { bytes } => {
+                    let id = self.inner.next_id.fetch_add(1, Ordering::SeqCst);
+                    self.inner.metrics.received.fetch_add(1, Ordering::Relaxed);
+                    self.inner.metrics.oversized.fetch_add(1, Ordering::Relaxed);
+                    let msg = format!(
+                        "oversized line rejected: {bytes} bytes exceeds the {}-byte bound",
+                        self.inner.cfg.max_line_bytes
+                    );
+                    self.inner.emit_error(&self.tx, id, &msg, None);
+                }
+            }
+        }
+        if let Some(e) = lines.take_error() {
+            eprintln!("warning: input stream error: {e}");
+        }
+    }
+
+    /// Drain the queue, stop the workers, and return the final counters.
+    /// The response channel closes once the last worker exits.
+    pub fn shutdown(self) -> MetricsSnapshot {
+        self.inner.closed.store(true, Ordering::SeqCst);
+        self.inner.paused.store(false, Ordering::SeqCst);
+        self.inner.cv.notify_all();
+        for w in self.workers {
+            let _ = w.join();
+        }
+        drop(self.tx);
+        self.inner.snapshot()
+    }
+}
+
+impl Inner {
+    fn snapshot(&self) -> MetricsSnapshot {
+        let m = &self.metrics;
+        let served = m.served.load(Ordering::Relaxed);
+        let uptime = self.started.elapsed().as_secs_f64().max(1e-9);
+        let lats: Vec<f64> =
+            m.latencies_ms.lock().expect("latency ring poisoned").iter().copied().collect();
+        MetricsSnapshot {
+            uptime_secs: uptime,
+            received: m.received.load(Ordering::Relaxed),
+            served,
+            errors: m.errors.load(Ordering::Relaxed),
+            panics: m.panics.load(Ordering::Relaxed),
+            shed: m.shed.load(Ordering::Relaxed),
+            degraded: m.degraded.load(Ordering::Relaxed),
+            coalesced: m.coalesced.load(Ordering::Relaxed),
+            store_hits: m.store_hits.load(Ordering::Relaxed),
+            malformed: m.malformed.load(Ordering::Relaxed),
+            oversized: m.oversized.load(Ordering::Relaxed),
+            clamped: m.clamped.load(Ordering::Relaxed),
+            evals_total: m.evals_total.load(Ordering::Relaxed),
+            evals_saved: m.evals_saved.load(Ordering::Relaxed),
+            queue_depth: self.queue.lock().expect("queue poisoned").len(),
+            workers: self.cfg.workers.max(1),
+            qps: served as f64 / uptime,
+            p50_ms: percentile(&lats, 50.0),
+            p99_ms: percentile(&lats, 99.0),
+        }
+    }
+
+    fn emit_error(&self, tx: &Sender<OutLine>, id: u64, msg: &str, echo: Option<&str>) {
+        self.metrics.errors.fetch_add(1, Ordering::Relaxed);
+        let line = TuneResponse::error_json_tagged(msg, Some(id), echo);
+        let _ = tx.send(OutLine { id, line });
+    }
+
+    /// Admission: validate, clamp, decide degradation, coalesce or
+    /// enqueue (shedding when the queue is full).
+    fn admit(&self, tx: &Sender<OutLine>, id: u64, mut req: TuneRequest, line: &str) {
+        let (problem, kind, _mask) = match req.validate() {
+            Ok(v) => v,
+            Err(e) => {
+                self.emit_error(tx, id, &format!("{e:#}"), Some(line));
+                return;
+            }
+        };
+        if let Some(cap) = self.cfg.max_evals {
+            if req.budget.max_evals.unwrap_or(u64::MAX) > cap {
+                req.budget.max_evals = Some(cap);
+                self.metrics.clamped.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        let degraded = if self.cfg.degrade && kind.needs_budget() {
+            self.degrade_reason(req.budget.deadline)
+        } else {
+            None
+        };
+        // Coalescing key: the fields that determine a response bit for
+        // bit. The deadline is excluded (it shapes *when* a request may
+        // degrade, not what a completed tune returns); the degrade
+        // decision itself stays with the leader.
+        let seed = self.service.request_seed(&req, problem);
+        let key = if self.cfg.coalesce {
+            Some(format!(
+                "{}|{}|{}|{}|{}|{:?}|{:?}",
+                problem.id(),
+                req.backend.name(),
+                kind.name(),
+                seed,
+                req.depth,
+                req.budget.time,
+                req.budget.max_evals,
+            ))
+        } else {
+            None
+        };
+        let echo: String = line.chars().take(256).collect();
+        let job = Job { id, req, key: key.clone(), degraded, echo, submitted: Instant::now() };
+
+        // Lock order: inflight, then queue (the completion path takes
+        // inflight only, so no cycle). Holding inflight across the
+        // enqueue makes "attach as follower" and "insert leader entry"
+        // atomic with respect to worker completion.
+        let mut inflight = self.inflight.lock().expect("inflight poisoned");
+        if let Some(k) = &key {
+            if let Some(fs) = inflight.get_mut(k) {
+                fs.push(Follower { id, submitted: job.submitted });
+                self.metrics.coalesced.fetch_add(1, Ordering::Relaxed);
+                return;
+            }
+        }
+        {
+            let mut q = self.queue.lock().expect("queue poisoned");
+            let qlen = q.len();
+            if qlen >= self.cfg.queue_depth {
+                drop(q);
+                drop(inflight);
+                self.metrics.shed.fetch_add(1, Ordering::Relaxed);
+                let msg = format!(
+                    "request shed: queue full ({qlen} waiting, depth {})",
+                    self.cfg.queue_depth
+                );
+                self.emit_error(tx, id, &msg, Some(line));
+                return;
+            }
+            q.push_back(job);
+        }
+        if let Some(k) = key {
+            inflight.insert(k, Vec::new());
+        }
+        drop(inflight);
+        self.cv.notify_one();
+    }
+
+    fn degrade_reason(&self, deadline: Option<Instant>) -> Option<String> {
+        let qlen = self.queue.lock().expect("queue poisoned").len();
+        if qlen >= self.cfg.degrade_at {
+            return Some(format!("queue depth {qlen} >= {}", self.cfg.degrade_at));
+        }
+        if let Some(d) = deadline {
+            let left = d.saturating_duration_since(Instant::now());
+            let left_ms = left.as_secs_f64() * 1e3;
+            if left_ms < self.cfg.degrade_deadline_ms as f64 {
+                return Some(format!(
+                    "deadline {left_ms:.0}ms < {}ms degradation threshold",
+                    self.cfg.degrade_deadline_ms
+                ));
+            }
+        }
+        None
+    }
+
+    /// The degraded form of a request: eval budget capped, and — when the
+    /// service has a store — the search rerouted through the transfer
+    /// strategy, so an exact repeat is a zero-eval store hit and a near
+    /// miss replays recorded neighbor schedules under the tiny cap.
+    fn degraded_request(&self, req: &TuneRequest) -> TuneRequest {
+        let mut r = req.clone();
+        let cap = self.cfg.degraded_evals.max(1);
+        r.budget.max_evals = Some(r.budget.max_evals.map_or(cap, |n| n.min(cap)));
+        if self.service.store().is_some() {
+            let is_search =
+                StrategyKind::parse(&r.strategy).is_some_and(|k| k.needs_budget());
+            if is_search && r.strategy != "transfer" {
+                r.strategy = "transfer".to_string();
+            }
+        }
+        r
+    }
+
+    fn work(self: Arc<Self>, tx: &Sender<OutLine>) {
+        let mut q = self.queue.lock().expect("queue poisoned");
+        loop {
+            if self.paused.load(Ordering::SeqCst) {
+                if self.closed.load(Ordering::SeqCst) {
+                    return;
+                }
+                q = self.cv.wait(q).expect("queue poisoned");
+                continue;
+            }
+            if let Some(job) = q.pop_front() {
+                drop(q);
+                self.handle(tx, job);
+                q = self.queue.lock().expect("queue poisoned");
+                continue;
+            }
+            if self.closed.load(Ordering::SeqCst) {
+                return;
+            }
+            q = self.cv.wait(q).expect("queue poisoned");
+        }
+    }
+
+    fn handle(&self, tx: &Sender<OutLine>, job: Job) {
+        // The job's followers, claimed exactly once at completion; a new
+        // identical request arriving after this removal starts fresh.
+        let take_followers = |key: &Option<String>| -> Vec<Follower> {
+            key.as_ref()
+                .and_then(|k| self.inflight.lock().expect("inflight poisoned").remove(k))
+                .unwrap_or_default()
+        };
+
+        if job.req.budget.deadline_expired() {
+            let followers = take_followers(&job.key);
+            let queued_ms = job.submitted.elapsed().as_secs_f64() * 1e3;
+            let msg = format!("deadline expired after {queued_ms:.0}ms in queue");
+            self.emit_error(tx, job.id, &msg, Some(&job.echo));
+            for f in followers {
+                self.emit_error(tx, f.id, &msg, None);
+            }
+            return;
+        }
+
+        let run_req =
+            if job.degraded.is_some() { self.degraded_request(&job.req) } else { job.req.clone() };
+        let outcome = catch_unwind(AssertUnwindSafe(|| self.service.serve(&run_req)));
+        let followers = take_followers(&job.key);
+        match outcome {
+            Ok(Ok(mut resp)) => {
+                resp.id = Some(job.id);
+                resp.degraded = job.degraded.clone();
+                resp.wall_secs = job.submitted.elapsed().as_secs_f64();
+                let leader_evals = resp.evals;
+                self.metrics.evals_total.fetch_add(leader_evals, Ordering::Relaxed);
+                if resp.degraded.is_some() {
+                    self.metrics.degraded.fetch_add(1, Ordering::Relaxed);
+                }
+                if resp.cache.as_deref() == Some("store") {
+                    self.metrics.store_hits.fetch_add(1, Ordering::Relaxed);
+                }
+                self.emit_response(tx, &resp);
+                for f in followers {
+                    let mut fr = resp.clone();
+                    fr.id = Some(f.id);
+                    fr.evals = 0;
+                    fr.cache_hits = 0;
+                    fr.cache = Some("coalesced".to_string());
+                    fr.wall_secs = f.submitted.elapsed().as_secs_f64();
+                    self.metrics.evals_saved.fetch_add(leader_evals, Ordering::Relaxed);
+                    self.emit_response(tx, &fr);
+                }
+            }
+            Ok(Err(e)) => {
+                let msg = format!("{e:#}");
+                self.emit_error(tx, job.id, &msg, Some(&job.echo));
+                for f in followers {
+                    self.emit_error(tx, f.id, &msg, None);
+                }
+            }
+            Err(payload) => {
+                self.metrics.panics.fetch_add(1, Ordering::Relaxed);
+                let msg = format!("tune panicked: {}", panic_msg(payload.as_ref()));
+                self.emit_error(tx, job.id, &msg, Some(&job.echo));
+                for f in followers {
+                    self.emit_error(tx, f.id, &msg, None);
+                }
+            }
+        }
+    }
+
+    fn emit_response(&self, tx: &Sender<OutLine>, resp: &TuneResponse) {
+        self.metrics.served.fetch_add(1, Ordering::Relaxed);
+        self.metrics.lat(resp.wall_secs * 1e3);
+        let _ = tx.send(OutLine { id: resp.id.expect("response id set"), line: resp.to_json() });
+    }
+}
+
+fn panic_msg(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Forward responses from `rx` to `w`, one JSON document per line.
+/// `ordered` buffers out-of-order completions and releases them in
+/// submission-id order (ids are dense from 0, and every id gets exactly
+/// one response, so the reorder buffer always drains). Returns the number
+/// of lines written.
+pub fn pump<W: Write>(rx: Receiver<OutLine>, mut w: W, ordered: bool) -> std::io::Result<u64> {
+    let mut written = 0u64;
+    if !ordered {
+        for out in rx {
+            writeln!(w, "{}", out.line)?;
+            w.flush()?;
+            written += 1;
+        }
+        return Ok(written);
+    }
+    let mut next = 0u64;
+    let mut hold: BTreeMap<u64, String> = BTreeMap::new();
+    for out in rx {
+        hold.insert(out.id, out.line);
+        while let Some(line) = hold.remove(&next) {
+            writeln!(w, "{line}")?;
+            written += 1;
+            next += 1;
+        }
+        w.flush()?;
+    }
+    // Channel closed: flush whatever remains in id order (ids submitted
+    // but never answered would be a server bug; don't swallow them).
+    for line in hold.into_values() {
+        writeln!(w, "{line}")?;
+        written += 1;
+    }
+    Ok(written)
+}
+
+// ---------------------------------------------------------------------------
+// Load generation
+// ---------------------------------------------------------------------------
+
+/// [`loadgen`] knobs: a synthetic mix of matmul tuning requests replayed
+/// against an in-process [`Server`].
+#[derive(Clone, Debug)]
+pub struct LoadGenCfg {
+    /// Server configuration under test.
+    pub server: ServerCfg,
+    /// Distinct request groups to send.
+    pub groups: usize,
+    /// Copies of each group's request submitted back-to-back (duplicates
+    /// exercise single-flight coalescing).
+    pub duplicates: usize,
+    /// Groups per second (0 = as fast as possible).
+    pub rate: f64,
+    /// Strategy name every request carries.
+    pub strategy: String,
+    /// Eval budget per request.
+    pub budget_evals: u64,
+    /// Per-request deadline, if any.
+    pub deadline_ms: Option<u64>,
+    /// Inject one malformed line and one panicking request mid-run.
+    pub poison: bool,
+    /// Pre-tune every distinct problem through the service first (warms
+    /// the store: the run then measures the degraded/warm path).
+    pub warm: bool,
+}
+
+impl Default for LoadGenCfg {
+    fn default() -> Self {
+        LoadGenCfg {
+            server: ServerCfg::default(),
+            groups: 24,
+            duplicates: 1,
+            rate: 0.0,
+            strategy: "greedy2".to_string(),
+            budget_evals: 200,
+            deadline_ms: None,
+            poison: false,
+            warm: false,
+        }
+    }
+}
+
+/// The problem spec of loadgen group `g`: deterministic matmul shape
+/// variations (no RNG, so reruns replay the identical mix).
+fn loadgen_spec(g: usize) -> String {
+    let m = 48 + 8 * (g % 12);
+    let n = 48 + 8 * ((g * 5 + 3) % 12);
+    let k = 48 + 8 * ((g * 7 + 1) % 12);
+    format!("matmul:{m}x{n}x{k}")
+}
+
+/// Replay a request mix against an in-process server and return the
+/// `loadgen/v1` report document.
+pub fn loadgen(service: Arc<TuningService>, cfg: &LoadGenCfg) -> Result<String> {
+    let req_template = |g: usize| -> TuneRequest {
+        let mut budget = crate::search::Budget::evals(cfg.budget_evals.max(1));
+        if let Some(ms) = cfg.deadline_ms {
+            let at = Instant::now() + std::time::Duration::from_millis(ms);
+            budget = budget.with_deadline(at);
+        }
+        let mut req = TuneRequest::new(loadgen_spec(g), cfg.strategy.clone(), budget);
+        req.seed = Some(11);
+        req
+    };
+
+    if cfg.warm {
+        for g in 0..cfg.groups {
+            let req = req_template(g);
+            if let Err(e) = service.serve(&req) {
+                anyhow::bail!("loadgen warmup for {} failed: {e:#}", req.problem);
+            }
+        }
+    }
+
+    // Start paused when duplicates are in play: the first group's copies
+    // are all queued before any worker runs, so at least one coalesced
+    // follower is deterministic, not a race.
+    let mut server_cfg = cfg.server.clone();
+    let paused_start = cfg.duplicates > 1;
+    server_cfg.start_paused = server_cfg.start_paused || paused_start;
+    let (server, rx) = Server::start(service, server_cfg);
+
+    let collector = std::thread::spawn(move || {
+        let mut lines: Vec<OutLine> = Vec::new();
+        for out in rx {
+            lines.push(out);
+        }
+        lines
+    });
+
+    let t0 = Instant::now();
+    let interval = if cfg.rate > 0.0 {
+        Some(std::time::Duration::from_secs_f64(1.0 / cfg.rate))
+    } else {
+        None
+    };
+    let poison_at = if cfg.poison { cfg.groups / 3 } else { usize::MAX };
+    let mut poison_ids: Vec<u64> = Vec::new();
+    let mut next_send = Instant::now();
+    for g in 0..cfg.groups {
+        let req = req_template(g);
+        let line = req.to_json();
+        for _ in 0..cfg.duplicates.max(1) {
+            server.submit_line(&line);
+        }
+        if g == 0 && paused_start {
+            server.resume();
+        }
+        if g == poison_at {
+            poison_ids.push(server.submit_line("{\"this is\": not json"));
+            // A spec outside the loadgen mix (dims start at 48): the
+            // probe must reach the strategy and panic there, not be
+            // answered from a store record of an already-tuned problem.
+            let mut bad = req_template(g);
+            bad.problem = "matmul:40x40x40".to_string();
+            bad.strategy = "panic_test".to_string();
+            poison_ids.push(server.submit_line(&bad.to_json()));
+        }
+        if let Some(dt) = interval {
+            next_send += dt;
+            let now = Instant::now();
+            if next_send > now {
+                std::thread::sleep(next_send - now);
+            }
+        }
+    }
+    let snapshot = server.shutdown();
+    let wall = t0.elapsed().as_secs_f64();
+    let lines = collector.join().expect("collector panicked");
+
+    let max_poison_id = poison_ids.iter().copied().max();
+    let mut ok = 0u64;
+    let mut ok_after_poison = 0u64;
+    for out in &lines {
+        let Ok(doc) = parse(&out.line) else { continue };
+        let is_ok = doc.get("error").is_none()
+            && doc.get("schema").and_then(Json::as_str) == Some("tune_response/v1");
+        if is_ok {
+            ok += 1;
+            if max_poison_id.is_some_and(|p| out.id > p) {
+                ok_after_poison += 1;
+            }
+        }
+    }
+
+    let mut o = BTreeMap::new();
+    o.insert("schema".to_string(), Json::Str("loadgen/v1".into()));
+    o.insert("groups".to_string(), Json::Num(cfg.groups as f64));
+    o.insert("duplicates".to_string(), Json::Num(cfg.duplicates.max(1) as f64));
+    o.insert("rate".to_string(), Json::Num(cfg.rate));
+    o.insert("strategy".to_string(), Json::Str(cfg.strategy.clone()));
+    o.insert("budget_evals".to_string(), Json::Num(cfg.budget_evals as f64));
+    if let Some(ms) = cfg.deadline_ms {
+        o.insert("deadline_ms".to_string(), Json::Num(ms as f64));
+    }
+    o.insert("poison".to_string(), Json::Bool(cfg.poison));
+    o.insert("warm".to_string(), Json::Bool(cfg.warm));
+    o.insert("workers".to_string(), Json::Num(cfg.server.workers.max(1) as f64));
+    o.insert("queue_depth".to_string(), Json::Num(cfg.server.queue_depth as f64));
+    o.insert("degrade_at".to_string(), Json::Num(cfg.server.degrade_at as f64));
+    o.insert("wall_secs".to_string(), Json::Num(wall));
+    o.insert("ok".to_string(), Json::Num(ok as f64));
+    o.insert("ok_after_poison".to_string(), Json::Num(ok_after_poison as f64));
+    o.insert("received".to_string(), Json::Num(snapshot.received as f64));
+    o.insert("served".to_string(), Json::Num(snapshot.served as f64));
+    o.insert("errors".to_string(), Json::Num(snapshot.errors as f64));
+    o.insert("panics".to_string(), Json::Num(snapshot.panics as f64));
+    o.insert("shed".to_string(), Json::Num(snapshot.shed as f64));
+    o.insert("degraded".to_string(), Json::Num(snapshot.degraded as f64));
+    o.insert("coalesced".to_string(), Json::Num(snapshot.coalesced as f64));
+    o.insert("store_hits".to_string(), Json::Num(snapshot.store_hits as f64));
+    o.insert("malformed".to_string(), Json::Num(snapshot.malformed as f64));
+    o.insert("oversized".to_string(), Json::Num(snapshot.oversized as f64));
+    o.insert("clamped".to_string(), Json::Num(snapshot.clamped as f64));
+    o.insert("evals_total".to_string(), Json::Num(snapshot.evals_total as f64));
+    o.insert("evals_saved".to_string(), Json::Num(snapshot.evals_saved as f64));
+    o.insert("qps".to_string(), Json::Num(snapshot.qps));
+    o.insert("p50_ms".to_string(), Json::Num(snapshot.p50_ms));
+    o.insert("p99_ms".to_string(), Json::Num(snapshot.p99_ms));
+    let mut out = String::new();
+    write_json(&Json::Obj(o), &mut out);
+    Ok(out)
+}

@@ -198,6 +198,7 @@ impl TuningService {
                 ranker: self.cfg.ranker.clone(),
                 ..EvolveStrategy::default()
             }),
+            StrategyKind::PanicTest => Box::new(super::PanicProbe),
         })
     }
 
@@ -205,6 +206,13 @@ impl TuningService {
     /// service seed and the problem exactly as the batch driver does.
     pub fn request_seed(&self, req: &TuneRequest, problem: Problem) -> u64 {
         req.seed.unwrap_or_else(|| problem_seed(self.cfg.seed, problem))
+    }
+
+    /// The persistent tuning store this service records to, if any. The
+    /// concurrent server consults this to decide whether a degraded
+    /// request can be rerouted to the store/transfer path.
+    pub fn store(&self) -> Option<&TuningStore> {
+        self.cfg.store.as_ref()
     }
 
     /// Serve one request against the service's own warm backend.
@@ -277,6 +285,8 @@ impl TuningService {
             actions: result.actions,
             note: result.note,
             cache: None,
+            id: None,
+            degraded: None,
         })
     }
 
@@ -357,6 +367,8 @@ impl TuningService {
             actions: rec.actions.clone(),
             note: Some("served from store".to_string()),
             cache: Some("store".to_string()),
+            id: None,
+            degraded: None,
         })
     }
 

@@ -842,6 +842,230 @@ pub fn bench_search(cfg: &EvalCfg, n: usize, budget_evals: u64) -> Result<String
 }
 
 // ---------------------------------------------------------------------------
+// Serve: concurrent serving robustness (DESIGN.md §13)
+// ---------------------------------------------------------------------------
+
+/// Concurrent-serving benchmark: pins the serving layer's robustness
+/// properties and writes the tracked `BENCH_serve.json` (schema
+/// `bench_serve/v1`).
+///
+/// - **scaling** — loadgen throughput at 1/2/4 workers, a fresh service
+///   per row so no warm eval cache bleeds between rows;
+/// - **overload** — a paused single-worker server takes a burst of full
+///   search requests with and without degradation. The degraded arm
+///   reroutes queue-deep requests to the transfer strategy over a store
+///   warmed on *neighbor* problems only — the targets themselves stay
+///   out of the warm corpus, so the non-degraded arm really pays the
+///   full search — and the pin is `p99_degraded < p99_full`;
+/// - **coalesce** — N identical requests submitted to a paused server
+///   cost one leader tune: `server_evals / single_tune_evals <= 1.2`
+///   (exactly 1.0 on the deterministic cost model).
+pub fn bench_serve(cfg: &EvalCfg, budget_evals: u64) -> Result<String> {
+    use crate::api::server::{self, LoadGenCfg, MetricsSnapshot, Server, ServerCfg};
+    use crate::api::{ServiceCfg, TuneRequest, TuningService};
+    use crate::store::transfer::nearest_problems;
+    use crate::store::TuningStore;
+    use crate::util::json::{parse, write_json, Json};
+
+    let fresh_service = |store: Option<TuningStore>| {
+        Arc::new(TuningService::new(ServiceCfg {
+            seed: cfg.seed,
+            threads: 1,
+            default_params: None,
+            store,
+            ranker: None,
+        }))
+    };
+
+    // --- scaling: loadgen throughput at 1/2/4 workers ----------------------
+    let groups = cfg.scaled(16).max(4);
+    let mut scaling_rows = Vec::new();
+    let mut qps_by_workers = Vec::new();
+    let mut scaling_csv = String::from("workers,served,wall_secs,qps\n");
+    for workers in [1usize, 2, 4] {
+        let lg = LoadGenCfg {
+            server: ServerCfg {
+                workers,
+                queue_depth: 4096,
+                coalesce: false,
+                degrade: false,
+                ..ServerCfg::default()
+            },
+            groups,
+            budget_evals,
+            ..LoadGenCfg::default()
+        };
+        let doc = server::loadgen(fresh_service(None), &lg)?;
+        let j = parse(&doc).map_err(|e| anyhow::anyhow!("loadgen report: {e}"))?;
+        let num = |k: &str| j.get(k).and_then(Json::as_f64).unwrap_or(f64::NAN);
+        let (served, wall, qps) = (num("served"), num("wall_secs"), num("qps"));
+        let _ = writeln!(scaling_csv, "{workers},{served},{wall:.4},{qps:.2}");
+        let mut row = BTreeMap::new();
+        row.insert("workers".to_string(), Json::Num(workers as f64));
+        row.insert("served".to_string(), Json::Num(served));
+        row.insert("wall_secs".to_string(), Json::Num(wall));
+        row.insert("qps".to_string(), Json::Num(qps));
+        scaling_rows.push(Json::Obj(row));
+        qps_by_workers.push(qps);
+        eprintln!("[serve] scaling: {workers} worker(s) -> {qps:.1} qps");
+    }
+
+    // --- overload: p99 with vs without degradation -------------------------
+    let ds = dataset::canonical();
+    let n_targets = cfg.scaled(8).max(4);
+    let targets = dataset::sample_test(&ds, n_targets, cfg.seed ^ 0x5e7e);
+    let mut warm_ids = std::collections::BTreeSet::new();
+    let mut warm = Vec::new();
+    for &t in &targets {
+        for p in nearest_problems(&ds.train, t, 3) {
+            if warm_ids.insert(p.id()) {
+                warm.push(p);
+            }
+        }
+    }
+    let warm_bcfg = batch::BatchCfg {
+        algo: SearchAlgo::Greedy2,
+        budget: Budget::evals(budget_evals),
+        depth: 10,
+        seed: cfg.seed,
+        threads: cfg.threads,
+        expand_threads: 1,
+    };
+    let tcfg = EvalCfg { measured: false, ..cfg.clone() };
+    let degrade_at = 2usize;
+    let overload_arm = |degrade: bool| -> Result<MetricsSnapshot> {
+        // Each arm warms its own store: a store hit is strategy-blind, so
+        // one arm's recorded target results would answer the other arm's
+        // requests with zero evals and invalidate the comparison.
+        let store = TuningStore::in_memory();
+        batch::run_recorded(&warm, &tcfg.backend(), &warm_bcfg, Some(&store), None);
+        let svc = fresh_service(Some(store));
+        let scfg = ServerCfg {
+            workers: 1,
+            queue_depth: 4096,
+            degrade_at,
+            degraded_evals: 8,
+            coalesce: false,
+            degrade,
+            start_paused: true,
+            ..ServerCfg::default()
+        };
+        let (srv, rx) = Server::start(svc, scfg);
+        let drain = std::thread::spawn(move || for _ in rx {});
+        // Paused start: request i sees queue length i at admission, so
+        // exactly the requests beyond `degrade_at` degrade — no race.
+        for &p in &targets {
+            srv.submit(&TuneRequest::new(p.id(), "greedy2", Budget::evals(budget_evals)));
+        }
+        srv.resume();
+        let snap = srv.shutdown();
+        drain.join().expect("drain thread panicked");
+        Ok(snap)
+    };
+    let full = overload_arm(false)?;
+    let degraded = overload_arm(true)?;
+    let p99_ratio = degraded.p99_ms / full.p99_ms.max(1e-9);
+    eprintln!(
+        "[serve] overload: p99 {:.1}ms full vs {:.1}ms degraded \
+         ({} of {} responses degraded)",
+        full.p99_ms,
+        degraded.p99_ms,
+        degraded.degraded,
+        targets.len(),
+    );
+
+    // --- coalesce: N identical requests ~ one tune -------------------------
+    let dup = 6usize;
+    let creq = TuneRequest::new("matmul:72x88x104", "greedy2", Budget::evals(budget_evals));
+    let single = fresh_service(None).serve(&creq)?;
+    let coalesce_cfg = ServerCfg {
+        workers: 4,
+        queue_depth: 4096,
+        degrade: false,
+        start_paused: true,
+        ..ServerCfg::default()
+    };
+    let (srv, rx) = Server::start(fresh_service(None), coalesce_cfg);
+    let drain = std::thread::spawn(move || {
+        let mut n = 0u64;
+        for _ in rx {
+            n += 1;
+        }
+        n
+    });
+    for _ in 0..dup {
+        srv.submit(&creq);
+    }
+    srv.resume();
+    let csnap = srv.shutdown();
+    let responses = drain.join().expect("drain thread panicked");
+    let evals_ratio = csnap.evals_total as f64 / single.evals.max(1) as f64;
+    eprintln!(
+        "[serve] coalesce: {dup} identical requests -> {} evals vs {} for one tune \
+         ({} coalesced)",
+        csnap.evals_total, single.evals, csnap.coalesced,
+    );
+
+    let mut overload_obj = BTreeMap::new();
+    overload_obj.insert("requests".to_string(), Json::Num(targets.len() as f64));
+    overload_obj.insert("degrade_at".to_string(), Json::Num(degrade_at as f64));
+    overload_obj.insert("warm_problems".to_string(), Json::Num(warm.len() as f64));
+    overload_obj.insert("p50_full_ms".to_string(), Json::Num(full.p50_ms));
+    overload_obj.insert("p50_degraded_ms".to_string(), Json::Num(degraded.p50_ms));
+    overload_obj.insert("p99_full_ms".to_string(), Json::Num(full.p99_ms));
+    overload_obj.insert("p99_degraded_ms".to_string(), Json::Num(degraded.p99_ms));
+    overload_obj.insert("degraded_responses".to_string(), Json::Num(degraded.degraded as f64));
+    overload_obj.insert("p99_ratio".to_string(), Json::Num(p99_ratio));
+
+    let mut coalesce_obj = BTreeMap::new();
+    coalesce_obj.insert("requests".to_string(), Json::Num(dup as f64));
+    coalesce_obj.insert("responses".to_string(), Json::Num(responses as f64));
+    coalesce_obj.insert("coalesced".to_string(), Json::Num(csnap.coalesced as f64));
+    coalesce_obj.insert("single_tune_evals".to_string(), Json::Num(single.evals as f64));
+    coalesce_obj.insert("server_evals".to_string(), Json::Num(csnap.evals_total as f64));
+    coalesce_obj.insert("evals_saved".to_string(), Json::Num(csnap.evals_saved as f64));
+    coalesce_obj.insert("evals_ratio".to_string(), Json::Num(evals_ratio));
+
+    let mut root = BTreeMap::new();
+    root.insert("schema".to_string(), Json::Str("bench_serve/v1".into()));
+    root.insert("budget_evals".to_string(), Json::Num(budget_evals as f64));
+    root.insert("loadgen_groups".to_string(), Json::Num(groups as f64));
+    root.insert("scaling".to_string(), Json::Arr(scaling_rows));
+    root.insert("overload".to_string(), Json::Obj(overload_obj));
+    root.insert("coalesce".to_string(), Json::Obj(coalesce_obj));
+    let mut json_text = String::new();
+    write_json(&Json::Obj(root), &mut json_text);
+    json_text.push('\n');
+    std::fs::write("BENCH_serve.json", &json_text)?;
+    write_out(&cfg.out_dir, "serve_scaling.csv", &scaling_csv)?;
+
+    let md = format!(
+        "# Concurrent serving robustness ({groups}-request loadgen, \
+         {}-request overload burst, budget {budget_evals} evals)\n\n\
+         - scaling: {:.1} / {:.1} / {:.1} qps at 1 / 2 / 4 workers\n\
+         - overload p99: **{:.1}ms** full search vs **{:.1}ms** degraded \
+         ({} responses degraded, ratio {:.2})\n\
+         - coalescing: {dup} identical requests cost {} evals vs {} for one \
+         tune (ratio **{:.2}**, {} followers coalesced)\n\n\
+         BENCH_serve.json written (schema bench_serve/v1).\n",
+        targets.len(),
+        qps_by_workers[0],
+        qps_by_workers[1],
+        qps_by_workers[2],
+        full.p99_ms,
+        degraded.p99_ms,
+        degraded.degraded,
+        p99_ratio,
+        csnap.evals_total,
+        single.evals,
+        evals_ratio,
+        csnap.coalesced,
+    );
+    write_out(&cfg.out_dir, "serve_bench.md", &md)?;
+    Ok(md)
+}
+
+// ---------------------------------------------------------------------------
 // Policy training with seed selection
 // ---------------------------------------------------------------------------
 

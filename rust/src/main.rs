@@ -18,8 +18,16 @@
 //!                                 per family (the CI evolve gate)
 //!   serve     [--once] [--file F] serve JSON tune requests: one
 //!                                 `tune_request/v1` document (--once) or
-//!                                 one per line, responses to stdout;
-//!                                 --store makes repeats store hits
+//!                                 one per line through the concurrent
+//!                                 server (bounded queue, coalescing,
+//!                                 degradation, panic isolation);
+//!                                 `{"type":"metrics"}` answers with a
+//!                                 serve_metrics/v1 snapshot; --store
+//!                                 makes repeats store hits
+//!   loadgen                       replay a synthetic request mix against
+//!                                 an in-process server (--duplicates,
+//!                                 --rate, --poison, --warm); prints the
+//!                                 loadgen/v1 report
 //!   db        stats|export|compact --store F
 //!                                 inspect / dump / dedupe the tuning
 //!                                 store (tune_record/v1 JSONL)
@@ -73,7 +81,8 @@ fn parse_args() -> Args {
         if let Some(name) = a.strip_prefix("--") {
             // boolean flags have no value; value flags consume the next arg
             match name {
-                "quick" | "cost-model" | "measured" | "untrained" | "smoke" | "once" => {
+                "quick" | "cost-model" | "measured" | "untrained" | "smoke" | "once"
+                | "ordered" | "poison" | "warm" | "no-degrade" | "no-coalesce" => {
                     flags.insert(name.to_string(), "true".into());
                 }
                 _ => {
@@ -96,6 +105,41 @@ fn problem_spec(args: &Args, default: &str) -> String {
         .or_else(|| args.flags.get("mnk"))
         .cloned()
         .unwrap_or_else(|| default.to_string())
+}
+
+/// Concurrent-server knobs shared by `serve` (streaming mode) and
+/// `loadgen`: worker pool size, admission control, degradation, and the
+/// per-line byte bound (DESIGN.md §13).
+fn server_cfg_from_flags(args: &Args, default_workers: usize) -> looptune::api::ServerCfg {
+    let mut cfg = looptune::api::ServerCfg {
+        workers: default_workers.max(1),
+        ..looptune::api::ServerCfg::default()
+    };
+    let num = |k: &str| args.flags.get(k).and_then(|s| s.parse::<u64>().ok());
+    if let Some(n) = num("workers") {
+        cfg.workers = (n as usize).max(1);
+    }
+    if let Some(n) = num("queue-depth") {
+        cfg.queue_depth = (n as usize).max(1);
+    }
+    if let Some(n) = num("degrade-at") {
+        cfg.degrade_at = n as usize;
+    }
+    if let Some(n) = num("degrade-deadline-ms") {
+        cfg.degrade_deadline_ms = n;
+    }
+    if let Some(n) = num("degraded-evals") {
+        cfg.degraded_evals = n.max(1);
+    }
+    if let Some(n) = num("max-request-evals") {
+        cfg.max_evals = Some(n.max(1));
+    }
+    if let Some(n) = num("max-line-bytes") {
+        cfg.max_line_bytes = (n as usize).max(1);
+    }
+    cfg.coalesce = !args.flags.contains_key("no-coalesce");
+    cfg.degrade = !args.flags.contains_key("no-degrade");
+    cfg
 }
 
 fn print_response(resp: &TuneResponse) {
@@ -503,10 +547,13 @@ fn main() -> Result<()> {
         "serve" => {
             // JSON front door: `tune_request/v1` in, `tune_response/v1`
             // out. --once serves exactly one document (the CI smoke path);
-            // otherwise each non-empty input line is one request and
-            // responses stream back one line each, errors as
-            // {"schema":"tune_response/v1","error":...}. Only JSON goes
-            // to stdout; notes and warnings go to stderr.
+            // otherwise the concurrent server (DESIGN.md §13) parses each
+            // non-empty line, tunes on a bounded worker pool, and streams
+            // responses back tagged with `id` (completion order; --ordered
+            // re-emits in submission order). Errors come back as
+            // {"schema":"tune_response/v1","error":...} while the loop
+            // keeps draining. Only JSON goes to stdout; the final metrics
+            // summary and warnings go to stderr.
             if args.flags.contains_key("once") {
                 let text = match args.flags.get("file") {
                     Some(f) => std::fs::read_to_string(f)?,
@@ -519,43 +566,110 @@ fn main() -> Result<()> {
                 };
                 // Same wire contract as streaming mode: errors are still
                 // a parseable tune_response/v1 document on stdout (plus a
-                // nonzero exit for shell callers).
-                match TuneRequest::from_json(text.trim()).and_then(|req| service.serve(&req)) {
-                    Ok(resp) => println!("{}", resp.to_json()),
-                    Err(e) => {
+                // nonzero exit for shell callers), and a panicking tune is
+                // caught and reported the same way.
+                let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    TuneRequest::from_json(text.trim()).and_then(|req| service.serve(&req))
+                }));
+                match outcome {
+                    Ok(Ok(resp)) => println!("{}", resp.to_json()),
+                    Ok(Err(e)) => {
                         println!("{}", TuneResponse::error_json(&e));
+                        std::process::exit(1);
+                    }
+                    Err(payload) => {
+                        let msg = payload
+                            .downcast_ref::<&str>()
+                            .map(|s| (*s).to_string())
+                            .or_else(|| payload.downcast_ref::<String>().cloned())
+                            .unwrap_or_else(|| "non-string panic payload".into());
+                        println!(
+                            "{}",
+                            TuneResponse::error_json_tagged(
+                                &format!("tune panicked: {msg}"),
+                                None,
+                                Some(text.trim()),
+                            )
+                        );
                         std::process::exit(1);
                     }
                 }
             } else {
-                // Streaming: serve and flush each line as it arrives, so a
-                // client that waits for its response before sending the
-                // next request never deadlocks against buffered input.
-                use std::io::{BufRead as _, Write as _};
-                let serve_line = |line: &str| {
-                    if line.trim().is_empty() {
-                        return;
-                    }
-                    let out = match TuneRequest::from_json(line).and_then(|r| service.serve(&r)) {
-                        Ok(resp) => resp.to_json(),
-                        Err(e) => TuneResponse::error_json(&e),
-                    };
-                    println!("{out}");
-                    let _ = std::io::stdout().flush();
-                };
+                let scfg = server_cfg_from_flags(&args, threads);
+                let ordered = args.flags.contains_key("ordered");
+                let (server, rx) = looptune::api::Server::start(Arc::new(service), scfg);
+                // Responses stream (and flush) from their own thread, so a
+                // client that waits for a response before sending its next
+                // request never deadlocks against buffered input.
+                let pump = std::thread::spawn(move || {
+                    looptune::api::server::pump(rx, std::io::stdout().lock(), ordered)
+                });
                 match args.flags.get("file") {
                     Some(f) => {
-                        for line in std::fs::read_to_string(f)?.lines() {
-                            serve_line(line);
-                        }
+                        let file = std::fs::File::open(f)?;
+                        server.serve_reader(std::io::BufReader::new(file));
                     }
-                    None => {
-                        let stdin = std::io::stdin();
-                        for line in stdin.lock().lines() {
-                            serve_line(&line?);
-                        }
-                    }
+                    None => server.serve_reader(std::io::stdin().lock()),
                 }
+                let snap = server.shutdown();
+                let written = pump.join().expect("response pump panicked")?;
+                eprintln!(
+                    "serve: {} request(s) -> {} response line(s); {} error(s), \
+                     {} coalesced, {} degraded, {} shed; p50 {:.1}ms p99 {:.1}ms \
+                     ({:.1} qps, {} workers)",
+                    snap.received,
+                    written,
+                    snap.errors,
+                    snap.coalesced,
+                    snap.degraded,
+                    snap.shed,
+                    snap.p50_ms,
+                    snap.p99_ms,
+                    snap.qps,
+                    snap.workers,
+                );
+            }
+        }
+        "loadgen" => {
+            // Replay a deterministic synthetic request mix against an
+            // in-process server at a target rate; prints the loadgen/v1
+            // report (and writes it to --json PATH). --duplicates
+            // exercises coalescing, --poison injects one malformed line
+            // and one panicking request mid-run, --warm pre-tunes the mix
+            // through the service first (with --store: the run then
+            // measures the warm/degraded path).
+            let lg = looptune::api::server::LoadGenCfg {
+                server: server_cfg_from_flags(&args, threads),
+                groups: args
+                    .flags
+                    .get("requests")
+                    .or_else(|| args.flags.get("groups"))
+                    .and_then(|s| s.parse().ok())
+                    .unwrap_or(if quick { 8 } else { 24 }),
+                duplicates: args
+                    .flags
+                    .get("duplicates")
+                    .and_then(|s| s.parse().ok())
+                    .unwrap_or(1),
+                rate: args.flags.get("rate").and_then(|s| s.parse().ok()).unwrap_or(0.0),
+                strategy: args
+                    .flags
+                    .get("strategy")
+                    .cloned()
+                    .unwrap_or_else(|| "greedy2".into()),
+                budget_evals: args
+                    .flags
+                    .get("budget-evals")
+                    .and_then(|s| s.parse().ok())
+                    .unwrap_or(if quick { 60 } else { 200 }),
+                deadline_ms: args.flags.get("deadline-ms").and_then(|s| s.parse().ok()),
+                poison: args.flags.contains_key("poison"),
+                warm: args.flags.contains_key("warm"),
+            };
+            let doc = looptune::api::server::loadgen(Arc::new(service), &lg)?;
+            println!("{doc}");
+            if let Some(p) = args.flags.get("json") {
+                std::fs::write(p, format!("{doc}\n"))?;
             }
         }
         "bench" => {
@@ -716,6 +830,13 @@ fn main() -> Result<()> {
                             if quick { 120 } else { 300 },
                         )?
                     }
+                    "serve" => {
+                        // Concurrent-serving robustness: throughput
+                        // scaling, p99 under overload with/without
+                        // degradation, coalescing cost; writes the
+                        // tracked BENCH_serve.json (no runtime needed).
+                        experiments::bench_serve(&ecfg, if quick { 120 } else { 300 })?
+                    }
                     "ablation" => {
                         let rt = Arc::new(Runtime::load_default()?);
                         experiments::ablation(rt, &ecfg, iters)?
@@ -728,7 +849,7 @@ fn main() -> Result<()> {
             if exp == "all" {
                 for e in [
                     "table1", "fig7", "fig8", "fig9", "fig10", "fig11", "headline", "ablation",
-                    "store", "search",
+                    "store", "search", "serve",
                 ] {
                     println!("==== {e} ====");
                     run(e)?;
@@ -742,7 +863,7 @@ fn main() -> Result<()> {
                 "looptune — RL loop-schedule auto-tuner (LoopTune reproduction)\n\n\
                  usage: looptune <cmd> [flags]\n\
                  cmds:  peak | dataset | workloads | render | artifacts | train | tune\n       \
-                 | search | tune-many | serve | db | fit-cost-model | bench | eval\n\
+                 | search | tune-many | serve | loadgen | db | fit-cost-model | bench | eval\n\
                  flags: --spec KIND:DIMS (matmul:64x64x64, conv2d:28x28x3x3, ...)\n       \
                  --mnk M,N,K --algo NAME --iters N --budget SECS --out DIR\n       \
                  --params FILE --config FILE --seed N --quick --cost-model --untrained\n       \
@@ -752,6 +873,12 @@ fn main() -> Result<()> {
                  --suite NAME (tune-many over a workload suite: matmul|mmt|bmm|\n       \
                  conv1d|conv2d|mlp); tune-many --smoke (tiny per-family shapes)\n       \
                  --once --file PATH (serve: one JSON request, from a file)\n       \
+                 --workers N --queue-depth N --degrade-at N --degrade-deadline-ms MS\n       \
+                 --degraded-evals N --max-request-evals N --max-line-bytes N\n       \
+                 --ordered --no-degrade --no-coalesce (serve/loadgen: worker pool,\n       \
+                 admission control, degradation, output ordering)\n       \
+                 --requests N --duplicates N --rate R --deadline-ms MS --poison --warm\n       \
+                 (loadgen: request mix, pacing, fault injection)\n       \
                  --smoke --json PATH (bench: tiny CI shapes, output path)\n       \
                  --store PATH (persistent tuning store: serve hits, record all,\n       \
                  enable the transfer strategy; db/fit-cost-model operate on it)\n       \

@@ -216,6 +216,7 @@ impl Strategy for EvolveStrategy {
         let exhausted = |evals: u64, t0: &Instant| {
             budget.max_evals.is_some_and(|m| evals >= m)
                 || budget.time.is_some_and(|t| t0.elapsed() >= t)
+                || budget.deadline_expired()
         };
 
         // Measure the untiled starting point (the speedup denominator).
@@ -457,6 +458,25 @@ mod tests {
         // Both improve; the trajectories need not match (and almost
         // surely don't), proving the seed reaches the RNG.
         assert!(a.speedup() >= 1.0 && c.speedup() >= 1.0);
+    }
+
+    #[test]
+    fn expired_deadline_stops_after_initial_measurement() {
+        let r = run_strategy(
+            &EvolveStrategy::new(),
+            &be(),
+            Problem::matmul(128, 128, 128),
+            1.0,
+            FeatureMask::default(),
+            Budget::evals(100_000).with_deadline(Instant::now()),
+            &TuneOpts { depth: 10, seed: 7, expand_threads: 1 },
+        )
+        .unwrap();
+        // The generation loop and the per-pick measurement loop both check
+        // the deadline, so an already-expired one costs only the initial
+        // measurement (the speedup denominator).
+        assert!(r.evals <= 1, "evals {}", r.evals);
+        assert_eq!(r.best_gflops, r.initial_gflops);
     }
 
     #[test]

@@ -127,6 +127,68 @@ mod tests {
     }
 
     #[test]
+    fn expired_deadline_stops_before_any_expansion() {
+        let budget = Budget::evals(100_000).with_deadline(std::time::Instant::now());
+        let r = search(Problem::new(256, 256, 256), be(), budget, 10, 2, 1, None);
+        // Only the initial measurement lands: the step loop sees the
+        // expired deadline before expanding anything.
+        assert!(r.evals <= 1, "evals {}", r.evals);
+        assert_eq!(r.best_gflops, r.initial_gflops);
+    }
+
+    /// Satellite: a live deadline overruns by at most the one evaluation
+    /// that was in flight when it passed. Counted at eval *start* against
+    /// the deadline instant — no wall-clock upper bound, so a stalled CI
+    /// runner cannot flake this, only a genuinely missing budget check.
+    #[test]
+    fn live_deadline_overruns_by_at_most_one_eval() {
+        use crate::backend::Backend;
+        use std::sync::atomic::{AtomicU64, Ordering};
+        use std::sync::Arc;
+        use std::time::{Duration, Instant};
+
+        struct SlowCost {
+            inner: CostModel,
+            deadline: Instant,
+            late_starts: Arc<AtomicU64>,
+        }
+        impl Backend for SlowCost {
+            fn eval(&mut self, nest: &crate::ir::Nest) -> f64 {
+                if Instant::now() >= self.deadline {
+                    self.late_starts.fetch_add(1, Ordering::Relaxed);
+                }
+                std::thread::sleep(Duration::from_millis(20));
+                self.inner.eval(nest)
+            }
+            fn name(&self) -> &'static str {
+                "slow_cost"
+            }
+            fn eval_count(&self) -> u64 {
+                self.inner.eval_count()
+            }
+        }
+
+        let deadline = Instant::now() + Duration::from_millis(60);
+        let late = Arc::new(AtomicU64::new(0));
+        let late_in = late.clone();
+        let backend = SharedBackend::with_factory(move || SlowCost {
+            inner: CostModel::default(),
+            deadline,
+            late_starts: late_in.clone(),
+        });
+        let budget = Budget::evals(100_000).with_deadline(deadline);
+        let r = search(Problem::new(128, 128, 128), backend, budget, 10, 2, 1, None);
+        // ~3 evals fit the 60 ms window; the per-candidate check in the
+        // serial expand path stops the search right after the deadline.
+        assert!(r.evals >= 1, "search must still measure something");
+        assert!(
+            late.load(Ordering::Relaxed) <= 1,
+            "at most one eval may start after the deadline, got {}",
+            late.load(Ordering::Relaxed)
+        );
+    }
+
+    #[test]
     fn parallel_expansion_reaches_same_quality() {
         let p = Problem::new(128, 128, 128);
         let serial = search(p, be(), Budget::evals(100_000), 6, 2, 1, None);

@@ -25,26 +25,57 @@ use std::time::{Duration, Instant};
 /// Search budget: wall-clock and/or evaluation-count limits.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Budget {
-    /// Wall-clock limit, if any.
+    /// Wall-clock limit relative to search start, if any.
     pub time: Option<Duration>,
     /// Backend-evaluation limit, if any.
     pub max_evals: Option<u64>,
+    /// Absolute wall-clock deadline, if any. Unlike `time` (which is
+    /// measured from when the strategy starts running), the deadline keeps
+    /// counting while a request waits in a queue — it is the serving
+    /// layer's end-to-end latency contract.
+    pub deadline: Option<Instant>,
 }
 
 impl Budget {
     /// Wall-clock budget only.
     pub fn seconds(s: f64) -> Self {
-        Budget { time: Some(Duration::from_secs_f64(s)), max_evals: None }
+        Budget { time: Some(Duration::from_secs_f64(s)), max_evals: None, deadline: None }
     }
 
     /// Evaluation-count budget only (deterministic).
     pub fn evals(n: u64) -> Self {
-        Budget { time: None, max_evals: Some(n) }
+        Budget { time: None, max_evals: Some(n), deadline: None }
     }
 
     /// Both limits; whichever fires first stops the search.
     pub fn both(s: f64, n: u64) -> Self {
-        Budget { time: Some(Duration::from_secs_f64(s)), max_evals: Some(n) }
+        Budget {
+            time: Some(Duration::from_secs_f64(s)),
+            max_evals: Some(n),
+            deadline: None,
+        }
+    }
+
+    /// Absolute deadline `ms` milliseconds from now; the search stops
+    /// cleanly (keeping its incumbent) once the deadline passes.
+    pub fn deadline_ms(ms: u64) -> Self {
+        Budget {
+            time: None,
+            max_evals: None,
+            deadline: Some(Instant::now() + Duration::from_millis(ms)),
+        }
+    }
+
+    /// This budget with an absolute deadline attached (whichever limit
+    /// fires first stops the search).
+    pub fn with_deadline(mut self, at: Instant) -> Self {
+        self.deadline = Some(at);
+        self
+    }
+
+    /// Whether the absolute deadline (if any) has passed.
+    pub fn deadline_expired(&self) -> bool {
+        self.deadline.is_some_and(|d| Instant::now() >= d)
     }
 
     /// No limit at all. Only meaningful for strategies that terminate on
@@ -52,12 +83,12 @@ impl Budget {
     /// rejects unlimited budgets on searches at the request boundary
     /// (`api::TuneRequest::validate`) instead of spinning forever.
     pub fn unlimited() -> Self {
-        Budget { time: None, max_evals: None }
+        Budget { time: None, max_evals: None, deadline: None }
     }
 
-    /// Whether neither limit is set.
+    /// Whether no limit of any kind is set.
     pub fn is_unlimited(&self) -> bool {
-        self.time.is_none() && self.max_evals.is_none()
+        self.time.is_none() && self.max_evals.is_none() && self.deadline.is_none()
     }
 }
 
@@ -190,6 +221,9 @@ impl SearchCtx {
             if self.evals() >= n {
                 return true;
             }
+        }
+        if self.budget.deadline_expired() {
+            return true;
         }
         false
     }

@@ -135,6 +135,18 @@ impl TuningStore {
                 }
             }
         }
+        // Surface corruption at open time, not only when someone thinks
+        // to run `db stats`: a growing corrupt count is the early warning
+        // for disk/serialization trouble, while serving silently carries
+        // on over the records that did load.
+        let corrupt = store.corrupt_lines();
+        if corrupt > 0 {
+            eprintln!(
+                "warning: store {path:?}: skipped {corrupt} corrupt line(s) at load \
+                 ({} records indexed); `db stats` reports the count",
+                store.len()
+            );
+        }
         Ok(store)
     }
 
@@ -569,6 +581,42 @@ mod tests {
         assert_eq!(hit.gflops, 6.0);
         // Replay of a reloaded record is bit-exact.
         hit.replay_exact().unwrap();
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn poison_line_mid_file_loses_only_that_record() {
+        let dir = tmpdir("poison_mid");
+        let path = dir.join("tune.db");
+        {
+            let store = TuningStore::open(&path).unwrap();
+            for m in [64usize, 80, 96, 112, 128] {
+                store.append(rec(Problem::matmul(m, 64, 64), "greedy2", m as f64)).unwrap();
+            }
+        }
+        // Corrupt the THIRD line in place (not a torn tail): records both
+        // before and after the poison must survive the reload intact.
+        let text = std::fs::read_to_string(&path).unwrap();
+        let mut lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 5);
+        lines[2] = "{\"schema\":\"tune_record/v1\",\"problem\":\"mm_96x64x64\",\"loops\":[[[";
+        std::fs::write(&path, lines.join("\n") + "\n").unwrap();
+
+        let store = TuningStore::open(&path).unwrap();
+        assert_eq!(store.len(), 4);
+        assert_eq!(store.corrupt_lines(), 1);
+        assert!(store.lookup("mm_96x64x64", "cost_model").is_none());
+        for m in [64usize, 80, 112, 128] {
+            let hit = store.lookup(&format!("mm_{m}x64x64"), "cost_model").unwrap();
+            assert_eq!(hit.gflops, m as f64);
+            hit.replay_exact().unwrap();
+        }
+        // The count is surfaced through `db stats` (summary + JSON).
+        let stats = store.stats();
+        assert_eq!(stats.corrupt_lines, 1);
+        assert!(stats.summary().contains("1 corrupt lines skipped"));
+        let json = crate::util::json::parse(&stats.to_json()).unwrap();
+        assert_eq!(json.get("corrupt_lines").and_then(Json::as_f64), Some(1.0));
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

@@ -151,6 +151,7 @@ impl Strategy for TransferStrategy {
         let exhausted = |evals: u64, t0: &Instant| {
             budget.max_evals.is_some_and(|m| evals >= m)
                 || budget.time.is_some_and(|t| t0.elapsed() >= t)
+                || budget.deadline_expired()
         };
 
         let initial = Nest::initial(problem);

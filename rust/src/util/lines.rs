@@ -1,0 +1,192 @@
+//! Bounded line reading for the serving front door (DESIGN.md §13).
+//!
+//! `BufRead::lines` buffers a whole line before handing it over, so one
+//! caller writing an endless byte stream with no `\n` grows the server's
+//! memory without bound. [`BoundedLines`] reads at most `max_bytes` of a
+//! line into memory: a longer line is *drained* (consumed from the
+//! reader's own buffer up to the next terminator, never materialized) and
+//! reported as [`Line::Oversized`] so the caller can emit a structured
+//! rejection and keep serving the stream. A final line without a trailing
+//! newline is still yielded — a truncated request file serves its last
+//! request instead of silently dropping it.
+
+use std::io::BufRead;
+
+/// One item from a bounded line stream.
+#[derive(Debug, PartialEq, Eq)]
+pub enum Line {
+    /// A complete line within the byte bound (terminator stripped, CRLF
+    /// tolerated, invalid UTF-8 replaced).
+    Text(String),
+    /// A line longer than the bound: drained from the stream and
+    /// discarded; `bytes` is the total length seen (excluding the
+    /// terminator).
+    Oversized {
+        /// Total bytes the line carried before its terminator.
+        bytes: usize,
+    },
+}
+
+/// Iterator over `\n`-separated lines of `r`, holding at most
+/// `max_bytes` of any one line in memory. I/O errors end the stream
+/// (reported once via [`BoundedLines::take_error`]).
+pub struct BoundedLines<R: BufRead> {
+    r: R,
+    max_bytes: usize,
+    err: Option<std::io::Error>,
+    done: bool,
+}
+
+impl<R: BufRead> BoundedLines<R> {
+    /// Bounded line iterator; `max_bytes` is clamped to at least 1.
+    pub fn new(r: R, max_bytes: usize) -> Self {
+        BoundedLines { r, max_bytes: max_bytes.max(1), err: None, done: false }
+    }
+
+    /// The I/O error that terminated the stream, if any.
+    pub fn take_error(&mut self) -> Option<std::io::Error> {
+        self.err.take()
+    }
+
+    /// Consume the rest of the current (oversized) line straight out of
+    /// the reader's internal buffer — exact to the byte, so the next line
+    /// starts immediately after the terminator. Returns bytes discarded.
+    fn drain_to_newline(&mut self) -> usize {
+        let mut discarded = 0usize;
+        loop {
+            let available = match self.r.fill_buf() {
+                Ok(b) => b,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) => {
+                    self.err = Some(e);
+                    self.done = true;
+                    return discarded;
+                }
+            };
+            if available.is_empty() {
+                return discarded; // EOF mid-line
+            }
+            match available.iter().position(|&b| b == b'\n') {
+                Some(pos) => {
+                    self.r.consume(pos + 1);
+                    return discarded + pos;
+                }
+                None => {
+                    let n = available.len();
+                    self.r.consume(n);
+                    discarded += n;
+                }
+            }
+        }
+    }
+}
+
+impl<R: BufRead> Iterator for BoundedLines<R> {
+    type Item = Line;
+
+    fn next(&mut self) -> Option<Line> {
+        if self.done {
+            return None;
+        }
+        // Read up to max_bytes + 1 raw bytes so "exactly at the bound"
+        // (terminator included in the +1) and "over the bound" stay
+        // distinguishable.
+        let mut buf: Vec<u8> = Vec::new();
+        let limit = self.max_bytes as u64 + 1;
+        use std::io::Read;
+        match (&mut self.r).take(limit).read_until(b'\n', &mut buf) {
+            Ok(0) => {
+                self.done = true;
+                return None;
+            }
+            Ok(_) => {}
+            Err(e) => {
+                self.err = Some(e);
+                self.done = true;
+                return None;
+            }
+        }
+        if buf.last() == Some(&b'\n') {
+            buf.pop();
+            if buf.last() == Some(&b'\r') {
+                buf.pop();
+            }
+        }
+        if buf.len() > self.max_bytes {
+            let total = buf.len() + self.drain_to_newline();
+            return Some(Line::Oversized { bytes: total });
+        }
+        Some(Line::Text(String::from_utf8_lossy(&buf).into_owned()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn collect(input: &str, max: usize) -> Vec<Line> {
+        BoundedLines::new(Cursor::new(input.as_bytes().to_vec()), max).collect()
+    }
+
+    #[test]
+    fn yields_lines_and_strips_terminators() {
+        let lines = collect("a\nbb\r\nccc\n", 16);
+        assert_eq!(
+            lines,
+            vec![
+                Line::Text("a".into()),
+                Line::Text("bb".into()),
+                Line::Text("ccc".into())
+            ]
+        );
+    }
+
+    #[test]
+    fn final_line_without_newline_is_served() {
+        let lines = collect("first\nlast-no-newline", 64);
+        assert_eq!(
+            lines,
+            vec![Line::Text("first".into()), Line::Text("last-no-newline".into())]
+        );
+    }
+
+    #[test]
+    fn oversized_line_is_rejected_and_stream_recovers() {
+        let big = "x".repeat(100);
+        let input = format!("ok1\n{big}\nok2\n");
+        let lines = collect(&input, 10);
+        assert_eq!(lines.len(), 3);
+        assert_eq!(lines[0], Line::Text("ok1".into()));
+        assert!(matches!(lines[1], Line::Oversized { bytes } if bytes == 100));
+        assert_eq!(lines[2], Line::Text("ok2".into()));
+    }
+
+    #[test]
+    fn line_exactly_at_the_bound_is_accepted() {
+        let exact = "y".repeat(10);
+        let lines = collect(&format!("{exact}\nz\n"), 10);
+        assert_eq!(lines, vec![Line::Text(exact), Line::Text("z".into())]);
+    }
+
+    #[test]
+    fn oversized_final_line_without_newline_is_rejected() {
+        let big = "x".repeat(50);
+        let lines = collect(&big, 10);
+        assert_eq!(lines.len(), 1);
+        assert!(matches!(lines[0], Line::Oversized { bytes } if bytes == 50));
+    }
+
+    #[test]
+    fn oversized_line_streams_without_materializing() {
+        // A 4 MiB line against a 1 KiB bound flows through the reader's
+        // own buffer: Oversized carries a byte count, never the bytes.
+        let big = vec![b'q'; 4 << 20];
+        let mut input = big;
+        input.push(b'\n');
+        input.extend_from_slice(b"after\n");
+        let lines: Vec<Line> = BoundedLines::new(Cursor::new(input), 1024).collect();
+        assert!(matches!(lines[0], Line::Oversized { bytes } if bytes == (4 << 20)));
+        assert_eq!(lines[1], Line::Text("after".into()));
+    }
+}

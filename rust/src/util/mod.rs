@@ -3,6 +3,7 @@
 
 pub mod bench;
 pub mod json;
+pub mod lines;
 pub mod rng;
 pub mod stats;
 

@@ -1,0 +1,403 @@
+//! Concurrent-server contract tests (DESIGN.md §13): fault isolation
+//! (malformed lines, panicking strategies, oversized input), single-flight
+//! coalescing with exact eval accounting, admission control (shedding,
+//! degradation, queue-expired deadlines), ordered response pumping, and
+//! the concurrency guarantees of `TuningService` itself (uncorrupted store
+//! appends under contention, bit-identical parallel identical requests).
+
+use looptune::api::server::{self, LoadGenCfg, OutLine, Server, ServerCfg};
+use looptune::api::{BackendChoice, ServiceCfg, TuneRequest, TuneResponse, TuningService};
+use looptune::search::Budget;
+use looptune::store::TuningStore;
+use looptune::util::json::{parse, Json};
+use std::sync::mpsc::Receiver;
+use std::sync::Arc;
+use std::time::Instant;
+
+fn svc(seed: u64) -> Arc<TuningService> {
+    Arc::new(TuningService::new(ServiceCfg { seed, threads: 1, ..ServiceCfg::default() }))
+}
+
+fn cost_req(problem: &str, strategy: &str, budget: Budget, seed: u64) -> TuneRequest {
+    let mut req = TuneRequest::new(problem, strategy, budget);
+    req.seed = Some(seed);
+    req.backend = BackendChoice::CostModel;
+    req
+}
+
+/// Paused single-flight test server: submit a deterministic burst, then
+/// `shutdown()` drains it (shutdown unpauses before joining the workers).
+fn paused_cfg(workers: usize) -> ServerCfg {
+    ServerCfg { workers, start_paused: true, ..ServerCfg::default() }
+}
+
+fn drain(rx: Receiver<OutLine>) -> Vec<OutLine> {
+    rx.into_iter().collect()
+}
+
+// ---------------------------------------------------------------------------
+// Fault isolation
+// ---------------------------------------------------------------------------
+
+#[test]
+fn malformed_line_yields_tagged_error_and_loop_keeps_serving() {
+    let (server, rx) = Server::start(svc(7), paused_cfg(1));
+    let bad_id = server.submit_line("{\"this is\": not json");
+    let good_id = server.submit(&cost_req("matmul:64x64x64", "greedy2", Budget::evals(40), 3));
+    let snap = server.shutdown();
+    let lines = drain(rx);
+    assert_eq!(lines.len(), 2);
+
+    let bad = lines.iter().find(|o| o.id == bad_id).unwrap();
+    let doc = parse(&bad.line).unwrap();
+    let err = doc.get("error").and_then(Json::as_str).unwrap();
+    assert!(err.contains("malformed JSON"), "{err}");
+    assert_eq!(doc.get("id").and_then(Json::as_f64), Some(bad_id as f64));
+    assert!(doc.get("request").and_then(Json::as_str).unwrap().contains("this is"));
+
+    let good = lines.iter().find(|o| o.id == good_id).unwrap();
+    let resp = TuneResponse::from_json(&good.line).unwrap();
+    assert_eq!(resp.problem, "mm_64x64x64");
+    assert!(resp.gflops > 0.0);
+
+    assert_eq!(snap.malformed, 1);
+    assert_eq!(snap.errors, 1);
+    assert_eq!(snap.served, 1);
+}
+
+#[test]
+fn panicking_strategy_is_caught_and_the_worker_survives() {
+    // One worker: if the panic killed it, the follow-up request could
+    // never be served.
+    let (server, rx) = Server::start(svc(7), paused_cfg(1));
+    let boom_id =
+        server.submit(&cost_req("matmul:64x64x64", "panic_test", Budget::unlimited(), 3));
+    let ok_id = server.submit(&cost_req("matmul:80x80x80", "greedy2", Budget::evals(40), 3));
+    let snap = server.shutdown();
+    let lines = drain(rx);
+    assert_eq!(lines.len(), 2);
+
+    let boom = lines.iter().find(|o| o.id == boom_id).unwrap();
+    let doc = parse(&boom.line).unwrap();
+    let err = doc.get("error").and_then(Json::as_str).unwrap();
+    assert!(err.contains("tune panicked"), "{err}");
+    assert!(err.contains("injected fault"), "{err}");
+    assert!(doc.get("request").is_some(), "panic errors echo the request");
+
+    let ok = lines.iter().find(|o| o.id == ok_id).unwrap();
+    let resp = TuneResponse::from_json(&ok.line).unwrap();
+    assert_eq!(resp.problem, "mm_80x80x80");
+
+    assert_eq!(snap.panics, 1);
+    assert_eq!(snap.served, 1);
+    assert_eq!(snap.errors, 1);
+}
+
+#[test]
+fn metrics_request_is_answered_inline() {
+    let (server, rx) = Server::start(svc(7), paused_cfg(1));
+    let id = server.submit_line("{\"type\":\"metrics\"}");
+    server.shutdown();
+    let lines = drain(rx);
+    assert_eq!(lines.len(), 1);
+    let doc = parse(&lines[0].line).unwrap();
+    assert_eq!(doc.get("schema").and_then(Json::as_str), Some("serve_metrics/v1"));
+    assert_eq!(doc.get("id").and_then(Json::as_f64), Some(id as f64));
+    assert_eq!(doc.get("received").and_then(Json::as_f64), Some(1.0));
+    assert_eq!(doc.get("workers").and_then(Json::as_f64), Some(1.0));
+}
+
+// ---------------------------------------------------------------------------
+// Single-flight coalescing
+// ---------------------------------------------------------------------------
+
+#[test]
+fn identical_concurrent_requests_coalesce_onto_one_tune() {
+    let req = cost_req("matmul:96x112x128", "greedy2", Budget::evals(150), 21);
+
+    // What one tune costs, measured on an identically-seeded service.
+    let direct = svc(7).serve(&req).unwrap();
+    assert!(direct.evals > 0);
+
+    // Paused burst of 5 identical requests: followers attach before any
+    // worker runs, so exactly one tune happens.
+    let (server, rx) = Server::start(svc(7), paused_cfg(4));
+    for _ in 0..5 {
+        server.submit(&req);
+    }
+    let snap = server.shutdown();
+    let resps: Vec<TuneResponse> =
+        drain(rx).iter().map(|o| TuneResponse::from_json(&o.line).unwrap()).collect();
+    assert_eq!(resps.len(), 5);
+
+    let leaders: Vec<_> =
+        resps.iter().filter(|r| r.cache.as_deref() != Some("coalesced")).collect();
+    let followers: Vec<_> =
+        resps.iter().filter(|r| r.cache.as_deref() == Some("coalesced")).collect();
+    assert_eq!(leaders.len(), 1);
+    assert_eq!(followers.len(), 4);
+
+    // The leader is bit-identical to the direct run; followers carry the
+    // leader's payload with zero evals of their own.
+    let leader = leaders[0];
+    assert_eq!(leader.nest_hash, direct.nest_hash);
+    assert_eq!(leader.gflops, direct.gflops);
+    assert_eq!(leader.evals, direct.evals);
+    for f in &followers {
+        assert_eq!(f.nest_hash, leader.nest_hash);
+        assert_eq!(f.gflops, leader.gflops);
+        assert_eq!(f.evals, 0);
+        assert_eq!(f.cache_hits, 0);
+    }
+
+    // Exact eval accounting: the server spent one tune, saved four.
+    assert_eq!(snap.coalesced, 4);
+    assert_eq!(snap.evals_total, direct.evals);
+    assert_eq!(snap.evals_saved, 4 * direct.evals);
+    assert_eq!(snap.served, 5);
+}
+
+// ---------------------------------------------------------------------------
+// Admission control and degradation
+// ---------------------------------------------------------------------------
+
+#[test]
+fn queue_overflow_sheds_with_a_structured_error() {
+    let cfg = ServerCfg {
+        workers: 1,
+        queue_depth: 2,
+        coalesce: false,
+        degrade: false,
+        start_paused: true,
+        ..ServerCfg::default()
+    };
+    let (server, rx) = Server::start(svc(7), cfg);
+    for i in 0..4 {
+        let spec = format!("matmul:{}x64x64", 64 + 16 * i);
+        server.submit(&cost_req(&spec, "greedy2", Budget::evals(30), 3));
+    }
+    let snap = server.shutdown();
+    let lines = drain(rx);
+    assert_eq!(lines.len(), 4);
+    let errors: Vec<String> = lines
+        .iter()
+        .filter_map(|o| {
+            parse(&o.line).ok()?.get("error").and_then(Json::as_str).map(str::to_string)
+        })
+        .collect();
+    assert_eq!(errors.len(), 2, "two of four must be shed");
+    for e in &errors {
+        assert!(e.contains("shed") && e.contains("queue full"), "{e}");
+    }
+    assert_eq!(snap.shed, 2);
+    assert_eq!(snap.served, 2);
+}
+
+#[test]
+fn deep_queue_degrades_requests_to_a_capped_budget() {
+    let cfg = ServerCfg {
+        workers: 1,
+        degrade_at: 2,
+        degraded_evals: 8,
+        coalesce: false,
+        start_paused: true,
+        ..ServerCfg::default()
+    };
+    let (server, rx) = Server::start(svc(7), cfg);
+    // Paused single worker: request i sees queue length i at admission,
+    // so exactly the requests beyond degrade_at degrade — no race.
+    for i in 0..5 {
+        let spec = format!("matmul:{}x64x64", 64 + 16 * i);
+        server.submit(&cost_req(&spec, "greedy2", Budget::evals(500), 3));
+    }
+    let snap = server.shutdown();
+    let resps: Vec<TuneResponse> =
+        drain(rx).iter().map(|o| TuneResponse::from_json(&o.line).unwrap()).collect();
+    assert_eq!(resps.len(), 5);
+    let degraded: Vec<_> = resps.iter().filter(|r| r.degraded.is_some()).collect();
+    assert_eq!(degraded.len(), 3, "requests 2..5 admitted at queue length >= 2");
+    for r in &degraded {
+        let reason = r.degraded.as_deref().unwrap();
+        assert!(reason.contains("queue depth"), "{reason}");
+        // Eval budget capped at 8 (plus at most one expansion of slack).
+        assert!(r.evals <= 16, "degraded tune used {} evals", r.evals);
+    }
+    assert_eq!(snap.degraded, 3);
+    assert_eq!(snap.served, 5);
+}
+
+#[test]
+fn deadline_expired_in_queue_is_a_structured_error() {
+    let cfg = ServerCfg { workers: 1, degrade: false, start_paused: true, ..ServerCfg::default() };
+    let (server, rx) = Server::start(svc(7), cfg);
+    let budget = Budget::evals(100).with_deadline(Instant::now());
+    server.submit(&cost_req("matmul:64x64x64", "greedy2", budget, 3));
+    let snap = server.shutdown();
+    let lines = drain(rx);
+    assert_eq!(lines.len(), 1);
+    let doc = parse(&lines[0].line).unwrap();
+    let err = doc.get("error").and_then(Json::as_str).unwrap();
+    assert!(err.contains("deadline expired"), "{err}");
+    assert_eq!(snap.errors, 1);
+    assert_eq!(snap.served, 0);
+}
+
+// ---------------------------------------------------------------------------
+// Bounded line reading
+// ---------------------------------------------------------------------------
+
+#[test]
+fn serve_reader_bounds_lines_and_serves_the_truncated_final_line() {
+    let cfg = ServerCfg { workers: 1, max_line_bytes: 400, ..ServerCfg::default() };
+    let (server, rx) = Server::start(svc(7), cfg);
+    let req = cost_req("matmul:64x64x64", "greedy2", Budget::evals(30), 3).to_json();
+    assert!(req.len() < 400, "request must fit the bound ({} bytes)", req.len());
+    // Valid request, blank line, oversized junk, then a final line with
+    // no trailing newline — which must still be served.
+    let input = format!("{req}\n\n{}\n{{\"type\":\"metrics\"}}", "x".repeat(500));
+    server.serve_reader(std::io::Cursor::new(input));
+    let snap = server.shutdown();
+    let lines = drain(rx);
+    assert_eq!(lines.len(), 3);
+
+    let docs: Vec<Json> = lines.iter().map(|o| parse(&o.line).unwrap()).collect();
+    let metrics_served = docs
+        .iter()
+        .any(|d| d.get("schema").and_then(Json::as_str) == Some("serve_metrics/v1"));
+    assert!(metrics_served, "the truncated final metrics line must still be served");
+    let oversize_err = docs
+        .iter()
+        .find_map(|d| d.get("error").and_then(Json::as_str))
+        .expect("oversized line must produce an error response");
+    assert!(oversize_err.contains("oversized line rejected"), "{oversize_err}");
+    assert!(oversize_err.contains("400-byte bound"), "{oversize_err}");
+
+    assert_eq!(snap.oversized, 1);
+    assert_eq!(snap.served, 1);
+    assert_eq!(snap.received, 3, "blank line must not count as a request");
+}
+
+// ---------------------------------------------------------------------------
+// Ordered pumping
+// ---------------------------------------------------------------------------
+
+#[test]
+fn ordered_pump_releases_responses_in_submission_order() {
+    let cfg = ServerCfg { workers: 4, coalesce: false, start_paused: true, ..ServerCfg::default() };
+    let (server, rx) = Server::start(svc(7), cfg);
+    let pump = std::thread::spawn(move || {
+        let mut buf: Vec<u8> = Vec::new();
+        let n = server::pump(rx, &mut buf, true).unwrap();
+        (n, buf)
+    });
+    // Mixed sizes so completion order under 4 workers is unlikely to
+    // match submission order on its own.
+    for i in 0..8 {
+        let spec = format!("matmul:{}x{}x64", 64 + 16 * (i % 4), 64 + 16 * (i / 4));
+        server.submit(&cost_req(&spec, "greedy2", Budget::evals(40 + 30 * i as u64), 3));
+    }
+    server.shutdown();
+    let (written, buf) = pump.join().unwrap();
+    assert_eq!(written, 8);
+    let ids: Vec<f64> = String::from_utf8(buf)
+        .unwrap()
+        .lines()
+        .map(|l| parse(l).unwrap().get("id").and_then(Json::as_f64).unwrap())
+        .collect();
+    assert_eq!(ids, (0..8).map(f64::from).collect::<Vec<_>>());
+}
+
+// ---------------------------------------------------------------------------
+// TuningService under concurrency
+// ---------------------------------------------------------------------------
+
+#[test]
+fn concurrent_serves_append_an_uncorrupted_store() {
+    let dir = std::env::temp_dir().join(format!("lt_serve_store_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("tune.db");
+    let n = 24usize;
+    {
+        let store = TuningStore::open(&path).unwrap();
+        let service = Arc::new(TuningService::new(ServiceCfg {
+            seed: 7,
+            threads: 1,
+            store: Some(store),
+            ..ServiceCfg::default()
+        }));
+        std::thread::scope(|s| {
+            for t in 0..6 {
+                let service = service.clone();
+                s.spawn(move || {
+                    for i in (t..n).step_by(6) {
+                        let spec = format!("matmul:{}x64x64", 48 + 8 * i);
+                        let req = cost_req(&spec, "greedy2", Budget::evals(40), 3);
+                        service.serve(&req).unwrap();
+                    }
+                });
+            }
+        });
+    }
+    // Reload from disk: every concurrent append must have landed as one
+    // whole line (no interleaved/torn records), and every record replays.
+    let reloaded = TuningStore::open(&path).unwrap();
+    assert_eq!(reloaded.corrupt_lines(), 0);
+    assert_eq!(reloaded.len(), n as u64);
+    for i in 0..n {
+        let id = format!("mm_{}x64x64", 48 + 8 * i);
+        let rec = reloaded
+            .lookup(&id, "cost_model")
+            .unwrap_or_else(|| panic!("{id} missing after reload"));
+        rec.replay_exact().unwrap();
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn parallel_identical_requests_are_bit_identical() {
+    let resps: Vec<TuneResponse> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                s.spawn(|| {
+                    let req = cost_req("matmul:96x112x128", "greedy2", Budget::evals(120), 21);
+                    svc(7).serve(&req).unwrap()
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    for r in &resps[1..] {
+        assert_eq!(r.nest_hash, resps[0].nest_hash, "schedule diverged under contention");
+        assert_eq!(r.gflops, resps[0].gflops);
+        assert_eq!(r.evals, resps[0].evals, "eval accounting diverged");
+        assert_eq!(r.seed, resps[0].seed);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Loadgen end to end
+// ---------------------------------------------------------------------------
+
+#[test]
+fn loadgen_reports_coalescing_and_survives_poison() {
+    let cfg = LoadGenCfg {
+        server: ServerCfg { workers: 2, ..ServerCfg::default() },
+        groups: 6,
+        duplicates: 2,
+        strategy: "greedy2".to_string(),
+        budget_evals: 30,
+        poison: true,
+        ..LoadGenCfg::default()
+    };
+    let doc = server::loadgen(svc(7), &cfg).unwrap();
+    let report = parse(&doc).unwrap();
+    let num = |k: &str| report.get(k).and_then(Json::as_f64).unwrap_or(f64::NAN);
+    assert_eq!(report.get("schema").and_then(Json::as_str), Some("loadgen/v1"));
+    assert!(num("coalesced") >= 1.0, "duplicates must coalesce: {doc}");
+    assert_eq!(num("malformed"), 1.0, "{doc}");
+    assert_eq!(num("panics"), 1.0, "{doc}");
+    assert!(num("ok_after_poison") >= 1.0, "server must keep serving after poison: {doc}");
+    // 12 tune requests + 1 malformed + 1 panic probe.
+    assert_eq!(num("received"), 14.0, "{doc}");
+    assert_eq!(num("served") + num("errors"), 14.0, "every id answered: {doc}");
+}
