@@ -1,0 +1,506 @@
+//! Graph tuning requests/responses (`graph_request/v1` /
+//! `graph_response/v1`) and [`TuningService::serve_graph`] — the
+//! whole-model entry point behind the `tune-graph` CLI subcommand.
+//!
+//! A request names a graph spec ([`spec::parse_graph`] — e.g.
+//! `mlp:784x512x512x10`, `convnet:28x28x3x2`, or any single-problem
+//! spec), a batch size, and the same strategy/budget/backend knobs as a
+//! single-problem tune. Serving lowers the spec, runs the epilogue
+//! fusion rewrite (unless `fuse: false`), tunes every contraction node
+//! through [`tune_graph`] under the one graph-wide budget, then compiles
+//! and measures **both** arms — the fused graph and the original unfused
+//! graph with the same tuned schedules transplanted onto the unfused
+//! problems — so the response's `latency_fused_ms` / `latency_unfused_ms`
+//! pair isolates the effect of fusion alone.
+
+use super::service::TuningService;
+use super::{spec, BackendChoice};
+use crate::graph::{fuse, tune_graph, CompiledGraph, FusionReport, Graph, Op};
+use crate::ir::Problem;
+use crate::search::Budget;
+use crate::store::record::{decode_loops, encode_loops};
+use crate::util::json::{parse, write_json, Json};
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+
+/// Seed used when a graph request does not pin one.
+const DEFAULT_GRAPH_SEED: u64 = 0x5eed;
+
+/// Timed forward passes per latency measurement (fastest-of).
+const LATENCY_REPEATS: usize = 5;
+
+/// One whole-model tuning job.
+#[derive(Clone, Debug, PartialEq)]
+pub struct GraphRequest {
+    /// Graph spec (see [`spec::parse_graph`]).
+    pub graph: String,
+    /// Batch size the spec lowers with.
+    pub batch: usize,
+    /// Strategy name, as in [`super::TuneRequest`].
+    pub strategy: String,
+    /// One graph-wide budget, apportioned across nodes.
+    pub budget: Budget,
+    /// Backend scoring the per-node tunes.
+    pub backend: BackendChoice,
+    /// Deterministic seed; `None` uses a fixed default.
+    pub seed: Option<u64>,
+    /// Whether to run the epilogue-fusion rewrite (default true;
+    /// `false` tunes and runs the unfused graph as-is).
+    pub fuse: bool,
+}
+
+impl GraphRequest {
+    /// Request with default knobs (batch 64, fusion on, cost-model
+    /// backend).
+    pub fn new(graph: impl Into<String>, strategy: impl Into<String>, budget: Budget) -> Self {
+        GraphRequest {
+            graph: graph.into(),
+            batch: 64,
+            strategy: strategy.into(),
+            budget,
+            backend: BackendChoice::CostModel,
+            seed: None,
+            fuse: true,
+        }
+    }
+
+    /// Encode as a `graph_request/v1` JSON document.
+    pub fn to_json(&self) -> String {
+        let mut root = BTreeMap::new();
+        root.insert("schema".into(), Json::Str("graph_request/v1".into()));
+        root.insert("graph".into(), Json::Str(self.graph.clone()));
+        root.insert("batch".into(), Json::Num(self.batch as f64));
+        root.insert("strategy".into(), Json::Str(self.strategy.clone()));
+        root.insert("budget".into(), super::request::budget_to_json(&self.budget));
+        root.insert("backend".into(), Json::Str(self.backend.name().into()));
+        if let Some(s) = self.seed {
+            root.insert("seed".into(), Json::Str(s.to_string()));
+        }
+        if !self.fuse {
+            root.insert("fuse".into(), Json::Bool(false));
+        }
+        let mut out = String::new();
+        write_json(&Json::Obj(root), &mut out);
+        out
+    }
+
+    /// Decode a `graph_request/v1` JSON document (strict: unknown fields
+    /// are errors, mirroring `tune_request/v1`).
+    pub fn from_json(text: &str) -> Result<GraphRequest> {
+        let doc = parse(text).map_err(|e| anyhow!("{e}"))?;
+        let Some(obj) = doc.as_obj() else {
+            bail!("graph request must be a JSON object");
+        };
+        const KNOWN: [&str; 8] =
+            ["schema", "graph", "batch", "strategy", "budget", "backend", "seed", "fuse"];
+        for k in obj.keys() {
+            if !KNOWN.contains(&k.as_str()) {
+                bail!("unknown graph request field {k:?} (one of: {})", KNOWN.join("|"));
+            }
+        }
+        if let Some(s) = doc.get("schema").and_then(Json::as_str) {
+            if s != "graph_request/v1" {
+                bail!("unsupported request schema {s:?} (want graph_request/v1)");
+            }
+        }
+        let graph = doc
+            .get("graph")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("graph request missing string field \"graph\""))?;
+        let strategy = doc
+            .get("strategy")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("graph request missing string field \"strategy\""))?;
+        let mut req = GraphRequest::new(graph, strategy, Budget::unlimited());
+        req.budget = match doc.get("budget") {
+            Some(b) => super::request::budget_from_json(b)?,
+            None => Budget::unlimited(),
+        };
+        if let Some(b) = doc.get("batch") {
+            let n = b
+                .as_f64()
+                .filter(|n| *n >= 1.0 && n.fract() == 0.0)
+                .ok_or_else(|| anyhow!("bad batch {b:?} (want a positive integer)"))?;
+            req.batch = n as usize;
+        }
+        if let Some(b) = doc.get("backend") {
+            let name = b.as_str().ok_or_else(|| anyhow!("backend must be a string"))?;
+            req.backend = BackendChoice::from_name(name)
+                .ok_or_else(|| anyhow!("unknown backend {name:?} (measured|cost_model)"))?;
+        }
+        req.seed = match doc.get("seed") {
+            None | Some(Json::Null) => None,
+            Some(v) => Some(
+                super::request::json_u64(v).ok_or_else(|| anyhow!("bad seed {v:?}"))?,
+            ),
+        };
+        if let Some(f) = doc.get("fuse") {
+            req.fuse = f.as_bool().ok_or_else(|| anyhow!("fuse must be a boolean"))?;
+        }
+        Ok(req)
+    }
+}
+
+/// Per-node row of a graph response (one per contraction node of the
+/// tuned — fused — graph, topological order).
+#[derive(Clone, Debug, PartialEq)]
+pub struct GraphNodeReport {
+    /// Graph node name.
+    pub node: String,
+    /// `Problem::id` (fused ids carry `+bias`/`+relu` suffixes).
+    pub problem: String,
+    /// Tuned GFLOPS for this node.
+    pub gflops: f64,
+    /// Backend evaluations consumed (0 on store-served schedule reuse).
+    pub evals: u64,
+    /// Serve provenance (`Some("store")` on reuse, `None` when fresh).
+    pub cache: Option<String>,
+    /// Compact schedule signature.
+    pub schedule: String,
+}
+
+/// What a served graph request reports back.
+#[derive(Clone, Debug, PartialEq)]
+pub struct GraphResponse {
+    /// The graph spec, echoed.
+    pub graph: String,
+    /// Batch size the spec lowered with.
+    pub batch: usize,
+    /// Strategy that tuned the nodes.
+    pub strategy: String,
+    /// Backend name that scored the tunes.
+    pub backend: String,
+    /// The seed the request ran with.
+    pub seed: u64,
+    /// Whether the fusion rewrite ran.
+    pub fuse: bool,
+    /// Per-node tuning rows (fused graph, topological order).
+    pub nodes: Vec<GraphNodeReport>,
+    /// Epilogue folds the rewrite applied.
+    pub fused_nodes: usize,
+    /// Fusion candidates rejected by the legality predicate.
+    pub rejected: usize,
+    /// Total backend evaluations across the graph.
+    pub evals_total: u64,
+    /// Total strategy-attributed tuning seconds.
+    pub tune_secs: f64,
+    /// Whole-model latency of the fused graph, milliseconds.
+    pub latency_fused_ms: f64,
+    /// Whole-model latency of the unfused graph (same schedules
+    /// transplanted), milliseconds.
+    pub latency_unfused_ms: f64,
+    /// `latency_unfused_ms / latency_fused_ms`.
+    pub speedup: f64,
+    /// Tensor count of the fused graph (inputs + node outputs).
+    pub buffers_tensors: usize,
+    /// Buffer slots actually allocated (liveness reuse).
+    pub buffers_allocated: usize,
+}
+
+impl GraphResponse {
+    /// Encode as a `graph_response/v1` JSON document.
+    pub fn to_json(&self) -> String {
+        let mut root = BTreeMap::new();
+        root.insert("schema".into(), Json::Str("graph_response/v1".into()));
+        root.insert("graph".into(), Json::Str(self.graph.clone()));
+        root.insert("batch".into(), Json::Num(self.batch as f64));
+        root.insert("strategy".into(), Json::Str(self.strategy.clone()));
+        root.insert("backend".into(), Json::Str(self.backend.clone()));
+        root.insert("seed".into(), Json::Str(self.seed.to_string()));
+        root.insert("fuse".into(), Json::Bool(self.fuse));
+        let nodes: Vec<Json> = self
+            .nodes
+            .iter()
+            .map(|n| {
+                let mut row = BTreeMap::new();
+                row.insert("node".into(), Json::Str(n.node.clone()));
+                row.insert("problem".into(), Json::Str(n.problem.clone()));
+                row.insert("gflops".into(), Json::Num(n.gflops));
+                row.insert("evals".into(), Json::Num(n.evals as f64));
+                if let Some(c) = &n.cache {
+                    row.insert("cache".into(), Json::Str(c.clone()));
+                }
+                row.insert("schedule".into(), Json::Str(n.schedule.clone()));
+                Json::Obj(row)
+            })
+            .collect();
+        root.insert("nodes".into(), Json::Arr(nodes));
+        root.insert("fused_nodes".into(), Json::Num(self.fused_nodes as f64));
+        root.insert("rejected".into(), Json::Num(self.rejected as f64));
+        root.insert("evals_total".into(), Json::Num(self.evals_total as f64));
+        root.insert("tune_secs".into(), Json::Num(self.tune_secs));
+        root.insert("latency_fused_ms".into(), Json::Num(self.latency_fused_ms));
+        root.insert("latency_unfused_ms".into(), Json::Num(self.latency_unfused_ms));
+        root.insert("speedup".into(), Json::Num(self.speedup));
+        let mut buffers = BTreeMap::new();
+        buffers.insert("tensors".into(), Json::Num(self.buffers_tensors as f64));
+        buffers.insert("allocated".into(), Json::Num(self.buffers_allocated as f64));
+        root.insert("buffers".into(), Json::Obj(buffers));
+        let mut out = String::new();
+        write_json(&Json::Obj(root), &mut out);
+        out
+    }
+
+    /// Decode a `graph_response/v1` JSON document.
+    pub fn from_json(text: &str) -> Result<GraphResponse> {
+        let doc = parse(text).map_err(|e| anyhow!("{e}"))?;
+        if let Some(s) = doc.get("schema").and_then(Json::as_str) {
+            if s != "graph_response/v1" {
+                bail!("unsupported response schema {s:?} (want graph_response/v1)");
+            }
+        }
+        let s = |k: &str| -> Result<String> {
+            doc.get(k)
+                .and_then(Json::as_str)
+                .map(String::from)
+                .ok_or_else(|| anyhow!("graph response missing string field {k:?}"))
+        };
+        let f = |k: &str| -> Result<f64> {
+            doc.get(k)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow!("graph response missing number field {k:?}"))
+        };
+        let nodes = doc
+            .get("nodes")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("graph response missing nodes array"))?
+            .iter()
+            .map(|n| {
+                let gs = |k: &str| -> Result<String> {
+                    n.get(k)
+                        .and_then(Json::as_str)
+                        .map(String::from)
+                        .ok_or_else(|| anyhow!("node row missing {k:?}"))
+                };
+                Ok(GraphNodeReport {
+                    node: gs("node")?,
+                    problem: gs("problem")?,
+                    gflops: n
+                        .get("gflops")
+                        .and_then(Json::as_f64)
+                        .ok_or_else(|| anyhow!("node row missing gflops"))?,
+                    evals: n
+                        .get("evals")
+                        .and_then(Json::as_f64)
+                        .ok_or_else(|| anyhow!("node row missing evals"))?
+                        as u64,
+                    cache: n.get("cache").and_then(Json::as_str).map(String::from),
+                    schedule: gs("schedule")?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let buffers = doc
+            .get("buffers")
+            .ok_or_else(|| anyhow!("graph response missing buffers object"))?;
+        let bf = |k: &str| -> Result<usize> {
+            buffers
+                .get(k)
+                .and_then(Json::as_f64)
+                .map(|n| n as usize)
+                .ok_or_else(|| anyhow!("buffers missing {k:?}"))
+        };
+        Ok(GraphResponse {
+            graph: s("graph")?,
+            batch: f("batch")? as usize,
+            strategy: s("strategy")?,
+            backend: s("backend")?,
+            seed: doc
+                .get("seed")
+                .and_then(super::request::json_u64)
+                .ok_or_else(|| anyhow!("graph response missing seed"))?,
+            fuse: doc
+                .get("fuse")
+                .and_then(Json::as_bool)
+                .ok_or_else(|| anyhow!("graph response missing fuse"))?,
+            nodes,
+            fused_nodes: f("fused_nodes")? as usize,
+            rejected: f("rejected")? as usize,
+            evals_total: f("evals_total")? as u64,
+            tune_secs: f("tune_secs")?,
+            latency_fused_ms: f("latency_fused_ms")?,
+            latency_unfused_ms: f("latency_unfused_ms")?,
+            speedup: f("speedup")?,
+            buffers_tensors: bf("tensors")?,
+            buffers_allocated: bf("allocated")?,
+        })
+    }
+}
+
+/// Transplant tuned (possibly fused) schedules onto the unfused graph's
+/// problems: a fused id's loop structure transfers verbatim to its
+/// unfused base problem (same dims, same extents — only the epilogue
+/// differs), so the unfused arm is measured with the *same* schedules
+/// and the latency delta isolates fusion.
+fn transplant_schedules(
+    unfused: &Graph,
+    tuned: &BTreeMap<String, crate::ir::Nest>,
+) -> BTreeMap<String, crate::ir::Nest> {
+    let base_problem = |id: &str| -> Option<Problem> {
+        unfused.nodes.iter().find_map(|n| match n.op {
+            Op::Contract(p) if p.id() == id => Some(p),
+            _ => None,
+        })
+    };
+    let mut out = BTreeMap::new();
+    for (fid, nest) in tuned {
+        let base = fid.split('+').next().unwrap_or(fid).to_string();
+        if let Some(pu) = base_problem(&base) {
+            if let Ok(transplanted) = decode_loops(pu, &encode_loops(nest)) {
+                out.insert(base, transplanted);
+            }
+        }
+    }
+    out
+}
+
+impl TuningService {
+    /// Serve one whole-model tuning job: lower the spec, fuse (unless
+    /// disabled), tune every contraction under the graph-wide budget
+    /// (store-backed schedule reuse between structurally identical
+    /// nodes), and measure fused vs unfused whole-model latency with the
+    /// same schedules. Requires a store-backed service (see
+    /// [`tune_graph`]).
+    pub fn serve_graph(&self, req: &GraphRequest) -> Result<GraphResponse> {
+        let unfused = spec::parse_graph(&req.graph, req.batch)?;
+        let (graph, report) = if req.fuse {
+            fuse(&unfused)?
+        } else {
+            unfused.schedule()?;
+            (unfused.clone(), FusionReport::default())
+        };
+        let seed = req.seed.unwrap_or(DEFAULT_GRAPH_SEED);
+        let tuned =
+            tune_graph(self, &graph, &req.strategy, &req.budget, req.backend, seed)?;
+
+        let threads = crate::backend::executor::exec_threads();
+        let mut fused_cg = CompiledGraph::compile(&graph, &tuned.schedules, seed, threads)?;
+        let latency_fused_ms = fused_cg.measure(LATENCY_REPEATS) * 1e3;
+        let unfused_scheds = transplant_schedules(&unfused, &tuned.schedules);
+        let mut unfused_cg =
+            CompiledGraph::compile(&unfused, &unfused_scheds, seed, threads)?;
+        let latency_unfused_ms = unfused_cg.measure(LATENCY_REPEATS) * 1e3;
+        let (buffers_tensors, buffers_allocated) = fused_cg.buffers();
+
+        Ok(GraphResponse {
+            graph: req.graph.clone(),
+            batch: req.batch,
+            strategy: req.strategy.clone(),
+            backend: req.backend.name().to_string(),
+            seed,
+            fuse: req.fuse,
+            nodes: tuned
+                .rows
+                .iter()
+                .map(|r| GraphNodeReport {
+                    node: r.node.clone(),
+                    problem: r.problem.clone(),
+                    gflops: r.gflops,
+                    evals: r.evals,
+                    cache: r.cache.clone(),
+                    schedule: r.schedule.clone(),
+                })
+                .collect(),
+            fused_nodes: report.fused.len(),
+            rejected: report.rejected.len(),
+            evals_total: tuned.evals_total,
+            tune_secs: tuned.tune_secs,
+            latency_fused_ms,
+            latency_unfused_ms,
+            speedup: latency_unfused_ms / latency_fused_ms.max(1e-12),
+            buffers_tensors,
+            buffers_allocated,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::ServiceCfg;
+    use crate::store::TuningStore;
+
+    fn svc() -> TuningService {
+        TuningService::new(ServiceCfg {
+            seed: 7,
+            threads: 2,
+            store: Some(TuningStore::in_memory()),
+            ..Default::default()
+        })
+    }
+
+    #[test]
+    fn request_json_round_trip_minimal_and_full() {
+        let minimal = GraphRequest::new("mlp:6x8x5", "greedy1", Budget::evals(40));
+        assert_eq!(GraphRequest::from_json(&minimal.to_json()).unwrap(), minimal);
+        let full = GraphRequest {
+            graph: "convnet:12x12x3x2".into(),
+            batch: 8,
+            strategy: "random".into(),
+            budget: Budget::both(1.5, 200),
+            backend: BackendChoice::Measured,
+            seed: Some(u64::MAX - 1),
+            fuse: false,
+        };
+        assert_eq!(GraphRequest::from_json(&full.to_json()).unwrap(), full);
+    }
+
+    #[test]
+    fn malformed_graph_requests_are_errors() {
+        assert!(GraphRequest::from_json("not json").is_err());
+        assert!(GraphRequest::from_json(r#"{"strategy": "greedy1"}"#).is_err());
+        // Unknown fields bounce, as in tune_request/v1.
+        assert!(GraphRequest::from_json(
+            r#"{"graph": "mlp:6x8x5", "strategy": "greedy1", "bacth": "x"}"#
+        )
+        .is_err());
+        assert!(GraphRequest::from_json(
+            r#"{"schema": "graph_request/v2", "graph": "mlp:6x8x5", "strategy": "greedy1"}"#
+        )
+        .is_err());
+        assert!(GraphRequest::from_json(
+            r#"{"graph": "mlp:6x8x5", "strategy": "greedy1", "batch": 0}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn serve_graph_end_to_end_mlp() {
+        let mut req = GraphRequest::new("mlp:6x8x8x5", "greedy1", Budget::evals(60));
+        req.batch = 4;
+        req.seed = Some(3);
+        let resp = svc().serve_graph(&req).unwrap();
+        // 3 layers fold to 3 fused contractions; the rewrite applied
+        // 5 folds (bias+relu on the first two layers, bias on the last).
+        assert_eq!(resp.nodes.len(), 3);
+        assert_eq!(resp.fused_nodes, 5);
+        assert_eq!(resp.nodes[0].problem, "mm_4x8x6+bias+relu");
+        assert_eq!(resp.nodes[2].problem, "mm_4x5x8+bias");
+        assert!(resp.evals_total > 0);
+        assert!(resp.latency_fused_ms > 0.0 && resp.latency_unfused_ms > 0.0);
+        assert!(resp.buffers_allocated < resp.buffers_tensors);
+        // Response JSON round-trips.
+        let back = GraphResponse::from_json(&resp.to_json()).unwrap();
+        assert_eq!(back, resp);
+    }
+
+    #[test]
+    fn identical_layers_reuse_schedules_and_no_fuse_disables_rewrite() {
+        // 6->6->6 tower: layers 0 and 1 share a fused id.
+        let mut req = GraphRequest::new("mlp:6x6x6x6", "greedy1", Budget::evals(60));
+        req.batch = 4;
+        req.seed = Some(3);
+        let resp = svc().serve_graph(&req).unwrap();
+        assert_eq!(resp.nodes[0].problem, resp.nodes[1].problem);
+        assert_eq!(resp.nodes[1].evals, 0);
+        assert_eq!(resp.nodes[1].cache.as_deref(), Some("store"));
+
+        let mut req = GraphRequest::new("mlp:6x6x6", "greedy1", Budget::evals(40));
+        req.batch = 4;
+        req.fuse = false;
+        let resp = svc().serve_graph(&req).unwrap();
+        assert_eq!(resp.fused_nodes, 0);
+        // Unfused graph: contraction nodes only are tuned.
+        assert_eq!(resp.nodes.len(), 2);
+        assert!(resp.nodes.iter().all(|n| !n.problem.contains('+')));
+    }
+}

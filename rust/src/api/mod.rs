@@ -15,14 +15,21 @@
 //! batch driver ([`crate::search::batch`]) and the evaluation experiments
 //! are all thin adapters over this module.
 //!
+//! Whole-model jobs ride the same service: [`GraphRequest`] /
+//! [`GraphResponse`] (`graph_request/v1` / `graph_response/v1`, see
+//! [`graph`]) describe one multi-op graph tune served end-to-end by
+//! [`TuningService::serve_graph`] behind the `tune-graph` subcommand.
+//!
 //! [`SharedBackend`]: crate::backend::SharedBackend
 //! [`ParamSet`]: crate::rl::params::ParamSet
 
+pub mod graph;
 pub mod request;
 pub mod server;
 pub mod service;
 pub mod spec;
 
+pub use graph::{GraphNodeReport, GraphRequest, GraphResponse};
 pub use request::{BackendChoice, TuneRequest, TuneResponse};
 pub use server::{Server, ServerCfg};
 pub use service::{ServiceCfg, TuningService};

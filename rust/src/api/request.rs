@@ -488,7 +488,7 @@ impl TuneResponse {
 /// on the wire (milliseconds the caller is willing to wait end-to-end)
 /// and anchored to an absolute `Instant` at decode time, so a re-encoded
 /// budget reports the milliseconds still remaining.
-fn budget_to_json(b: &Budget) -> Json {
+pub(crate) fn budget_to_json(b: &Budget) -> Json {
     let mut obj = BTreeMap::new();
     if let Some(t) = b.time {
         obj.insert("secs".into(), Json::Num(t.as_secs_f64()));
@@ -503,7 +503,7 @@ fn budget_to_json(b: &Budget) -> Json {
     Json::Obj(obj)
 }
 
-fn budget_from_json(v: &Json) -> Result<Budget> {
+pub(crate) fn budget_from_json(v: &Json) -> Result<Budget> {
     let obj = v.as_obj().ok_or_else(|| anyhow!("budget must be an object"))?;
     for k in obj.keys() {
         if k != "secs" && k != "evals" && k != "deadline_ms" {
@@ -551,7 +551,7 @@ fn budget_from_json(v: &Json) -> Result<Budget> {
 
 /// u64 from either a JSON number (≤ 2^53) or a decimal string (the full
 /// 64-bit range — derived per-problem seeds use all 64 bits).
-fn json_u64(v: &Json) -> Option<u64> {
+pub(crate) fn json_u64(v: &Json) -> Option<u64> {
     match v {
         Json::Num(n) if *n >= 0.0 && n.fract() == 0.0 && *n <= 9.007_199_254_740_992e15 => {
             Some(*n as u64)

@@ -9,8 +9,14 @@
 //! - **Single-flight coalescing** — identical requests (same problem id,
 //!   backend, strategy, seed, depth, budget) share one tune: the first
 //!   becomes the *leader*, later arrivals attach as followers and receive
-//!   the leader's response with `cache:"coalesced"` provenance and zero
-//!   evals of their own.
+//!   the leader's response with zero evals of their own. Provenance
+//!   precedence is **store > coalesced > fresh**: a follower reports
+//!   `cache:"coalesced"` only when the leader actually ran a tune — when
+//!   the leader itself was answered from the persistent store, every
+//!   follower reports `cache:"store"` too (it received the same store
+//!   record), counts as a store hit, and no coalescing savings are
+//!   claimed (`evals_saved` only accrues evals a follower would
+//!   otherwise have spent on a fresh tune).
 //! - **Admission control and graceful degradation** — the queue is
 //!   bounded (overflow requests are shed with a structured error, never
 //!   buffered without bound), request eval budgets can be clamped, and
@@ -118,9 +124,12 @@ pub struct MetricsSnapshot {
     pub shed: u64,
     /// Responses served degraded (store/transfer fallback under load).
     pub degraded: u64,
-    /// Followers that coalesced onto an identical in-flight tune.
+    /// Followers answered by an identical in-flight *fresh* tune
+    /// (provenance precedence store > coalesced > fresh: followers of a
+    /// store-answered leader count as `store_hits`, not here).
     pub coalesced: u64,
-    /// Responses answered from the persistent store.
+    /// Responses answered from the persistent store (leaders and their
+    /// followers alike).
     pub store_hits: u64,
     /// Lines that failed JSON parsing / request decoding.
     pub malformed: u64,
@@ -130,7 +139,9 @@ pub struct MetricsSnapshot {
     pub clamped: u64,
     /// Backend evaluations consumed by tunes the server ran.
     pub evals_total: u64,
-    /// Evaluations followers would have spent without coalescing.
+    /// Evaluations followers would have spent without coalescing (only
+    /// counted for followers of fresh-tune leaders — a store-answered
+    /// leader spent zero evals, so its followers saved none).
     pub evals_saved: u64,
     /// Requests waiting in the queue right now.
     pub queue_depth: usize,
@@ -458,8 +469,10 @@ impl Inner {
         let mut inflight = self.inflight.lock().expect("inflight poisoned");
         if let Some(k) = &key {
             if let Some(fs) = inflight.get_mut(k) {
+                // Attach as follower. Accounting happens at completion,
+                // where the leader's provenance is known: a follower of a
+                // store-answered leader is a store hit, not a coalesce.
                 fs.push(Follower { id, submitted: job.submitted });
-                self.metrics.coalesced.fetch_add(1, Ordering::Relaxed);
                 return;
             }
         }
@@ -579,7 +592,8 @@ impl Inner {
                 if resp.degraded.is_some() {
                     self.metrics.degraded.fetch_add(1, Ordering::Relaxed);
                 }
-                if resp.cache.as_deref() == Some("store") {
+                let store_led = resp.cache.as_deref() == Some("store");
+                if store_led {
                     self.metrics.store_hits.fetch_add(1, Ordering::Relaxed);
                 }
                 self.emit_response(tx, &resp);
@@ -588,9 +602,19 @@ impl Inner {
                     fr.id = Some(f.id);
                     fr.evals = 0;
                     fr.cache_hits = 0;
-                    fr.cache = Some("coalesced".to_string());
                     fr.wall_secs = f.submitted.elapsed().as_secs_f64();
-                    self.metrics.evals_saved.fetch_add(leader_evals, Ordering::Relaxed);
+                    if store_led {
+                        // Provenance precedence: store > coalesced >
+                        // fresh. The follower received the same store
+                        // record the leader did (fr.cache stays
+                        // "store"), and no savings are claimed — the
+                        // leader spent zero evals.
+                        self.metrics.store_hits.fetch_add(1, Ordering::Relaxed);
+                    } else {
+                        fr.cache = Some("coalesced".to_string());
+                        self.metrics.coalesced.fetch_add(1, Ordering::Relaxed);
+                        self.metrics.evals_saved.fetch_add(leader_evals, Ordering::Relaxed);
+                    }
                     self.emit_response(tx, &fr);
                 }
             }

@@ -4,7 +4,17 @@
 //! `conv2d:28x28x3x3`, `bmm:2x64x64x64`; the `_`-separated form produced
 //! by [`Problem::id`] (`mm_64x80x96`) parses too, so ids round-trip. A
 //! bare extent list (`64x64x64` or the legacy `64,64,64` of `--mnk`)
-//! means plain matmul.
+//! means plain matmul. Fused-epilogue variants carry their flags in
+//! canonical order — `mm_64x80x96+bias`, `conv2d:28x28x3x3+bias+relu` —
+//! matching the `+bias`/`+relu` suffixes of [`Problem::id`], so graph
+//! node keys round-trip too (`mlp` already fuses bias+ReLU and takes no
+//! flags).
+//!
+//! A *graph* spec ([`parse_graph`]) lowers a whole model to a
+//! [`crate::graph::Graph`] of unfused primitives: `mlp:784x512x512x10`
+//! (batched linear layers, bias + ReLU between, bias only on the last)
+//! or `convnet:28x28x3x2` (HxWxKxL: a chain of L KxK conv2d layers with
+//! ReLU between), plus any single-problem spec as a one-node graph.
 //!
 //! A *problem-set* spec additionally accepts every registered workload
 //! suite name (`bmm`, `conv2d`, ... — see [`crate::eval::workloads`]) and
@@ -15,6 +25,7 @@
 //! never panics — so malformed requests bounce off the API boundary.
 
 use crate::eval::workloads;
+use crate::graph::{Graph, Op};
 use crate::ir::Problem;
 use anyhow::{anyhow, bail, Context, Result};
 
@@ -35,9 +46,13 @@ pub fn parse_problem(spec: &str) -> Result<Problem> {
     if spec.is_empty() {
         bail!("empty problem spec");
     }
-    let (kind, dims_str) = match spec.split_once([':', '_']) {
+    let (head, flags) = match spec.split_once('+') {
+        Some((h, f)) => (h, Some(f)),
+        None => (spec, None),
+    };
+    let (kind, dims_str) = match head.split_once([':', '_']) {
         Some((k, d)) => (k, d),
-        None => ("matmul", spec),
+        None => ("matmul", head),
     };
     let dims =
         parse_extents(dims_str).map_err(|e| anyhow!("problem spec {spec:?}: {e}"))?;
@@ -47,7 +62,7 @@ pub fn parse_problem(spec: &str) -> Result<Problem> {
         }
         Ok(())
     };
-    Ok(match kind {
+    let p = match kind {
         "matmul" | "mm" => {
             arity(3, "m x n x k")?;
             Problem::matmul(dims[0], dims[1], dims[2])
@@ -76,7 +91,146 @@ pub fn parse_problem(spec: &str) -> Result<Problem> {
             "problem spec {spec:?}: unknown kind {other:?} \
              (matmul|mm|mmt|mlp|bmm|conv1d|conv2d)"
         ),
-    })
+    };
+    match flags {
+        Some(f) => apply_epilogue_flags(p, kind, f, spec),
+        None => Ok(p),
+    }
+}
+
+/// Apply `+bias`/`+relu` spec suffixes. Flags must appear in canonical
+/// epilogue order (bias before relu, no duplicates) so every
+/// [`Problem::id`] parses back to an identical problem and no two
+/// spellings alias one graph node key.
+fn apply_epilogue_flags(p: Problem, kind: &str, flags: &str, spec: &str) -> Result<Problem> {
+    if kind == "mlp" {
+        bail!(
+            "problem spec {spec:?}: mlp already fuses bias+relu \
+             (epilogue flags are not allowed)"
+        );
+    }
+    let with_bias = |p: Problem| -> Result<Problem> {
+        let d = p
+            .output_dims()
+            .find(|&d| p.out_access().stride(d) == Some(1))
+            .ok_or_else(|| {
+                anyhow!("problem spec {spec:?}: no unit-stride output dim for +bias")
+            })?;
+        Ok(p.with_bias(d))
+    };
+    match flags {
+        "bias" => with_bias(p),
+        "relu" => Ok(p.with_relu()),
+        "bias+relu" => Ok(with_bias(p)?.with_relu()),
+        other => bail!(
+            "problem spec {spec:?}: bad epilogue flags {other:?} \
+             (want +bias, +relu, or +bias+relu in that order)"
+        ),
+    }
+}
+
+/// Lower a *graph* spec to an unfused [`Graph`] (run
+/// [`crate::graph::fuse`] afterwards to fold the epilogues):
+///
+/// - `mlp:W0xW1x...xWn` — n batched linear layers (`batch x W0` input);
+///   every layer is matmul + bias-add, with a ReLU after each except the
+///   last, so both `+bias+relu` and `+bias` fusion shapes are exercised.
+/// - `convnet:HxWxKxL` — L chained KxK conv2d layers over one HxW image
+///   (ReLU between layers; `batch` is ignored). Each layer shrinks the
+///   spatial extents by K-1, which must leave at least 1x1 at the end.
+/// - any single-problem spec — a one-node graph with generated external
+///   inputs (`batch` is ignored).
+pub fn parse_graph(spec: &str, batch: usize) -> Result<Graph> {
+    let spec = spec.trim();
+    if batch == 0 {
+        bail!("graph batch must be >= 1");
+    }
+    if let Some(widths_str) = spec.strip_prefix("mlp:") {
+        let widths =
+            parse_extents(widths_str).map_err(|e| anyhow!("graph spec {spec:?}: {e}"))?;
+        if widths.len() < 2 {
+            bail!("graph spec {spec:?}: mlp takes at least 2 widths (in x hidden... x out)");
+        }
+        let mut g = Graph::new();
+        g.add_input("x", batch * widths[0])?;
+        let mut prev = "x".to_string();
+        let layers = widths.len() - 1;
+        for i in 0..layers {
+            let (wi, wo) = (widths[i], widths[i + 1]);
+            let (wn, bn) = (format!("w{i}"), format!("b{i}"));
+            g.add_input(&wn, wi * wo)?;
+            g.add_input(&bn, wo)?;
+            let mm = format!("fc{i}");
+            g.add_node(
+                &mm,
+                Op::Contract(Problem::matmul(batch, wo, wi)),
+                &[prev.as_str(), wn.as_str()],
+            )?;
+            let biased = format!("fc{i}_bias");
+            g.add_node(&biased, Op::BiasAdd { width: wo }, &[mm.as_str(), bn.as_str()])?;
+            prev = if i + 1 < layers {
+                let act = format!("fc{i}_relu");
+                g.add_node(&act, Op::Relu, &[biased.as_str()])?;
+                act
+            } else {
+                biased
+            };
+        }
+        return Ok(g);
+    }
+    if let Some(rest) = spec.strip_prefix("convnet:") {
+        let dims = parse_extents(rest).map_err(|e| anyhow!("graph spec {spec:?}: {e}"))?;
+        if dims.len() != 4 {
+            bail!("graph spec {spec:?}: convnet takes 4 extents (H x W x K x L)");
+        }
+        let (h, w, k, layers) = (dims[0], dims[1], dims[2], dims[3]);
+        let shrink = layers * (k - 1);
+        if h <= shrink || w <= shrink {
+            bail!(
+                "graph spec {spec:?}: {layers} layers of {k}x{k} conv consume \
+                 {shrink} pixels per side, leaving nothing of {h}x{w}"
+            );
+        }
+        let mut g = Graph::new();
+        g.add_input("img", h * w)?;
+        let mut prev = "img".to_string();
+        let (mut ch, mut cw) = (h, w);
+        for i in 0..layers {
+            let kn = format!("k{i}");
+            g.add_input(&kn, k * k)?;
+            ch -= k - 1;
+            cw -= k - 1;
+            let conv = format!("conv{i}");
+            g.add_node(
+                &conv,
+                Op::Contract(Problem::conv2d(ch, cw, k, k)),
+                &[prev.as_str(), kn.as_str()],
+            )?;
+            prev = if i + 1 < layers {
+                let act = format!("act{i}");
+                g.add_node(&act, Op::Relu, &[conv.as_str()])?;
+                act
+            } else {
+                conv
+            };
+        }
+        return Ok(g);
+    }
+    // Fallback: one contraction as a single-node graph.
+    let p = parse_problem(spec).map_err(|e| {
+        anyhow!("graph spec {spec:?} is neither mlp:..., convnet:..., nor a problem: {e}")
+    })?;
+    let mut g = Graph::new();
+    let [i0, i1] = *p.inputs();
+    g.add_input("in0", p.tensor_len(&i0))?;
+    g.add_input("in1", p.tensor_len(&i1))?;
+    let mut inputs = vec!["in0", "in1"];
+    if let Some(b) = p.bias() {
+        g.add_input("bias", p.tensor_len(b))?;
+        inputs.push("bias");
+    }
+    g.add_node("out", Op::Contract(p), &inputs)?;
+    Ok(g)
 }
 
 /// Parse a problem-*set* spec: a workload suite name, a dataset split, or
@@ -141,19 +295,90 @@ mod tests {
         assert_eq!(parse_problem("conv2d:28x28x3x3").unwrap(), Problem::conv2d(28, 28, 3, 3));
     }
 
+    /// Satellite: `Problem::id` -> spec -> parse is the identity over
+    /// every family *and* every epilogue combination, so graph node keys
+    /// are stable (a fused problem's id must parse back to the same
+    /// fused problem, never to its unfused base).
     #[test]
     fn problem_ids_round_trip() {
-        let samples = [
+        let bases = [
             Problem::matmul(64, 80, 96),
             Problem::matmul_transposed(64, 128, 256),
-            Problem::mlp(32, 512, 512),
             Problem::batched_matmul(4, 128, 128, 128),
             Problem::conv1d(128, 32, 5, 16),
             Problem::conv2d(56, 56, 3, 3),
         ];
-        for p in samples {
-            assert_eq!(parse_problem(&p.id()).unwrap(), p, "{}", p.id());
+        for base in bases {
+            let d = base
+                .output_dims()
+                .find(|&d| base.out_access().stride(d) == Some(1))
+                .unwrap();
+            let variants = [
+                base,
+                base.with_bias(d),
+                base.with_relu(),
+                base.with_bias(d).with_relu(),
+            ];
+            for p in variants {
+                let rt = parse_problem(&p.id()).unwrap();
+                assert_eq!(rt, p, "{}", p.id());
+                assert_eq!(rt.id(), p.id());
+            }
         }
+        // mlp is implicitly fused: its id stays bare and round-trips to
+        // the fused problem; explicit flags on it are rejected.
+        let p = Problem::mlp(32, 512, 512);
+        assert_eq!(p.id(), "mlp_32x512x512");
+        let rt = parse_problem(&p.id()).unwrap();
+        assert_eq!(rt, p);
+        assert!(rt.bias().is_some() && rt.relu());
+        assert!(parse_problem("mlp:32x512x512+bias").is_err());
+        assert!(parse_problem("mlp_32x512x512+bias+relu").is_err());
+    }
+
+    #[test]
+    fn epilogue_flags_must_be_canonical() {
+        for bad in [
+            "mm_64x64x64+relu+bias", // wrong order
+            "mm_64x64x64+bias+bias", // duplicate
+            "mm_64x64x64+relu+relu",
+            "mm_64x64x64+gelu", // unknown epilogue
+            "mm_64x64x64+",     // empty flag
+            "+bias",            // flag with no problem
+        ] {
+            assert!(parse_problem(bad).is_err(), "{bad:?} should be rejected");
+        }
+        // Both separators accept flags.
+        let p = parse_problem("conv2d:28x28x3x3+bias").unwrap();
+        assert_eq!(p.id(), "conv2d_28x28x3x3+bias");
+        assert_eq!(parse_problem("conv2d_28x28x3x3+bias").unwrap(), p);
+    }
+
+    #[test]
+    fn graph_specs_lower_to_validating_graphs() {
+        // 3-layer MLP: relu after layers 0 and 1, bias only on layer 2.
+        let g = parse_graph("mlp:6x8x8x5", 4).unwrap();
+        let s = g.schedule().unwrap();
+        assert_eq!(g.nodes.len(), 3 * 2 + 2); // 3 x (matmul+bias) + 2 relu
+        assert_eq!(s.tensor_len["fc2_bias"], 4 * 5);
+        assert_eq!(g.outputs(), vec!["fc2_bias"]);
+
+        // Convnet: two 3x3 layers over a 12x12 image.
+        let g = parse_graph("convnet:12x12x3x2", 4).unwrap();
+        let s = g.schedule().unwrap();
+        assert_eq!(s.tensor_len["conv1"], 8 * 8);
+        assert_eq!(g.outputs(), vec!["conv1"]);
+
+        // Single-problem fallback, including a fused spec.
+        let g = parse_graph("mm_8x8x8+bias+relu", 1).unwrap();
+        g.schedule().unwrap();
+        assert_eq!(g.nodes.len(), 1);
+        assert_eq!(g.inputs.len(), 3); // in0, in1, bias
+
+        for bad in ["mlp:64", "convnet:4x4x3x2", "convnet:12x12x3", "nope:1x2", ""] {
+            assert!(parse_graph(bad, 4).is_err(), "{bad:?} should be rejected");
+        }
+        assert!(parse_graph("mlp:6x8", 0).is_err(), "batch 0 rejected");
     }
 
     #[test]

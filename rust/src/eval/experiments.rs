@@ -1066,6 +1066,207 @@ pub fn bench_serve(cfg: &EvalCfg, budget_evals: u64) -> Result<String> {
 }
 
 // ---------------------------------------------------------------------------
+// eval graph — whole-model tuning (DESIGN.md §14)
+// ---------------------------------------------------------------------------
+
+/// `eval graph` — whole-model tuning over the registered graph workloads
+/// ([`crate::eval::workloads::graph_specs`]), writing the tracked
+/// `BENCH_graph.json` (schema `bench_graph/v1`). Two comparisons per
+/// graph:
+///
+/// - **fusion** — whole-model latency of the fused graph vs the unfused
+///   graph running the *same* transplanted schedules
+///   (`latency_unfused_ms / latency_fused_ms`): fusion removes whole
+///   memory passes and never adds work, so the ratio sits at or above 1.
+/// - **reuse/quality** — per-node tuned GFLOPS of one graph-wide tune
+///   (shared store, apportioned budget, identical nodes tuned once) vs
+///   tuning every node cold under an even `budget / nodes` split. Each
+///   graph-arm fresh tune gets at least the cold arm's per-node cap, and
+///   greedy search is monotone in its eval budget, so the geomean ratio
+///   is >= 1 by construction — pinned in CI.
+///
+/// Tuning is scored on the deterministic cost model (the latency
+/// measurements run the real executor either way), so the pinned ratios
+/// are reproducible at a fixed seed.
+pub fn bench_graph(cfg: &EvalCfg, budget_evals: u64) -> Result<String> {
+    use crate::api::{BackendChoice, GraphRequest, ServiceCfg, TuneRequest, TuningService};
+    use crate::graph::Op;
+    use crate::store::TuningStore;
+    use crate::util::json::{write_json, Json};
+
+    let backend = BackendChoice::CostModel;
+    let budget_evals = budget_evals.max(1);
+    let mut json_rows = Vec::new();
+    let mut csv = String::from(
+        "graph,spec,batch,nodes,distinct,folds,latency_fused_ms,latency_unfused_ms,\
+         fusion_speedup,gflops_graph,gflops_cold,quality_ratio,evals_graph,evals_cold\n",
+    );
+    let mut md_rows = String::new();
+    let mut fusion_speedups = Vec::new();
+    let mut quality_ratios = Vec::new();
+    for w in crate::eval::workloads::graph_specs() {
+        // Graph-wide arm: one store-backed service, one budget.
+        let svc = TuningService::new(ServiceCfg {
+            seed: cfg.seed,
+            threads: 1,
+            default_params: None,
+            store: Some(TuningStore::in_memory()),
+            ranker: None,
+        });
+        let mut req = GraphRequest::new(w.spec, "greedy2", Budget::evals(budget_evals));
+        req.batch = w.batch;
+        req.backend = backend;
+        req.seed = Some(cfg.seed);
+        let resp = svc.serve_graph(&req)?;
+
+        // Per-node-cold arm: every contraction tuned on a storeless
+        // service under an even budget split — repeats pay full price
+        // (served once per distinct id here purely to save wall time;
+        // the tune is deterministic, so copies would be identical).
+        let (fg, _) = crate::graph::fuse(&api::spec::parse_graph(w.spec, w.batch)?)?;
+        let contracts: Vec<Problem> = fg
+            .nodes
+            .iter()
+            .filter_map(|n| match n.op {
+                Op::Contract(p) => Some(p),
+                _ => None,
+            })
+            .collect();
+        let per_node = (budget_evals / contracts.len().max(1) as u64).max(1);
+        let mut distinct_problems: Vec<Problem> = Vec::new();
+        for p in &contracts {
+            if !distinct_problems.iter().any(|q| q.id() == p.id()) {
+                distinct_problems.push(*p);
+            }
+        }
+        let mut cold_by_id: BTreeMap<String, (f64, u64)> = BTreeMap::new();
+        for p in &distinct_problems {
+            let cold_svc = TuningService::new(ServiceCfg {
+                seed: cfg.seed,
+                threads: 1,
+                default_params: None,
+                store: None,
+                ranker: None,
+            });
+            let mut creq = TuneRequest::new(p.id(), "greedy2", Budget::evals(per_node));
+            creq.seed = Some(cfg.seed);
+            creq.backend = backend;
+            let r = cold_svc.serve(&creq)?;
+            cold_by_id.insert(p.id(), (r.gflops, r.evals));
+        }
+        let cold_gflops: Vec<f64> =
+            contracts.iter().map(|p| cold_by_id[&p.id()].0).collect();
+        let evals_cold: u64 = contracts.iter().map(|p| cold_by_id[&p.id()].1).sum();
+        let graph_gflops: Vec<f64> = resp.nodes.iter().map(|n| n.gflops).collect();
+        let distinct = cold_by_id.len();
+
+        let gflops_graph = stats::geomean(&graph_gflops);
+        let gflops_cold = stats::geomean(&cold_gflops);
+        let quality_ratio = gflops_graph / gflops_cold.max(1e-12);
+        fusion_speedups.push(resp.speedup);
+        quality_ratios.push(quality_ratio);
+        eprintln!(
+            "[graph] {}: fused {:.3}ms vs unfused {:.3}ms ({:.2}x); \
+             graph-tuned {:.1} vs cold {:.1} GFLOPS geomean ({} vs {} evals)",
+            w.name,
+            resp.latency_fused_ms,
+            resp.latency_unfused_ms,
+            resp.speedup,
+            gflops_graph,
+            gflops_cold,
+            resp.evals_total,
+            evals_cold,
+        );
+
+        let _ = writeln!(
+            csv,
+            "{},{},{},{},{distinct},{},{:.5},{:.5},{:.4},{:.3},{:.3},{:.4},{},{evals_cold}",
+            w.name,
+            w.spec,
+            w.batch,
+            contracts.len(),
+            resp.fused_nodes,
+            resp.latency_fused_ms,
+            resp.latency_unfused_ms,
+            resp.speedup,
+            gflops_graph,
+            gflops_cold,
+            quality_ratio,
+            resp.evals_total,
+        );
+        let _ = writeln!(
+            md_rows,
+            "| {} | {} | {distinct} | {} | {:.3} | {:.3} | {:.2}x | {:.1} | {:.1} | \
+             {} / {evals_cold} |",
+            w.name,
+            contracts.len(),
+            resp.fused_nodes,
+            resp.latency_fused_ms,
+            resp.latency_unfused_ms,
+            resp.speedup,
+            gflops_graph,
+            gflops_cold,
+            resp.evals_total,
+        );
+        let mut row = BTreeMap::new();
+        row.insert("graph".to_string(), Json::Str(w.name.to_string()));
+        row.insert("spec".to_string(), Json::Str(w.spec.to_string()));
+        row.insert("batch".to_string(), Json::Num(w.batch as f64));
+        row.insert("nodes".to_string(), Json::Num(contracts.len() as f64));
+        row.insert("distinct".to_string(), Json::Num(distinct as f64));
+        row.insert("folds".to_string(), Json::Num(resp.fused_nodes as f64));
+        row.insert("rejected".to_string(), Json::Num(resp.rejected as f64));
+        row.insert("latency_fused_ms".to_string(), Json::Num(resp.latency_fused_ms));
+        row.insert("latency_unfused_ms".to_string(), Json::Num(resp.latency_unfused_ms));
+        row.insert("fusion_speedup".to_string(), Json::Num(resp.speedup));
+        row.insert("gflops_graph".to_string(), Json::Num(gflops_graph));
+        row.insert("gflops_cold".to_string(), Json::Num(gflops_cold));
+        row.insert("quality_ratio".to_string(), Json::Num(quality_ratio));
+        row.insert("evals_graph".to_string(), Json::Num(resp.evals_total as f64));
+        row.insert("evals_cold".to_string(), Json::Num(evals_cold as f64));
+        row.insert("buffers_tensors".to_string(), Json::Num(resp.buffers_tensors as f64));
+        row.insert(
+            "buffers_allocated".to_string(),
+            Json::Num(resp.buffers_allocated as f64),
+        );
+        json_rows.push(Json::Obj(row));
+    }
+
+    let fusion_geo = stats::geomean(&fusion_speedups);
+    let quality_geo = stats::geomean(&quality_ratios);
+    let mut root = BTreeMap::new();
+    root.insert("schema".to_string(), Json::Str("bench_graph/v1".into()));
+    root.insert("budget_evals".to_string(), Json::Num(budget_evals as f64));
+    root.insert("seed".to_string(), Json::Num(cfg.seed as f64));
+    root.insert("strategy".to_string(), Json::Str("greedy2".into()));
+    root.insert("rows".to_string(), Json::Arr(json_rows));
+    root.insert("fusion_speedup_geomean".to_string(), Json::Num(fusion_geo));
+    root.insert("quality_ratio_geomean".to_string(), Json::Num(quality_geo));
+    let mut json_text = String::new();
+    write_json(&Json::Obj(root), &mut json_text);
+    json_text.push('\n');
+    std::fs::write("BENCH_graph.json", &json_text)?;
+    write_out(&cfg.out_dir, "graph_bench.csv", &csv)?;
+
+    let md = format!(
+        "# Whole-model graph tuning (budget {budget_evals} evals per graph, \
+         cost-model scored)\n\n\
+         | graph | nodes | distinct | folds | fused [ms] | unfused [ms] | fusion | \
+         tuned [GFLOPS] | cold [GFLOPS] | evals graph/cold |\n\
+         |---|---|---|---|---|---|---|---|---|---|\n\
+         {md_rows}\n\
+         - fusion speedup geomean: **{fusion_geo:.2}x** (fused vs unfused \
+         whole-model latency, same schedules)\n\
+         - graph-tuned vs per-node-cold quality: **{quality_geo:.3}x** geomean \
+         GFLOPS (>= 1: schedule reuse + budget apportioning never tunes worse \
+         than cold per-node splits)\n\n\
+         BENCH_graph.json written (schema bench_graph/v1).\n",
+    );
+    write_out(&cfg.out_dir, "graph_bench.md", &md)?;
+    Ok(md)
+}
+
+// ---------------------------------------------------------------------------
 // Policy training with seed selection
 // ---------------------------------------------------------------------------
 

@@ -102,6 +102,30 @@ pub fn smoke_problem(name: &str) -> Option<Problem> {
     })
 }
 
+/// A named whole-model graph workload for `eval graph` and the CI graph
+/// smoke: a spec `api::spec::parse_graph` lowers plus the batch size to
+/// lower it with.
+pub struct GraphSpec {
+    /// Registry name (rows of `BENCH_graph.json`).
+    pub name: &'static str,
+    /// Graph spec string (`mlp:...`, `convnet:...`).
+    pub spec: &'static str,
+    /// Batch size the spec lowers with.
+    pub batch: usize,
+}
+
+/// The graph workloads `eval graph` measures: small MLP towers (2 and 4
+/// layers — the 4-layer tower repeats a width so schedule reuse between
+/// structurally identical nodes is exercised) and a small convnet. Sized
+/// so a full fused-vs-unfused measurement stays in CI time.
+pub fn graph_specs() -> Vec<GraphSpec> {
+    vec![
+        GraphSpec { name: "mlp2", spec: "mlp:64x96x48", batch: 32 },
+        GraphSpec { name: "mlp4", spec: "mlp:64x64x64x64x48", batch: 32 },
+        GraphSpec { name: "convnet", spec: "convnet:28x28x3x2", batch: 1 },
+    ]
+}
+
 fn grid3(vals: &[usize], ctor: fn(usize, usize, usize) -> Problem) -> Vec<Problem> {
     let mut out = Vec::with_capacity(vals.len().pow(3));
     for &m in vals {
@@ -217,6 +241,23 @@ mod tests {
         }
         assert!(default_problem("nope").is_none());
         assert!(smoke_problem("nope").is_none());
+    }
+
+    #[test]
+    fn graph_specs_lower_to_valid_graphs() {
+        let specs = graph_specs();
+        assert_eq!(
+            specs.iter().map(|g| g.name).collect::<Vec<_>>(),
+            ["mlp2", "mlp4", "convnet"]
+        );
+        for g in specs {
+            let graph = crate::api::spec::parse_graph(g.spec, g.batch)
+                .unwrap_or_else(|e| panic!("{}: {e}", g.name));
+            graph.schedule().unwrap_or_else(|e| panic!("{}: {e}", g.name));
+            // Fusion finds at least one legal fold in every workload.
+            let (_, report) = crate::graph::fuse(&graph).unwrap();
+            assert!(!report.fused.is_empty(), "{}: nothing fused", g.name);
+        }
     }
 
     #[test]

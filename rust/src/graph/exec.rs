@@ -1,0 +1,420 @@
+//! Compiled whole-graph execution: tuned nodes run back-to-back through
+//! the single-problem executor, with intermediate-buffer reuse.
+//!
+//! [`CompiledGraph::compile`] lowers a validated [`Graph`] against a map
+//! of tuned schedules (one [`Nest`] per `Problem::id`, nodes without a
+//! tuned schedule fall back to [`Nest::initial`]) into a flat step list
+//! in topological order. Tensors live in **slots**: external inputs get
+//! pinned slots filled deterministically from the graph seed and the
+//! tensor name, while intermediate tensors share slots via a liveness
+//! scan — a slot is recycled once its tensor's last consumer has run,
+//! and a node may write in place over its first input's dying slot
+//! (safe: contractions stage operands into a [`Workspace`] before
+//! writing back, elementwise steps are index-aligned). [`buffers`]
+//! reports the tensor count next to the allocated slot count so callers
+//! can see the reuse.
+//!
+//! [`buffers`]: CompiledGraph::buffers
+
+use super::{Graph, Op};
+use crate::backend::executor::{plan, run_once_threaded, ExecPlan, Workspace};
+use crate::backend::schedule::lower;
+use crate::ir::Nest;
+use crate::util::rng::Pcg32;
+use anyhow::{ensure, Result};
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+/// One executable step (a graph node bound to buffer slots).
+struct Step {
+    /// Name of the produced tensor (for error messages / lookups).
+    name: String,
+    kind: StepKind,
+    /// Slot index per node input, in op order.
+    ins: Vec<usize>,
+    /// Element count per node input.
+    in_lens: Vec<usize>,
+    /// Slot the output is written to (may equal `ins[0]`).
+    out: usize,
+    /// Element count of the output.
+    out_len: usize,
+}
+
+enum StepKind {
+    /// A contraction: operands are staged into the workspace, the tuned
+    /// plan runs, and the result is copied to the output slot.
+    Contract { plan: ExecPlan, ws: Workspace },
+    /// Broadcast bias add; the bias vector is staged into `scratch` so
+    /// the output may alias the `x` slot.
+    BiasAdd { scratch: Vec<f32> },
+    /// Elementwise rectifier.
+    Relu,
+}
+
+/// A graph lowered to an executable step list over shared buffer slots.
+/// Build with [`CompiledGraph::compile`], run with [`CompiledGraph::run`]
+/// or [`CompiledGraph::measure`].
+pub struct CompiledGraph {
+    steps: Vec<Step>,
+    slots: Vec<Vec<f32>>,
+    /// `(tensor name, slot, len)` of every graph output.
+    outs: Vec<(String, usize, usize)>,
+    threads: usize,
+    flops: f64,
+    tensors: usize,
+}
+
+/// FNV-1a over a tensor name — mixed into the graph seed so every
+/// external input gets distinct, reproducible contents.
+fn fnv64(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+fn fill(rng: &mut Pcg32, len: usize) -> Vec<f32> {
+    (0..len).map(|_| rng.next_f32() * 2.0 - 1.0).collect()
+}
+
+impl CompiledGraph {
+    /// Lower `g` for execution. `schedules` maps `Problem::id` to a
+    /// tuned [`Nest`] (missing ids fall back to the initial nest);
+    /// `seed` fixes the external input contents; `threads` is the
+    /// worker-thread count passed to the contraction executor.
+    pub fn compile(
+        g: &Graph,
+        schedules: &BTreeMap<String, Nest>,
+        seed: u64,
+        threads: usize,
+    ) -> Result<CompiledGraph> {
+        let sched = g.schedule()?;
+
+        // Topo position of each tensor's last consumer; graph outputs
+        // (and external inputs) are never released.
+        let mut last_use: BTreeMap<&str, usize> = BTreeMap::new();
+        for (pos, &ni) in sched.order.iter().enumerate() {
+            for i in &g.nodes[ni].inputs {
+                last_use.insert(i.as_str(), pos);
+            }
+        }
+
+        let mut slot_of: BTreeMap<&str, usize> = BTreeMap::new();
+        let mut slot_size: Vec<usize> = Vec::new();
+        let mut pinned: Vec<bool> = Vec::new();
+        let mut slots: Vec<Vec<f32>> = Vec::new();
+        for t in &g.inputs {
+            slot_of.insert(t.name.as_str(), slots.len());
+            slot_size.push(t.len);
+            pinned.push(true);
+            let mut rng = Pcg32::new(seed ^ fnv64(&t.name));
+            slots.push(fill(&mut rng, t.len));
+        }
+
+        let mut steps = Vec::with_capacity(sched.order.len());
+        let mut free: Vec<usize> = Vec::new();
+        let mut flops = 0.0f64;
+        for (pos, &ni) in sched.order.iter().enumerate() {
+            let n = &g.nodes[ni];
+            let out_len = sched.tensor_len[&n.name];
+            let ins: Vec<usize> = n.inputs.iter().map(|i| slot_of[i.as_str()]).collect();
+            let in_lens: Vec<usize> =
+                n.inputs.iter().map(|i| sched.tensor_len[i.as_str()]).collect();
+
+            // Output slot: write in place over the first input if this
+            // node is its last consumer, else recycle a freed slot, else
+            // allocate.
+            let dies_here =
+                |t: &str| last_use.get(t) == Some(&pos) && !pinned[slot_of[t]];
+            let out = if dies_here(&n.inputs[0]) {
+                ins[0]
+            } else if let Some(s) = free.pop() {
+                s
+            } else {
+                slot_size.push(0);
+                pinned.push(false);
+                slots.push(Vec::new());
+                slots.len() - 1
+            };
+            slot_size[out] = slot_size[out].max(out_len);
+            for i in &n.inputs {
+                let s = slot_of[i.as_str()];
+                if dies_here(i) && s != out && !free.contains(&s) {
+                    free.push(s);
+                }
+            }
+            slot_of.insert(n.name.as_str(), out);
+
+            let kind = match &n.op {
+                Op::Contract(p) => {
+                    let nest = match schedules.get(&p.id()) {
+                        Some(nest) => {
+                            ensure!(
+                                nest.problem == *p,
+                                "schedule for {} was built for a different problem",
+                                p.id()
+                            );
+                            nest.clone()
+                        }
+                        None => Nest::initial(*p),
+                    };
+                    flops += p.flops() as f64;
+                    StepKind::Contract {
+                        plan: plan(lower(&nest)),
+                        ws: Workspace::new(*p, seed ^ fnv64(&n.name)),
+                    }
+                }
+                Op::BiasAdd { width } => StepKind::BiasAdd { scratch: vec![0.0; *width] },
+                Op::Relu => StepKind::Relu,
+            };
+            steps.push(Step { name: n.name.clone(), kind, ins, in_lens, out, out_len });
+        }
+
+        for (s, &size) in slots.iter_mut().zip(slot_size.iter()) {
+            s.resize(size, 0.0);
+        }
+        let outs = g
+            .outputs()
+            .into_iter()
+            .map(|o| (o.to_string(), slot_of[o], sched.tensor_len[o]))
+            .collect();
+        Ok(CompiledGraph {
+            steps,
+            slots,
+            outs,
+            threads: threads.max(1),
+            flops,
+            tensors: g.inputs.len() + g.nodes.len(),
+        })
+    }
+
+    /// One forward pass: every step runs once, in topological order.
+    pub fn run(&mut self) {
+        let threads = self.threads;
+        let slots = &mut self.slots;
+        for step in &mut self.steps {
+            match &mut step.kind {
+                StepKind::Contract { plan, ws } => {
+                    ws.inputs[0].copy_from_slice(&slots[step.ins[0]][..step.in_lens[0]]);
+                    ws.inputs[1].copy_from_slice(&slots[step.ins[1]][..step.in_lens[1]]);
+                    if step.ins.len() == 3 {
+                        ws.bias.copy_from_slice(&slots[step.ins[2]][..step.in_lens[2]]);
+                    }
+                    run_once_threaded(plan, ws, threads);
+                    slots[step.out][..step.out_len].copy_from_slice(&ws.c);
+                }
+                StepKind::BiasAdd { scratch } => {
+                    let w = step.in_lens[1];
+                    scratch.copy_from_slice(&slots[step.ins[1]][..w]);
+                    if step.out != step.ins[0] {
+                        let (dst, src) = pair_mut(slots, step.out, step.ins[0]);
+                        dst[..step.out_len].copy_from_slice(&src[..step.out_len]);
+                    }
+                    let out = &mut slots[step.out];
+                    for i in 0..step.out_len {
+                        out[i] += scratch[i % w];
+                    }
+                }
+                StepKind::Relu => {
+                    if step.out != step.ins[0] {
+                        let (dst, src) = pair_mut(slots, step.out, step.ins[0]);
+                        dst[..step.out_len].copy_from_slice(&src[..step.out_len]);
+                    }
+                    for v in &mut slots[step.out][..step.out_len] {
+                        *v = v.max(0.0);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Whole-model wall-clock: one untimed warm-up pass, then the
+    /// fastest of `repeats` timed passes, in seconds.
+    pub fn measure(&mut self, repeats: usize) -> f64 {
+        self.run();
+        let mut best = f64::INFINITY;
+        for _ in 0..repeats.max(1) {
+            let t0 = Instant::now();
+            self.run();
+            best = best.min(t0.elapsed().as_secs_f64());
+        }
+        best
+    }
+
+    /// Contents of the graph output tensor `name` after the last
+    /// [`run`](CompiledGraph::run).
+    pub fn output(&self, name: &str) -> Option<&[f32]> {
+        self.outs
+            .iter()
+            .find(|(n, _, _)| n == name)
+            .map(|&(_, s, l)| &self.slots[s][..l])
+    }
+
+    /// Graph output tensor names, in node insertion order.
+    pub fn output_names(&self) -> Vec<&str> {
+        self.outs.iter().map(|(n, _, _)| n.as_str()).collect()
+    }
+
+    /// `(tensors, allocated)`: total tensor count (inputs + node
+    /// outputs) vs distinct buffer slots actually allocated — the gap is
+    /// the liveness-based reuse.
+    pub fn buffers(&self) -> (usize, usize) {
+        (self.tensors, self.slots.len())
+    }
+
+    /// Total floating-point work of one forward pass (contraction
+    /// FLOPs; elementwise epilogues excluded, matching `Problem::flops`).
+    pub fn flops(&self) -> f64 {
+        self.flops
+    }
+
+    /// Names of the compiled steps, in execution order.
+    pub fn step_names(&self) -> Vec<&str> {
+        self.steps.iter().map(|s| s.name.as_str()).collect()
+    }
+}
+
+/// Disjoint `(dst, src)` borrows of two different slots.
+fn pair_mut(v: &mut [Vec<f32>], dst: usize, src: usize) -> (&mut Vec<f32>, &Vec<f32>) {
+    debug_assert_ne!(dst, src);
+    if dst < src {
+        let (a, b) = v.split_at_mut(src);
+        (&mut a[dst], &b[0])
+    } else {
+        let (a, b) = v.split_at_mut(dst);
+        (&mut b[0], &a[src])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::fuse;
+    use crate::ir::Problem;
+
+    /// 2-layer MLP from unfused primitives (same shape as the mod tests).
+    fn mlp_graph() -> Graph {
+        let (b, i, h, o) = (4usize, 6usize, 8usize, 5usize);
+        let mut g = Graph::new();
+        g.add_input("x", b * i).unwrap();
+        g.add_input("w0", i * h).unwrap();
+        g.add_input("b0", h).unwrap();
+        g.add_input("w1", h * o).unwrap();
+        g.add_input("b1", o).unwrap();
+        g.add_node("fc0", Op::Contract(Problem::matmul(b, h, i)), &["x", "w0"]).unwrap();
+        g.add_node("fc0_bias", Op::BiasAdd { width: h }, &["fc0", "b0"]).unwrap();
+        g.add_node("fc0_relu", Op::Relu, &["fc0_bias"]).unwrap();
+        g.add_node("fc1", Op::Contract(Problem::matmul(b, o, h)), &["fc0_relu", "w1"])
+            .unwrap();
+        g.add_node("fc1_bias", Op::BiasAdd { width: o }, &["fc1", "b1"]).unwrap();
+        g
+    }
+
+    fn external(name: &str, seed: u64, len: usize) -> Vec<f32> {
+        let mut rng = Pcg32::new(seed ^ fnv64(name));
+        fill(&mut rng, len)
+    }
+
+    fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+        assert_eq!(a.len(), b.len());
+        a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+    }
+
+    #[test]
+    fn matches_naive_composition() {
+        let seed = 11u64;
+        let mut cg =
+            CompiledGraph::compile(&mlp_graph(), &BTreeMap::new(), seed, 1).unwrap();
+        cg.run();
+
+        // Recompute the model with naive loops over the same inputs.
+        let (b, i, h, o) = (4usize, 6usize, 8usize, 5usize);
+        let x = external("x", seed, b * i);
+        let w0 = external("w0", seed, i * h);
+        let b0 = external("b0", seed, h);
+        let w1 = external("w1", seed, h * o);
+        let b1 = external("b1", seed, o);
+        let mut h0 = vec![0.0f32; b * h];
+        for r in 0..b {
+            for c in 0..h {
+                let mut acc = 0.0f32;
+                for k in 0..i {
+                    acc += x[r * i + k] * w0[k * h + c];
+                }
+                h0[r * h + c] = (acc + b0[c]).max(0.0);
+            }
+        }
+        let mut y = vec![0.0f32; b * o];
+        for r in 0..b {
+            for c in 0..o {
+                let mut acc = 0.0f32;
+                for k in 0..h {
+                    acc += h0[r * h + k] * w1[k * o + c];
+                }
+                y[r * o + c] = acc + b1[c];
+            }
+        }
+        let got = cg.output("fc1_bias").expect("graph output");
+        assert!(max_abs_diff(got, &y) < 1e-3);
+    }
+
+    #[test]
+    fn fused_and_unfused_agree_across_thread_counts() {
+        let g = mlp_graph();
+        let (fg, report) = fuse(&g).unwrap();
+        assert_eq!(report.fused.len(), 3);
+        let mut base = CompiledGraph::compile(&g, &BTreeMap::new(), 7, 1).unwrap();
+        base.run();
+        let want = base.output("fc1_bias").unwrap().to_vec();
+        for threads in [1usize, 2, 4] {
+            let mut cg = CompiledGraph::compile(&fg, &BTreeMap::new(), 7, threads).unwrap();
+            cg.run();
+            // Fusion preserves output tensor names.
+            let got = cg.output("fc1_bias").expect("fused graph output");
+            assert!(max_abs_diff(got, &want) < 1e-3, "threads={threads}");
+            // The threaded contraction merge is chunk-ordered, so the
+            // fused model is bit-identical across thread counts.
+            let mut one = CompiledGraph::compile(&fg, &BTreeMap::new(), 7, 1).unwrap();
+            one.run();
+            assert_eq!(got, one.output("fc1_bias").unwrap());
+        }
+    }
+
+    #[test]
+    fn tuned_schedules_apply_per_problem_id() {
+        let g = mlp_graph();
+        let p0 = Problem::matmul(4, 8, 6);
+        let mut nest = Nest::initial(p0);
+        nest.cursor = 0;
+        nest.split(2).unwrap();
+        let mut schedules = BTreeMap::new();
+        schedules.insert(p0.id(), nest);
+        let mut cg = CompiledGraph::compile(&g, &schedules, 7, 1).unwrap();
+        let mut base = CompiledGraph::compile(&g, &BTreeMap::new(), 7, 1).unwrap();
+        cg.run();
+        base.run();
+        assert!(max_abs_diff(
+            cg.output("fc1_bias").unwrap(),
+            base.output("fc1_bias").unwrap()
+        ) < 1e-3);
+
+        // A schedule keyed to an id it was not built for is rejected.
+        let mut bad = BTreeMap::new();
+        bad.insert(Problem::matmul(4, 5, 8).id(), Nest::initial(p0));
+        assert!(CompiledGraph::compile(&g, &bad, 7, 1).is_err());
+    }
+
+    #[test]
+    fn intermediate_buffers_are_reused() {
+        let cg = CompiledGraph::compile(&mlp_graph(), &BTreeMap::new(), 7, 1).unwrap();
+        let (tensors, allocated) = cg.buffers();
+        assert_eq!(tensors, 10); // 5 inputs + 5 node outputs
+        // The whole intermediate chain runs in place over one slot: the
+        // 5 pinned input slots plus a single recycled intermediate.
+        assert_eq!(allocated, 6);
+        assert!(cg.flops() > 0.0);
+        assert_eq!(cg.step_names().len(), 5);
+    }
+}

@@ -1,0 +1,363 @@
+//! Epilogue-fusion rewrite: fold elementwise ops into the write-back
+//! epilogue of the contraction that feeds them.
+//!
+//! The single-problem IR already executes a fused epilogue — the
+//! write-back nest applies `bias` / `relu` from the problem's access
+//! maps ([`crate::backend::executor`]), historically populated only by
+//! the hardcoded [`Problem::mlp`] constructor. This pass generalizes
+//! that: any [`Op::BiasAdd`] / [`Op::Relu`] node directly downstream of
+//! an [`Op::Contract`] is folded into the contraction via
+//! [`Problem::with_bias`] / [`Problem::with_relu`] when the **legality
+//! predicate** holds:
+//!
+//! - the consumed tensor is produced by a contraction (elementwise
+//!   chains fold bottom-up until they reach one);
+//! - the producer's output has exactly **one consumer** — folding would
+//!   otherwise change what the second consumer reads;
+//! - the epilogue slot is free *in epilogue order* (bias applies before
+//!   ReLU, so a bias-add cannot fold into a producer already carrying a
+//!   ReLU, and no slot folds twice);
+//! - the bias width matches the extent of the producer's unique
+//!   unit-stride output dim, over a dense output layout — the exact
+//!   condition under which `out[i] += bias[i % width]` equals the
+//!   access-map epilogue `C[idx] = T[idx] + bias[idx_d]`.
+//!
+//! Every illegal candidate is reported with a typed [`FusionReject`];
+//! contractions consuming other contractions are reported as
+//! [`FusionReject::ReductionConsumer`] (a contraction *reduces* — it is
+//! never an elementwise epilogue).
+
+use super::{Graph, Node, Op};
+use crate::ir::{Dim, Problem};
+use anyhow::Result;
+
+/// Why a fusion candidate was rejected (the legality predicate's typed
+/// complement).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FusionReject {
+    /// The consumed tensor is an external input or the output of an
+    /// elementwise node that itself could not fold — there is no
+    /// contraction to host the epilogue.
+    NoContractProducer,
+    /// The producer's output feeds more than one consumer edge; folding
+    /// would steal the tensor from the other consumers.
+    MultiConsumer,
+    /// The producer already carries this epilogue, or carries a ReLU
+    /// while a bias-add wants in (epilogue order is bias, then ReLU).
+    EpilogueOccupied,
+    /// The bias width does not equal the extent of the producer's unique
+    /// unit-stride output dim over a dense output (broadcast shapes
+    /// disagree).
+    DimMismatch,
+    /// The consumer is itself a reducing contraction, not an elementwise
+    /// op — contractions cannot ride another contraction's write-back.
+    ReductionConsumer,
+}
+
+impl std::fmt::Display for FusionReject {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            FusionReject::NoContractProducer => "no contraction producer to fold into",
+            FusionReject::MultiConsumer => "producer output has multiple consumers",
+            FusionReject::EpilogueOccupied => "producer epilogue slot already occupied",
+            FusionReject::DimMismatch => "bias width does not match the output dim",
+            FusionReject::ReductionConsumer => "consumer is a reducing contraction",
+        };
+        f.write_str(s)
+    }
+}
+
+/// One successful fold.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FusionEvent {
+    /// Name of the contraction node that absorbed the epilogue (its
+    /// pre-fold name; the fused node is renamed to `folded`).
+    pub into: String,
+    /// Name of the folded elementwise node — and of the fused node after
+    /// the rewrite, so downstream edges keep resolving.
+    pub folded: String,
+    /// Which epilogue slot was filled (`"bias"` or `"relu"`).
+    pub epilogue: &'static str,
+}
+
+/// What the rewrite did: the folds applied, and every candidate left
+/// unfused with its typed reason.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FusionReport {
+    /// Applied folds, in application order.
+    pub fused: Vec<FusionEvent>,
+    /// `(node name, reason)` for every remaining illegal candidate.
+    pub rejected: Vec<(String, FusionReject)>,
+}
+
+/// Run the rewrite to fixpoint on a copy of `g`. The input graph must
+/// validate ([`Graph::schedule`]); the rewritten graph revalidates by
+/// construction and is returned with a [`FusionReport`]. Deterministic:
+/// candidates are attempted in node insertion order, one fold per
+/// iteration.
+pub fn fuse(g: &Graph) -> Result<(Graph, FusionReport)> {
+    g.schedule()?;
+    let mut g = g.clone();
+    let mut report = FusionReport::default();
+    loop {
+        let mut rejects: Vec<(String, FusionReject)> = Vec::new();
+        let mut fold: Option<(usize, usize, Option<Dim>)> = None;
+        for (eidx, node) in g.nodes.iter().enumerate() {
+            if matches!(node.op, Op::Contract(_)) {
+                continue;
+            }
+            match candidate(&g, node) {
+                Ok((pidx, d)) => {
+                    fold = Some((eidx, pidx, d));
+                    break;
+                }
+                Err(rej) => rejects.push((node.name.clone(), rej)),
+            }
+        }
+        let Some((eidx, pidx, d)) = fold else {
+            // Fixpoint: this round's elementwise rejects are final. Add
+            // the contract-consumes-contract edges, also final.
+            for node in &g.nodes {
+                if !matches!(node.op, Op::Contract(_)) {
+                    continue;
+                }
+                if node.inputs.iter().any(|i| {
+                    matches!(g.node(i), Some(Node { op: Op::Contract(_), .. }))
+                }) {
+                    rejects.push((node.name.clone(), FusionReject::ReductionConsumer));
+                }
+            }
+            report.rejected = rejects;
+            debug_assert!(g.schedule().is_ok(), "fused graph must revalidate");
+            return Ok((g, report));
+        };
+        let enode = g.nodes[eidx].clone();
+        let pname = g.nodes[pidx].name.clone();
+        let Op::Contract(p) = g.nodes[pidx].op else { unreachable!("candidate checked") };
+        let (fused_p, epilogue) = match enode.op {
+            Op::BiasAdd { .. } => (p.with_bias(d.expect("bias fold carries a dim")), "bias"),
+            Op::Relu => (p.with_relu(), "relu"),
+            Op::Contract(_) => unreachable!("contract nodes are never fold candidates"),
+        };
+        let mut inputs = g.nodes[pidx].inputs.clone();
+        if matches!(enode.op, Op::BiasAdd { .. }) {
+            inputs.push(enode.inputs[1].clone());
+        }
+        // The fused node takes the folded node's name so downstream
+        // consumers keep resolving; the producer's own output name dies
+        // with the fold (single-consumer guarantees nobody else read it).
+        g.nodes[pidx] =
+            Node { name: enode.name.clone(), op: Op::Contract(fused_p), inputs };
+        g.nodes.remove(eidx);
+        report.fused.push(FusionEvent { into: pname, folded: enode.name, epilogue });
+    }
+}
+
+/// Check one elementwise node against the legality predicate. Returns
+/// the producer's node index (plus the bias broadcast dim for bias-add).
+fn candidate(g: &Graph, node: &Node) -> std::result::Result<(usize, Option<Dim>), FusionReject> {
+    let x = &node.inputs[0];
+    let Some(pidx) = g.nodes.iter().position(|n| n.name == *x) else {
+        return Err(FusionReject::NoContractProducer); // external input
+    };
+    let Op::Contract(p) = g.nodes[pidx].op else {
+        return Err(FusionReject::NoContractProducer); // unfoldable elementwise chain
+    };
+    if g.consumer_count(x) != 1 {
+        return Err(FusionReject::MultiConsumer);
+    }
+    match node.op {
+        Op::BiasAdd { width } => {
+            if p.bias().is_some() || p.relu() {
+                return Err(FusionReject::EpilogueOccupied);
+            }
+            let d = unit_output_dim(&p).ok_or(FusionReject::DimMismatch)?;
+            if p.extent(d) != width {
+                return Err(FusionReject::DimMismatch);
+            }
+            Ok((pidx, Some(d)))
+        }
+        Op::Relu => {
+            if p.relu() {
+                return Err(FusionReject::EpilogueOccupied);
+            }
+            Ok((pidx, None))
+        }
+        Op::Contract(_) => unreachable!("filtered by caller"),
+    }
+}
+
+/// The unique unit-stride output dim of a dense output layout — the dim
+/// a broadcast bias rides in the write-back epilogue. `None` when the
+/// layout has no (or no unique) such dim, or holes (then `i % width`
+/// and the access-map epilogue disagree and fusion is illegal).
+fn unit_output_dim(p: &Problem) -> Option<Dim> {
+    let mut units = p.output_dims().filter(|&d| p.out_access().stride(d) == Some(1));
+    let d = units.next()?;
+    if units.next().is_some() {
+        return None;
+    }
+    let dense = p.out_len() == p.output_dims().map(|dd| p.extent(dd)).product::<usize>();
+    dense.then_some(d)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn contract(g: &Graph, name: &str) -> Problem {
+        match g.node(name).unwrap_or_else(|| panic!("node {name}")).op {
+            Op::Contract(p) => p,
+            ref o => panic!("{name} is {}", o.tag()),
+        }
+    }
+
+    /// matmul -> bias -> relu chain (one MLP layer, unfused).
+    fn layer_graph() -> Graph {
+        let mut g = Graph::new();
+        g.add_input("x", 4 * 6).unwrap();
+        g.add_input("w", 6 * 8).unwrap();
+        g.add_input("b", 8).unwrap();
+        g.add_node("mm", Op::Contract(Problem::matmul(4, 8, 6)), &["x", "w"]).unwrap();
+        g.add_node("biased", Op::BiasAdd { width: 8 }, &["mm", "b"]).unwrap();
+        g.add_node("act", Op::Relu, &["biased"]).unwrap();
+        g
+    }
+
+    #[test]
+    fn folds_bias_then_relu_into_one_contraction() {
+        let (f, report) = fuse(&layer_graph()).unwrap();
+        assert_eq!(report.fused.len(), 2);
+        assert_eq!(report.fused[0].epilogue, "bias");
+        assert_eq!(report.fused[1].epilogue, "relu");
+        assert!(report.rejected.is_empty(), "{:?}", report.rejected);
+        assert_eq!(f.nodes.len(), 1);
+        let p = contract(&f, "act");
+        assert!(p.bias().is_some() && p.relu());
+        assert_eq!(p.id(), "mm_4x8x6+bias+relu");
+        // The fused node consumes the bias tensor as its third input.
+        assert_eq!(f.node("act").unwrap().inputs, vec!["x", "w", "b"]);
+        f.schedule().unwrap();
+    }
+
+    #[test]
+    fn multi_consumer_producer_is_rejected() {
+        let mut g = layer_graph();
+        // A second consumer of the matmul output blocks the bias fold
+        // (and transitively the relu fold).
+        g.add_node("probe", Op::Relu, &["mm"]).unwrap();
+        let (f, report) = fuse(&g).unwrap();
+        assert_eq!(contract(&f, "mm").id(), "mm_4x8x6");
+        assert!(
+            report.rejected.contains(&("biased".into(), FusionReject::MultiConsumer)),
+            "{:?}",
+            report.rejected
+        );
+        assert!(
+            report.rejected.contains(&("probe".into(), FusionReject::MultiConsumer)),
+            "{:?}",
+            report.rejected
+        );
+    }
+
+    #[test]
+    fn reduction_consumer_and_no_producer_are_typed_rejects() {
+        // Two back-to-back matmuls: the second is a reducing consumer.
+        let mut g = Graph::new();
+        g.add_input("x", 4 * 6).unwrap();
+        g.add_input("w0", 6 * 8).unwrap();
+        g.add_input("w1", 8 * 5).unwrap();
+        g.add_node("m0", Op::Contract(Problem::matmul(4, 8, 6)), &["x", "w0"]).unwrap();
+        g.add_node("m1", Op::Contract(Problem::matmul(4, 5, 8)), &["m0", "w1"]).unwrap();
+        // A relu on an external input has no producer at all.
+        g.add_node("act", Op::Relu, &["x"]).unwrap();
+        let (_, report) = fuse(&g).unwrap();
+        assert!(report.fused.is_empty());
+        assert!(
+            report.rejected.contains(&("m1".into(), FusionReject::ReductionConsumer)),
+            "{:?}",
+            report.rejected
+        );
+        assert!(
+            report.rejected.contains(&("act".into(), FusionReject::NoContractProducer)),
+            "{:?}",
+            report.rejected
+        );
+    }
+
+    #[test]
+    fn dim_mismatch_and_occupied_epilogues_are_rejected() {
+        // Bias width 4: it divides the 32-element output, so the graph
+        // validates — but 4 != n = 8, so the fold is a DimMismatch.
+        let mut g = Graph::new();
+        g.add_input("x", 4 * 6).unwrap();
+        g.add_input("w", 6 * 8).unwrap();
+        g.add_input("b", 4).unwrap();
+        g.add_node("mm", Op::Contract(Problem::matmul(4, 8, 6)), &["x", "w"]).unwrap();
+        g.add_node("biased", Op::BiasAdd { width: 4 }, &["mm", "b"]).unwrap();
+        let (f, report) = fuse(&g).unwrap();
+        assert_eq!(contract(&f, "mm").id(), "mm_4x8x6");
+        assert_eq!(report.rejected, vec![("biased".into(), FusionReject::DimMismatch)]);
+
+        // Relu-then-bias order: the relu folds, then the bias-add finds
+        // the relu slot occupied (bias must apply before relu).
+        let mut g = Graph::new();
+        g.add_input("x", 4 * 6).unwrap();
+        g.add_input("w", 6 * 8).unwrap();
+        g.add_input("b", 8).unwrap();
+        g.add_node("mm", Op::Contract(Problem::matmul(4, 8, 6)), &["x", "w"]).unwrap();
+        g.add_node("act", Op::Relu, &["mm"]).unwrap();
+        g.add_node("biased", Op::BiasAdd { width: 8 }, &["act", "b"]).unwrap();
+        let (f, report) = fuse(&g).unwrap();
+        assert_eq!(report.fused.len(), 1);
+        assert_eq!(report.fused[0].epilogue, "relu");
+        assert_eq!(
+            report.rejected,
+            vec![("biased".into(), FusionReject::EpilogueOccupied)]
+        );
+        assert!(contract(&f, "act").relu());
+        assert!(contract(&f, "act").bias().is_none());
+
+        // An mlp contraction arrives pre-fused: a further relu is
+        // rejected as occupied.
+        let mut g = Graph::new();
+        let p = Problem::mlp(4, 8, 6);
+        g.add_input("x", 4 * 6).unwrap();
+        g.add_input("w", 6 * 8).unwrap();
+        g.add_input("b", 8).unwrap();
+        g.add_node("mm", Op::Contract(p), &["x", "w", "b"]).unwrap();
+        g.add_node("act", Op::Relu, &["mm"]).unwrap();
+        let (_, report) = fuse(&g).unwrap();
+        assert_eq!(
+            report.rejected,
+            vec![("act".into(), FusionReject::EpilogueOccupied)]
+        );
+    }
+
+    #[test]
+    fn elementwise_chain_folds_bottom_up_across_layers() {
+        // Full 2-layer MLP: both layers fold independently.
+        let mut g = Graph::new();
+        g.add_input("x", 4 * 6).unwrap();
+        g.add_input("w0", 6 * 8).unwrap();
+        g.add_input("b0", 8).unwrap();
+        g.add_input("w1", 8 * 5).unwrap();
+        g.add_input("b1", 5).unwrap();
+        g.add_node("fc0", Op::Contract(Problem::matmul(4, 8, 6)), &["x", "w0"]).unwrap();
+        g.add_node("h0", Op::BiasAdd { width: 8 }, &["fc0", "b0"]).unwrap();
+        g.add_node("a0", Op::Relu, &["h0"]).unwrap();
+        g.add_node("fc1", Op::Contract(Problem::matmul(4, 5, 8)), &["a0", "w1"]).unwrap();
+        g.add_node("h1", Op::BiasAdd { width: 5 }, &["fc1", "b1"]).unwrap();
+        let (f, report) = fuse(&g).unwrap();
+        assert_eq!(report.fused.len(), 3);
+        assert_eq!(f.nodes.len(), 2);
+        assert_eq!(contract(&f, "a0").id(), "mm_4x8x6+bias+relu");
+        assert_eq!(contract(&f, "h1").id(), "mm_4x5x8+bias");
+        // Layer boundary stays a typed reject (reducing consumer).
+        assert_eq!(
+            report.rejected,
+            vec![("h1".into(), FusionReject::ReductionConsumer)]
+        );
+        f.schedule().unwrap();
+    }
+}

@@ -1,0 +1,445 @@
+//! Multi-op graph IR: whole models as graphs of [`Problem`] nodes.
+//!
+//! LoopTune's unit of tuning is one tensor contraction; real workloads
+//! are *graphs* of dependent ops (LoopStack compiles whole tensor-algebra
+//! programs, the TPU learned performance model predicts over fused
+//! subgraphs). A [`Graph`] wires [`Op`] nodes together through **named
+//! tensors**: external inputs declare their element counts, every node
+//! names the tensor it produces, and edges are plain name references —
+//! shape-checked and topologically scheduled by [`Graph::schedule`],
+//! with cycles and dangling names rejected as typed errors.
+//!
+//! Three node kinds cover the scenario class:
+//!
+//! - [`Op::Contract`] — one tensor contraction, tuned and executed
+//!   through the existing single-problem machinery ([`crate::api`],
+//!   [`crate::backend::executor`]).
+//! - [`Op::BiasAdd`] / [`Op::Relu`] — elementwise epilogue candidates.
+//!   The fusion rewrite ([`fuse`]) folds them into their producing
+//!   contraction's write-back epilogue when legal, generalizing the
+//!   hardcoded `mlp` bias+ReLU into a rewrite over access maps.
+//!
+//! [`tune`] walks the contraction nodes in topological order through the
+//! [`crate::api::TuningService`] under one graph-wide budget, and
+//! [`exec`] compiles the tuned graph into a back-to-back executor with
+//! intermediate-buffer reuse. DESIGN.md §14 documents the subsystem.
+
+pub mod exec;
+pub mod fuse;
+pub mod tune;
+
+pub use exec::CompiledGraph;
+pub use fuse::{fuse, FusionEvent, FusionReject, FusionReport};
+pub use tune::{tune_graph, GraphTuneResult, NodeTuneRow};
+
+use crate::ir::Problem;
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+/// An external input tensor of a graph: a name plus its element count.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct GraphTensor {
+    /// Tensor name edges refer to.
+    pub name: String,
+    /// Element count (f32 elements).
+    pub len: usize,
+}
+
+/// One graph node's operation.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Op {
+    /// A tensor contraction (with optional fused epilogue on the
+    /// problem). Takes two input tensors — three when the problem
+    /// carries a bias epilogue (the bias tensor rides as input 3).
+    Contract(Problem),
+    /// Elementwise broadcast bias add: `out[i] = x[i] + bias[i % width]`.
+    /// Takes `(x, bias)`; `bias` has exactly `width` elements.
+    BiasAdd {
+        /// Broadcast period: the bias vector's length.
+        width: usize,
+    },
+    /// Elementwise rectifier: `out[i] = max(x[i], 0)`. Takes one input.
+    Relu,
+}
+
+impl Op {
+    /// Number of input tensors the op consumes.
+    pub fn arity(&self) -> usize {
+        match self {
+            Op::Contract(p) => {
+                if p.bias().is_some() {
+                    3
+                } else {
+                    2
+                }
+            }
+            Op::BiasAdd { .. } => 2,
+            Op::Relu => 1,
+        }
+    }
+
+    /// Short display tag (`contract` / `bias_add` / `relu`).
+    pub fn tag(&self) -> &'static str {
+        match self {
+            Op::Contract(_) => "contract",
+            Op::BiasAdd { .. } => "bias_add",
+            Op::Relu => "relu",
+        }
+    }
+}
+
+/// One graph node: the tensor named `name` produced by `op` applied to
+/// the tensors named in `inputs`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Node {
+    /// Name of the produced tensor (doubles as the node name).
+    pub name: String,
+    /// The operation.
+    pub op: Op,
+    /// Names of the consumed tensors, in op order.
+    pub inputs: Vec<String>,
+}
+
+/// A dataflow graph of tensor ops (see the module doc). Nodes may be
+/// added in any order — forward references are legal and resolved by
+/// [`Graph::schedule`], which is also where cycles and shape mismatches
+/// are rejected.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Graph {
+    /// External input tensors.
+    pub inputs: Vec<GraphTensor>,
+    /// Ops, in insertion order (not necessarily topological).
+    pub nodes: Vec<Node>,
+}
+
+/// A validated execution plan for a graph: node order plus tensor sizes.
+#[derive(Clone, Debug)]
+pub struct GraphSchedule {
+    /// Indices into [`Graph::nodes`], topologically sorted (every node's
+    /// inputs are produced before it).
+    pub order: Vec<usize>,
+    /// Element count of every tensor (external inputs and node outputs).
+    pub tensor_len: BTreeMap<String, usize>,
+}
+
+impl Graph {
+    /// The empty graph.
+    pub fn new() -> Graph {
+        Graph::default()
+    }
+
+    /// Declare an external input tensor. Names must be unique across
+    /// inputs and nodes.
+    pub fn add_input(&mut self, name: &str, len: usize) -> Result<()> {
+        if name.is_empty() {
+            bail!("graph input name must be non-empty");
+        }
+        if len == 0 {
+            bail!("graph input {name:?} must have a non-zero length");
+        }
+        if self.defines(name) {
+            bail!("duplicate tensor name {name:?}");
+        }
+        self.inputs.push(GraphTensor { name: name.to_string(), len });
+        Ok(())
+    }
+
+    /// Add a node producing tensor `name` from `inputs`. The input names
+    /// may be forward references; existence is checked by
+    /// [`Graph::schedule`]. Arity is checked here.
+    pub fn add_node(&mut self, name: &str, op: Op, inputs: &[&str]) -> Result<()> {
+        if name.is_empty() {
+            bail!("graph node name must be non-empty");
+        }
+        if self.defines(name) {
+            bail!("duplicate tensor name {name:?}");
+        }
+        if inputs.len() != op.arity() {
+            bail!(
+                "node {name:?}: op {} takes {} inputs, got {}",
+                op.tag(),
+                op.arity(),
+                inputs.len()
+            );
+        }
+        self.nodes.push(Node {
+            name: name.to_string(),
+            op,
+            inputs: inputs.iter().map(|s| s.to_string()).collect(),
+        });
+        Ok(())
+    }
+
+    /// Whether `name` is already an input or node name.
+    fn defines(&self, name: &str) -> bool {
+        self.inputs.iter().any(|t| t.name == name) || self.nodes.iter().any(|n| n.name == name)
+    }
+
+    /// Node producing tensor `name`, if any.
+    pub fn node(&self, name: &str) -> Option<&Node> {
+        self.nodes.iter().find(|n| n.name == name)
+    }
+
+    /// How many node inputs reference tensor `name` (an edge consumed
+    /// twice by one node counts twice).
+    pub fn consumer_count(&self, name: &str) -> usize {
+        self.nodes.iter().flat_map(|n| n.inputs.iter()).filter(|i| *i == name).count()
+    }
+
+    /// Tensors produced by a node but consumed by none — the graph's
+    /// outputs, in node insertion order.
+    pub fn outputs(&self) -> Vec<&str> {
+        self.nodes
+            .iter()
+            .filter(|n| self.consumer_count(&n.name) == 0)
+            .map(|n| n.name.as_str())
+            .collect()
+    }
+
+    /// Validate and plan the graph: every edge must name a declared
+    /// tensor, the dependency relation must be acyclic (Kahn's
+    /// algorithm; a stall with nodes remaining is reported as a cycle),
+    /// and every edge is shape-checked — a contraction's inputs must
+    /// have exactly the element counts its access maps imply, a bias-add
+    /// needs `len(bias) == width` and `len(x) % width == 0`.
+    pub fn schedule(&self) -> Result<GraphSchedule> {
+        // Dangling references first, so a typo reads as "unknown tensor",
+        // not as a bogus cycle.
+        for n in &self.nodes {
+            for i in &n.inputs {
+                if !self.defines(i) {
+                    bail!("node {:?} consumes unknown tensor {i:?}", n.name);
+                }
+            }
+        }
+        let mut tensor_len: BTreeMap<String, usize> =
+            self.inputs.iter().map(|t| (t.name.clone(), t.len)).collect();
+        let mut order = Vec::with_capacity(self.nodes.len());
+        let mut placed = vec![false; self.nodes.len()];
+        loop {
+            let mut progressed = false;
+            for (idx, n) in self.nodes.iter().enumerate() {
+                if placed[idx] || !n.inputs.iter().all(|i| tensor_len.contains_key(i)) {
+                    continue;
+                }
+                let lens: Vec<usize> = n.inputs.iter().map(|i| tensor_len[i]).collect();
+                let out_len = node_out_len(n, &lens)?;
+                tensor_len.insert(n.name.clone(), out_len);
+                order.push(idx);
+                placed[idx] = true;
+                progressed = true;
+            }
+            if order.len() == self.nodes.len() {
+                return Ok(GraphSchedule { order, tensor_len });
+            }
+            if !progressed {
+                let stuck: Vec<&str> = self
+                    .nodes
+                    .iter()
+                    .enumerate()
+                    .filter(|(i, _)| !placed[*i])
+                    .map(|(_, n)| n.name.as_str())
+                    .collect();
+                bail!("graph has a dependency cycle through: {}", stuck.join(", "));
+            }
+        }
+    }
+}
+
+/// Output element count of `n` given its input lengths (shape check).
+fn node_out_len(n: &Node, lens: &[usize]) -> Result<usize> {
+    match &n.op {
+        Op::Contract(p) => {
+            let [i0, i1] = *p.inputs();
+            for (slot, (t, want)) in
+                [(&i0, p.tensor_len(&i0)), (&i1, p.tensor_len(&i1))].iter().enumerate()
+            {
+                if lens[slot] != *want {
+                    bail!(
+                        "node {:?}: input {:?} ({} elements) does not match {} operand \
+                         {:?} ({want} elements)",
+                        n.name,
+                        n.inputs[slot],
+                        lens[slot],
+                        p.id(),
+                        t.name,
+                    );
+                }
+            }
+            if let Some(b) = p.bias() {
+                let want = p.tensor_len(b);
+                if lens[2] != want {
+                    bail!(
+                        "node {:?}: bias input {:?} has {} elements, {} wants {want}",
+                        n.name,
+                        n.inputs[2],
+                        lens[2],
+                        p.id()
+                    );
+                }
+            }
+            Ok(p.out_len())
+        }
+        Op::BiasAdd { width } => {
+            if lens[1] != *width {
+                bail!(
+                    "node {:?}: bias input {:?} has {} elements, want width {width}",
+                    n.name,
+                    n.inputs[1],
+                    lens[1]
+                );
+            }
+            if *width == 0 || lens[0] % width != 0 {
+                bail!(
+                    "node {:?}: input length {} is not a multiple of bias width {width}",
+                    n.name,
+                    lens[0]
+                );
+            }
+            Ok(lens[0])
+        }
+        Op::Relu => Ok(lens[0]),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// batch x (in -> hidden -> out) MLP built from unfused primitives.
+    fn mlp_graph() -> Graph {
+        let (b, i, h, o) = (4usize, 6usize, 8usize, 5usize);
+        let mut g = Graph::new();
+        g.add_input("x", b * i).unwrap();
+        g.add_input("w0", i * h).unwrap();
+        g.add_input("b0", h).unwrap();
+        g.add_input("w1", h * o).unwrap();
+        g.add_input("b1", o).unwrap();
+        g.add_node("fc0", Op::Contract(Problem::matmul(b, h, i)), &["x", "w0"]).unwrap();
+        g.add_node("fc0_bias", Op::BiasAdd { width: h }, &["fc0", "b0"]).unwrap();
+        g.add_node("fc0_relu", Op::Relu, &["fc0_bias"]).unwrap();
+        g.add_node("fc1", Op::Contract(Problem::matmul(b, o, h)), &["fc0_relu", "w1"])
+            .unwrap();
+        g.add_node("fc1_bias", Op::BiasAdd { width: o }, &["fc1", "b1"]).unwrap();
+        g
+    }
+
+    #[test]
+    fn schedules_in_topo_order_with_shapes() {
+        let g = mlp_graph();
+        let s = g.schedule().unwrap();
+        assert_eq!(s.order.len(), g.nodes.len());
+        // Every node's inputs are available before the node runs.
+        let mut seen: Vec<&str> = g.inputs.iter().map(|t| t.name.as_str()).collect();
+        for &i in &s.order {
+            for inp in &g.nodes[i].inputs {
+                assert!(seen.contains(&inp.as_str()), "{} before {inp}", g.nodes[i].name);
+            }
+            seen.push(&g.nodes[i].name);
+        }
+        assert_eq!(s.tensor_len["fc0"], 4 * 8);
+        assert_eq!(s.tensor_len["fc0_relu"], 4 * 8);
+        assert_eq!(s.tensor_len["fc1_bias"], 4 * 5);
+        assert_eq!(g.outputs(), vec!["fc1_bias"]);
+    }
+
+    #[test]
+    fn forward_references_resolve() {
+        // Same graph, nodes added consumer-first: schedule still works.
+        let mut g = Graph::new();
+        g.add_node("y", Op::Relu, &["m"]).unwrap();
+        g.add_node("m", Op::Contract(Problem::matmul(4, 8, 6)), &["x", "w"]).unwrap();
+        g.add_input("x", 4 * 6).unwrap();
+        g.add_input("w", 6 * 8).unwrap();
+        let s = g.schedule().unwrap();
+        assert_eq!(s.order, vec![1, 0]);
+    }
+
+    #[test]
+    fn rejects_duplicates_unknowns_cycles_and_arity() {
+        let mut g = Graph::new();
+        g.add_input("x", 8).unwrap();
+        assert!(g.add_input("x", 8).is_err(), "duplicate input name");
+        g.add_node("y", Op::Relu, &["x"]).unwrap();
+        assert!(g.add_node("y", Op::Relu, &["x"]).is_err(), "duplicate node name");
+        assert!(g.add_node("z", Op::Relu, &["x", "x"]).is_err(), "relu arity");
+        assert!(
+            g.add_node("z", Op::Contract(Problem::matmul(2, 2, 2)), &["x"]).is_err(),
+            "contract arity"
+        );
+
+        let mut dangling = Graph::new();
+        dangling.add_node("y", Op::Relu, &["ghost"]).unwrap();
+        let err = dangling.schedule().unwrap_err().to_string();
+        assert!(err.contains("unknown tensor"), "{err}");
+
+        let mut cyc = Graph::new();
+        cyc.add_node("a", Op::Relu, &["b"]).unwrap();
+        cyc.add_node("b", Op::Relu, &["a"]).unwrap();
+        let err = cyc.schedule().unwrap_err().to_string();
+        assert!(err.contains("cycle"), "{err}");
+    }
+
+    #[test]
+    fn rejects_shape_mismatches() {
+        // Matmul operand of the wrong size.
+        let mut g = Graph::new();
+        g.add_input("x", 7).unwrap();
+        g.add_input("w", 6 * 8).unwrap();
+        g.add_node("m", Op::Contract(Problem::matmul(4, 8, 6)), &["x", "w"]).unwrap();
+        let err = g.schedule().unwrap_err().to_string();
+        assert!(err.contains("does not match"), "{err}");
+
+        // Bias of the wrong width.
+        let mut g = Graph::new();
+        g.add_input("x", 32).unwrap();
+        g.add_input("b", 7).unwrap();
+        g.add_node("y", Op::BiasAdd { width: 8 }, &["x", "b"]).unwrap();
+        assert!(g.schedule().is_err());
+
+        // Input length not a multiple of the bias width.
+        let mut g = Graph::new();
+        g.add_input("x", 30).unwrap();
+        g.add_input("b", 8).unwrap();
+        g.add_node("y", Op::BiasAdd { width: 8 }, &["x", "b"]).unwrap();
+        assert!(g.schedule().is_err());
+
+        // A contraction with a fused bias epilogue takes the bias as a
+        // third input, and its length is checked too.
+        let p = Problem::matmul(4, 8, 6).with_bias(crate::ir::Dim::N);
+        let mut g = Graph::new();
+        g.add_input("x", 4 * 6).unwrap();
+        g.add_input("w", 6 * 8).unwrap();
+        g.add_input("b", 9).unwrap();
+        g.add_node("m", Op::Contract(p), &["x", "w", "b"]).unwrap();
+        let err = g.schedule().unwrap_err().to_string();
+        assert!(err.contains("bias"), "{err}");
+    }
+
+    #[test]
+    fn conv_chain_shapes_check_exactly() {
+        // conv2d(oh, ow, k, k) consumes (oh+k-1) x (ow+k-1): chaining two
+        // layers only schedules when the sizes line up exactly.
+        let mut g = Graph::new();
+        g.add_input("img", 12 * 12).unwrap();
+        g.add_input("k0", 9).unwrap();
+        g.add_input("k1", 9).unwrap();
+        g.add_node("c0", Op::Contract(Problem::conv2d(10, 10, 3, 3)), &["img", "k0"])
+            .unwrap();
+        g.add_node("c1", Op::Contract(Problem::conv2d(8, 8, 3, 3)), &["c0", "k1"]).unwrap();
+        let s = g.schedule().unwrap();
+        assert_eq!(s.tensor_len["c0"], 100);
+        assert_eq!(s.tensor_len["c1"], 64);
+
+        // Off-by-one layer sizing is rejected.
+        let mut bad = Graph::new();
+        bad.add_input("img", 12 * 12).unwrap();
+        bad.add_input("k0", 9).unwrap();
+        bad.add_input("k1", 9).unwrap();
+        bad.add_node("c0", Op::Contract(Problem::conv2d(10, 10, 3, 3)), &["img", "k0"])
+            .unwrap();
+        bad.add_node("c1", Op::Contract(Problem::conv2d(9, 9, 3, 3)), &["c0", "k1"])
+            .unwrap();
+        assert!(bad.schedule().is_err());
+    }
+}

@@ -1,0 +1,286 @@
+//! Graph-level tuning: walk contraction nodes in topological order
+//! through the existing [`TuningService`] under **one graph-wide
+//! budget**.
+//!
+//! The tuner requires a store-backed service: every fresh tune is
+//! recorded to the shared [`TuningStore`], so a later node with the same
+//! `Problem::id` is answered from the store at **zero evaluations** —
+//! structurally identical layers (the common case in MLP towers) are
+//! tuned once and replayed everywhere. The ranker and warm backend pool
+//! are shared across nodes for free because they live in the service.
+//!
+//! Budget apportioning: before each node, the remaining budget (evals
+//! and/or seconds) is divided by the number of *distinct untuned*
+//! problem ids from this node onward, so structurally identical nodes
+//! do not double-bill and the last distinct problem gets everything
+//! that is left. An absolute deadline, if set, passes through to every
+//! node unchanged (it is an end-to-end latency contract).
+//!
+//! [`TuningStore`]: crate::store::TuningStore
+
+use super::{Graph, Op};
+use crate::api::{BackendChoice, TuneRequest, TuningService};
+use crate::ir::{Nest, Problem};
+use crate::search::Budget;
+use anyhow::{anyhow, bail, Result};
+use std::collections::{BTreeMap, BTreeSet};
+use std::time::Duration;
+
+/// Per-node outcome of a graph tune (one row per contraction node, in
+/// topological order).
+#[derive(Clone, Debug)]
+pub struct NodeTuneRow {
+    /// Graph node name.
+    pub node: String,
+    /// `Problem::id` of the node's contraction.
+    pub problem: String,
+    /// Tuned GFLOPS the service reported for this node.
+    pub gflops: f64,
+    /// Backend evaluations this node consumed (0 on a store hit).
+    pub evals: u64,
+    /// Serve provenance (`Some("store")` on a schedule reuse, `None`
+    /// for a fresh tune).
+    pub cache: Option<String>,
+    /// Compact schedule signature of the tuned nest.
+    pub schedule: String,
+    /// Strategy that produced the schedule.
+    pub strategy: String,
+}
+
+/// What [`tune_graph`] returns: per-node rows plus the replayable
+/// schedules keyed by `Problem::id` (ready for
+/// [`CompiledGraph::compile`](super::CompiledGraph::compile)).
+#[derive(Clone, Debug)]
+pub struct GraphTuneResult {
+    /// One row per contraction node, topological order.
+    pub rows: Vec<NodeTuneRow>,
+    /// Tuned schedule per distinct `Problem::id`.
+    pub schedules: BTreeMap<String, Nest>,
+    /// Total backend evaluations across the whole graph.
+    pub evals_total: u64,
+    /// Total strategy-attributed tuning seconds.
+    pub tune_secs: f64,
+}
+
+/// Store-record backend key for a request backend (records are written
+/// under the [`SharedBackend`] name, not the request enum's).
+///
+/// [`SharedBackend`]: crate::backend::SharedBackend
+fn store_backend_name(backend: BackendChoice) -> &'static str {
+    match backend {
+        BackendChoice::Measured => "executor",
+        BackendChoice::CostModel => "cost_model",
+    }
+}
+
+/// Tune every contraction node of `g` through `svc` in topological
+/// order, apportioning `budget` across distinct untuned problems (see
+/// the module doc). The service must be store-backed — the store is both
+/// the reuse mechanism and where replayable schedules are recovered
+/// from.
+pub fn tune_graph(
+    svc: &TuningService,
+    g: &Graph,
+    strategy: &str,
+    budget: &Budget,
+    backend: BackendChoice,
+    seed: u64,
+) -> Result<GraphTuneResult> {
+    let sched = g.schedule()?;
+    let store = match svc.store() {
+        Some(s) => s,
+        None => bail!(
+            "graph tuning requires a store-backed service (set ServiceCfg.store) \
+             so schedules can be shared between structurally identical nodes"
+        ),
+    };
+    let contracts: Vec<(&str, Problem)> = sched
+        .order
+        .iter()
+        .filter_map(|&i| match g.nodes[i].op {
+            Op::Contract(p) => Some((g.nodes[i].name.as_str(), p)),
+            _ => None,
+        })
+        .collect();
+    if contracts.is_empty() {
+        bail!("graph has no contraction nodes to tune");
+    }
+
+    let mut remaining_evals = budget.max_evals;
+    let mut remaining_secs = budget.time.map(|d| d.as_secs_f64());
+    let mut done: BTreeSet<String> = BTreeSet::new();
+    let mut rows = Vec::with_capacity(contracts.len());
+    let mut schedules: BTreeMap<String, Nest> = BTreeMap::new();
+    let (mut evals_total, mut tune_secs) = (0u64, 0.0f64);
+
+    for (i, &(name, p)) in contracts.iter().enumerate() {
+        let id = p.id();
+        // Distinct problems still owed a fresh tune, this node included.
+        let ahead = contracts[i..]
+            .iter()
+            .map(|(_, q)| q.id())
+            .filter(|qid| !done.contains(qid))
+            .collect::<BTreeSet<_>>()
+            .len()
+            .max(1) as u64;
+        let node_budget = Budget {
+            time: remaining_secs.map(|r| Duration::from_secs_f64((r / ahead as f64).max(0.05))),
+            max_evals: remaining_evals.map(|r| (r / ahead).max(1)),
+            deadline: budget.deadline,
+        };
+        let mut req = TuneRequest::new(id.clone(), strategy, node_budget);
+        req.seed = Some(seed);
+        req.backend = backend;
+        let resp = svc
+            .serve(&req)
+            .map_err(|e| anyhow!("tuning graph node {name:?} ({id}): {e:#}"))?;
+        if let Some(r) = &mut remaining_evals {
+            *r = r.saturating_sub(resp.evals);
+        }
+        if let Some(r) = &mut remaining_secs {
+            *r = (*r - resp.tune_secs).max(0.0);
+        }
+        evals_total += resp.evals;
+        tune_secs += resp.tune_secs;
+        done.insert(id.clone());
+        if !schedules.contains_key(&id) {
+            // Recover the replayable nest from the store (the response's
+            // `schedule` field is a display signature, not replayable).
+            let nest = store
+                .lookup(&id, store_backend_name(backend))
+                .and_then(|rec| rec.replay(p).ok())
+                .unwrap_or_else(|| Nest::initial(p));
+            schedules.insert(id.clone(), nest);
+        }
+        rows.push(NodeTuneRow {
+            node: name.to_string(),
+            problem: id,
+            gflops: resp.gflops,
+            evals: resp.evals,
+            cache: resp.cache.clone(),
+            schedule: resp.schedule.clone(),
+            strategy: resp.strategy.clone(),
+        });
+    }
+    Ok(GraphTuneResult { rows, schedules, evals_total, tune_secs })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::ServiceCfg;
+    use crate::graph::fuse;
+    use crate::ir::Dim;
+    use crate::store::TuningStore;
+
+    fn svc_with_store() -> (TuningService, TuningStore) {
+        let store = TuningStore::in_memory();
+        let cfg = ServiceCfg {
+            seed: 7,
+            threads: 2,
+            store: Some(store.clone()),
+            ..Default::default()
+        };
+        (TuningService::new(cfg), store)
+    }
+
+    /// 3 fused layers, the first two structurally identical
+    /// (`mm_4x6x6+bias+relu`), the last bias-only.
+    fn tower() -> Graph {
+        let mut g = Graph::new();
+        g.add_input("x", 4 * 6).unwrap();
+        for i in 0..3 {
+            g.add_input(&format!("w{i}"), 6 * 6).unwrap();
+            g.add_input(&format!("b{i}"), 6).unwrap();
+        }
+        let fused = Problem::matmul(4, 6, 6).with_bias(Dim::N).with_relu();
+        let last = Problem::matmul(4, 6, 6).with_bias(Dim::N);
+        g.add_node("fc0", Op::Contract(fused), &["x", "w0", "b0"]).unwrap();
+        g.add_node("fc1", Op::Contract(fused), &["fc0", "w1", "b1"]).unwrap();
+        g.add_node("fc2", Op::Contract(last), &["fc1", "w2", "b2"]).unwrap();
+        g
+    }
+
+    #[test]
+    fn identical_nodes_reuse_schedules_at_zero_evals() {
+        let (svc, store) = svc_with_store();
+        let g = tower();
+        let out =
+            tune_graph(&svc, &g, "greedy1", &Budget::evals(60), BackendChoice::CostModel, 3)
+                .unwrap();
+        assert_eq!(out.rows.len(), 3);
+        assert!(out.rows[0].evals > 0, "first node tunes fresh");
+        assert_eq!(out.rows[0].cache, None);
+        // Second node: same Problem::id -> store hit, zero evals.
+        assert_eq!(out.rows[1].problem, out.rows[0].problem);
+        assert_eq!(out.rows[1].evals, 0);
+        assert_eq!(out.rows[1].cache.as_deref(), Some("store"));
+        assert_eq!(out.rows[1].schedule, out.rows[0].schedule);
+        // Third node is a distinct problem (bias-only) and tunes fresh.
+        assert_ne!(out.rows[2].problem, out.rows[0].problem);
+        assert!(out.rows[2].evals > 0);
+        // Two distinct ids -> two replayable schedules, both in store.
+        assert_eq!(out.schedules.len(), 2);
+        assert_eq!(store.len(), 2);
+        for (id, nest) in &out.schedules {
+            assert_eq!(&nest.problem.id(), id);
+        }
+        assert_eq!(
+            out.evals_total,
+            out.rows.iter().map(|r| r.evals).sum::<u64>()
+        );
+    }
+
+    #[test]
+    fn budget_apportioning_respects_the_graph_wide_cap() {
+        let (svc, _) = svc_with_store();
+        let g = tower();
+        let cap = 40u64;
+        let out =
+            tune_graph(&svc, &g, "greedy1", &Budget::evals(cap), BackendChoice::CostModel, 3)
+                .unwrap();
+        // Two distinct problems split the cap: the first gets at most
+        // half, the total stays within the graph-wide budget.
+        assert!(out.rows[0].evals <= cap / 2, "{}", out.rows[0].evals);
+        assert!(out.evals_total <= cap, "{}", out.evals_total);
+    }
+
+    #[test]
+    fn unfused_graphs_tune_their_contractions_only() {
+        let (svc, _) = svc_with_store();
+        // fuse() first, as the CLI does: the fused tower is 2 contraction
+        // nodes; tune rows cover exactly those.
+        let mut g = Graph::new();
+        g.add_input("x", 4 * 6).unwrap();
+        g.add_input("w0", 6 * 8).unwrap();
+        g.add_input("b0", 8).unwrap();
+        g.add_input("w1", 8 * 5).unwrap();
+        g.add_node("fc0", Op::Contract(Problem::matmul(4, 8, 6)), &["x", "w0"]).unwrap();
+        g.add_node("h0", Op::BiasAdd { width: 8 }, &["fc0", "b0"]).unwrap();
+        g.add_node("a0", Op::Relu, &["h0"]).unwrap();
+        g.add_node("fc1", Op::Contract(Problem::matmul(4, 5, 8)), &["a0", "w1"]).unwrap();
+        let (fg, _) = fuse(&g).unwrap();
+        let out =
+            tune_graph(&svc, &fg, "greedy1", &Budget::evals(40), BackendChoice::CostModel, 3)
+                .unwrap();
+        assert_eq!(out.rows.len(), 2);
+        assert_eq!(out.rows[0].problem, "mm_4x8x6+bias+relu");
+        assert_eq!(out.rows[1].problem, "mm_4x5x8");
+    }
+
+    #[test]
+    fn storeless_service_is_rejected() {
+        let svc = TuningService::new(ServiceCfg::default());
+        let err = tune_graph(
+            &svc,
+            &tower(),
+            "greedy1",
+            &Budget::evals(10),
+            BackendChoice::CostModel,
+            3,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("store"), "{err}");
+    }
+}

@@ -215,6 +215,27 @@ impl Problem {
         p
     }
 
+    /// Builder: attach a fused bias-add epilogue along output dim `d`
+    /// (`C = T + bias[d]` in the write-back nest). The graph fusion
+    /// rewrite uses this to fold an elementwise bias-add producer into
+    /// its consumer, generalizing the hardcoded [`Problem::mlp`]
+    /// epilogue. `d` must be an output dim written at unit stride, so the
+    /// epilogue is recoverable from the problem id alone (the spec
+    /// parser re-attaches it to the unique unit-stride output dim).
+    pub fn with_bias(mut self, d: Dim) -> Problem {
+        assert!(!self.is_reduce(d), "bias dim must be an output dim");
+        assert_eq!(self.out.stride(d), Some(1), "bias dim must have unit output stride");
+        self.bias = Some(TensorInfo { name: "bias", access: Access::none().with(d, 1) });
+        self
+    }
+
+    /// Builder: attach a fused ReLU epilogue (`C = max(T, 0)`, applied
+    /// after the bias-add when both are present).
+    pub fn with_relu(mut self) -> Problem {
+        self.relu = true;
+        self
+    }
+
     /// Batched matmul `C[b, m, n] = sum_k A[b, m, k] * B[b, k, n]`.
     pub fn batched_matmul(b: usize, m: usize, n: usize, k: usize) -> Problem {
         let mut p = Problem::base(
@@ -438,9 +459,24 @@ impl Problem {
     }
 
     /// Stable identifier, e.g. `mm_64x80x96` or `conv2d_28x28x3x3`.
+    /// Fused epilogues are part of the identity: a non-mlp problem with a
+    /// bias and/or ReLU epilogue (see [`Problem::with_bias`] /
+    /// [`Problem::with_relu`]) appends `+bias` / `+relu` flags, e.g.
+    /// `mm_64x80x96+bias+relu`, so fused and unfused variants never share
+    /// a store key. `mlp` carries both epilogues by construction and
+    /// stays bare (`mlp_64x80x96`).
     pub fn id(&self) -> String {
         let exts: Vec<String> = self.dims().map(|d| self.extent(d).to_string()).collect();
-        format!("{}_{}", self.kind, exts.join("x"))
+        let mut id = format!("{}_{}", self.kind, exts.join("x"));
+        if self.kind != "mlp" {
+            if self.bias.is_some() {
+                id.push_str("+bias");
+            }
+            if self.relu {
+                id.push_str("+relu");
+            }
+        }
+        id
     }
 
     /// `(m, n, k)` when this is a *plain* matmul problem.
@@ -722,6 +758,35 @@ mod tests {
             ("B", a),
             a,
         );
+    }
+
+    #[test]
+    fn epilogue_builders_set_bias_relu_and_suffix_id() {
+        let p = Problem::new(8, 16, 32).with_bias(Dim::N).with_relu();
+        assert!(p.relu());
+        let bias = p.bias().expect("bias attached");
+        assert_eq!(bias.access.stride(Dim::N), Some(1));
+        assert_eq!(p.tensor_len(bias), 16);
+        assert_eq!(p.id(), "mm_8x16x32+bias+relu");
+        assert_eq!(Problem::new(8, 16, 32).with_bias(Dim::N).id(), "mm_8x16x32+bias");
+        assert_eq!(Problem::new(8, 16, 32).with_relu().id(), "mm_8x16x32+relu");
+        // conv2d's unit-stride output dim is ow (dim 1).
+        let c = Problem::conv2d(8, 8, 3, 3).with_bias(Dim::new(1));
+        assert_eq!(c.id(), "conv2d_8x8x3x3+bias");
+        // mlp implies both epilogues; its id stays bare.
+        assert_eq!(Problem::mlp(8, 16, 32).id(), "mlp_8x16x32");
+    }
+
+    #[test]
+    #[should_panic(expected = "unit output stride")]
+    fn with_bias_rejects_non_unit_stride_dim() {
+        let _ = Problem::new(8, 16, 32).with_bias(Dim::M);
+    }
+
+    #[test]
+    #[should_panic(expected = "output dim")]
+    fn with_bias_rejects_reduction_dim() {
+        let _ = Problem::new(8, 16, 32).with_bias(Dim::K);
     }
 
     #[test]

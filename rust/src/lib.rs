@@ -40,6 +40,13 @@
 //! backend evaluations, cold misses can be transfer-tuned by replaying
 //! the nearest recorded schedules, and a learned cost ranker trained from
 //! the corpus pre-orders search expansion.
+//!
+//! [`graph`] (DESIGN.md §14) lifts tuning from kernels to whole models:
+//! a multi-op graph IR of [`ir::Problem`] nodes wired through named
+//! tensors, an epilogue-fusion rewrite folding elementwise ops into
+//! contraction write-backs, a graph-level tuner apportioning one budget
+//! across nodes with store-backed schedule reuse, and a compiled
+//! back-to-back executor with intermediate-buffer reuse.
 
 #![warn(missing_docs)]
 
@@ -51,6 +58,7 @@ pub mod dataset;
 pub mod env;
 pub mod eval;
 pub mod featurize;
+pub mod graph;
 pub mod ir;
 pub mod rl;
 pub mod runtime;

@@ -8,6 +8,16 @@
 //!   tune      --spec S            tune one problem with a trained policy
 //!                                 (--strategy evolve|transfer|greedy2|...
 //!                                 picks any service strategy instead)
+//!   tune-graph --graph G          tune a whole model (DESIGN.md §14):
+//!                                 lower `mlp:784x512x10` / `convnet:...`
+//!                                 to a multi-op graph, fuse elementwise
+//!                                 epilogues into contraction write-backs
+//!                                 (--no-fuse disables), tune every
+//!                                 contraction under one graph-wide
+//!                                 budget with store-backed schedule
+//!                                 reuse, and report fused-vs-unfused
+//!                                 whole-model latency (--json PATH
+//!                                 writes the graph_response/v1 document)
 //!   search    --algo A --spec S   run one classical search
 //!   tune-many --algo A ...        batch-tune a whole problem set across
 //!                                 worker threads; writes a JSON report.
@@ -55,7 +65,9 @@
 //! (learned cost model trained by fit-cost-model).
 
 use anyhow::{anyhow, bail, Result};
-use looptune::api::{spec, BackendChoice, ServiceCfg, TuneRequest, TuneResponse, TuningService};
+use looptune::api::{
+    spec, BackendChoice, GraphRequest, ServiceCfg, TuneRequest, TuneResponse, TuningService,
+};
 use looptune::backend::peak;
 use looptune::config::Config;
 use looptune::eval::{experiments, workloads, EvalCfg};
@@ -82,7 +94,8 @@ fn parse_args() -> Args {
             // boolean flags have no value; value flags consume the next arg
             match name {
                 "quick" | "cost-model" | "measured" | "untrained" | "smoke" | "once"
-                | "ordered" | "poison" | "warm" | "no-degrade" | "no-coalesce" => {
+                | "ordered" | "poison" | "warm" | "no-degrade" | "no-coalesce"
+                | "no-fuse" => {
                     flags.insert(name.to_string(), "true".into());
                 }
                 _ => {
@@ -395,6 +408,95 @@ fn main() -> Result<()> {
             req.untrained = args.flags.contains_key("untrained");
             let resp = service.serve(&req)?;
             print_response(&resp);
+        }
+        "tune-graph" => {
+            // Whole-model tuning (DESIGN.md §14). --smoke shrinks the
+            // default batch and budget to CI scale. Graph tuning needs a
+            // store (it is the schedule-reuse mechanism between
+            // structurally identical nodes), so when --store wasn't given
+            // the service gets a fresh in-memory one.
+            let graph = args
+                .flags
+                .get("graph")
+                .cloned()
+                .unwrap_or_else(|| problem_spec(&args, "mlp:64x64x64"));
+            let smoke = args.flags.contains_key("smoke");
+            let budget = match (
+                args.flags.get("budget-evals").and_then(|s| s.parse().ok()),
+                args.flags.get("budget").and_then(|s| s.parse::<f64>().ok()),
+            ) {
+                (Some(n), Some(s)) => Budget::both(s, n),
+                (Some(n), None) => Budget::evals(n),
+                (None, Some(s)) => Budget::seconds(s),
+                (None, None) => {
+                    Budget::evals(if smoke { 60 } else if quick { 150 } else { 400 })
+                }
+            };
+            let mut req = GraphRequest::new(
+                graph,
+                args.flags.get("strategy").cloned().unwrap_or_else(|| "greedy2".into()),
+                budget,
+            );
+            req.batch = args
+                .flags
+                .get("batch")
+                .and_then(|s| s.parse().ok())
+                .unwrap_or(if smoke { 32 } else { 64 });
+            req.backend = backend_choice;
+            req.seed = Some(seed);
+            req.fuse = !args.flags.contains_key("no-fuse");
+            let stored_service;
+            let svc_ref = if service.store().is_some() {
+                &service
+            } else {
+                stored_service = TuningService::new(ServiceCfg {
+                    seed,
+                    threads,
+                    default_params: ecfg.params_path.clone(),
+                    store: Some(looptune::store::TuningStore::in_memory()),
+                    ranker: ranker.clone(),
+                });
+                &stored_service
+            };
+            let resp = svc_ref.serve_graph(&req)?;
+            println!(
+                "graph {} (batch {}): {} contraction node(s), {} epilogue fold(s), \
+                 {} fusion reject(s)",
+                resp.graph,
+                resp.batch,
+                resp.nodes.len(),
+                resp.fused_nodes,
+                resp.rejected,
+            );
+            for n in &resp.nodes {
+                println!(
+                    "  {:<10} {:<26} {:>8.2} GFLOPS  {:>5} evals{}  {}",
+                    n.node,
+                    n.problem,
+                    n.gflops,
+                    n.evals,
+                    match n.cache.as_deref() {
+                        Some(c) => format!(" ({c})"),
+                        None => String::new(),
+                    },
+                    n.schedule,
+                );
+            }
+            println!(
+                "whole-model: fused {:.3} ms vs unfused {:.3} ms ({:.2}x); \
+                 buffers {} allocated / {} tensors; {} eval(s) in {:.2}s",
+                resp.latency_fused_ms,
+                resp.latency_unfused_ms,
+                resp.speedup,
+                resp.buffers_allocated,
+                resp.buffers_tensors,
+                resp.evals_total,
+                resp.tune_secs,
+            );
+            if let Some(p) = args.flags.get("json") {
+                std::fs::write(p, format!("{}\n", resp.to_json()))?;
+                println!("report -> {p}");
+            }
         }
         "search" => {
             let spec = problem_spec(&args, "128,128,128");
@@ -837,6 +939,13 @@ fn main() -> Result<()> {
                         // tracked BENCH_serve.json (no runtime needed).
                         experiments::bench_serve(&ecfg, if quick { 120 } else { 300 })?
                     }
+                    "graph" => {
+                        // Whole-model graph tuning: fused-vs-unfused
+                        // latency and graph-tuned-vs-per-node-cold evals
+                        // per workload graph; writes the tracked
+                        // BENCH_graph.json (no runtime needed).
+                        experiments::bench_graph(&ecfg, if quick { 60 } else { 150 })?
+                    }
                     "ablation" => {
                         let rt = Arc::new(Runtime::load_default()?);
                         experiments::ablation(rt, &ecfg, iters)?
@@ -849,7 +958,7 @@ fn main() -> Result<()> {
             if exp == "all" {
                 for e in [
                     "table1", "fig7", "fig8", "fig9", "fig10", "fig11", "headline", "ablation",
-                    "store", "search", "serve",
+                    "store", "search", "serve", "graph",
                 ] {
                     println!("==== {e} ====");
                     run(e)?;
@@ -863,7 +972,8 @@ fn main() -> Result<()> {
                 "looptune — RL loop-schedule auto-tuner (LoopTune reproduction)\n\n\
                  usage: looptune <cmd> [flags]\n\
                  cmds:  peak | dataset | workloads | render | artifacts | train | tune\n       \
-                 | search | tune-many | serve | loadgen | db | fit-cost-model | bench | eval\n\
+                 | tune-graph | search | tune-many | serve | loadgen | db\n       \
+                 | fit-cost-model | bench | eval\n\
                  flags: --spec KIND:DIMS (matmul:64x64x64, conv2d:28x28x3x3, ...)\n       \
                  --mnk M,N,K --algo NAME --iters N --budget SECS --out DIR\n       \
                  --params FILE --config FILE --seed N --quick --cost-model --untrained\n       \
@@ -879,6 +989,9 @@ fn main() -> Result<()> {
                  admission control, degradation, output ordering)\n       \
                  --requests N --duplicates N --rate R --deadline-ms MS --poison --warm\n       \
                  (loadgen: request mix, pacing, fault injection)\n       \
+                 --graph SPEC --batch N --no-fuse (tune-graph: whole-model tuning\n       \
+                 over mlp:W0x..xWk / convnet:HxWxKxL / any problem spec; --smoke\n       \
+                 shrinks batch+budget; --json writes graph_response/v1)\n       \
                  --smoke --json PATH (bench: tiny CI shapes, output path)\n       \
                  --store PATH (persistent tuning store: serve hits, record all,\n       \
                  enable the transfer strategy; db/fit-cost-model operate on it)\n       \

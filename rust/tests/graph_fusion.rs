@@ -1,0 +1,241 @@
+//! Integration pins for the epilogue-fusion rewrite (`graph::fuse`)
+//! across every workload family: legal folds must execute bit-for-bit
+//! close to the unfused reference (including under tuned, parallelized
+//! schedules at 1/2/4 executor threads), and every illegal candidate
+//! must come back with its typed `FusionReject` reason.
+
+use looptune::graph::{fuse, CompiledGraph, FusionReject, Graph, Op};
+use looptune::ir::{Nest, Problem};
+use std::collections::BTreeMap;
+
+/// One small problem per non-mlp workload family (the mlp family is
+/// covered separately via its pre-fused constructor).
+fn family_problems() -> Vec<Problem> {
+    vec![
+        Problem::matmul(6, 8, 5),
+        Problem::matmul_transposed(6, 8, 5),
+        Problem::batched_matmul(2, 4, 6, 5),
+        Problem::conv1d(6, 4, 3, 2),
+        Problem::conv2d(5, 7, 3, 3),
+    ]
+}
+
+/// The legal bias width for `p`: the extent of its unique unit-stride
+/// output dim over a dense output (the fusion legality predicate's
+/// broadcast condition, recomputed from the public problem API).
+fn unit_width(p: &Problem) -> Option<usize> {
+    let mut units = p.output_dims().filter(|&d| p.out_access().stride(d) == Some(1));
+    let d = units.next()?;
+    if units.next().is_some() {
+        return None;
+    }
+    let dense = p.out_len() == p.output_dims().map(|dd| p.extent(dd)).product::<usize>();
+    dense.then_some(p.extent(d))
+}
+
+/// `contract -> bias-add -> relu` over external inputs, unfused.
+fn unfused_layer(p: Problem, width: usize) -> Graph {
+    let mut g = Graph::new();
+    let ins = p.inputs();
+    g.add_input("in0", p.tensor_len(&ins[0])).unwrap();
+    g.add_input("in1", p.tensor_len(&ins[1])).unwrap();
+    g.add_input("bvec", width).unwrap();
+    g.add_node("out", Op::Contract(p), &["in0", "in1"]).unwrap();
+    g.add_node("biased", Op::BiasAdd { width }, &["out", "bvec"]).unwrap();
+    g.add_node("act", Op::Relu, &["biased"]).unwrap();
+    g
+}
+
+/// The fused graph's single contraction problem.
+fn fused_problem(f: &Graph) -> Problem {
+    assert_eq!(f.nodes.len(), 1, "fully fused graph has one node");
+    match f.nodes[0].op {
+        Op::Contract(p) => p,
+        ref o => panic!("fused node is {}", o.tag()),
+    }
+}
+
+fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+}
+
+#[test]
+fn legal_folds_execute_vs_unfused_reference_across_families() {
+    for p in family_problems() {
+        let width = unit_width(&p)
+            .unwrap_or_else(|| panic!("{}: no legal bias width", p.id()));
+        let g = unfused_layer(p, width);
+        let (f, report) = fuse(&g).unwrap();
+        assert_eq!(report.fused.len(), 2, "{}: {:?}", p.id(), report);
+        assert_eq!(report.fused[0].epilogue, "bias", "{}", p.id());
+        assert_eq!(report.fused[1].epilogue, "relu", "{}", p.id());
+        assert!(report.rejected.is_empty(), "{}: {:?}", p.id(), report.rejected);
+        assert_eq!(fused_problem(&f).id(), format!("{}+bias+relu", p.id()));
+
+        // The fused graph computes the same model as the unfused one, at
+        // every executor thread count.
+        let mut base = CompiledGraph::compile(&g, &BTreeMap::new(), 13, 1).unwrap();
+        base.run();
+        let want = base.output("act").unwrap().to_vec();
+        for threads in [1usize, 2, 4] {
+            let mut cg =
+                CompiledGraph::compile(&f, &BTreeMap::new(), 13, threads).unwrap();
+            cg.run();
+            let got = cg.output("act").unwrap();
+            assert!(
+                max_abs_diff(got, &want) < 1e-3,
+                "{} at {threads} threads",
+                p.id()
+            );
+        }
+    }
+}
+
+#[test]
+fn parallelized_tuned_schedules_stay_correct_across_thread_counts() {
+    for p in family_problems() {
+        let width = unit_width(&p).unwrap();
+        let g = unfused_layer(p, width);
+        let (f, _) = fuse(&g).unwrap();
+        let fp = fused_problem(&f);
+
+        // A tuned schedule for the fused problem: tile the second
+        // compute root where the trip allows it, then parallelize the
+        // outermost root — the shape the search's Parallelize action
+        // produces.
+        let mut nest = Nest::initial(fp);
+        nest.cursor = 1;
+        let _ = nest.split(2);
+        nest.cursor = 0;
+        nest.parallelize().unwrap_or_else(|e| panic!("{}: {e:?}", fp.id()));
+        let mut schedules = BTreeMap::new();
+        schedules.insert(fp.id(), nest);
+
+        let mut base = CompiledGraph::compile(&g, &BTreeMap::new(), 29, 1).unwrap();
+        base.run();
+        let want = base.output("act").unwrap().to_vec();
+        for threads in [1usize, 2, 4] {
+            let mut cg = CompiledGraph::compile(&f, &schedules, 29, threads).unwrap();
+            cg.run();
+            let got = cg.output("act").unwrap();
+            assert!(
+                max_abs_diff(got, &want) < 1e-3,
+                "{} parallelized at {threads} threads",
+                fp.id()
+            );
+        }
+    }
+}
+
+#[test]
+fn mlp_constructor_matches_generalized_fusion() {
+    // The hardcoded mlp problem (matmul + fused bias/ReLU write-back) and
+    // the generalized rewrite over matmul -> bias-add -> relu compute the
+    // same layer.
+    let (m, n, k) = (4usize, 8usize, 6usize);
+    let mut a = Graph::new();
+    a.add_input("x", m * k).unwrap();
+    a.add_input("w", k * n).unwrap();
+    a.add_input("bvec", n).unwrap();
+    a.add_node("y", Op::Contract(Problem::mlp(m, n, k)), &["x", "w", "bvec"]).unwrap();
+
+    let mut b = Graph::new();
+    b.add_input("x", m * k).unwrap();
+    b.add_input("w", k * n).unwrap();
+    b.add_input("bvec", n).unwrap();
+    b.add_node("out", Op::Contract(Problem::matmul(m, n, k)), &["x", "w"]).unwrap();
+    b.add_node("biased", Op::BiasAdd { width: n }, &["out", "bvec"]).unwrap();
+    b.add_node("act", Op::Relu, &["biased"]).unwrap();
+    let (bf, report) = fuse(&b).unwrap();
+    assert_eq!(report.fused.len(), 2);
+
+    // Same input names => same seeded contents in every compilation.
+    let mut mlp = CompiledGraph::compile(&a, &BTreeMap::new(), 5, 1).unwrap();
+    mlp.run();
+    let want = mlp.output("y").unwrap().to_vec();
+    for threads in [1usize, 2, 4] {
+        let mut unfused = CompiledGraph::compile(&b, &BTreeMap::new(), 5, threads).unwrap();
+        unfused.run();
+        assert!(max_abs_diff(unfused.output("act").unwrap(), &want) < 1e-3);
+        let mut fused = CompiledGraph::compile(&bf, &BTreeMap::new(), 5, threads).unwrap();
+        fused.run();
+        assert!(max_abs_diff(fused.output("act").unwrap(), &want) < 1e-3);
+    }
+}
+
+#[test]
+fn illegal_candidates_reject_with_typed_reasons() {
+    // Multi-consumer and dim-mismatch, across every family.
+    for p in family_problems() {
+        let width = unit_width(&p).unwrap();
+
+        // A second consumer of the contraction output blocks the fold.
+        let mut g = unfused_layer(p, width);
+        g.add_node("probe", Op::Relu, &["out"]).unwrap();
+        let (f, report) = fuse(&g).unwrap();
+        assert_eq!(f.nodes.len(), 4, "{}: nothing may fold", p.id());
+        assert!(
+            report.rejected.contains(&("biased".into(), FusionReject::MultiConsumer)),
+            "{}: {:?}",
+            p.id(),
+            report.rejected
+        );
+
+        // A bias spanning the whole output validates as a graph (the
+        // width divides the length) but is not the unit-dim broadcast.
+        let bad_width = p.out_len();
+        assert_ne!(bad_width, width);
+        let g = unfused_layer(p, bad_width);
+        let (_, report) = fuse(&g).unwrap();
+        assert!(
+            report.rejected.contains(&("biased".into(), FusionReject::DimMismatch)),
+            "{}: {:?}",
+            p.id(),
+            report.rejected
+        );
+    }
+
+    // A contraction consuming a contraction is a reducing consumer, for
+    // matmul chains and conv stacks alike.
+    let mut g = Graph::new();
+    g.add_input("x", 6 * 5).unwrap();
+    g.add_input("w0", 5 * 8).unwrap();
+    g.add_input("w1", 8 * 3).unwrap();
+    g.add_node("m0", Op::Contract(Problem::matmul(6, 8, 5)), &["x", "w0"]).unwrap();
+    g.add_node("m1", Op::Contract(Problem::matmul(6, 3, 8)), &["m0", "w1"]).unwrap();
+    let (_, report) = fuse(&g).unwrap();
+    assert_eq!(report.rejected, vec![("m1".into(), FusionReject::ReductionConsumer)]);
+
+    let mut g = Graph::new();
+    g.add_input("img", 9 * 11).unwrap();
+    g.add_input("k0", 9).unwrap();
+    g.add_input("k1", 9).unwrap();
+    g.add_node("c0", Op::Contract(Problem::conv2d(7, 9, 3, 3)), &["img", "k0"]).unwrap();
+    g.add_node("c1", Op::Contract(Problem::conv2d(5, 7, 3, 3)), &["c0", "k1"]).unwrap();
+    let (_, report) = fuse(&g).unwrap();
+    assert_eq!(report.rejected, vec![("c1".into(), FusionReject::ReductionConsumer)]);
+
+    // An elementwise op on an external input has no producer to fold
+    // into; a pre-fused mlp contraction has its epilogue slots occupied.
+    let mut g = Graph::new();
+    let p = Problem::mlp(4, 8, 6);
+    g.add_input("x", 4 * 6).unwrap();
+    g.add_input("w", 6 * 8).unwrap();
+    g.add_input("bvec", 8).unwrap();
+    g.add_node("y", Op::Contract(p), &["x", "w", "bvec"]).unwrap();
+    g.add_node("act", Op::Relu, &["y"]).unwrap();
+    g.add_node("loose", Op::Relu, &["x"]).unwrap();
+    let (_, report) = fuse(&g).unwrap();
+    assert!(report.fused.is_empty());
+    assert!(
+        report.rejected.contains(&("act".into(), FusionReject::EpilogueOccupied)),
+        "{:?}",
+        report.rejected
+    );
+    assert!(
+        report.rejected.contains(&("loose".into(), FusionReject::NoContractProducer)),
+        "{:?}",
+        report.rejected
+    );
+}

@@ -157,6 +157,46 @@ fn identical_concurrent_requests_coalesce_onto_one_tune() {
     assert_eq!(snap.served, 5);
 }
 
+#[test]
+fn store_answered_leader_propagates_store_provenance_to_followers() {
+    let service = Arc::new(TuningService::new(ServiceCfg {
+        seed: 7,
+        threads: 1,
+        store: Some(TuningStore::in_memory()),
+        ..ServiceCfg::default()
+    }));
+    let req = cost_req("matmul:96x96x96", "greedy2", Budget::evals(60), 21);
+    // Pre-warm: a direct serve records the tune in the store.
+    let warm = service.serve(&req).unwrap();
+    assert!(warm.evals > 0);
+    assert_eq!(warm.cache, None);
+
+    // Paused burst of identical requests: one leader plus two coalesced
+    // followers, and the leader is answered from the store.
+    let (server, rx) = Server::start(service, paused_cfg(2));
+    for _ in 0..3 {
+        server.submit(&req);
+    }
+    let snap = server.shutdown();
+    let resps: Vec<TuneResponse> =
+        drain(rx).iter().map(|o| TuneResponse::from_json(&o.line).unwrap()).collect();
+    assert_eq!(resps.len(), 3);
+    // Provenance precedence store > coalesced > fresh: every response
+    // reports the store record it actually received — none claims
+    // "coalesced" — and no phantom savings are booked for a leader that
+    // spent zero evals.
+    for r in &resps {
+        assert_eq!(r.cache.as_deref(), Some("store"), "{:?}", r.cache);
+        assert_eq!(r.evals, 0);
+        assert_eq!(r.nest_hash, warm.nest_hash);
+    }
+    assert_eq!(snap.store_hits, 3);
+    assert_eq!(snap.coalesced, 0);
+    assert_eq!(snap.evals_saved, 0);
+    assert_eq!(snap.evals_total, 0);
+    assert_eq!(snap.served, 3);
+}
+
 // ---------------------------------------------------------------------------
 // Admission control and degradation
 // ---------------------------------------------------------------------------
