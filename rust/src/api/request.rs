@@ -2,11 +2,17 @@
 //! encode/decode over [`crate::util::json`] (schema `tune_request/v1` /
 //! `tune_response/v1`). The `serve` CLI subcommand, the CI smoke step,
 //! and any out-of-process caller speak exactly these documents.
+//!
+//! Requests may carry an optional [`MachineDescriptor`] (`"machine"`)
+//! naming the hardware the caller tunes for; responses always report the
+//! fingerprint of the machine they were served on (`"machine"`, hex) so
+//! fleet callers can audit cross-machine transfer.
 
 use super::spec;
 use super::StrategyKind;
 use crate::featurize::FeatureMask;
 use crate::ir::Problem;
+use crate::machine::MachineDescriptor;
 use crate::search::{Budget, TracePoint};
 use crate::util::json::{parse, write_json, Json};
 use anyhow::{anyhow, bail, Result};
@@ -69,6 +75,10 @@ pub struct TuneRequest {
     /// Feature groups zeroed in the state vector
     /// (`cursor|size|tail|kind|hist` — ablation studies).
     pub features_off: Vec<String>,
+    /// Machine the caller tunes for; `None` uses the service machine.
+    /// Selects the cost-model backend instance, the per-machine ranker
+    /// head, and the machine-aware transfer distance (DESIGN.md §15).
+    pub machine: Option<MachineDescriptor>,
 }
 
 impl TuneRequest {
@@ -85,6 +95,7 @@ impl TuneRequest {
             params: None,
             untrained: false,
             features_off: Vec::new(),
+            machine: None,
         }
     }
 
@@ -151,6 +162,9 @@ impl TuneRequest {
                 Json::Arr(self.features_off.iter().map(|s| Json::Str(s.clone())).collect()),
             );
         }
+        if let Some(m) = &self.machine {
+            root.insert("machine".into(), m.to_json_value());
+        }
         let mut out = String::new();
         write_json(&Json::Obj(root), &mut out);
         out
@@ -170,7 +184,7 @@ impl TuneRequest {
         };
         // Reject unknown knobs: a typo'd field name must not silently run
         // the request with defaults (mirrors the strict budget object).
-        const KNOWN: [&str; 11] = [
+        const KNOWN: [&str; 12] = [
             "schema",
             "problem",
             "strategy",
@@ -182,6 +196,7 @@ impl TuneRequest {
             "params",
             "untrained",
             "features_off",
+            "machine",
         ];
         for k in obj.keys() {
             if !KNOWN.contains(&k.as_str()) {
@@ -245,6 +260,10 @@ impl TuneRequest {
                 })
                 .collect::<Result<_>>()?;
         }
+        req.machine = match doc.get("machine") {
+            None | Some(Json::Null) => None,
+            Some(m) => Some(MachineDescriptor::from_json_value(m)?),
+        };
         Ok(req)
     }
 }
@@ -262,6 +281,10 @@ pub struct TuneResponse {
     pub strategy: String,
     /// Backend that scored it.
     pub backend: String,
+    /// Fingerprint (hex) of the [`MachineDescriptor`] the request was
+    /// served for — the request's machine when present, else the
+    /// service machine. Pre-fleet documents decode as the host default.
+    pub machine: String,
     /// The seed the request actually ran with (explicit or derived).
     pub seed: u64,
     /// Compact schedule signature (`ir::transform::schedule_signature`).
@@ -321,6 +344,7 @@ impl TuneResponse {
         root.insert("kind".into(), Json::Str(self.kind.clone()));
         root.insert("strategy".into(), Json::Str(self.strategy.clone()));
         root.insert("backend".into(), Json::Str(self.backend.clone()));
+        root.insert("machine".into(), Json::Str(self.machine.clone()));
         root.insert("seed".into(), Json::Str(self.seed.to_string()));
         root.insert("schedule".into(), Json::Str(self.schedule.clone()));
         root.insert("nest".into(), Json::Str(self.nest.clone()));
@@ -450,6 +474,11 @@ impl TuneResponse {
             kind: s("kind")?,
             strategy: s("strategy")?,
             backend: s("backend")?,
+            machine: doc
+                .get("machine")
+                .and_then(Json::as_str)
+                .map(String::from)
+                .unwrap_or_else(|| MachineDescriptor::host_default().fingerprint_hex()),
             seed: doc
                 .get("seed")
                 .and_then(json_u64)
@@ -581,6 +610,7 @@ mod tests {
             params: Some("results/apex_dqn.ltps".into()),
             untrained: true,
             features_off: vec!["hist".into(), "cursor".into()],
+            machine: Some(MachineDescriptor::host_default().perturbed()),
         };
         assert_eq!(TuneRequest::from_json(&full.to_json()).unwrap(), full);
     }
@@ -596,6 +626,20 @@ mod tests {
         assert_eq!(req.seed, None);
         assert_eq!(req.budget.max_evals, Some(50));
         assert_eq!(req.budget.time, None);
+        assert_eq!(req.machine, None);
+    }
+
+    #[test]
+    fn request_machine_round_trips_and_bad_machines_are_errors() {
+        let mut req = TuneRequest::new("64x64x64", "greedy2", Budget::evals(10));
+        req.machine = Some(MachineDescriptor::host_default().perturbed());
+        let back = TuneRequest::from_json(&req.to_json()).unwrap();
+        assert_eq!(back.machine, req.machine);
+        assert!(TuneRequest::from_json(
+            r#"{"problem": "64x64x64", "strategy": "greedy2",
+                "budget": {"evals": 10}, "machine": {"freq_ghz": 2.2}}"#
+        )
+        .is_err());
     }
 
     #[test]
@@ -681,6 +725,7 @@ mod tests {
         let mut resp = svc.serve(&req).unwrap();
         assert_eq!(resp.id, None);
         assert_eq!(resp.degraded, None);
+        assert_eq!(resp.machine, MachineDescriptor::host_default().fingerprint_hex());
         resp.id = Some(17);
         resp.degraded = Some("queue depth 9 >= 4".into());
         let back = TuneResponse::from_json(&resp.to_json()).unwrap();

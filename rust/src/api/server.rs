@@ -153,6 +153,9 @@ pub struct MetricsSnapshot {
     pub p50_ms: f64,
     /// 99th-percentile end-to-end latency, milliseconds.
     pub p99_ms: f64,
+    /// Hex fingerprint of the service's default machine descriptor, so
+    /// fleet schedulers scraping metrics can tell servers apart.
+    pub machine: String,
 }
 
 impl MetricsSnapshot {
@@ -183,6 +186,7 @@ impl MetricsSnapshot {
         o.insert("qps".to_string(), Json::Num(self.qps));
         o.insert("p50_ms".to_string(), Json::Num(self.p50_ms));
         o.insert("p99_ms".to_string(), Json::Num(self.p99_ms));
+        o.insert("machine".to_string(), Json::Str(self.machine.clone()));
         let mut out = String::new();
         write_json(&Json::Obj(o), &mut out);
         out
@@ -410,6 +414,7 @@ impl Inner {
             qps: served as f64 / uptime,
             p50_ms: percentile(&lats, 50.0),
             p99_ms: percentile(&lats, 99.0),
+            machine: self.service.machine_fingerprint_hex(),
         }
     }
 

@@ -18,11 +18,12 @@ use super::{
 };
 use crate::backend::{peak, SharedBackend};
 use crate::ir::{Nest, Problem};
+use crate::machine::MachineDescriptor;
 use crate::rl::params::ParamSet;
 use crate::runtime::Runtime;
 use crate::search::batch::problem_seed;
 use crate::search::evolve::EvolveStrategy;
-use crate::store::cost::CostRanker;
+use crate::store::cost::MachineRanker;
 use crate::store::transfer::TransferStrategy;
 use crate::store::{TuneRecord, TuningStore};
 use anyhow::{anyhow, Result};
@@ -48,7 +49,15 @@ pub struct ServiceCfg {
     pub store: Option<TuningStore>,
     /// Learned cost ranker: search strategies pre-order candidate
     /// expansion with it and the transfer strategy orders its replays.
-    pub ranker: Option<Arc<CostRanker>>,
+    /// A [`MachineRanker`] resolves the serving machine's head (pooled
+    /// fallback on unseen hardware) per request.
+    pub ranker: Option<Arc<MachineRanker>>,
+    /// The machine this service tunes for by default. Requests may
+    /// override it per-job (`TuneRequest.machine`); either way the
+    /// descriptor selects the cost-model backend instance, stamps every
+    /// tuning record, filters warm store hits, and picks the ranker head
+    /// (DESIGN.md §15).
+    pub machine: MachineDescriptor,
 }
 
 impl Default for ServiceCfg {
@@ -59,6 +68,7 @@ impl Default for ServiceCfg {
             default_params: None,
             store: None,
             ranker: None,
+            machine: MachineDescriptor::host_default(),
         }
     }
 }
@@ -67,7 +77,12 @@ impl Default for ServiceCfg {
 /// sharing across serving threads (asserted by a test below).
 pub struct TuningService {
     cfg: ServiceCfg,
-    backends: Mutex<HashMap<BackendChoice, SharedBackend>>,
+    /// Warm backend handles keyed by (kind, machine fingerprint): each
+    /// distinct machine gets its own cost-model instance pool and eval
+    /// cache, so a fleet service never serves machine A's GFLOPS for
+    /// machine B. The measured backend keys on 0 — it always measures
+    /// the physical host.
+    backends: Mutex<HashMap<(BackendChoice, u64), SharedBackend>>,
     params: Mutex<HashMap<PathBuf, Arc<ParamSet>>>,
     runtime: Mutex<Option<Arc<Runtime>>>,
 }
@@ -83,18 +98,34 @@ impl TuningService {
         }
     }
 
-    /// The warm shared evaluation handle for `choice` (created on first
-    /// use; every later request reuses its schedule cache and instance
-    /// pool).
+    /// The warm shared evaluation handle for `choice` on the service's
+    /// own machine (created on first use; every later request reuses its
+    /// schedule cache and instance pool).
     pub fn backend(&self, choice: BackendChoice) -> SharedBackend {
+        self.backend_on(choice, &self.cfg.machine)
+    }
+
+    /// The warm shared evaluation handle for `choice` on `machine`. The
+    /// cost-model backend is instantiated per machine fingerprint (its
+    /// predictions depend on the cache hierarchy); the measured backend
+    /// always runs on the physical host, whatever descriptor a request
+    /// carries.
+    pub fn backend_on(&self, choice: BackendChoice, machine: &MachineDescriptor) -> SharedBackend {
+        let key = match choice {
+            BackendChoice::Measured => (choice, 0),
+            BackendChoice::CostModel => (choice, machine.fingerprint()),
+        };
         let mut map = self.backends.lock().expect("backend map poisoned");
-        map.entry(choice)
+        map.entry(key)
             .or_insert_with(|| match choice {
                 BackendChoice::Measured => {
                     SharedBackend::with_factory(crate::backend::executor::ExecutorBackend::default)
                 }
                 BackendChoice::CostModel => {
-                    SharedBackend::with_factory(crate::backend::cost_model::CostModel::default)
+                    let m = machine.to_machine();
+                    SharedBackend::with_factory(move || {
+                        crate::backend::cost_model::CostModel::new(m.clone())
+                    })
                 }
             })
             .clone()
@@ -102,16 +133,31 @@ impl TuningService {
 
     /// Machine peak GFLOPS for `choice`: the empirical FMA peak for the
     /// measured backend (measured once per process — `peak_gflops` is
-    /// globally memoized), the cost model's compute roofline otherwise.
-    /// Serving never calls this (no strategy consumes the peak); it is
-    /// the warm-state accessor for callers that normalize rewards.
+    /// globally memoized), the service machine's compute roofline
+    /// otherwise. Serving never calls this (no strategy consumes the
+    /// peak); it is the warm-state accessor for callers that normalize
+    /// rewards.
     pub fn peak(&self, choice: BackendChoice) -> f64 {
         match choice {
             BackendChoice::Measured => peak::peak_gflops(),
-            BackendChoice::CostModel => {
-                crate::backend::cost_model::Machine::default().roofline_gflops()
-            }
+            BackendChoice::CostModel => self.cfg.machine.roofline_gflops(),
         }
+    }
+
+    /// The machine this service tunes for by default.
+    pub fn machine(&self) -> &MachineDescriptor {
+        &self.cfg.machine
+    }
+
+    /// Hex fingerprint of the service machine (the serve-metrics field).
+    pub fn machine_fingerprint_hex(&self) -> String {
+        self.cfg.machine.fingerprint_hex()
+    }
+
+    /// The machine a request tunes for: its own descriptor when it
+    /// carries one, else the service machine.
+    pub fn request_machine(&self, req: &TuneRequest) -> MachineDescriptor {
+        req.machine.clone().unwrap_or_else(|| self.cfg.machine.clone())
     }
 
     /// The warm PJRT runtime, loaded on the first policy request.
@@ -165,9 +211,14 @@ impl TuningService {
         req: &TuneRequest,
         seed: u64,
     ) -> Result<Box<dyn Strategy>> {
+        // The ranker head and the transfer distance are machine-specific:
+        // resolve the request's machine once (pooled fallback on hardware
+        // the ranker has never seen).
+        let machine = self.request_machine(req);
+        let head = self.cfg.ranker.as_ref().map(|rk| rk.select(machine.fingerprint()));
         Ok(match kind {
-            StrategyKind::Search(a) => match &self.cfg.ranker {
-                Some(rk) => Box::new(RankedSearch { algo: a, ranker: rk.clone() }),
+            StrategyKind::Search(a) => match head {
+                Some(rk) => Box::new(RankedSearch { algo: a, ranker: rk }),
                 None => Box::new(a),
             },
             StrategyKind::Baseline(b) => Box::new(b),
@@ -185,7 +236,8 @@ impl TuningService {
                     )
                 })?;
                 Box::new(TransferStrategy {
-                    ranker: self.cfg.ranker.clone(),
+                    ranker: head,
+                    machine,
                     ..TransferStrategy::new(store)
                 })
             }
@@ -195,7 +247,7 @@ impl TuningService {
             // measurements otherwise.
             StrategyKind::Evolve => Box::new(EvolveStrategy {
                 store: self.cfg.store.clone(),
-                ranker: self.cfg.ranker.clone(),
+                ranker: head,
                 ..EvolveStrategy::default()
             }),
             StrategyKind::PanicTest => Box::new(super::PanicProbe),
@@ -215,9 +267,10 @@ impl TuningService {
         self.cfg.store.as_ref()
     }
 
-    /// Serve one request against the service's own warm backend.
+    /// Serve one request against the service's own warm backend (the
+    /// request-machine instance when the request carries a descriptor).
     pub fn serve(&self, req: &TuneRequest) -> Result<TuneResponse> {
-        let backend = self.backend(req.backend);
+        let backend = self.backend_on(req.backend, &self.request_machine(req));
         self.serve_on(&backend, req)
     }
 
@@ -243,8 +296,9 @@ impl TuningService {
         let t0 = Instant::now();
         let (problem, kind, mask) = req.validate()?;
         let seed = self.request_seed(req, problem);
+        let machine = self.request_machine(req);
         if let Some(store) = &self.cfg.store {
-            if let Some(resp) = self.store_hit(store, backend, problem, seed, &t0) {
+            if let Some(resp) = self.store_hit(store, backend, problem, seed, &machine, &t0) {
                 return Ok(resp);
             }
         }
@@ -257,7 +311,7 @@ impl TuningService {
         let result =
             run_strategy(strategy.as_ref(), backend, problem, 1.0, mask, req.budget, &opts)?;
         if let Some(store) = &self.cfg.store {
-            let rec = TuneRecord::from_result(problem, &result, backend.name(), seed);
+            let rec = TuneRecord::from_result_on(problem, &result, backend.name(), seed, &machine);
             if let Err(e) = store.append(rec) {
                 eprintln!("warning: recording tune for {} failed: {e:#}", problem.id());
             }
@@ -269,6 +323,7 @@ impl TuningService {
             kind: problem.kind().to_string(),
             strategy: result.strategy.clone(),
             backend: backend.name().to_string(),
+            machine: machine.fingerprint_hex(),
             seed,
             schedule: crate::ir::transform::schedule_signature(&result.best),
             nest: rendered_nest(&result.best),
@@ -297,15 +352,19 @@ impl TuningService {
     /// favor of the next-best (a corrupt entry must degrade gracefully,
     /// never wedge warm serving for the problem or produce a wrong
     /// answer); only when no record verifies does the request fall
-    /// through to a fresh tune.
+    /// through to a fresh tune. Hits are machine-exact: a record tuned
+    /// on different hardware never answers warm (cross-machine reuse is
+    /// the transfer strategy's job, with real re-evaluation).
     fn store_hit(
         &self,
         store: &TuningStore,
         backend: &SharedBackend,
         problem: Problem,
         seed: u64,
+        machine: &MachineDescriptor,
         t0: &Instant,
     ) -> Option<TuneResponse> {
+        let machine_fp = machine.fingerprint();
         let mut recs: Vec<_> = store
             .records_for(&problem.id())
             .into_iter()
@@ -314,6 +373,7 @@ impl TuningService {
             // speedup on the wire.
             .filter(|r| {
                 r.backend == backend.name()
+                    && r.machine_fp() == machine_fp
                     && r.gflops.is_finite()
                     && r.gflops_initial.is_finite()
             })
@@ -346,6 +406,7 @@ impl TuningService {
             kind: problem.kind().to_string(),
             strategy: rec.strategy.clone(),
             backend: backend.name().to_string(),
+            machine: machine.fingerprint_hex(),
             seed,
             schedule: crate::ir::transform::schedule_signature(&nest),
             nest: rendered_nest(&nest),
@@ -588,6 +649,46 @@ mod tests {
         let resp = s.serve(&req).unwrap();
         assert_eq!(resp.strategy, "transfer");
         assert!(resp.note.unwrap().contains("cold miss"));
+    }
+
+    #[test]
+    fn request_machine_selects_backend_and_keys_store_hits() {
+        let (s, store) = svc_with_store();
+        let host = MachineDescriptor::host_default();
+        let other = host.perturbed();
+        let mut req = TuneRequest::new("matmul:72x72x72", "greedy2", Budget::evals(120));
+        req.machine = Some(other.clone());
+        let a = s.serve(&req).unwrap();
+        assert_eq!(a.machine, other.fingerprint_hex());
+        assert_eq!(a.cache, None);
+        let rec = store.lookup("mm_72x72x72", "cost_model").unwrap();
+        assert_eq!(rec.machine_fp(), other.fingerprint(), "record stamped with request machine");
+
+        // Same problem on the service (host) machine: the other-machine
+        // record must not answer warm — a fresh tune runs and records.
+        let host_req = TuneRequest::new("matmul:72x72x72", "greedy2", Budget::evals(120));
+        let b = s.serve(&host_req).unwrap();
+        assert_eq!(b.machine, host.fingerprint_hex());
+        assert_eq!(b.cache, None, "cross-machine record must not serve warm");
+        assert!(b.evals > 0);
+        assert_eq!(store.len(), 2);
+
+        // Repeats on each machine now hit their own records.
+        let a2 = s.serve(&req).unwrap();
+        assert_eq!(a2.cache.as_deref(), Some("store"));
+        assert_eq!(a2.machine, other.fingerprint_hex());
+        let b2 = s.serve(&host_req).unwrap();
+        assert_eq!(b2.cache.as_deref(), Some("store"));
+        assert_eq!(b2.gflops, b.gflops);
+        assert_eq!(a2.gflops, a.gflops);
+    }
+
+    #[test]
+    fn peak_uses_the_service_machine_roofline() {
+        let other = MachineDescriptor::host_default().perturbed();
+        let s = TuningService::new(ServiceCfg { machine: other.clone(), ..ServiceCfg::default() });
+        assert_eq!(s.peak(BackendChoice::CostModel), other.roofline_gflops());
+        assert_eq!(s.machine_fingerprint_hex(), other.fingerprint_hex());
     }
 
     #[test]

@@ -21,7 +21,7 @@ pub fn peak_for(cfg: &EvalCfg) -> f64 {
     if cfg.measured {
         peak::peak_gflops()
     } else {
-        crate::backend::cost_model::Machine::default().roofline_gflops()
+        crate::machine::MachineDescriptor::host_default().roofline_gflops()
     }
 }
 
@@ -709,6 +709,162 @@ pub fn store_transfer(cfg: &EvalCfg, n: usize, budget_evals: u64) -> Result<Stri
 }
 
 // ---------------------------------------------------------------------------
+// Machine: continual learning across hardware (DESIGN.md §15)
+// ---------------------------------------------------------------------------
+
+/// Cross-machine continual-learning experiment: accumulate a tuning
+/// corpus on the default machine, then simulate a hardware refresh by
+/// perturbing the cost-model constants through a
+/// [`crate::machine::MachineDescriptor`] override ([`perturbed`]) and
+/// tune the same held-out problems on the "new" machine two ways — cold
+/// (fresh greedy-2 at the full budget, scored by the new machine's cost
+/// model) and warm (the machine-aware `transfer` strategy replaying the
+/// old-machine corpus at a quarter of the budget, scored by the same new
+/// model). Reports the warm/cold GFLOPS geomean and the backend-eval
+/// ratio, and writes the tracked `BENCH_machine.json` (schema
+/// `bench_machine/v1`). Cost-model scored, so the numbers are
+/// deterministic at a fixed seed; the pins are warm >= 90% of cold
+/// GFLOPS at <= 25% of its evaluations.
+///
+/// [`perturbed`]: crate::machine::MachineDescriptor::perturbed
+pub fn bench_machine(cfg: &EvalCfg, n: usize, budget_evals: u64) -> Result<String> {
+    use crate::backend::cost_model::CostModel;
+    use crate::backend::SharedBackend;
+    use crate::machine::{self, MachineDescriptor};
+    use crate::search::batch::problem_seed;
+    use crate::store::transfer::{nearest_problems, TransferStrategy};
+    use crate::store::TuningStore;
+    use crate::util::json::{write_json, Json};
+
+    let tcfg = EvalCfg { measured: false, ..cfg.clone() };
+    let old = MachineDescriptor::host_default();
+    let new = old.perturbed();
+    let ds = dataset::canonical();
+    let n = cfg.scaled(n).max(2);
+    let tests = dataset::sample_test(&ds, n, cfg.seed ^ 0x3ac1);
+
+    // Old-machine corpus: the fleet's history — the workloads themselves
+    // plus their nearest train neighbors, all tuned on the old machine.
+    let mut warm_ids = std::collections::BTreeSet::new();
+    let mut warm = Vec::new();
+    for &t in &tests {
+        if warm_ids.insert(t.id()) {
+            warm.push(t);
+        }
+        for p in nearest_problems(&ds.train, t, 3) {
+            if warm_ids.insert(p.id()) {
+                warm.push(p);
+            }
+        }
+    }
+    let store = TuningStore::in_memory();
+    let bcfg = batch::BatchCfg {
+        algo: SearchAlgo::Greedy2,
+        budget: Budget::evals(budget_evals),
+        depth: 10,
+        seed: cfg.seed,
+        threads: cfg.threads,
+        expand_threads: 1,
+    };
+    // Records carry the old machine's fingerprint (the default stamp).
+    batch::run_recorded(&warm, &tcfg.backend(), &bcfg, Some(&store), None);
+
+    // The "new machine": a backend whose cost model runs the perturbed
+    // constants. Both arms below are scored by exactly this model.
+    let m = new.to_machine();
+    let be_new = SharedBackend::with_factory(move || CostModel::new(m.clone()));
+
+    // Cold: fresh greedy-2 per problem at the full budget. Warm: the
+    // machine-aware transfer strategy, capped at a quarter of it.
+    let cold = batch::run(&tests, &be_new, &bcfg);
+    let strategy =
+        TransferStrategy { machine: new.clone(), ..TransferStrategy::new(store.clone()) };
+    let warm_budget = (budget_evals / 4).max(1);
+    let mut rows = Vec::new();
+    let mut ratios = Vec::new();
+    let (mut cold_evals, mut warm_evals) = (0u64, 0u64);
+    for (o, &p) in cold.outcomes.iter().zip(&tests) {
+        let opts = TuneOpts { depth: 10, seed: problem_seed(cfg.seed, p), expand_threads: 1 };
+        let r = api::run_strategy(
+            &strategy,
+            &be_new,
+            p,
+            1.0,
+            FeatureMask::default(),
+            Budget::evals(warm_budget),
+            &opts,
+        )?;
+        let ratio = r.best_gflops / o.best_gflops.max(1e-12);
+        ratios.push(ratio);
+        cold_evals += o.evals;
+        warm_evals += r.evals;
+        rows.push((p, o.best_gflops, o.evals, r.best_gflops, r.evals, ratio));
+    }
+    let gflops_ratio = stats::geomean(&ratios);
+    let evals_ratio = warm_evals as f64 / cold_evals.max(1) as f64;
+
+    let mut csv = String::from(
+        "problem,cold_gflops,cold_evals,warm_gflops,warm_evals,gflops_ratio\n",
+    );
+    let mut json_rows = Vec::new();
+    for (p, cg, ce, wg, we, ratio) in &rows {
+        let _ = writeln!(csv, "{p},{cg:.4},{ce},{wg:.4},{we},{ratio:.4}");
+        let mut row = BTreeMap::new();
+        row.insert("problem".to_string(), Json::Str(p.id()));
+        row.insert("cold_gflops".to_string(), Json::Num(*cg));
+        row.insert("cold_evals".to_string(), Json::Num(*ce as f64));
+        row.insert("warm_gflops".to_string(), Json::Num(*wg));
+        row.insert("warm_evals".to_string(), Json::Num(*we as f64));
+        row.insert("gflops_ratio".to_string(), Json::Num(*ratio));
+        json_rows.push(Json::Obj(row));
+    }
+    let mut root = BTreeMap::new();
+    root.insert("schema".to_string(), Json::Str("bench_machine/v1".into()));
+    root.insert("problems".to_string(), Json::Num(tests.len() as f64));
+    root.insert("warm_problems".to_string(), Json::Num(warm.len() as f64));
+    root.insert("records".to_string(), Json::Num(store.len() as f64));
+    root.insert("machine_old".to_string(), Json::Str(old.fingerprint_hex()));
+    root.insert("machine_new".to_string(), Json::Str(new.fingerprint_hex()));
+    root.insert("machine_distance".to_string(), Json::Num(machine::distance(&old, &new)));
+    root.insert("budget_evals".to_string(), Json::Num(budget_evals as f64));
+    root.insert("warm_budget_evals".to_string(), Json::Num(warm_budget as f64));
+    root.insert("cold_evals".to_string(), Json::Num(cold_evals as f64));
+    root.insert("warm_evals".to_string(), Json::Num(warm_evals as f64));
+    root.insert("gflops_ratio".to_string(), Json::Num(gflops_ratio));
+    root.insert("evals_ratio".to_string(), Json::Num(evals_ratio));
+    root.insert("results".to_string(), Json::Arr(json_rows));
+    let mut json_text = String::new();
+    write_json(&Json::Obj(root), &mut json_text);
+    json_text.push('\n');
+    std::fs::write("BENCH_machine.json", &json_text)?;
+    write_out(&cfg.out_dir, "machine_transfer.csv", &csv)?;
+
+    let md = format!(
+        "# Continual learning across machines ({} problems, {} warm, \
+         cold budget {budget_evals} / warm budget {warm_budget} evals)\n\n\
+         - old machine {} -> new machine {} (feature distance {:.2})\n\
+         - warm transfer from the old-machine corpus reaches **{:.1}%** of \
+         cold greedy-2 GFLOPS on the new machine (geomean)\n\
+         - using **{:.1}%** of its evaluations ({} vs {})\n\
+         - store: {} records over {} problems\n\n\
+         BENCH_machine.json written (schema bench_machine/v1).\n",
+        tests.len(),
+        warm.len(),
+        old.fingerprint_hex(),
+        new.fingerprint_hex(),
+        machine::distance(&old, &new),
+        100.0 * gflops_ratio,
+        100.0 * evals_ratio,
+        warm_evals,
+        cold_evals,
+        store.len(),
+        warm.len(),
+    );
+    write_out(&cfg.out_dir, "machine_transfer.md", &md)?;
+    Ok(md)
+}
+
+// ---------------------------------------------------------------------------
 // Search: evolve-vs-greedy2 sample efficiency (DESIGN.md §12)
 // ---------------------------------------------------------------------------
 
@@ -873,7 +1029,7 @@ pub fn bench_serve(cfg: &EvalCfg, budget_evals: u64) -> Result<String> {
             threads: 1,
             default_params: None,
             store,
-            ranker: None,
+            ..ServiceCfg::default()
         }))
     };
 
@@ -1111,7 +1267,7 @@ pub fn bench_graph(cfg: &EvalCfg, budget_evals: u64) -> Result<String> {
             threads: 1,
             default_params: None,
             store: Some(TuningStore::in_memory()),
-            ranker: None,
+            ..ServiceCfg::default()
         });
         let mut req = GraphRequest::new(w.spec, "greedy2", Budget::evals(budget_evals));
         req.batch = w.batch;
@@ -1146,7 +1302,7 @@ pub fn bench_graph(cfg: &EvalCfg, budget_evals: u64) -> Result<String> {
                 threads: 1,
                 default_params: None,
                 store: None,
-                ranker: None,
+                ..ServiceCfg::default()
             });
             let mut creq = TuneRequest::new(p.id(), "greedy2", Budget::evals(per_node));
             creq.seed = Some(cfg.seed);

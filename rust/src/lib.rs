@@ -35,11 +35,20 @@
 //! subcommands are thin adapters over it.
 //!
 //! [`store`] (DESIGN.md §10) is the serving system's memory: every
-//! completed tune is persisted as a `tune_record/v1` JSONL line, repeat
-//! traffic for an exact problem is served from the store with zero
-//! backend evaluations, cold misses can be transfer-tuned by replaying
-//! the nearest recorded schedules, and a learned cost ranker trained from
+//! completed tune is persisted as a `tune_record/v2` JSONL line (v1
+//! lines still decode with a default-machine fallback), repeat traffic
+//! for an exact problem is served from the store with zero backend
+//! evaluations, cold misses can be transfer-tuned by replaying the
+//! nearest recorded schedules, and a learned cost ranker trained from
 //! the corpus pre-orders search expansion.
+//!
+//! [`machine`] (DESIGN.md §15) makes the hardware a first-class entity:
+//! a serializable [`machine::MachineDescriptor`] with a stable
+//! fingerprint is stamped into every record, threaded through requests,
+//! responses, and serve metrics, and drives machine-aware transfer
+//! distances plus per-machine cost-ranker heads — the continual-learning
+//! eval (`eval machine`) shows warm cross-machine transfer beating cold
+//! tuning on a simulated new machine.
 //!
 //! [`graph`] (DESIGN.md §14) lifts tuning from kernels to whole models:
 //! a multi-op graph IR of [`ir::Problem`] nodes wired through named
@@ -60,6 +69,7 @@ pub mod eval;
 pub mod featurize;
 pub mod graph;
 pub mod ir;
+pub mod machine;
 pub mod rl;
 pub mod runtime;
 pub mod search;

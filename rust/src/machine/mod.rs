@@ -1,0 +1,512 @@
+//! Machine identity layer: a serializable hardware descriptor with a
+//! stable fingerprint, so tuning records, transfer distances, ranker
+//! heads, and serve metrics can all condition on *which* machine a
+//! schedule was measured on.
+//!
+//! The cost model's [`Machine`] is an internal modeling struct; this
+//! module lifts it into a first-class, wire-format entity:
+//!
+//! - [`MachineDescriptor`] mirrors every [`Machine`] field (cache
+//!   hierarchy, line size, lane widths, core count, frequency) in a
+//!   plain serializable form (`machine/v1` JSON) and converts in both
+//!   directions.
+//! - [`MachineDescriptor::fingerprint`] is a stable FNV-1a hash over a
+//!   canonical byte encoding: the same descriptor hashes identically
+//!   across encode/decode round trips, and any field change produces a
+//!   different hash. The 16-hex fingerprint is what `tune_record/v2`
+//!   lines, `tune_response/v1` messages, and `serve_metrics/v1`
+//!   snapshots carry.
+//! - [`distance`] is an L2 metric over log-scale machine features,
+//!   combined with the problem distance in `store::transfer` so
+//!   records from similar hardware rank above exact-problem records
+//!   from dissimilar hardware.
+//! - [`MachineDescriptor::perturbed`] derives the canonical simulated
+//!   "new machine" (narrower vectors, slower memory, more cores) used
+//!   by the continual-learning eval (`eval machine`,
+//!   `BENCH_machine.json`) and the CI machine-transfer smoke.
+
+use crate::backend::cost_model::{CacheLevel, Machine};
+use crate::util::json::{self, Json};
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+
+/// Wire schema tag for a serialized descriptor.
+pub const MACHINE_SCHEMA: &str = "machine/v1";
+
+/// Canonical cache-level names restored on [`MachineDescriptor::to_machine`]
+/// (the cost model's [`CacheLevel::name`] is `&'static str`, so decoded
+/// strings cannot flow through; levels are named by index instead).
+const CACHE_NAMES: [&str; 8] = ["L1", "L2", "L3", "L4", "L5", "L6", "L7", "L8"];
+
+/// One cache level of a descriptor: capacity in lines plus the modeled
+/// per-miss-line latency. Mirrors [`CacheLevel`] with an owned name.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CacheSpec {
+    /// Display name (canonicalized to L1/L2/... by index on conversion).
+    pub name: String,
+    /// Capacity in cache lines.
+    pub lines: usize,
+    /// Effective cycles per capacity miss-line served by this level.
+    pub latency: f64,
+}
+
+/// Serializable machine identity: every [`Machine`] constant the cost
+/// model conditions on, in a form that can be stamped into records,
+/// shipped over the wire, and hashed into a stable fingerprint.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MachineDescriptor {
+    /// f32 elements per cache line.
+    pub line_elems: usize,
+    /// Cache hierarchy, smallest first (at most 8 levels).
+    pub caches: Vec<CacheSpec>,
+    /// Cycles per line fetched from memory past the LLC.
+    pub mem_latency: f64,
+    /// Cycles per compulsory (prefetched) miss-line.
+    pub stream_cost: f64,
+    /// Core frequency in GHz.
+    pub freq_ghz: f64,
+    /// FMA throughput in f32 lanes/cycle for unit-stride innermost loops.
+    pub vec_lanes: f64,
+    /// Effective lanes for a reduction-innermost loop.
+    pub red_lanes: f64,
+    /// Effective lanes for a strided innermost loop.
+    pub strided_lanes: f64,
+    /// Cycles of overhead per innermost-kernel invocation.
+    pub call_overhead: f64,
+    /// Worker cores available to the parallel executor.
+    pub cores: usize,
+    /// Cycles to spawn/join one scoped worker thread.
+    pub spawn_cycles: f64,
+}
+
+impl Default for MachineDescriptor {
+    fn default() -> Self {
+        MachineDescriptor::host_default()
+    }
+}
+
+impl MachineDescriptor {
+    /// Descriptor of the default modeled host ([`Machine::default`]) —
+    /// the machine every pre-v2 tuning record is assumed to come from.
+    pub fn host_default() -> Self {
+        MachineDescriptor::from_machine(&Machine::default())
+    }
+
+    /// Lift a cost-model [`Machine`] into a descriptor.
+    pub fn from_machine(m: &Machine) -> Self {
+        MachineDescriptor {
+            line_elems: m.line_elems,
+            caches: m
+                .caches
+                .iter()
+                .map(|c| CacheSpec { name: c.name.to_string(), lines: c.lines, latency: c.latency })
+                .collect(),
+            mem_latency: m.mem_latency,
+            stream_cost: m.stream_cost,
+            freq_ghz: m.freq_ghz,
+            vec_lanes: m.vec_lanes,
+            red_lanes: m.red_lanes,
+            strided_lanes: m.strided_lanes,
+            call_overhead: m.call_overhead,
+            cores: m.cores,
+            spawn_cycles: m.spawn_cycles,
+        }
+    }
+
+    /// Lower the descriptor back into the cost model's [`Machine`].
+    /// Cache names are canonicalized to L1/L2/... by index.
+    pub fn to_machine(&self) -> Machine {
+        let caches = self
+            .caches
+            .iter()
+            .enumerate()
+            .map(|(i, c)| CacheLevel {
+                name: CACHE_NAMES[i.min(CACHE_NAMES.len() - 1)],
+                lines: c.lines,
+                latency: c.latency,
+            })
+            .collect();
+        Machine {
+            line_elems: self.line_elems,
+            caches,
+            mem_latency: self.mem_latency,
+            stream_cost: self.stream_cost,
+            freq_ghz: self.freq_ghz,
+            vec_lanes: self.vec_lanes,
+            red_lanes: self.red_lanes,
+            strided_lanes: self.strided_lanes,
+            call_overhead: self.call_overhead,
+            cores: self.cores,
+            spawn_cycles: self.spawn_cycles,
+        }
+    }
+
+    /// Modeled compute roofline in GFLOPS (2 flops per FMA lane per
+    /// cycle). The single accessor behind which serve (`peak`) and eval
+    /// (`peak_for`) normalization are deduplicated.
+    pub fn roofline_gflops(&self) -> f64 {
+        2.0 * self.vec_lanes * self.freq_ghz
+    }
+
+    /// Stable 64-bit FNV-1a fingerprint over a canonical byte encoding
+    /// of every field. Survives JSON round trips bit-exact; any field
+    /// change (including a cache name) changes the hash.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        let mut eat = |bytes: &[u8]| {
+            for &b in bytes {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x0000_0100_0000_01b3);
+            }
+        };
+        eat(&(self.line_elems as u64).to_le_bytes());
+        eat(&(self.caches.len() as u64).to_le_bytes());
+        for c in &self.caches {
+            eat(c.name.as_bytes());
+            eat(&[0xff]);
+            eat(&(c.lines as u64).to_le_bytes());
+            eat(&c.latency.to_bits().to_le_bytes());
+        }
+        for f in [
+            self.mem_latency,
+            self.stream_cost,
+            self.freq_ghz,
+            self.vec_lanes,
+            self.red_lanes,
+            self.strided_lanes,
+            self.call_overhead,
+            self.spawn_cycles,
+        ] {
+            eat(&f.to_bits().to_le_bytes());
+        }
+        eat(&(self.cores as u64).to_le_bytes());
+        h
+    }
+
+    /// The fingerprint as the 16-hex string used on the wire and in
+    /// store stats.
+    pub fn fingerprint_hex(&self) -> String {
+        format!("{:016x}", self.fingerprint())
+    }
+
+    /// The canonical simulated "new machine" for continual-learning
+    /// evals: 25% faster clock, half the vector/reduction lanes, twice
+    /// the cores, 50% slower memory, a halved-but-slower L2 and a
+    /// doubled last-level cache. Deterministic (no RNG) so the
+    /// fingerprint — and every benchmark pinned against it — is stable.
+    pub fn perturbed(&self) -> MachineDescriptor {
+        let mut m = self.clone();
+        m.freq_ghz *= 1.25;
+        m.vec_lanes = (m.vec_lanes / 2.0).max(1.0);
+        m.red_lanes = (m.red_lanes / 2.0).max(1.0);
+        m.cores = (m.cores * 2).max(1);
+        m.mem_latency *= 1.5;
+        m.stream_cost *= 1.25;
+        if m.caches.len() > 1 {
+            m.caches[1].lines = (m.caches[1].lines / 2).max(1);
+            m.caches[1].latency *= 1.5;
+        }
+        if let Some(last) = m.caches.last_mut() {
+            last.lines *= 2;
+        }
+        m
+    }
+
+    /// Log-scale feature vector for the machine-distance metric. Fixed
+    /// length: cache levels beyond [`CACHE_NAMES`] capacity are never
+    /// decoded, and absent levels contribute zeros so hierarchies of
+    /// different depth remain comparable.
+    pub fn features(&self) -> Vec<f64> {
+        let lg = |x: f64| (x.max(1e-9)).log2();
+        let mut v = Vec::with_capacity(9 + 2 * CACHE_NAMES.len());
+        v.push(lg(self.line_elems as f64));
+        for i in 0..CACHE_NAMES.len() {
+            match self.caches.get(i) {
+                Some(c) => {
+                    v.push(lg(c.lines as f64 + 1.0));
+                    v.push(lg(c.latency + 1.0));
+                }
+                None => {
+                    v.push(0.0);
+                    v.push(0.0);
+                }
+            }
+        }
+        v.push(lg(self.mem_latency + 1.0));
+        v.push(lg(self.stream_cost + 1.0));
+        v.push(lg(self.freq_ghz));
+        v.push(lg(self.vec_lanes));
+        v.push(lg(self.red_lanes));
+        v.push(lg(self.strided_lanes));
+        v.push(lg(self.call_overhead + 1.0));
+        v.push(lg(self.cores as f64));
+        v
+    }
+
+    /// Serialize to a `machine/v1` JSON value.
+    pub fn to_json_value(&self) -> Json {
+        let mut root = BTreeMap::new();
+        root.insert("schema".into(), Json::Str(MACHINE_SCHEMA.into()));
+        root.insert("line_elems".into(), Json::Num(self.line_elems as f64));
+        let caches: Vec<Json> = self
+            .caches
+            .iter()
+            .map(|c| {
+                let mut o = BTreeMap::new();
+                o.insert("name".into(), Json::Str(c.name.clone()));
+                o.insert("lines".into(), Json::Num(c.lines as f64));
+                o.insert("latency".into(), Json::Num(c.latency));
+                Json::Obj(o)
+            })
+            .collect();
+        root.insert("caches".into(), Json::Arr(caches));
+        root.insert("mem_latency".into(), Json::Num(self.mem_latency));
+        root.insert("stream_cost".into(), Json::Num(self.stream_cost));
+        root.insert("freq_ghz".into(), Json::Num(self.freq_ghz));
+        root.insert("vec_lanes".into(), Json::Num(self.vec_lanes));
+        root.insert("red_lanes".into(), Json::Num(self.red_lanes));
+        root.insert("strided_lanes".into(), Json::Num(self.strided_lanes));
+        root.insert("call_overhead".into(), Json::Num(self.call_overhead));
+        root.insert("cores".into(), Json::Num(self.cores as f64));
+        root.insert("spawn_cycles".into(), Json::Num(self.spawn_cycles));
+        Json::Obj(root)
+    }
+
+    /// Serialize to a single-line `machine/v1` JSON string.
+    pub fn to_json(&self) -> String {
+        let mut out = String::new();
+        json::write_json(&self.to_json_value(), &mut out);
+        out
+    }
+
+    /// Decode from a parsed `machine/v1` JSON value. Strict: unknown
+    /// schemas, missing fields, non-finite or non-positive constants,
+    /// and hierarchies deeper than 8 levels are all errors.
+    pub fn from_json_value(doc: &Json) -> Result<MachineDescriptor> {
+        if let Some(s) = doc.get("schema") {
+            let s = s.as_str().ok_or_else(|| anyhow!("machine schema must be a string"))?;
+            if s != MACHINE_SCHEMA {
+                bail!("unsupported machine schema {s:?} (expected {MACHINE_SCHEMA:?})");
+            }
+        }
+        let f = |key: &str| -> Result<f64> {
+            let v = doc
+                .get(key)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow!("machine descriptor missing numeric {key:?}"))?;
+            if !v.is_finite() || v <= 0.0 {
+                bail!("machine descriptor field {key:?} must be finite and positive, got {v}");
+            }
+            Ok(v)
+        };
+        let u = |key: &str| -> Result<usize> {
+            let v = doc
+                .get(key)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("machine descriptor missing integer {key:?}"))?;
+            if v == 0 {
+                bail!("machine descriptor field {key:?} must be >= 1");
+            }
+            Ok(v)
+        };
+        let raw = doc
+            .get("caches")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("machine descriptor missing caches array"))?;
+        if raw.is_empty() || raw.len() > CACHE_NAMES.len() {
+            bail!("machine descriptor needs 1..={} cache levels, got {}", CACHE_NAMES.len(), raw.len());
+        }
+        let mut caches = Vec::with_capacity(raw.len());
+        for (i, c) in raw.iter().enumerate() {
+            let name = c
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("cache level {i} missing name"))?
+                .to_string();
+            let lines = c
+                .get("lines")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("cache level {i} missing lines"))?;
+            let latency = c
+                .get("latency")
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow!("cache level {i} missing latency"))?;
+            if lines == 0 || !latency.is_finite() || latency <= 0.0 {
+                bail!("cache level {i} must have lines >= 1 and positive finite latency");
+            }
+            caches.push(CacheSpec { name, lines, latency });
+        }
+        Ok(MachineDescriptor {
+            line_elems: u("line_elems")?,
+            caches,
+            mem_latency: f("mem_latency")?,
+            stream_cost: f("stream_cost")?,
+            freq_ghz: f("freq_ghz")?,
+            vec_lanes: f("vec_lanes")?,
+            red_lanes: f("red_lanes")?,
+            strided_lanes: f("strided_lanes")?,
+            call_overhead: f("call_overhead")?,
+            cores: u("cores")?,
+            spawn_cycles: f("spawn_cycles")?,
+        })
+    }
+
+    /// Decode from a `machine/v1` JSON string.
+    pub fn from_json(text: &str) -> Result<MachineDescriptor> {
+        let doc = json::parse(text).map_err(|e| anyhow!("machine descriptor parse error: {e}"))?;
+        MachineDescriptor::from_json_value(&doc)
+    }
+}
+
+/// L2 distance between two machines over log-scale features. Zero for
+/// identical descriptors; symmetric; grows with ratio (not absolute)
+/// differences so a 32 KiB-vs-64 KiB L1 gap counts the same at any
+/// scale. Combined with the problem distance in `store::transfer` via
+/// [`crate::store::transfer::MACHINE_WEIGHT`].
+pub fn distance(a: &MachineDescriptor, b: &MachineDescriptor) -> f64 {
+    let fa = a.features();
+    let fb = b.features();
+    fa.iter().zip(fb.iter()).map(|(x, y)| (x - y) * (x - y)).sum::<f64>().sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn random_descriptor(rng: &mut Pcg32) -> MachineDescriptor {
+        let levels = 1 + rng.below(4) as usize;
+        let caches = (0..levels)
+            .map(|i| CacheSpec {
+                name: format!("L{}", i + 1),
+                lines: 64 << (rng.below(8) as usize),
+                latency: 1.0 + rng.next_f64() * 30.0,
+            })
+            .collect();
+        MachineDescriptor {
+            line_elems: 1 << (2 + rng.below(4) as usize),
+            caches,
+            mem_latency: 20.0 + rng.next_f64() * 200.0,
+            stream_cost: 1.0 + rng.next_f64() * 16.0,
+            freq_ghz: 0.8 + rng.next_f64() * 4.0,
+            vec_lanes: (1 << rng.below(6)) as f64,
+            red_lanes: (1 << rng.below(4)) as f64,
+            strided_lanes: 1.0 + rng.next_f64() * 3.0,
+            call_overhead: 1.0 + rng.next_f64() * 20.0,
+            cores: 1 + rng.below(64) as usize,
+            spawn_cycles: 1000.0 + rng.next_f64() * 100_000.0,
+        }
+    }
+
+    #[test]
+    fn host_default_matches_cost_model_machine() {
+        let d = MachineDescriptor::host_default();
+        let m = d.to_machine();
+        let back = MachineDescriptor::from_machine(&m);
+        assert_eq!(d, back);
+        assert_eq!(d.roofline_gflops(), Machine::default().roofline_gflops());
+        assert_eq!(d.caches.len(), 3);
+        assert_eq!(d.caches[0].name, "L1");
+    }
+
+    #[test]
+    fn prop_json_round_trip_and_fingerprint_stability() {
+        let mut rng = Pcg32::new(0x51ac_0de5);
+        for _ in 0..200 {
+            let d = random_descriptor(&mut rng);
+            let text = d.to_json();
+            let back = MachineDescriptor::from_json(&text).expect("round trip decodes");
+            assert_eq!(d, back, "descriptor must survive JSON bit-exact");
+            assert_eq!(
+                d.fingerprint(),
+                back.fingerprint(),
+                "fingerprint must be stable across encode/decode"
+            );
+        }
+    }
+
+    #[test]
+    fn prop_any_field_change_changes_the_fingerprint() {
+        let mut rng = Pcg32::new(0xf1e1d);
+        for _ in 0..50 {
+            let d = random_descriptor(&mut rng);
+            let fp = d.fingerprint();
+            let mut alts: Vec<MachineDescriptor> = Vec::new();
+            macro_rules! tweak {
+                ($field:ident, $delta:expr) => {{
+                    let mut m = d.clone();
+                    m.$field = $delta(m.$field);
+                    alts.push(m);
+                }};
+            }
+            tweak!(line_elems, |x: usize| x + 1);
+            tweak!(mem_latency, |x: f64| x + 1.0);
+            tweak!(stream_cost, |x: f64| x + 1.0);
+            tweak!(freq_ghz, |x: f64| x * 2.0);
+            tweak!(vec_lanes, |x: f64| x * 2.0);
+            tweak!(red_lanes, |x: f64| x * 2.0);
+            tweak!(strided_lanes, |x: f64| x + 0.5);
+            tweak!(call_overhead, |x: f64| x + 1.0);
+            tweak!(cores, |x: usize| x + 1);
+            tweak!(spawn_cycles, |x: f64| x + 1.0);
+            let mut m = d.clone();
+            m.caches[0].lines *= 2;
+            alts.push(m);
+            let mut m = d.clone();
+            m.caches[0].latency += 1.0;
+            alts.push(m);
+            let mut m = d.clone();
+            m.caches[0].name.push('x');
+            alts.push(m);
+            for alt in alts {
+                assert_ne!(alt.fingerprint(), fp, "field change must change the hash");
+            }
+        }
+    }
+
+    #[test]
+    fn decode_rejects_garbage() {
+        assert!(MachineDescriptor::from_json("not json").is_err());
+        assert!(MachineDescriptor::from_json("{\"schema\":\"machine/v9\"}").is_err());
+        assert!(MachineDescriptor::from_json("{\"schema\":\"machine/v1\"}").is_err());
+        // Negative / non-finite constants are rejected.
+        let mut d = MachineDescriptor::host_default().to_json_value();
+        if let Json::Obj(o) = &mut d {
+            o.insert("freq_ghz".into(), Json::Num(-1.0));
+        }
+        let mut text = String::new();
+        json::write_json(&d, &mut text);
+        assert!(MachineDescriptor::from_json(&text).is_err());
+        // Empty cache hierarchy is rejected.
+        let mut d = MachineDescriptor::host_default().to_json_value();
+        if let Json::Obj(o) = &mut d {
+            o.insert("caches".into(), Json::Arr(vec![]));
+        }
+        let mut text = String::new();
+        json::write_json(&d, &mut text);
+        assert!(MachineDescriptor::from_json(&text).is_err());
+    }
+
+    #[test]
+    fn perturbed_machine_is_deterministic_and_distant() {
+        let host = MachineDescriptor::host_default();
+        let new1 = host.perturbed();
+        let new2 = host.perturbed();
+        assert_eq!(new1, new2, "perturbation must be deterministic");
+        assert_ne!(new1.fingerprint(), host.fingerprint());
+        assert_eq!(distance(&host, &host), 0.0);
+        assert_eq!(distance(&host, &new1), distance(&new1, &host));
+        assert!(distance(&host, &new1) > 1.0, "perturbed machine must be clearly dissimilar");
+        // Perturbation changes the modeled roofline (clock up, lanes down).
+        assert!((new1.roofline_gflops() - host.roofline_gflops()).abs() > 1e-9);
+    }
+
+    #[test]
+    fn distance_handles_different_hierarchy_depths() {
+        let host = MachineDescriptor::host_default();
+        let mut shallow = host.clone();
+        shallow.caches.pop();
+        let d = distance(&host, &shallow);
+        assert!(d.is_finite() && d > 0.0);
+    }
+}

@@ -40,9 +40,20 @@
 //!                                 loadgen/v1 report
 //!   db        stats|export|compact --store F
 //!                                 inspect / dump / dedupe the tuning
-//!                                 store (tune_record/v1 JSONL)
+//!                                 store (tune_record/v2 JSONL; v1 lines
+//!                                 still load); stats include per-machine
+//!                                 record counts and a best-GFLOPS
+//!                                 leaderboard per (problem, machine)
+//!   machine   [--perturb]         print the machine descriptor the
+//!                                 process would tune for (machine/v1
+//!                                 JSON + fingerprint); --perturb applies
+//!                                 the canonical "new hardware"
+//!                                 perturbation, --json PATH writes the
+//!                                 document for later --machine use
 //!   fit-cost-model --store F      train the learned cost ranker from the
-//!                                 store; --save P writes the .ltps model
+//!                                 store (pooled backbone + one head per
+//!                                 recorded machine); --save P writes the
+//!                                 .ltps model
 //!   workloads                     list the registered workload suites
 //!   bench     [--smoke]           time the backend substrate (executor
 //!                                 GFLOPS per family, cost-model and
@@ -62,7 +73,9 @@
 //! --params FILE, --seed N, --threads N, --cost-model (use the analytical
 //! model instead of measured execution), --quick (scale budgets ~10x down),
 //! --store FILE (persistent tuning store, DESIGN.md §10), --ranker FILE
-//! (learned cost model trained by fit-cost-model).
+//! (learned cost model trained by fit-cost-model), --machine FILE
+//! (machine/v1 descriptor JSON: tune for that hardware — cost-model
+//! constants, record stamps, ranker head, transfer distance; DESIGN.md §15).
 
 use anyhow::{anyhow, bail, Result};
 use looptune::api::{
@@ -95,7 +108,7 @@ fn parse_args() -> Args {
             match name {
                 "quick" | "cost-model" | "measured" | "untrained" | "smoke" | "once"
                 | "ordered" | "poison" | "warm" | "no-degrade" | "no-coalesce"
-                | "no-fuse" => {
+                | "no-fuse" | "perturb" => {
                     flags.insert(name.to_string(), "true".into());
                 }
                 _ => {
@@ -243,8 +256,19 @@ fn main() -> Result<()> {
         None => None,
     };
     let ranker = match args.flags.get("ranker") {
-        Some(p) => Some(std::sync::Arc::new(looptune::store::cost::CostRanker::load(p)?)),
+        Some(p) => Some(std::sync::Arc::new(looptune::store::cost::MachineRanker::load(p)?)),
         None => None,
+    };
+    // The machine this process tunes for (DESIGN.md §15): the host
+    // default, or a machine/v1 descriptor file via --machine. Selects the
+    // cost-model constants, stamps tuning records, filters warm store
+    // hits, and picks the per-machine ranker head.
+    let machine = match args.flags.get("machine") {
+        Some(p) => looptune::machine::MachineDescriptor::from_json(
+            &std::fs::read_to_string(p)
+                .map_err(|e| anyhow!("reading machine descriptor {p}: {e}"))?,
+        )?,
+        None => looptune::machine::MachineDescriptor::host_default(),
     };
     let service = TuningService::new(ServiceCfg {
         seed,
@@ -252,6 +276,7 @@ fn main() -> Result<()> {
         default_params: params_path,
         store: if args.cmd == "search" { None } else { store.clone() },
         ranker: ranker.clone(),
+        machine: machine.clone(),
     });
 
     match args.cmd.as_str() {
@@ -455,6 +480,7 @@ fn main() -> Result<()> {
                     default_params: ecfg.params_path.clone(),
                     store: Some(looptune::store::TuningStore::in_memory()),
                     ranker: ranker.clone(),
+                    machine: machine.clone(),
                 });
                 &stored_service
             };
@@ -628,11 +654,21 @@ fn main() -> Result<()> {
             // --store: append every completed tune to the persistent store
             // (the corpus `fit-cost-model` and the transfer strategy feed
             // on); recording never changes tuning results. --ranker:
-            // pre-order candidate expansion with the learned cost model.
+            // pre-order candidate expansion with the learned cost model —
+            // resolved to this machine's head (pooled fallback on unseen
+            // hardware) before the fan-out.
+            let head = ranker.as_ref().map(|r| r.select(machine.fingerprint()));
             let report = if evolve {
-                batch::run_evolve(&problems, &be, &bcfg, store.as_ref(), ranker.as_ref())
+                batch::run_evolve_on(&problems, &be, &bcfg, store.as_ref(), head.as_ref(), &machine)
             } else {
-                batch::run_recorded(&problems, &be, &bcfg, store.as_ref(), ranker.as_ref())
+                batch::run_recorded_on(
+                    &problems,
+                    &be,
+                    &bcfg,
+                    store.as_ref(),
+                    head.as_ref(),
+                    &machine,
+                )
             }
             .with_suite(&suite);
             println!("{}", report.summary());
@@ -795,11 +831,25 @@ fn main() -> Result<()> {
             std::fs::write(&path, report.to_json())?;
             println!("report -> {path}");
         }
+        "machine" => {
+            // Print (or write) the machine descriptor this process would
+            // tune for: the host default, a --machine file, and/or the
+            // canonical --perturb "hardware refresh" transform the
+            // continual-learning eval simulates a new machine with.
+            let m = if args.flags.contains_key("perturb") { machine.perturbed() } else { machine };
+            println!("fingerprint: {}", m.fingerprint_hex());
+            println!("roofline:    {:.2} GFLOPS", m.roofline_gflops());
+            println!("{}", m.to_json());
+            if let Some(p) = args.flags.get("json") {
+                std::fs::write(p, format!("{}\n", m.to_json()))?;
+                println!("descriptor -> {p}");
+            }
+        }
         "db" => {
             // Tuning-store maintenance: stats (human + JSON), export
             // (JSONL to stdout), compact (best record per problem/backend).
             let store = store.ok_or_else(|| {
-                anyhow!("db requires --store PATH (the tune_record/v1 JSONL file)")
+                anyhow!("db requires --store PATH (the tune_record/v2 JSONL file)")
             })?;
             match args.pos.first().map(String::as_str).unwrap_or("stats") {
                 "stats" => {
@@ -848,15 +898,21 @@ fn main() -> Result<()> {
                     .ok_or_else(|| anyhow!("store holds no records to fit on"))?,
             };
             println!("fitting on {fit_backend}-scored records (override: --fit-backend)");
-            let (ranker, report) =
-                looptune::store::cost::CostRanker::fit_from_store(&store, &fit_backend, lambda)?;
+            let (ranker, report) = looptune::store::cost::MachineRanker::fit_from_store(
+                &store,
+                &fit_backend,
+                lambda,
+            )?;
             if let Some(parent) = std::path::Path::new(&save).parent() {
                 if !parent.as_os_str().is_empty() {
                     std::fs::create_dir_all(parent)?;
                 }
             }
             ranker.save(&save)?;
-            println!("{report}\nmodel -> {save}");
+            println!(
+                "{report}\n{} per-machine head(s); model -> {save}",
+                ranker.head_count()
+            );
         }
         "workloads" => {
             // List the registered workload suites (README workload table).
@@ -923,6 +979,17 @@ fn main() -> Result<()> {
                             if quick { 120 } else { 300 },
                         )?
                     }
+                    "machine" => {
+                        // Continual learning across hardware: warm
+                        // cross-machine transfer vs cold tuning on a
+                        // simulated new machine; writes the tracked
+                        // BENCH_machine.json (no runtime needed).
+                        experiments::bench_machine(
+                            &ecfg,
+                            n.min(12),
+                            if quick { 120 } else { 300 },
+                        )?
+                    }
                     "search" => {
                         // Evolve-vs-greedy2 sample efficiency; writes the
                         // tracked BENCH_search.json (no runtime needed).
@@ -958,7 +1025,7 @@ fn main() -> Result<()> {
             if exp == "all" {
                 for e in [
                     "table1", "fig7", "fig8", "fig9", "fig10", "fig11", "headline", "ablation",
-                    "store", "search", "serve", "graph",
+                    "store", "search", "serve", "graph", "machine",
                 ] {
                     println!("==== {e} ====");
                     run(e)?;
@@ -972,7 +1039,7 @@ fn main() -> Result<()> {
                 "looptune — RL loop-schedule auto-tuner (LoopTune reproduction)\n\n\
                  usage: looptune <cmd> [flags]\n\
                  cmds:  peak | dataset | workloads | render | artifacts | train | tune\n       \
-                 | tune-graph | search | tune-many | serve | loadgen | db\n       \
+                 | tune-graph | search | tune-many | serve | loadgen | db | machine\n       \
                  | fit-cost-model | bench | eval\n\
                  flags: --spec KIND:DIMS (matmul:64x64x64, conv2d:28x28x3x3, ...)\n       \
                  --mnk M,N,K --algo NAME --iters N --budget SECS --out DIR\n       \
@@ -996,7 +1063,11 @@ fn main() -> Result<()> {
                  --store PATH (persistent tuning store: serve hits, record all,\n       \
                  enable the transfer strategy; db/fit-cost-model operate on it)\n       \
                  --ranker PATH --lambda X --save PATH --fit-backend NAME\n       \
-                 (learned cost model; the fit is per scoring backend)\n\
+                 (learned cost model: pooled backbone + per-machine heads;\n       \
+                 the fit is per scoring backend)\n       \
+                 --machine PATH (machine/v1 descriptor: tune for that hardware —\n       \
+                 cost-model constants, record stamps, ranker head, transfer\n       \
+                 distance); machine [--perturb] [--json PATH] prints/writes it\n\
                  env:   LOOPTUNE_EXEC_THREADS=N (executor worker pool for\n       \
                  parallelized schedules; default: all cores)"
             );

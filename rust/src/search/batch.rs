@@ -22,6 +22,7 @@
 use super::{Budget, SearchAlgo};
 use crate::backend::SharedBackend;
 use crate::ir::Problem;
+use crate::machine::MachineDescriptor;
 use crate::util::json::{write_json, Json};
 use crate::util::stats;
 use std::collections::BTreeMap;
@@ -236,6 +237,7 @@ fn tune_one(
     cfg: &BatchCfg,
     store: Option<&crate::store::TuningStore>,
     ranker: Option<&std::sync::Arc<crate::store::cost::CostRanker>>,
+    machine: &MachineDescriptor,
 ) -> ProblemOutcome {
     // All batch tuning flows through the one `api::Strategy` trait — the
     // same code path the service and the CLI adapters use. A learned
@@ -260,20 +262,23 @@ fn tune_one(
         &opts,
     )
     .expect("search strategies are infallible");
-    record_and_summarize(problem, r, backend, store, seed)
+    record_and_summarize(problem, r, backend, store, seed, machine)
 }
 
-/// Append the result to `store` (when given) and fold it into a
-/// [`ProblemOutcome`] row — shared by the search and evolve batch paths.
+/// Append the result to `store` (when given, stamped with `machine`) and
+/// fold it into a [`ProblemOutcome`] row — shared by the search and
+/// evolve batch paths.
 fn record_and_summarize(
     problem: Problem,
     r: crate::api::TuneResult,
     backend: &SharedBackend,
     store: Option<&crate::store::TuningStore>,
     seed: u64,
+    machine: &MachineDescriptor,
 ) -> ProblemOutcome {
     if let Some(store) = store {
-        let rec = crate::store::TuneRecord::from_result(problem, &r, backend.name(), seed);
+        let rec =
+            crate::store::TuneRecord::from_result_on(problem, &r, backend.name(), seed, machine);
         if let Err(e) = store.append(rec) {
             eprintln!("warning: recording tune for {} failed: {e:#}", problem.id());
         }
@@ -312,13 +317,28 @@ pub fn run_recorded(
     store: Option<&crate::store::TuningStore>,
     ranker: Option<&std::sync::Arc<crate::store::cost::CostRanker>>,
 ) -> BatchReport {
+    run_recorded_on(problems, backend, cfg, store, ranker, &MachineDescriptor::host_default())
+}
+
+/// Like [`run_recorded`], stamping every appended record with `machine`
+/// instead of the host default (`tune-many --machine`, the fleet eval's
+/// corpus builder). The caller is responsible for handing in a `backend`
+/// that actually scores for that machine.
+pub fn run_recorded_on(
+    problems: &[Problem],
+    backend: &SharedBackend,
+    cfg: &BatchCfg,
+    store: Option<&crate::store::TuningStore>,
+    ranker: Option<&std::sync::Arc<crate::store::cost::CostRanker>>,
+    machine: &MachineDescriptor,
+) -> BatchReport {
     let t0 = Instant::now();
     let evals0 = backend.eval_count();
     let hits0 = backend.hits();
     let threads = cfg.threads.max(1).min(problems.len().max(1));
 
     let outcomes = crate::util::parallel_indexed_map(problems.len(), threads, |i| {
-        tune_one(problems[i], backend, cfg, store, ranker)
+        tune_one(problems[i], backend, cfg, store, ranker, machine)
     });
 
     BatchReport {
@@ -347,6 +367,19 @@ pub fn run_evolve(
     store: Option<&crate::store::TuningStore>,
     ranker: Option<&std::sync::Arc<crate::store::cost::CostRanker>>,
 ) -> BatchReport {
+    run_evolve_on(problems, backend, cfg, store, ranker, &MachineDescriptor::host_default())
+}
+
+/// Like [`run_evolve`], stamping every appended record with `machine`
+/// instead of the host default (see [`run_recorded_on`]).
+pub fn run_evolve_on(
+    problems: &[Problem],
+    backend: &SharedBackend,
+    cfg: &BatchCfg,
+    store: Option<&crate::store::TuningStore>,
+    ranker: Option<&std::sync::Arc<crate::store::cost::CostRanker>>,
+    machine: &MachineDescriptor,
+) -> BatchReport {
     let t0 = Instant::now();
     let evals0 = backend.eval_count();
     let hits0 = backend.hits();
@@ -372,7 +405,7 @@ pub fn run_evolve(
             &opts,
         )
         .expect("evolve strategy is infallible");
-        record_and_summarize(problem, r, backend, store, seed)
+        record_and_summarize(problem, r, backend, store, seed, machine)
     });
 
     BatchReport {
@@ -513,6 +546,24 @@ mod tests {
             assert_eq!(a.best_gflops, b.best_gflops);
             assert_eq!(a.evals, b.evals);
         }
+    }
+
+    #[test]
+    fn recorded_batch_stamps_the_given_machine() {
+        let ps = problems(2);
+        let store = crate::store::TuningStore::in_memory();
+        let cfg = BatchCfg { threads: 1, budget: Budget::evals(40), ..BatchCfg::default() };
+        let other = MachineDescriptor::host_default().perturbed();
+        run_recorded_on(&ps, &be(), &cfg, Some(&store), None, &other);
+        for p in &ps {
+            let rec = store.lookup(&p.id(), "cost_model").expect("recorded");
+            assert_eq!(rec.machine_fp(), other.fingerprint(), "{p}");
+        }
+        // The default entry point stamps the host machine.
+        let host_store = crate::store::TuningStore::in_memory();
+        run_recorded(&ps, &be(), &cfg, Some(&host_store), None);
+        let rec = host_store.lookup(&ps[0].id(), "cost_model").expect("recorded");
+        assert_eq!(rec.machine_fp(), MachineDescriptor::host_default().fingerprint());
     }
 
     #[test]

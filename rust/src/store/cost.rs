@@ -19,6 +19,17 @@
 //! Weights are stored through the [`ParamSet`] plumbing (`LTPS` binary,
 //! the same format trained policies use), so `fit-cost-model --save` and
 //! `--ranker` round-trip without a new file format.
+//!
+//! [`MachineRanker`] extends the single ranker into a fleet model:
+//! per-machine *heads* (one [`CostRanker`] fitted from the records of one
+//! machine fingerprint) over the pooled all-machines model, which serves
+//! as the shared backbone and the fallback for unseen machines. The
+//! checkpoint stays LTPS: tensor 0 is the pooled model, each further
+//! tensor is one head with its `u64` fingerprint bitcast into the two
+//! leading f32s (LTPS round-trips f32 bits exactly, so the fingerprint
+//! survives save/load bit-for-bit). Single-tensor checkpoints written
+//! before the fleet layer load as pooled-only — the versioned migration
+//! path.
 
 use super::TuningStore;
 use crate::featurize::state_vector;
@@ -27,7 +38,9 @@ use crate::rl::params::ParamSet;
 use crate::runtime::literal::HostTensor;
 use crate::STATE_DIM;
 use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
 use std::path::Path;
+use std::sync::Arc;
 
 /// Ranker input dimension: the featurizer state vector plus two
 /// dedicated parallelism features (see [`cost_features`]).
@@ -267,48 +280,26 @@ impl CostRanker {
     /// skipped, not pooled — measured and modeled GFLOPS live on
     /// incommensurate scales, and a ranker mixing them would mis-order
     /// both. Duplicated schedules and non-finite measurements are
-    /// skipped too.
+    /// skipped too. Records from *all* machines pool into this fit (the
+    /// shared backbone); see [`MachineRanker`] for per-machine heads.
     pub fn fit_from_store(
         store: &TuningStore,
         backend: &str,
         lambda: f64,
     ) -> Result<(CostRanker, FitReport)> {
-        let mut xs: Vec<Vec<f32>> = Vec::new();
-        let mut ys: Vec<f64> = Vec::new();
-        let mut skipped = 0usize;
-        let mut seen = std::collections::HashSet::new();
-        for (_, problem, records) in store.snapshot() {
-            let Some(p) = problem else {
-                skipped += records.len();
-                continue;
-            };
-            let mut initial_done = false;
-            for rec in records {
-                if rec.backend != backend {
-                    skipped += 1;
-                    continue;
-                }
-                match rec.replay(p) {
-                    Ok(nest) if rec.gflops.is_finite() => {
-                        if seen.insert(crate::backend::schedule_hash(&nest)) {
-                            xs.push(cost_features(&nest));
-                            ys.push(rec.gflops);
-                        } else {
-                            skipped += 1;
-                        }
-                        if !initial_done && rec.gflops_initial.is_finite() {
-                            let init = Nest::initial(p);
-                            if seen.insert(crate::backend::schedule_hash(&init)) {
-                                xs.push(cost_features(&init));
-                                ys.push(rec.gflops_initial);
-                            }
-                            initial_done = true;
-                        }
-                    }
-                    _ => skipped += 1,
-                }
-            }
-        }
+        let (xs, ys, skipped) = training_samples(store, backend, None);
+        CostRanker::fit_samples(xs, ys, skipped, backend, lambda)
+    }
+
+    /// Shared tail of every store fit: the minimum-corpus check, the
+    /// ridge solve, and the training diagnostics.
+    fn fit_samples(
+        xs: Vec<Vec<f32>>,
+        ys: Vec<f64>,
+        skipped: usize,
+        backend: &str,
+        lambda: f64,
+    ) -> Result<(CostRanker, FitReport)> {
         if xs.len() < 8 {
             bail!(
                 "cost-model fit needs at least 8 distinct {backend}-scored samples, \
@@ -367,6 +358,206 @@ impl CostRanker {
     }
 }
 
+/// Deduped `(features, gflops)` training samples from `store` for
+/// `backend`-scored records, optionally restricted to one machine
+/// fingerprint. Returns `(xs, ys, skipped)`; duplicated schedules,
+/// failed replays, other backends, and (when filtering) other machines
+/// all count as skipped.
+fn training_samples(
+    store: &TuningStore,
+    backend: &str,
+    machine_fp: Option<u64>,
+) -> (Vec<Vec<f32>>, Vec<f64>, usize) {
+    let mut xs: Vec<Vec<f32>> = Vec::new();
+    let mut ys: Vec<f64> = Vec::new();
+    let mut skipped = 0usize;
+    let mut seen = std::collections::HashSet::new();
+    for (_, problem, records) in store.snapshot() {
+        let Some(p) = problem else {
+            skipped += records.len();
+            continue;
+        };
+        let mut initial_done = false;
+        for rec in records {
+            if rec.backend != backend || machine_fp.is_some_and(|fp| rec.machine_fp() != fp) {
+                skipped += 1;
+                continue;
+            }
+            match rec.replay(p) {
+                Ok(nest) if rec.gflops.is_finite() => {
+                    if seen.insert(crate::backend::schedule_hash(&nest)) {
+                        xs.push(cost_features(&nest));
+                        ys.push(rec.gflops);
+                    } else {
+                        skipped += 1;
+                    }
+                    if !initial_done && rec.gflops_initial.is_finite() {
+                        let init = Nest::initial(p);
+                        if seen.insert(crate::backend::schedule_hash(&init)) {
+                            xs.push(cost_features(&init));
+                            ys.push(rec.gflops_initial);
+                        }
+                        initial_done = true;
+                    }
+                }
+                _ => skipped += 1,
+            }
+        }
+    }
+    (xs, ys, skipped)
+}
+
+/// Minimum per-fingerprint samples before a machine earns its own head
+/// (below this the pooled model generalizes better than a head fitted on
+/// noise).
+pub const HEAD_MIN_SAMPLES: usize = 8;
+
+/// Fleet cost model: per-machine ranker heads over a pooled backbone.
+///
+/// [`MachineRanker::select`] resolves the head for a machine
+/// fingerprint, falling back to the pooled all-machines model for
+/// machines the fit has never seen — so downstream consumers
+/// ([`crate::api::RankedSearch`], the transfer and evolve strategies)
+/// keep taking a plain `Arc<CostRanker>` and stay fleet-oblivious.
+#[derive(Clone, Debug)]
+pub struct MachineRanker {
+    pooled: Arc<CostRanker>,
+    heads: BTreeMap<u64, Arc<CostRanker>>,
+}
+
+/// Fit summary of a [`MachineRanker::fit_from_store`]: the pooled
+/// report plus one per fitted head.
+#[derive(Clone, Debug)]
+pub struct MachineFitReport {
+    /// Report of the pooled (all-machines) fit.
+    pub pooled: FitReport,
+    /// `(fingerprint, report)` of each per-machine head fitted.
+    pub heads: Vec<(u64, FitReport)>,
+}
+
+impl std::fmt::Display for MachineFitReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "pooled {}", self.pooled)?;
+        for (fp, r) in &self.heads {
+            write!(f, "\nhead {fp:016x}: {r}")?;
+        }
+        Ok(())
+    }
+}
+
+impl MachineRanker {
+    /// A fleet model with only the pooled backbone (every machine falls
+    /// back to it) — how single-machine checkpoints migrate.
+    pub fn single(pooled: CostRanker) -> MachineRanker {
+        MachineRanker { pooled: Arc::new(pooled), heads: BTreeMap::new() }
+    }
+
+    /// The ranker for `fingerprint`: its fitted head when one exists,
+    /// the pooled backbone otherwise.
+    pub fn select(&self, fingerprint: u64) -> Arc<CostRanker> {
+        self.heads.get(&fingerprint).cloned().unwrap_or_else(|| self.pooled.clone())
+    }
+
+    /// The pooled all-machines backbone.
+    pub fn pooled(&self) -> Arc<CostRanker> {
+        self.pooled.clone()
+    }
+
+    /// Number of per-machine heads.
+    pub fn head_count(&self) -> usize {
+        self.heads.len()
+    }
+
+    /// Fingerprints with a fitted head, ascending.
+    pub fn fingerprints(&self) -> Vec<u64> {
+        self.heads.keys().copied().collect()
+    }
+
+    /// Fit the pooled backbone from every `backend`-scored record, then
+    /// one head per machine fingerprint with at least
+    /// [`HEAD_MIN_SAMPLES`] distinct samples. A store that never left
+    /// one machine yields a backbone plus one head for it; fingerprints
+    /// too thin to fit simply stay on the pooled fallback.
+    pub fn fit_from_store(
+        store: &TuningStore,
+        backend: &str,
+        lambda: f64,
+    ) -> Result<(MachineRanker, MachineFitReport)> {
+        let (pooled, pooled_report) = CostRanker::fit_from_store(store, backend, lambda)?;
+        let mut counts: BTreeMap<u64, usize> = BTreeMap::new();
+        for (_, _, records) in store.snapshot() {
+            for rec in records {
+                if rec.backend == backend {
+                    *counts.entry(rec.machine_fp()).or_insert(0) += 1;
+                }
+            }
+        }
+        let mut heads = BTreeMap::new();
+        let mut head_reports = Vec::new();
+        for (&fp, _) in counts.iter() {
+            let (xs, ys, skipped) = training_samples(store, backend, Some(fp));
+            if xs.len() < HEAD_MIN_SAMPLES {
+                continue;
+            }
+            let (head, report) = CostRanker::fit_samples(xs, ys, skipped, backend, lambda)?;
+            heads.insert(fp, Arc::new(head));
+            head_reports.push((fp, report));
+        }
+        Ok((
+            MachineRanker { pooled: Arc::new(pooled), heads },
+            MachineFitReport { pooled: pooled_report, heads: head_reports },
+        ))
+    }
+
+    /// Save through the shared `LTPS` parameter format: tensor 0 is the
+    /// pooled model (`COST_FEATS` weights), each further tensor one head
+    /// (`COST_FEATS + 2` values: the fingerprint bitcast into two
+    /// leading f32s, then the weights).
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let mut tensors =
+            vec![HostTensor::new(vec![COST_FEATS], self.pooled.weights.clone())];
+        for (&fp, head) in &self.heads {
+            let mut data = Vec::with_capacity(COST_FEATS + 2);
+            data.push(f32::from_bits((fp >> 32) as u32));
+            data.push(f32::from_bits(fp as u32));
+            data.extend_from_slice(&head.weights);
+            tensors.push(HostTensor::new(vec![COST_FEATS + 2], data));
+        }
+        ParamSet::new(tensors).save(path)
+    }
+
+    /// Load a fleet checkpoint saved by [`Self::save`] — or a
+    /// single-tensor checkpoint from [`CostRanker::save`], which loads
+    /// as pooled-only (the migration path; pre-parallelism v1 layouts
+    /// still fail with the explicit refit message).
+    pub fn load(path: impl AsRef<Path>) -> Result<MachineRanker> {
+        let path = path.as_ref();
+        let ps = ParamSet::load(path).with_context(|| format!("loading ranker {path:?}"))?;
+        let Some((first, rest)) = ps.tensors.split_first() else {
+            bail!("ranker file {path:?} holds no tensors");
+        };
+        let pooled = CostRanker::from_weights(first.data.clone())
+            .with_context(|| format!("ranker file {path:?} (pooled model)"))?;
+        let mut heads = BTreeMap::new();
+        for (i, tensor) in rest.iter().enumerate() {
+            if tensor.data.len() != COST_FEATS + 2 {
+                bail!(
+                    "ranker file {path:?}: head tensor {} holds {} values, want {} \
+                     (fingerprint pair + weights)",
+                    i + 1,
+                    tensor.data.len(),
+                    COST_FEATS + 2
+                );
+            }
+            let fp = ((tensor.data[0].to_bits() as u64) << 32) | tensor.data[1].to_bits() as u64;
+            let head = CostRanker::from_weights(tensor.data[2..].to_vec())
+                .with_context(|| format!("ranker file {path:?} (head {fp:016x})"))?;
+            heads.insert(fp, Arc::new(head));
+        }
+        Ok(MachineRanker { pooled: Arc::new(pooled), heads })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -374,6 +565,7 @@ mod tests {
     use crate::backend::cost_model::CostModel;
     use crate::backend::SharedBackend;
     use crate::ir::Problem;
+    use crate::machine::MachineDescriptor;
     use crate::search::{Budget, SearchAlgo};
     use crate::store::TuneRecord;
 
@@ -487,5 +679,105 @@ mod tests {
         m.clear();
         assert!(m.is_empty());
         assert!(r.predict_batch(&m).is_empty());
+    }
+
+    /// Store spanning two machines, enough records per fingerprint for
+    /// both heads to fit.
+    fn warm_two_machines() -> (crate::store::TuningStore, u64, u64) {
+        let store = crate::store::TuningStore::in_memory();
+        let host = MachineDescriptor::host_default();
+        let other = host.perturbed();
+        let be = SharedBackend::with_factory(CostModel::default);
+        for m in [64usize, 96, 128, 160, 192] {
+            let p = Problem::matmul(m, 64, 96);
+            let r = SearchAlgo::Greedy2.run(p, be.clone(), Budget::evals(100), 8, 7);
+            let result = TuneResult::from_search(r);
+            store
+                .append(TuneRecord::from_result_on(p, &result, be.name(), 7, &host))
+                .unwrap();
+            let q = Problem::matmul(m, 96, 64);
+            let r = SearchAlgo::Greedy2.run(q, be.clone(), Budget::evals(100), 8, 7);
+            let result = TuneResult::from_search(r);
+            store
+                .append(TuneRecord::from_result_on(q, &result, be.name(), 7, &other))
+                .unwrap();
+        }
+        (store, host.fingerprint(), other.fingerprint())
+    }
+
+    #[test]
+    fn machine_ranker_fits_per_machine_heads_with_pooled_fallback() {
+        let (store, host_fp, other_fp) = warm_two_machines();
+        let (mr, report) = MachineRanker::fit_from_store(&store, "cost_model", 1.0).unwrap();
+        assert_eq!(mr.head_count(), 2, "{report}");
+        let fps = mr.fingerprints();
+        assert!(fps.contains(&host_fp) && fps.contains(&other_fp));
+        // Known fingerprints resolve their own head; unseen machines fall
+        // back to the pooled backbone.
+        assert!(!Arc::ptr_eq(&mr.select(host_fp), &mr.pooled()));
+        assert!(!Arc::ptr_eq(&mr.select(other_fp), &mr.pooled()));
+        assert!(Arc::ptr_eq(&mr.select(0x1234_5678), &mr.pooled()));
+        assert_eq!(report.heads.len(), 2);
+        for (_, r) in &report.heads {
+            assert!(r.samples >= HEAD_MIN_SAMPLES, "{r}");
+        }
+        // The display form names each head by fingerprint.
+        let text = format!("{report}");
+        assert!(text.contains(&format!("{host_fp:016x}")), "{text}");
+    }
+
+    #[test]
+    fn machine_checkpoint_round_trips_fingerprints_bit_exact() {
+        let dir = std::env::temp_dir().join(format!("lt_mranker_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("fleet.ltps");
+        let w = |k: usize| {
+            CostRanker::from_weights(
+                (0..COST_FEATS).map(|i| ((i + k) % 13) as f32 * 0.5 - 1.0).collect(),
+            )
+            .unwrap()
+        };
+        // Fingerprints chosen to stress the f32 bitcast: zero halves, all
+        // ones, NaN-pattern bits.
+        let fps = [0u64, 1, u64::MAX, 0xdead_beef_7fc0_0001, 0x7fc0_0001_0000_0000];
+        let mut heads = BTreeMap::new();
+        for (k, &fp) in fps.iter().enumerate() {
+            heads.insert(fp, Arc::new(w(k + 1)));
+        }
+        let mr = MachineRanker { pooled: Arc::new(w(0)), heads };
+        mr.save(&path).unwrap();
+        let back = MachineRanker::load(&path).unwrap();
+        assert_eq!(back.fingerprints(), {
+            let mut v = fps.to_vec();
+            v.sort_unstable();
+            v
+        });
+        assert_eq!(*back.pooled(), *mr.pooled());
+        for &fp in &fps {
+            assert_eq!(*back.select(fp), *mr.select(fp), "head {fp:016x}");
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn single_tensor_checkpoint_loads_as_pooled_only() {
+        let dir = std::env::temp_dir().join(format!("lt_mranker_mig_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("single.ltps");
+        let r =
+            CostRanker::from_weights((0..COST_FEATS).map(|i| i as f32 * 0.125).collect()).unwrap();
+        r.save(&path).unwrap();
+        let mr = MachineRanker::load(&path).unwrap();
+        assert_eq!(mr.head_count(), 0);
+        assert_eq!(*mr.pooled(), r);
+        assert!(Arc::ptr_eq(&mr.select(42), &mr.pooled()));
+        // Pre-parallelism v1 layouts still fail with the refit message.
+        let old = dir.join("old.ltps");
+        ParamSet::new(vec![HostTensor::new(vec![COST_FEATS_V1], vec![0.5f32; COST_FEATS_V1])])
+            .save(&old)
+            .unwrap();
+        let msg = format!("{:#}", MachineRanker::load(&old).unwrap_err());
+        assert!(msg.contains("v1") && msg.contains("fit-cost-model"), "{msg}");
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 }

@@ -1,13 +1,17 @@
 //! Persistent tuning store + learned cost model (DESIGN.md §10).
 //!
 //! The serving-system memory the stateless tuner lacked: every completed
-//! tune is recorded as a [`TuneRecord`] (`tune_record/v1` JSONL, see
-//! [`record`]), repeat traffic for an exact problem is answered from the
-//! store with zero backend evaluations, and cold misses can be
-//! *transfer-tuned* by replaying the best schedules of the nearest
-//! recorded problems ([`transfer`]). A small ridge-regression ranker
-//! trained from the store ([`cost`]) pre-orders search expansion and
-//! replay candidates.
+//! tune is recorded as a [`TuneRecord`] (`tune_record/v2` JSONL carrying
+//! the producing machine's descriptor + fingerprint, see [`record`];
+//! v1 lines still load with a default-machine fallback), repeat traffic
+//! for an exact problem is answered from the store with zero backend
+//! evaluations, and cold misses can be *transfer-tuned* by replaying the
+//! best schedules of the nearest recorded problems ([`transfer`]) —
+//! ranked machine-aware, so records from similar hardware shadow
+//! exact-problem records from dissimilar hardware. A small
+//! ridge-regression ranker trained from the store ([`cost`]) pre-orders
+//! search expansion and replay candidates, with per-machine heads over
+//! the shared feature backbone.
 //!
 //! [`TuningStore`] is a cheap-to-clone `Arc` handle over an append-only
 //! JSONL file plus an in-memory index sharded across [`STORE_SHARDS`]
@@ -21,9 +25,10 @@ pub mod cost;
 pub mod record;
 pub mod transfer;
 
-pub use record::{decode_loops, encode_loops, TuneRecord, RECORD_SCHEMA};
+pub use record::{decode_loops, encode_loops, TuneRecord, RECORD_SCHEMA, RECORD_SCHEMA_V1};
 
 use crate::ir::Problem;
+use crate::machine::MachineDescriptor;
 use crate::util::json::{write_json, Json};
 use anyhow::{Context, Result};
 use std::collections::{BTreeMap, HashMap};
@@ -226,13 +231,33 @@ impl TuningStore {
     }
 
     /// The `k` nearest recorded problems to `target` with a best record
-    /// scored by `backend`: same workload kind and dim count, ranked by
-    /// L2 distance over per-dim `log2(extent)` (ties broken by problem id
-    /// for determinism). Returns `(distance, problem, best record)`.
+    /// scored by `backend`, ranked relative to the default host machine.
+    /// See [`TuningStore::nearest_on`] for the machine-aware form this
+    /// delegates to — on a single-machine store (every record stamped
+    /// with the default machine) the two are identical.
     pub fn nearest(
         &self,
         target: Problem,
         backend: &str,
+        k: usize,
+    ) -> Vec<(f64, Problem, Arc<TuneRecord>)> {
+        self.nearest_on(target, backend, &MachineDescriptor::host_default(), k)
+    }
+
+    /// The `k` nearest recorded problems to `target` with a best record
+    /// scored by `backend`, as seen from `machine`: same workload kind
+    /// and dim count, ranked by the combined distance
+    /// `problem_distance + MACHINE_WEIGHT * machine_distance` (ties
+    /// broken by problem id for determinism). Per problem, only the
+    /// machine group *closest* to `machine` is a candidate — so a
+    /// same-machine record always shadows dissimilar-machine records of
+    /// the same problem, never the other way around. Returns
+    /// `(combined distance, problem, best record)`.
+    pub fn nearest_on(
+        &self,
+        target: Problem,
+        backend: &str,
+        machine: &MachineDescriptor,
         k: usize,
     ) -> Vec<(f64, Problem, Arc<TuneRecord>)> {
         // Scan shard by shard, filtering to transfer-compatible problems
@@ -244,14 +269,30 @@ impl TuningStore {
             let shard = shard.lock().expect("store shard poisoned");
             for (id, entry) in &shard.by_problem {
                 let Some(p) = entry.problem else { continue };
-                let Some(d) = transfer::problem_distance(p, target) else { continue };
-                let best = entry
+                let Some(pd) = transfer::problem_distance(p, target) else { continue };
+                // Best finite record per machine fingerprint, then the
+                // fingerprint group nearest to the requesting machine
+                // (fingerprint order on exact ties).
+                let mut groups: BTreeMap<u64, (f64, &Arc<TuneRecord>)> = BTreeMap::new();
+                for r in entry
                     .records
                     .iter()
                     .filter(|r| r.backend == backend && r.gflops.is_finite())
-                    .max_by(|a, b| a.gflops.total_cmp(&b.gflops));
-                if let Some(rec) = best {
-                    cands.push((d, id.clone(), p, rec.clone()));
+                {
+                    let fp = r.machine_fp();
+                    match groups.get(&fp) {
+                        Some((_, best)) if best.gflops >= r.gflops => {}
+                        _ => {
+                            let md = crate::machine::distance(&r.machine, machine);
+                            groups.insert(fp, (md, r));
+                        }
+                    }
+                }
+                let nearest_group = groups
+                    .into_iter()
+                    .min_by(|a, b| a.1 .0.total_cmp(&b.1 .0).then_with(|| a.0.cmp(&b.0)));
+                if let Some((_, (md, rec))) = nearest_group {
+                    cands.push((pd + transfer::MACHINE_WEIGHT * md, id.clone(), p, rec.clone()));
                 }
             }
         }
@@ -281,7 +322,9 @@ impl TuningStore {
         let mut by_strategy = BTreeMap::new();
         let mut by_backend = BTreeMap::new();
         let mut by_kind_backend = BTreeMap::new();
+        let mut by_machine = BTreeMap::new();
         let mut best_by_problem: BTreeMap<String, ProblemBest> = BTreeMap::new();
+        let mut best_by_problem_machine: BTreeMap<String, ProblemBest> = BTreeMap::new();
         let mut problems = 0u64;
         let mut records = 0u64;
         for (id, _, recs) in self.snapshot() {
@@ -294,6 +337,8 @@ impl TuningStore {
                 *by_kind_backend
                     .entry(format!("{}/{}", r.kind, r.backend))
                     .or_insert(0u64) += 1;
+                let fp_hex = r.machine.fingerprint_hex();
+                *by_machine.entry(fp_hex.clone()).or_insert(0u64) += 1;
                 if r.gflops.is_finite() {
                     let better = best_by_problem
                         .get(&id)
@@ -302,6 +347,21 @@ impl TuningStore {
                     if better {
                         best_by_problem.insert(
                             id.clone(),
+                            ProblemBest {
+                                backend: r.backend.clone(),
+                                strategy: r.strategy.clone(),
+                                gflops: r.gflops,
+                            },
+                        );
+                    }
+                    let pm_key = format!("{id}@{fp_hex}");
+                    let better = best_by_problem_machine
+                        .get(&pm_key)
+                        .map(|b| r.gflops > b.gflops)
+                        .unwrap_or(true);
+                    if better {
+                        best_by_problem_machine.insert(
+                            pm_key,
                             ProblemBest {
                                 backend: r.backend.clone(),
                                 strategy: r.strategy.clone(),
@@ -320,7 +380,9 @@ impl TuningStore {
             by_strategy,
             by_backend,
             by_kind_backend,
+            by_machine,
             best_by_problem,
+            best_by_problem_machine,
         }
     }
 
@@ -424,10 +486,18 @@ pub struct StoreStats {
     /// Record count per `kind/backend` pair (the family-by-backend
     /// breakdown of `db stats`).
     pub by_kind_backend: BTreeMap<String, u64>,
+    /// Record count per machine fingerprint (16-hex) — the fleet
+    /// breakdown of `db stats`.
+    pub by_machine: BTreeMap<String, u64>,
     /// Best finite-GFLOPS record per problem id. GFLOPS from different
     /// scoring backends are incommensurate, so each entry carries the
     /// backend (and strategy) that produced it.
     pub best_by_problem: BTreeMap<String, ProblemBest>,
+    /// Best finite-GFLOPS record per `problem@machine_fp` pair — the
+    /// per-machine leaderboard (GFLOPS on different machines are
+    /// incommensurate too: the same schedule scores differently under
+    /// different modeled constants).
+    pub best_by_problem_machine: BTreeMap<String, ProblemBest>,
 }
 
 /// The best recorded result for one problem (see
@@ -460,6 +530,7 @@ impl StoreStats {
             fmt(&self.by_backend),
             fmt(&self.by_kind_backend),
         );
+        out.push_str(&format!("\n  by machine:  {}", fmt(&self.by_machine)));
         // Best-GFLOPS-per-problem leaderboard: the top entries by score
         // (backends are incommensurate, so each line names its backend).
         let mut best: Vec<(&String, &ProblemBest)> = self.best_by_problem.iter().collect();
@@ -473,6 +544,25 @@ impl StoreStats {
         }
         if best.len() > SHOW {
             out.push_str(&format!("\n  ... ({} more problems)", best.len() - SHOW));
+        }
+        // Per-(problem, machine) leaderboard — only interesting once the
+        // store actually spans more than one machine.
+        if self.by_machine.len() > 1 {
+            let mut best: Vec<(&String, &ProblemBest)> =
+                self.best_by_problem_machine.iter().collect();
+            best.sort_by(|a, b| b.1.gflops.total_cmp(&a.1.gflops).then_with(|| a.0.cmp(b.0)));
+            for (key, b) in best.iter().take(SHOW) {
+                out.push_str(&format!(
+                    "\n  best {key}: {:.2} GFLOPS ({} on {})",
+                    b.gflops, b.strategy, b.backend
+                ));
+            }
+            if best.len() > SHOW {
+                out.push_str(&format!(
+                    "\n  ... ({} more problem/machine pairs)",
+                    best.len() - SHOW
+                ));
+            }
         }
         out
     }
@@ -491,19 +581,22 @@ impl StoreStats {
         root.insert("by_strategy".into(), counts(&self.by_strategy));
         root.insert("by_backend".into(), counts(&self.by_backend));
         root.insert("by_kind_backend".into(), counts(&self.by_kind_backend));
-        let best = Json::Obj(
-            self.best_by_problem
-                .iter()
-                .map(|(id, b)| {
-                    let mut row = BTreeMap::new();
-                    row.insert("backend".to_string(), Json::Str(b.backend.clone()));
-                    row.insert("strategy".to_string(), Json::Str(b.strategy.clone()));
-                    row.insert("gflops".to_string(), Json::Num(b.gflops));
-                    (id.clone(), Json::Obj(row))
-                })
-                .collect(),
-        );
-        root.insert("best_by_problem".into(), best);
+        root.insert("by_machine".into(), counts(&self.by_machine));
+        let bests = |m: &BTreeMap<String, ProblemBest>| {
+            Json::Obj(
+                m.iter()
+                    .map(|(id, b)| {
+                        let mut row = BTreeMap::new();
+                        row.insert("backend".to_string(), Json::Str(b.backend.clone()));
+                        row.insert("strategy".to_string(), Json::Str(b.strategy.clone()));
+                        row.insert("gflops".to_string(), Json::Num(b.gflops));
+                        (id.clone(), Json::Obj(row))
+                    })
+                    .collect(),
+            )
+        };
+        root.insert("best_by_problem".into(), bests(&self.best_by_problem));
+        root.insert("best_by_problem_machine".into(), bests(&self.best_by_problem_machine));
         let mut out = String::new();
         write_json(&Json::Obj(root), &mut out);
         out
@@ -535,6 +628,21 @@ mod tests {
 
     fn rec(problem: Problem, strategy: &str, gflops: f64) -> TuneRecord {
         TuneRecord::from_result(problem, &result_for(problem, strategy, gflops), "cost_model", 7)
+    }
+
+    fn rec_on(
+        problem: Problem,
+        strategy: &str,
+        gflops: f64,
+        machine: &MachineDescriptor,
+    ) -> TuneRecord {
+        TuneRecord::from_result_on(
+            problem,
+            &result_for(problem, strategy, gflops),
+            "cost_model",
+            7,
+            machine,
+        )
     }
 
     fn tmpdir(tag: &str) -> PathBuf {
@@ -647,6 +755,15 @@ mod tests {
         let Json::Obj(root) = &json else { panic!("stats JSON is an object") };
         assert!(root.contains_key("by_kind_backend"));
         assert!(root.contains_key("best_by_problem"));
+        // Fleet breakdown: every record above came from the default host.
+        let host_fp = MachineDescriptor::host_default().fingerprint_hex();
+        assert_eq!(stats.by_machine.len(), 1);
+        assert_eq!(stats.by_machine[&host_fp], 3);
+        let pm = &stats.best_by_problem_machine
+            [&format!("{}@{host_fp}", Problem::matmul(64, 64, 64).id())];
+        assert_eq!(pm.gflops, 5.0);
+        assert!(root.contains_key("by_machine"));
+        assert!(root.contains_key("best_by_problem_machine"));
         let export = store.export_jsonl();
         assert_eq!(export.lines().count(), 3);
         for line in export.lines() {
@@ -692,6 +809,47 @@ mod tests {
         assert!(near[0].0 <= near[1].0);
         // Wrong backend: nothing transferable.
         assert!(store.nearest(Problem::matmul(80, 64, 64), "executor", 4).is_empty());
+    }
+
+    #[test]
+    fn nearest_never_selects_dissimilar_machine_when_same_machine_exists() {
+        // The fleet-transfer pin: per problem, a record from the
+        // requesting machine always shadows records from dissimilar
+        // machines — even when the dissimilar record scores higher
+        // GFLOPS (scores across machines are incommensurate).
+        let store = TuningStore::in_memory();
+        let host = MachineDescriptor::host_default();
+        let other = host.perturbed();
+        let p = Problem::matmul(80, 64, 64);
+        store.append(rec_on(p, "greedy2", 50.0, &other)).unwrap();
+        store.append(rec_on(p, "random", 5.0, &host)).unwrap();
+        store.append(rec_on(Problem::matmul(96, 64, 64), "greedy2", 6.0, &other)).unwrap();
+        let near = store.nearest_on(p, "cost_model", &host, 4);
+        let own = near.iter().find(|(_, q, _)| q.id() == p.id()).expect("target is a candidate");
+        assert_eq!(own.2.machine_fp(), host.fingerprint());
+        assert_eq!(own.2.gflops, 5.0);
+        assert_eq!(own.0, 0.0, "same problem + same machine is distance zero");
+        assert_eq!(near[0].1.id(), p.id(), "the same-machine record ranks first");
+    }
+
+    #[test]
+    fn similar_machine_neighbor_outranks_exact_problem_on_dissimilar_machine() {
+        let store = TuningStore::in_memory();
+        let host = MachineDescriptor::host_default();
+        let other = host.perturbed();
+        let p = Problem::matmul(80, 64, 64);
+        // The exact problem is only recorded on dissimilar hardware; a
+        // neighbor problem is recorded on the requesting machine.
+        store.append(rec_on(p, "greedy2", 9.0, &other)).unwrap();
+        store.append(rec_on(Problem::matmul(96, 64, 64), "greedy2", 6.0, &host)).unwrap();
+        let near = store.nearest_on(p, "cost_model", &host, 2);
+        assert_eq!(near.len(), 2);
+        assert_eq!(
+            near[0].1.id(),
+            "mm_96x64x64",
+            "similar hardware must rank above the exact problem on dissimilar hardware"
+        );
+        assert!(near[0].0 < near[1].0);
     }
 
     #[test]

@@ -1,4 +1,4 @@
-//! One tuning measurement as a durable record (`tune_record/v1`).
+//! One tuning measurement as a durable record (`tune_record/v2`).
 //!
 //! A [`TuneRecord`] captures everything needed to *replay* a completed
 //! tune without re-running the strategy: the problem's canonical spec
@@ -16,15 +16,28 @@
 //! range survives the f64 number type (same convention as
 //! `tune_request/v1`). A non-finite GFLOPS (a failed measurement) is
 //! emitted as JSON `null` and decoded back to NaN.
+//!
+//! **v2** stamps the producing machine into every line: an embedded
+//! [`MachineDescriptor`] (`machine` key) plus its redundant fingerprint
+//! (`machine_fp`, 16-hex) verified on decode so a tampered or bit-rotted
+//! machine block reads as a corrupt line rather than silently joining
+//! the wrong fleet bucket. v1 lines (schema `tune_record/v1`, or no
+//! schema key at all) still decode, falling back to the default host
+//! machine — the machine every pre-fleet record was measured on.
 
 use crate::api::TuneResult;
 use crate::ir::{Dim, Kind, Loop, Nest, Problem};
+use crate::machine::MachineDescriptor;
 use crate::util::json::{parse, write_json, Json};
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::BTreeMap;
 
 /// Wire schema tag of one record line.
-pub const RECORD_SCHEMA: &str = "tune_record/v1";
+pub const RECORD_SCHEMA: &str = "tune_record/v2";
+
+/// Previous schema tag, still accepted on decode (default-machine
+/// fallback).
+pub const RECORD_SCHEMA_V1: &str = "tune_record/v1";
 
 /// One durable tuning measurement. See the module doc for field semantics.
 #[derive(Clone, Debug, PartialEq)]
@@ -58,11 +71,28 @@ pub struct TuneRecord {
     pub seed: u64,
     /// Backend evaluations the producing tune consumed.
     pub evals: u64,
+    /// Machine the measurement was taken on. v1 lines decode with
+    /// [`MachineDescriptor::host_default`].
+    pub machine: MachineDescriptor,
 }
 
 impl TuneRecord {
-    /// Record a completed [`TuneResult`] for `problem`.
+    /// Record a completed [`TuneResult`] for `problem`, measured on the
+    /// default host machine. Use [`TuneRecord::from_result_on`] to stamp
+    /// a specific machine.
     pub fn from_result(problem: Problem, r: &TuneResult, backend: &str, seed: u64) -> TuneRecord {
+        TuneRecord::from_result_on(problem, r, backend, seed, &MachineDescriptor::host_default())
+    }
+
+    /// Record a completed [`TuneResult`] for `problem`, stamping the
+    /// machine the backend modeled/measured it on.
+    pub fn from_result_on(
+        problem: Problem,
+        r: &TuneResult,
+        backend: &str,
+        seed: u64,
+        machine: &MachineDescriptor,
+    ) -> TuneRecord {
         TuneRecord {
             problem: problem.id(),
             kind: problem.kind().to_string(),
@@ -77,7 +107,13 @@ impl TuneRecord {
             strategy: r.strategy.clone(),
             seed,
             evals: r.evals,
+            machine: machine.clone(),
         }
+    }
+
+    /// The stamped machine's stable fingerprint (fleet bucket key).
+    pub fn machine_fp(&self) -> u64 {
+        self.machine.fingerprint()
     }
 
     /// Replay the recorded schedule onto `problem` (the record's own
@@ -105,10 +141,12 @@ impl TuneRecord {
         Ok(nest)
     }
 
-    /// Encode as one `tune_record/v1` JSON line (no trailing newline).
+    /// Encode as one `tune_record/v2` JSON line (no trailing newline).
     pub fn to_json_line(&self) -> String {
         let mut root = BTreeMap::new();
         root.insert("schema".into(), Json::Str(RECORD_SCHEMA.into()));
+        root.insert("machine".into(), self.machine.to_json_value());
+        root.insert("machine_fp".into(), Json::Str(self.machine.fingerprint_hex()));
         root.insert("problem".into(), Json::Str(self.problem.clone()));
         root.insert("kind".into(), Json::Str(self.kind.clone()));
         root.insert("dim_hash".into(), Json::Str(format!("{:016x}", self.dim_hash)));
@@ -132,13 +170,29 @@ impl TuneRecord {
         out
     }
 
-    /// Decode one `tune_record/v1` JSON line. Malformed lines are `Err`s
-    /// (the store counts them as corrupt and keeps loading).
+    /// Decode one `tune_record/v1` or `/v2` JSON line. Malformed lines
+    /// are `Err`s (the store counts them as corrupt and keeps loading);
+    /// v1 lines decode with the default-machine fallback.
     pub fn from_json(text: &str) -> Result<TuneRecord> {
         let doc = parse(text).map_err(|e| anyhow!("{e}"))?;
-        if let Some(s) = doc.get("schema").and_then(Json::as_str) {
-            if s != RECORD_SCHEMA {
-                bail!("unsupported record schema {s:?} (want {RECORD_SCHEMA})");
+        let v2 = match doc.get("schema").and_then(Json::as_str) {
+            Some(s) if s == RECORD_SCHEMA => true,
+            Some(s) if s == RECORD_SCHEMA_V1 => false,
+            Some(s) => bail!("unsupported record schema {s:?} (want {RECORD_SCHEMA})"),
+            None => false,
+        };
+        let machine = match doc.get("machine") {
+            Some(m) => MachineDescriptor::from_json_value(m)
+                .map_err(|e| anyhow!("record machine block: {e}"))?,
+            None if v2 => bail!("v2 record missing machine block"),
+            None => MachineDescriptor::host_default(),
+        };
+        if let Some(fp) = doc.get("machine_fp").and_then(Json::as_str) {
+            let want = u64::from_str_radix(fp, 16)
+                .map_err(|_| anyhow!("record machine_fp: bad hex {fp:?}"))?;
+            let got = machine.fingerprint();
+            if want != got {
+                bail!("record machine_fp {want:016x} != descriptor fingerprint {got:016x}");
             }
         }
         let s = |k: &str| -> Result<String> {
@@ -193,6 +247,7 @@ impl TuneRecord {
             strategy: s("strategy")?,
             seed,
             evals: g("evals").unwrap_or(0.0) as u64,
+            machine,
         })
     }
 }
@@ -285,14 +340,71 @@ mod tests {
             strategy: "greedy2".into(),
             seed: 0xdead_beef_dead_beef,
             evals: 42,
+            machine: MachineDescriptor::host_default(),
         }
+    }
+
+    /// Serialize `rec` the way the pre-fleet codec did: schema v1, no
+    /// machine block. Mirrors real stores written before v2.
+    fn v1_json_line(rec: &TuneRecord) -> String {
+        let line = rec.to_json_line();
+        let doc = parse(&line).unwrap();
+        let mut root = match doc {
+            Json::Obj(o) => o,
+            _ => unreachable!(),
+        };
+        root.remove("machine");
+        root.remove("machine_fp");
+        root.insert("schema".into(), Json::Str(RECORD_SCHEMA_V1.into()));
+        let mut out = String::new();
+        write_json(&Json::Obj(root), &mut out);
+        out
     }
 
     #[test]
     fn json_line_round_trips() {
         let rec = sample_record();
+        let line = rec.to_json_line();
+        assert!(line.contains("\"schema\":\"tune_record/v2\""), "{line}");
+        assert!(line.contains("\"machine_fp\""), "{line}");
+        let back = TuneRecord::from_json(&line).unwrap();
+        assert_eq!(back, rec);
+        assert_eq!(back.machine_fp(), rec.machine.fingerprint());
+    }
+
+    #[test]
+    fn v2_round_trips_a_non_default_machine() {
+        let mut rec = sample_record();
+        rec.machine = MachineDescriptor::host_default().perturbed();
         let back = TuneRecord::from_json(&rec.to_json_line()).unwrap();
         assert_eq!(back, rec);
+        assert_ne!(back.machine_fp(), MachineDescriptor::host_default().fingerprint());
+    }
+
+    #[test]
+    fn v1_lines_decode_with_the_default_machine_fallback() {
+        let rec = sample_record();
+        let line = v1_json_line(&rec);
+        assert!(line.contains("\"schema\":\"tune_record/v1\""), "{line}");
+        assert!(!line.contains("machine"), "{line}");
+        let back = TuneRecord::from_json(&line).unwrap();
+        assert_eq!(back, rec, "v1 decode must equal the record with the default machine");
+        // Lines with no schema key at all (oldest tolerated form) too.
+        let schemaless = line.replace("\"schema\":\"tune_record/v1\",", "");
+        let back = TuneRecord::from_json(&schemaless).unwrap();
+        assert_eq!(back.machine, MachineDescriptor::host_default());
+    }
+
+    #[test]
+    fn mismatched_machine_fingerprint_is_corrupt() {
+        let rec = sample_record();
+        let line = rec.to_json_line();
+        let bad = line.replace(
+            &format!("\"machine_fp\":\"{}\"", rec.machine.fingerprint_hex()),
+            "\"machine_fp\":\"0000000000000001\"",
+        );
+        assert_ne!(bad, line);
+        assert!(TuneRecord::from_json(&bad).is_err());
     }
 
     #[test]
@@ -311,6 +423,8 @@ mod tests {
         assert!(TuneRecord::from_json("not json").is_err());
         assert!(TuneRecord::from_json("{}").is_err());
         assert!(TuneRecord::from_json(r#"{"schema":"tune_record/v9"}"#).is_err());
+        // A v2 line must carry its machine block.
+        assert!(TuneRecord::from_json(r#"{"schema":"tune_record/v2"}"#).is_err());
         let mut line = sample_record().to_json_line();
         line.truncate(line.len() / 2);
         assert!(TuneRecord::from_json(&line).is_err());

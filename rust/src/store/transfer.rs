@@ -5,27 +5,44 @@
 //! `mm_144x128x128` too — the action space is structural (which dims to
 //! tile, by how much, in what order), not extent-specific. The
 //! [`TransferStrategy`] exploits that: it asks the store for the
-//! [`TuningStore::nearest`] recorded problems (same workload kind, L2
-//! distance over per-dim `log2(extent)` — [`problem_distance`]), replays
+//! [`TuningStore::nearest_on`] recorded problems (same workload kind,
+//! ranked by the combined problem × machine distance below), replays
 //! each neighbor's best schedule onto the target problem, optionally
 //! pre-orders the replays with the learned [`CostRanker`], and pays for
 //! real evaluations only on the top few. A problem with no transferable
 //! history falls back to a full classical search under the same budget.
 //!
+//! The neighbor metric is machine-aware: candidates are ranked by
+//! `problem_distance + MACHINE_WEIGHT × machine::distance`, so a record
+//! from similar hardware outranks an exact-problem record from
+//! dissimilar hardware, and per problem a same-machine record always
+//! shadows dissimilar-machine ones (the fleet pin — see
+//! `store::tests::nearest_never_selects_dissimilar_machine_when_same_machine_exists`).
+//!
 //! The result: warm-corpus tuning at a handful of evaluations instead of
-//! hundreds (pinned by `BENCH_store.json` and the deterministic transfer
-//! test in `rust/tests/store_roundtrip.rs`).
+//! hundreds (pinned by `BENCH_store.json` / `BENCH_machine.json` and the
+//! deterministic transfer test in `rust/tests/store_roundtrip.rs`).
 
 use super::cost::CostRanker;
 use super::TuningStore;
 use crate::api::{Strategy, TuneOpts, TuneResult};
 use crate::env::Env;
 use crate::ir::{Nest, Problem};
+use crate::machine::MachineDescriptor;
 use crate::search::{Budget, SearchAlgo, TracePoint};
 use anyhow::Result;
 use std::collections::HashSet;
 use std::sync::Arc;
 use std::time::Instant;
+
+/// Weight of the machine term in the combined neighbor distance
+/// `problem_distance + MACHINE_WEIGHT * machine::distance`. Problem
+/// distances between useful neighbors are typically well under 2 (a few
+/// doubled extents); the canonical perturbed machine sits at machine
+/// distance > 2 — so with this weight, hardware dissimilarity dominates
+/// any plausible problem proximity and similar-hardware neighbors rank
+/// first.
+pub const MACHINE_WEIGHT: f64 = 4.0;
 
 /// Structural distance between two problems: `None` when they are not
 /// transfer-compatible (different workload kind or dim count), else the
@@ -79,11 +96,14 @@ pub struct TransferStrategy {
     pub ranker: Option<Arc<CostRanker>>,
     /// Search run (under the request budget) when nothing transfers.
     pub fallback: SearchAlgo,
+    /// Machine the request is being served for: neighbor ranking is
+    /// relative to it ([`TuningStore::nearest_on`]).
+    pub machine: MachineDescriptor,
 }
 
 impl TransferStrategy {
     /// Strategy with default knobs over `store`: 8 neighbors consulted,
-    /// 4 replays evaluated, greedy-2 fallback.
+    /// 4 replays evaluated, greedy-2 fallback, default host machine.
     pub fn new(store: TuningStore) -> TransferStrategy {
         TransferStrategy {
             store,
@@ -91,6 +111,7 @@ impl TransferStrategy {
             replay_top: 4,
             ranker: None,
             fallback: SearchAlgo::Greedy2,
+            machine: MachineDescriptor::host_default(),
         }
     }
 }
@@ -107,7 +128,8 @@ impl Strategy for TransferStrategy {
 
         // Decode every transferable neighbor schedule, deduped by the
         // schedule hash (two neighbors often converged to the same tiling).
-        let neighbors = self.store.nearest(problem, backend.name(), self.neighbors);
+        let neighbors =
+            self.store.nearest_on(problem, backend.name(), &self.machine, self.neighbors);
         let n_neighbors = neighbors.len();
         let mut seen = HashSet::new();
         let mut cands: Vec<Nest> = Vec::new();
@@ -330,5 +352,36 @@ mod tests {
         assert_eq!(a.best.loops, b.best.loops);
         assert_eq!(a.best_gflops, b.best_gflops);
         assert_eq!(a.evals, b.evals);
+    }
+
+    #[test]
+    fn transfer_replays_an_old_machine_corpus_onto_a_new_machine() {
+        // Corpus recorded on the default host; the request is served for
+        // the perturbed "new machine" on its own cost model. Replays
+        // still transfer (schedules are structural) at a handful of
+        // evals — the continual-learning scenario `eval machine` pins.
+        let store = TuningStore::in_memory();
+        let target = Problem::matmul(112, 112, 112);
+        warm(&store, &nearest_problems(&crate::dataset::canonical().train, target, 3), 200);
+
+        let new_desc = MachineDescriptor::host_default().perturbed();
+        let m = new_desc.to_machine();
+        let be_new = SharedBackend::with_factory(move || CostModel::new(m.clone()));
+        let strategy =
+            TransferStrategy { machine: new_desc.clone(), ..TransferStrategy::new(store) };
+        let r = run_strategy(
+            &strategy,
+            &be_new,
+            target,
+            1.0,
+            FeatureMask::default(),
+            Budget::evals(50),
+            &TuneOpts { depth: 10, seed: 7, expand_threads: 1 },
+        )
+        .unwrap();
+        assert_eq!(r.strategy, "transfer");
+        assert!(r.evals <= 1 + 4, "evals {}", r.evals);
+        assert!(r.note.unwrap().contains("replayed"), "old-machine records must still replay");
+        assert!(r.speedup() > 1.0, "replays must beat the untiled nest on the new machine too");
     }
 }

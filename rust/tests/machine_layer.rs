@@ -1,0 +1,227 @@
+//! Machine-layer integration tests: descriptor codec and fingerprint
+//! properties, cross-machine transfer through the public strategy API,
+//! per-machine ranker heads fit/save/load, and machine-carrying
+//! requests through the tuning service.
+
+use looptune::api::{ServiceCfg, TuneRequest, TuningService};
+use looptune::backend::cost_model::CostModel;
+use looptune::backend::SharedBackend;
+use looptune::ir::Problem;
+use looptune::machine::{self, MachineDescriptor};
+use looptune::search::batch::{self, problem_seed, BatchCfg};
+use looptune::search::{Budget, SearchAlgo};
+use looptune::store::cost::MachineRanker;
+use looptune::store::transfer::TransferStrategy;
+use looptune::store::TuningStore;
+use looptune::util::rng::Pcg32;
+use std::path::PathBuf;
+
+fn host_backend() -> SharedBackend {
+    SharedBackend::with_factory(CostModel::default)
+}
+
+fn backend_for(m: &MachineDescriptor) -> SharedBackend {
+    let m = m.to_machine();
+    SharedBackend::with_factory(move || CostModel::new(m.clone()))
+}
+
+fn bcfg(budget: u64) -> BatchCfg {
+    BatchCfg {
+        algo: SearchAlgo::Greedy2,
+        budget: Budget::evals(budget),
+        depth: 10,
+        seed: 7,
+        threads: 2,
+        expand_threads: 1,
+    }
+}
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("lt_ml_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// A pseudo-random but plausible descriptor derived from the host
+/// default by scaling a handful of fields.
+fn random_descriptor(rng: &mut Pcg32) -> MachineDescriptor {
+    let mut m = MachineDescriptor::host_default();
+    m.freq_ghz = 0.5 + 0.1 * rng.below(60) as f64;
+    m.vec_lanes = (1 << rng.below(6)) as f64;
+    m.red_lanes = (m.vec_lanes / 2.0).max(1.0);
+    m.mem_latency = 4.0 + rng.below(64) as f64;
+    m.cores = 1 + rng.below(32);
+    m.line_elems = 8 << rng.below(2);
+    if !m.caches.is_empty() {
+        let i = rng.below(m.caches.len());
+        m.caches[i].lines = 64 << rng.below(8);
+    }
+    m
+}
+
+// ---------------------------------------------------------------------------
+// Property: descriptors round-trip through JSON bit-exact, and the
+// fingerprint is stable across the round trip while separating any two
+// differing descriptors drawn from the generator.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_descriptor_json_round_trip_and_fingerprint_stability() {
+    let mut rng = Pcg32::new(0xfee7_1e55);
+    let mut prev: Option<MachineDescriptor> = None;
+    for case in 0..100usize {
+        let m = random_descriptor(&mut rng);
+        let back = MachineDescriptor::from_json(&m.to_json()).unwrap_or_else(|e| {
+            panic!("case {case}: descriptor must round-trip: {e}");
+        });
+        assert_eq!(back, m, "case {case}: JSON round trip is bit-exact");
+        assert_eq!(back.fingerprint(), m.fingerprint(), "case {case}: stable fingerprint");
+        assert_eq!(back.fingerprint_hex(), m.fingerprint_hex(), "case {case}");
+        assert!(machine::distance(&m, &back) == 0.0, "case {case}: zero self-distance");
+        if let Some(p) = prev.take() {
+            if p != m {
+                assert_ne!(p.fingerprint(), m.fingerprint(), "case {case}: distinct machines");
+                assert!(machine::distance(&p, &m) > 0.0, "case {case}");
+            }
+        }
+        prev = Some(m);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Cross-machine transfer through the public strategy API: history tuned
+// on the host machine warm-starts a perturbed machine, reaching most of
+// cold-greedy quality on a quarter of the eval budget.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn warm_transfer_to_perturbed_machine_beats_cold_budget() {
+    let old = MachineDescriptor::host_default();
+    let new = old.perturbed();
+    assert!(machine::distance(&old, &new) > 0.0);
+
+    let tests =
+        [Problem::matmul(96, 112, 128), Problem::matmul(128, 96, 112), Problem::mlp(64, 256, 256)];
+    // Fleet history: the same problems tuned on the old machine.
+    let store = TuningStore::in_memory();
+    batch::run_recorded_on(&tests, &host_backend(), &bcfg(160), Some(&store), None, &old);
+    assert_eq!(store.len(), tests.len() as u64);
+
+    let strategy = TransferStrategy { machine: new.clone(), ..TransferStrategy::new(store) };
+    let be_new = backend_for(&new);
+    let be_cold = backend_for(&new);
+    let (mut cold_evals, mut warm_evals) = (0u64, 0u64);
+    let mut ratios = Vec::new();
+    for &p in &tests {
+        let cold =
+            SearchAlgo::Greedy2.run(p, be_cold.clone(), Budget::evals(160), 10, problem_seed(7, p));
+        let warm = looptune::api::run_strategy(
+            &strategy,
+            &be_new,
+            p,
+            1.0,
+            looptune::featurize::FeatureMask::default(),
+            Budget::evals(40),
+            &looptune::api::TuneOpts { depth: 10, seed: problem_seed(7, p), expand_threads: 1 },
+        )
+        .unwrap();
+        cold_evals += cold.evals;
+        warm_evals += warm.evals;
+        ratios.push(warm.best_gflops / cold.best_gflops.max(1e-12));
+    }
+    let geomean = (ratios.iter().map(|r| r.ln()).sum::<f64>() / ratios.len() as f64).exp();
+    assert!(
+        geomean >= 0.80,
+        "warm transfer reaches only {:.1}% of cold greedy on the new machine ({ratios:?})",
+        100.0 * geomean
+    );
+    assert!(
+        (warm_evals as f64) <= 0.25 * cold_evals as f64,
+        "warm used {warm_evals} evals vs cold {cold_evals} (> 25%)"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Per-machine ranker heads: a two-machine corpus fits a head per
+// fingerprint, the heads survive save/load, and unseen machines fall
+// back to the pooled backbone.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn machine_ranker_fits_heads_per_fingerprint_and_round_trips() {
+    let dir = tmpdir("heads");
+    let old = MachineDescriptor::host_default();
+    let new = old.perturbed();
+    let problems: Vec<Problem> =
+        (0..10).map(|i| Problem::matmul(48 + 16 * (i % 5), 64 + 32 * (i / 5), 96)).collect();
+
+    let store = TuningStore::in_memory();
+    batch::run_recorded_on(&problems, &host_backend(), &bcfg(100), Some(&store), None, &old);
+    batch::run_recorded_on(&problems, &backend_for(&new), &bcfg(100), Some(&store), None, &new);
+    assert_eq!(store.len(), 2 * problems.len() as u64);
+
+    let (ranker, _report) = MachineRanker::fit_from_store(&store, "cost_model", 1.0).unwrap();
+    assert_eq!(ranker.head_count(), 2, "one head per machine fingerprint");
+    let mut fps = vec![old.fingerprint(), new.fingerprint()];
+    fps.sort_unstable();
+    assert_eq!(ranker.fingerprints(), fps);
+    // Known fingerprints select their own head; unknown ones fall back
+    // to the pooled backbone (same Arc, not a refit).
+    let stranger = new.perturbed();
+    assert!(std::sync::Arc::ptr_eq(&ranker.select(stranger.fingerprint()), &ranker.pooled()));
+    assert!(!std::sync::Arc::ptr_eq(&ranker.select(old.fingerprint()), &ranker.pooled()));
+
+    let path = dir.join("ranker.ltps");
+    ranker.save(&path).unwrap();
+    let loaded = MachineRanker::load(&path).unwrap();
+    assert_eq!(loaded.head_count(), 2);
+    assert_eq!(loaded.fingerprints(), ranker.fingerprints());
+    assert_eq!(loaded.pooled(), ranker.pooled());
+    for fp in ranker.fingerprints() {
+        assert_eq!(loaded.select(fp), ranker.select(fp), "head {fp:x} survives save/load");
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// Service end to end: a request carrying a machine descriptor is served
+// on that machine's cost model, stamped with its fingerprint, and kept
+// apart from the default machine's warm cache.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn service_serves_per_request_machines_with_ranked_search() {
+    let store = TuningStore::in_memory();
+    let problems =
+        [Problem::matmul(64, 64, 64), Problem::matmul(96, 96, 96), Problem::matmul(128, 128, 128)];
+    let host = MachineDescriptor::host_default();
+    batch::run_recorded_on(&problems, &host_backend(), &bcfg(100), Some(&store), None, &host);
+    let (ranker, _) = MachineRanker::fit_from_store(&store, "cost_model", 1.0).unwrap();
+
+    let cfg = ServiceCfg {
+        seed: 7,
+        threads: 2,
+        store: Some(store),
+        ranker: Some(std::sync::Arc::new(ranker)),
+        ..ServiceCfg::default()
+    };
+    let service = TuningService::new(cfg);
+    let other = MachineDescriptor::host_default().perturbed();
+
+    // Default machine: warm store hit, stamped with the host fingerprint.
+    let req = TuneRequest::new("matmul:96x96x96", "greedy2", Budget::evals(60));
+    let host_resp = service.serve(&req).unwrap();
+    assert_eq!(host_resp.cache.as_deref(), Some("store"));
+    assert_eq!(host_resp.machine, MachineDescriptor::host_default().fingerprint_hex());
+
+    // Same problem on a different machine: the host record must NOT
+    // satisfy it — the service tunes fresh on that machine's cost model
+    // and stamps the response with the request machine's fingerprint.
+    let mut req_other = TuneRequest::new("matmul:96x96x96", "greedy2", Budget::evals(60));
+    req_other.machine = Some(other.clone());
+    let other_resp = service.serve(&req_other).unwrap();
+    assert_eq!(other_resp.cache, None, "cross-machine warm hits are not bit-valid");
+    assert!(other_resp.evals > 0);
+    assert_eq!(other_resp.machine, other.fingerprint_hex());
+    assert_eq!(other_resp.note.as_deref(), Some("cost-model pre-ranked expansion"));
+}

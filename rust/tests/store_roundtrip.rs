@@ -1,19 +1,22 @@
 //! Tuning-store contract tests: spec/id round-trips across every workload
 //! family, JSONL store round-trips (append, reload, index hit, corrupt
-//! lines), bit-exact warm serving through the service, the transfer
-//! strategy's warm-vs-cold acceptance bar, and the learned-cost-model
-//! train/save/load loop.
+//! lines), record-codec version compatibility (v2 with machine stamps,
+//! v1 fallback, mixed shards), bit-exact warm serving through the
+//! service, the transfer strategy's warm-vs-cold acceptance bar, and the
+//! learned-cost-model train/save/load loop.
 
 use looptune::api::{spec, ServiceCfg, TuneRequest, TuningService};
 use looptune::backend::cost_model::CostModel;
 use looptune::backend::SharedBackend;
 use looptune::dataset;
 use looptune::ir::Problem;
+use looptune::machine::MachineDescriptor;
 use looptune::search::batch::{self, problem_seed, BatchCfg};
 use looptune::search::{Budget, SearchAlgo};
-use looptune::store::cost::CostRanker;
+use looptune::store::cost::{CostRanker, MachineRanker};
 use looptune::store::transfer::{nearest_problems, TransferStrategy};
 use looptune::store::TuningStore;
+use looptune::util::json::{self, Json};
 use looptune::util::rng::Pcg32;
 use std::path::PathBuf;
 
@@ -126,6 +129,129 @@ fn store_appends_reload_and_tolerate_corruption() {
         let nest = rec.replay_exact().unwrap();
         assert_eq!(looptune::backend::schedule_hash(&nest), rec.nest_hash);
     }
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// Record-codec compatibility: tune_record/v2 round-trips bit-exact with
+// its machine stamp; v1 lines decode with the default-machine fallback;
+// a mixed v1/v2 shard loads with zero records lost.
+// ---------------------------------------------------------------------------
+
+/// Rewrite a v2 JSONL line into its tune_record/v1 form: drop the
+/// machine block and fingerprint, downgrade the schema tag.
+fn downgrade_to_v1(line: &str) -> String {
+    let parsed = json::parse(line).expect("store line parses");
+    let Json::Obj(mut map) = parsed else { panic!("store line is an object") };
+    map.remove("machine");
+    map.remove("machine_fp");
+    map.insert("schema".into(), Json::Str("tune_record/v1".into()));
+    let mut out = String::new();
+    json::write_json(&Json::Obj(map), &mut out);
+    out
+}
+
+#[test]
+fn v2_records_round_trip_bit_exact_including_machine() {
+    let dir = tmpdir("codec_v2");
+    let path = dir.join("tune.db");
+    let other = MachineDescriptor::host_default().perturbed();
+    let problems = [Problem::matmul(64, 80, 96), Problem::conv1d(64, 32, 5, 16)];
+    {
+        let store = TuningStore::open(&path).unwrap();
+        let cfg = BatchCfg {
+            algo: SearchAlgo::Greedy2,
+            budget: Budget::evals(60),
+            depth: 10,
+            seed: 7,
+            threads: 2,
+            expand_threads: 1,
+        };
+        batch::run_recorded_on(&problems, &be(), &cfg, Some(&store), None, &other);
+    }
+    let store = TuningStore::open(&path).unwrap();
+    assert_eq!(store.len(), problems.len() as u64);
+    assert_eq!(store.corrupt_lines(), 0);
+    for &p in &problems {
+        let rec = store.lookup(&p.id(), "cost_model").expect("record reloads");
+        // The full machine descriptor survives the disk round trip, and
+        // the fingerprint recomputes to the same value.
+        assert_eq!(rec.machine, other, "{}", p.id());
+        assert_eq!(rec.machine_fp(), other.fingerprint(), "{}", p.id());
+        // Encode -> decode is a fixed point of the v2 codec.
+        let reparsed =
+            looptune::store::record::TuneRecord::from_json(&rec.to_json_line()).unwrap();
+        assert_eq!(&reparsed, rec.as_ref(), "{}", p.id());
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn v1_lines_decode_with_default_machine_fallback() {
+    let store = TuningStore::in_memory();
+    warm_store(&store, &[Problem::matmul(64, 64, 64)], 60, 1);
+    let rec = store.lookup(&Problem::matmul(64, 64, 64).id(), "cost_model").unwrap();
+    let v1 = downgrade_to_v1(&rec.to_json_line());
+    assert!(!v1.contains("machine"), "downgraded line carries no machine keys");
+    let decoded = looptune::store::record::TuneRecord::from_json(&v1).unwrap();
+    // Pre-machine records tune for the host default machine.
+    assert_eq!(decoded.machine, MachineDescriptor::host_default());
+    assert_eq!(decoded.machine_fp(), MachineDescriptor::host_default().fingerprint());
+    // Everything else is preserved verbatim.
+    assert_eq!(decoded.problem, rec.problem);
+    assert_eq!(decoded.schedule, rec.schedule);
+    assert_eq!(decoded.nest_hash, rec.nest_hash);
+    assert_eq!(decoded.gflops, rec.gflops);
+}
+
+#[test]
+fn mixed_v1_v2_shard_loads_every_record() {
+    let dir = tmpdir("codec_mixed");
+    let path = dir.join("tune.db");
+    let other = MachineDescriptor::host_default().perturbed();
+    let problems: Vec<Problem> =
+        (0..6).map(|i| Problem::matmul(48 + 16 * i, 64, 80)).collect();
+    {
+        let store = TuningStore::open(&path).unwrap();
+        let cfg = BatchCfg {
+            algo: SearchAlgo::Greedy2,
+            budget: Budget::evals(50),
+            depth: 10,
+            seed: 7,
+            threads: 2,
+            expand_threads: 1,
+        };
+        batch::run_recorded_on(&problems, &be(), &cfg, Some(&store), None, &other);
+    }
+    // Downgrade every other line to v1, as if half the fleet history
+    // predates the machine-aware codec.
+    let text = std::fs::read_to_string(&path).unwrap();
+    let mixed: Vec<String> = text
+        .lines()
+        .enumerate()
+        .map(|(i, l)| if i % 2 == 0 { downgrade_to_v1(l) } else { l.to_string() })
+        .collect();
+    std::fs::write(&path, mixed.join("\n")).unwrap();
+
+    let store = TuningStore::open(&path).unwrap();
+    assert_eq!(store.len(), problems.len() as u64, "zero records lost");
+    assert_eq!(store.corrupt_lines(), 0);
+    let host_fp = MachineDescriptor::host_default().fingerprint();
+    let (mut v1_seen, mut v2_seen) = (0usize, 0usize);
+    for &p in &problems {
+        let rec = store.lookup(&p.id(), "cost_model").expect("index hit");
+        if rec.machine_fp() == host_fp {
+            v1_seen += 1; // downgraded line, default-machine fallback
+        } else {
+            assert_eq!(rec.machine_fp(), other.fingerprint());
+            v2_seen += 1;
+        }
+        // Both generations replay bit-exact.
+        let nest = rec.replay_exact().unwrap();
+        assert_eq!(looptune::backend::schedule_hash(&nest), rec.nest_hash);
+    }
+    assert_eq!(v1_seen, 3, "half the shard decodes as v1");
+    assert_eq!(v2_seen, 3, "half the shard keeps its v2 machine stamp");
     std::fs::remove_dir_all(&dir).unwrap();
 }
 
@@ -287,7 +413,7 @@ fn service_with_ranker_serves_searches() {
     let cfg = ServiceCfg {
         seed: 7,
         threads: 2,
-        ranker: Some(std::sync::Arc::new(ranker)),
+        ranker: Some(std::sync::Arc::new(MachineRanker::single(ranker))),
         ..ServiceCfg::default()
     };
     let service = TuningService::new(cfg);
